@@ -1,0 +1,83 @@
+//! Figure 1 reproduction: 30 binarized MNIST images vs the bitstream
+//! sizes of PNG, bz2 and BB-ANS — rendered as ASCII (the paper shows the
+//! raw bitstreams as ink; we show per-codec byte counts and scale bars).
+//!
+//! ```sh
+//! cargo run --release --example fig1_bitstream
+//! ```
+
+use bbans::baselines::{BzCodec, ImageCodec, PngCodec};
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::data::load_split;
+use bbans::model::vae::load_native;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn bar(bytes: usize, per_char: f64) -> String {
+    "█".repeat(((bytes as f64) / per_char).round().max(1.0) as usize)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let ds = load_split(&dir, "test", true)?.subset(30);
+
+    // Show the 30 images, 6 rows of 5, downsampled to character cells.
+    println!("30 binarized test images:");
+    for block in ds.images.chunks(5) {
+        for y in (0..28).step_by(2) {
+            let mut line = String::new();
+            for img in block {
+                for x in (0..28).step_by(1) {
+                    let a = img[y * 28 + x];
+                    let b = img[(y + 1).min(27) * 28 + x];
+                    line.push(match (a, b) {
+                        (0, 0) => ' ',
+                        (0, _) => '▄',
+                        (_, 0) => '▀',
+                        _ => '█',
+                    });
+                }
+                line.push_str("  ");
+            }
+            println!("{line}");
+        }
+        println!();
+    }
+
+    let raw = ds.raw_bytes(); // 30*784 bytes of {0,1} = 2940 bits raw
+    let png = PngCodec { bit_depth: 1 }
+        .compress_dataset(&ds)?
+        .iter()
+        .map(|b| b.len())
+        .sum::<usize>();
+    let bz = BzCodec {
+        block_size: 256 * 1024,
+    }
+    .compress_dataset(&ds)?[0]
+        .len();
+
+    let backend = load_native(&dir, "bin")?;
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default())?;
+    let (ans, _) = codec.encode_dataset(&ds.images)?;
+    let bbans_bytes = ans.to_message().to_bytes().len();
+
+    let raw_bits_per_dim = 1.0; // binarized
+    println!("bitstream sizes for the 30 images ({raw} raw bytes, 1 bit/dim raw):\n");
+    let per_char = (png as f64) / 60.0;
+    for (name, bytes) in [("PNG", png), ("bz2", bz), ("BB-ANS", bbans_bytes)] {
+        println!(
+            "{name:>7}: {bytes:>6} B  {:>6.3} bits/dim  {}",
+            bytes as f64 * 8.0 / (30.0 * 784.0),
+            bar(bytes, per_char)
+        );
+    }
+    println!(
+        "\n(raw = {:.0} B at {raw_bits_per_dim} bit/dim; smaller bars = better, \
+         matching the paper's visual)",
+        30.0 * 784.0 / 8.0
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Paper §4.3 ("Communicating the model"), measured: BB-ANS needs the
+//! receiver to hold the VAE weights, so the one-time cost of shipping
+//! them must amortize over the data. This example computes the break-even
+//! dataset size against each baseline codec.
+//!
+//! ```sh
+//! cargo run --release --example model_cost
+//! ```
+
+use bbans::baselines::standard_suite;
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::data::load_split;
+use bbans::model::vae::load_native;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts`");
+        std::process::exit(1);
+    }
+    println!("=== §4.3: amortizing the cost of communicating the model ===\n");
+
+    for (model, binarized, weights_file, pixel_prec) in [
+        ("bin", true, "weights_bin.bbwt", 16u32),
+        ("full", false, "weights_full.bbwt", 18u32),
+    ] {
+        let raw_weights = std::fs::metadata(dir.join(weights_file))?.len() as f64;
+        // The weights themselves compress (f32 tensors, gzip as a simple
+        // proxy for the quantization literature the paper cites).
+        let gz_weights =
+            bbans::baselines::gzip::gzip_compress(&std::fs::read(dir.join(weights_file))?, 64)
+                .len() as f64;
+
+        let ds = load_split(&dir, "test", binarized)?.subset(2000);
+        let backend = load_native(&dir, model)?;
+        let codec = VaeCodec::new(
+            &backend,
+            BbAnsConfig {
+                pixel_prec,
+                ..Default::default()
+            },
+        )?;
+        let (ans, _) = codec.encode_dataset(&ds.images)?;
+        let bbans_bpd = ans.frac_bit_len() / (ds.len() as f64 * 784.0);
+
+        println!(
+            "model '{model}': weights {:.0} kB raw / {:.0} kB gzipped; BB-ANS {bbans_bpd:.4} bits/dim",
+            raw_weights / 1000.0,
+            gz_weights / 1000.0
+        );
+        for bcodec in standard_suite(binarized) {
+            let base_bpd = bcodec.bits_per_dim(&ds)?;
+            let margin = base_bpd - bbans_bpd; // bits/dim saved by BB-ANS
+            if margin <= 0.0 {
+                println!("  vs {:<11} never amortizes (baseline wins)", bcodec.name());
+                continue;
+            }
+            let break_even = (gz_weights * 8.0) / (margin * 784.0);
+            println!(
+                "  vs {:<11} saves {margin:.3} bits/dim -> model cost amortized after {:>7.0} images",
+                bcodec.name(),
+                break_even.ceil()
+            );
+        }
+        println!();
+    }
+    println!(
+        "With ~10k-image datasets the model cost is recovered well before the\n\
+         test set ends — the paper's argument that a broadly-trained model\n\
+         amortizes (§4.3), quantified on this testbed."
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: compress and decompress a handful of images with BB-ANS.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the core public API: load a backend, build a [`VaeCodec`],
+//! chain-encode a dataset, serialize the container, decode it back.
+
+use bbans::bbans::{container::Container, BbAnsConfig, VaeCodec};
+use bbans::data::load_split;
+use bbans::model::vae::load_native;
+use bbans::model::Backend;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. A trained VAE backend (pure-Rust forward pass; swap in
+    //    `PjrtVae::from_config` for the PJRT/XLA path).
+    let backend = load_native(&dir, "bin")?;
+    println!(
+        "model 'bin': {} pixels, {}-dim latent, test ELBO {:.4} bits/dim",
+        backend.meta().pixels,
+        backend.meta().latent_dim,
+        backend.meta().test_elbo_bpd
+    );
+
+    // 2. The BB-ANS codec.
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default())?;
+
+    // 3. Some binarized test images.
+    let ds = load_split(&dir, "test", true)?;
+    let images: Vec<Vec<u8>> = ds.images.iter().take(100).cloned().collect();
+    let raw_bits = images.len() * 784;
+
+    // 4. Chain-encode.
+    let (ans, stats) = codec.encode_dataset(&images)?;
+    println!(
+        "clean bits used to start the chain: {}",
+        ans.clean_bits_used()
+    );
+    let container = Container {
+        model: "bin".into(),
+        backend_id: backend.backend_id(),
+        cfg: codec.cfg,
+        num_images: images.len() as u32,
+        pixels: 784,
+        message: ans.into_message(),
+    };
+    let bytes = container.to_bytes();
+    println!(
+        "compressed {} images: {} raw bits -> {} bytes  ({:.4} bits/dim, ELBO predicts {:.4})",
+        images.len(),
+        raw_bits,
+        bytes.len(),
+        container.bits_per_dim(),
+        backend.meta().test_elbo_bpd,
+    );
+    let mean_net: f64 = stats.iter().map(|s| s.net_bits).sum::<f64>() / raw_bits as f64;
+    println!("mean net cost per pixel (amortized): {mean_net:.4} bits");
+
+    // 5. Decode from the serialized container and verify.
+    let parsed = Container::from_bytes(&bytes)?;
+    let mut ans = bbans::ans::Ans::from_message(&parsed.message, parsed.cfg.clean_seed);
+    let decoded = codec.decode_dataset(&mut ans, parsed.num_images as usize)?;
+    assert_eq!(decoded, images, "lossless roundtrip");
+    println!("roundtrip OK — all {} images identical", images.len());
+    Ok(())
+}

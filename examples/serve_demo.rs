@@ -1,0 +1,103 @@
+//! Serving demo: start the coordinator + TCP server in-process, hit it
+//! with concurrent clients, and report throughput / latency / batching
+//! metrics — the paper §4.2 parallelization argument, measured.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_demo [CLIENTS] [IMGS_PER_REQ]
+//! ```
+//!
+//! Uses the PJRT backend (the real artifact path). Pass `native` as the
+//! third arg to use the pure-Rust backend instead.
+
+use std::time::{Duration, Instant};
+
+use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::data::load_split;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let n_clients: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(8);
+    let per_req: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(16);
+    let use_pjrt = args.get(3).map(|s| s != "native").unwrap_or(true);
+
+    let params = ServiceParams {
+        max_jobs: 16,
+        batch_window: Duration::from_millis(3),
+        ..Default::default()
+    };
+    let svc = ModelService::spawn(dir.clone(), use_pjrt, params);
+    let server = Server::start("127.0.0.1:0", svc.handle())?;
+    println!(
+        "server on {} ({} backend); {n_clients} clients x {per_req} images",
+        server.addr,
+        if use_pjrt { "pjrt" } else { "native" }
+    );
+
+    let ds = load_split(&dir, "test", true)?;
+    let addr = server.addr;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let images: Vec<Vec<u8>> = ds
+            .images
+            .iter()
+            .skip(c * per_req)
+            .take(per_req)
+            .cloned()
+            .collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
+            let mut client = Client::connect(addr)?;
+            let t = Instant::now();
+            let container = client.compress("bin", 784, images.clone())?;
+            let enc = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let out = client.decompress(container)?;
+            let dec = t.elapsed().as_secs_f64();
+            anyhow::ensure!(out == images, "roundtrip mismatch");
+            Ok((enc, dec))
+        }));
+    }
+    let mut enc_lat = Vec::new();
+    let mut dec_lat = Vec::new();
+    for h in handles {
+        let (e, d) = h.join().unwrap()?;
+        enc_lat.push(e);
+        dec_lat.push(d);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_imgs = (n_clients * per_req) as f64;
+
+    enc_lat.sort_by(f64::total_cmp);
+    dec_lat.sort_by(f64::total_cmp);
+    println!("\nall {} roundtrips lossless ✓", n_clients);
+    println!(
+        "wall time {wall:.2}s  |  end-to-end throughput {:.1} img/s (enc+dec)",
+        2.0 * total_imgs / wall
+    );
+    println!(
+        "compress latency  p50 {:.0} ms   max {:.0} ms",
+        enc_lat[n_clients / 2] * 1e3,
+        enc_lat[n_clients - 1] * 1e3
+    );
+    println!(
+        "decompress latency p50 {:.0} ms   max {:.0} ms",
+        dec_lat[n_clients / 2] * 1e3,
+        dec_lat[n_clients - 1] * 1e3
+    );
+    println!(
+        "mean NN batch size {:.2} images/dispatch (1.0 would mean no cross-stream batching)",
+        svc.metrics.mean_batch_size()
+    );
+    let mut client = Client::connect(addr)?;
+    println!("\nserver metrics: {}", client.stats()?);
+
+    server.stop();
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 3 reproduction: predicted BB-ANS rates with PixelVAE vs measured
+//! benchmark codecs.
+//!
+//! The paper *predicts* the BB-ANS column from PixelVAE's reported ELBOs
+//! (no PixelVAE is trained — §4.1); the benchmark columns are measured.
+//! We do the same: the PixelVAE ELBOs are the paper's constants, and the
+//! benchmarks run on (a) our binarized test set and (b) synthetic 64×64
+//! "natural" images standing in for ImageNet64 (DESIGN.md §5).
+//!
+//! ```sh
+//! cargo run --release --example table3_predictions
+//! ```
+
+use bbans::baselines::standard_suite;
+use bbans::data::{load_split, synth};
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() -> anyhow::Result<()> {
+    // Paper-reported constants.
+    let pixelvae_bin_mnist = 0.15; // bits/dim, PixelVAE ELBO on binarized MNIST
+    let pixelvae_imagenet64 = 3.66; // bits/dim on ImageNet 64x64
+    let paper_bench_bin = [("bz2", 0.25), ("gzip", 0.33), ("PNG", 0.78), ("WebP", 0.44)];
+    let paper_bench_in64 = [("bz2", 6.72), ("gzip", 6.95), ("PNG", 5.71), ("WebP", 4.64)];
+
+    // Row 1: binarized MNIST (ours where artifacts exist).
+    println!("=== Table 3: predicted BB-ANS (PixelVAE ELBO) vs measured benchmarks ===\n");
+    println!("Binarized MNIST (raw 1 bit/dim):");
+    println!(
+        "  BB-ANS w/ PixelVAE (predicted, paper constant): {pixelvae_bin_mnist:.2} bits/dim"
+    );
+    let dir = default_artifact_dir();
+    if artifacts_available(&dir) {
+        let ds = load_split(&dir, "test", true)?.subset(2000);
+        for codec in standard_suite(true) {
+            let rate = codec.bits_per_dim(&ds)?;
+            let paper = paper_bench_bin
+                .iter()
+                .find(|(n, _)| codec.name().to_lowercase().contains(&n.to_lowercase()))
+                .map(|(_, v)| *v)
+                .unwrap_or(f64::NAN);
+            println!(
+                "  {:<12} measured {rate:>6.3}   (paper: {paper:.2})",
+                codec.name()
+            );
+        }
+    } else {
+        println!("  (run `make artifacts` for measured benchmark rates)");
+    }
+
+    // Row 2: ImageNet64 stand-in.
+    println!("\nImageNet 64x64 stand-in: synthetic natural images (raw 8 bits/dim):");
+    println!(
+        "  BB-ANS w/ PixelVAE (predicted, paper constant): {pixelvae_imagenet64:.2} bits/dim"
+    );
+    let nat = synth::natural(64, 64, 4242);
+    for codec in standard_suite(false) {
+        let rate = codec.bits_per_dim(&nat)?;
+        let paper = paper_bench_in64
+            .iter()
+            .find(|(n, _)| codec.name().to_lowercase().contains(&n.to_lowercase()))
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN);
+        println!(
+            "  {:<12} measured {rate:>6.3}   (paper on real ImageNet64: {paper:.2})",
+            codec.name()
+        );
+    }
+
+    println!(
+        "\nShape check (as in the paper): the predicted BB-ANS rate undercuts every\n\
+         generic codec by a wide margin on both datasets; generic codecs sit in\n\
+         the 4-8 bits/dim band on natural images vs PixelVAE's {pixelvae_imagenet64:.2}."
+    );
+    Ok(())
+}

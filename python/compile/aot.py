@@ -1,0 +1,156 @@
+"""AOT pipeline: data -> train -> lower to HLO text + weights + config.
+
+This is the only Python entrypoint in the system; it runs once at
+``make artifacts`` and produces everything the Rust runtime needs:
+
+* ``artifacts/data/*``                 — synthetic MNIST in IDX format
+* ``artifacts/params_{bin,full}.npz``  — trained parameters (cache)
+* ``artifacts/{enc,dec}_{bin,full}_b{B}.hlo.txt`` — AOT-lowered graphs
+  (weights baked in as constants; Pallas kernels inlined, interpret mode)
+* ``artifacts/weights_{bin,full}.bbwt`` — raw weights for the native Rust
+  backend (cross-checking + artifact-free operation)
+* ``artifacts/model_config.json``      — dims, ELBOs, file index
+
+HLO **text** is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as M
+from . import train as train_mod
+
+BATCH_SIZES = (1, 4, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the trained weights are baked into the graph;
+    # the default printer elides them as `constant({...})`, which the HLO
+    # text parser on the Rust side cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_bbwt(path: str, params: dict[str, jnp.ndarray]) -> None:
+    """Weights binary for the Rust native backend.
+
+    Layout (little-endian): magic b"BBWT", u32 version, u32 tensor count,
+    then per tensor: u16 name_len, name bytes, u8 ndim, u32 dims...,
+    f32 data.
+    """
+    with open(path, "wb") as f:
+        f.write(b"BBWT")
+        f.write(struct.pack("<II", 1, len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def train_or_load(spec, paths, out_dir: str, epochs: int) -> tuple[dict, float]:
+    cache = os.path.join(out_dir, f"params_{spec['name']}.npz")
+    imgs_key = "train_images_bin" if spec["likelihood"] == "bernoulli" else "train_images"
+    test_key = "test_images_bin" if spec["likelihood"] == "bernoulli" else "test_images"
+    train_imgs = data_mod.read_idx_images(paths[imgs_key])
+    test_imgs = data_mod.read_idx_images(paths[test_key])
+    if os.path.exists(cache):
+        print(f"[aot] loading cached params {cache}", flush=True)
+        loaded = np.load(cache)
+        params = {k: jnp.asarray(loaded[k]) for k in loaded.files if k != "__elbo__"}
+        elbo_bpd = float(loaded["__elbo__"])
+        return params, elbo_bpd
+    params, elbo_bpd = train_mod.train(spec, train_imgs, test_imgs, epochs=epochs)
+    np.savez(
+        cache,
+        __elbo__=np.float64(elbo_bpd),
+        **{k: np.asarray(v) for k, v in params.items()},
+    )
+    return params, elbo_bpd
+
+
+def export_model(spec, params, out_dir: str) -> dict:
+    """Lower encoder/decoder at each batch size; return the file index."""
+    name = spec["name"]
+    enc_fn, dec_fn = M.export_fns(params, spec, kernel="pallas")
+    index: dict = {"encoder_hlo": {}, "decoder_hlo": {}}
+    for b in BATCH_SIZES:
+        x_spec = jax.ShapeDtypeStruct((b, M.PIXELS), jnp.float32)
+        y_spec = jax.ShapeDtypeStruct((b, spec["latent"]), jnp.float32)
+        enc_path = f"enc_{name}_b{b}.hlo.txt"
+        dec_path = f"dec_{name}_b{b}.hlo.txt"
+        print(f"[aot] lowering {enc_path} ...", flush=True)
+        enc_hlo = to_hlo_text(jax.jit(enc_fn).lower(x_spec))
+        with open(os.path.join(out_dir, enc_path), "w") as f:
+            f.write(enc_hlo)
+        print(f"[aot] lowering {dec_path} ...", flush=True)
+        dec_hlo = to_hlo_text(jax.jit(dec_fn).lower(y_spec))
+        with open(os.path.join(out_dir, dec_path), "w") as f:
+            f.write(dec_hlo)
+        index["encoder_hlo"][str(b)] = enc_path
+        index["decoder_hlo"][str(b)] = dec_path
+    return index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--skip-train", action="store_true", help="require cached params")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    paths = data_mod.ensure_dataset(os.path.join(out_dir, "data"))
+
+    config: dict = {
+        "version": 1,
+        "pixels": M.PIXELS,
+        "pixel_levels": M.PIXEL_LEVELS,
+        "data": {k: os.path.join("data", data_mod.FILES[k]) for k in data_mod.FILES},
+        "counts": {"train": data_mod.TRAIN_N, "test": data_mod.TEST_N},
+        "models": {},
+    }
+
+    for spec_name in ("bin", "full"):
+        spec = M.SPECS[spec_name]
+        params, elbo_bpd = train_or_load(spec, paths, out_dir, args.epochs)
+        weights_file = f"weights_{spec_name}.bbwt"
+        write_bbwt(os.path.join(out_dir, weights_file), params)
+        index = export_model(spec, params, out_dir)
+        config["models"][spec_name] = {
+            "latent_dim": spec["latent"],
+            "hidden": spec["hidden"],
+            "likelihood": spec["likelihood"],
+            "test_elbo_bpd": elbo_bpd,
+            "weights": weights_file,
+            "logvar_clip": [M.LOGVAR_MIN, M.LOGVAR_MAX],
+            **index,
+        }
+
+    with open(os.path.join(out_dir, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=2)
+    print(f"[aot] wrote {out_dir}/model_config.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

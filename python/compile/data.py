@@ -1,0 +1,207 @@
+"""Synthetic MNIST: a procedural stand-in for the MNIST dataset.
+
+This environment has no network access, so the real MNIST files cannot be
+downloaded. Per DESIGN.md §5 we substitute a *procedural digit renderer*
+that produces 28x28 grayscale digit images with an intensity/sparsity
+profile close to MNIST's: per-class stroke skeletons, random affine jitter,
+stroke-thickness variation, blur and intensity noise. Everything is
+deterministic in the seed.
+
+Files are written in the original IDX format (big-endian magic + dims),
+so real MNIST drops in unchanged if the files are placed in
+``artifacts/data/`` with the same names.
+
+The stochastic binarization of Salakhutdinov & Murray (2008) is also
+materialized here (pixels sampled Bernoulli(intensity/255) once, with a
+fixed seed) so that Rust and Python operate on the identical binary
+dataset without needing bit-matched PRNGs across languages.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+IMG = 28
+
+# Stroke skeletons per digit, in a [0,1]^2 coordinate frame (x right, y
+# down). Each stroke is a polyline; rendering draws line segments.
+_SKELETONS: dict[int, list[list[tuple[float, float]]]] = {
+    0: [[(0.5, 0.12), (0.74, 0.2), (0.8, 0.5), (0.72, 0.8), (0.5, 0.88),
+         (0.28, 0.8), (0.2, 0.5), (0.28, 0.2), (0.5, 0.12)]],
+    1: [[(0.35, 0.28), (0.52, 0.14), (0.52, 0.86)],
+        [(0.34, 0.86), (0.68, 0.86)]],
+    2: [[(0.28, 0.3), (0.38, 0.15), (0.62, 0.14), (0.72, 0.3), (0.66, 0.48),
+         (0.3, 0.82), (0.74, 0.84)]],
+    3: [[(0.3, 0.2), (0.55, 0.13), (0.7, 0.27), (0.55, 0.45), (0.42, 0.48)],
+        [(0.42, 0.48), (0.58, 0.5), (0.72, 0.68), (0.55, 0.86), (0.3, 0.8)]],
+    4: [[(0.62, 0.86), (0.62, 0.14), (0.24, 0.62), (0.78, 0.62)]],
+    5: [[(0.7, 0.15), (0.34, 0.15), (0.3, 0.45), (0.55, 0.42), (0.72, 0.56),
+         (0.7, 0.76), (0.5, 0.88), (0.28, 0.8)]],
+    6: [[(0.62, 0.12), (0.4, 0.3), (0.28, 0.55), (0.32, 0.78), (0.52, 0.88),
+         (0.7, 0.76), (0.68, 0.56), (0.5, 0.48), (0.32, 0.56)]],
+    7: [[(0.24, 0.16), (0.76, 0.16), (0.45, 0.86)],
+        [(0.36, 0.52), (0.64, 0.52)]],
+    8: [[(0.5, 0.14), (0.68, 0.25), (0.62, 0.44), (0.5, 0.5), (0.38, 0.44),
+         (0.32, 0.25), (0.5, 0.14)],
+        [(0.5, 0.5), (0.7, 0.6), (0.72, 0.78), (0.5, 0.88), (0.28, 0.78),
+         (0.3, 0.6), (0.5, 0.5)]],
+    9: [[(0.68, 0.44), (0.5, 0.52), (0.32, 0.42), (0.3, 0.24), (0.5, 0.12),
+         (0.68, 0.22), (0.68, 0.44), (0.62, 0.7), (0.45, 0.88)]],
+}
+
+
+def _render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 28x28 uint8 image of `digit` with random jitter."""
+    # Random affine: rotation, anisotropic scale, translation, shear.
+    theta = rng.uniform(-0.22, 0.22)
+    sx, sy = rng.uniform(0.82, 1.1, size=2)
+    shear = rng.uniform(-0.15, 0.15)
+    tx, ty = rng.uniform(-0.06, 0.06, size=2)
+    ca, sa = np.cos(theta), np.sin(theta)
+    mat = np.array([[ca * sx, -sa * sy + shear * ca], [sa * sx, ca * sy + shear * sa]])
+
+    thickness = rng.uniform(0.9, 1.7)
+    # Supersample on a 2x grid for cheap anti-aliasing.
+    ss = 2
+    size = IMG * ss
+    img = np.zeros((size, size), dtype=np.float32)
+
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32)
+    # Map pixel centres back to the unit frame.
+    px = (xx + 0.5) / size
+    py = (yy + 0.5) / size
+
+    for stroke in _SKELETONS[digit]:
+        pts = np.array(stroke, dtype=np.float64)
+        # Per-stroke point jitter.
+        pts = pts + rng.normal(0.0, 0.012, size=pts.shape)
+        # Affine about the centre.
+        pts = (pts - 0.5) @ mat.T + 0.5 + np.array([tx, ty])
+        for (x0, y0), (x1, y1) in zip(pts[:-1], pts[1:]):
+            # Distance from each pixel to the segment.
+            dx, dy = x1 - x0, y1 - y0
+            seg_len2 = dx * dx + dy * dy + 1e-12
+            t = ((px - x0) * dx + (py - y0) * dy) / seg_len2
+            t = np.clip(t, 0.0, 1.0)
+            cx = x0 + t * dx
+            cy = y0 + t * dy
+            d = np.sqrt((px - cx) ** 2 + (py - cy) ** 2)
+            # Pen profile: soft disc of radius ~thickness*0.032.
+            r = 0.032 * thickness
+            contrib = np.clip(1.0 - (d / r) ** 2, 0.0, 1.0)
+            img = np.maximum(img, contrib)
+
+    # Downsample 2x (box filter) back to 28x28.
+    img = img.reshape(IMG, ss, IMG, ss).mean(axis=(1, 3))
+    # Intensity variation + mild sensor noise, like MNIST's gray ramps.
+    peak = rng.uniform(0.75, 1.0)
+    img = img * peak
+    img = img + rng.normal(0.0, 0.012, size=img.shape)
+    # MNIST backgrounds are exactly zero; kill the faint sensor noise off
+    # the strokes so the sparsity profile (and thus baseline codec
+    # behaviour) matches the real dataset.
+    img[img < 0.04] = 0.0
+    img = np.clip(img, 0.0, 1.0)
+    return (img * 255.0 + 0.5).astype(np.uint8)
+
+
+def make_split(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` images + labels deterministically from `seed`."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.uint8)
+    imgs = np.zeros((n, IMG, IMG), dtype=np.uint8)
+    for i in range(n):
+        imgs[i] = _render_digit(int(labels[i]), rng)
+    return imgs, labels
+
+
+def binarize(images: np.ndarray, seed: int) -> np.ndarray:
+    """Stochastic binarization (Salakhutdinov & Murray 2008), fixed seed."""
+    rng = np.random.default_rng(seed)
+    p = images.astype(np.float32) / 255.0
+    return (rng.random(size=images.shape) < p).astype(np.uint8)
+
+
+# ---------------------------------------------------------------- IDX I/O
+
+
+def write_idx_images(path: str, images: np.ndarray) -> None:
+    assert images.ndim == 3 and images.dtype == np.uint8
+    n, r, c = images.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack(">IIII", 0x00000803, n, r, c))
+        f.write(images.tobytes())
+
+
+def write_idx_labels(path: str, labels: np.ndarray) -> None:
+    assert labels.ndim == 1 and labels.dtype == np.uint8
+    with open(path, "wb") as f:
+        f.write(struct.pack(">II", 0x00000801, labels.shape[0]))
+        f.write(labels.tobytes())
+
+
+def read_idx_images(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic, n, r, c = struct.unpack(">IIII", f.read(16))
+        assert magic == 0x00000803, f"bad magic {magic:#x}"
+        data = np.frombuffer(f.read(n * r * c), dtype=np.uint8)
+    return data.reshape(n, r, c)
+
+
+def read_idx_labels(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic, n = struct.unpack(">II", f.read(8))
+        assert magic == 0x00000801, f"bad magic {magic:#x}"
+        return np.frombuffer(f.read(n), dtype=np.uint8)
+
+
+# Default dataset spec. Smaller than the real 60k train split to keep
+# `make artifacts` minutes-scale; the test split matches MNIST's 10k so the
+# paper's Table 2 protocol ("compress the test set") is preserved.
+TRAIN_N = 20_000
+TEST_N = 10_000
+TRAIN_SEED = 1001
+TEST_SEED = 2002
+BINARIZE_SEED = 3003
+
+FILES = {
+    "train_images": "train-images-idx3-ubyte",
+    "train_labels": "train-labels-idx1-ubyte",
+    "test_images": "t10k-images-idx3-ubyte",
+    "test_labels": "t10k-labels-idx1-ubyte",
+    "train_images_bin": "train-images-bin-idx3-ubyte",
+    "test_images_bin": "t10k-images-bin-idx3-ubyte",
+}
+
+
+def ensure_dataset(data_dir: str) -> dict[str, str]:
+    """Generate the dataset into `data_dir` unless already present.
+
+    Returns a dict of absolute paths keyed as in FILES.
+    """
+    os.makedirs(data_dir, exist_ok=True)
+    paths = {k: os.path.join(data_dir, v) for k, v in FILES.items()}
+    if all(os.path.exists(p) for p in paths.values()):
+        return paths
+
+    print(f"[data] generating synthetic MNIST into {data_dir} ...", flush=True)
+    train_imgs, train_labels = make_split(TRAIN_N, TRAIN_SEED)
+    test_imgs, test_labels = make_split(TEST_N, TEST_SEED)
+    write_idx_images(paths["train_images"], train_imgs)
+    write_idx_labels(paths["train_labels"], train_labels)
+    write_idx_images(paths["test_images"], test_imgs)
+    write_idx_labels(paths["test_labels"], test_labels)
+    write_idx_images(paths["train_images_bin"], binarize(train_imgs, BINARIZE_SEED))
+    write_idx_images(paths["test_images_bin"], binarize(test_imgs, BINARIZE_SEED + 1))
+    print("[data] done", flush=True)
+    return paths
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/data"
+    ensure_dataset(out)

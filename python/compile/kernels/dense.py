@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused dense layer ``activation(x @ W + b)``.
+
+TPU mapping (DESIGN.md §4, §Hardware-Adaptation): the grid tiles the output
+[B, N] into (bm, bn) blocks; each grid step keeps an [bm, K] activation
+tile, a [K, bn] weight tile and the [bm, bn] output tile resident in VMEM
+and drives the MXU with a single f32 contraction. The VAE layer sizes here
+(K, N <= 800) let us keep the full K dimension per block, so no K-loop /
+accumulator is needed; bm/bn are chosen so each block's working set stays
+well under VMEM (see EXPERIMENTS.md §Perf for the footprint table).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which both the
+pytest oracle checks and the Rust runtime execute. The *structure* (grid,
+BlockSpecs) is still the TPU schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (keeps grids exact)."""
+    for cand in range(min(want, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn"))
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    activation: str = "none",
+    bm: int = 128,
+    bn: int = 128,
+) -> jnp.ndarray:
+    """Fused dense layer via a Pallas kernel. x: [B, K], w: [K, N], b: [N]."""
+    assert x.ndim == 2 and w.ndim == 2 and b.ndim == 1
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and b.shape[0] == N, (x.shape, w.shape, b.shape)
+    bm = _block(B, bm)
+    bn = _block(N, bn)
+    grid = (B // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))

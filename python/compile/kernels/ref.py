@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground truth that ``python/tests/test_kernel.py`` checks the
+Pallas implementations against (hypothesis sweeps shapes and dtypes), and
+they are also what the *training* loop uses: interpret-mode Pallas is far
+too slow to put inside the training step, and the math is identical. The
+AOT-exported inference graphs (the artifacts Rust executes) use the real
+Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "none") -> jnp.ndarray:
+    """Fused dense layer: activation(x @ w + b).
+
+    x: [B, K], w: [K, N], b: [N] -> [B, N]
+    """
+    y = jnp.dot(x, w) + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def beta_binomial_logpmf_ref(alpha: jnp.ndarray, beta: jnp.ndarray, n: int = 255) -> jnp.ndarray:
+    """Log-PMF table of BetaBinomial(n, alpha, beta).
+
+    alpha, beta: [..., D] -> [..., D, n+1]
+    """
+    k = jnp.arange(n + 1, dtype=alpha.dtype)
+    a = alpha[..., None]
+    b = beta[..., None]
+    log_binom = (
+        lax.lgamma(jnp.asarray(n + 1.0, dtype=alpha.dtype))
+        - lax.lgamma(k + 1.0)
+        - lax.lgamma(n - k + 1.0)
+    )
+    num = lax.lgamma(k + a) + lax.lgamma(n - k + b) - lax.lgamma(n + a + b)
+    den = lax.lgamma(a) + lax.lgamma(b) - lax.lgamma(a + b)
+    return log_binom + num - den
+
+
+def bbpmf_ref(alpha: jnp.ndarray, beta: jnp.ndarray, n: int = 255) -> jnp.ndarray:
+    """PMF table of BetaBinomial(n, alpha, beta): [..., D] -> [..., D, n+1]."""
+    return jnp.exp(beta_binomial_logpmf_ref(alpha, beta, n))

@@ -1,0 +1,220 @@
+"""L2: the VAE models from the paper (§3.1-3.2), in pure JAX.
+
+Two variants, exactly as evaluated in the paper:
+
+* ``bin``  — binarized MNIST: 784-100 recognition/generative nets with a
+  40-dim latent and a per-pixel **Bernoulli** likelihood.
+* ``full`` — raw MNIST: 784-200 nets, 50-dim latent, per-pixel
+  **beta-binomial** likelihood (two positive parameters per pixel).
+
+Both use a standard Gaussian prior and diagonal-Gaussian approximate
+posterior. The training objective is the ELBO, which (paper §2.2) equals
+the negative expected BB-ANS message length — so the trained ELBO is the
+compression-rate target the Rust codec must hit.
+
+The forward passes are parameterized over the dense-layer implementation:
+``kernel="ref"`` uses the pure-jnp oracle (fast under jit — used for
+training), ``kernel="pallas"`` uses the L1 Pallas kernels (used for the
+AOT-exported inference graphs that Rust executes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bbpmf as bbpmf_mod
+from .kernels import dense as dense_mod
+from .kernels import ref as ref_mod
+
+Params = dict[str, jnp.ndarray]
+
+PIXELS = 784
+PIXEL_LEVELS = 256
+
+BIN_SPEC = dict(name="bin", in_dim=PIXELS, hidden=100, latent=40, likelihood="bernoulli")
+FULL_SPEC = dict(name="full", in_dim=PIXELS, hidden=200, latent=50, likelihood="beta_binomial")
+
+SPECS = {"bin": BIN_SPEC, "full": FULL_SPEC}
+
+# Clamp for the posterior log-variance: keeps sigma in a range where the
+# discretized-Gaussian codec is well-conditioned.
+LOGVAR_MIN, LOGVAR_MAX = -10.0, 10.0
+# Positivity floor for beta-binomial parameters.
+AB_EPS = 1e-3
+
+
+def _dense_fn(kernel: str) -> Callable[..., jnp.ndarray]:
+    if kernel == "ref":
+        return ref_mod.dense_ref
+    if kernel == "pallas":
+        return dense_mod.dense
+    raise ValueError(f"unknown kernel impl {kernel!r}")
+
+
+def _bbpmf_fn(kernel: str) -> Callable[..., jnp.ndarray]:
+    if kernel == "ref":
+        return ref_mod.bbpmf_ref
+    if kernel == "pallas":
+        return bbpmf_mod.bbpmf
+    raise ValueError(f"unknown kernel impl {kernel!r}")
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_params(spec: dict[str, Any], seed: int) -> Params:
+    """Glorot-initialized parameters for both networks of one VAE."""
+    rng = np.random.default_rng(seed)
+    in_dim, hidden, latent = spec["in_dim"], spec["hidden"], spec["latent"]
+    out_heads = 1 if spec["likelihood"] == "bernoulli" else 2
+
+    def glorot(fan_in: int, fan_out: int) -> np.ndarray:
+        s = math.sqrt(2.0 / (fan_in + fan_out))
+        return rng.normal(0.0, s, size=(fan_in, fan_out)).astype(np.float32)
+
+    p = {
+        # Recognition (encoder) net.
+        "enc_w1": glorot(in_dim, hidden),
+        "enc_b1": np.zeros(hidden, np.float32),
+        "enc_w_mu": glorot(hidden, latent),
+        "enc_b_mu": np.zeros(latent, np.float32),
+        "enc_w_lv": glorot(hidden, latent),
+        "enc_b_lv": np.zeros(latent, np.float32),
+        # Generative (decoder) net.
+        "dec_w1": glorot(latent, hidden),
+        "dec_b1": np.zeros(hidden, np.float32),
+        "dec_w_out": glorot(hidden, in_dim * out_heads),
+        "dec_b_out": np.zeros(in_dim * out_heads, np.float32),
+    }
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+# -------------------------------------------------------------- forward
+
+
+def encoder_apply(params: Params, x: jnp.ndarray, kernel: str = "ref") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Recognition net: x [B, 784] (already scaled) -> (mu, sigma) [B, L]."""
+    dense = _dense_fn(kernel)
+    h = dense(x, params["enc_w1"], params["enc_b1"], activation="relu")
+    mu = dense(h, params["enc_w_mu"], params["enc_b_mu"], activation="none")
+    logvar = dense(h, params["enc_w_lv"], params["enc_b_lv"], activation="none")
+    logvar = jnp.clip(logvar, LOGVAR_MIN, LOGVAR_MAX)
+    sigma = jnp.exp(0.5 * logvar)
+    return mu, sigma
+
+
+def decoder_apply_bin(params: Params, y: jnp.ndarray, kernel: str = "ref") -> jnp.ndarray:
+    """Generative net (bin): y [B, L] -> Bernoulli probs [B, 784]."""
+    dense = _dense_fn(kernel)
+    h = dense(y, params["dec_w1"], params["dec_b1"], activation="relu")
+    logits = dense(h, params["dec_w_out"], params["dec_b_out"], activation="none")
+    return jax.nn.sigmoid(logits)
+
+
+def decoder_logits_bin(params: Params, y: jnp.ndarray, kernel: str = "ref") -> jnp.ndarray:
+    dense = _dense_fn(kernel)
+    h = dense(y, params["dec_w1"], params["dec_b1"], activation="relu")
+    return dense(h, params["dec_w_out"], params["dec_b_out"], activation="none")
+
+
+def decoder_ab_full(params: Params, y: jnp.ndarray, kernel: str = "ref") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Generative net (full): y [B, L] -> beta-binomial (alpha, beta) [B, 784]."""
+    dense = _dense_fn(kernel)
+    h = dense(y, params["dec_w1"], params["dec_b1"], activation="relu")
+    raw = dense(h, params["dec_w_out"], params["dec_b_out"], activation="none")
+    raw_a, raw_b = raw[:, :PIXELS], raw[:, PIXELS:]
+    alpha = jax.nn.softplus(raw_a) + AB_EPS
+    beta = jax.nn.softplus(raw_b) + AB_EPS
+    return alpha, beta
+
+
+def decoder_table_full(params: Params, y: jnp.ndarray, kernel: str = "ref") -> jnp.ndarray:
+    """Full decoder incl. L1 PMF-table kernel: y [B, L] -> [B, 784, 256]."""
+    alpha, beta = decoder_ab_full(params, y, kernel)
+    table = _bbpmf_fn(kernel)(alpha, beta)
+    return table
+
+
+# ----------------------------------------------------------------- ELBO
+
+
+def gauss_kl(mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """KL(N(mu, sigma^2) || N(0, I)), summed over latent dims. [B]"""
+    return 0.5 * jnp.sum(mu**2 + sigma**2 - 1.0 - 2.0 * jnp.log(sigma), axis=-1)
+
+
+def bernoulli_loglik(logits: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over pixels of log Bernoulli(x | sigmoid(logits)). [B]"""
+    # log p = x * log(sig) + (1-x) * log(1-sig), numerically via softplus.
+    return jnp.sum(x * logits - jax.nn.softplus(logits), axis=-1) - 0.0
+
+
+def beta_binomial_loglik(alpha: jnp.ndarray, beta: jnp.ndarray, k: jnp.ndarray, n: int = 255) -> jnp.ndarray:
+    """Sum over pixels of log BetaBin(k | n, alpha, beta). [B]"""
+    from jax import lax
+
+    nf = jnp.float32(n)
+    log_binom = lax.lgamma(nf + 1.0) - lax.lgamma(k + 1.0) - lax.lgamma(nf - k + 1.0)
+    num = lax.lgamma(k + alpha) + lax.lgamma(nf - k + beta) - lax.lgamma(nf + alpha + beta)
+    den = lax.lgamma(alpha) + lax.lgamma(beta) - lax.lgamma(alpha + beta)
+    return jnp.sum(log_binom + num - den, axis=-1)
+
+
+def elbo(params: Params, spec: dict[str, Any], x_raw: jnp.ndarray, eps: jnp.ndarray, kernel: str = "ref") -> jnp.ndarray:
+    """Single-sample ELBO (nats) per image. [B]
+
+    ``x_raw`` is the observed symbol array: {0,1} for bin, {0..255} for
+    full. ``eps`` is standard normal noise of shape [B, latent].
+    """
+    if spec["likelihood"] == "bernoulli":
+        x_in = x_raw
+    else:
+        x_in = x_raw / 255.0
+    mu, sigma = encoder_apply(params, x_in, kernel)
+    y = mu + sigma * eps
+    kl = gauss_kl(mu, sigma)
+    if spec["likelihood"] == "bernoulli":
+        logits = decoder_logits_bin(params, y, kernel)
+        ll = bernoulli_loglik(logits, x_raw)
+    else:
+        alpha, beta = decoder_ab_full(params, y, kernel)
+        ll = beta_binomial_loglik(alpha, beta, x_raw)
+    return ll - kl
+
+
+def elbo_bits_per_dim(elbo_nats: jnp.ndarray) -> jnp.ndarray:
+    """Convert per-image ELBO (nats) to bits per pixel (paper Table 2)."""
+    return -elbo_nats / (PIXELS * math.log(2.0))
+
+
+# --------------------------------------------------------------- export
+
+
+def export_fns(params: Params, spec: dict[str, Any], kernel: str = "pallas"):
+    """The (encoder, decoder) inference functions that get AOT-lowered.
+
+    Weights are closed over, so they appear as constants in the HLO and the
+    artifacts are self-contained. Outputs are tuples (lowered with
+    return_tuple=True; the Rust side unwraps).
+    """
+
+    def encoder(x):
+        mu, sigma = encoder_apply(params, x, kernel)
+        return (mu, sigma)
+
+    if spec["likelihood"] == "bernoulli":
+
+        def decoder(y):
+            return (decoder_apply_bin(params, y, kernel),)
+
+    else:
+
+        def decoder(y):
+            return (decoder_table_full(params, y, kernel),)
+
+    return encoder, decoder

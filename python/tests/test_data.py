@@ -1,0 +1,65 @@
+"""Synthetic-MNIST generator and IDX I/O tests."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_split_deterministic_and_shaped():
+    a_imgs, a_labels = D.make_split(12, 99)
+    b_imgs, b_labels = D.make_split(12, 99)
+    assert (a_imgs == b_imgs).all()
+    assert (a_labels == b_labels).all()
+    assert a_imgs.shape == (12, 28, 28)
+    assert a_imgs.dtype == np.uint8
+    assert set(np.unique(a_labels)) <= set(range(10))
+
+
+def test_different_seeds_differ():
+    a, _ = D.make_split(6, 1)
+    b, _ = D.make_split(6, 2)
+    assert (a != b).any()
+
+
+def test_images_look_mnist_like():
+    imgs, _ = D.make_split(50, 7)
+    # Sparse foreground on exact-zero background.
+    zero_frac = (imgs == 0).mean()
+    assert 0.5 < zero_frac < 0.95, zero_frac
+    # Strokes reach high intensity.
+    assert (imgs.max(axis=(1, 2)) > 150).all()
+
+
+def test_binarize_deterministic_and_bernoulli_like():
+    imgs, _ = D.make_split(30, 3)
+    b1 = D.binarize(imgs, 5)
+    b2 = D.binarize(imgs, 5)
+    assert (b1 == b2).all()
+    assert set(np.unique(b1)) <= {0, 1}
+    # Mean of binarized ≈ mean intensity / 255.
+    assert abs(b1.mean() - imgs.mean() / 255.0) < 0.01
+
+
+def test_idx_roundtrip(tmp_path):
+    imgs, labels = D.make_split(5, 11)
+    pi = tmp_path / "imgs.idx"
+    pl = tmp_path / "labels.idx"
+    D.write_idx_images(str(pi), imgs)
+    D.write_idx_labels(str(pl), labels)
+    assert (D.read_idx_images(str(pi)) == imgs).all()
+    assert (D.read_idx_labels(str(pl)) == labels).all()
+
+
+def test_ensure_dataset_is_idempotent(tmp_path, monkeypatch):
+    # Shrink the dataset so the test is fast.
+    monkeypatch.setattr(D, "TRAIN_N", 8)
+    monkeypatch.setattr(D, "TEST_N", 4)
+    d = str(tmp_path / "data")
+    paths1 = D.ensure_dataset(d)
+    mtimes = {k: __import__("os").path.getmtime(v) for k, v in paths1.items()}
+    paths2 = D.ensure_dataset(d)
+    assert paths1 == paths2
+    for k, v in paths2.items():
+        assert __import__("os").path.getmtime(v) == mtimes[k], "must not regenerate"
+    imgs = D.read_idx_images(paths1["train_images"])
+    assert imgs.shape == (8, 28, 28)

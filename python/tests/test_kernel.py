@@ -1,0 +1,108 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py.
+This is the CORE correctness signal for the kernels that end up inside the
+AOT artifacts Rust executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bbpmf as BK
+from compile.kernels import dense as DK
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@st.composite
+def dense_case(draw):
+    b = draw(st.integers(1, 9))
+    k = draw(st.integers(1, 64))
+    n = draw(st.integers(1, 48))
+    seed = draw(st.integers(0, 2**31 - 1))
+    act = draw(st.sampled_from(["none", "relu"]))
+    return b, k, n, seed, act
+
+
+@settings(max_examples=25, deadline=None)
+@given(dense_case())
+def test_dense_matches_ref(case):
+    b, k, n, seed, act = case
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    w = (rng.normal(size=(k, n)) * 0.1).astype(np.float32)
+    bias = rng.normal(size=(n,)).astype(np.float32)
+    got = DK.dense(x, w, bias, activation=act)
+    want = R.dense_ref(x, w, bias, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_blocks_divide_irregular_shapes():
+    # Odd shapes exercise the _block divisor search.
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(7, 13)).astype(np.float32)
+    w = rng.normal(size=(13, 17)).astype(np.float32)
+    b = rng.normal(size=(17,)).astype(np.float32)
+    got = DK.dense(x, w, b, bm=4, bn=4)
+    want = R.dense_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_clamps():
+    x = -np.ones((2, 4), np.float32)
+    w = np.eye(4, dtype=np.float32)
+    b = np.zeros(4, np.float32)
+    out = np.asarray(DK.dense(x, w, b, activation="relu"))
+    assert (out == 0).all()
+
+
+@st.composite
+def bbpmf_case(draw):
+    d = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lo = draw(st.floats(0.05, 1.0))
+    hi = draw(st.floats(1.5, 40.0))
+    return d, seed, lo, hi
+
+
+@settings(max_examples=20, deadline=None)
+@given(bbpmf_case())
+def test_bbpmf_matches_ref(case):
+    d, seed, lo, hi = case
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(lo, hi, size=(d,)).astype(np.float32)
+    b = rng.uniform(lo, hi, size=(d,)).astype(np.float32)
+    got = BK.bbpmf(jnp.asarray(a), jnp.asarray(b))
+    want = R.bbpmf_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-6)
+
+
+def test_bbpmf_rows_are_pmfs():
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0.3, 8.0, size=(784,)).astype(np.float32)
+    b = rng.uniform(0.3, 8.0, size=(784,)).astype(np.float32)
+    table = np.asarray(BK.bbpmf(jnp.asarray(a), jnp.asarray(b)))
+    assert table.shape == (784, 256)
+    assert (table >= 0).all()
+    np.testing.assert_allclose(table.sum(-1), 1.0, atol=2e-3)
+
+
+def test_bbpmf_batched_matches_loop():
+    rng = np.random.default_rng(4)
+    a = rng.uniform(0.5, 5.0, size=(3, 16)).astype(np.float32)
+    b = rng.uniform(0.5, 5.0, size=(3, 16)).astype(np.float32)
+    batched = np.asarray(BK.bbpmf(jnp.asarray(a), jnp.asarray(b)))
+    for i in range(3):
+        single = np.asarray(BK.bbpmf(jnp.asarray(a[i]), jnp.asarray(b[i])))
+        np.testing.assert_allclose(batched[i], single, rtol=1e-6, atol=0)
+
+
+def test_bbpmf_uniform_when_alpha_beta_one():
+    ones = jnp.ones(8, jnp.float32)
+    table = np.asarray(BK.bbpmf(ones, ones))
+    # f32 lgamma at args up to ~260 carries ~1e-4 relative error.
+    np.testing.assert_allclose(table, 1.0 / 256.0, rtol=5e-4)

@@ -1,0 +1,98 @@
+"""L2 correctness: VAE shapes, ELBO finiteness/improvement, and the
+pallas-vs-ref forward equivalence on the export path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(spec, seed=0):
+    return M.init_params(spec, seed)
+
+
+def test_encoder_shapes_and_sigma_positive():
+    for name in ("bin", "full"):
+        spec = M.SPECS[name]
+        p = _params(spec)
+        x = jnp.zeros((3, 784), jnp.float32)
+        mu, sigma = M.encoder_apply(p, x)
+        assert mu.shape == (3, spec["latent"])
+        assert sigma.shape == (3, spec["latent"])
+        assert (np.asarray(sigma) > 0).all()
+
+
+def test_decoder_bin_outputs_probabilities():
+    spec = M.SPECS["bin"]
+    p = _params(spec)
+    y = jnp.zeros((2, spec["latent"]), jnp.float32)
+    probs = M.decoder_apply_bin(p, y)
+    arr = np.asarray(probs)
+    assert arr.shape == (2, 784)
+    assert ((arr >= 0) & (arr <= 1)).all()
+
+
+def test_decoder_full_outputs_positive_params_and_table():
+    spec = M.SPECS["full"]
+    p = _params(spec)
+    y = jnp.zeros((2, spec["latent"]), jnp.float32)
+    a, b = M.decoder_ab_full(p, y)
+    assert (np.asarray(a) > 0).all() and (np.asarray(b) > 0).all()
+    table = M.decoder_table_full(p, y)
+    assert table.shape == (2, 784, 256)
+    np.testing.assert_allclose(np.asarray(table).sum(-1), 1.0, atol=2e-3)
+
+
+def test_elbo_finite_and_kl_nonnegative():
+    rng = np.random.default_rng(1)
+    for name in ("bin", "full"):
+        spec = M.SPECS[name]
+        p = _params(spec)
+        levels = 2 if name == "bin" else 256
+        x = rng.integers(0, levels, size=(4, 784)).astype(np.float32)
+        eps = rng.normal(size=(4, spec["latent"])).astype(np.float32)
+        e = M.elbo(p, spec, jnp.asarray(x), jnp.asarray(eps))
+        assert np.isfinite(np.asarray(e)).all()
+    mu = jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))
+    sigma = jnp.asarray(rng.uniform(0.1, 3.0, size=(5, 8)).astype(np.float32))
+    kl = M.gauss_kl(mu, sigma)
+    assert (np.asarray(kl) >= 0).all()
+    # KL of the prior with itself is zero.
+    z = M.gauss_kl(jnp.zeros((1, 8)), jnp.ones((1, 8)))
+    np.testing.assert_allclose(np.asarray(z), 0.0, atol=1e-6)
+
+
+def test_pallas_and_ref_forward_agree():
+    # The export path (pallas) must match the training path (ref).
+    for name in ("bin", "full"):
+        spec = M.SPECS[name]
+        p = _params(spec, seed=7)
+        x = jnp.asarray(np.random.default_rng(2).random((2, 784)).astype(np.float32))
+        mu_r, sig_r = M.encoder_apply(p, x, kernel="ref")
+        mu_p, sig_p = M.encoder_apply(p, x, kernel="pallas")
+        np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_r), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sig_p), np.asarray(sig_r), rtol=1e-5, atol=1e-5)
+
+
+def test_one_epoch_improves_elbo():
+    spec = M.SPECS["bin"]
+    rng = np.random.default_rng(3)
+    # A tiny learnable dataset: two prototype patterns + noise.
+    protos = (rng.random((2, 784)) < 0.2).astype(np.uint8)
+    idx = rng.integers(0, 2, size=256)
+    imgs = protos[idx]
+    flips = rng.random(imgs.shape) < 0.02
+    imgs = (imgs ^ flips).astype(np.uint8).reshape(256, 28, 28)
+    params, bpd1 = T.train(spec, imgs, imgs[:64], epochs=1, batch=64, log=lambda *a, **k: None)
+    params, bpd5 = T.train(spec, imgs, imgs[:64], epochs=5, batch=64, log=lambda *a, **k: None)
+    assert bpd5 < bpd1, f"training should reduce -ELBO: {bpd1} -> {bpd5}"
+
+
+def test_elbo_bits_per_dim_conversion():
+    # -ELBO of exactly 784*ln2 nats == 1 bit/dim.
+    e = jnp.asarray([-784.0 * np.log(2.0)])
+    np.testing.assert_allclose(np.asarray(M.elbo_bits_per_dim(e)), 1.0, rtol=1e-6)

@@ -1,0 +1,97 @@
+//! ANS coder micro-benchmarks: push/pop throughput, plus the interleaved
+//! multi-lane extension (paper §4.2 / Giesen 2014).
+
+use bbans::ans::interleaved::{InterleavedAns, Interval};
+use bbans::ans::Ans;
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::util::rng::Rng;
+
+fn dist(prec: u32, k: usize) -> Vec<Interval> {
+    let total = 1u64 << prec;
+    let raw: Vec<u64> = (0..k).map(|i| (i as u64 + 1) * (i as u64 + 1)).collect();
+    let s: u64 = raw.iter().sum();
+    let mut freqs: Vec<u32> = raw.iter().map(|&r| ((r * total) / s).max(1) as u32).collect();
+    let fix = total as i64 - freqs.iter().map(|&f| f as i64).sum::<i64>();
+    let last = freqs.len() - 1;
+    freqs[last] = (freqs[last] as i64 + fix) as u32;
+    let mut start = 0u32;
+    freqs
+        .into_iter()
+        .map(|f| {
+            let iv = Interval { start, freq: f };
+            start += f;
+            iv
+        })
+        .collect()
+}
+
+fn main() {
+    table_header("ANS coder throughput (L3 hot path)");
+    let mut bench = Bench::new();
+    let prec = 14u32;
+    let k = 64usize;
+    let d = dist(prec, k);
+    let n = 1_000_000usize;
+    let mut rng = Rng::new(1);
+    let syms: Vec<usize> = (0..n).map(|_| rng.below(k as u64) as usize).collect();
+
+    bench.run("ans/push 1M skewed symbols", n as f64, || {
+        let mut ans = Ans::new(0);
+        for &s in &syms {
+            ans.push(d[s].start, d[s].freq, prec);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Pre-encode once for the pop benchmark.
+    let mut encoded = Ans::new(0);
+    for &s in syms.iter().rev() {
+        encoded.push(d[s].start, d[s].freq, prec);
+    }
+    let msg = encoded.to_message();
+    bench.run("ans/pop 1M skewed symbols", n as f64, || {
+        let mut ans = Ans::from_message(&msg, 0);
+        let mut acc = 0usize;
+        for _ in 0..n {
+            let s = ans.pop_with(prec, |cf| {
+                // Binary search over cumulative starts.
+                let i = d.partition_point(|iv| iv.start <= cf) - 1;
+                (i, d[i].start, d[i].freq)
+            });
+            acc ^= s;
+        }
+        black_box(acc);
+    });
+
+    let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+    bench.run("ans/interleaved-2 encode 1M", n as f64, || {
+        let mut c = InterleavedAns::<2>::new();
+        c.encode(&ivs, prec);
+        black_box(c.stream_len());
+    });
+    bench.run("ans/interleaved-4 encode 1M", n as f64, || {
+        let mut c = InterleavedAns::<4>::new();
+        c.encode(&ivs, prec);
+        black_box(c.stream_len());
+    });
+
+    let mut c4 = InterleavedAns::<4>::new();
+    c4.encode(&ivs, prec);
+    bench.run("ans/interleaved-4 decode 1M", n as f64, || {
+        let mut c = c4.clone();
+        let out = c.decode(n, prec, |cf| {
+            let i = d.partition_point(|iv| iv.start <= cf) - 1;
+            (i, d[i])
+        });
+        black_box(out.len());
+    });
+
+    // Uniform pushes (the latent-prior path: freq=1).
+    bench.run("ans/push 1M uniform-12bit (prior path)", n as f64, || {
+        let mut ans = Ans::new(0);
+        for &s in &syms {
+            ans.push((s as u32 * 61) & 0xfff, 1, 12);
+        }
+        black_box(ans.stream_len());
+    });
+}

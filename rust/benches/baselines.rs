@@ -1,0 +1,84 @@
+//! Baseline codec benchmarks: throughput + rate of our from-scratch
+//! implementations vs the reference crates on image data.
+
+use bbans::baselines::{bz, deflate, external, gzip, png, webp};
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::data::synth;
+
+fn main() {
+    table_header("baseline codecs: throughput and rate (28x28 digits + 64x64 natural)");
+    let mut bench = Bench::new();
+
+    let digits = synth::digits(512, 99);
+    let flat = digits.flat();
+    let nat = synth::natural(16, 64, 98);
+
+    println!(
+        "workload: {} bytes of digit images, {} bytes of natural images\n",
+        flat.len(),
+        nat.raw_bytes()
+    );
+
+    // Our DEFLATE vs flate2.
+    bench.run("deflate/ours compress digits", flat.len() as f64, || {
+        black_box(deflate::compress(&flat, 128));
+    });
+    bench.run("deflate/flate2 compress digits", flat.len() as f64, || {
+        black_box(external::flate2_gzip(&flat));
+    });
+    let compressed = deflate::compress(&flat, 128);
+    println!(
+        "    rate: ours {} B vs flate2 {} B\n",
+        compressed.len(),
+        external::flate2_gzip(&flat).len()
+    );
+    bench.run("deflate/ours decompress digits", flat.len() as f64, || {
+        black_box(deflate::decompress(&compressed).unwrap());
+    });
+
+    // Our bz-style vs bzip2.
+    bench.run("bz/ours compress digits", flat.len() as f64, || {
+        black_box(bz::compress(&flat, 256 * 1024));
+    });
+    bench.run("bz/bzip2 compress digits", flat.len() as f64, || {
+        black_box(external::bzip2_compress(&flat));
+    });
+    let bzc = bz::compress(&flat, 256 * 1024);
+    println!(
+        "    rate: ours {} B vs bzip2 {} B\n",
+        bzc.len(),
+        external::bzip2_compress(&flat).len()
+    );
+    bench.run("bz/ours decompress digits", flat.len() as f64, || {
+        black_box(bz::decompress(&bzc).unwrap());
+    });
+
+    // PNG per image.
+    bench.run("png/encode 512 digit images", 512.0, || {
+        for img in &digits.images {
+            black_box(png::encode(img, 28, 28, 8).unwrap());
+        }
+    });
+    let pngs: Vec<Vec<u8>> = digits
+        .images
+        .iter()
+        .map(|i| png::encode(i, 28, 28, 8).unwrap())
+        .collect();
+    bench.run("png/decode 512 digit images", 512.0, || {
+        for p in &pngs {
+            black_box(png::decode(p).unwrap());
+        }
+    });
+
+    // WebP-style on natural images.
+    bench.run("webp/encode 16 natural 64x64", 16.0, || {
+        for img in &nat.images {
+            black_box(webp::encode(img, 64, 64).unwrap());
+        }
+    });
+
+    // gzip container overheads.
+    bench.run("gzip/ours container digits", flat.len() as f64, || {
+        black_box(gzip::gzip_compress(&flat, 128));
+    });
+}

@@ -1,0 +1,90 @@
+//! Distribution-codec benchmarks: the per-pixel and per-latent-dim costs
+//! that dominate the BB-ANS hot path.
+
+use bbans::ans::Ans;
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::codecs::beta_binomial::BetaBinomial;
+use bbans::codecs::categorical::Categorical;
+use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
+use bbans::codecs::quantize::QuantizedCdf;
+use bbans::codecs::SymbolCodec;
+use bbans::util::rng::Rng;
+
+fn main() {
+    table_header("distribution codecs (per-symbol hot path)");
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(2);
+
+    // Bernoulli pixels (binarized model): build + push.
+    let probs: Vec<f64> = (0..784).map(|_| rng.f64()).collect();
+    let bits: Vec<usize> = (0..784).map(|i| (probs[i] > 0.5) as usize).collect();
+    bench.run("bernoulli/build+push 784 pixels", 784.0, || {
+        let mut ans = Ans::new(0);
+        for p in 0..784 {
+            let c = Categorical::bernoulli(probs[p], 16);
+            c.push(&mut ans, bits[p]);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Beta-binomial from parameters (native backend path).
+    let alphas: Vec<f64> = (0..784).map(|_| 0.3 + rng.f64() * 8.0).collect();
+    let betas: Vec<f64> = (0..784).map(|_| 0.3 + rng.f64() * 8.0).collect();
+    let pix: Vec<u32> = (0..784).map(|_| rng.below(256) as u32).collect();
+    bench.run("beta-binomial/from_params 784 pixels", 784.0, || {
+        let mut ans = Ans::new(0);
+        for p in 0..784 {
+            let c = BetaBinomial::from_params(255, alphas[p], betas[p], 18);
+            c.push(&mut ans, pix[p]);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Beta-binomial from a PMF table row (PJRT backend path).
+    let table: Vec<f32> = (0..784 * 256)
+        .map(|i| {
+            bbans::util::math::beta_binomial_logpmf(
+                (i % 256) as u32,
+                255,
+                alphas[i / 256],
+                betas[i / 256],
+            )
+            .exp() as f32
+        })
+        .collect();
+    bench.run("beta-binomial/from_pmf_row 784 pixels", 784.0, || {
+        let mut ans = Ans::new(0);
+        for p in 0..784 {
+            let c = BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], 18);
+            c.push(&mut ans, pix[p]);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Discretized Gaussian posterior: pop (sampling via bisection) and push.
+    let buckets = MaxEntropyBuckets::new(12);
+    let mus: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+    let sigmas: Vec<f64> = (0..40).map(|_| 0.05 + rng.f64()).collect();
+    bench.run("gaussian/pop 40 latent dims (bisection)", 40.0, || {
+        let mut ans = Ans::new(7);
+        for d in 0..40 {
+            let g = DiscretizedGaussian::new(buckets.clone(), mus[d], sigmas[d], 24);
+            black_box(g.pop(&mut ans));
+        }
+    });
+    let idxs: Vec<u32> = (0..40).map(|_| rng.below(1 << 12) as u32).collect();
+    bench.run("gaussian/push 40 latent dims", 40.0, || {
+        let mut ans = Ans::new(0);
+        for d in 0..40 {
+            let g = DiscretizedGaussian::new(buckets.clone(), mus[d], sigmas[d], 24);
+            g.push(&mut ans, idxs[d]);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Raw quantization cost.
+    let pmf: Vec<f64> = (0..256).map(|_| rng.f64() + 1e-6).collect();
+    bench.run("quantize/256-symbol pmf -> 2^18", 256.0, || {
+        black_box(QuantizedCdf::from_pmf(&pmf, 18));
+    });
+}

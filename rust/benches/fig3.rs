@@ -1,0 +1,55 @@
+//! Figure 3 regenerator (bench form): time the chained encode over three
+//! shuffled copies of the test set and report the final moving-average
+//! rate. The plotted curve comes from `examples/fig3_moving_average.rs`.
+
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::data::load_split;
+use bbans::model::vae::load_native;
+use bbans::model::Backend;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+use bbans::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping fig3 bench: run `make artifacts`");
+        return;
+    }
+    let n_per_copy: usize = std::env::var("BBANS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3000);
+    table_header(&format!(
+        "Figure 3 pipeline: 3 x {n_per_copy} shuffled images, chained"
+    ));
+    let mut bench = Bench::new();
+
+    let ds = load_split(&dir, "test", true).unwrap();
+    let mut rng = Rng::new(303);
+    let mut images = Vec::with_capacity(3 * n_per_copy);
+    for _ in 0..3 {
+        let mut idx: Vec<usize> = (0..ds.len().min(n_per_copy)).collect();
+        rng.shuffle(&mut idx);
+        images.extend(idx.into_iter().map(|i| ds.images[i].clone()));
+    }
+
+    let backend = load_native(&dir, "bin").unwrap();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let n = images.len();
+    let mut final_rate = 0.0;
+    bench.run(&format!("fig3/chained encode {n} images"), n as f64, || {
+        let (ans, stats) = codec.encode_dataset(&images).unwrap();
+        let window = 2000.min(stats.len());
+        final_rate = stats[stats.len() - window..]
+            .iter()
+            .map(|s| s.net_bits / 784.0)
+            .sum::<f64>()
+            / window as f64;
+        black_box(ans.stream_len());
+    });
+    println!(
+        "    final 2000-image moving average: {final_rate:.4} bits/dim (ELBO {:.4})",
+        backend.meta().test_elbo_bpd
+    );
+}

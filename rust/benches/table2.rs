@@ -1,0 +1,64 @@
+//! Table 2 regenerator (bench form): BB-ANS + all baselines on both test
+//! sets, reporting bits/dim and throughput. `examples/mnist_compress.rs`
+//! prints the paper-formatted table; this target times the pipeline.
+//!
+//! Scale with BBANS_BENCH_N (default 2000 images).
+
+use bbans::baselines::standard_suite;
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::data::load_split;
+use bbans::model::vae::load_native;
+use bbans::model::Backend;
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping table2 bench: run `make artifacts`");
+        return;
+    }
+    let n: usize = std::env::var("BBANS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    table_header(&format!("Table 2 pipeline (n = {n} images per dataset)"));
+    let mut bench = Bench::new();
+
+    for (model, binarized, pixel_prec) in [("bin", true, 16u32), ("full", false, 18u32)] {
+        let ds = load_split(&dir, "test", binarized).unwrap().subset(n);
+        let backend = load_native(&dir, model).unwrap();
+        let cfg = BbAnsConfig {
+            pixel_prec,
+            ..Default::default()
+        };
+        let codec = VaeCodec::new(&backend, cfg).unwrap();
+
+        let mut rate = 0.0;
+        bench.run(&format!("bbans/{model} encode {n} images"), n as f64, || {
+            let (ans, _) = codec.encode_dataset(&ds.images).unwrap();
+            rate = ans.frac_bit_len() / (n as f64 * 784.0);
+            black_box(ans.stream_len());
+        });
+        println!(
+            "    bbans/{model}: {rate:.4} bits/dim (test ELBO {:.4})\n",
+            backend.meta().test_elbo_bpd
+        );
+
+        let (ans0, _) = codec.encode_dataset(&ds.images).unwrap();
+        let msg = ans0.to_message();
+        bench.run(&format!("bbans/{model} decode {n} images"), n as f64, || {
+            let mut ans = bbans::ans::Ans::from_message(&msg, cfg.clean_seed);
+            black_box(codec.decode_dataset(&mut ans, n).unwrap().len());
+        });
+
+        for bcodec in standard_suite(binarized) {
+            let name = format!("{}/{model} compress {n} images", bcodec.name());
+            let mut bpd = 0.0;
+            bench.run(&name, n as f64, || {
+                bpd = bcodec.bits_per_dim(&ds).unwrap();
+            });
+            println!("    {}: {bpd:.4} bits/dim\n", bcodec.name());
+        }
+    }
+}

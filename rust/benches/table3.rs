@@ -1,0 +1,44 @@
+//! Table 3 regenerator (bench form): benchmark codecs on the ImageNet64
+//! stand-in + binarized digits; BB-ANS column is the paper's PixelVAE
+//! prediction (constants), exactly as the paper computes it.
+
+use bbans::baselines::standard_suite;
+use bbans::bench::{table_header, Bench};
+use bbans::data::{load_split, synth};
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+
+fn main() {
+    table_header("Table 3: benchmark codecs for the PixelVAE prediction");
+    let mut bench = Bench::new();
+
+    println!("BB-ANS w/ PixelVAE predictions (paper constants): bin-MNIST 0.15, ImageNet64 3.66 bits/dim\n");
+
+    let nat = synth::natural(64, 64, 4242);
+    for codec in standard_suite(false) {
+        let mut bpd = 0.0;
+        bench.run(
+            &format!("{}/natural-64 compress 64 images", codec.name()),
+            64.0,
+            || {
+                bpd = codec.bits_per_dim(&nat).unwrap();
+            },
+        );
+        println!("    {}: {bpd:.4} bits/dim (paper ImageNet64 ref in example)\n", codec.name());
+    }
+
+    let dir = default_artifact_dir();
+    if artifacts_available(&dir) {
+        let ds = load_split(&dir, "test", true).unwrap().subset(1000);
+        for codec in standard_suite(true) {
+            let mut bpd = 0.0;
+            bench.run(
+                &format!("{}/bin-mnist compress 1000 images", codec.name()),
+                1000.0,
+                || {
+                    bpd = codec.bits_per_dim(&ds).unwrap();
+                },
+            );
+            println!("    {}: {bpd:.4} bits/dim\n", codec.name());
+        }
+    }
+}

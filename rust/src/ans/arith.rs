@@ -1,0 +1,228 @@
+//! Arithmetic (range) coding — the FIFO coder BB-ANS replaces.
+//!
+//! Paper §2.3: bits-back chaining *can* be done with AC (Frey 1997) but
+//! needs a stack-like wrapper and, critically, a coder **flush between
+//! every chaining step**, costing implementation-dependent bits per
+//! image. This module implements a classic byte-oriented range coder
+//! (Subbotin style) so `benches/ablations.rs` can measure that flush
+//! overhead directly against ANS's zero-overhead chaining.
+//!
+//! The coder codes symbols as `(start, freq)` intervals out of `2^prec`,
+//! the same quantized distributions the ANS codecs use, so rate
+//! differences are purely coder-structural.
+
+/// Range-coder encoder. FIFO: symbols decode in encode order.
+#[derive(Debug)]
+pub struct ArithEncoder {
+    low: u64,
+    range: u64,
+    out: Vec<u8>,
+}
+
+const TOP: u64 = 1 << 24;
+
+impl Default for ArithEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ArithEncoder {
+    pub fn new() -> Self {
+        Self {
+            low: 0,
+            range: u32::MAX as u64,
+            out: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        // Emit bytes while the top byte is settled (no carry possible) or
+        // the range has shrunk below the renormalization threshold.
+        while (self.low ^ (self.low + self.range)) < TOP || self.range < (1 << 16) {
+            if (self.low ^ (self.low + self.range)) >= TOP {
+                // Force range to the remaining span below the boundary.
+                self.range = (!self.low & 0xffff) + 1;
+            }
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & 0xffff_ffff;
+            self.range = (self.range << 8).min(u32::MAX as u64 - self.low);
+        }
+    }
+
+    /// Encode a symbol occupying `[start, start+freq)` of `2^prec`.
+    pub fn encode(&mut self, start: u32, freq: u32, prec: u32) {
+        debug_assert!(freq > 0);
+        let total = 1u64 << prec;
+        let r = self.range / total;
+        self.low += r * start as u64;
+        self.range = r * freq as u64;
+        self.normalize();
+    }
+
+    /// Flush the coder so the stream is decodable; returns the finished
+    /// bytes. This is the per-chaining-step cost the paper's §2.3 talks
+    /// about: 4 bytes here.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..4 {
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & 0xffff_ffff;
+        }
+        self.out
+    }
+
+    /// Current length in bits if finished now.
+    pub fn bit_len_with_flush(&self) -> usize {
+        (self.out.len() + 4) * 8
+    }
+}
+
+/// Range-coder decoder.
+#[derive(Debug)]
+pub struct ArithDecoder<'a> {
+    low: u64,
+    range: u64,
+    code: u64,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ArithDecoder<'a> {
+    pub fn new(input: &'a [u8]) -> Self {
+        let mut d = Self {
+            low: 0,
+            range: u32::MAX as u64,
+            code: 0,
+            input,
+            pos: 0,
+        };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u64;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.input.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        while (self.low ^ (self.low + self.range)) < TOP || self.range < (1 << 16) {
+            if (self.low ^ (self.low + self.range)) >= TOP {
+                self.range = (!self.low & 0xffff) + 1;
+            }
+            self.code = ((self.code << 8) | self.next_byte() as u64) & 0xffff_ffff;
+            self.low = (self.low << 8) & 0xffff_ffff;
+            self.range = (self.range << 8).min(u32::MAX as u64 - self.low);
+        }
+    }
+
+    /// Cumulative value of the next symbol (then call [`Self::consume`]).
+    pub fn peek_cf(&self, prec: u32) -> u32 {
+        let total = 1u64 << prec;
+        let r = self.range / total;
+        (((self.code - self.low) / r).min(total - 1)) as u32
+    }
+
+    pub fn consume(&mut self, start: u32, freq: u32, prec: u32) {
+        let total = 1u64 << prec;
+        let r = self.range / total;
+        self.low += r * start as u64;
+        self.range = r * freq as u64;
+        self.normalize();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::quantize::QuantizedCdf;
+    use crate::util::rng::Rng;
+
+    fn dist(seed: u64, k: usize, prec: u32) -> QuantizedCdf {
+        let mut rng = Rng::new(seed);
+        let pmf: Vec<f64> = (0..k).map(|_| rng.f64() + 1e-6).collect();
+        QuantizedCdf::from_pmf(&pmf, prec)
+    }
+
+    #[test]
+    fn roundtrip_fifo_order() {
+        let prec = 16;
+        let q = dist(1, 40, prec);
+        let mut rng = Rng::new(2);
+        let syms: Vec<usize> = (0..20_000).map(|_| rng.below(40) as usize).collect();
+        let mut enc = ArithEncoder::new();
+        for &s in &syms {
+            enc.encode(q.start(s), q.freq(s), prec);
+        }
+        let bytes = enc.finish();
+        let mut dec = ArithDecoder::new(&bytes);
+        for &s in &syms {
+            // FIFO: first encoded, first decoded.
+            let cf = dec.peek_cf(prec);
+            let got = q.lookup(cf);
+            assert_eq!(got, s);
+            dec.consume(q.start(got), q.freq(got), prec);
+        }
+    }
+
+    #[test]
+    fn rate_near_entropy() {
+        let prec = 14;
+        let q = dist(3, 16, prec);
+        let mut rng = Rng::new(4);
+        let n = 100_000;
+        let syms: Vec<usize> = (0..n)
+            .map(|_| q.lookup(rng.below(1 << prec) as u32))
+            .collect();
+        let entropy = q.entropy();
+        let mut enc = ArithEncoder::new();
+        for &s in &syms {
+            enc.encode(q.start(s), q.freq(s), prec);
+        }
+        let bits = enc.finish().len() as f64 * 8.0;
+        let rate = bits / n as f64;
+        assert!(
+            (rate - entropy).abs() / entropy < 0.01,
+            "rate {rate} vs entropy {entropy}"
+        );
+    }
+
+    #[test]
+    fn per_flush_overhead_is_constant_bytes() {
+        // Encoding N segments with a flush each costs ~4 bytes extra per
+        // segment vs one stream — the §2.3 chaining overhead.
+        let prec = 14;
+        let q = dist(5, 16, prec);
+        let mut rng = Rng::new(6);
+        let syms: Vec<usize> = (0..5000)
+            .map(|_| q.lookup(rng.below(1 << prec) as u32))
+            .collect();
+
+        let mut one = ArithEncoder::new();
+        for &s in &syms {
+            one.encode(q.start(s), q.freq(s), prec);
+        }
+        let single = one.finish().len();
+
+        let mut segmented = 0usize;
+        for chunk in syms.chunks(100) {
+            let mut enc = ArithEncoder::new();
+            for &s in chunk {
+                enc.encode(q.start(s), q.freq(s), prec);
+            }
+            segmented += enc.finish().len();
+        }
+        let n_segments = syms.len() / 100;
+        let overhead_per_segment = (segmented - single) as f64 / n_segments as f64;
+        assert!(
+            (2.0..=6.0).contains(&overhead_per_segment),
+            "expected a few bytes per flush, got {overhead_per_segment}"
+        );
+    }
+}

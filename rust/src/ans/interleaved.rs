@@ -1,0 +1,193 @@
+//! Interleaved multi-lane rANS (Giesen 2014, "Interleaved entropy coders").
+//!
+//! Paper §4.2 points at parallel ANS as the route to a high-throughput
+//! implementation. This module implements an N-lane interleaved coder: N
+//! independent rANS heads share a single output stream, with a fixed
+//! round-robin renormalization discipline so the decoder can reproduce the
+//! word order. Lanes expose instruction-level parallelism on CPUs (and map
+//! to SIMD/GPU threads in principle); `benches/ans.rs` measures the gain.
+//!
+//! Restrictions vs [`super::Ans`]: symbols are encoded in *batches* that are
+//! striped across lanes; the whole batch sequence is encoded back-to-front
+//! (the usual ANS stack discipline) and decoded front-to-back. There is no
+//! clean-bit facility here — this coder targets the fully-observed fast
+//! path (likelihood coding), not bits-back sampling.
+
+use super::RANS_L;
+
+/// An N-lane interleaved rANS encoder/decoder over a shared word stream.
+#[derive(Debug, Clone)]
+pub struct InterleavedAns<const N: usize> {
+    heads: [u64; N],
+    stream: Vec<u32>,
+}
+
+/// A symbol's quantized interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub start: u32,
+    pub freq: u32,
+}
+
+impl<const N: usize> InterleavedAns<N> {
+    pub fn new() -> Self {
+        Self {
+            heads: [RANS_L; N],
+            stream: Vec::new(),
+        }
+    }
+
+    /// Encode a slice of symbol intervals, striped across lanes:
+    /// symbol `i` goes to lane `i % N`. Must be called with the **entire**
+    /// sequence; encoding walks it back-to-front.
+    pub fn encode(&mut self, intervals: &[Interval], prec: u32) {
+        for (i, iv) in intervals.iter().enumerate().rev() {
+            let lane = i % N;
+            let limit = (iv.freq as u64) << (64 - prec);
+            let head = &mut self.heads[lane];
+            while *head >= limit {
+                self.stream.push(*head as u32);
+                *head >>= 32;
+            }
+            *head = ((*head / iv.freq as u64) << prec)
+                | (*head % iv.freq as u64 + iv.start as u64);
+        }
+        // The decoder reads words in reverse push order.
+    }
+
+    /// Decode `n` symbols front-to-back. `lookup(lane_cf) -> (sym, interval)`.
+    pub fn decode<S>(
+        &mut self,
+        n: usize,
+        prec: u32,
+        mut lookup: impl FnMut(u32) -> (S, Interval),
+    ) -> Vec<S> {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let lane = i % N;
+            let head = &mut self.heads[lane];
+            let cf = (*head & ((1u64 << prec) - 1)) as u32;
+            let (sym, iv) = lookup(cf);
+            debug_assert!(cf >= iv.start && cf < iv.start + iv.freq);
+            *head = iv.freq as u64 * (*head >> prec) + cf as u64 - iv.start as u64;
+            while *head < RANS_L {
+                let w = self.stream.pop().expect("interleaved stream underflow");
+                *head = (*head << 32) | w as u64;
+            }
+            out.push(sym);
+        }
+        out
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        64 * N as u64 + 32 * self.stream.len() as u64
+    }
+
+    pub fn stream_len(&self) -> usize {
+        self.stream.len()
+    }
+
+    pub fn is_pristine(&self) -> bool {
+        self.heads.iter().all(|&h| h == RANS_L) && self.stream.is_empty()
+    }
+}
+
+impl<const N: usize> Default for InterleavedAns<N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dist(prec: u32) -> Vec<Interval> {
+        // 16 symbols, geometric-ish.
+        let k = 16usize;
+        let total = 1u64 << prec;
+        let raw: Vec<u64> = (0..k).map(|i| (i as u64 + 1) * (i as u64 + 1)).collect();
+        let s: u64 = raw.iter().sum();
+        let mut freqs: Vec<u32> = raw.iter().map(|&r| ((r * total) / s).max(1) as u32).collect();
+        let fix = total as i64 - freqs.iter().map(|&f| f as i64).sum::<i64>();
+        let last = freqs.len() - 1;
+        freqs[last] = (freqs[last] as i64 + fix) as u32;
+        let mut start = 0u32;
+        freqs
+            .into_iter()
+            .map(|f| {
+                let iv = Interval { start, freq: f };
+                start += f;
+                iv
+            })
+            .collect()
+    }
+
+    fn lookup(cf: u32, d: &[Interval]) -> usize {
+        d.iter()
+            .position(|iv| cf >= iv.start && cf < iv.start + iv.freq)
+            .unwrap()
+    }
+
+    fn roundtrip<const N: usize>(n_syms: usize, seed: u64) {
+        let prec = 14;
+        let d = dist(prec);
+        let mut rng = Rng::new(seed);
+        let syms: Vec<usize> = (0..n_syms).map(|_| rng.below(16) as usize).collect();
+        let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+        let mut coder = InterleavedAns::<N>::new();
+        coder.encode(&ivs, prec);
+        let got = coder.decode(n_syms, prec, |cf| {
+            let s = lookup(cf, &d);
+            (s, d[s])
+        });
+        assert_eq!(got, syms);
+        assert!(coder.is_pristine());
+    }
+
+    #[test]
+    fn two_lane_roundtrip() {
+        roundtrip::<2>(10_000, 1);
+    }
+
+    #[test]
+    fn four_lane_roundtrip() {
+        roundtrip::<4>(9_999, 2); // non-multiple of lane count
+    }
+
+    #[test]
+    fn one_lane_matches_plain_rate() {
+        let prec = 14;
+        let d = dist(prec);
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let syms: Vec<usize> = (0..n)
+            .map(|_| {
+                let cf = rng.below(1 << prec) as u32;
+                lookup(cf, &d)
+            })
+            .collect();
+        let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+
+        let mut il = InterleavedAns::<4>::new();
+        il.encode(&ivs, prec);
+
+        let mut plain = crate::ans::Ans::new(0);
+        for iv in ivs.iter().rev() {
+            plain.push(iv.start, iv.freq, prec);
+        }
+        // Interleaving costs only the extra heads (<= 3 * 64 bits here).
+        let diff = il.bit_len() as i64 - plain.bit_len() as i64;
+        assert!(diff.abs() <= 64 * 4, "interleaved overhead too large: {diff}");
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let mut coder = InterleavedAns::<2>::new();
+        coder.encode(&[], 10);
+        let got: Vec<usize> = coder.decode(0, 10, |_| unreachable!());
+        assert!(got.is_empty());
+        assert!(coder.is_pristine());
+    }
+}

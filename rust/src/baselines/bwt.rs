@@ -1,0 +1,243 @@
+//! Burrows–Wheeler transform (with sentinel index) and move-to-front,
+//! the core of the bz2-style baseline.
+//!
+//! The forward transform sorts suffixes with a prefix-doubling sort
+//! (O(n log² n), no external suffix-array crate), treating the input as
+//! cyclic rotations via the classic double-string trick.
+
+/// Forward BWT. Returns (last column, primary index).
+///
+/// Perf (EXPERIMENTS.md §Perf #4): ranks are packed into a single `u64`
+/// key (`rank << 32 | rank_at_offset`) computed once per round into a
+/// scratch array, so each sort round compares one integer instead of
+/// chasing two indirections per comparison.
+pub fn bwt_forward(data: &[u8]) -> (Vec<u8>, usize) {
+    let n = data.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    // Sort cyclic rotations via prefix doubling over ranks.
+    let mut rank: Vec<u32> = data.iter().map(|&b| b as u32).collect();
+    let mut sa: Vec<u32> = (0..n as u32).collect();
+    let mut keys = vec![0u64; n];
+    let mut tmp = vec![0u32; n];
+    let mut k = 1usize;
+    while k < n {
+        for i in 0..n {
+            let j = if i + k >= n { i + k - n } else { i + k };
+            keys[i] = ((rank[i] as u64) << 32) | rank[j] as u64;
+        }
+        sa.sort_unstable_by_key(|&i| keys[i as usize]);
+        tmp[sa[0] as usize] = 0;
+        for w in 1..n {
+            tmp[sa[w] as usize] = tmp[sa[w - 1] as usize]
+                + (keys[sa[w] as usize] != keys[sa[w - 1] as usize]) as u32;
+        }
+        rank.copy_from_slice(&tmp);
+        if rank[sa[n - 1] as usize] == n as u32 - 1 {
+            break;
+        }
+        k *= 2;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut primary = 0usize;
+    for (w, &i) in sa.iter().enumerate() {
+        let i = i as usize;
+        if i == 0 {
+            primary = w;
+        }
+        out.push(data[(i + n - 1) % n]);
+    }
+    (out, primary)
+}
+
+/// Inverse BWT.
+pub fn bwt_inverse(last: &[u8], primary: usize) -> Vec<u8> {
+    let n = last.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert!(primary < n, "primary index out of range");
+    // Counting sort to build the LF mapping.
+    let mut counts = [0usize; 256];
+    for &b in last {
+        counts[b as usize] += 1;
+    }
+    let mut starts = [0usize; 256];
+    let mut acc = 0;
+    for b in 0..256 {
+        starts[b] = acc;
+        acc += counts[b];
+    }
+    // next[i] = position in `last` of the successor row.
+    let mut next = vec![0usize; n];
+    let mut seen = [0usize; 256];
+    for (i, &b) in last.iter().enumerate() {
+        next[starts[b as usize] + seen[b as usize]] = i;
+        seen[b as usize] += 1;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut p = next[primary];
+    for _ in 0..n {
+        out.push(last[p]);
+        p = next[p];
+    }
+    // The walk yields the string rotated so that it starts right after the
+    // original first character; starting from next[primary] gives the
+    // original order.
+    out
+}
+
+/// Move-to-front encoding.
+pub fn mtf_forward(data: &[u8]) -> Vec<u8> {
+    let mut table: Vec<u8> = (0..=255).collect();
+    data.iter()
+        .map(|&b| {
+            let pos = table.iter().position(|&t| t == b).unwrap();
+            table.remove(pos);
+            table.insert(0, b);
+            pos as u8
+        })
+        .collect()
+}
+
+/// Move-to-front decoding.
+pub fn mtf_inverse(codes: &[u8]) -> Vec<u8> {
+    let mut table: Vec<u8> = (0..=255).collect();
+    codes
+        .iter()
+        .map(|&c| {
+            let b = table[c as usize];
+            table.remove(c as usize);
+            table.insert(0, b);
+            b
+        })
+        .collect()
+}
+
+/// Zero-run-length encoding over MTF output (bzip2's RUNA/RUNB idea,
+/// simplified): runs of 0 are emitted as 0x00 followed by a varint run
+/// length; any other byte passes through (offset by nothing — 0 only
+/// appears as a run marker).
+pub fn zrle_forward(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len());
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let mut run = 0usize;
+            while i < data.len() && data[i] == 0 {
+                run += 1;
+                i += 1;
+            }
+            out.push(0);
+            // varint
+            let mut r = run;
+            loop {
+                let mut byte = (r & 0x7f) as u8;
+                r >>= 7;
+                if r > 0 {
+                    byte |= 0x80;
+                }
+                out.push(byte);
+                if r == 0 {
+                    break;
+                }
+            }
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+pub fn zrle_inverse(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            i += 1;
+            let mut run = 0usize;
+            let mut shift = 0u32;
+            loop {
+                if i >= data.len() {
+                    anyhow::bail!("truncated zero-run varint");
+                }
+                let b = data[i];
+                i += 1;
+                run |= ((b & 0x7f) as usize) << shift;
+                shift += 7;
+                if b & 0x80 == 0 {
+                    break;
+                }
+                if shift > 35 {
+                    anyhow::bail!("zero-run varint too long");
+                }
+            }
+            out.resize(out.len() + run, 0);
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_bytes;
+
+    #[test]
+    fn bwt_banana() {
+        let (last, primary) = bwt_forward(b"banana");
+        assert_eq!(bwt_inverse(&last, primary), b"banana");
+        // BWT groups like characters.
+        let (last2, _) = bwt_forward(b"mississippi");
+        let runs = last2.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(runs >= 3, "BWT should create runs: {last2:?}");
+    }
+
+    #[test]
+    fn bwt_roundtrip_property() {
+        check_bytes(41, 50, 3000, |data| {
+            let (last, p) = bwt_forward(data);
+            bwt_inverse(&last, p) == data
+        });
+    }
+
+    #[test]
+    fn bwt_handles_periodic_input() {
+        // All-equal and periodic strings are the degenerate cases for
+        // rotation sorts.
+        for data in [vec![7u8; 500], b"abab".repeat(100), vec![0u8; 1]] {
+            let (last, p) = bwt_forward(&data);
+            assert_eq!(bwt_inverse(&last, p), data);
+        }
+    }
+
+    #[test]
+    fn mtf_roundtrip_and_locality() {
+        check_bytes(42, 50, 2000, |data| mtf_inverse(&mtf_forward(data)) == data);
+        // Runs become zeros.
+        let out = mtf_forward(b"aaaabbbb");
+        assert_eq!(&out[1..4], &[0, 0, 0]);
+        assert_eq!(&out[5..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn zrle_roundtrip_property() {
+        check_bytes(43, 50, 3000, |data| {
+            zrle_inverse(&zrle_forward(data)).map(|d| d == data).unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn zrle_compresses_zero_runs() {
+        let mut data = vec![0u8; 10_000];
+        data.push(5);
+        let z = zrle_forward(&data);
+        assert!(z.len() < 10, "long zero run should be tiny: {} bytes", z.len());
+        assert_eq!(zrle_inverse(&z).unwrap(), data);
+    }
+}

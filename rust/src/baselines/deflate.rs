@@ -1,0 +1,444 @@
+//! DEFLATE (RFC 1951) from scratch: LZ77 tokens → dynamic/fixed/stored
+//! Huffman blocks. Cross-validated against `flate2` (miniz_oxide) in both
+//! directions in `rust/tests/baselines_roundtrip.rs`.
+
+use super::huffman::{code_lengths, Decoder, Encoder};
+use super::lz77::{self, Token};
+use crate::util::bitio::{LsbReader, LsbWriter};
+use anyhow::{bail, Result};
+
+/// Length code table: (code 257..=285) → (extra bits, base length).
+const LEN_TABLE: [(u32, u16); 29] = [
+    (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (0, 8), (0, 9), (0, 10),
+    (1, 11), (1, 13), (1, 15), (1, 17), (2, 19), (2, 23), (2, 27), (2, 31),
+    (3, 35), (3, 43), (3, 51), (3, 59), (4, 67), (4, 83), (4, 99), (4, 115),
+    (5, 131), (5, 163), (5, 195), (5, 227), (0, 258),
+];
+
+/// Distance code table: code → (extra bits, base distance).
+const DIST_TABLE: [(u32, u16); 30] = [
+    (0, 1), (0, 2), (0, 3), (0, 4), (1, 5), (1, 7), (2, 9), (2, 13),
+    (3, 17), (3, 25), (4, 33), (4, 49), (5, 65), (5, 97), (6, 129), (6, 193),
+    (7, 257), (7, 385), (8, 513), (8, 769), (9, 1025), (9, 1537),
+    (10, 2049), (10, 3073), (11, 4097), (11, 6145), (12, 8193), (12, 12289),
+    (13, 16385), (13, 24577),
+];
+
+/// Order in which code-length-code lengths are stored in the header.
+const CLC_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+#[inline]
+fn length_code(len: u16) -> usize {
+    debug_assert!((3..=258).contains(&len));
+    match LEN_TABLE.iter().rposition(|&(_, base)| base <= len) {
+        Some(28) if len < 258 => 27, // 258 is its own code; 227..=257 use code 27
+        Some(i) => i,
+        None => unreachable!(),
+    }
+}
+
+#[inline]
+fn dist_code(dist: u16) -> usize {
+    debug_assert!(dist >= 1);
+    DIST_TABLE.iter().rposition(|&(_, base)| base <= dist).unwrap()
+}
+
+/// Compress with dynamic-Huffman blocks (one block; inputs here are small
+/// images/datasets — block splitting is a rate refinement we skip).
+pub fn compress(data: &[u8], max_chain: usize) -> Vec<u8> {
+    let tokens = lz77::tokenize(data, max_chain);
+    let mut w = LsbWriter::new();
+    write_dynamic_block(&mut w, &tokens, true);
+    w.finish()
+}
+
+/// Decompress a DEFLATE stream.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut r = LsbReader::new(data);
+    let mut out = Vec::new();
+    loop {
+        let bfinal = r.read_bits(1).ok_or_else(|| anyhow::anyhow!("eof at block header"))?;
+        let btype = r.read_bits(2).ok_or_else(|| anyhow::anyhow!("eof at block type"))?;
+        match btype {
+            0 => read_stored_block(&mut r, &mut out)?,
+            1 => {
+                let (lit, dist) = fixed_decoders()?;
+                read_huffman_block(&mut r, &lit, &dist, &mut out)?;
+            }
+            2 => {
+                let (lit, dist) = read_dynamic_header(&mut r)?;
+                read_huffman_block(&mut r, &lit, &dist, &mut out)?;
+            }
+            _ => bail!("reserved block type"),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------- encoding
+
+fn write_dynamic_block(w: &mut LsbWriter, tokens: &[Token], bfinal: bool) {
+    // Symbol statistics.
+    let mut lit_freq = [0u64; 286];
+    let mut dist_freq = [0u64; 30];
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit_freq[b as usize] += 1,
+            Token::Match { len, dist } => {
+                lit_freq[257 + length_code(len)] += 1;
+                dist_freq[dist_code(dist)] += 1;
+            }
+        }
+    }
+    lit_freq[256] += 1; // end of block
+
+    let lit_lens = code_lengths(&lit_freq, 15);
+    let mut dist_lens = code_lengths(&dist_freq, 15);
+    // DEFLATE requires at least one distance code length to be present.
+    if dist_lens.iter().all(|&l| l == 0) {
+        dist_lens[0] = 1;
+    }
+
+    w.write_bits(bfinal as u64, 1);
+    w.write_bits(2, 2); // dynamic
+
+    // HLIT/HDIST.
+    let hlit = 286usize; // keep all (simplest header; costs a few bytes)
+    let hdist = 30usize;
+    w.write_bits((hlit - 257) as u64, 5);
+    w.write_bits((hdist - 1) as u64, 5);
+
+    // Code-length-code over the concatenated length arrays with RLE.
+    let all_lens: Vec<u32> = lit_lens
+        .iter()
+        .take(hlit)
+        .chain(dist_lens.iter().take(hdist))
+        .copied()
+        .collect();
+    let clc_syms = rle_code_lengths(&all_lens);
+    let mut clc_freq = [0u64; 19];
+    for &(sym, _) in &clc_syms {
+        clc_freq[sym] += 1;
+    }
+    let clc_lens = code_lengths(&clc_freq, 7);
+
+    let hclen_full: Vec<u32> = CLC_ORDER.iter().map(|&i| clc_lens[i]).collect();
+    let hclen = hclen_full
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(4)
+        .max(4);
+    w.write_bits((hclen - 4) as u64, 4);
+    for &l in hclen_full.iter().take(hclen) {
+        w.write_bits(l as u64, 3);
+    }
+    let clc_enc = Encoder::from_lengths(&clc_lens);
+    for &(sym, extra) in &clc_syms {
+        clc_enc.write(w, sym);
+        match sym {
+            16 => w.write_bits(extra as u64, 2),
+            17 => w.write_bits(extra as u64, 3),
+            18 => w.write_bits(extra as u64, 7),
+            _ => {}
+        }
+    }
+
+    // Token stream.
+    let lit_enc = Encoder::from_lengths(&lit_lens);
+    let dist_enc = Encoder::from_lengths(&dist_lens);
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit_enc.write(w, b as usize),
+            Token::Match { len, dist } => {
+                let lc = length_code(len);
+                lit_enc.write(w, 257 + lc);
+                let (eb, base) = LEN_TABLE[lc];
+                if eb > 0 {
+                    w.write_bits((len - base) as u64, eb);
+                }
+                let dc = dist_code(dist);
+                dist_enc.write(w, dc);
+                let (eb, base) = DIST_TABLE[dc];
+                if eb > 0 {
+                    w.write_bits((dist - base) as u64, eb);
+                }
+            }
+        }
+    }
+    lit_enc.write(w, 256); // end of block
+}
+
+/// RLE for the code-length sequence (symbols 0..15 literal, 16 repeat
+/// previous 3-6, 17 zero-run 3-10, 18 zero-run 11-138).
+fn rle_code_lengths(lens: &[u32]) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lens.len() {
+        let v = lens[i];
+        let mut run = 1;
+        while i + run < lens.len() && lens[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut left = run;
+            while left >= 3 {
+                let take = left.min(138);
+                if take >= 11 {
+                    out.push((18, (take - 11) as u32));
+                } else {
+                    out.push((17, (take - 3) as u32));
+                }
+                left -= take;
+            }
+            for _ in 0..left {
+                out.push((0, 0));
+            }
+        } else {
+            out.push((v as usize, 0));
+            let mut left = run - 1;
+            while left >= 3 {
+                let take = left.min(6);
+                out.push((16, (take - 3) as u32));
+                left -= take;
+            }
+            for _ in 0..left {
+                out.push((v as usize, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+// ------------------------------------------------------------- decoding
+
+fn read_stored_block(r: &mut LsbReader, out: &mut Vec<u8>) -> Result<()> {
+    // Align to byte; LEN + NLEN follow.
+    let (data, mut pos) = {
+        let (d, p) = r.align_and_rest();
+        (d, p)
+    };
+    if pos + 4 > data.len() {
+        bail!("stored block header truncated");
+    }
+    let len = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+    let nlen = u16::from_le_bytes([data[pos + 2], data[pos + 3]]);
+    if nlen != !(len as u16) {
+        bail!("stored block LEN/NLEN mismatch");
+    }
+    pos += 4;
+    if pos + len > data.len() {
+        bail!("stored block body truncated");
+    }
+    out.extend_from_slice(&data[pos..pos + len]);
+    r.seek_to_byte(pos + len);
+    Ok(())
+}
+
+fn fixed_decoders() -> Result<(Decoder, Decoder)> {
+    let mut lit_lens = vec![0u32; 288];
+    for (i, l) in lit_lens.iter_mut().enumerate() {
+        *l = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    let dist_lens = vec![5u32; 30];
+    Ok((
+        Decoder::from_lengths(&lit_lens)?,
+        Decoder::from_lengths(&dist_lens)?,
+    ))
+}
+
+fn read_dynamic_header(r: &mut LsbReader) -> Result<(Decoder, Decoder)> {
+    let hlit = r.read_bits(5).ok_or_else(|| anyhow::anyhow!("eof"))? as usize + 257;
+    let hdist = r.read_bits(5).ok_or_else(|| anyhow::anyhow!("eof"))? as usize + 1;
+    let hclen = r.read_bits(4).ok_or_else(|| anyhow::anyhow!("eof"))? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        bail!("bad HLIT/HDIST");
+    }
+    let mut clc_lens = vec![0u32; 19];
+    for k in 0..hclen {
+        clc_lens[CLC_ORDER[k]] =
+            r.read_bits(3).ok_or_else(|| anyhow::anyhow!("eof"))? as u32;
+    }
+    let clc = Decoder::from_lengths(&clc_lens)?;
+    let mut lens = Vec::with_capacity(hlit + hdist);
+    while lens.len() < hlit + hdist {
+        let sym = clc.read(r)?;
+        match sym {
+            0..=15 => lens.push(sym as u32),
+            16 => {
+                let prev = *lens.last().ok_or_else(|| anyhow::anyhow!("repeat at start"))?;
+                let n = 3 + r.read_bits(2).ok_or_else(|| anyhow::anyhow!("eof"))? as usize;
+                for _ in 0..n {
+                    lens.push(prev);
+                }
+            }
+            17 => {
+                let n = 3 + r.read_bits(3).ok_or_else(|| anyhow::anyhow!("eof"))? as usize;
+                lens.resize(lens.len() + n, 0);
+            }
+            18 => {
+                let n = 11 + r.read_bits(7).ok_or_else(|| anyhow::anyhow!("eof"))? as usize;
+                lens.resize(lens.len() + n, 0);
+            }
+            _ => bail!("bad code-length symbol {sym}"),
+        }
+    }
+    if lens.len() != hlit + hdist {
+        bail!("code-length overrun");
+    }
+    let lit = Decoder::from_lengths(&lens[..hlit])?;
+    // All-zero distance lengths are legal (no matches); give the decoder a
+    // dummy 1-bit code so construction succeeds — it will never be read.
+    let dist = if lens[hlit..].iter().all(|&l| l == 0) {
+        Decoder::from_lengths(&[1, 1])?
+    } else {
+        Decoder::from_lengths(&lens[hlit..])?
+    };
+    Ok((lit, dist))
+}
+
+fn read_huffman_block(
+    r: &mut LsbReader,
+    lit: &Decoder,
+    dist: &Decoder,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    loop {
+        let sym = lit.read(r)? as usize;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let (eb, base) = LEN_TABLE[sym - 257];
+                let len = base as usize
+                    + r.read_bits(eb).ok_or_else(|| anyhow::anyhow!("eof in len"))? as usize;
+                let dsym = dist.read(r)? as usize;
+                if dsym >= 30 {
+                    bail!("bad distance symbol");
+                }
+                let (deb, dbase) = DIST_TABLE[dsym];
+                let d = dbase as usize
+                    + r.read_bits(deb).ok_or_else(|| anyhow::anyhow!("eof in dist"))? as usize;
+                if d > out.len() {
+                    bail!("distance {d} beyond output ({} bytes)", out.len());
+                }
+                let start = out.len() - d;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            _ => bail!("bad literal/length symbol {sym}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_bytes;
+
+    #[test]
+    fn roundtrip_property() {
+        check_bytes(21, 60, 5000, |data| {
+            decompress(&compress(data, 64)).map(|d| d == data).unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = compress(&[], 16);
+        assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn length_and_dist_code_tables() {
+        assert_eq!(length_code(3), 0);
+        assert_eq!(length_code(10), 7);
+        assert_eq!(length_code(11), 8);
+        assert_eq!(length_code(12), 8);
+        assert_eq!(length_code(257), 27);
+        assert_eq!(length_code(258), 28);
+        assert_eq!(dist_code(1), 0);
+        assert_eq!(dist_code(4), 3);
+        assert_eq!(dist_code(5), 4);
+        assert_eq!(dist_code(24577), 29);
+        assert_eq!(dist_code(32768), 29);
+    }
+
+    #[test]
+    fn compresses_repetitive_data_well() {
+        let data: Vec<u8> = b"abcabcabc".iter().cycle().take(10_000).copied().collect();
+        let c = compress(&data, 64);
+        assert!(c.len() < 200, "repetitive data should crush: {} bytes", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn decodes_fixed_block_stream() {
+        // Hand-built fixed-Huffman block containing "Hi".
+        let mut w = LsbWriter::new();
+        w.write_bits(1, 1); // bfinal
+        w.write_bits(1, 2); // fixed
+        let mut lens = vec![0u32; 288];
+        for (i, l) in lens.iter_mut().enumerate() {
+            *l = match i {
+                0..=143 => 8,
+                144..=255 => 9,
+                256..=279 => 7,
+                _ => 8,
+            };
+        }
+        let enc = Encoder::from_lengths(&lens);
+        enc.write(&mut w, b'H' as usize);
+        enc.write(&mut w, b'i' as usize);
+        enc.write(&mut w, 256);
+        let bytes = w.finish();
+        assert_eq!(decompress(&bytes).unwrap(), b"Hi");
+    }
+
+    #[test]
+    fn rejects_corrupt_streams() {
+        let data = b"hello world hello world".to_vec();
+        let mut c = compress(&data, 16);
+        // Truncation.
+        assert!(decompress(&c[..c.len() / 2]).is_err());
+        // Bit flip in header region.
+        c[0] ^= 0x02;
+        let r = decompress(&c);
+        if let Ok(d) = r {
+            assert_ne!(d, data);
+        }
+    }
+
+    #[test]
+    fn rle_code_lengths_runs() {
+        let lens = vec![0u32; 20];
+        let syms = rle_code_lengths(&lens);
+        assert_eq!(syms, vec![(18, 9)]); // 20 zeros = code 18 with extra 9
+        let lens = vec![5, 5, 5, 5, 5, 5, 5, 5];
+        let syms = rle_code_lengths(&lens);
+        assert_eq!(syms[0], (5, 0)); // literal then repeats
+        let total: usize = syms
+            .iter()
+            .map(|&(s, e)| match s {
+                16 => 3 + e as usize,
+                17 => 3 + e as usize,
+                18 => 11 + e as usize,
+                _ => 1,
+            })
+            .sum();
+        assert_eq!(total, 8);
+    }
+}

@@ -1,0 +1,50 @@
+//! Reference codecs from the vendored `flate2` and `bzip2` crates.
+//!
+//! These exist purely to *cross-validate* our from-scratch baselines:
+//! format interop for gzip (tested in `gzip.rs` and the integration
+//! suite) and rate sanity for the bz-style codec (our container differs
+//! from bzip2's, so only rates are compared).
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+pub fn flate2_gzip(data: &[u8]) -> Vec<u8> {
+    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::new(6));
+    enc.write_all(data).unwrap();
+    enc.finish().unwrap()
+}
+
+pub fn flate2_gunzip(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    flate2::read::GzDecoder::new(data)
+        .read_to_end(&mut out)
+        .context("flate2 gunzip")?;
+    Ok(out)
+}
+
+pub fn bzip2_compress(data: &[u8]) -> Vec<u8> {
+    let mut enc = bzip2::write::BzEncoder::new(Vec::new(), bzip2::Compression::default());
+    enc.write_all(data).unwrap();
+    enc.finish().unwrap()
+}
+
+pub fn bzip2_decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    bzip2::read::BzDecoder::new(data)
+        .read_to_end(&mut out)
+        .context("bzip2 decompress")?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_roundtrips() {
+        let data = b"reference codec sanity".repeat(100);
+        assert_eq!(flate2_gunzip(&flate2_gzip(&data)).unwrap(), data);
+        assert_eq!(bzip2_decompress(&bzip2_compress(&data)).unwrap(), data);
+    }
+}

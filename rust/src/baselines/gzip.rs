@@ -1,0 +1,178 @@
+//! gzip (RFC 1952) and zlib (RFC 1950) containers around our DEFLATE.
+
+use super::deflate;
+use anyhow::{bail, Context, Result};
+
+/// Adler-32 (zlib checksum).
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(5552) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// gzip-compress `data`.
+pub fn gzip_compress(data: &[u8], max_chain: usize) -> Vec<u8> {
+    let mut out = vec![
+        0x1f, 0x8b, // magic
+        0x08, // deflate
+        0x00, // no flags
+        0, 0, 0, 0, // mtime
+        0x00, // XFL
+        0xff, // OS unknown
+    ];
+    out.extend_from_slice(&deflate::compress(data, max_chain));
+    out.extend_from_slice(&crc32fast::hash(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+/// Decompress a gzip stream (checks CRC and size).
+pub fn gzip_decompress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 18 {
+        bail!("gzip too short");
+    }
+    if data[0] != 0x1f || data[1] != 0x8b {
+        bail!("bad gzip magic");
+    }
+    if data[2] != 0x08 {
+        bail!("unsupported compression method {}", data[2]);
+    }
+    let flg = data[3];
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        let xlen = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    if flg & 0x08 != 0 {
+        // FNAME
+        pos += data[pos..]
+            .iter()
+            .position(|&b| b == 0)
+            .context("unterminated FNAME")?
+            + 1;
+    }
+    if flg & 0x10 != 0 {
+        // FCOMMENT
+        pos += data[pos..]
+            .iter()
+            .position(|&b| b == 0)
+            .context("unterminated FCOMMENT")?
+            + 1;
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if pos + 8 > data.len() {
+        bail!("gzip truncated");
+    }
+    let body = &data[pos..data.len() - 8];
+    let out = deflate::decompress(body)?;
+    let crc = u32::from_le_bytes(data[data.len() - 8..data.len() - 4].try_into().unwrap());
+    let isize_ = u32::from_le_bytes(data[data.len() - 4..].try_into().unwrap());
+    if crc32fast::hash(&out) != crc {
+        bail!("gzip CRC mismatch");
+    }
+    if out.len() as u32 != isize_ {
+        bail!("gzip ISIZE mismatch");
+    }
+    Ok(out)
+}
+
+/// zlib-wrap our DEFLATE (PNG uses this).
+pub fn zlib_compress(data: &[u8], max_chain: usize) -> Vec<u8> {
+    let mut out = vec![0x78, 0x9c]; // CM=8 CINFO=7, check bits, no dict
+    out.extend_from_slice(&deflate::compress(data, max_chain));
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}
+
+pub fn zlib_decompress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 6 {
+        bail!("zlib too short");
+    }
+    let cmf = data[0];
+    let flg = data[1];
+    if cmf & 0x0f != 8 {
+        bail!("unsupported zlib method");
+    }
+    if ((cmf as u16) << 8 | flg as u16) % 31 != 0 {
+        bail!("zlib header check failed");
+    }
+    if flg & 0x20 != 0 {
+        bail!("preset dictionary unsupported");
+    }
+    let body = &data[2..data.len() - 4];
+    let out = deflate::decompress(body)?;
+    let want = u32::from_be_bytes(data[data.len() - 4..].try_into().unwrap());
+    if adler32(&out) != want {
+        bail!("adler32 mismatch");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_bytes;
+
+    #[test]
+    fn adler32_reference_values() {
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"Wikipedia"), 0x11E60398);
+    }
+
+    #[test]
+    fn gzip_roundtrip_property() {
+        check_bytes(31, 40, 4000, |data| {
+            gzip_decompress(&gzip_compress(data, 64))
+                .map(|d| d == data)
+                .unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn zlib_roundtrip_property() {
+        check_bytes(32, 40, 4000, |data| {
+            zlib_decompress(&zlib_compress(data, 64))
+                .map(|d| d == data)
+                .unwrap_or(false)
+        });
+    }
+
+    #[test]
+    fn gzip_detects_corruption() {
+        let data = b"some data that we compress".repeat(10);
+        let mut c = gzip_compress(&data, 64);
+        let n = c.len();
+        c[n - 6] ^= 0xff; // corrupt CRC
+        assert!(gzip_decompress(&c).is_err());
+    }
+
+    #[test]
+    fn interop_with_flate2() {
+        // Our gzip must be readable by flate2, and vice versa.
+        let data: Vec<u8> = (0..5000u32).map(|i| (i * 7 % 251) as u8).collect();
+
+        // ours -> flate2
+        let ours = gzip_compress(&data, 64);
+        let mut dec = flate2::read::GzDecoder::new(&ours[..]);
+        let mut out = Vec::new();
+        std::io::Read::read_to_end(&mut dec, &mut out).expect("flate2 reads our gzip");
+        assert_eq!(out, data);
+
+        // flate2 -> ours
+        let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::default());
+        std::io::Write::write_all(&mut enc, &data).unwrap();
+        let theirs = enc.finish().unwrap();
+        assert_eq!(gzip_decompress(&theirs).unwrap(), data);
+    }
+}

@@ -1,0 +1,424 @@
+//! Canonical, length-limited Huffman coding (shared by the DEFLATE,
+//! bz-style and WebP-style baselines).
+//!
+//! * Code lengths are computed with the **package-merge** algorithm, which
+//!   is optimal under a maximum-length constraint (DEFLATE needs ≤ 15, the
+//!   code-length code ≤ 7).
+//! * Codes are assigned canonically (ordered by (length, symbol)), the
+//!   convention DEFLATE requires, so the decoder can be reconstructed from
+//!   lengths alone.
+
+use crate::util::bitio::{LsbReader, LsbWriter};
+use anyhow::{bail, Result};
+
+/// Compute optimal length-limited code lengths via package-merge.
+///
+/// `freqs[i] == 0` ⇒ symbol `i` gets no code (length 0). If only one
+/// symbol has nonzero frequency it gets length 1 (DEFLATE requires ≥ 1
+/// bit per coded symbol).
+pub fn code_lengths(freqs: &[u64], max_len: u32) -> Vec<u32> {
+    let n = freqs.len();
+    let active: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lens = vec![0u32; n];
+    match active.len() {
+        0 => return lens,
+        1 => {
+            lens[active[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    assert!(
+        (1u64 << max_len) >= active.len() as u64,
+        "max_len {max_len} too small for {} symbols",
+        active.len()
+    );
+
+    // Package-merge: coins of denominations 2^-1 .. 2^-max_len.
+    // Item = (weight, set of symbols it contains — tracked via counts).
+    #[derive(Clone)]
+    struct Item {
+        w: u64,
+        syms: Vec<usize>, // indices into `active`
+    }
+    let mut packages: Vec<Item> = Vec::new();
+    for _level in 0..max_len {
+        // New coins at this level: one per active symbol.
+        let mut items: Vec<Item> = active
+            .iter()
+            .enumerate()
+            .map(|(ai, &s)| Item {
+                w: freqs[s],
+                syms: vec![ai],
+            })
+            .collect();
+        // Plus packages carried from the previous (deeper) level.
+        items.extend(packages.drain(..));
+        items.sort_by_key(|it| it.w);
+        // Pair adjacent items into packages for the next level.
+        packages = items
+            .chunks(2)
+            .filter(|c| c.len() == 2)
+            .map(|c| {
+                let mut syms = c[0].syms.clone();
+                syms.extend_from_slice(&c[1].syms);
+                Item {
+                    w: c[0].w + c[1].w,
+                    syms,
+                }
+            })
+            .collect();
+    }
+    // Take the 2(m-1) cheapest items at the top level; each occurrence of
+    // a symbol adds one to its code length.
+    let mut counts = vec![0u32; active.len()];
+    for item in packages.iter().take(active.len() - 1) {
+        for &ai in &item.syms {
+            counts[ai] += 1;
+        }
+    }
+    for (ai, &s) in active.iter().enumerate() {
+        lens[s] = counts[ai];
+    }
+    debug_assert!(kraft_ok(&lens), "package-merge produced invalid lengths");
+    lens
+}
+
+/// Kraft inequality check: sum 2^-len <= 1 (== 1 for a complete code).
+pub fn kraft_ok(lens: &[u32]) -> bool {
+    let mut sum = 0u64;
+    let scale = 32;
+    for &l in lens {
+        if l > 0 {
+            sum += 1u64 << (scale - l);
+        }
+    }
+    sum <= 1u64 << scale
+}
+
+/// Canonical code assignment from lengths: `codes[i]` is the code for
+/// symbol `i`, MSB-first in the low `lens[i]` bits.
+pub fn canonical_codes(lens: &[u32]) -> Vec<u32> {
+    let max_len = lens.iter().copied().max().unwrap_or(0);
+    let mut bl_count = vec![0u32; max_len as usize + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u32; max_len as usize + 2];
+    let mut code = 0u32;
+    for bits in 1..=max_len as usize {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    lens.iter()
+        .map(|&l| {
+            if l == 0 {
+                0
+            } else {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                c
+            }
+        })
+        .collect()
+}
+
+/// Reverse the low `n` bits of `v` (DEFLATE writes Huffman codes MSB-first
+/// into an LSB-first bitstream).
+#[inline]
+pub fn reverse_bits(v: u32, n: u32) -> u32 {
+    if n == 0 {
+        return 0;
+    }
+    v.reverse_bits() >> (32 - n)
+}
+
+/// Encoder: symbol → (bit-reversed code, length), ready for an LsbWriter.
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    entries: Vec<(u32, u32)>, // (reversed code, len)
+}
+
+impl Encoder {
+    pub fn from_lengths(lens: &[u32]) -> Self {
+        let codes = canonical_codes(lens);
+        Self {
+            entries: codes
+                .iter()
+                .zip(lens.iter())
+                .map(|(&c, &l)| (reverse_bits(c, l), l))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn write(&self, w: &mut LsbWriter, sym: usize) {
+        let (code, len) = self.entries[sym];
+        debug_assert!(len > 0, "writing symbol {sym} with no code");
+        w.write_bits(code as u64, len);
+    }
+
+    pub fn len_of(&self, sym: usize) -> u32 {
+        self.entries[sym].1
+    }
+}
+
+/// Table-driven canonical decoder (single-level lookup table).
+#[derive(Debug, Clone)]
+pub struct Decoder {
+    /// Lookup on the next `root_bits` (LSB-first) bits → (symbol, len).
+    /// For codes longer than `root_bits` (rare) we fall back to a linear
+    /// canonical walk.
+    table: Vec<(u16, u8)>,
+    root_bits: u32,
+    max_len: u32,
+    /// (first_code, first_index, count) per length for the slow path.
+    by_len: Vec<(u32, u32, u32)>,
+    /// Symbols ordered canonically ((len, sym)).
+    order: Vec<u16>,
+}
+
+pub const INVALID_SYM: u16 = u16::MAX;
+
+impl Decoder {
+    pub fn from_lengths(lens: &[u32]) -> Result<Self> {
+        if lens.len() > u16::MAX as usize {
+            bail!("alphabet too large");
+        }
+        if !kraft_ok(lens) {
+            bail!("over-subscribed code lengths");
+        }
+        let max_len = lens.iter().copied().max().unwrap_or(0);
+        if max_len == 0 {
+            bail!("empty Huffman code");
+        }
+        let root_bits = max_len.min(10);
+        let codes = canonical_codes(lens);
+
+        let mut table = vec![(INVALID_SYM, 0u8); 1usize << root_bits];
+        for (sym, (&code, &len)) in codes.iter().zip(lens.iter()).enumerate() {
+            if len == 0 || len > root_bits {
+                continue;
+            }
+            // The decoder peeks LSB-first, so index by reversed code with
+            // all possible suffixes.
+            let rev = reverse_bits(code, len);
+            let step = 1usize << len;
+            let mut idx = rev as usize;
+            while idx < table.len() {
+                table[idx] = (sym as u16, len as u8);
+                idx += step;
+            }
+        }
+
+        // Slow path metadata.
+        let mut order: Vec<u16> = (0..lens.len() as u16)
+            .filter(|&s| lens[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (lens[s as usize], s));
+        let mut by_len = Vec::with_capacity(max_len as usize + 1);
+        let mut idx = 0u32;
+        for l in 1..=max_len {
+            let count = order
+                .iter()
+                .filter(|&&s| lens[s as usize] == l)
+                .count() as u32;
+            let first_code = if count > 0 {
+                codes[order[idx as usize] as usize]
+            } else {
+                0
+            };
+            by_len.push((first_code, idx, count));
+            idx += count;
+        }
+        Ok(Self {
+            table,
+            root_bits,
+            max_len,
+            by_len,
+            order,
+        })
+    }
+
+    /// Decode one symbol from an LSB-first reader.
+    #[inline]
+    pub fn read(&self, r: &mut LsbReader) -> Result<u16> {
+        let peek = r.peek_bits(self.root_bits) as usize;
+        let (sym, len) = self.table[peek];
+        if sym != INVALID_SYM {
+            if (r.bits_remaining() as u32) < len as u32 {
+                bail!("truncated Huffman stream");
+            }
+            r.consume(len as u32);
+            return Ok(sym);
+        }
+        // Slow path: canonical walk, MSB-first code reconstruction.
+        let mut code = 0u32;
+        for l in 1..=self.max_len {
+            let bit = r
+                .read_bits(1)
+                .ok_or_else(|| anyhow::anyhow!("truncated Huffman stream"))?;
+            code = (code << 1) | bit as u32;
+            let (first_code, first_idx, count) = self.by_len[l as usize - 1];
+            if count > 0 && code >= first_code && code < first_code + count {
+                let sym = self.order[(first_idx + (code - first_code)) as usize];
+                return Ok(sym);
+            }
+        }
+        bail!("invalid Huffman code")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lengths_satisfy_kraft_and_limit() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let n = 2 + rng.below(285) as usize;
+            let freqs: Vec<u64> = (0..n)
+                .map(|_| if rng.f64() < 0.2 { 0 } else { rng.below(10_000) + 1 })
+                .collect();
+            if freqs.iter().filter(|&&f| f > 0).count() == 0 {
+                continue;
+            }
+            for max_len in [9u32, 15] {
+                if (1u64 << max_len) < n as u64 {
+                    continue;
+                }
+                let lens = code_lengths(&freqs, max_len);
+                assert!(kraft_ok(&lens));
+                assert!(lens.iter().all(|&l| l <= max_len));
+                for (f, l) in freqs.iter().zip(lens.iter()) {
+                    assert_eq!(*f > 0, *l > 0, "coded iff nonzero freq");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn package_merge_is_near_optimal() {
+        // Compare total cost against entropy: must be within 1 bit/symbol.
+        let freqs: Vec<u64> = vec![1000, 500, 250, 125, 60, 30, 15, 8, 4, 2, 1, 1];
+        let lens = code_lengths(&freqs, 15);
+        let total: u64 = freqs.iter().sum();
+        let cost: f64 = freqs
+            .iter()
+            .zip(lens.iter())
+            .map(|(&f, &l)| f as f64 * l as f64)
+            .sum::<f64>()
+            / total as f64;
+        let entropy: f64 = freqs
+            .iter()
+            .map(|&f| {
+                let p = f as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(cost < entropy + 0.1, "cost {cost} vs entropy {entropy}");
+    }
+
+    #[test]
+    fn length_limit_binds() {
+        // Exponential frequencies force long unlimited codes; the limit
+        // must cap them at the cost of slight suboptimality.
+        let freqs: Vec<u64> = (0..20).map(|i| 1u64 << i).collect();
+        let lens = code_lengths(&freqs, 8);
+        assert!(lens.iter().all(|&l| l > 0 && l <= 8));
+        assert!(kraft_ok(&lens));
+    }
+
+    #[test]
+    fn canonical_codes_are_prefix_free() {
+        let freqs: Vec<u64> = vec![5, 9, 12, 13, 16, 45, 1, 2];
+        let lens = code_lengths(&freqs, 15);
+        let codes = canonical_codes(&lens);
+        for i in 0..freqs.len() {
+            for j in 0..freqs.len() {
+                if i == j || lens[i] == 0 || lens[j] == 0 {
+                    continue;
+                }
+                let (li, lj) = (lens[i], lens[j]);
+                if li <= lj {
+                    let prefix = codes[j] >> (lj - li);
+                    assert!(
+                        prefix != codes[i],
+                        "code {i} is a prefix of code {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(3);
+        for trial in 0..20 {
+            let n = 2 + rng.below(300) as usize;
+            let freqs: Vec<u64> = (0..n).map(|_| rng.below(1000) + 1).collect();
+            let lens = code_lengths(&freqs, 15);
+            let enc = Encoder::from_lengths(&lens);
+            let dec = Decoder::from_lengths(&lens).unwrap();
+            let syms: Vec<usize> = (0..2000).map(|_| rng.below(n as u64) as usize).collect();
+            let mut w = LsbWriter::new();
+            for &s in &syms {
+                enc.write(&mut w, s);
+            }
+            let bytes = w.finish();
+            let mut r = LsbReader::new(&bytes);
+            for &s in &syms {
+                assert_eq!(dec.read(&mut r).unwrap() as usize, s, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn long_codes_use_slow_path() {
+        // Exponentially-growing frequencies force the rare symbols to the
+        // 15-bit limit, past the 10-bit root table -> fallback walk.
+        let freqs: Vec<u64> = (0..20).map(|i| 1u64 << i).collect();
+        let lens = code_lengths(&freqs, 15);
+        assert!(lens.iter().any(|&l| l > 10), "want some codes > root_bits: {lens:?}");
+        let enc = Encoder::from_lengths(&lens);
+        let dec = Decoder::from_lengths(&lens).unwrap();
+        let syms: Vec<usize> = (0..20).collect();
+        let mut w = LsbWriter::new();
+        for &s in &syms {
+            enc.write(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = LsbReader::new(&bytes);
+        for &s in &syms {
+            assert_eq!(dec.read(&mut r).unwrap() as usize, s);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_bad_lengths() {
+        // Over-subscribed: three codes of length 1.
+        assert!(Decoder::from_lengths(&[1, 1, 1]).is_err());
+        assert!(Decoder::from_lengths(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn single_symbol_code() {
+        let lens = code_lengths(&[0, 7, 0], 15);
+        assert_eq!(lens, vec![0, 1, 0]);
+        let enc = Encoder::from_lengths(&lens);
+        let dec = Decoder::from_lengths(&lens).unwrap();
+        let mut w = LsbWriter::new();
+        for _ in 0..5 {
+            enc.write(&mut w, 1);
+        }
+        let bytes = w.finish();
+        let mut r = LsbReader::new(&bytes);
+        for _ in 0..5 {
+            assert_eq!(dec.read(&mut r).unwrap(), 1);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! LZ77 match finding with hash chains (DEFLATE-compatible parameters:
+//! 32 KiB window, match lengths 3–258), with one-step lazy matching like
+//! zlib's default strategy. Shared by the DEFLATE and WebP-style codecs.
+
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+pub const WINDOW: usize = 32 * 1024;
+
+/// One LZ77 token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    /// (length 3..=258, distance 1..=32768)
+    Match { len: u16, dist: u16 },
+}
+
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Tokenize `data` with hash-chain matching.
+///
+/// `max_chain` trades compression for speed (zlib level ~6 ≈ 128).
+pub fn tokenize(data: &[u8], max_chain: usize) -> Vec<Token> {
+    let n = data.len();
+    let mut tokens = Vec::with_capacity(n / 2 + 8);
+    if n < MIN_MATCH {
+        tokens.extend(data.iter().map(|&b| Token::Literal(b)));
+        return tokens;
+    }
+    let mut head = vec![usize::MAX; HASH_SIZE];
+    let mut prev = vec![usize::MAX; n];
+
+    let insert = |head: &mut [usize], prev: &mut [usize], i: usize, data: &[u8]| {
+        if i + MIN_MATCH <= n {
+            let h = hash3(data, i);
+            prev[i] = head[h];
+            head[h] = i;
+        }
+    };
+
+    let best_match = |head: &[usize], prev: &[usize], i: usize| -> Option<(usize, usize)> {
+        if i + MIN_MATCH > n {
+            return None;
+        }
+        let h = hash3(data, i);
+        let mut cand = head[h];
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let max_len = MAX_MATCH.min(n - i);
+        let mut chain = 0;
+        while cand != usize::MAX && chain < max_chain {
+            let dist = i - cand;
+            if dist > WINDOW {
+                break;
+            }
+            // Quick reject: check the byte that would extend the best.
+            if i + best_len < n && data[cand + best_len] == data[i + best_len] {
+                let mut l = 0;
+                while l < max_len && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = dist;
+                    if l >= max_len {
+                        break;
+                    }
+                }
+            }
+            cand = prev[cand];
+            chain += 1;
+        }
+        if best_len >= MIN_MATCH {
+            Some((best_len, best_dist))
+        } else {
+            None
+        }
+    };
+
+    let mut i = 0usize;
+    let mut pending: Option<(usize, usize)> = None; // lazy: match found at i-1
+    while i < n {
+        let cur = best_match(&head, &prev, i);
+        match (pending.take(), cur) {
+            (Some((plen, _pdist)), Some((clen, _))) if clen > plen => {
+                // Current match is better: emit literal for i-1, keep
+                // evaluating from the current position.
+                tokens.push(Token::Literal(data[i - 1]));
+                pending = cur;
+                insert(&mut head, &mut prev, i, data);
+                i += 1;
+            }
+            (Some((plen, pdist)), _) => {
+                // Take the pending match (started at i-1).
+                tokens.push(Token::Match {
+                    len: plen as u16,
+                    dist: pdist as u16,
+                });
+                // Insert hash entries across the matched span (i-1+1 .. i-1+plen).
+                let end = i - 1 + plen;
+                while i < end {
+                    insert(&mut head, &mut prev, i, data);
+                    i += 1;
+                }
+            }
+            (None, Some((clen, cdist))) => {
+                if clen >= 32 || i + 1 >= n {
+                    // Long enough: take greedily.
+                    tokens.push(Token::Match {
+                        len: clen as u16,
+                        dist: cdist as u16,
+                    });
+                    let end = i + clen;
+                    insert(&mut head, &mut prev, i, data);
+                    i += 1;
+                    while i < end {
+                        insert(&mut head, &mut prev, i, data);
+                        i += 1;
+                    }
+                } else {
+                    // Defer: maybe i+1 has a better match (lazy).
+                    pending = Some((clen, cdist));
+                    insert(&mut head, &mut prev, i, data);
+                    i += 1;
+                }
+            }
+            (None, None) => {
+                tokens.push(Token::Literal(data[i]));
+                insert(&mut head, &mut prev, i, data);
+                i += 1;
+            }
+        }
+    }
+    if let Some((plen, pdist)) = pending {
+        tokens.push(Token::Match {
+            len: plen as u16,
+            dist: pdist as u16,
+        });
+    }
+    tokens
+}
+
+/// Expand tokens back to bytes (the decoder's copy loop).
+pub fn expand(tokens: &[Token]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let start = out.len() - dist as usize;
+                for k in 0..len as usize {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_bytes, gen_bytes};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tokenize_expand_roundtrip_families() {
+        check_bytes(11, 60, 4000, |data| expand(&tokenize(data, 64)) == data);
+    }
+
+    #[test]
+    fn finds_overlapping_matches() {
+        // "aaaa..." compresses to literal + overlapping match (dist 1).
+        let data = vec![b'a'; 300];
+        let tokens = tokenize(&data, 16);
+        assert!(tokens.len() <= 4, "run should be a couple of tokens: {tokens:?}");
+        assert_eq!(expand(&tokens), data);
+        assert!(tokens.iter().any(|t| matches!(t, Token::Match { dist: 1, .. })));
+    }
+
+    #[test]
+    fn repeated_phrase_found_at_distance() {
+        let mut data = b"the quick brown fox. ".to_vec();
+        let phrase = data.clone();
+        for _ in 0..10 {
+            data.extend_from_slice(&phrase);
+        }
+        let tokens = tokenize(&data, 64);
+        assert!(
+            tokens.iter().any(|t| matches!(t, Token::Match { len, .. } if *len as usize >= 20)),
+            "should find the repeated phrase: {tokens:?}"
+        );
+        assert_eq!(expand(&tokens), data);
+    }
+
+    #[test]
+    fn respects_window_limit() {
+        let mut rng = Rng::new(5);
+        // Two identical blocks separated by > 32k of noise.
+        let block: Vec<u8> = (0..100).map(|_| rng.next_u32() as u8).collect();
+        let mut data = block.clone();
+        data.extend((0..WINDOW + 100).map(|_| rng.next_u32() as u8));
+        data.extend_from_slice(&block);
+        let tokens = tokenize(&data, 1024);
+        assert_eq!(expand(&tokens), data);
+        for t in &tokens {
+            if let Token::Match { dist, .. } = t {
+                assert!((*dist as usize) <= WINDOW);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_never_exceed_bounds() {
+        let mut rng = Rng::new(6);
+        for case in 0..30 {
+            let data = gen_bytes(&mut rng, 2000, case);
+            let tokens = tokenize(&data, 32);
+            let mut pos = 0usize;
+            for t in &tokens {
+                match *t {
+                    Token::Literal(_) => pos += 1,
+                    Token::Match { len, dist } => {
+                        assert!((MIN_MATCH..=MAX_MATCH).contains(&(len as usize)));
+                        assert!(dist as usize >= 1 && dist as usize <= pos);
+                        pos += len as usize;
+                    }
+                }
+            }
+            assert_eq!(pos, data.len());
+        }
+    }
+}

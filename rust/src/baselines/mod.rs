@@ -1,0 +1,236 @@
+//! Baseline codecs, all from scratch (DESIGN.md S9–S12): the comparison
+//! column of the paper's Table 2/3. A uniform [`ImageCodec`] interface
+//! lets the benchmark harness sweep them.
+//!
+//! * [`deflate`]/[`gzip`] — RFC 1951/1952 (the paper's `gzip`);
+//! * [`bz`] — BWT + MTF + RLE + Huffman (the paper's `bz2`, own container);
+//! * [`png`] — real PNG (filters, zlib, CRC chunks);
+//! * [`webp`] — simplified VP8L ("WebP-style", see DESIGN.md §5);
+//! * [`external`] — the vendored `flate2`/`bzip2` crates, used to
+//!   cross-validate our implementations' formats and rates.
+
+pub mod bwt;
+pub mod bz;
+pub mod deflate;
+pub mod external;
+pub mod gzip;
+pub mod huffman;
+pub mod lz77;
+pub mod png;
+pub mod webp;
+
+use crate::data::Dataset;
+use anyhow::Result;
+
+/// How a baseline consumes a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One compressed object for the concatenated dataset (gzip/bz2 style
+    /// — how the paper benchmarks generic byte compressors).
+    WholeStream,
+    /// One compressed object per image (PNG/WebP style).
+    PerImage,
+}
+
+/// A baseline image-dataset compressor.
+pub trait ImageCodec {
+    fn name(&self) -> &'static str;
+    fn granularity(&self) -> Granularity;
+
+    /// Compress the dataset into one or more blobs.
+    fn compress_dataset(&self, ds: &Dataset) -> Result<Vec<Vec<u8>>>;
+
+    /// Decompress back to images (inverse of `compress_dataset`).
+    fn decompress_dataset(
+        &self,
+        blobs: &[Vec<u8>],
+        ds_shape: (usize, usize, usize),
+    ) -> Result<Vec<Vec<u8>>>;
+
+    /// Compression rate in bits per pixel over the dataset.
+    fn bits_per_dim(&self, ds: &Dataset) -> Result<f64> {
+        let blobs = self.compress_dataset(ds)?;
+        let total_bytes: usize = blobs.iter().map(|b| b.len()).sum();
+        Ok(total_bytes as f64 * 8.0 / ds.raw_bytes() as f64)
+    }
+}
+
+/// Our gzip over the concatenated image stream.
+pub struct GzipCodec {
+    pub max_chain: usize,
+}
+
+impl ImageCodec for GzipCodec {
+    fn name(&self) -> &'static str {
+        "gzip"
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::WholeStream
+    }
+
+    fn compress_dataset(&self, ds: &Dataset) -> Result<Vec<Vec<u8>>> {
+        Ok(vec![gzip::gzip_compress(&ds.flat(), self.max_chain)])
+    }
+
+    fn decompress_dataset(
+        &self,
+        blobs: &[Vec<u8>],
+        (n, rows, cols): (usize, usize, usize),
+    ) -> Result<Vec<Vec<u8>>> {
+        let flat = gzip::gzip_decompress(&blobs[0])?;
+        Ok(split_flat(&flat, n, rows * cols))
+    }
+}
+
+/// Our bz2-style codec over the concatenated stream.
+pub struct BzCodec {
+    pub block_size: usize,
+}
+
+impl ImageCodec for BzCodec {
+    fn name(&self) -> &'static str {
+        "bz2-style"
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::WholeStream
+    }
+
+    fn compress_dataset(&self, ds: &Dataset) -> Result<Vec<Vec<u8>>> {
+        Ok(vec![bz::compress(&ds.flat(), self.block_size)])
+    }
+
+    fn decompress_dataset(
+        &self,
+        blobs: &[Vec<u8>],
+        (n, rows, cols): (usize, usize, usize),
+    ) -> Result<Vec<Vec<u8>>> {
+        let flat = bz::decompress(&blobs[0])?;
+        Ok(split_flat(&flat, n, rows * cols))
+    }
+}
+
+/// Our PNG, one file per image.
+pub struct PngCodec {
+    pub bit_depth: u8,
+}
+
+impl ImageCodec for PngCodec {
+    fn name(&self) -> &'static str {
+        "png"
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::PerImage
+    }
+
+    fn compress_dataset(&self, ds: &Dataset) -> Result<Vec<Vec<u8>>> {
+        ds.images
+            .iter()
+            .map(|img| png::encode(img, ds.cols, ds.rows, self.bit_depth))
+            .collect()
+    }
+
+    fn decompress_dataset(
+        &self,
+        blobs: &[Vec<u8>],
+        _shape: (usize, usize, usize),
+    ) -> Result<Vec<Vec<u8>>> {
+        blobs.iter().map(|b| png::decode(b).map(|(p, _)| p)).collect()
+    }
+}
+
+/// Our WebP-style codec, one file per image.
+pub struct WebpCodec;
+
+impl ImageCodec for WebpCodec {
+    fn name(&self) -> &'static str {
+        "webp-style"
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::PerImage
+    }
+
+    fn compress_dataset(&self, ds: &Dataset) -> Result<Vec<Vec<u8>>> {
+        ds.images
+            .iter()
+            .map(|img| webp::encode(img, ds.cols, ds.rows))
+            .collect()
+    }
+
+    fn decompress_dataset(
+        &self,
+        blobs: &[Vec<u8>],
+        _shape: (usize, usize, usize),
+    ) -> Result<Vec<Vec<u8>>> {
+        blobs
+            .iter()
+            .map(|b| webp::decode(b).map(|(p, _, _)| p))
+            .collect()
+    }
+}
+
+fn split_flat(flat: &[u8], n: usize, pixels: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|i| flat[i * pixels..(i + 1) * pixels].to_vec())
+        .collect()
+}
+
+/// The standard baseline suite for a dataset kind.
+pub fn standard_suite(binarized: bool) -> Vec<Box<dyn ImageCodec>> {
+    vec![
+        Box::new(BzCodec {
+            block_size: bz::DEFAULT_BLOCK,
+        }),
+        Box::new(GzipCodec { max_chain: 128 }),
+        Box::new(PngCodec {
+            bit_depth: if binarized { 1 } else { 8 },
+        }),
+        Box::new(WebpCodec),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn suite_roundtrips_on_digits() {
+        let ds = synth::digits(12, 20);
+        for codec in standard_suite(false) {
+            let blobs = codec.compress_dataset(&ds).unwrap();
+            let images = codec
+                .decompress_dataset(&blobs, (ds.len(), ds.rows, ds.cols))
+                .unwrap();
+            assert_eq!(images, ds.images, "{} roundtrip", codec.name());
+            let bpd = codec.bits_per_dim(&ds).unwrap();
+            assert!(bpd > 0.0 && bpd < 16.0, "{}: {bpd}", codec.name());
+        }
+    }
+
+    #[test]
+    fn suite_roundtrips_on_binarized() {
+        let ds = synth::binarize(&synth::digits(12, 21), 3);
+        for codec in standard_suite(true) {
+            let blobs = codec.compress_dataset(&ds).unwrap();
+            let images = codec
+                .decompress_dataset(&blobs, (ds.len(), ds.rows, ds.cols))
+                .unwrap();
+            assert_eq!(images, ds.images, "{} roundtrip", codec.name());
+        }
+    }
+
+    #[test]
+    fn stream_codecs_beat_per_image_on_tiny_images() {
+        // Whole-stream codecs exploit cross-image redundancy; per-image
+        // containers pay per-file overhead (paper Fig. 1 shows PNG's
+        // overhead dominating at 28x28).
+        let ds = synth::binarize(&synth::digits(30, 22), 4);
+        let gz = GzipCodec { max_chain: 128 }.bits_per_dim(&ds).unwrap();
+        let png = PngCodec { bit_depth: 1 }.bits_per_dim(&ds).unwrap();
+        assert!(gz < png, "gzip {gz} should beat per-image png {png}");
+    }
+}

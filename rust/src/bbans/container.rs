@@ -1,0 +1,173 @@
+//! On-disk/wire container for a BB-ANS compressed dataset.
+//!
+//! The header records everything the decoder needs to rebuild the exact
+//! coding process: the model, the backend that produced the distribution
+//! parameters (floating-point results differ across backends at ULP
+//! level, and BB-ANS needs bit-exact agreement), the coding precisions,
+//! the clean-bit seed, and the image count. The payload is the serialized
+//! ANS message.
+
+use anyhow::{bail, Context, Result};
+
+use super::BbAnsConfig;
+use crate::ans::AnsMessage;
+
+pub const MAGIC: &[u8; 4] = b"BBC1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Container {
+    pub model: String,
+    pub backend_id: String,
+    pub cfg: BbAnsConfig,
+    pub num_images: u32,
+    pub pixels: u32,
+    pub message: AnsMessage,
+}
+
+impl Container {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(1u8); // version
+        push_str(&mut out, &self.model);
+        push_str(&mut out, &self.backend_id);
+        out.push(self.cfg.latent_bits as u8);
+        out.push(self.cfg.posterior_prec as u8);
+        out.push(self.cfg.pixel_prec as u8);
+        out.extend_from_slice(&self.cfg.clean_seed.to_le_bytes());
+        out.extend_from_slice(&self.num_images.to_le_bytes());
+        out.extend_from_slice(&self.pixels.to_le_bytes());
+        out.extend_from_slice(&self.message.to_bytes());
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > b.len() {
+                bail!("container truncated at {} (+{n})", *pos);
+            }
+            let s = &b[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad container magic");
+        }
+        let version = take(&mut pos, 1)?[0];
+        if version != 1 {
+            bail!("unsupported container version {version}");
+        }
+        let model = read_str(b, &mut pos).context("model name")?;
+        let backend_id = read_str(b, &mut pos).context("backend id")?;
+        let latent_bits = take(&mut pos, 1)?[0] as u32;
+        let posterior_prec = take(&mut pos, 1)?[0] as u32;
+        let pixel_prec = take(&mut pos, 1)?[0] as u32;
+        let clean_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let pixels = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let message = AnsMessage::from_bytes(&b[pos..]).context("ANS payload")?;
+        let cfg = BbAnsConfig {
+            latent_bits,
+            posterior_prec,
+            pixel_prec,
+            clean_seed,
+        };
+        cfg.validate()?;
+        Ok(Self {
+            model,
+            backend_id,
+            cfg,
+            num_images,
+            pixels,
+            message,
+        })
+    }
+
+    /// Total compressed size in bytes (header + payload).
+    pub fn byte_len(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Compression rate in bits per pixel-dimension, counting the full
+    /// container (header amortizes over the dataset).
+    pub fn bits_per_dim(&self) -> f64 {
+        (self.byte_len() as f64 * 8.0) / (self.num_images as f64 * self.pixels as f64)
+    }
+
+    /// Rate counting only the ANS message (what the paper reports; the
+    /// model is communicated separately, §4.3).
+    pub fn payload_bits_per_dim(&self) -> f64 {
+        self.message.bit_len() as f64 / (self.num_images as f64 * self.pixels as f64)
+    }
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u8::MAX as usize, "string too long for container");
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(b: &[u8], pos: &mut usize) -> Result<String> {
+    if *pos >= b.len() {
+        bail!("truncated string length");
+    }
+    let n = b[*pos] as usize;
+    *pos += 1;
+    if *pos + n > b.len() {
+        bail!("truncated string body");
+    }
+    let s = std::str::from_utf8(&b[*pos..*pos + n])
+        .context("string utf8")?
+        .to_string();
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Container {
+        Container {
+            model: "bin".into(),
+            backend_id: "native".into(),
+            cfg: BbAnsConfig::default(),
+            num_images: 17,
+            pixels: 784,
+            message: AnsMessage {
+                head: crate::ans::RANS_L + 12345,
+                stream: vec![1, 2, 3, 0xdeadbeef],
+                clean_words_used: 13,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = sample().to_bytes();
+        assert!(Container::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Container::from_bytes(&bad).is_err());
+        let mut badver = bytes.clone();
+        badver[4] = 9;
+        assert!(Container::from_bytes(&badver).is_err());
+    }
+
+    #[test]
+    fn rate_accounting() {
+        let c = sample();
+        let payload_bits = c.message.bit_len() as f64;
+        assert!((c.payload_bits_per_dim() - payload_bits / (17.0 * 784.0)).abs() < 1e-12);
+        assert!(c.bits_per_dim() > c.payload_bits_per_dim());
+    }
+}

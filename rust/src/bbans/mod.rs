@@ -1,0 +1,512 @@
+//! BB-ANS — the paper's contribution: bits-back coding chained through the
+//! LIFO structure of ANS (paper §2.3–2.4, Table 1).
+//!
+//! Encoding one image `s` with a latent-variable model:
+//!
+//! 1. **pop**  `y ~ q(y|s)` — "decode" the latent from the stack (this is
+//!    the bits-back step: it *consumes* stack bits, using them as the
+//!    random source for the posterior sample);
+//! 2. **push** `s` under `p(s|y)` — code the pixels with the likelihood;
+//! 3. **push** `y` under `p(y)` — code the latent with the prior.
+//!
+//! Decoding runs the exact inverse (pop prior, pop likelihood, push
+//! posterior), which also *returns* the borrowed bits — so chaining images
+//! costs `−ELBO` bits each with zero per-image overhead. That zero-overhead
+//! chaining is exactly what ANS's stack discipline buys over arithmetic
+//! coding (Frey's AC-based chaining paid a flush per image).
+//!
+//! The latent is continuous; it is discretized into max-entropy buckets of
+//! the prior (paper §2.5.1 + Appendix B): under the prior the bucket index
+//! is exactly uniform, so prior coding is lossless-in-rate, and the
+//! posterior is coded over the *same* buckets via
+//! [`crate::codecs::gaussian::DiscretizedGaussian`].
+
+pub mod container;
+pub mod timeseries;
+
+use anyhow::{bail, Result};
+
+use crate::ans::Ans;
+use crate::codecs::beta_binomial::{BetaBinomial, BetaBinomialDirect};
+use crate::codecs::categorical::Bernoulli;
+use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
+use crate::codecs::uniform::Uniform;
+use crate::codecs::SymbolCodec;
+use crate::model::{Backend, Likelihood, PixelParams};
+
+/// Coding hyper-parameters (recorded in the container header; encoder and
+/// decoder must agree).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BbAnsConfig {
+    /// Latent discretization: 2^latent_bits buckets per dimension
+    /// (paper §2.5.1: gains saturate by ~16 bits; we default to 12 and
+    /// sweep 8..=16 in `benches/ablations.rs`).
+    pub latent_bits: u32,
+    /// Precision for coding the discretized posterior.
+    pub posterior_prec: u32,
+    /// Precision for coding pixels under the likelihood.
+    pub pixel_prec: u32,
+    /// Seed of the clean-bit supply that starts the chain.
+    pub clean_seed: u64,
+}
+
+impl Default for BbAnsConfig {
+    fn default() -> Self {
+        Self {
+            latent_bits: 12,
+            posterior_prec: 24,
+            pixel_prec: 16,
+            clean_seed: 0xBBA4_55EED,
+        }
+    }
+}
+
+impl BbAnsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.latent_bits < 1 || self.latent_bits > 24 {
+            bail!("latent_bits {} out of range 1..=24", self.latent_bits);
+        }
+        if self.posterior_prec <= self.latent_bits {
+            bail!(
+                "posterior_prec {} must exceed latent_bits {}",
+                self.posterior_prec,
+                self.latent_bits
+            );
+        }
+        if self.posterior_prec > 32 || self.pixel_prec > 28 || self.pixel_prec < 10 {
+            bail!("precision out of range");
+        }
+        Ok(())
+    }
+}
+
+/// Per-image rate telemetry (drives Fig. 3 and the §3.2 accounting).
+#[derive(Debug, Clone, Copy)]
+pub struct ImageStats {
+    /// Net message growth from this image, in bits (can be < 0 early in
+    /// the chain when posterior pops consume clean bits).
+    pub net_bits: f64,
+    /// Bits consumed sampling the latent from q(y|s) (step 1; negative).
+    pub posterior_bits: f64,
+    /// Bits added coding pixels under p(s|y) (step 2).
+    pub likelihood_bits: f64,
+    /// Bits added coding the latent under p(y) (step 3).
+    pub prior_bits: f64,
+}
+
+/// The BB-ANS codec over a VAE [`Backend`].
+pub struct VaeCodec<'a, B: Backend + ?Sized> {
+    backend: &'a B,
+    pub cfg: BbAnsConfig,
+    buckets: MaxEntropyBuckets,
+}
+
+impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
+    pub fn new(backend: &'a B, cfg: BbAnsConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            backend,
+            cfg,
+            buckets: MaxEntropyBuckets::new(cfg.latent_bits),
+        })
+    }
+
+    pub fn backend(&self) -> &B {
+        self.backend
+    }
+
+    pub fn scale_image(&self, img: &[u8]) -> Vec<f32> {
+        match self.backend.meta().likelihood {
+            Likelihood::Bernoulli => img.iter().map(|&v| (v != 0) as u32 as f32).collect(),
+            Likelihood::BetaBinomial => img.iter().map(|&v| v as f32 / 255.0).collect(),
+        }
+    }
+
+    /// Latent bucket centres → the f32 latent vector fed to the decoder.
+    fn centres(&self, idx: &[u32]) -> Vec<f32> {
+        idx.iter().map(|&i| self.buckets.centre(i) as f32).collect()
+    }
+
+    fn posterior_codec(&self, mu: f32, sigma: f32) -> DiscretizedGaussian {
+        // Guard against degenerate network outputs.
+        let mu = if mu.is_finite() { mu as f64 } else { 0.0 };
+        let sigma = if sigma.is_finite() && sigma > 0.0 {
+            sigma as f64
+        } else {
+            1.0
+        };
+        DiscretizedGaussian::new(self.buckets.clone(), mu, sigma, self.cfg.posterior_prec)
+    }
+
+    /// Push one pixel under the likelihood params.
+    fn push_pixel(&self, ans: &mut Ans, params: &PixelParams, p: usize, sym: u8) {
+        match params {
+            PixelParams::Bernoulli(probs) => {
+                // Allocation-free fast path (§Perf #5), bit-identical to
+                // Categorical::bernoulli.
+                let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
+                c.push(ans, (sym != 0) as usize);
+            }
+            PixelParams::BetaBinomialAb { alpha, beta } => {
+                // Lazy direct codec: O(sym) work, O(1) for the black
+                // background pixels that dominate MNIST (§Perf #3).
+                let c = BetaBinomialDirect::new(
+                    255,
+                    alpha[p] as f64,
+                    beta[p] as f64,
+                    self.cfg.pixel_prec,
+                );
+                c.push(ans, sym as u32);
+            }
+            PixelParams::BetaBinomialTable(table) => {
+                let c =
+                    BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
+                c.push(ans, sym as u32);
+            }
+        }
+    }
+
+    fn pop_pixel(&self, ans: &mut Ans, params: &PixelParams, p: usize) -> u8 {
+        match params {
+            PixelParams::Bernoulli(probs) => {
+                let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
+                c.pop(ans) as u8
+            }
+            PixelParams::BetaBinomialAb { alpha, beta } => {
+                let c = BetaBinomialDirect::new(
+                    255,
+                    alpha[p] as f64,
+                    beta[p] as f64,
+                    self.cfg.pixel_prec,
+                );
+                c.pop(ans) as u8
+            }
+            PixelParams::BetaBinomialTable(table) => {
+                let c =
+                    BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
+                c.pop(ans) as u8
+            }
+        }
+    }
+
+    // ---- stepwise primitives (public so the coordinator can interleave
+    // ---- the ANS work of many streams between batched NN calls) ----
+
+    /// Step 1 of encode: pop the latent bucket indices from q(y|s).
+    pub fn pop_posterior(&self, ans: &mut Ans, mu: &[f32], sigma: &[f32]) -> Vec<u32> {
+        (0..self.backend.meta().latent_dim)
+            .map(|d| self.posterior_codec(mu[d], sigma[d]).pop(ans))
+            .collect()
+    }
+
+    /// Step 2 of encode: push all pixels under the likelihood.
+    pub fn push_pixels(&self, ans: &mut Ans, params: &PixelParams, img: &[u8]) {
+        for (p, &sym) in img.iter().enumerate() {
+            self.push_pixel(ans, params, p, sym);
+        }
+    }
+
+    /// Step 3 of encode: push the latent under the uniform prior.
+    pub fn push_prior(&self, ans: &mut Ans, idx: &[u32]) {
+        let prior = Uniform::new(self.cfg.latent_bits);
+        for &i in idx {
+            prior.push(ans, i);
+        }
+    }
+
+    /// Step 3⁻¹ of decode: pop the latent from the prior.
+    pub fn pop_prior(&self, ans: &mut Ans) -> Vec<u32> {
+        let l = self.backend.meta().latent_dim;
+        let prior = Uniform::new(self.cfg.latent_bits);
+        let mut idx = vec![0u32; l];
+        for d in (0..l).rev() {
+            idx[d] = prior.pop(ans);
+        }
+        idx
+    }
+
+    /// Step 2⁻¹ of decode: pop all pixels under the likelihood.
+    pub fn pop_pixels(&self, ans: &mut Ans, params: &PixelParams) -> Vec<u8> {
+        let pixels = self.backend.meta().pixels;
+        let mut img = vec![0u8; pixels];
+        for p in (0..pixels).rev() {
+            img[p] = self.pop_pixel(ans, params, p);
+        }
+        img
+    }
+
+    /// Step 1⁻¹ of decode: push the latent back under q(y|s).
+    pub fn push_posterior(&self, ans: &mut Ans, mu: &[f32], sigma: &[f32], idx: &[u32]) {
+        for d in (0..self.backend.meta().latent_dim).rev() {
+            self.posterior_codec(mu[d], sigma[d]).push(ans, idx[d]);
+        }
+    }
+
+    /// Bucket indices → the latent vector fed to the generative net.
+    pub fn latent_centres(&self, idx: &[u32]) -> Vec<f32> {
+        self.centres(idx)
+    }
+
+    /// Encode one image onto the stack (paper Table 1), given its already-
+    /// computed posterior parameters. Returns per-step rate telemetry.
+    pub fn encode_image_with_posterior(
+        &self,
+        ans: &mut Ans,
+        img: &[u8],
+        mu: &[f32],
+        sigma: &[f32],
+    ) -> Result<ImageStats> {
+        let meta = self.backend.meta();
+        if img.len() != meta.pixels {
+            bail!("image has {} pixels, model wants {}", img.len(), meta.pixels);
+        }
+        let l = meta.latent_dim;
+        // Effective message length: actual content minus the clean words
+        // drawn so far. Treating the clean supply as virtual pre-existing
+        // stack content makes a posterior pop cost exactly -log q and a
+        // push cost exactly -log p, so per-image net = -ELBO estimate.
+        let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
+
+        let _ = l;
+        // (1) pop y ~ q(y|s): dims in increasing order.
+        let b0 = bits_at(ans);
+        let idx = self.pop_posterior(ans, mu, sigma);
+        let b1 = bits_at(ans);
+
+        // (2) push s under p(s|y).
+        let y = self.centres(&idx);
+        let params = self.backend.likelihood(&[&y])?.remove(0);
+        self.push_pixels(ans, &params, img);
+        let b2 = bits_at(ans);
+
+        // (3) push y under the (exactly uniform) discretized prior.
+        self.push_prior(ans, &idx);
+        let b3 = bits_at(ans);
+
+        Ok(ImageStats {
+            net_bits: b3 - b0,
+            posterior_bits: b1 - b0, // negative: pops consume
+            likelihood_bits: b2 - b1,
+            prior_bits: b3 - b2,
+        })
+    }
+
+    /// Encode one image (computes the posterior itself).
+    pub fn encode_image(&self, ans: &mut Ans, img: &[u8]) -> Result<ImageStats> {
+        let x = self.scale_image(img);
+        let (mu, sigma) = self.backend.posterior(&[&x])?.remove(0);
+        self.encode_image_with_posterior(ans, img, &mu, &sigma)
+    }
+
+    /// Decode one image from the stack — the exact inverse of
+    /// [`Self::encode_image`].
+    pub fn decode_image(&self, ans: &mut Ans) -> Result<Vec<u8>> {
+        // (3 inverse) pop y from the prior.
+        let idx = self.pop_prior(ans);
+
+        // (2 inverse) pop s under p(s|y).
+        let y = self.centres(&idx);
+        let params = self.backend.likelihood(&[&y])?.remove(0);
+        let img = self.pop_pixels(ans, &params);
+
+        // (1 inverse) push y back under q(y|s) — returns the borrowed bits.
+        let x = self.scale_image(&img);
+        let (mu, sigma) = self.backend.posterior(&[&x])?.remove(0);
+        self.push_posterior(ans, &mu, &sigma, &idx);
+        Ok(img)
+    }
+
+    /// Encode a dataset by chaining (paper §2.3): every image's compressed
+    /// form seeds the next one's posterior sample. Posterior network calls
+    /// are batched upfront (they depend only on the data).
+    ///
+    /// Returns (final coder, per-image stats in encode order).
+    pub fn encode_dataset(&self, images: &[Vec<u8>]) -> Result<(Ans, Vec<ImageStats>)> {
+        let mut ans = Ans::new(self.cfg.clean_seed);
+        let stats = self.encode_dataset_into(&mut ans, images)?;
+        Ok((ans, stats))
+    }
+
+    /// Chain `images` onto an existing coder state.
+    pub fn encode_dataset_into(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+    ) -> Result<Vec<ImageStats>> {
+        const NN_CHUNK: usize = 64;
+        let mut stats = Vec::with_capacity(images.len());
+        for chunk in images.chunks(NN_CHUNK) {
+            let scaled: Vec<Vec<f32>> = chunk.iter().map(|i| self.scale_image(i)).collect();
+            let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
+            let posts = self.backend.posterior(&refs)?;
+            for (img, (mu, sigma)) in chunk.iter().zip(posts.iter()) {
+                stats.push(self.encode_image_with_posterior(ans, img, mu, sigma)?);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Decode `n` chained images; returns them in original encode order.
+    pub fn decode_dataset(&self, ans: &mut Ans, n: usize) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.decode_image(ans)?);
+        }
+        out.reverse(); // stack order → original order
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vae::NativeVae;
+    use crate::model::ModelMeta;
+    use crate::util::rng::Rng;
+
+    fn meta(likelihood: Likelihood, pixels: usize, latent: usize) -> ModelMeta {
+        ModelMeta {
+            name: "t".into(),
+            pixels,
+            latent_dim: latent,
+            hidden: 12,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        }
+    }
+
+    fn sample_images(n: usize, pixels: usize, levels: u32, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..pixels)
+                    .map(|_| {
+                        // Sparse-ish images: mostly zeros like MNIST.
+                        if rng.f64() < 0.7 {
+                            0
+                        } else {
+                            rng.below(levels as u64) as u8
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_bernoulli_model() {
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 36, 6), 1);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(25, 36, 2, 2);
+        let (mut ans, stats) = codec.encode_dataset(&images).unwrap();
+        assert_eq!(stats.len(), 25);
+        let decoded = codec.decode_dataset(&mut ans, 25).unwrap();
+        assert_eq!(decoded, images);
+    }
+
+    #[test]
+    fn roundtrip_beta_binomial_model() {
+        let backend = NativeVae::random(meta(Likelihood::BetaBinomial, 25, 5), 3);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(12, 25, 256, 4);
+        let (mut ans, _) = codec.encode_dataset(&images).unwrap();
+        let decoded = codec.decode_dataset(&mut ans, 12).unwrap();
+        assert_eq!(decoded, images);
+    }
+
+    #[test]
+    fn decode_returns_clean_bits() {
+        // After decoding everything, the stream contains exactly the clean
+        // words the encoder borrowed (the bits came back).
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 36, 6), 5);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(10, 36, 2, 6);
+        let (mut ans, _) = codec.encode_dataset(&images).unwrap();
+        let borrowed = ans.clean_words_used();
+        let _ = codec.decode_dataset(&mut ans, 10).unwrap();
+        assert_eq!(ans.stream_len() as u64, borrowed);
+        let msg = ans.to_message();
+        let mut fresh = Rng::new(codec.cfg.clean_seed);
+        let expect: Vec<u32> = (0..borrowed).map(|_| fresh.next_u32()).collect();
+        let mut got = msg.stream.clone();
+        got.reverse();
+        assert_eq!(got, expect, "returned bits must equal the clean supply");
+    }
+
+    #[test]
+    fn chaining_beats_single_image_rate() {
+        // Paper §2.5: the first image costs ~log p(s,y) (no bits to get
+        // back); amortized chained rate approaches the ELBO. So encoding
+        // N images must cost well under N * (single-image cost).
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 64, 8), 7);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(40, 64, 2, 8);
+
+        // Total transmitted size = the final message itself (the clean
+        // words that were drawn are *inside* it).
+        let (ans_all, _) = codec.encode_dataset(&images).unwrap();
+        let total_chained = ans_all.frac_bit_len();
+
+        let mut total_single = 0.0;
+        for img in &images {
+            let (a, _) = codec.encode_dataset(std::slice::from_ref(img)).unwrap();
+            total_single += a.frac_bit_len();
+        }
+        assert!(
+            total_chained < total_single * 0.9,
+            "chained {total_chained} vs single-sum {total_single}"
+        );
+    }
+
+    #[test]
+    fn stats_components_are_consistent() {
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 36, 6), 9);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(5, 36, 2, 10);
+        let (_, stats) = codec.encode_dataset(&images).unwrap();
+        for s in &stats {
+            assert!(
+                (s.net_bits - (s.posterior_bits + s.likelihood_bits + s.prior_bits)).abs() < 1e-6
+            );
+            assert!(s.posterior_bits < 0.0, "posterior step must consume bits");
+            assert!(s.likelihood_bits > 0.0);
+            assert!(s.prior_bits > 0.0);
+            // Prior coding of L dims at latent_bits each is exact.
+            assert!(
+                (s.prior_bits - 6.0 * 12.0).abs() < 1.0,
+                "prior bits {}",
+                s.prior_bits
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 4, 2), 11);
+        for cfg in [
+            BbAnsConfig {
+                latent_bits: 0,
+                ..Default::default()
+            },
+            BbAnsConfig {
+                latent_bits: 16,
+                posterior_prec: 16,
+                ..Default::default()
+            },
+            BbAnsConfig {
+                pixel_prec: 40,
+                ..Default::default()
+            },
+        ] {
+            assert!(VaeCodec::new(&backend, cfg).is_err(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 36, 6), 13);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let mut ans = Ans::new(0);
+        assert!(codec.encode_image(&mut ans, &[0u8; 35]).is_err());
+    }
+}

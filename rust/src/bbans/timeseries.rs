@@ -1,0 +1,516 @@
+//! BB-ANS for time-series latent-variable models (paper §4.1 future work).
+//!
+//! The paper notes that hidden-Markov-style models "could, in principal,
+//! be coded with BB-ANS, but the number of 'extra bits' needed in a naive
+//! implementation scales with the length of the chain". This module
+//! implements that naive scheme for a discrete HMM so the claim can be
+//! measured (see `benches/ablations.rs`):
+//!
+//! * approximate posterior `q(z_t | x) =` exact smoothed marginals from
+//!   forward–backward (factorized across time — the source of the ELBO
+//!   gap `KL(∏_t q_t ‖ p(z|x))`);
+//! * encode: pop `z_t ~ q_t` for `t = 0..T`; push `x_t` under the
+//!   emissions; push `z_t` under the Markov prior **in reverse time
+//!   order** so that decoding recovers `z_0, z_1, …` forward (each
+//!   transition codec needs the previous state).
+//!
+//! Chaining across sequences amortizes the initial-bits cost exactly as
+//! for images; the per-sequence startup cost (≈ Σ_t H(q_t)) is what
+//! scales with `T`.
+
+use anyhow::{bail, Result};
+
+use crate::ans::Ans;
+use crate::codecs::categorical::Categorical;
+use crate::codecs::SymbolCodec;
+
+/// A discrete hidden Markov model with categorical emissions.
+#[derive(Debug, Clone)]
+pub struct Hmm {
+    pub n_states: usize,
+    pub n_symbols: usize,
+    /// Initial distribution, length `n_states`.
+    pub init: Vec<f64>,
+    /// Transition matrix, row-major `[from, to]`.
+    pub trans: Vec<f64>,
+    /// Emission matrix, row-major `[state, symbol]`.
+    pub emit: Vec<f64>,
+}
+
+impl Hmm {
+    pub fn new(init: Vec<f64>, trans: Vec<f64>, emit: Vec<f64>, n_symbols: usize) -> Result<Self> {
+        let k = init.len();
+        if trans.len() != k * k || emit.len() != k * n_symbols {
+            bail!("inconsistent HMM shapes");
+        }
+        for row in 0..k {
+            let s: f64 = trans[row * k..(row + 1) * k].iter().sum();
+            if (s - 1.0).abs() > 1e-9 {
+                bail!("transition row {row} sums to {s}");
+            }
+            let e: f64 = emit[row * n_symbols..(row + 1) * n_symbols].iter().sum();
+            if (e - 1.0).abs() > 1e-9 {
+                bail!("emission row {row} sums to {e}");
+            }
+        }
+        Ok(Self {
+            n_states: k,
+            n_symbols,
+            init,
+            trans,
+            emit,
+        })
+    }
+
+    #[inline]
+    fn trans_row(&self, from: usize) -> &[f64] {
+        &self.trans[from * self.n_states..(from + 1) * self.n_states]
+    }
+
+    #[inline]
+    fn emit_row(&self, state: usize) -> &[f64] {
+        &self.emit[state * self.n_symbols..(state + 1) * self.n_symbols]
+    }
+
+    /// Forward–backward smoothed marginals `p(z_t | x)` plus the exact
+    /// log-evidence `log p(x)` (nats → returned in bits).
+    pub fn smoothed_marginals(&self, x: &[usize]) -> (Vec<Vec<f64>>, f64) {
+        let (k, t_len) = (self.n_states, x.len());
+        let mut alpha = vec![vec![0.0f64; k]; t_len];
+        let mut scale = vec![0.0f64; t_len];
+        // Forward (scaled).
+        for z in 0..k {
+            alpha[0][z] = self.init[z] * self.emit_row(z)[x[0]];
+        }
+        scale[0] = alpha[0].iter().sum();
+        for z in 0..k {
+            alpha[0][z] /= scale[0];
+        }
+        for t in 1..t_len {
+            for z in 0..k {
+                let mut a = 0.0;
+                for zp in 0..k {
+                    a += alpha[t - 1][zp] * self.trans_row(zp)[z];
+                }
+                alpha[t][z] = a * self.emit_row(z)[x[t]];
+            }
+            scale[t] = alpha[t].iter().sum();
+            for z in 0..k {
+                alpha[t][z] /= scale[t];
+            }
+        }
+        // Backward (scaled with the same factors).
+        let mut beta = vec![vec![1.0f64; k]; t_len];
+        for t in (0..t_len - 1).rev() {
+            for z in 0..k {
+                let mut b = 0.0;
+                for zn in 0..k {
+                    b += self.trans_row(z)[zn] * self.emit_row(zn)[x[t + 1]] * beta[t + 1][zn];
+                }
+                beta[t][z] = b / scale[t + 1];
+            }
+        }
+        let mut gamma = vec![vec![0.0f64; k]; t_len];
+        for t in 0..t_len {
+            let mut norm = 0.0;
+            for z in 0..k {
+                gamma[t][z] = alpha[t][z] * beta[t][z];
+                norm += gamma[t][z];
+            }
+            for z in 0..k {
+                gamma[t][z] /= norm;
+            }
+        }
+        let log_evidence_bits: f64 = scale.iter().map(|s| s.log2()).sum();
+        (gamma, log_evidence_bits)
+    }
+}
+
+/// BB-ANS codec over an [`Hmm`].
+pub struct HmmCodec<'a> {
+    pub hmm: &'a Hmm,
+    pub prec: u32,
+}
+
+impl<'a> HmmCodec<'a> {
+    pub fn new(hmm: &'a Hmm, prec: u32) -> Self {
+        Self { hmm, prec }
+    }
+
+    fn cat(&self, pmf: &[f64]) -> Categorical {
+        Categorical::from_pmf(pmf, self.prec)
+    }
+
+    /// Encode one sequence; returns net bits added.
+    pub fn encode_sequence(&self, ans: &mut Ans, x: &[usize]) -> Result<f64> {
+        if x.is_empty() {
+            return Ok(0.0);
+        }
+        if x.iter().any(|&s| s >= self.hmm.n_symbols) {
+            bail!("symbol out of range");
+        }
+        let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
+        let b0 = bits_at(ans);
+        let (q, _) = self.hmm.smoothed_marginals(x);
+
+        // (1) pop z_t ~ q_t, forward order.
+        let mut z = Vec::with_capacity(x.len());
+        for qt in &q {
+            z.push(self.cat(qt).pop(ans));
+        }
+        // (2) push emissions, forward order.
+        for (t, &xt) in x.iter().enumerate() {
+            self.cat(self.hmm.emit_row(z[t])).push(ans, xt);
+        }
+        // (3) push latents under the Markov prior in REVERSE time order so
+        // decode pops them forward.
+        for t in (0..x.len()).rev() {
+            let prior_t = if t == 0 {
+                self.cat(&self.hmm.init)
+            } else {
+                self.cat(self.hmm.trans_row(z[t - 1]))
+            };
+            prior_t.push(ans, z[t]);
+        }
+        Ok(bits_at(ans) - b0)
+    }
+
+    /// Decode one sequence of known length.
+    pub fn decode_sequence(&self, ans: &mut Ans, t_len: usize) -> Result<Vec<usize>> {
+        if t_len == 0 {
+            return Ok(Vec::new());
+        }
+        // (3 inverse) pop latents forward.
+        let mut z = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            let prior_t = if t == 0 {
+                self.cat(&self.hmm.init)
+            } else {
+                self.cat(self.hmm.trans_row(z[t - 1]))
+            };
+            z.push(prior_t.pop(ans));
+        }
+        // (2 inverse) pop emissions in reverse push order.
+        let mut x = vec![0usize; t_len];
+        for t in (0..t_len).rev() {
+            x[t] = self.cat(self.hmm.emit_row(z[t])).pop(ans);
+        }
+        // (1 inverse) push posteriors in reverse pop order.
+        let (q, _) = self.hmm.smoothed_marginals(&x);
+        for t in (0..t_len).rev() {
+            self.cat(&q[t]).push(ans, z[t]);
+        }
+        Ok(x)
+    }
+}
+
+impl Hmm {
+    /// Baum–Welch (EM) parameter estimation from observation sequences.
+    ///
+    /// Makes the §4.1 extension a complete pipeline: learn the model from
+    /// data, then compress with BB-ANS at a rate near the learned model's
+    /// log-likelihood. Returns the mean log-likelihood (bits/symbol) per
+    /// iteration for convergence monitoring.
+    pub fn baum_welch(&mut self, seqs: &[Vec<usize>], iters: usize) -> Vec<f64> {
+        let (k, m) = (self.n_states, self.n_symbols);
+        let mut curve = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let mut init_acc = vec![1e-8f64; k];
+            let mut trans_acc = vec![1e-8f64; k * k];
+            let mut emit_acc = vec![1e-8f64; k * m];
+            let mut total_ll_bits = 0.0;
+            let mut total_syms = 0usize;
+
+            for x in seqs {
+                if x.is_empty() {
+                    continue;
+                }
+                let t_len = x.len();
+                // Scaled forward/backward (same as smoothed_marginals but
+                // we also need pairwise statistics).
+                let mut alpha = vec![vec![0.0f64; k]; t_len];
+                let mut scale = vec![0.0f64; t_len];
+                for z in 0..k {
+                    alpha[0][z] = self.init[z] * self.emit_row(z)[x[0]];
+                }
+                scale[0] = alpha[0].iter().sum::<f64>().max(1e-300);
+                for z in 0..k {
+                    alpha[0][z] /= scale[0];
+                }
+                for t in 1..t_len {
+                    for z in 0..k {
+                        let mut a = 0.0;
+                        for zp in 0..k {
+                            a += alpha[t - 1][zp] * self.trans_row(zp)[z];
+                        }
+                        alpha[t][z] = a * self.emit_row(z)[x[t]];
+                    }
+                    scale[t] = alpha[t].iter().sum::<f64>().max(1e-300);
+                    for z in 0..k {
+                        alpha[t][z] /= scale[t];
+                    }
+                }
+                let mut beta = vec![vec![1.0f64; k]; t_len];
+                for t in (0..t_len - 1).rev() {
+                    for z in 0..k {
+                        let mut b = 0.0;
+                        for zn in 0..k {
+                            b += self.trans_row(z)[zn]
+                                * self.emit_row(zn)[x[t + 1]]
+                                * beta[t + 1][zn];
+                        }
+                        beta[t][z] = b / scale[t + 1];
+                    }
+                }
+                total_ll_bits += scale.iter().map(|s| s.log2()).sum::<f64>();
+                total_syms += t_len;
+
+                // Accumulate expected counts.
+                for t in 0..t_len {
+                    let mut norm = 0.0;
+                    let mut gamma = vec![0.0f64; k];
+                    for z in 0..k {
+                        gamma[z] = alpha[t][z] * beta[t][z];
+                        norm += gamma[z];
+                    }
+                    for z in 0..k {
+                        let g = gamma[z] / norm.max(1e-300);
+                        emit_acc[z * m + x[t]] += g;
+                        if t == 0 {
+                            init_acc[z] += g;
+                        }
+                    }
+                }
+                for t in 0..t_len - 1 {
+                    let mut norm = 0.0;
+                    let mut xi = vec![0.0f64; k * k];
+                    for zp in 0..k {
+                        for zn in 0..k {
+                            let v = alpha[t][zp]
+                                * self.trans_row(zp)[zn]
+                                * self.emit_row(zn)[x[t + 1]]
+                                * beta[t + 1][zn]
+                                / scale[t + 1];
+                            xi[zp * k + zn] = v;
+                            norm += v;
+                        }
+                    }
+                    for i in 0..k * k {
+                        trans_acc[i] += xi[i] / norm.max(1e-300);
+                    }
+                }
+            }
+
+            // M-step: normalize counts.
+            let init_total: f64 = init_acc.iter().sum();
+            for z in 0..k {
+                self.init[z] = init_acc[z] / init_total;
+            }
+            for z in 0..k {
+                let row_total: f64 = trans_acc[z * k..(z + 1) * k].iter().sum();
+                for zn in 0..k {
+                    self.trans[z * k + zn] = trans_acc[z * k + zn] / row_total;
+                }
+                let e_total: f64 = emit_acc[z * m..(z + 1) * m].iter().sum();
+                for s in 0..m {
+                    self.emit[z * m + s] = emit_acc[z * m + s] / e_total;
+                }
+            }
+            curve.push(-total_ll_bits / total_syms as f64);
+        }
+        curve
+    }
+}
+
+/// A convenient test/bench HMM: sticky 3-state chain over 8 symbols.
+pub fn demo_hmm() -> Hmm {
+    let k = 3;
+    let m = 8;
+    let init = vec![1.0 / 3.0; 3];
+    let mut trans = vec![0.0; k * k];
+    for i in 0..k {
+        for j in 0..k {
+            trans[i * k + j] = if i == j { 0.8 } else { 0.1 };
+        }
+    }
+    // Each state prefers a different symbol neighbourhood.
+    let mut emit = vec![0.0; k * m];
+    for i in 0..k {
+        let mut total = 0.0;
+        for s in 0..m {
+            let d = (s as i32 - (i * 3) as i32).abs() as f64;
+            let w = (-0.7 * d).exp() + 0.02;
+            emit[i * m + s] = w;
+            total += w;
+        }
+        for s in 0..m {
+            emit[i * m + s] /= total;
+        }
+    }
+    Hmm::new(init, trans, emit, m).unwrap()
+}
+
+/// Sample a sequence from the HMM (for tests/benches).
+pub fn sample_sequence(hmm: &Hmm, t_len: usize, rng: &mut crate::util::rng::Rng) -> Vec<usize> {
+    let mut draw = |pmf: &[f64]| -> usize {
+        let u = rng.f64();
+        let mut acc = 0.0;
+        for (i, &p) in pmf.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        pmf.len() - 1
+    };
+    let mut z = draw(&hmm.init);
+    let mut out = Vec::with_capacity(t_len);
+    for _ in 0..t_len {
+        out.push(draw(hmm.emit_row(z)));
+        z = draw(hmm.trans_row(z));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn marginals_sum_to_one_and_evidence_negative() {
+        let hmm = demo_hmm();
+        let mut rng = Rng::new(1);
+        let x = sample_sequence(&hmm, 100, &mut rng);
+        let (q, log_ev_bits) = hmm.smoothed_marginals(&x);
+        assert_eq!(q.len(), 100);
+        for qt in &q {
+            let s: f64 = qt.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+        assert!(log_ev_bits < 0.0, "log p(x) must be negative: {log_ev_bits}");
+    }
+
+    #[test]
+    fn roundtrip_sequences() {
+        let hmm = demo_hmm();
+        let codec = HmmCodec::new(&hmm, 16);
+        let mut rng = Rng::new(2);
+        let seqs: Vec<Vec<usize>> = (0..10)
+            .map(|i| sample_sequence(&hmm, 20 + 13 * i, &mut rng))
+            .collect();
+        let mut ans = Ans::new(5);
+        for s in &seqs {
+            codec.encode_sequence(&mut ans, s).unwrap();
+        }
+        for s in seqs.iter().rev() {
+            let got = codec.decode_sequence(&mut ans, s.len()).unwrap();
+            assert_eq!(&got, s);
+        }
+    }
+
+    #[test]
+    fn chained_rate_close_to_evidence() {
+        // With exact smoothed (but factorized) posteriors the rate should
+        // be close to -log p(x), within the factorization KL gap (a few %
+        // for a sticky chain).
+        let hmm = demo_hmm();
+        let codec = HmmCodec::new(&hmm, 18);
+        let mut rng = Rng::new(3);
+        let seqs: Vec<Vec<usize>> = (0..50).map(|_| sample_sequence(&hmm, 200, &mut rng)).collect();
+        let mut ans = Ans::new(9);
+        let mut net = 0.0;
+        let mut ideal = 0.0;
+        for s in &seqs {
+            net += codec.encode_sequence(&mut ans, s).unwrap();
+            let (_, log_ev) = hmm.smoothed_marginals(s);
+            ideal += -log_ev;
+        }
+        assert!(net >= ideal * 0.99, "net {net} below ideal {ideal}?");
+        assert!(
+            net < ideal * 1.15,
+            "factorized-posterior gap too large: net {net} vs ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn baum_welch_improves_likelihood_and_rate() {
+        // Learn from data generated by the demo HMM, starting from a
+        // perturbed model; BB-ANS rate with the learned model must beat
+        // the rate with the bad initial model.
+        let truth = demo_hmm();
+        let mut rng = Rng::new(17);
+        let seqs: Vec<Vec<usize>> = (0..40).map(|_| sample_sequence(&truth, 150, &mut rng)).collect();
+
+        // Perturbed start: near-uniform everything.
+        let k = 3;
+        let m = 8;
+        let mut learned = Hmm::new(
+            vec![1.0 / 3.0; 3],
+            {
+                let mut t = vec![1.0 / 3.0; 9];
+                t[0] += 0.02;
+                t[1] -= 0.02; // break symmetry
+                t
+            },
+            {
+                let mut e = vec![1.0 / 8.0; 24];
+                for z in 0..k {
+                    e[z * m + z] += 0.03;
+                    e[z * m + (z + 1) % m] -= 0.03;
+                }
+                e
+            },
+            m,
+        )
+        .unwrap();
+
+        let rate = |hmm: &Hmm| -> f64 {
+            let codec = HmmCodec::new(hmm, 16);
+            let mut ans = Ans::new(3);
+            let mut bits = 0.0;
+            for s in &seqs {
+                bits += codec.encode_sequence(&mut ans, s).unwrap();
+            }
+            bits / seqs.iter().map(|s| s.len()).sum::<usize>() as f64
+        };
+        let rate_before = rate(&learned);
+        let curve = learned.baum_welch(&seqs, 60);
+        assert!(
+            curve.last().unwrap() < curve.first().unwrap(),
+            "EM must improve log-likelihood: {curve:?}"
+        );
+        // Monotone within tolerance (EM guarantees non-decreasing LL).
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "EM regressed: {} -> {}", w[0], w[1]);
+        }
+        let rate_after = rate(&learned);
+        assert!(
+            rate_after < rate_before - 0.02,
+            "learned model should compress better: {rate_before} -> {rate_after}"
+        );
+        // Roundtrip still exact with the learned model.
+        let codec = HmmCodec::new(&learned, 16);
+        let mut ans = Ans::new(4);
+        codec.encode_sequence(&mut ans, &seqs[0]).unwrap();
+        assert_eq!(codec.decode_sequence(&mut ans, seqs[0].len()).unwrap(), seqs[0]);
+    }
+
+    #[test]
+    fn startup_bits_scale_with_sequence_length() {
+        // The paper's §4.1 concern, measured: clean bits consumed by the
+        // FIRST sequence grow with T.
+        let hmm = demo_hmm();
+        let codec = HmmCodec::new(&hmm, 16);
+        let mut used = Vec::new();
+        for &t_len in &[10usize, 100, 1000] {
+            let mut rng = Rng::new(4);
+            let x = sample_sequence(&hmm, t_len, &mut rng);
+            let mut ans = Ans::new(7);
+            codec.encode_sequence(&mut ans, &x).unwrap();
+            used.push(ans.clean_bits_used());
+        }
+        assert!(used[1] > used[0]);
+        assert!(used[2] > used[1] * 4, "startup bits {used:?} should scale ~T");
+    }
+}

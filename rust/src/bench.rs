@@ -1,0 +1,141 @@
+//! Self-contained micro-benchmark harness (criterion is unavailable in
+//! this offline build). Used by every target under `rust/benches/`
+//! (`harness = false`).
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! duration and a minimum iteration count are reached; report mean ±
+//! stddev of per-iteration time plus derived throughput.
+
+use crate::util::timer::{fmt_duration, Stats};
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub stddev: Duration,
+    /// Optional user-supplied work units/iter (e.g. symbols) for rates.
+    pub units_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn units_per_sec(&self) -> f64 {
+        self.units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with fixed time/iteration budgets.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Budgets keep `cargo bench` minutes-scale across all targets; the
+        // BBANS_BENCH_FAST env var shrinks them for smoke runs.
+        let fast = std::env::var_os("BBANS_BENCH_FAST").is_some();
+        Self {
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs `units` work units per call.
+    pub fn run(&mut self, name: &str, units: f64, mut f: impl FnMut()) -> &Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut stats = Stats::new();
+        let m0 = Instant::now();
+        let mut iters = 0u64;
+        while m0.elapsed() < self.measure || iters < self.min_iters {
+            let t = Instant::now();
+            f();
+            stats.push(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(stats.mean()),
+            stddev: Duration::from_secs_f64(stats.stddev()),
+            units_per_iter: units,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter ± {:>10}  ({} iters{})",
+            m.name,
+            fmt_duration(m.mean),
+            fmt_duration(m.stddev),
+            m.iters,
+            if units > 0.0 {
+                format!(", {:.3e} units/s", m.units_per_sec())
+            } else {
+                String::new()
+            }
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Black-box to stop the optimizer deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header for a paper-table bench binary.
+pub fn table_header(title: &str) {
+    println!();
+    println!("================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("BBANS_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(1);
+        b.measure = Duration::from_millis(10);
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", 100.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.iters >= 3);
+        assert!(m.units_per_sec() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,413 @@
+//! Beta-binomial pixel codec (paper §3.2: the likelihood for full,
+//! non-binarized MNIST is a two-parameter discrete distribution per pixel).
+//!
+//! Two constructors:
+//! * [`BetaBinomial::from_params`] — analytic PMF from `(α, β)` via
+//!   `lgamma` (used by the native Rust backend and tests);
+//! * [`BetaBinomial::from_pmf_row`] — a precomputed PMF row, as produced by
+//!   the L1 Pallas kernel `bbpmf` inside the decoder HLO (the runtime path:
+//!   the network hands Rust a ready `[pixels, 256]` table).
+//!
+//! Encoder and decoder must build the codec from the **same source** — the
+//! container header records which backend produced the stream.
+
+use super::categorical::Categorical;
+use super::SymbolCodec;
+use crate::ans::Ans;
+use crate::util::math::beta_binomial_logpmf;
+
+#[derive(Debug, Clone)]
+pub struct BetaBinomial {
+    inner: Categorical,
+    pub n: u32,
+}
+
+impl BetaBinomial {
+    /// Analytic construction from the distribution parameters.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf #1): the PMF is built with the ratio
+    /// recurrence
+    /// `P(k+1)/P(k) = (n−k)(k+α) / ((k+1)(n−k−1+β))`
+    /// — one multiply/divide per symbol instead of four `lgamma` calls,
+    /// ~40× faster, then normalized (the quantizer renormalizes anyway).
+    /// One `lgamma`-based anchor at the mode keeps the scale in f64 range.
+    pub fn from_params(n: u32, alpha: f64, beta: f64, prec: u32) -> Self {
+        // Guard against non-finite network outputs: fall back to uniform.
+        let (alpha, beta) = if alpha.is_finite() && beta.is_finite() && alpha > 0.0 && beta > 0.0 {
+            (alpha, beta)
+        } else {
+            (1.0, 1.0)
+        };
+        let nn = n as f64;
+        let mut pmf = vec![0.0f64; n as usize + 1];
+        // Anchor at k=0 in log space, then recurse upward, renormalizing
+        // if the running value overflows/underflows is unnecessary since
+        // we anchor at the true log-pmf of k=0 and the pmf is bounded by 1.
+        let p0 = beta_binomial_logpmf(0, n, alpha, beta).exp();
+        let mut cur = p0;
+        pmf[0] = cur;
+        for k in 0..n as usize {
+            let kf = k as f64;
+            let ratio = ((nn - kf) * (kf + alpha)) / ((kf + 1.0) * (nn - kf - 1.0 + beta));
+            cur *= ratio;
+            pmf[k + 1] = cur;
+        }
+        // Degenerate parameter corners can underflow p0 to 0; fall back to
+        // the exact (slow) path there.
+        if !cur.is_finite() || pmf.iter().all(|&p| p == 0.0) {
+            pmf = (0..=n)
+                .map(|k| beta_binomial_logpmf(k, n, alpha, beta).exp())
+                .collect();
+        }
+        Self {
+            inner: Categorical::from_pmf(&pmf, prec),
+            n,
+        }
+    }
+
+    /// Construction from a PMF row computed inside the model graph (f32).
+    pub fn from_pmf_row(row: &[f32], prec: u32) -> Self {
+        let n = (row.len() - 1) as u32;
+        let pmf: Vec<f64> = row
+            .iter()
+            .map(|&p| {
+                let p = p as f64;
+                if p.is_finite() && p > 0.0 {
+                    p
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        // A fully-zero row (pathological network output) degrades to
+        // uniform rather than panicking.
+        let total: f64 = pmf.iter().sum();
+        let pmf = if total > 0.0 { pmf } else { vec![1.0; row.len()] };
+        Self {
+            inner: Categorical::from_pmf(&pmf, prec),
+            n,
+        }
+    }
+
+    pub fn bits(&self, sym: usize) -> f64 {
+        self.inner.bits(sym)
+    }
+}
+
+impl SymbolCodec for BetaBinomial {
+    type Sym = u32;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: u32) {
+        debug_assert!(sym <= self.n);
+        self.inner.push(ans, sym as usize);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> u32 {
+        self.inner.pop(ans) as u32
+    }
+}
+
+/// Lazy beta-binomial codec (EXPERIMENTS.md §Perf #3): computes only the
+/// cumulative masses it needs via the PMF ratio recurrence — `O(sym)` work
+/// per push/pop instead of building and quantizing the whole 256-entry
+/// table. On MNIST most pixels are 0, so the common case is O(1).
+///
+/// Quantization uses the same strictly-monotone map as
+/// [`super::quantize::QuantizedCdf`] (`G(j) = round(cum_j·scale) + j`) and
+/// agrees with `from_params` in practice, but the floating-point paths
+/// differ (unnormalized vs normalized anchor), so a stream must use ONE
+/// construction for both encode and decode. `VaeCodec` uses `Direct`
+/// exclusively for the analytic (native-backend) path.
+#[derive(Debug, Clone, Copy)]
+pub struct BetaBinomialDirect {
+    pub n: u32,
+    pub prec: u32,
+    alpha: f64,
+    beta: f64,
+    /// (2^prec − (n+1)) / Σ unnormalized pmf.
+    scale: f64,
+}
+
+impl BetaBinomialDirect {
+    pub fn new(n: u32, alpha: f64, beta: f64, prec: u32) -> Self {
+        // Same guard as from_params; additionally clamp to a range where
+        // the unnormalized recurrence (anchored at p(0) = 1) cannot
+        // overflow f64.
+        let (alpha, beta) = if alpha.is_finite() && beta.is_finite() && alpha > 0.0 && beta > 0.0 {
+            (alpha.clamp(1e-4, 200.0), beta.clamp(1e-4, 200.0))
+        } else {
+            (1.0, 1.0)
+        };
+        let nn = n as f64;
+        let mut total = 1.0f64; // p(0) anchored at 1
+        let mut cur = 1.0f64;
+        for k in 0..n as usize {
+            let kf = k as f64;
+            cur *= ((nn - kf) * (kf + alpha)) / ((kf + 1.0) * (nn - kf - 1.0 + beta));
+            total += cur;
+        }
+        let m = 1u64 << prec;
+        let scale = (m - (n as u64 + 1)) as f64 / total;
+        Self {
+            n,
+            prec,
+            alpha,
+            beta,
+            scale,
+        }
+    }
+
+    /// `(start, freq)` of `sym`, walking the recurrence up to `sym + 1`.
+    #[inline]
+    pub fn interval(&self, sym: u32) -> (u32, u32) {
+        let nn = self.n as f64;
+        let m = 1u64 << self.prec;
+        let mut cur = 1.0f64;
+        let mut acc = 0.0f64;
+        let mut g_prev = 0u64; // G(sym)
+        for k in 0..=sym as usize {
+            acc += cur;
+            let g = if k as u32 == self.n {
+                m
+            } else {
+                (acc * self.scale).round() as u64 + k as u64 + 1
+            };
+            if (k as u32) < sym {
+                g_prev = g;
+            } else {
+                return (g_prev as u32, (g - g_prev) as u32);
+            }
+            let kf = k as f64;
+            cur *= ((nn - kf) * (kf + self.alpha)) / ((kf + 1.0) * (nn - kf - 1.0 + self.beta));
+        }
+        unreachable!()
+    }
+
+    /// Find `(sym, start, freq)` containing `cf`, walking upward.
+    #[inline]
+    pub fn lookup(&self, cf: u32) -> (u32, u32, u32) {
+        let nn = self.n as f64;
+        let m = 1u64 << self.prec;
+        let cf = cf as u64;
+        let mut cur = 1.0f64;
+        let mut acc = 0.0f64;
+        let mut g_prev = 0u64;
+        for k in 0..=self.n as usize {
+            acc += cur;
+            let g = if k as u32 == self.n {
+                m
+            } else {
+                (acc * self.scale).round() as u64 + k as u64 + 1
+            };
+            if cf < g {
+                return (k as u32, g_prev as u32, (g - g_prev) as u32);
+            }
+            g_prev = g;
+            let kf = k as f64;
+            cur *= ((nn - kf) * (kf + self.alpha)) / ((kf + 1.0) * (nn - kf - 1.0 + self.beta));
+        }
+        unreachable!("cf {cf} out of range")
+    }
+}
+
+impl SymbolCodec for BetaBinomialDirect {
+    type Sym = u32;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: u32) {
+        debug_assert!(sym <= self.n);
+        let (start, freq) = self.interval(sym);
+        ans.push(start, freq, self.prec);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> u32 {
+        ans.pop_with(self.prec, |cf| {
+            let (sym, start, freq) = self.lookup(cf);
+            (sym, start, freq)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::measure_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_params() {
+        let mut rng = Rng::new(12);
+        let mut ans = Ans::new(0);
+        let mut trace = Vec::new();
+        for _ in 0..300 {
+            let a = 0.2 + rng.f64() * 20.0;
+            let b = 0.2 + rng.f64() * 20.0;
+            let c = BetaBinomial::from_params(255, a, b, 18);
+            let s = rng.below(256) as u32;
+            c.push(&mut ans, s);
+            trace.push((c, s));
+        }
+        for (c, s) in trace.iter().rev() {
+            assert_eq!(c.pop(&mut ans), *s);
+        }
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn pmf_row_matches_params_construction() {
+        // An f32 PMF row computed from the same (alpha, beta) should yield
+        // a nearly identical codec (same quantization pipeline).
+        let (a, b) = (3.5, 1.2);
+        let row: Vec<f32> = (0..=255u32)
+            .map(|k| beta_binomial_logpmf(k, 255, a, b).exp() as f32)
+            .collect();
+        let c1 = BetaBinomial::from_params(255, a, b, 16);
+        let c2 = BetaBinomial::from_pmf_row(&row, 16);
+        // Compare implied code lengths on a few symbols (f32 rounding can
+        // shift interval boundaries by a mass unit or two).
+        for s in [0usize, 1, 17, 128, 200, 255] {
+            assert!(
+                (c1.bits(s) - c2.bits(s)).abs() < 0.02,
+                "sym {s}: {} vs {}",
+                c1.bits(s),
+                c2.bits(s)
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_fall_back_to_uniform() {
+        for (a, b) in [(f64::NAN, 1.0), (0.0, 2.0), (f64::INFINITY, 1.0)] {
+            let c = BetaBinomial::from_params(255, a, b, 16);
+            let mut ans = Ans::new(0);
+            c.push(&mut ans, 255);
+            assert_eq!(c.pop(&mut ans), 255);
+        }
+        let zero_row = vec![0.0f32; 256];
+        let c = BetaBinomial::from_pmf_row(&zero_row, 16);
+        let mut ans = Ans::new(0);
+        c.push(&mut ans, 7);
+        assert_eq!(c.pop(&mut ans), 7);
+    }
+
+    #[test]
+    fn rate_matches_model_entropy() {
+        // Code symbols sampled from BetaBin(255, 2, 5); rate ≈ entropy.
+        let (a, b) = (2.0, 5.0);
+        let pmf: Vec<f64> = (0..=255u32)
+            .map(|k| beta_binomial_logpmf(k, 255, a, b).exp())
+            .collect();
+        let entropy: f64 = pmf.iter().filter(|&&p| p > 0.0).map(|p| -p * p.log2()).sum();
+        // Inverse-CDF sampling.
+        let mut rng = Rng::new(9);
+        let cdf: Vec<f64> = pmf
+            .iter()
+            .scan(0.0, |acc, p| {
+                *acc += p;
+                Some(*acc)
+            })
+            .collect();
+        let n = 20_000;
+        let syms: Vec<u32> = (0..n)
+            .map(|_| {
+                let u = rng.f64();
+                cdf.partition_point(|&c| c < u).min(255) as u32
+            })
+            .collect();
+        let c = BetaBinomial::from_params(255, a, b, 18);
+        let mut ans = Ans::new(0);
+        let bits = measure_bits(&mut ans, |ans| {
+            for &s in &syms {
+                c.push(ans, s);
+            }
+        });
+        let rate = bits / n as f64;
+        assert!(
+            (rate - entropy).abs() < 0.02 * entropy + 0.02,
+            "rate={rate} entropy={entropy}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod direct_tests {
+    use super::*;
+    use crate::codecs::measure_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn direct_roundtrip_and_near_table_rate() {
+        let mut rng = Rng::new(44);
+        let mut ans = Ans::new(0);
+        let mut trace = Vec::new();
+        for _ in 0..300 {
+            let a = 0.2 + rng.f64() * 20.0;
+            let b = 0.2 + rng.f64() * 20.0;
+            let c = BetaBinomialDirect::new(255, a, b, 18);
+            let s = rng.below(256) as u32;
+            c.push(&mut ans, s);
+            trace.push((c, s));
+        }
+        for (c, s) in trace.iter().rev() {
+            assert_eq!(c.pop(&mut ans), *s);
+        }
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn direct_intervals_cover_full_mass() {
+        let c = BetaBinomialDirect::new(255, 3.1, 0.7, 16);
+        let mut pos = 0u32;
+        for s in 0..=255u32 {
+            let (start, freq) = c.interval(s);
+            assert_eq!(start, pos, "intervals must tile");
+            assert!(freq >= 1);
+            pos = start + freq;
+        }
+        assert_eq!(pos as u64, 1u64 << 16);
+        // lookup inverts interval at every boundary.
+        for s in [0u32, 1, 17, 100, 254, 255] {
+            let (start, freq) = c.interval(s);
+            assert_eq!(c.lookup(start).0, s);
+            assert_eq!(c.lookup(start + freq - 1).0, s);
+        }
+    }
+
+    #[test]
+    fn direct_rate_close_to_from_params() {
+        let (a, b) = (2.0, 5.0);
+        let direct = BetaBinomialDirect::new(255, a, b, 18);
+        let table = BetaBinomial::from_params(255, a, b, 18);
+        let mut rng = Rng::new(45);
+        let syms: Vec<u32> = (0..2000).map(|_| rng.below(80) as u32).collect();
+        let mut ans1 = Ans::new(0);
+        let bits_direct = measure_bits(&mut ans1, |ans| {
+            for &s in &syms {
+                direct.push(ans, s);
+            }
+        });
+        let mut ans2 = Ans::new(0);
+        let bits_table = measure_bits(&mut ans2, |ans| {
+            for &s in &syms {
+                table.push(ans, s);
+            }
+        });
+        assert!(
+            (bits_direct - bits_table).abs() / bits_table < 0.001,
+            "direct {bits_direct} vs table {bits_table}"
+        );
+    }
+
+    #[test]
+    fn direct_degenerate_params_fall_back_to_uniform() {
+        for (a, b) in [(f64::NAN, 1.0), (0.0, 2.0), (f64::INFINITY, 1.0)] {
+            let c = BetaBinomialDirect::new(255, a, b, 16);
+            let mut ans = Ans::new(0);
+            c.push(&mut ans, 255);
+            assert_eq!(c.pop(&mut ans), 255);
+        }
+    }
+}

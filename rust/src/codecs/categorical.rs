@@ -1,0 +1,250 @@
+//! Categorical codec over an explicit (quantized) PMF.
+//!
+//! The workhorse for likelihood coding: per-pixel Bernoulli and
+//! beta-binomial codecs both reduce to a categorical over the pixel
+//! alphabet with a deterministic quantization of the model's PMF.
+
+use super::quantize::QuantizedCdf;
+use super::SymbolCodec;
+use crate::ans::Ans;
+
+#[derive(Debug, Clone)]
+pub struct Categorical {
+    q: QuantizedCdf,
+}
+
+impl Categorical {
+    pub fn from_pmf(pmf: &[f64], prec: u32) -> Self {
+        Self {
+            q: QuantizedCdf::from_pmf(pmf, prec),
+        }
+    }
+
+    pub fn from_quantized(q: QuantizedCdf) -> Self {
+        Self { q }
+    }
+
+    /// Bernoulli over {0, 1} with P(1) = p.
+    pub fn bernoulli(p: f64, prec: u32) -> Self {
+        // Clamp away from degenerate endpoints; quantization keeps both
+        // symbols codable regardless, but a NaN would poison the pmf.
+        let p = if p.is_nan() { 0.5 } else { p.clamp(0.0, 1.0) };
+        Self::from_pmf(&[1.0 - p, p], prec)
+    }
+
+    pub fn quantized(&self) -> &QuantizedCdf {
+        &self.q
+    }
+
+    /// Ideal code length (bits) of `sym` under the quantized distribution.
+    pub fn bits(&self, sym: usize) -> f64 {
+        -self.q.prob(sym).log2()
+    }
+}
+
+impl SymbolCodec for Categorical {
+    type Sym = usize;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: usize) {
+        ans.push(self.q.start(sym), self.q.freq(sym), self.q.prec);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> usize {
+        ans.pop_with(self.q.prec, |cf| {
+            let s = self.q.lookup(cf);
+            (s, self.q.start(s), self.q.freq(s))
+        })
+    }
+}
+
+/// Allocation-free Bernoulli codec (EXPERIMENTS.md §Perf #5).
+///
+/// Replicates [`Categorical::bernoulli`]'s quantization arithmetic
+/// *operation-for-operation* (same `(1-p) + p` total, same rounding), so
+/// the two produce bit-identical intervals — verified by test — while
+/// skipping the two heap allocations per pixel.
+#[derive(Debug, Clone, Copy)]
+pub struct Bernoulli {
+    /// Quantized boundary: interval of 0 is `[0, g1)`, of 1 `[g1, 2^prec)`.
+    g1: u32,
+    prec: u32,
+}
+
+impl Bernoulli {
+    #[inline]
+    pub fn new(p: f64, prec: u32) -> Self {
+        let p = if p.is_nan() { 0.5 } else { p.clamp(0.0, 1.0) };
+        // Mirror QuantizedCdf::from_pmf(&[1-p, p], prec) exactly.
+        let m = 1u64 << prec;
+        let p0 = 1.0 - p;
+        let total = p0 + p;
+        let scale = (m - 2) as f64 / total;
+        let g1 = (p0 * scale).round() as u64 + 1;
+        Self {
+            g1: g1.min(m) as u32,
+            prec,
+        }
+    }
+
+    #[inline]
+    pub fn interval(&self, sym: usize) -> (u32, u32) {
+        let m = (1u64 << self.prec) as u32;
+        if sym == 0 {
+            (0, self.g1)
+        } else {
+            (self.g1, m - self.g1)
+        }
+    }
+}
+
+impl SymbolCodec for Bernoulli {
+    type Sym = usize;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: usize) {
+        let (start, freq) = self.interval(sym);
+        ans.push(start, freq, self.prec);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> usize {
+        ans.pop_with(self.prec, |cf| {
+            let sym = (cf >= self.g1) as usize;
+            let (start, freq) = self.interval(sym);
+            (sym, start, freq)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::measure_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_random_pmfs() {
+        let mut rng = Rng::new(3);
+        for trial in 0..20 {
+            let k = 2 + rng.below(300) as usize;
+            let pmf: Vec<f64> = (0..k).map(|_| rng.f64() + 1e-9).collect();
+            let c = Categorical::from_pmf(&pmf, 18);
+            let syms: Vec<usize> = (0..500).map(|_| rng.below(k as u64) as usize).collect();
+            let mut ans = Ans::new(trial);
+            for &s in &syms {
+                c.push(&mut ans, s);
+            }
+            for &s in syms.iter().rev() {
+                assert_eq!(c.pop(&mut ans), s);
+            }
+            assert!(ans.is_empty());
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate_matches_entropy() {
+        for p in [0.01, 0.2, 0.5, 0.9, 0.999] {
+            let c = Categorical::bernoulli(p, 16);
+            let mut rng = Rng::new(4);
+            let n = 20_000;
+            let syms: Vec<usize> = (0..n).map(|_| (rng.f64() < p) as usize).collect();
+            let mut ans = Ans::new(0);
+            let bits = measure_bits(&mut ans, |a| {
+                for &s in &syms {
+                    c.push(a, s);
+                }
+            });
+            let h: f64 = -(p * p.log2() + (1.0 - p) * (1.0 - p).log2());
+            let rate = bits / n as f64;
+            // within 2% + small constant (sampling noise + quantization)
+            assert!(
+                (rate - h).abs() < 0.02 * h + 0.01,
+                "p={p} rate={rate} entropy={h}"
+            );
+        }
+    }
+
+    #[test]
+    fn bernoulli_handles_degenerate_p() {
+        for p in [0.0, 1.0, f64::NAN] {
+            let c = Categorical::bernoulli(p, 16);
+            let mut ans = Ans::new(0);
+            // Both symbols must be codable even at degenerate p.
+            c.push(&mut ans, 0);
+            c.push(&mut ans, 1);
+            assert_eq!(c.pop(&mut ans), 1);
+            assert_eq!(c.pop(&mut ans), 0);
+        }
+    }
+
+    #[test]
+    fn fast_bernoulli_bit_identical_to_categorical() {
+        // The fast path must replicate Categorical::bernoulli exactly so
+        // they can be mixed within one stream.
+        let mut rng = Rng::new(91);
+        for _ in 0..2000 {
+            let p = rng.f64();
+            for prec in [12u32, 16, 20] {
+                let fast = Bernoulli::new(p, prec);
+                let slow = Categorical::bernoulli(p, prec);
+                for sym in 0..2 {
+                    let (fs, ff) = fast.interval(sym);
+                    assert_eq!(
+                        (fs, ff),
+                        (slow.q.start(sym), slow.q.freq(sym)),
+                        "p={p} prec={prec} sym={sym}"
+                    );
+                }
+            }
+        }
+        // Degenerate values too.
+        for p in [0.0, 1.0, f64::NAN] {
+            let fast = Bernoulli::new(p, 16);
+            let slow = Categorical::bernoulli(p, 16);
+            for sym in 0..2 {
+                assert_eq!(
+                    fast.interval(sym),
+                    (slow.q.start(sym), slow.q.freq(sym))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_bernoulli_roundtrip() {
+        let mut rng = Rng::new(92);
+        let mut ans = Ans::new(0);
+        let mut trace = Vec::new();
+        for _ in 0..5000 {
+            let c = Bernoulli::new(rng.f64(), 16);
+            let s = (rng.f64() < 0.5) as usize;
+            c.push(&mut ans, s);
+            trace.push((c, s));
+        }
+        for (c, s) in trace.iter().rev() {
+            assert_eq!(c.pop(&mut ans), *s);
+        }
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn skewed_symbols_cost_expected_bits() {
+        let c = Categorical::from_pmf(&[0.75, 0.25], 16);
+        let mut ans = Ans::new(0);
+        // Push many to average out renormalization granularity.
+        let bits0 = measure_bits(&mut ans, |a| {
+            for _ in 0..10_000 {
+                c.push(a, 0);
+            }
+        });
+        assert!((bits0 / 10_000.0 - 0.415).abs() < 0.01, "{}", bits0 / 10_000.0);
+        let bits1 = measure_bits(&mut ans, |a| {
+            for _ in 0..10_000 {
+                c.push(a, 1);
+            }
+        });
+        assert!((bits1 / 10_000.0 - 2.0).abs() < 0.01, "{}", bits1 / 10_000.0);
+    }
+}

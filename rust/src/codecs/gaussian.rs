@@ -1,0 +1,380 @@
+//! Discretized Gaussian codecs over the prior's max-entropy buckets.
+//!
+//! The latent space is partitioned into `N = 2^latent_bits` buckets of
+//! equal mass under the standard Gaussian prior (paper §2.5.1, Appendix B):
+//! bucket `i` spans `(probit(i/N), probit((i+1)/N))` with centre
+//! `probit((i+0.5)/N)`.
+//!
+//! * Coding a latent **under the prior** is then exactly uniform —
+//!   [`crate::codecs::uniform::Uniform`] with `latent_bits` bits.
+//! * Coding **under the diagonal-Gaussian posterior** `N(μ, σ²)` uses this
+//!   module: the posterior mass of bucket `i` is
+//!   `Φ((e_{i+1}−μ)/σ) − Φ((e_i−μ)/σ)`, quantized with the strictly
+//!   monotone map `G(i) = round(F(i)·(M−N)) + i` so every bucket stays
+//!   codable no matter how sharp the posterior is.
+//!
+//! `G` is evaluated **lazily** (no 2^latent_bits tables): a push evaluates
+//! two CDF points; a pop bisects on `G`, costing `O(latent_bits)` CDF
+//! evaluations. This keeps 16-bit latents cheap — the paper notes gains
+//! saturate by 16 bits/dim (§2.5.1), which `benches/ablations.rs` sweeps.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::SymbolCodec;
+use crate::ans::Ans;
+use crate::util::math::{phi, probit};
+
+/// Precomputed probit tables for one `latent_bits` (EXPERIMENTS.md §Perf
+/// #2: edges are shared by every latent dim of every image, so they are
+/// computed once per process and per bucket count).
+#[derive(Debug)]
+struct BucketTable {
+    /// `edges[i]` = left edge of bucket i; length N+1 with ±∞ at the ends.
+    edges: Vec<f64>,
+    /// `centres[i]` = prior median of bucket i; length N.
+    centres: Vec<f64>,
+}
+
+fn bucket_table(latent_bits: u32) -> Arc<BucketTable> {
+    static CACHE: OnceLock<Mutex<HashMap<u32, Arc<BucketTable>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().unwrap();
+    guard
+        .entry(latent_bits)
+        .or_insert_with(|| {
+            let n = 1u32 << latent_bits;
+            let mut edges = Vec::with_capacity(n as usize + 1);
+            edges.push(f64::NEG_INFINITY);
+            for i in 1..n {
+                edges.push(probit(i as f64 / n as f64));
+            }
+            edges.push(f64::INFINITY);
+            let centres = (0..n)
+                .map(|i| probit((i as f64 + 0.5) / n as f64))
+                .collect();
+            Arc::new(BucketTable { edges, centres })
+        })
+        .clone()
+}
+
+/// Bucket geometry shared by prior and posterior: equal-prior-mass buckets.
+///
+/// Cheap to clone (shares the process-wide probit table). Tables are
+/// cached for `latent_bits <= 16` (≤ 0.5 MiB); larger configurations
+/// compute probits on demand.
+#[derive(Debug, Clone)]
+pub struct MaxEntropyBuckets {
+    pub latent_bits: u32,
+    table: Option<Arc<BucketTable>>,
+}
+
+impl PartialEq for MaxEntropyBuckets {
+    fn eq(&self, other: &Self) -> bool {
+        self.latent_bits == other.latent_bits
+    }
+}
+
+impl MaxEntropyBuckets {
+    pub fn new(latent_bits: u32) -> Self {
+        assert!((1..=24).contains(&latent_bits));
+        let table = (latent_bits <= 16).then(|| bucket_table(latent_bits));
+        Self { latent_bits, table }
+    }
+
+    #[inline]
+    pub fn num_buckets(&self) -> u32 {
+        1 << self.latent_bits
+    }
+
+    /// Left edge of bucket `i` (−∞ for i = 0).
+    #[inline]
+    pub fn edge(&self, i: u32) -> f64 {
+        let n = self.num_buckets();
+        debug_assert!(i <= n);
+        if let Some(t) = &self.table {
+            return t.edges[i as usize];
+        }
+        if i == 0 {
+            f64::NEG_INFINITY
+        } else if i == n {
+            f64::INFINITY
+        } else {
+            probit(i as f64 / n as f64)
+        }
+    }
+
+    /// Centre (prior median) of bucket `i` — the value the decoder feeds to
+    /// the generative network.
+    #[inline]
+    pub fn centre(&self, i: u32) -> f64 {
+        let n = self.num_buckets();
+        debug_assert!(i < n);
+        if let Some(t) = &self.table {
+            return t.centres[i as usize];
+        }
+        probit((i as f64 + 0.5) / n as f64)
+    }
+
+    /// Bucket containing latent value `y` (for encoding real samples).
+    pub fn bucket_of(&self, y: f64) -> u32 {
+        let n = self.num_buckets();
+        let p = phi(y);
+        // p in (0,1); floor(p*n) clamped to valid range.
+        ((p * n as f64) as i64).clamp(0, n as i64 - 1) as u32
+    }
+}
+
+/// Codec for a latent dimension under the posterior `N(μ, σ²)`, over the
+/// prior's max-entropy buckets.
+#[derive(Debug, Clone)]
+pub struct DiscretizedGaussian {
+    pub buckets: MaxEntropyBuckets,
+    pub mu: f64,
+    pub sigma: f64,
+    /// Coding precision (mass = 2^prec). Must satisfy prec > latent_bits.
+    pub prec: u32,
+}
+
+impl DiscretizedGaussian {
+    pub fn new(buckets: MaxEntropyBuckets, mu: f64, sigma: f64, prec: u32) -> Self {
+        assert!(prec <= crate::ans::MAX_PREC);
+        assert!(
+            prec > buckets.latent_bits,
+            "precision {prec} must exceed latent_bits {} for nonzero freqs",
+            buckets.latent_bits
+        );
+        assert!(sigma > 0.0 && sigma.is_finite(), "bad sigma {sigma}");
+        assert!(mu.is_finite(), "bad mu {mu}");
+        Self {
+            buckets,
+            mu,
+            sigma,
+            prec,
+        }
+    }
+
+    /// Posterior CDF at the left edge of bucket `i`.
+    #[inline]
+    fn cdf(&self, i: u32) -> f64 {
+        let e = self.buckets.edge(i);
+        if e == f64::NEG_INFINITY {
+            0.0
+        } else if e == f64::INFINITY {
+            1.0
+        } else {
+            phi((e - self.mu) / self.sigma)
+        }
+    }
+
+    /// Strictly monotone quantized CDF `G(i)`; `G(0) = 0`, `G(N) = 2^prec`.
+    #[inline]
+    pub fn g(&self, i: u32) -> u64 {
+        let n = self.buckets.num_buckets() as u64;
+        let m = 1u64 << self.prec;
+        if i == 0 {
+            0
+        } else if i as u64 == n {
+            m
+        } else {
+            (self.cdf(i) * (m - n) as f64).round() as u64 + i as u64
+        }
+    }
+
+    /// Interval of bucket `i`: `(start, freq)` out of `2^prec`.
+    #[inline]
+    pub fn interval(&self, i: u32) -> (u32, u32) {
+        let lo = self.g(i);
+        let hi = self.g(i + 1);
+        debug_assert!(hi > lo);
+        (lo as u32, (hi - lo) as u32)
+    }
+
+    /// Find the bucket whose interval contains `cf` by bisection on `G`.
+    #[inline]
+    pub fn bucket_for_cf(&self, cf: u32) -> u32 {
+        let mut lo = 0u32; // G(lo) <= cf
+        let mut hi = self.buckets.num_buckets(); // G(hi) > cf
+        let cf = cf as u64;
+        debug_assert!(self.g(hi) > cf);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.g(mid) <= cf {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+impl SymbolCodec for DiscretizedGaussian {
+    type Sym = u32;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: u32) {
+        let (start, freq) = self.interval(sym);
+        ans.push(start, freq, self.prec);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> u32 {
+        ans.pop_with(self.prec, |cf| {
+            let i = self.bucket_for_cf(cf);
+            let (start, freq) = self.interval(i);
+            (i, start, freq)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::measure_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_geometry_is_consistent() {
+        let b = MaxEntropyBuckets::new(8);
+        assert_eq!(b.num_buckets(), 256);
+        // Edges are increasing; centres sit inside their bucket.
+        for i in 0..256u32 {
+            let l = b.edge(i);
+            let r = b.edge(i + 1);
+            let c = b.centre(i);
+            assert!(l < c && c < r, "bucket {i}: {l} {c} {r}");
+            assert_eq!(b.bucket_of(c), i);
+        }
+        // Symmetric around zero.
+        assert!((b.centre(127) + b.centre(128)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn g_is_strictly_monotone_even_for_sharp_posteriors() {
+        let b = MaxEntropyBuckets::new(12);
+        for (mu, sigma) in [(0.0, 1.0), (3.0, 0.01), (-7.5, 1e-6), (0.2, 50.0)] {
+            let d = DiscretizedGaussian::new(b.clone(), mu, sigma, 24);
+            let mut prev = d.g(0);
+            assert_eq!(prev, 0);
+            // Sample a subset of buckets plus the ends (full sweep is slow).
+            let n = b.num_buckets();
+            for i in 1..=n {
+                if i < 64 || i > n - 64 || i % 61 == 0 || i == n {
+                    let cur = d.g(i);
+                    assert!(cur > prev, "G not strict at {i} (mu={mu}, sigma={sigma})");
+                    prev = cur;
+                }
+            }
+            assert_eq!(d.g(n), 1 << 24);
+        }
+    }
+
+    #[test]
+    fn roundtrip_various_posteriors() {
+        let b = MaxEntropyBuckets::new(12);
+        let mut rng = Rng::new(6);
+        let mut ans = Ans::new(0);
+        let mut pushed = Vec::new();
+        for _ in 0..2000 {
+            let mu = rng.normal() * 2.0;
+            let sigma = 0.05 + rng.f64() * 2.0;
+            let d = DiscretizedGaussian::new(b.clone(), mu, sigma, 24);
+            let sym = rng.below(b.num_buckets() as u64) as u32;
+            d.push(&mut ans, sym);
+            pushed.push((d, sym));
+        }
+        for (d, sym) in pushed.iter().rev() {
+            assert_eq!(d.pop(&mut ans), *sym);
+        }
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn pop_samples_from_posterior() {
+        // Sampling via pop on an empty stack should concentrate near mu.
+        let b = MaxEntropyBuckets::new(12);
+        let d = DiscretizedGaussian::new(b.clone(), 1.0, 0.1, 24);
+        let mut ans = Ans::new(11);
+        let n = 5000;
+        let samples: Vec<f64> = (0..n).map(|_| b.centre(d.pop(&mut ans))).collect();
+        // The quantization floor (1 mass unit per bucket, DESIGN.md §6)
+        // gives the sampling distribution a faint heavy tail (~N/M of the
+        // mass spread over all buckets), so estimate moments on the
+        // 5-sigma-trimmed bulk.
+        let bulk: Vec<f64> = samples
+            .iter()
+            .copied()
+            .filter(|s| (s - 1.0).abs() < 0.5)
+            .collect();
+        assert!(bulk.len() as f64 > 0.998 * n as f64, "too many outliers");
+        let mean = bulk.iter().sum::<f64>() / bulk.len() as f64;
+        let var =
+            bulk.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / bulk.len() as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        assert!((var.sqrt() - 0.1).abs() < 0.01, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn bitsback_identity_posterior_then_prior() {
+        // The BB-ANS inner step for one latent dim: pop from posterior,
+        // push to (uniform) prior; net bits = log(q/p) on average, and the
+        // whole thing must invert exactly.
+        use crate::codecs::uniform::Uniform;
+        let b = MaxEntropyBuckets::new(12);
+        let prior = Uniform::new(12);
+        let mut ans = Ans::new(17);
+        let mut trace = Vec::new();
+        for k in 0..500 {
+            let d = DiscretizedGaussian::new(b.clone(), (k % 7) as f64 - 3.0, 0.2 + (k % 5) as f64 * 0.3, 24);
+            let y = d.pop(&mut ans); // sample posterior (consumes bits)
+            prior.push(&mut ans, y); // encode under prior (adds bits)
+            trace.push((d, y));
+        }
+        // Invert: pop prior, push posterior.
+        for (d, y) in trace.iter().rev() {
+            let got = prior.pop(&mut ans);
+            assert_eq!(got, *y);
+            d.push(&mut ans, *y);
+        }
+        // After perfect inversion the coder is back to pristine state
+        // except the clean words it borrowed are now explicit stream words.
+        assert_eq!(ans.stream_len() as u64, ans.clean_words_used());
+    }
+
+    #[test]
+    fn kl_cost_matches_theory() {
+        // Net cost of (pop posterior, push prior) per dim ≈ KL(q || p_disc)
+        // = E_q[log q(i)] + latent_bits.
+        let b = MaxEntropyBuckets::new(10);
+        let d = DiscretizedGaussian::new(b.clone(), 0.7, 0.3, 24);
+        let mut ans = Ans::new(23);
+        let prior = Uniform::new(10);
+        use crate::codecs::uniform::Uniform;
+        let n = 4000;
+        let bits = measure_bits(&mut ans, |a| {
+            for _ in 0..n {
+                let y = d.pop(a);
+                prior.push(a, y);
+            }
+        });
+        // Analytic KL between the quantized posterior and uniform prior.
+        let m = 1u64 << 24;
+        let kl: f64 = (0..b.num_buckets())
+            .map(|i| {
+                let (_, f) = d.interval(i);
+                let q = f as f64 / m as f64;
+                if q > 0.0 {
+                    q * (q.log2() + 10.0)
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        let rate = bits / n as f64;
+        assert!(
+            (rate - kl).abs() < 0.05 * kl.abs().max(0.2),
+            "rate={rate} kl={kl}"
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! Distribution codecs: map model distributions onto quantized symbol
+//! intervals that the [`crate::ans::Ans`] coder can push/pop.
+//!
+//! Every codec here is **deterministic**: given the same distribution
+//! parameters it always produces the same quantized intervals, which is the
+//! property BB-ANS needs for the encoder and decoder to stay in lockstep
+//! (paper §2.4; DESIGN.md §6).
+
+pub mod beta_binomial;
+pub mod categorical;
+pub mod gaussian;
+pub mod quantize;
+pub mod uniform;
+
+use crate::ans::Ans;
+
+/// A codec that can encode symbols onto / decode symbols from an ANS stack.
+///
+/// `push` and `pop` must be exact inverses: `pop(push(ans, s)) == s` with
+/// the ANS state restored along the way.
+pub trait SymbolCodec {
+    type Sym;
+
+    /// Encode `sym` onto the stack.
+    fn push(&self, ans: &mut Ans, sym: Self::Sym);
+
+    /// Decode a symbol from the stack (or sample it, if the stack runs into
+    /// its clean-bit supply).
+    fn pop(&self, ans: &mut Ans) -> Self::Sym;
+}
+
+/// Bits added to the message by running `f` against `ans` (negative if
+/// `f` net-pops). Clean-bit draws are subtracted: treating the clean
+/// supply as virtual pre-existing stack content makes a pop of a
+/// probability-`q` symbol cost exactly `log q` (negative) regardless of
+/// where its randomness came from.
+pub fn measure_bits(ans: &mut Ans, f: impl FnOnce(&mut Ans)) -> f64 {
+    let before = ans.frac_bit_len() - 32.0 * ans.clean_words_used() as f64;
+    f(ans);
+    let after = ans.frac_bit_len() - 32.0 * ans.clean_words_used() as f64;
+    after - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::uniform::Uniform;
+    use super::*;
+
+    #[test]
+    fn measure_bits_uniform_push() {
+        let mut ans = Ans::new(0);
+        let c = Uniform::new(8);
+        let bits = measure_bits(&mut ans, |a| {
+            for s in 0..100u32 {
+                c.push(a, s % 256);
+            }
+        });
+        assert!((bits - 800.0).abs() < 1.0, "bits={bits}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Deterministic PMF/CDF quantization.
+//!
+//! ANS codes with integer frequencies summing to `2^prec`. Mapping a real
+//! distribution onto such frequencies must (a) give every symbol a nonzero
+//! frequency (a zero-frequency symbol would be unencodable — catastrophic
+//! for lossless coding), (b) be exactly reproducible on the decoder, and
+//! (c) waste as little rate as possible.
+//!
+//! We use the strictly-monotone CDF map (DESIGN.md §6):
+//!
+//! ```text
+//! G(i) = round(F(i) · (M − K)) + i,   G(0) = 0, G(K) = M = 2^prec
+//! ```
+//!
+//! where `F` is the real CDF over `K` symbols. `G` is strictly increasing,
+//! so `freq(i) = G(i+1) − G(i) ≥ 1` always; the redundancy is at most
+//! `log(M / (M − K))` bits per symbol — negligible for `K ≪ M`.
+
+/// Quantized distribution over `0..K` with total mass `2^prec`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantizedCdf {
+    /// Cumulative bounds; length K+1, `cdf[0] = 0`, `cdf[K] = 2^prec`.
+    pub cdf: Vec<u32>,
+    pub prec: u32,
+}
+
+impl QuantizedCdf {
+    /// Quantize a PMF (need not be normalized; must be non-negative with a
+    /// positive sum and finite entries).
+    pub fn from_pmf(pmf: &[f64], prec: u32) -> Self {
+        let k = pmf.len();
+        assert!(k >= 1, "empty pmf");
+        let m = 1u64 << prec;
+        assert!(
+            (k as u64) < m,
+            "pmf has {k} symbols but precision {prec} provides only {m} mass units"
+        );
+        let total: f64 = pmf.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "pmf must have positive finite mass (total={total})"
+        );
+        let scale = (m - k as u64) as f64 / total;
+        let mut cdf = Vec::with_capacity(k + 1);
+        cdf.push(0u32);
+        let mut acc = 0.0f64;
+        for (i, &p) in pmf.iter().enumerate() {
+            debug_assert!(p >= 0.0, "negative pmf entry {p}");
+            acc += p;
+            let g = if i + 1 == k {
+                m
+            } else {
+                (acc * scale).round() as u64 + (i as u64 + 1)
+            };
+            cdf.push(g.min(m) as u32);
+        }
+        // Strict monotonicity is guaranteed by construction; check in debug.
+        debug_assert!(cdf.windows(2).all(|w| w[0] < w[1]), "non-monotone cdf");
+        Self { cdf, prec }
+    }
+
+    #[inline]
+    pub fn num_symbols(&self) -> usize {
+        self.cdf.len() - 1
+    }
+
+    #[inline]
+    pub fn start(&self, sym: usize) -> u32 {
+        self.cdf[sym]
+    }
+
+    #[inline]
+    pub fn freq(&self, sym: usize) -> u32 {
+        self.cdf[sym + 1] - self.cdf[sym]
+    }
+
+    /// Find the symbol whose interval contains `cf` (binary search).
+    #[inline]
+    pub fn lookup(&self, cf: u32) -> usize {
+        debug_assert!((cf as u64) < (1u64 << self.prec));
+        // partition_point: first index where cdf[i] > cf, minus one.
+        self.cdf.partition_point(|&c| c <= cf) - 1
+    }
+
+    /// Quantized probability of `sym`.
+    pub fn prob(&self, sym: usize) -> f64 {
+        self.freq(sym) as f64 / (1u64 << self.prec) as f64
+    }
+
+    /// Entropy (bits/symbol) of the quantized distribution.
+    pub fn entropy(&self) -> f64 {
+        (0..self.num_symbols())
+            .map(|s| {
+                let p = self.prob(s);
+                if p > 0.0 {
+                    -p * p.log2()
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn uniform_pmf_quantizes_evenly() {
+        let q = QuantizedCdf::from_pmf(&[1.0; 16], 12);
+        assert_eq!(q.num_symbols(), 16);
+        assert_eq!(q.cdf[0], 0);
+        assert_eq!(q.cdf[16], 1 << 12);
+        for s in 0..16 {
+            assert_eq!(q.freq(s), 256);
+        }
+    }
+
+    #[test]
+    fn every_symbol_gets_nonzero_freq_even_with_tiny_mass() {
+        // One huge spike and many ~zero entries.
+        let mut pmf = vec![0.0f64; 256];
+        pmf[100] = 1.0;
+        let q = QuantizedCdf::from_pmf(&pmf, 16);
+        for s in 0..256 {
+            assert!(q.freq(s) >= 1, "symbol {s} has zero freq");
+        }
+        // The spike keeps nearly all the mass.
+        assert!(q.prob(100) > 0.99);
+    }
+
+    #[test]
+    fn lookup_inverts_intervals() {
+        let mut rng = Rng::new(10);
+        let pmf: Vec<f64> = (0..64).map(|_| rng.f64() + 1e-6).collect();
+        let q = QuantizedCdf::from_pmf(&pmf, 14);
+        for s in 0..q.num_symbols() {
+            let st = q.start(s);
+            let f = q.freq(s);
+            assert_eq!(q.lookup(st), s);
+            assert_eq!(q.lookup(st + f - 1), s);
+        }
+        assert_eq!(q.lookup(0), 0);
+        assert_eq!(q.lookup((1 << 14) - 1), 63);
+    }
+
+    #[test]
+    fn unnormalized_pmf_equivalent_to_normalized() {
+        let pmf: Vec<f64> = vec![0.1, 0.4, 0.2, 0.3];
+        let scaled: Vec<f64> = pmf.iter().map(|p| p * 37.5).collect();
+        let a = QuantizedCdf::from_pmf(&pmf, 16);
+        let b = QuantizedCdf::from_pmf(&scaled, 16);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantization_redundancy_is_small() {
+        // KL(true || quantized) should be ~K/M-level for a smooth pmf.
+        let k = 256;
+        let pmf: Vec<f64> = (0..k)
+            .map(|i| (-((i as f64 - 128.0) / 30.0).powi(2)).exp() + 1e-9)
+            .collect();
+        let total: f64 = pmf.iter().sum();
+        let q = QuantizedCdf::from_pmf(&pmf, 18);
+        let kl: f64 = (0..k)
+            .map(|i| {
+                let p = pmf[i] / total;
+                if p > 0.0 {
+                    p * (p / q.prob(i)).log2()
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        assert!(kl < 0.005, "quantization KL too large: {kl}");
+    }
+
+    #[test]
+    #[should_panic(expected = "mass units")]
+    fn too_many_symbols_for_precision_panics() {
+        QuantizedCdf::from_pmf(&[1.0; 300], 8);
+    }
+
+    #[test]
+    fn single_symbol_pmf() {
+        let q = QuantizedCdf::from_pmf(&[5.0], 8);
+        assert_eq!(q.num_symbols(), 1);
+        assert_eq!(q.freq(0), 256);
+        assert_eq!(q.lookup(17), 0);
+    }
+}

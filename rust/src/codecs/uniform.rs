@@ -1,0 +1,92 @@
+//! Uniform codec over `[0, 2^bits)`.
+//!
+//! This is the codec for the *prior* over max-entropy-discretized latents:
+//! bucketing the prior at its own quantiles makes the discrete prior exactly
+//! uniform, so prior coding has **zero** quantization loss (DESIGN.md §6).
+
+use super::SymbolCodec;
+use crate::ans::Ans;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Uniform {
+    bits: u32,
+}
+
+impl Uniform {
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= crate::ans::MAX_PREC);
+        Self { bits }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+}
+
+impl SymbolCodec for Uniform {
+    type Sym = u32;
+
+    #[inline]
+    fn push(&self, ans: &mut Ans, sym: u32) {
+        debug_assert!((sym as u64) < (1u64 << self.bits));
+        ans.push(sym, 1, self.bits);
+    }
+
+    #[inline]
+    fn pop(&self, ans: &mut Ans) -> u32 {
+        ans.pop_with(self.bits, |cf| (cf, cf, 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let c = Uniform::new(16);
+        let mut rng = Rng::new(1);
+        let syms: Vec<u32> = (0..10_000).map(|_| rng.below(1 << 16) as u32).collect();
+        let mut ans = Ans::new(0);
+        for &s in &syms {
+            c.push(&mut ans, s);
+        }
+        for &s in syms.iter().rev() {
+            assert_eq!(c.pop(&mut ans), s);
+        }
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn costs_exactly_bits_per_symbol() {
+        let c = Uniform::new(12);
+        let mut ans = Ans::new(0);
+        let n = 1000;
+        let before = ans.frac_bit_len();
+        let mut rng = Rng::new(2);
+        for _ in 0..n {
+            c.push(&mut ans, rng.below(1 << 12) as u32);
+        }
+        let bits = ans.frac_bit_len() - before;
+        assert!((bits - (n * 12) as f64).abs() < 1.0, "bits={bits}");
+    }
+
+    #[test]
+    fn pop_from_empty_samples_uniformly() {
+        let c = Uniform::new(8);
+        let mut ans = Ans::new(5);
+        let n = 100_000;
+        let mut counts = [0u32; 256];
+        for _ in 0..n {
+            counts[c.pop(&mut ans) as usize] += 1;
+        }
+        let expect = n as f64 / 256.0;
+        for (s, &cnt) in counts.iter().enumerate() {
+            assert!(
+                (cnt as f64 - expect).abs() < 6.0 * expect.sqrt(),
+                "symbol {s}: count {cnt} vs expected {expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,724 @@
+//! The model-worker thread and its dynamic batcher — the serving-side
+//! heart of the coordinator (paper §4.2 made concrete: model evaluations
+//! batch across concurrent streams even though each BB-ANS stream is
+//! sequential).
+//!
+//! The PJRT handles are not `Send`, so ONE worker thread owns the engine
+//! and all backends; callers talk to it through an MPSC queue. The worker
+//! drains up to `max_jobs` requests inside a `batch_window`, then:
+//!
+//! * **encode**: all posterior parameters for all images of all jobs in
+//!   the batch are computed in one chunked NN dispatch up front; then the
+//!   per-stream ANS coding interleaves with *cross-stream* batched
+//!   likelihood calls, image-step by image-step.
+//! * **decode**: streams advance in lock-step — pop priors (per stream),
+//!   one batched decoder call, pop pixels (per stream), one batched
+//!   encoder call to return the bits — so S concurrent decodes cost
+//!   ⌈S/B⌉ NN dispatches per image instead of S.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::metrics::Metrics;
+use crate::ans::Ans;
+use crate::bbans::container::Container;
+use crate::bbans::{BbAnsConfig, VaeCodec};
+use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta};
+use crate::runtime::{load_config, Engine};
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceParams {
+    /// Max jobs drained into one scheduling round.
+    pub max_jobs: usize,
+    /// How long to linger after the first job arrives, collecting more.
+    pub batch_window: Duration,
+    /// Default coding config for compression (decode uses the container's).
+    pub bbans: BbAnsConfig,
+}
+
+impl Default for ServiceParams {
+    fn default() -> Self {
+        Self {
+            max_jobs: 16,
+            batch_window: Duration::from_millis(2),
+            bbans: BbAnsConfig::default(),
+        }
+    }
+}
+
+enum Job {
+    Compress {
+        model: String,
+        images: Vec<Vec<u8>>,
+        reply: mpsc::Sender<Result<Vec<u8>, String>>,
+    },
+    Decompress {
+        container: Vec<u8>,
+        reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+    },
+    Stats {
+        reply: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Handle to the model-worker thread. Clonable; all clones feed the same
+/// batcher queue.
+pub struct ModelService {
+    tx: mpsc::Sender<Job>,
+    pub metrics: Arc<Metrics>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Cheap clonable submitter (no join handle).
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: mpsc::Sender<Job>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ModelService {
+    /// Spawn with the standard artifact-backed backends.
+    pub fn spawn(artifact_dir: PathBuf, use_pjrt: bool, params: ServiceParams) -> ModelService {
+        Self::spawn_with(params, move || standard_backends(&artifact_dir, use_pjrt))
+    }
+
+    /// Spawn with a custom backend factory (runs inside the worker thread
+    /// — backends need not be `Send`).
+    pub fn spawn_with<F>(params: ServiceParams, factory: F) -> ModelService
+    where
+        F: FnOnce() -> Result<HashMap<String, Box<dyn Backend>>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("bbans-model-worker".into())
+            .spawn(move || worker_loop(rx, m2, params, factory))
+            .expect("spawn model worker");
+        ModelService {
+            tx,
+            metrics,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            tx: self.tx.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ModelService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ServiceHandle {
+    pub fn compress(&self, model: &str, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        let t = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Compress {
+                model: model.to_string(),
+                images,
+                reply,
+            })
+            .map_err(|_| anyhow!("service stopped"))?;
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped request"))?
+            .map_err(|e| anyhow!("{e}"));
+        self.metrics.request_latency.observe(t.elapsed());
+        out
+    }
+
+    pub fn decompress(&self, container: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        let t = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Decompress { container, reply })
+            .map_err(|_| anyhow!("service stopped"))?;
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped request"))?
+            .map_err(|e| anyhow!("{e}"));
+        self.metrics.request_latency.observe(t.elapsed());
+        out
+    }
+
+    pub fn stats_json(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Stats { reply })
+            .map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("service dropped request"))
+    }
+}
+
+/// Standard backends from the artifact bundle.
+fn standard_backends(
+    artifact_dir: &PathBuf,
+    use_pjrt: bool,
+) -> Result<HashMap<String, Box<dyn Backend>>> {
+    let config = load_config(artifact_dir)?;
+    let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+    let engine = if use_pjrt {
+        Some(Arc::new(Engine::cpu(artifact_dir)?))
+    } else {
+        None
+    };
+    let models = match config.get("models") {
+        Some(crate::util::json::Json::Obj(m)) => m.keys().cloned().collect::<Vec<_>>(),
+        _ => bail!("model_config.json missing models"),
+    };
+    for name in models {
+        if let Some(engine) = &engine {
+            map.insert(
+                name.clone(),
+                Box::new(PjrtVae::from_config(engine.clone(), &config, &name)?),
+            );
+        } else {
+            let m = config.get("models").unwrap().get(&name).unwrap();
+            let meta = ModelMeta {
+                name: name.clone(),
+                pixels: config.req("pixels").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+                latent_dim: m.req("latent_dim").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+                hidden: m.req("hidden").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+                likelihood: Likelihood::parse(
+                    m.req("likelihood").map_err(|e| anyhow!("{e}"))?.as_str().unwrap(),
+                )?,
+                test_elbo_bpd: m
+                    .get("test_elbo_bpd")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN),
+            };
+            let weights = artifact_dir.join(
+                m.req("weights")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_str()
+                    .unwrap(),
+            );
+            map.insert(name.clone(), Box::new(NativeVae::load(weights, meta)?));
+        }
+    }
+    Ok(map)
+}
+
+// ------------------------------------------------------------ the worker
+
+fn worker_loop<F>(
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<Metrics>,
+    params: ServiceParams,
+    factory: F,
+) where
+    F: FnOnce() -> Result<HashMap<String, Box<dyn Backend>>>,
+{
+    let backends = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            // Fail every request with the construction error.
+            let msg = format!("backend init failed: {e:#}");
+            eprintln!("[coordinator] {msg}");
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Compress { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Job::Decompress { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Job::Stats { reply } => {
+                        let _ = reply.send(metrics.snapshot_json().to_string());
+                    }
+                    Job::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+
+    loop {
+        // Block for the first job.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        // Linger to fill the batch.
+        let deadline = Instant::now() + params.batch_window;
+        while jobs.len() < params.max_jobs {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let t_batch = Instant::now();
+        let mut compress: HashMap<String, Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>> =
+            HashMap::new();
+        let mut decompress: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)> = Vec::new();
+        let mut saw_shutdown = false;
+        for job in jobs {
+            match job {
+                Job::Compress {
+                    model,
+                    images,
+                    reply,
+                } => compress.entry(model).or_default().push((images, reply)),
+                Job::Decompress { container, reply } => decompress.push((container, reply)),
+                Job::Stats { reply } => {
+                    let _ = reply.send(metrics.snapshot_json().to_string());
+                }
+                Job::Shutdown => saw_shutdown = true,
+            }
+        }
+
+        for (model, group) in compress {
+            Metrics::inc(&metrics.requests, group.len() as u64);
+            match backends.get(&model) {
+                Some(backend) => batched_encode(backend.as_ref(), &params, &metrics, group),
+                None => {
+                    for (_, reply) in group {
+                        Metrics::inc(&metrics.errors, 1);
+                        let _ = reply.send(Err(format!("unknown model '{model}'")));
+                    }
+                }
+            }
+        }
+        if !decompress.is_empty() {
+            Metrics::inc(&metrics.requests, decompress.len() as u64);
+            batched_decode(&backends, &metrics, decompress);
+        }
+        metrics.batch_latency.observe(t_batch.elapsed());
+
+        if saw_shutdown {
+            return;
+        }
+    }
+}
+
+/// Cross-stream batched encode for one model.
+fn batched_encode(
+    backend: &dyn Backend,
+    params: &ServiceParams,
+    metrics: &Metrics,
+    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
+) {
+    let codec = match VaeCodec::new(backend, params.bbans) {
+        Ok(c) => c,
+        Err(e) => {
+            for (_, reply) in group {
+                let _ = reply.send(Err(format!("{e:#}")));
+            }
+            return;
+        }
+    };
+    let meta = backend.meta();
+
+    // Streams: (images, ans, per-image latent idx buffer, reply)
+    struct Stream {
+        images: Vec<Vec<u8>>,
+        posts: Vec<(Vec<f32>, Vec<f32>)>,
+        ans: Ans,
+        next: usize,
+        reply: mpsc::Sender<Result<Vec<u8>, String>>,
+        failed: Option<String>,
+    }
+    let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
+
+    // Phase 1: one big batched posterior dispatch for everything.
+    {
+        let mut scaled: Vec<Vec<f32>> = Vec::new();
+        let mut owners: Vec<(usize, usize)> = Vec::new();
+        for (si, (images, reply)) in group.into_iter().enumerate() {
+            let bad = images.iter().any(|i| i.len() != meta.pixels);
+            streams.push(Stream {
+                posts: Vec::with_capacity(images.len()),
+                ans: Ans::new(params.bbans.clean_seed),
+                next: 0,
+                reply,
+                failed: if bad {
+                    Some(format!("image size != {}", meta.pixels))
+                } else {
+                    None
+                },
+                images,
+            });
+            if streams[si].failed.is_none() {
+                for (ii, img) in streams[si].images.iter().enumerate() {
+                    scaled.push(codec.scale_image(img));
+                    owners.push((si, ii));
+                }
+            }
+        }
+        let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
+        if !refs.is_empty() {
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, refs.len() as u64);
+            match backend.posterior(&refs) {
+                Ok(posts) => {
+                    for ((si, _ii), post) in owners.into_iter().zip(posts) {
+                        streams[si].posts.push(post);
+                    }
+                }
+                Err(e) => {
+                    for s in &mut streams {
+                        s.failed = Some(format!("posterior failed: {e:#}"));
+                    }
+                }
+            }
+        }
+    }
+
+    // Phase 2: lock-step image coding with cross-stream likelihood batches.
+    loop {
+        let active: Vec<usize> = streams
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.failed.is_none() && s.next < s.images.len())
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        // (1) pop posteriors per stream.
+        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(active.len());
+        let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(active.len());
+        for &si in &active {
+            let s = &mut streams[si];
+            let (mu, sigma) = &s.posts[s.next];
+            let idx = codec.pop_posterior(&mut s.ans, mu, sigma);
+            ys.push(codec.latent_centres(&idx));
+            idxs.push(idx);
+        }
+        // (2) one batched likelihood call for all active streams.
+        let refs: Vec<&[f32]> = ys.iter().map(|v| v.as_slice()).collect();
+        Metrics::inc(&metrics.nn_calls, 1);
+        Metrics::inc(&metrics.nn_items, refs.len() as u64);
+        match backend.likelihood(&refs) {
+            Ok(param_list) => {
+                for ((&si, idx), pp) in active.iter().zip(idxs).zip(param_list) {
+                    let s = &mut streams[si];
+                    let img = s.images[s.next].clone();
+                    codec.push_pixels(&mut s.ans, &pp, &img);
+                    codec.push_prior(&mut s.ans, &idx);
+                    s.next += 1;
+                    Metrics::inc(&metrics.images_encoded, 1);
+                }
+            }
+            Err(e) => {
+                for &si in &active {
+                    streams[si].failed = Some(format!("likelihood failed: {e:#}"));
+                }
+            }
+        }
+    }
+
+    // Phase 3: containers out.
+    for s in streams {
+        if let Some(msg) = s.failed {
+            Metrics::inc(&metrics.errors, 1);
+            let _ = s.reply.send(Err(msg));
+            continue;
+        }
+        let container = Container {
+            model: meta.name.clone(),
+            backend_id: backend.backend_id(),
+            cfg: params.bbans,
+            num_images: s.images.len() as u32,
+            pixels: meta.pixels as u32,
+            message: s.ans.into_message(),
+        };
+        let bytes = container.to_bytes();
+        Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
+        let _ = s.reply.send(Ok(bytes));
+    }
+}
+
+/// Cross-stream batched decode (streams may use different models only if
+/// those models share a backend entry; in practice we group by model).
+fn batched_decode(
+    backends: &HashMap<String, Box<dyn Backend>>,
+    metrics: &Metrics,
+    jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
+) {
+    // Parse containers and group by model.
+    let mut by_model: HashMap<String, Vec<(Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>> =
+        HashMap::new();
+    for (bytes, reply) in jobs {
+        Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
+        match Container::from_bytes(&bytes) {
+            Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
+            Err(e) => {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(format!("bad container: {e:#}")));
+            }
+        }
+    }
+
+    for (model, group) in by_model {
+        let Some(backend) = backends.get(&model) else {
+            for (_, reply) in group {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(format!("unknown model '{model}'")));
+            }
+            continue;
+        };
+        let backend = backend.as_ref();
+
+        struct Stream {
+            ans: Ans,
+            remaining: usize,
+            out: Vec<Vec<u8>>,
+            cfg: BbAnsConfig,
+            reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+            failed: Option<String>,
+            pending_idx: Vec<u32>,
+            pending_img: Vec<u8>,
+        }
+        let mut streams: Vec<Stream> = group
+            .into_iter()
+            .map(|(c, reply)| {
+                let failed = if c.backend_id != backend.backend_id() {
+                    Some(format!(
+                        "container encoded with backend '{}', this service runs '{}'",
+                        c.backend_id,
+                        backend.backend_id()
+                    ))
+                } else {
+                    None
+                };
+                Stream {
+                    ans: Ans::from_message(&c.message, c.cfg.clean_seed),
+                    remaining: c.num_images as usize,
+                    out: Vec::with_capacity(c.num_images as usize),
+                    cfg: c.cfg,
+                    reply,
+                    failed,
+                    pending_idx: Vec::new(),
+                    pending_img: Vec::new(),
+                }
+            })
+            .collect();
+
+        loop {
+            let active: Vec<usize> = streams
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.failed.is_none() && s.remaining > 0)
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            // (3⁻¹) pop priors; gather ys.
+            let mut ys = Vec::with_capacity(active.len());
+            for &si in &active {
+                let s = &mut streams[si];
+                let codec = match VaeCodec::new(backend, s.cfg) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        s.failed = Some(format!("{e:#}"));
+                        continue;
+                    }
+                };
+                let idx = codec.pop_prior(&mut s.ans);
+                ys.push(codec.latent_centres(&idx));
+                s.pending_idx = idx;
+            }
+            let still: Vec<usize> = active
+                .iter()
+                .copied()
+                .filter(|&si| streams[si].failed.is_none())
+                .collect();
+            if still.is_empty() {
+                continue;
+            }
+            // (2⁻¹) batched likelihood, pop pixels.
+            let refs: Vec<&[f32]> = ys.iter().map(|v| v.as_slice()).collect();
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, refs.len() as u64);
+            let params_list = match backend.likelihood(&refs) {
+                Ok(p) => p,
+                Err(e) => {
+                    for &si in &still {
+                        streams[si].failed = Some(format!("likelihood failed: {e:#}"));
+                    }
+                    continue;
+                }
+            };
+            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(still.len());
+            for (&si, pp) in still.iter().zip(params_list) {
+                let s = &mut streams[si];
+                let codec = VaeCodec::new(backend, s.cfg).expect("validated");
+                let img = codec.pop_pixels(&mut s.ans, &pp);
+                xs.push(codec.scale_image(&img));
+                s.pending_img = img;
+            }
+            // (1⁻¹) batched posterior, push bits back.
+            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, xrefs.len() as u64);
+            match backend.posterior(&xrefs) {
+                Ok(posts) => {
+                    for (&si, (mu, sigma)) in still.iter().zip(posts) {
+                        let s = &mut streams[si];
+                        let codec = VaeCodec::new(backend, s.cfg).expect("validated");
+                        let idx = std::mem::take(&mut s.pending_idx);
+                        codec.push_posterior(&mut s.ans, &mu, &sigma, &idx);
+                        s.out.push(std::mem::take(&mut s.pending_img));
+                        s.remaining -= 1;
+                        Metrics::inc(&metrics.images_decoded, 1);
+                    }
+                }
+                Err(e) => {
+                    for &si in &still {
+                        streams[si].failed = Some(format!("posterior failed: {e:#}"));
+                    }
+                }
+            }
+        }
+
+        for s in streams {
+            if let Some(msg) = s.failed {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = s.reply.send(Err(msg));
+            } else {
+                let mut out = s.out;
+                out.reverse(); // stack order → original order
+                let _ = s.reply.send(Ok(out));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vae::NativeVae;
+
+    fn test_service(max_jobs: usize, window_ms: u64) -> ModelService {
+        let params = ServiceParams {
+            max_jobs,
+            batch_window: Duration::from_millis(window_ms),
+            bbans: BbAnsConfig::default(),
+        };
+        ModelService::spawn_with(params, || {
+            let meta = ModelMeta {
+                name: "toy".into(),
+                pixels: 36,
+                latent_dim: 6,
+                hidden: 10,
+                likelihood: Likelihood::Bernoulli,
+                test_elbo_bpd: f64::NAN,
+            };
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(meta, 77)));
+            Ok(map)
+        })
+    }
+
+    fn sample_images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| (0..36).map(|_| (rng.f64() < 0.3) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip_through_service() {
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        let images = sample_images(7, 1);
+        let container = h.compress("toy", images.clone()).unwrap();
+        let out = h.decompress(container).unwrap();
+        assert_eq!(out, images);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let svc = test_service(8, 30);
+        let h = svc.handle();
+        let mut threads = Vec::new();
+        for t in 0..6 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                let images = sample_images(5, 100 + t);
+                let c = h.compress("toy", images.clone()).unwrap();
+                let out = h.decompress(c).unwrap();
+                assert_eq!(out, images);
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        // With 6 concurrent 5-image streams and a 30ms window, NN calls
+        // must have been shared across streams.
+        let mbs = svc.metrics.mean_batch_size();
+        assert!(mbs > 1.5, "expected cross-stream batching, got {mbs:.2}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_and_bad_container_error_cleanly() {
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        assert!(h.compress("nope", sample_images(1, 3)).is_err());
+        assert!(h.decompress(vec![1, 2, 3]).is_err());
+        let stats = h.stats_json().unwrap();
+        assert!(stats.contains("errors"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wrong_backend_container_rejected() {
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        let images = sample_images(2, 9);
+        let c = h.compress("toy", images).unwrap();
+        let mut parsed = Container::from_bytes(&c).unwrap();
+        parsed.backend_id = "pjrt-b16".into();
+        assert!(h.decompress(parsed.to_bytes()).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wrong_image_size_rejected_per_stream() {
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        let images = vec![vec![0u8; 35]];
+        assert!(h.compress("toy", images).is_err());
+        // Service still alive for good requests.
+        let good = sample_images(2, 4);
+        assert!(h.compress("toy", good).is_ok());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,183 @@
+//! Service metrics: atomic counters and log-bucketed latency histograms,
+//! exported as JSON over the stats endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Log₂-bucketed latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
+const BUCKETS: usize = 32;
+
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Approximate quantile from the bucket histogram (upper bound of the
+    /// bucket containing the quantile).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << BUCKETS)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_us", Json::Num(self.mean().as_micros() as f64)),
+            (
+                "p50_us",
+                Json::Num(self.quantile(0.5).as_micros() as f64),
+            ),
+            (
+                "p99_us",
+                Json::Num(self.quantile(0.99).as_micros() as f64),
+            ),
+        ])
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub images_encoded: AtomicU64,
+    pub images_decoded: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub nn_calls: AtomicU64,
+    pub nn_items: AtomicU64,
+    pub errors: AtomicU64,
+    pub batch_latency: Histogram,
+    pub request_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Mean images per NN dispatch — the batching win (1.0 = no batching).
+    pub fn mean_batch_size(&self) -> f64 {
+        let calls = self.nn_calls.load(Ordering::Relaxed);
+        if calls == 0 {
+            return 0.0;
+        }
+        self.nn_items.load(Ordering::Relaxed) as f64 / calls as f64
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "requests",
+                Json::Num(self.requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "images_encoded",
+                Json::Num(self.images_encoded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "images_decoded",
+                Json::Num(self.images_decoded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "bytes_in",
+                Json::Num(self.bytes_in.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "bytes_out",
+                Json::Num(self.bytes_out.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "nn_calls",
+                Json::Num(self.nn_calls.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "nn_items",
+                Json::Num(self.nn_items.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            (
+                "errors",
+                Json::Num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            ("batch_latency", self.batch_latency.to_json()),
+            ("request_latency", self.request_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.observe(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn metrics_snapshot_is_valid_json() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests, 3);
+        Metrics::inc(&m.nn_calls, 2);
+        Metrics::inc(&m.nn_items, 20);
+        m.request_latency.observe(Duration::from_millis(5));
+        let j = m.snapshot_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(3));
+        assert!((j.get("mean_batch_size").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+        // Round-trips through the serializer.
+        let text = j.to_string();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+}

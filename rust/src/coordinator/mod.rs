@@ -1,0 +1,20 @@
+//! L3 coordinator: the serving system around the BB-ANS codec.
+//!
+//! * [`batcher`] — the model-worker thread + dynamic batcher: NN work from
+//!   concurrent compression/decompression streams is batched into shared
+//!   PJRT dispatches (paper §4.2's parallelization argument, realized);
+//! * [`server`] — framed-TCP front end feeding the batcher;
+//! * [`protocol`] — the wire format;
+//! * [`metrics`] — counters + latency histograms exported as JSON.
+//!
+//! Built on std threads/channels only (tokio is unavailable offline, and
+//! the workload — few long-lived connections, CPU-bound coding — doesn't
+//! need an async reactor).
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{ModelService, ServiceHandle, ServiceParams};
+pub use server::{Client, Server};

@@ -1,0 +1,222 @@
+//! Wire protocol for the compression service: length-prefixed frames over
+//! TCP (or any `Read`/`Write` pair — tests use in-memory buffers).
+//!
+//! Frame layout: `u32 LE total payload length | u8 frame type | payload`.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Compress `images` (each `pixels` long) with `model`.
+    CompressReq {
+        model: String,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+    },
+    /// A BB-ANS container blob.
+    CompressResp { container: Vec<u8> },
+    /// Decompress a container blob.
+    DecompressReq { container: Vec<u8> },
+    DecompressResp { pixels: u32, images: Vec<Vec<u8>> },
+    StatsReq,
+    /// JSON metrics snapshot.
+    StatsResp { json: String },
+    Error { message: String },
+    Shutdown,
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::CompressReq { .. } => 0x01,
+            Frame::DecompressReq { .. } => 0x02,
+            Frame::StatsReq => 0x03,
+            Frame::Shutdown => 0x04,
+            Frame::CompressResp { .. } => 0x81,
+            Frame::DecompressResp { .. } => 0x82,
+            Frame::StatsResp { .. } => 0x83,
+            Frame::Error { .. } => 0x7f,
+        }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let mut payload = Vec::new();
+        match self {
+            Frame::CompressReq {
+                model,
+                pixels,
+                images,
+            } => {
+                payload.push(model.len() as u8);
+                payload.extend_from_slice(model.as_bytes());
+                payload.extend_from_slice(&pixels.to_le_bytes());
+                payload.extend_from_slice(&(images.len() as u32).to_le_bytes());
+                for img in images {
+                    if img.len() != *pixels as usize {
+                        bail!("image length mismatch");
+                    }
+                    payload.extend_from_slice(img);
+                }
+            }
+            Frame::CompressResp { container } => payload.extend_from_slice(container),
+            Frame::DecompressReq { container } => payload.extend_from_slice(container),
+            Frame::DecompressResp { pixels, images } => {
+                payload.extend_from_slice(&pixels.to_le_bytes());
+                payload.extend_from_slice(&(images.len() as u32).to_le_bytes());
+                for img in images {
+                    payload.extend_from_slice(img);
+                }
+            }
+            Frame::StatsReq | Frame::Shutdown => {}
+            Frame::StatsResp { json } => payload.extend_from_slice(json.as_bytes()),
+            Frame::Error { message } => payload.extend_from_slice(message.as_bytes()),
+        }
+        let total = payload.len() + 1;
+        w.write_all(&(total as u32).to_le_bytes())?;
+        w.write_all(&[self.type_byte()])?;
+        w.write_all(&payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).context("frame length")?;
+        let total = u32::from_le_bytes(len4) as usize;
+        if total == 0 || total > MAX_FRAME {
+            bail!("bad frame length {total}");
+        }
+        let mut buf = vec![0u8; total];
+        r.read_exact(&mut buf).context("frame body")?;
+        let ty = buf[0];
+        let p = &buf[1..];
+        Ok(match ty {
+            0x01 => {
+                if p.len() < 1 {
+                    bail!("short CompressReq");
+                }
+                let mlen = p[0] as usize;
+                if p.len() < 1 + mlen + 8 {
+                    bail!("short CompressReq header");
+                }
+                let model = std::str::from_utf8(&p[1..1 + mlen])
+                    .context("model name")?
+                    .to_string();
+                let pixels =
+                    u32::from_le_bytes(p[1 + mlen..5 + mlen].try_into().unwrap());
+                let n = u32::from_le_bytes(p[5 + mlen..9 + mlen].try_into().unwrap()) as usize;
+                let body = &p[9 + mlen..];
+                let px = pixels as usize;
+                if body.len() != n * px {
+                    bail!("CompressReq body size mismatch");
+                }
+                let images = (0..n).map(|i| body[i * px..(i + 1) * px].to_vec()).collect();
+                Frame::CompressReq {
+                    model,
+                    pixels,
+                    images,
+                }
+            }
+            0x02 => Frame::DecompressReq {
+                container: p.to_vec(),
+            },
+            0x03 => Frame::StatsReq,
+            0x04 => Frame::Shutdown,
+            0x81 => Frame::CompressResp {
+                container: p.to_vec(),
+            },
+            0x82 => {
+                if p.len() < 8 {
+                    bail!("short DecompressResp");
+                }
+                let pixels = u32::from_le_bytes(p[0..4].try_into().unwrap());
+                let n = u32::from_le_bytes(p[4..8].try_into().unwrap()) as usize;
+                let body = &p[8..];
+                let px = pixels as usize;
+                if body.len() != n * px {
+                    bail!("DecompressResp body size mismatch");
+                }
+                let images = (0..n).map(|i| body[i * px..(i + 1) * px].to_vec()).collect();
+                Frame::DecompressResp { pixels, images }
+            }
+            0x83 => Frame::StatsResp {
+                json: String::from_utf8(p.to_vec()).context("stats json")?,
+            },
+            0x7f => Frame::Error {
+                message: String::from_utf8_lossy(p).to_string(),
+            },
+            other => bail!("unknown frame type {other:#x}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        let g = Frame::read_from(&mut r).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        roundtrip(Frame::CompressReq {
+            model: "bin".into(),
+            pixels: 4,
+            images: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
+        });
+        roundtrip(Frame::CompressResp {
+            container: vec![9, 9, 9],
+        });
+        roundtrip(Frame::DecompressReq {
+            container: vec![1, 2],
+        });
+        roundtrip(Frame::DecompressResp {
+            pixels: 2,
+            images: vec![vec![0, 1]],
+        });
+        roundtrip(Frame::StatsReq);
+        roundtrip(Frame::StatsResp {
+            json: "{\"x\":1}".into(),
+        });
+        roundtrip(Frame::Error {
+            message: "nope".into(),
+        });
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        // Zero length.
+        let mut r: &[u8] = &[0, 0, 0, 0];
+        assert!(Frame::read_from(&mut r).is_err());
+        // Truncated body.
+        let mut buf = Vec::new();
+        Frame::StatsReq.write_to(&mut buf).unwrap();
+        let mut r = &buf[..buf.len() - 1];
+        let _ = Frame::read_from(&mut r); // must not panic
+        // Unknown type.
+        let mut r: &[u8] = &[1, 0, 0, 0, 0x55];
+        assert!(Frame::read_from(&mut r).is_err());
+        // Size-mismatched CompressReq.
+        let mut bad = Vec::new();
+        Frame::CompressReq {
+            model: "m".into(),
+            pixels: 4,
+            images: vec![vec![0; 4]],
+        }
+        .write_to(&mut bad)
+        .unwrap();
+        let n = bad.len();
+        bad[n - 5] ^= 1; // tamper with count
+        let mut r = &bad[..];
+        assert!(Frame::read_from(&mut r).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Framed-TCP compression server and client.
+//!
+//! One thread per connection (requests are large and long-lived; the
+//! interesting concurrency is inside the model worker's batcher, not the
+//! socket layer). All connections feed the shared [`ServiceHandle`], so
+//! concurrent clients' NN work batches together.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::batcher::ServiceHandle;
+use super::protocol::Frame;
+
+/// A running server (owns the acceptor thread).
+pub struct Server {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve in background threads.
+    pub fn start(bind: &str, service: ServiceHandle) -> Result<Server> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("bbans-acceptor".into())
+            .spawn(move || {
+                // Nonblocking accept loop so `stop` is honoured promptly.
+                // Connection threads are detached: they exit when the peer
+                // closes (joining them here would deadlock `stop()` against
+                // clients that keep their connection open).
+                listener.set_nonblocking(true).ok();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let svc = service.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, svc);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server {
+            addr,
+            stop,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, svc: ServiceHandle) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let resp = match frame {
+            Frame::CompressReq { model, images, .. } => match svc.compress(&model, images) {
+                Ok(container) => Frame::CompressResp { container },
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            },
+            Frame::DecompressReq { container } => match svc.decompress(container) {
+                Ok(images) => Frame::DecompressResp {
+                    pixels: images.first().map(|i| i.len() as u32).unwrap_or(0),
+                    images,
+                },
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            },
+            Frame::StatsReq => match svc.stats_json() {
+                Ok(json) => Frame::StatsResp { json },
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            },
+            Frame::Shutdown => return Ok(()),
+            other => Frame::Error {
+                message: format!("unexpected frame {other:?}"),
+            },
+        };
+        resp.write_to(&mut writer)?;
+    }
+}
+
+/// Blocking client for the framed protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: Frame) -> Result<Frame> {
+        req.write_to(&mut self.writer)?;
+        let resp = Frame::read_from(&mut self.reader)?;
+        if let Frame::Error { message } = &resp {
+            anyhow::bail!("server error: {message}");
+        }
+        Ok(resp)
+    }
+
+    pub fn compress(&mut self, model: &str, pixels: u32, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        match self.call(Frame::CompressReq {
+            model: model.to_string(),
+            pixels,
+            images,
+        })? {
+            Frame::CompressResp { container } => Ok(container),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn decompress(&mut self, container: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        match self.call(Frame::DecompressReq { container })? {
+            Frame::DecompressResp { images, .. } => Ok(images),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        match self.call(Frame::StatsReq)? {
+            Frame::StatsResp { json } => Ok(json),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}

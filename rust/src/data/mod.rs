@@ -1,0 +1,157 @@
+//! Data pipeline: IDX (MNIST-format) loading, binarization, and a small
+//! synthetic image generator for artifact-free tests/benches.
+
+pub mod synth;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A dataset of equally-sized u8 images.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub rows: usize,
+    pub cols: usize,
+    pub images: Vec<Vec<u8>>,
+}
+
+impl Dataset {
+    pub fn pixels(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Total uncompressed payload in bytes.
+    pub fn raw_bytes(&self) -> usize {
+        self.len() * self.pixels()
+    }
+
+    /// Concatenate all pixels (e.g. for whole-dataset baseline codecs).
+    pub fn flat(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.raw_bytes());
+        for img in &self.images {
+            out.extend_from_slice(img);
+        }
+        out
+    }
+
+    pub fn subset(&self, n: usize) -> Dataset {
+        Dataset {
+            rows: self.rows,
+            cols: self.cols,
+            images: self.images.iter().take(n).cloned().collect(),
+        }
+    }
+}
+
+/// Parse an IDX image file (magic 0x803): big-endian header + u8 pixels.
+pub fn parse_idx_images(bytes: &[u8]) -> Result<Dataset> {
+    if bytes.len() < 16 {
+        bail!("IDX file too short");
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != 0x0000_0803 {
+        bail!("bad IDX image magic {magic:#x}");
+    }
+    let n = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let rows = u32::from_be_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_be_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let need = 16 + n * rows * cols;
+    if bytes.len() < need {
+        bail!("IDX truncated: have {}, need {need}", bytes.len());
+    }
+    let px = rows * cols;
+    let images = (0..n)
+        .map(|i| bytes[16 + i * px..16 + (i + 1) * px].to_vec())
+        .collect();
+    Ok(Dataset { rows, cols, images })
+}
+
+pub fn load_idx_images(path: impl AsRef<Path>) -> Result<Dataset> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_idx_images(&bytes)
+}
+
+/// Serialize a dataset back to IDX (tests, fixtures).
+pub fn write_idx_images(ds: &Dataset) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + ds.raw_bytes());
+    out.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+    out.extend_from_slice(&(ds.len() as u32).to_be_bytes());
+    out.extend_from_slice(&(ds.rows as u32).to_be_bytes());
+    out.extend_from_slice(&(ds.cols as u32).to_be_bytes());
+    for img in &ds.images {
+        out.extend_from_slice(img);
+    }
+    out
+}
+
+/// Load the named split from the artifact data directory.
+/// `which` ∈ {"train", "test"}; `binarized` picks the pre-binarized file.
+pub fn load_split(artifact_dir: impl AsRef<Path>, which: &str, binarized: bool) -> Result<Dataset> {
+    let name = match (which, binarized) {
+        ("train", false) => "train-images-idx3-ubyte",
+        ("train", true) => "train-images-bin-idx3-ubyte",
+        ("test", false) => "t10k-images-idx3-ubyte",
+        ("test", true) => "t10k-images-bin-idx3-ubyte",
+        _ => bail!("unknown split '{which}'"),
+    };
+    load_idx_images(artifact_dir.as_ref().join("data").join(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_roundtrip() {
+        let ds = Dataset {
+            rows: 2,
+            cols: 3,
+            images: vec![vec![1, 2, 3, 4, 5, 6], vec![9, 8, 7, 6, 5, 4]],
+        };
+        let bytes = write_idx_images(&ds);
+        let ds2 = parse_idx_images(&bytes).unwrap();
+        assert_eq!(ds2.rows, 2);
+        assert_eq!(ds2.cols, 3);
+        assert_eq!(ds2.images, ds.images);
+        assert_eq!(ds2.raw_bytes(), 12);
+    }
+
+    #[test]
+    fn idx_rejects_garbage() {
+        assert!(parse_idx_images(&[0u8; 4]).is_err());
+        let mut bytes = write_idx_images(&Dataset {
+            rows: 1,
+            cols: 1,
+            images: vec![vec![0]],
+        });
+        bytes[3] = 0x01; // wrong magic
+        assert!(parse_idx_images(&bytes).is_err());
+        let good = write_idx_images(&Dataset {
+            rows: 2,
+            cols: 2,
+            images: vec![vec![0; 4]],
+        });
+        assert!(parse_idx_images(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn flat_and_subset() {
+        let ds = Dataset {
+            rows: 1,
+            cols: 2,
+            images: vec![vec![1, 2], vec![3, 4], vec![5, 6]],
+        };
+        assert_eq!(ds.flat(), vec![1, 2, 3, 4, 5, 6]);
+        let sub = ds.subset(2);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.flat(), vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Rust-side synthetic image generators, for tests and benches that must
+//! run without the Python-generated artifact data.
+//!
+//! `digits` draws crude digit-like glyphs (strokes on a grid); `natural`
+//! produces value-noise images that stand in for the ImageNet64 benchmark
+//! data of Table 3 (smooth regions + edges — the statistics the baseline
+//! codecs' predictors care about).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Crude digit-like 28x28 images: random strokes with MNIST-ish sparsity.
+pub fn digits(n: usize, seed: u64) -> Dataset {
+    let (rows, cols) = (28usize, 28usize);
+    let mut rng = Rng::new(seed);
+    let images = (0..n)
+        .map(|_| {
+            let mut img = vec![0u8; rows * cols];
+            let strokes = 2 + rng.below(3) as usize;
+            for _ in 0..strokes {
+                // Random quadratic-ish stroke: walk with momentum.
+                let mut x = 6.0 + rng.f64() * 16.0;
+                let mut y = 6.0 + rng.f64() * 16.0;
+                let mut dx = rng.f64() * 2.0 - 1.0;
+                let mut dy = rng.f64() * 2.0 - 1.0;
+                let steps = 10 + rng.below(20) as usize;
+                for _ in 0..steps {
+                    dx += rng.f64() * 0.6 - 0.3;
+                    dy += rng.f64() * 0.6 - 0.3;
+                    let norm = (dx * dx + dy * dy).sqrt().max(0.3);
+                    x += dx / norm;
+                    y += dy / norm;
+                    let (xi, yi) = (x as i64, y as i64);
+                    for oy in -1..=1i64 {
+                        for ox in -1..=1i64 {
+                            let (px, py) = (xi + ox, yi + oy);
+                            if (0..cols as i64).contains(&px) && (0..rows as i64).contains(&py) {
+                                let d2 = (ox * ox + oy * oy) as f64;
+                                let v = (230.0 * (-d2 * 0.7).exp()) as u8;
+                                let idx = py as usize * cols + px as usize;
+                                img[idx] = img[idx].max(v);
+                            }
+                        }
+                    }
+                }
+            }
+            img
+        })
+        .collect();
+    Dataset { rows, cols, images }
+}
+
+/// Stochastic binarization (pixel ~ Bernoulli(v/255)) with a fixed seed.
+pub fn binarize(ds: &Dataset, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    Dataset {
+        rows: ds.rows,
+        cols: ds.cols,
+        images: ds
+            .images
+            .iter()
+            .map(|img| {
+                img.iter()
+                    .map(|&v| (rng.f64() < v as f64 / 255.0) as u8)
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+/// Octave value-noise "natural" images of size `side` × `side` (Table 3's
+/// ImageNet64 stand-in; see DESIGN.md §5).
+pub fn natural(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let images = (0..n)
+        .map(|_| {
+            let mut img = vec![0f64; side * side];
+            // Octaves of bilinear value noise.
+            let mut amp = 1.0;
+            let mut cell = side / 2;
+            while cell >= 1 {
+                let gw = side / cell + 2;
+                let grid: Vec<f64> = (0..gw * gw).map(|_| rng.f64()).collect();
+                for y in 0..side {
+                    for x in 0..side {
+                        let gx = x as f64 / cell as f64;
+                        let gy = y as f64 / cell as f64;
+                        let (x0, y0) = (gx as usize, gy as usize);
+                        let (fx, fy) = (gx - x0 as f64, gy - y0 as f64);
+                        let v00 = grid[y0 * gw + x0];
+                        let v01 = grid[y0 * gw + x0 + 1];
+                        let v10 = grid[(y0 + 1) * gw + x0];
+                        let v11 = grid[(y0 + 1) * gw + x0 + 1];
+                        let v = v00 * (1.0 - fx) * (1.0 - fy)
+                            + v01 * fx * (1.0 - fy)
+                            + v10 * (1.0 - fx) * fy
+                            + v11 * fx * fy;
+                        img[y * side + x] += amp * v;
+                    }
+                }
+                amp *= 0.55;
+                cell /= 2;
+            }
+            // Occasional hard edge (objects).
+            if rng.f64() < 0.8 {
+                let edge_x = rng.below(side as u64) as usize;
+                let delta = rng.f64() * 0.8 - 0.4;
+                for y in 0..side {
+                    for x in edge_x..side {
+                        img[y * side + x] += delta;
+                    }
+                }
+            }
+            let lo = img.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = img.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            img.iter()
+                .map(|v| (255.0 * (v - lo) / (hi - lo + 1e-12)) as u8)
+                .collect()
+        })
+        .collect();
+    Dataset {
+        rows: side,
+        cols: side,
+        images,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_are_sparse_and_deterministic() {
+        let a = digits(10, 42);
+        let b = digits(10, 42);
+        assert_eq!(a.images, b.images);
+        let nonzero: usize = a.images.iter().flatten().filter(|&&v| v > 0).count();
+        let frac = nonzero as f64 / a.raw_bytes() as f64;
+        assert!(frac > 0.02 && frac < 0.5, "sparsity {frac}");
+    }
+
+    #[test]
+    fn binarize_is_deterministic_and_binary() {
+        let ds = digits(5, 1);
+        let b1 = binarize(&ds, 7);
+        let b2 = binarize(&ds, 7);
+        assert_eq!(b1.images, b2.images);
+        assert!(b1.images.iter().flatten().all(|&v| v <= 1));
+    }
+
+    #[test]
+    fn natural_images_cover_range() {
+        let ds = natural(3, 64, 9);
+        assert_eq!(ds.rows, 64);
+        for img in &ds.images {
+            let lo = *img.iter().min().unwrap();
+            let hi = *img.iter().max().unwrap();
+            assert!(hi > lo + 100, "dynamic range too small: {lo}..{hi}");
+        }
+    }
+}

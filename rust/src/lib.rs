@@ -1,0 +1,32 @@
+//! # BB-ANS: lossless compression with latent variable models
+//!
+//! A reproduction of *"Practical lossless compression with latent variables
+//! using bits back coding"* (Townsend, Bird & Barber, ICLR 2019) as a
+//! three-layer system:
+//!
+//! * **Layer 1 (Pallas, build time)** — fused dense and beta-binomial-table
+//!   kernels inside the VAE graphs (`python/compile/kernels/`).
+//! * **Layer 2 (JAX, build time)** — the VAE recognition/generative
+//!   networks, trained and AOT-lowered to HLO text (`python/compile/`).
+//! * **Layer 3 (this crate, runtime)** — the BB-ANS codec ([`ans`],
+//!   [`codecs`], [`bbans`]), the PJRT runtime bridge ([`runtime`]), a
+//!   pure-Rust model backend ([`model`]), from-scratch baseline codecs
+//!   ([`baselines`]), a batching compression server ([`coordinator`]), and
+//!   the data pipeline ([`data`]).
+//!
+//! Python never runs on the request path: `make artifacts` trains and
+//! lowers the models once; the `bbans` binary is self-contained after that.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for measured paper-vs-reproduction results.
+
+pub mod ans;
+pub mod baselines;
+pub mod bbans;
+pub mod bench;
+pub mod codecs;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,248 @@
+//! `bbans` — command-line front end for the BB-ANS compression system.
+//!
+//! Subcommands:
+//!   info                         show artifact/model info
+//!   compress   -m MODEL -i IDX -o FILE [-n N] [--native] [--latent-bits B]
+//!   decompress -i FILE -o IDX [--native]
+//!   serve      [--bind ADDR] [--native] [--max-jobs J] [--window-ms W]
+//!   client     --addr ADDR --stats
+//!
+//! Arg parsing is hand-rolled (clap is unavailable offline).
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use bbans::bbans::container::Container;
+use bbans::bbans::BbAnsConfig;
+use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::data;
+use bbans::runtime::{default_artifact_dir, load_config};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut a = Args {
+        positional: Vec::new(),
+        flags: Default::default(),
+        switches: Default::default(),
+    };
+    let mut q: VecDeque<_> = argv.iter().cloned().collect();
+    while let Some(arg) = q.pop_front() {
+        if let Some(name) = arg.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                a.flags.insert(k.to_string(), v.to_string());
+            } else if q.front().map(|n| !n.starts_with('-')).unwrap_or(false) && !is_switch(name) {
+                a.flags.insert(name.to_string(), q.pop_front().unwrap());
+            } else {
+                a.switches.insert(name.to_string());
+            }
+        } else if let Some(short) = arg.strip_prefix('-') {
+            let name = match short {
+                "m" => "model",
+                "i" => "input",
+                "o" => "output",
+                "n" => "count",
+                other => other,
+            };
+            if let Some(v) = q.pop_front() {
+                a.flags.insert(name.to_string(), v);
+            }
+        } else {
+            a.positional.push(arg);
+        }
+    }
+    a
+}
+
+fn is_switch(name: &str) -> bool {
+    matches!(name, "native" | "stats" | "binarized" | "help")
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bbans <info|compress|decompress|serve|client> [args]\n\
+         \n\
+         bbans info\n\
+         bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native]\n\
+         bbans decompress -i in.bbc -o out.idx [--native]\n\
+         bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16] [--window-ms 2]\n\
+         bbans client     --addr HOST:PORT --stats\n\
+         \n\
+         Artifacts default to ./artifacts ($BBANS_ARTIFACTS overrides)."
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(),
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn service(args: &Args) -> ModelService {
+    let params = ServiceParams {
+        max_jobs: args
+            .flags
+            .get("max-jobs")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(16),
+        batch_window: std::time::Duration::from_millis(
+            args.flags
+                .get("window-ms")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2),
+        ),
+        bbans: bbans_config(args),
+    };
+    ModelService::spawn(
+        default_artifact_dir(),
+        !args.switches.contains("native"),
+        params,
+    )
+}
+
+fn bbans_config(args: &Args) -> BbAnsConfig {
+    let mut cfg = BbAnsConfig::default();
+    if let Some(b) = args.flags.get("latent-bits").and_then(|v| v.parse().ok()) {
+        cfg.latent_bits = b;
+    }
+    if let Some(p) = args.flags.get("pixel-prec").and_then(|v| v.parse().ok()) {
+        cfg.pixel_prec = p;
+    }
+    cfg
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = default_artifact_dir();
+    let config = load_config(&dir)?;
+    println!("artifact dir : {}", dir.display());
+    println!(
+        "pixels       : {}",
+        config
+            .req("pixels")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_u64()
+            .unwrap()
+    );
+    if let Some(bbans::util::json::Json::Obj(models)) = config.get("models") {
+        for (name, m) in models {
+            println!(
+                "model '{name}': latent={} hidden={} likelihood={} test-ELBO={:.4} bits/dim",
+                m.get("latent_dim").and_then(|v| v.as_u64()).unwrap_or(0),
+                m.get("hidden").and_then(|v| v.as_u64()).unwrap_or(0),
+                m.get("likelihood").and_then(|v| v.as_str()).unwrap_or("?"),
+                m.get("test_elbo_bpd")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let model = args.flags.get("model").context("need -m MODEL")?.clone();
+    let input = PathBuf::from(args.flags.get("input").context("need -i IDX")?);
+    let output = PathBuf::from(args.flags.get("output").context("need -o FILE")?);
+    let ds = data::load_idx_images(&input)?;
+    let n = args
+        .flags
+        .get("count")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(ds.len());
+    let (rows, cols) = (ds.rows, ds.cols);
+    let images: Vec<Vec<u8>> = ds.images.into_iter().take(n).collect();
+    let raw_bytes = images.len() * rows * cols;
+
+    let svc = service(args);
+    let h = svc.handle();
+    let t = std::time::Instant::now();
+    let container = h.compress(&model, images)?;
+    let dt = t.elapsed();
+    std::fs::write(&output, &container)?;
+    let parsed = Container::from_bytes(&container)?;
+    println!(
+        "compressed {} images: {} -> {} bytes ({:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+        parsed.num_images,
+        raw_bytes,
+        container.len(),
+        parsed.bits_per_dim(),
+        dt.as_secs_f64(),
+        parsed.num_images as f64 / dt.as_secs_f64(),
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
+    let output = PathBuf::from(args.flags.get("output").context("need -o IDX")?);
+    let container = std::fs::read(&input)?;
+    let svc = service(args);
+    let h = svc.handle();
+    let t = std::time::Instant::now();
+    let images = h.decompress(container)?;
+    let dt = t.elapsed();
+    let n = images.len();
+    let side = (images.first().map(|i| i.len()).unwrap_or(0) as f64).sqrt() as usize;
+    let ds = data::Dataset {
+        rows: side,
+        cols: side,
+        images,
+    };
+    std::fs::write(&output, data::write_idx_images(&ds))?;
+    println!(
+        "decompressed {n} images in {:.2}s ({:.1} img/s) -> {}",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64(),
+        output.display()
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let bind = args
+        .flags
+        .get("bind")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7878".to_string());
+    let svc = service(args);
+    let server = Server::start(&bind, svc.handle())?;
+    println!("bbans serving on {}", server.addr);
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.flags.get("addr").context("need --addr HOST:PORT")?;
+    let mut client = Client::connect(addr.as_str())?;
+    if args.switches.contains("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    bail!("client currently supports --stats; use the library or examples for data transfer")
+}

@@ -1,0 +1,98 @@
+//! Model layer: metadata, weight loading, and the [`Backend`] abstraction
+//! over *where* the VAE's networks run.
+//!
+//! Two interchangeable backends produce distribution parameters for the
+//! BB-ANS codec:
+//!
+//! * [`vae::NativeVae`] — pure-Rust forward pass from the `.bbwt` weights
+//!   (tests, cross-checks, artifact-free operation);
+//! * [`vae::PjrtVae`] — executes the AOT-lowered HLO artifacts through
+//!   [`crate::runtime::Engine`] (the production path; Pallas kernels
+//!   inlined in the graphs).
+//!
+//! A compressed stream records which backend produced it: floating-point
+//! results differ across backends at the ULP level, and BB-ANS requires
+//! the decoder to reproduce the encoder's quantized distributions exactly.
+
+pub mod tensor;
+pub mod vae;
+pub mod weights;
+
+use anyhow::Result;
+
+/// Which per-pixel likelihood family the generative net parameterizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Likelihood {
+    /// Binarized MNIST: one probability per pixel.
+    Bernoulli,
+    /// Full MNIST: two positive shape parameters per pixel.
+    BetaBinomial,
+}
+
+impl Likelihood {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bernoulli" => Ok(Self::Bernoulli),
+            "beta_binomial" => Ok(Self::BetaBinomial),
+            other => anyhow::bail!("unknown likelihood '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Bernoulli => "bernoulli",
+            Self::BetaBinomial => "beta_binomial",
+        }
+    }
+}
+
+/// Static description of one trained model.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub pixels: usize,
+    pub latent_dim: usize,
+    pub hidden: usize,
+    pub likelihood: Likelihood,
+    /// Test-set negative ELBO in bits/dim as measured at training time
+    /// (the compression-rate target; paper Table 2).
+    pub test_elbo_bpd: f64,
+}
+
+/// Per-image likelihood parameters handed to the pixel codecs.
+#[derive(Debug, Clone)]
+pub enum PixelParams {
+    /// `pixels` Bernoulli probabilities.
+    Bernoulli(Vec<f32>),
+    /// Analytic beta-binomial parameters (native backend).
+    BetaBinomialAb { alpha: Vec<f32>, beta: Vec<f32> },
+    /// Precomputed PMF table, row-major `[pixels, 256]` (PJRT backend —
+    /// the table is produced inside the decoder graph by the L1 kernel).
+    BetaBinomialTable(Vec<f32>),
+}
+
+/// Where the VAE networks execute. Batched calls take several images /
+/// latents at once so callers (the coordinator) can amortize dispatch.
+///
+/// Deliberately **not** `Send`/`Sync`: the `xla` crate's PJRT handles are
+/// reference-counted thread-local objects. The coordinator therefore owns
+/// each backend inside a dedicated model-worker thread and talks to it via
+/// channels (see `coordinator::batcher`), which is the batching
+/// architecture we want anyway.
+pub trait Backend {
+    fn meta(&self) -> &ModelMeta;
+
+    /// Stable identifier recorded in compressed containers; decode must
+    /// use a backend with the same id (it encodes everything that affects
+    /// bit-exactness of the distribution parameters, e.g. the PJRT batch
+    /// variant).
+    fn backend_id(&self) -> String;
+
+    /// Recognition net: scaled images (len `pixels` each, values in [0,1])
+    /// → (mu, sigma) per image.
+    fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>>;
+
+    /// Generative net: latents (len `latent_dim` each) → per-pixel
+    /// likelihood parameters per latent.
+    fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>>;
+}

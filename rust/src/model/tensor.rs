@@ -1,0 +1,138 @@
+//! Minimal dense f32 tensor ops for the native (pure-Rust) model backend.
+//!
+//! This is deliberately small: the VAE needs matmul + bias + a few
+//! activations. The native backend exists to (a) cross-check the PJRT
+//! path, (b) run tests without artifacts, and (c) serve as the fallback
+//! when no accelerator runtime is available. The PJRT path is the
+//! production one.
+
+/// Row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// `out = x @ w + b`, with `x: [B, K]`, `w: [K, N]`, `b: [N]`.
+///
+/// The inner loop is written k-outer so each pass streams a row of `w`
+/// sequentially (cache-friendly; autovectorizes well).
+pub fn dense(x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
+    assert_eq!(x.cols, w.rows, "dense: inner dims {} vs {}", x.cols, w.rows);
+    assert_eq!(w.cols, b.len(), "dense: bias len");
+    let mut out = Matrix::zeros(x.rows, w.cols);
+    for r in 0..x.rows {
+        let xrow = x.row(r);
+        let orow = out.row_mut(r);
+        orow.copy_from_slice(b);
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // input images are sparse; skip zero activations
+            }
+            let wrow = w.row(k);
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+pub fn relu_inplace(m: &mut Matrix) {
+    for v in &mut m.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn sigmoid_inplace(m: &mut Matrix) {
+    for v in &mut m.data {
+        *v = crate::util::math::sigmoid(*v as f64) as f32;
+    }
+}
+
+pub fn softplus_inplace(m: &mut Matrix) {
+    for v in &mut m.data {
+        *v = crate::util::math::softplus(*v as f64) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_known_values() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1]], b = [10, 20]
+        let x = Matrix::new(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Matrix::new(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let out = dense(&x, &w, &[10.0, 20.0]);
+        assert_eq!(out.data, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn dense_rectangular() {
+        let x = Matrix::new(1, 3, vec![1.0, -1.0, 2.0]);
+        let w = Matrix::new(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = dense(&x, &w, &[0.5, -0.5]);
+        // [1*1 -1*3 + 2*5 + 0.5, 1*2 -1*4 + 2*6 - 0.5] = [8.5, 9.5]
+        assert_eq!(out.data, vec![8.5, 9.5]);
+    }
+
+    #[test]
+    fn activations() {
+        let mut m = Matrix::new(1, 3, vec![-1.0, 0.0, 2.0]);
+        relu_inplace(&mut m);
+        assert_eq!(m.data, vec![0.0, 0.0, 2.0]);
+        let mut s = Matrix::new(1, 1, vec![0.0]);
+        sigmoid_inplace(&mut s);
+        assert_eq!(s.data, vec![0.5]);
+        let mut p = Matrix::new(1, 1, vec![0.0]);
+        softplus_inplace(&mut p);
+        assert!((p.data[0] - std::f64::consts::LN_2 as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_skip_matches_dense_path() {
+        // Zero-skipping must not change results.
+        let x = Matrix::new(1, 4, vec![0.0, 1.5, 0.0, -2.0]);
+        let w = Matrix::new(4, 3, (0..12).map(|i| i as f32 * 0.1).collect());
+        let out = dense(&x, &w, &[1.0, 1.0, 1.0]);
+        let mut want = vec![1.0f32; 3];
+        for k in 0..4 {
+            for n in 0..3 {
+                want[n] += x.data[k] * w.data[k * 3 + n];
+            }
+        }
+        for (a, b) in out.data.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

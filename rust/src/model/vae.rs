@@ -1,0 +1,518 @@
+//! The two [`Backend`] implementations: native Rust forward pass and the
+//! PJRT artifact executor.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::{dense, relu_inplace, sigmoid_inplace, softplus_inplace, Matrix};
+use super::weights::Weights;
+use super::{Backend, Likelihood, ModelMeta, PixelParams};
+use crate::runtime::{Engine, Tensor};
+
+/// Matches `python/compile/model.py::LOGVAR_MIN/MAX`.
+const LOGVAR_MIN: f32 = -10.0;
+const LOGVAR_MAX: f32 = 10.0;
+/// Matches `python/compile/model.py::AB_EPS`.
+const AB_EPS: f32 = 1e-3;
+
+/// Load a [`NativeVae`] for `model` from the artifact bundle (shared by
+/// the CLI, examples, benches and tests).
+pub fn load_native(artifact_dir: impl AsRef<std::path::Path>, model: &str) -> Result<NativeVae> {
+    let dir = artifact_dir.as_ref();
+    let config = crate::runtime::load_config(dir)?;
+    let m = config
+        .get("models")
+        .and_then(|ms| ms.get(model))
+        .ok_or_else(|| anyhow!("model '{model}' not in config"))?;
+    let meta = ModelMeta {
+        name: model.to_string(),
+        pixels: config
+            .req("pixels")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .unwrap(),
+        latent_dim: m
+            .req("latent_dim")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .unwrap(),
+        hidden: m
+            .req("hidden")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .unwrap(),
+        likelihood: Likelihood::parse(
+            m.req("likelihood")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap(),
+        )?,
+        test_elbo_bpd: m
+            .get("test_elbo_bpd")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN),
+    };
+    let weights = dir.join(
+        m.req("weights")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .unwrap(),
+    );
+    NativeVae::load(weights, meta)
+}
+
+// ---------------------------------------------------------------- native
+
+/// Pure-Rust VAE forward pass from `.bbwt` weights.
+pub struct NativeVae {
+    meta: ModelMeta,
+    enc_w1: Matrix,
+    enc_b1: Vec<f32>,
+    enc_w_mu: Matrix,
+    enc_b_mu: Vec<f32>,
+    enc_w_lv: Matrix,
+    enc_b_lv: Vec<f32>,
+    dec_w1: Matrix,
+    dec_b1: Vec<f32>,
+    dec_w_out: Matrix,
+    dec_b_out: Vec<f32>,
+}
+
+impl NativeVae {
+    pub fn from_weights(weights: &Weights, meta: ModelMeta) -> Result<Self> {
+        let v = Self {
+            enc_w1: weights.matrix("enc_w1")?,
+            enc_b1: weights.vector("enc_b1")?,
+            enc_w_mu: weights.matrix("enc_w_mu")?,
+            enc_b_mu: weights.vector("enc_b_mu")?,
+            enc_w_lv: weights.matrix("enc_w_lv")?,
+            enc_b_lv: weights.vector("enc_b_lv")?,
+            dec_w1: weights.matrix("dec_w1")?,
+            dec_b1: weights.vector("dec_b1")?,
+            dec_w_out: weights.matrix("dec_w_out")?,
+            dec_b_out: weights.vector("dec_b_out")?,
+            meta,
+        };
+        // Shape sanity.
+        let (p, l, h) = (v.meta.pixels, v.meta.latent_dim, v.meta.hidden);
+        let heads = match v.meta.likelihood {
+            Likelihood::Bernoulli => 1,
+            Likelihood::BetaBinomial => 2,
+        };
+        if v.enc_w1.rows != p || v.enc_w1.cols != h {
+            bail!("enc_w1 shape {:?}", (v.enc_w1.rows, v.enc_w1.cols));
+        }
+        if v.enc_w_mu.cols != l || v.enc_w_lv.cols != l {
+            bail!("latent head shapes");
+        }
+        if v.dec_w1.rows != l || v.dec_w_out.cols != p * heads {
+            bail!("decoder shapes");
+        }
+        Ok(v)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>, meta: ModelMeta) -> Result<Self> {
+        let w = Weights::load(path)?;
+        Self::from_weights(&w, meta)
+    }
+
+    /// A deterministic, randomly-initialized model (tests / benches that
+    /// must run without trained artifacts).
+    pub fn random(meta: ModelMeta, seed: u64) -> Self {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let heads = match meta.likelihood {
+            Likelihood::Bernoulli => 1,
+            Likelihood::BetaBinomial => 2,
+        };
+        let (p, h, l) = (meta.pixels, meta.hidden, meta.latent_dim);
+        let mut mat = |r: usize, c: usize, scale: f64| {
+            Matrix::new(
+                r,
+                c,
+                (0..r * c)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect(),
+            )
+        };
+        Self {
+            enc_w1: mat(p, h, 0.05),
+            enc_b1: vec![0.0; h],
+            enc_w_mu: mat(h, l, 0.1),
+            enc_b_mu: vec![0.0; l],
+            enc_w_lv: mat(h, l, 0.05),
+            enc_b_lv: vec![-1.0; l],
+            dec_w1: mat(l, h, 0.1),
+            dec_b1: vec![0.0; h],
+            dec_w_out: mat(h, p * heads, 0.05),
+            dec_b_out: vec![0.0; p * heads],
+            meta,
+        }
+    }
+
+    fn batch_matrix(&self, xs: &[&[f32]], want_cols: usize) -> Result<Matrix> {
+        let mut data = Vec::with_capacity(xs.len() * want_cols);
+        for x in xs {
+            if x.len() != want_cols {
+                bail!("input length {} != {want_cols}", x.len());
+            }
+            data.extend_from_slice(x);
+        }
+        Ok(Matrix::new(xs.len(), want_cols, data))
+    }
+}
+
+impl Backend for NativeVae {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn backend_id(&self) -> String {
+        "native".to_string()
+    }
+
+    fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let x = self.batch_matrix(xs, self.meta.pixels)?;
+        let mut h = dense(&x, &self.enc_w1, &self.enc_b1);
+        relu_inplace(&mut h);
+        let mu = dense(&h, &self.enc_w_mu, &self.enc_b_mu);
+        let lv = dense(&h, &self.enc_w_lv, &self.enc_b_lv);
+        Ok((0..xs.len())
+            .map(|r| {
+                let mu_r = mu.row(r).to_vec();
+                let sigma_r = lv
+                    .row(r)
+                    .iter()
+                    .map(|&v| (0.5 * v.clamp(LOGVAR_MIN, LOGVAR_MAX)).exp())
+                    .collect();
+                (mu_r, sigma_r)
+            })
+            .collect())
+    }
+
+    fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
+        let y = self.batch_matrix(ys, self.meta.latent_dim)?;
+        let mut h = dense(&y, &self.dec_w1, &self.dec_b1);
+        relu_inplace(&mut h);
+        let mut out = dense(&h, &self.dec_w_out, &self.dec_b_out);
+        match self.meta.likelihood {
+            Likelihood::Bernoulli => {
+                sigmoid_inplace(&mut out);
+                Ok((0..ys.len())
+                    .map(|r| PixelParams::Bernoulli(out.row(r).to_vec()))
+                    .collect())
+            }
+            Likelihood::BetaBinomial => {
+                softplus_inplace(&mut out);
+                let p = self.meta.pixels;
+                Ok((0..ys.len())
+                    .map(|r| {
+                        let row = out.row(r);
+                        PixelParams::BetaBinomialAb {
+                            alpha: row[..p].iter().map(|v| v + AB_EPS).collect(),
+                            beta: row[p..].iter().map(|v| v + AB_EPS).collect(),
+                        }
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- pjrt
+
+/// VAE backend executing the AOT artifacts through PJRT.
+///
+/// **Determinism contract**: every call routes through ONE fixed batch-size
+/// variant (`coding_batch`), chunked and zero-padded. Different batch
+/// variants are different compiled executables whose f32 results can
+/// differ at ULP level; BB-ANS requires the decoder to reproduce the
+/// encoder's distribution parameters bit-exactly, and within a fixed
+/// executable each output row depends only on its own input row, so
+/// padding/co-batching is safe while variant-switching is not. The chosen
+/// batch is part of [`Backend::backend_id`] and recorded in containers.
+pub struct PjrtVae {
+    meta: ModelMeta,
+    engine: Arc<Engine>,
+    /// (batch_size, encoder artifact, decoder artifact), ascending batch.
+    variants: Vec<(usize, String, String)>,
+    /// Index into `variants` used for ALL coding-path calls.
+    coding_variant: usize,
+    backend_id: String,
+}
+
+impl PjrtVae {
+    /// Build from `model_config.json` (loads + compiles all variants).
+    pub fn from_config(engine: Arc<Engine>, config: &crate::util::json::Json, name: &str) -> Result<Self> {
+        let m = config
+            .get("models")
+            .and_then(|ms| ms.get(name))
+            .ok_or_else(|| anyhow!("model '{name}' not in config"))?;
+        let meta = ModelMeta {
+            name: name.to_string(),
+            pixels: config.req("pixels").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+            latent_dim: m.req("latent_dim").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+            hidden: m.req("hidden").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+            likelihood: Likelihood::parse(
+                m.req("likelihood").map_err(|e| anyhow!("{e}"))?.as_str().unwrap(),
+            )?,
+            test_elbo_bpd: m
+                .get("test_elbo_bpd")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+        };
+        let enc = m.req("encoder_hlo").map_err(|e| anyhow!("{e}"))?;
+        let dec = m.req("decoder_hlo").map_err(|e| anyhow!("{e}"))?;
+        let mut variants = Vec::new();
+        if let (crate::util::json::Json::Obj(eo), crate::util::json::Json::Obj(dobj)) = (enc, dec) {
+            for (bs, ef) in eo {
+                let b: usize = bs.parse().context("batch size key")?;
+                let df = dobj
+                    .get(bs)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("decoder variant for batch {b} missing"))?;
+                let ef = ef.as_str().ok_or_else(|| anyhow!("encoder file"))?;
+                variants.push((b, ef.to_string(), df.to_string()));
+            }
+        } else {
+            bail!("encoder_hlo/decoder_hlo must be objects");
+        }
+        variants.sort_by_key(|v| v.0);
+        if variants.is_empty() {
+            bail!("no artifact variants for model '{name}'");
+        }
+        // Fixed coding variant: the largest batch (best amortization; the
+        // coordinator batches cross-stream work up to this size).
+        let coding_variant = variants.len() - 1;
+        let backend_id = format!("pjrt-b{}", variants[coding_variant].0);
+        // Only the coding variant needs compiling.
+        engine.load(&variants[coding_variant].1)?;
+        engine.load(&variants[coding_variant].2)?;
+        Ok(Self {
+            meta,
+            engine,
+            variants,
+            coding_variant,
+            backend_id,
+        })
+    }
+
+    /// Switch to a specific batch-size variant (changes the backend id —
+    /// streams encoded under a different variant cannot be decoded).
+    pub fn with_coding_batch(mut self, batch: usize) -> Result<Self> {
+        let idx = self
+            .variants
+            .iter()
+            .position(|(b, _, _)| *b == batch)
+            .ok_or_else(|| anyhow!("no artifact variant for batch {batch}"))?;
+        self.coding_variant = idx;
+        self.backend_id = format!("pjrt-b{batch}");
+        self.engine.load(&self.variants[idx].1)?;
+        self.engine.load(&self.variants[idx].2)?;
+        Ok(self)
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.0).collect()
+    }
+
+    pub fn coding_batch(&self) -> usize {
+        self.variants[self.coding_variant].0
+    }
+
+    /// Run the fixed-variant artifact over `items`, chunking + padding.
+    fn run_batched(
+        &self,
+        items: &[&[f32]],
+        item_len: usize,
+        pick: impl Fn(&(usize, String, String)) -> &String,
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let mut outs = Vec::new();
+        let mut i = 0;
+        while i < items.len() {
+            let remaining = items.len() - i;
+            let var = &self.variants[self.coding_variant];
+            let b = var.0;
+            let take = remaining.min(b);
+            let mut data = Vec::with_capacity(b * item_len);
+            for item in &items[i..i + take] {
+                if item.len() != item_len {
+                    bail!("item length {} != {item_len}", item.len());
+                }
+                data.extend_from_slice(item);
+            }
+            data.resize(b * item_len, 0.0); // zero-pad
+            let t = Tensor::new(vec![b, item_len], data);
+            let result = self.engine.run(pick(var), &[t])?;
+            outs.push((take, result));
+            i += take;
+        }
+        // Flatten: per original item, slice the padded outputs.
+        let mut per_item = Vec::with_capacity(items.len());
+        for (take, tensors) in outs {
+            for r in 0..take {
+                per_item.push(
+                    tensors
+                        .iter()
+                        .map(|t| {
+                            let stride: usize = t.dims[1..].iter().product();
+                            Tensor::new(
+                                t.dims[1..].to_vec(),
+                                t.data[r * stride..(r + 1) * stride].to_vec(),
+                            )
+                        })
+                        .collect::<Vec<_>>(),
+                );
+            }
+        }
+        Ok(per_item)
+    }
+}
+
+impl Backend for PjrtVae {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn backend_id(&self) -> String {
+        self.backend_id.clone()
+    }
+
+    fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let per_item = self.run_batched(xs, self.meta.pixels, |v| &v.1)?;
+        per_item
+            .into_iter()
+            .map(|ts| {
+                if ts.len() != 2 {
+                    bail!("encoder must output (mu, sigma), got {} tensors", ts.len());
+                }
+                Ok((ts[0].data.clone(), ts[1].data.clone()))
+            })
+            .collect()
+    }
+
+    fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
+        let per_item = self.run_batched(ys, self.meta.latent_dim, |v| &v.2)?;
+        per_item
+            .into_iter()
+            .map(|ts| {
+                let t = ts
+                    .first()
+                    .ok_or_else(|| anyhow!("decoder produced no output"))?;
+                match self.meta.likelihood {
+                    Likelihood::Bernoulli => Ok(PixelParams::Bernoulli(t.data.clone())),
+                    Likelihood::BetaBinomial => {
+                        Ok(PixelParams::BetaBinomialTable(t.data.clone()))
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(likelihood: Likelihood) -> ModelMeta {
+        ModelMeta {
+            name: "test".into(),
+            pixels: 16,
+            latent_dim: 4,
+            hidden: 8,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        }
+    }
+
+    #[test]
+    fn native_posterior_shapes_and_ranges() {
+        let v = NativeVae::random(meta(Likelihood::Bernoulli), 1);
+        let x = vec![0.5f32; 16];
+        let out = v.posterior(&[&x, &x]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0.len(), 4);
+        assert_eq!(out[0].1.len(), 4);
+        assert!(out[0].1.iter().all(|&s| s > 0.0));
+        // Deterministic.
+        let out2 = v.posterior(&[&x]).unwrap();
+        assert_eq!(out[0], out2[0]);
+    }
+
+    #[test]
+    fn native_likelihood_bernoulli_in_unit_interval() {
+        let v = NativeVae::random(meta(Likelihood::Bernoulli), 2);
+        let y = vec![0.3f32; 4];
+        match &v.likelihood(&[&y]).unwrap()[0] {
+            PixelParams::Bernoulli(p) => {
+                assert_eq!(p.len(), 16);
+                assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            }
+            other => panic!("wrong params {other:?}"),
+        }
+    }
+
+    #[test]
+    fn native_likelihood_beta_binomial_positive() {
+        let v = NativeVae::random(meta(Likelihood::BetaBinomial), 3);
+        let y = vec![-0.5f32; 4];
+        match &v.likelihood(&[&y]).unwrap()[0] {
+            PixelParams::BetaBinomialAb { alpha, beta } => {
+                assert_eq!(alpha.len(), 16);
+                assert_eq!(beta.len(), 16);
+                assert!(alpha.iter().all(|&a| a > 0.0));
+                assert!(beta.iter().all(|&b| b > 0.0));
+            }
+            other => panic!("wrong params {other:?}"),
+        }
+    }
+
+    #[test]
+    fn native_rejects_bad_input_len() {
+        let v = NativeVae::random(meta(Likelihood::Bernoulli), 4);
+        let x = vec![0.0f32; 15];
+        assert!(v.posterior(&[&x]).is_err());
+    }
+
+    #[test]
+    fn weights_roundtrip_through_bbwt() {
+        use crate::model::weights::{write_bbwt, TensorData, Weights};
+        use std::collections::BTreeMap;
+        let v = NativeVae::random(meta(Likelihood::Bernoulli), 5);
+        let mut m = BTreeMap::new();
+        let mut put2 = |name: &str, mat: &Matrix| {
+            m.insert(
+                name.to_string(),
+                TensorData {
+                    dims: vec![mat.rows, mat.cols],
+                    data: mat.data.clone(),
+                },
+            );
+        };
+        put2("enc_w1", &v.enc_w1);
+        put2("enc_w_mu", &v.enc_w_mu);
+        put2("enc_w_lv", &v.enc_w_lv);
+        put2("dec_w1", &v.dec_w1);
+        put2("dec_w_out", &v.dec_w_out);
+        let mut put1 = |name: &str, vec: &Vec<f32>| {
+            m.insert(
+                name.to_string(),
+                TensorData {
+                    dims: vec![vec.len()],
+                    data: vec.clone(),
+                },
+            );
+        };
+        put1("enc_b1", &v.enc_b1);
+        put1("enc_b_mu", &v.enc_b_mu);
+        put1("enc_b_lv", &v.enc_b_lv);
+        put1("dec_b1", &v.dec_b1);
+        put1("dec_b_out", &v.dec_b_out);
+        let bytes = write_bbwt(&m);
+        let w = Weights::parse(&bytes).unwrap();
+        let v2 = NativeVae::from_weights(&w, meta(Likelihood::Bernoulli)).unwrap();
+        let x = vec![0.7f32; 16];
+        assert_eq!(v.posterior(&[&x]).unwrap(), v2.posterior(&[&x]).unwrap());
+    }
+}

@@ -1,0 +1,198 @@
+//! BBWT weight-file parser (written by `python/compile/aot.py::write_bbwt`).
+//!
+//! Layout (little-endian): magic `b"BBWT"`, u32 version, u32 tensor count,
+//! then per tensor: u16 name_len, name bytes (utf-8), u8 ndim,
+//! u32 dims..., f32 data.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct TensorData {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, TensorData>,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("BBWT truncated at byte {} (need {n} more)", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+impl Weights {
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        let magic = c.take(4)?;
+        if magic != b"BBWT" {
+            bail!("bad BBWT magic {magic:?}");
+        }
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported BBWT version {version}");
+        }
+        let count = c.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = c.u16()? as usize;
+            let name = std::str::from_utf8(c.take(name_len)?)
+                .context("tensor name utf8")?
+                .to_string();
+            let ndim = c.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(c.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let raw = c.take(4 * n)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, TensorData { dims, data });
+        }
+        if c.pos != bytes.len() {
+            bail!("BBWT trailing garbage: {} bytes", bytes.len() - c.pos);
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading weights {}", path.as_ref().display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorData> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor '{name}'"))
+    }
+
+    /// Fetch as a matrix ([K, N] 2-D tensor).
+    pub fn matrix(&self, name: &str) -> Result<crate::model::tensor::Matrix> {
+        let t = self.get(name)?;
+        if t.dims.len() != 2 {
+            bail!("tensor '{name}' is not 2-D: {:?}", t.dims);
+        }
+        Ok(crate::model::tensor::Matrix::new(
+            t.dims[0],
+            t.dims[1],
+            t.data.clone(),
+        ))
+    }
+
+    /// Fetch as a vector (1-D tensor).
+    pub fn vector(&self, name: &str) -> Result<Vec<f32>> {
+        let t = self.get(name)?;
+        if t.dims.len() != 1 {
+            bail!("tensor '{name}' is not 1-D: {:?}", t.dims);
+        }
+        Ok(t.data.clone())
+    }
+}
+
+/// Serialize (used by tests to fabricate weight files).
+pub fn write_bbwt(tensors: &BTreeMap<String, TensorData>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"BBWT");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(t.dims.len() as u8);
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &t.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, TensorData> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "w1".to_string(),
+            TensorData {
+                dims: vec![2, 3],
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+        );
+        m.insert(
+            "b1".to_string(),
+            TensorData {
+                dims: vec![3],
+                data: vec![0.1, 0.2, 0.3],
+            },
+        );
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = write_bbwt(&sample());
+        let w = Weights::parse(&bytes).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        assert_eq!(w.get("w1").unwrap().dims, vec![2, 3]);
+        assert_eq!(w.vector("b1").unwrap(), vec![0.1, 0.2, 0.3]);
+        let m = w.matrix("w1").unwrap();
+        assert_eq!(m.rows, 2);
+        assert_eq!(m.cols, 3);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = write_bbwt(&sample());
+        assert!(Weights::parse(&bytes[..bytes.len() - 2]).is_err()); // truncated
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Weights::parse(&bad).is_err()); // bad magic
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Weights::parse(&extra).is_err()); // trailing garbage
+    }
+
+    #[test]
+    fn wrong_rank_access_errors() {
+        let bytes = write_bbwt(&sample());
+        let w = Weights::parse(&bytes).unwrap();
+        assert!(w.matrix("b1").is_err());
+        assert!(w.vector("w1").is_err());
+        assert!(w.get("nope").is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT runtime bridge: load AOT-lowered HLO text artifacts and execute
+//! them on the CPU PJRT client from the Rust hot path.
+//!
+//! Pattern (see `/opt/xla-example/load_hlo.rs`): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. The
+//! artifacts are lowered with `return_tuple=True`, so every output is a
+//! tuple literal that we decompose.
+//!
+//! One [`Engine`] owns the client plus a cache of compiled executables,
+//! keyed by artifact name — the coordinator compiles each (model, batch
+//! size) variant once at startup and reuses it for every request.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A loaded-and-compiled HLO artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Dense f32 tensor moved across the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+
+    /// Row `i` along the leading dimension.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let stride: usize = self.dims[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+}
+
+/// PJRT CPU engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    execs: Mutex<HashMap<String, Executable>>,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self {
+            client,
+            execs: Mutex::new(HashMap::new()),
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile an HLO text artifact (idempotent; cached by `name`).
+    pub fn load(&self, name: &str) -> Result<()> {
+        let mut execs = self.execs.lock().unwrap();
+        if execs.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        execs.insert(name.to_string(), Executable { exe });
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns all outputs of the
+    /// result tuple as dense f32 tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let execs = self.execs.lock().unwrap();
+        let exec = execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffers from {name}"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("output shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output data: {e:?}"))?;
+                if data.len() != dims.iter().product::<usize>() {
+                    bail!("output size mismatch: {} vs {:?}", data.len(), dims);
+                }
+                Ok(Tensor { dims, data })
+            })
+            .collect()
+    }
+
+    /// Names currently compiled.
+    pub fn loaded(&self) -> Vec<String> {
+        self.execs.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Convenience: read `artifacts/model_config.json`.
+pub fn load_config(artifact_dir: impl AsRef<Path>) -> Result<crate::util::json::Json> {
+    let p = artifact_dir.as_ref().join("model_config.json");
+    let text = std::fs::read_to_string(&p)
+        .with_context(|| format!("reading {} (run `make artifacts`)", p.display()))?;
+    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))
+}
+
+/// True if the artifact bundle exists (tests use this to self-skip).
+pub fn artifacts_available(artifact_dir: impl AsRef<Path>) -> bool {
+    artifact_dir.as_ref().join("model_config.json").exists()
+}
+
+/// Default artifact directory: `$BBANS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("BBANS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

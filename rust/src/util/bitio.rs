@@ -1,0 +1,315 @@
+//! Bit-level I/O used by the baseline codecs (DEFLATE, bz-style, WebP-style).
+//!
+//! Two bit orders are needed:
+//! * **LSB-first** (DEFLATE): bits are packed into each byte starting at the
+//!   least-significant bit. Huffman codes in DEFLATE are additionally stored
+//!   most-significant-code-bit first, which callers handle by reversing the
+//!   code (see `huffman::reverse_bits`).
+//! * **MSB-first** (our bz-style container): straight big-endian bit packing.
+
+/// LSB-first bit writer (DEFLATE convention).
+#[derive(Debug, Default)]
+pub struct LsbWriter {
+    out: Vec<u8>,
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl LsbWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n ≤ 57).
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || v < (1u64 << n));
+        self.bitbuf |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push((self.bitbuf & 0xff) as u8);
+            self.bitbuf >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Pad to a byte boundary with zero bits.
+    pub fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.out.push((self.bitbuf & 0xff) as u8);
+            self.bitbuf = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write raw bytes; requires byte alignment.
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        assert_eq!(self.nbits, 0, "write_bytes requires byte alignment");
+        self.out.extend_from_slice(bytes);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.nbits as usize
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+}
+
+/// LSB-first bit reader (DEFLATE convention).
+#[derive(Debug)]
+pub struct LsbReader<'a> {
+    data: &'a [u8],
+    pos: usize, // byte position
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl<'a> LsbReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self {
+            data,
+            pos: 0,
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.bitbuf |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n ≤ 57). Returns None if the stream is exhausted.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return None;
+            }
+        }
+        let v = if n == 0 {
+            0
+        } else {
+            self.bitbuf & ((1u64 << n) - 1)
+        };
+        self.bitbuf >>= n;
+        self.nbits -= n;
+        Some(v)
+    }
+
+    /// Peek up to `n` bits without consuming (may return fewer near EOF,
+    /// zero-padded high bits).
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        self.refill();
+        self.bitbuf & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(self.nbits >= n);
+        self.bitbuf >>= n;
+        self.nbits -= n;
+    }
+
+    /// Number of whole bits still available.
+    pub fn bits_remaining(&self) -> usize {
+        (self.data.len() - self.pos) * 8 + self.nbits as usize
+    }
+
+    /// Discard buffered bits to realign to the next byte boundary, then
+    /// return the remaining byte slice view (used for stored DEFLATE blocks).
+    pub fn align_and_rest(&mut self) -> (&'a [u8], usize) {
+        // Drop bits to byte boundary.
+        let drop = self.nbits % 8;
+        self.consume(drop);
+        // Bytes still held in bitbuf:
+        let buffered = (self.nbits / 8) as usize;
+        (self.data, self.pos - buffered)
+    }
+
+    /// Skip forward: consume `n` whole bytes starting from a byte-aligned
+    /// position produced by `align_and_rest`.
+    pub fn seek_to_byte(&mut self, byte_pos: usize) {
+        self.pos = byte_pos;
+        self.bitbuf = 0;
+        self.nbits = 0;
+    }
+}
+
+/// MSB-first bit writer.
+#[derive(Debug, Default)]
+pub struct MsbWriter {
+    out: Vec<u8>,
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl MsbWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v`, most significant first (n ≤ 57).
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        self.bitbuf = (self.bitbuf << n) | (v & if n == 64 { u64::MAX } else { (1 << n) - 1 });
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push(((self.bitbuf >> self.nbits) & 0xff) as u8);
+        }
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.nbits as usize
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.write_bits(0, pad);
+        }
+        self.out
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct MsbReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl<'a> MsbReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self {
+            data,
+            pos: 0,
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 57);
+        while self.nbits < n {
+            if self.pos >= self.data.len() {
+                return None;
+            }
+            self.bitbuf = (self.bitbuf << 8) | self.data[self.pos] as u64;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        self.nbits -= n;
+        let v = (self.bitbuf >> self.nbits) & if n == 0 { 0 } else { (1 << n) - 1 };
+        Some(v)
+    }
+
+    pub fn read_bit(&mut self) -> Option<u8> {
+        self.read_bits(1).map(|b| b as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lsb_roundtrip_fixed() {
+        let mut w = LsbWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xffff, 16);
+        w.write_bits(0, 1);
+        w.write_bits(0x1234, 13);
+        let bytes = w.finish();
+        let mut r = LsbReader::new(&bytes);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(16), Some(0xffff));
+        assert_eq!(r.read_bits(1), Some(0));
+        assert_eq!(r.read_bits(13), Some(0x1234));
+    }
+
+    #[test]
+    fn lsb_roundtrip_random() {
+        let mut rng = Rng::new(123);
+        let items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let n = 1 + rng.below(24) as u32;
+                let v = rng.next_u64() & ((1 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = LsbWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = LsbReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn msb_roundtrip_random() {
+        let mut rng = Rng::new(321);
+        let items: Vec<(u64, u32)> = (0..5000)
+            .map(|_| {
+                let n = 1 + rng.below(30) as u32;
+                let v = rng.next_u64() & ((1 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = MsbWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = MsbReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn lsb_peek_consume() {
+        let mut w = LsbWriter::new();
+        w.write_bits(0b110101, 6);
+        w.write_bits(0xab, 8);
+        let bytes = w.finish();
+        let mut r = LsbReader::new(&bytes);
+        let p = r.peek_bits(6);
+        assert_eq!(p & 0x3f, 0b110101);
+        r.consume(6);
+        assert_eq!(r.read_bits(8), Some(0xab));
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let bytes = [0xffu8];
+        let mut r = LsbReader::new(&bytes);
+        assert_eq!(r.read_bits(8), Some(0xff));
+        assert_eq!(r.read_bits(1), None);
+        let mut r2 = MsbReader::new(&bytes);
+        assert_eq!(r2.read_bits(4), Some(0xf));
+        assert_eq!(r2.read_bits(5), None);
+    }
+}

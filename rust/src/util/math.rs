@@ -1,0 +1,368 @@
+//! Special functions needed by the distribution codecs.
+//!
+//! No external math crates are available offline, so we implement the small
+//! set we need: `erf`/`erfc`, the standard normal CDF `phi` and its inverse
+//! (`probit`, Acklam's algorithm + one Halley refinement), and `lgamma`
+//! (Lanczos), from which `log_beta` and the beta-binomial log-PMF follow.
+//!
+//! Accuracy targets are modest (the codecs quantize to ≤ 2⁻²⁴) but
+//! determinism matters: everything here is straight-line f64 arithmetic,
+//! identical on every run and platform.
+
+use std::f64::consts::PI;
+
+/// Error function, via the Abramowitz & Stegun 7.1.26-style rational
+/// approximation refined to double precision (max abs error ~1.2e-7 for the
+/// simple form is not enough, so we use a higher-order expansion).
+///
+/// This implementation follows W. J. Cody's rational Chebyshev approximation
+/// strategy in three ranges, giving ~1e-15 relative accuracy.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (Cody-style, three ranges).
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    let z = ax * ax;
+    let r = if ax < 0.5 {
+        // erf(x) = x * P(z)/Q(z)
+        const P: [f64; 5] = [
+            3.209377589138469472562e3,
+            3.774852376853020208137e2,
+            1.138641541510501556495e2,
+            3.161123743870565596947e0,
+            1.857777061846031526730e-1,
+        ];
+        const Q: [f64; 5] = [
+            2.844236833439170622273e3,
+            1.282616526077372275645e3,
+            2.440246379344441733056e2,
+            2.360129095234412093499e1,
+            1.0,
+        ];
+        let num = ((((P[4] * z + P[3]) * z + P[2]) * z + P[1]) * z) + P[0];
+        let den = ((((Q[4] * z + Q[3]) * z + Q[2]) * z + Q[1]) * z) + Q[0];
+        return 1.0 - x * num / den;
+    } else if ax < 4.0 {
+        const P: [f64; 9] = [
+            1.23033935479799725272e3,
+            2.05107837782607146532e3,
+            1.71204761263407058314e3,
+            8.81952221241769090411e2,
+            2.98635138197400131132e2,
+            6.61191906371416294775e1,
+            8.88314979438837594118e0,
+            5.64188496988670089180e-1,
+            2.15311535474403846343e-8,
+        ];
+        const Q: [f64; 9] = [
+            1.23033935480374942043e3,
+            3.43936767414372163696e3,
+            4.36261909014324715820e3,
+            3.29079923573345962678e3,
+            1.62138957456669018874e3,
+            5.37181101862009857509e2,
+            1.17693950891312499305e2,
+            1.57449261107098347253e1,
+            1.0,
+        ];
+        let mut num = P[8];
+        let mut den = Q[8];
+        for i in (0..8).rev() {
+            num = num * ax + P[i];
+            den = den * ax + Q[i];
+        }
+        (-z).exp() * num / den
+    } else {
+        // ax >= 4
+        const P: [f64; 6] = [
+            -6.58749161529837803157e-4,
+            -1.60837851487422766278e-2,
+            -1.25781726111229246204e-1,
+            -3.60344899949804439429e-1,
+            -3.05326634961232344035e-1,
+            -1.63153871373020978498e-2,
+        ];
+        const Q: [f64; 6] = [
+            2.33520497626869185443e-3,
+            6.05183413124413191178e-2,
+            5.27905102951428412248e-1,
+            1.87295284992346047209e0,
+            2.56852019228982242072e0,
+            1.0,
+        ];
+        let inv_z = 1.0 / z;
+        let mut num = P[5];
+        let mut den = Q[5];
+        for i in (0..5).rev() {
+            num = num * inv_z + P[i];
+            den = den * inv_z + Q[i];
+        }
+        let r = inv_z * num / den;
+        let frac = (1.0 / (PI.sqrt()) + r) / ax;
+        let e = (-z).exp();
+        if e == 0.0 {
+            0.0
+        } else {
+            e * frac
+        }
+    };
+    if x < 0.0 {
+        2.0 - r
+    } else {
+        r
+    }
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    0.5 * erfc(-x * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Standard normal PDF.
+#[inline]
+pub fn normal_pdf(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * PI).sqrt()
+}
+
+/// Inverse standard normal CDF (probit). Acklam's rational approximation
+/// followed by one Halley step, ~1e-15 accuracy over (0, 1).
+pub fn probit(p: f64) -> f64 {
+    assert!(
+        p > 0.0 && p < 1.0,
+        "probit domain error: p={p} must be in (0,1)"
+    );
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley refinement step.
+    let e = phi(x) - p;
+    let u = e * (2.0 * PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn lgamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        PI.ln() - (PI * x).sin().abs().ln() - lgamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = G[0];
+        let t = x + 7.5;
+        for (i, &g) in G.iter().enumerate().skip(1) {
+            a += g / (x + i as f64);
+        }
+        0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// log B(a, b) = lgamma(a) + lgamma(b) - lgamma(a+b)
+#[inline]
+pub fn log_beta(a: f64, b: f64) -> f64 {
+    lgamma(a) + lgamma(b) - lgamma(a + b)
+}
+
+/// log C(n, k)
+#[inline]
+pub fn log_binomial(n: u32, k: u32) -> f64 {
+    lgamma(n as f64 + 1.0) - lgamma(k as f64 + 1.0) - lgamma((n - k) as f64 + 1.0)
+}
+
+/// Beta-binomial log-PMF: P(k | n, a, b) = C(n,k) B(k+a, n-k+b) / B(a, b).
+/// This mirrors `python/compile/kernels/ref.py::beta_binomial_logpmf`.
+pub fn beta_binomial_logpmf(k: u32, n: u32, a: f64, b: f64) -> f64 {
+    log_binomial(n, k) + log_beta(k as f64 + a, (n - k) as f64 + b) - log_beta(a, b)
+}
+
+/// Numerically-stable log(1 + exp(x)) (softplus), matching jax.nn.softplus.
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values from tables / scipy.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778130465),
+            (1.0, 0.8427007929497149),
+            (2.0, 0.9953222650189527),
+            (3.0, 0.9999779095030014),
+            (-1.0, -0.8427007929497149),
+        ];
+        for (x, want) in cases {
+            let got = erf(x);
+            assert!((got - want).abs() < 1e-12, "erf({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn erfc_large_argument() {
+        // erfc(5) ≈ 1.5374597944280349e-12
+        let got = erfc(5.0);
+        assert!((got - 1.5374597944280349e-12).abs() < 1e-24, "{got}");
+        // erfc(-5) = 2 - erfc(5): within one ulp of 2.
+        assert!((erfc(-5.0) - (2.0 - 1.5374597944280349e-12)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn phi_symmetry_and_values() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-15);
+        assert!((phi(1.959963984540054) - 0.975).abs() < 1e-12);
+        for x in [-3.0, -1.0, -0.1, 0.7, 2.5] {
+            assert!((phi(x) + phi(-x) - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn probit_is_inverse_of_phi() {
+        for i in 1..1000 {
+            let p = i as f64 / 1000.0;
+            let x = probit(p);
+            assert!((phi(x) - p).abs() < 1e-12, "p={p} x={x} phi={}", phi(x));
+        }
+        // Extreme tails.
+        for p in [1e-12, 1e-9, 1e-6, 1.0 - 1e-6, 1.0 - 1e-9] {
+            let x = probit(p);
+            assert!(
+                (phi(x) - p).abs() / p.min(1.0 - p) < 1e-6,
+                "p={p} phi(probit)={}",
+                phi(x)
+            );
+        }
+    }
+
+    #[test]
+    fn lgamma_reference_values() {
+        let cases = [
+            (1.0, 0.0),
+            (2.0, 0.0),
+            (3.0, std::f64::consts::LN_2),
+            (0.5, 0.5723649429247001), // ln(sqrt(pi))
+            (10.0, 12.801827480081469),
+        ];
+        for (x, want) in cases {
+            let got = lgamma(x);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "lgamma({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn beta_binomial_sums_to_one() {
+        for (a, b) in [(1.0, 1.0), (0.5, 0.5), (2.3, 7.7), (20.0, 3.0)] {
+            let total: f64 = (0..=255)
+                .map(|k| beta_binomial_logpmf(k, 255, a, b).exp())
+                .sum();
+            assert!((total - 1.0).abs() < 1e-9, "a={a} b={b} total={total}");
+        }
+    }
+
+    #[test]
+    fn beta_binomial_uniform_when_a_b_one() {
+        // BetaBin(n, 1, 1) is uniform over 0..=n.
+        for k in [0u32, 17, 128, 255] {
+            let lp = beta_binomial_logpmf(k, 255, 1.0, 1.0);
+            assert!((lp - (1.0f64 / 256.0).ln()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn sigmoid_softplus_consistency() {
+        for x in [-40.0f64, -5.0, -0.3, 0.0, 0.3, 5.0, 40.0] {
+            // d/dx softplus = sigmoid; check via finite differences (interior).
+            if x.abs() < 20.0 {
+                let h = 1e-6;
+                let d = (softplus(x + h) - softplus(x - h)) / (2.0 * h);
+                assert!((d - sigmoid(x)).abs() < 1e-6);
+            }
+            // Strict bounds only away from f64 saturation (sigmoid(40)
+            // rounds to exactly 1.0 in double precision).
+            assert!(sigmoid(x) > 0.0 && sigmoid(x) <= 1.0);
+            if x.abs() < 30.0 {
+                assert!(sigmoid(x) < 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundation utilities: PRNG, special functions, bit I/O, JSON, timing,
+//! and a tiny property-testing harness. These replace the crates (rand,
+//! serde, proptest, criterion) that are unavailable in this offline build.
+
+pub mod bitio;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+pub mod timer;

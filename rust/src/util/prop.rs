@@ -1,0 +1,154 @@
+//! A tiny property-based-testing harness (proptest is not available
+//! offline). Provides seeded case generation with automatic minimal-ish
+//! shrinking for byte-vector inputs, which is what most codec roundtrip
+//! properties need.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `cases` random byte vectors of length up to `max_len`,
+/// drawn from distributions that stress codecs: uniform random, low-entropy
+/// (few symbols), runs, and text-like. On failure, shrink to a small
+/// counterexample and panic with its debug representation.
+pub fn check_bytes(seed: u64, cases: usize, max_len: usize, prop: impl Fn(&[u8]) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let data = gen_bytes(&mut rng, max_len, case);
+        if !prop(&data) {
+            let min = shrink_bytes(&data, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}); minimal counterexample \
+                 ({} bytes): {:?}",
+                min.len(),
+                &min[..min.len().min(64)]
+            );
+        }
+    }
+}
+
+/// Generate a byte vector from one of several codec-stressing families.
+pub fn gen_bytes(rng: &mut Rng, max_len: usize, case: usize) -> Vec<u8> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    match case % 5 {
+        // Uniform random (incompressible).
+        0 => (0..len).map(|_| rng.next_u32() as u8).collect(),
+        // Low-entropy alphabet.
+        1 => {
+            let k = 1 + rng.below(4) as u8;
+            (0..len).map(|_| rng.below(k as u64) as u8).collect()
+        }
+        // Long runs.
+        2 => {
+            let mut v = Vec::with_capacity(len);
+            while v.len() < len {
+                let b = rng.next_u32() as u8;
+                let run = 1 + rng.below(200) as usize;
+                for _ in 0..run.min(len - v.len()) {
+                    v.push(b);
+                }
+            }
+            v
+        }
+        // Text-like (skewed printable distribution with repeats).
+        3 => {
+            let words = [&b"the "[..], b"quick ", b"brown ", b"fox ", b"lazy ", b"dog. "];
+            let mut v = Vec::with_capacity(len);
+            while v.len() < len {
+                let w = words[rng.below(words.len() as u64) as usize];
+                v.extend_from_slice(w);
+            }
+            v.truncate(len);
+            v
+        }
+        // Image-like: smooth gradients with noise (stresses predictors).
+        _ => {
+            let mut v = Vec::with_capacity(len);
+            let mut x = rng.below(256) as i32;
+            for _ in 0..len {
+                x += rng.below(7) as i32 - 3;
+                x = x.clamp(0, 255);
+                v.push(x as u8);
+            }
+            v
+        }
+    }
+}
+
+/// Greedy shrink: try removing chunks, then halving values.
+fn shrink_bytes(data: &[u8], prop: &impl Fn(&[u8]) -> bool) -> Vec<u8> {
+    let mut cur = data.to_vec();
+    // Chunk removal with decreasing chunk sizes.
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut cand = cur.clone();
+            cand.drain(i..i + chunk);
+            if !prop(&cand) {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    // Value simplification toward zero.
+    for i in 0..cur.len() {
+        while cur[i] > 0 {
+            let mut cand = cur.clone();
+            cand[i] /= 2;
+            if !prop(&cand) {
+                cur = cand;
+            } else {
+                break;
+            }
+        }
+    }
+    cur
+}
+
+/// Run `prop` on `cases` random `(u64)` seeds — a generic scalar property
+/// runner for numeric invariants.
+pub fn check_u64(seed: u64, cases: usize, prop: impl Fn(u64) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let x = rng.next_u64();
+        assert!(prop(x), "property failed (seed={seed}, case={case}, x={x})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_bytes(1, 50, 300, |_d| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check_bytes(2, 50, 300, |d| d.len() < 10);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property: no byte equals 200. Generator family 0 will hit it.
+        let caught = std::panic::catch_unwind(|| {
+            check_bytes(3, 200, 400, |d| !d.contains(&200));
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn generators_cover_all_families() {
+        let mut rng = Rng::new(9);
+        for case in 0..5 {
+            let v = gen_bytes(&mut rng, 100, case);
+            assert!(v.len() <= 100);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration tests for the baseline codecs: cross-validation against
+//! the reference crates (format interop + rate sanity) and roundtrips on
+//! the real artifact dataset when present.
+
+use bbans::baselines::{external, standard_suite, BzCodec, GzipCodec, ImageCodec};
+use bbans::data::{load_split, synth};
+use bbans::runtime::{artifacts_available, default_artifact_dir};
+use bbans::util::prop::check_bytes;
+
+#[test]
+fn our_gzip_interops_with_flate2_both_ways() {
+    check_bytes(61, 25, 20_000, |data| {
+        let ours = bbans::baselines::gzip::gzip_compress(data, 128);
+        let via_flate2 = external::flate2_gunzip(&ours).ok();
+        let theirs = external::flate2_gzip(data);
+        let via_ours = bbans::baselines::gzip::gzip_decompress(&theirs).ok();
+        via_flate2.as_deref() == Some(data) && via_ours.as_deref() == Some(data)
+    });
+}
+
+#[test]
+fn our_deflate_rate_is_competitive_with_miniz() {
+    // Within 15% of flate2 level 6 on a realistic mix.
+    let mut total_ours = 0usize;
+    let mut total_theirs = 0usize;
+    let mut rng = bbans::util::rng::Rng::new(62);
+    for case in 0..12 {
+        let data = bbans::util::prop::gen_bytes(&mut rng, 60_000, case);
+        total_ours += bbans::baselines::gzip::gzip_compress(&data, 128).len();
+        total_theirs += external::flate2_gzip(&data).len();
+    }
+    let ratio = total_ours as f64 / total_theirs as f64;
+    eprintln!("our gzip / flate2 size ratio: {ratio:.3}");
+    assert!(ratio < 1.15, "our deflate is too weak: ratio {ratio}");
+}
+
+#[test]
+fn our_bz_rate_is_sane_vs_bzip2() {
+    // Containers differ; compare rates on block-sorting-friendly data.
+    let data: Vec<u8> = b"the quick brown fox jumps over the lazy dog. "
+        .iter()
+        .cycle()
+        .take(200_000)
+        .copied()
+        .collect();
+    let ours = bbans::baselines::bz::compress(&data, 256 * 1024).len();
+    let theirs = external::bzip2_compress(&data).len();
+    let ratio = ours as f64 / theirs as f64;
+    eprintln!("our bz / bzip2 size ratio: {ratio:.3} ({ours} vs {theirs})");
+    // bzip2 has multi-table Huffman + better RLE; allow up to 2x on this
+    // extreme input but require the same order of magnitude.
+    assert!(ratio < 2.0, "bz-style rate too weak: {ratio}");
+}
+
+#[test]
+fn rates_on_real_dataset_match_expected_ordering() {
+    if !artifacts_available(default_artifact_dir()) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Paper Table 2 ordering on binarized MNIST: bz2 < gzip < PNG.
+    let ds = load_split(default_artifact_dir(), "test", true)
+        .unwrap()
+        .subset(1000);
+    let mut rates = std::collections::BTreeMap::new();
+    for codec in standard_suite(true) {
+        let bpd = codec.bits_per_dim(&ds).unwrap();
+        eprintln!("{:>10}: {bpd:.3} bits/dim (binarized)", codec.name());
+        rates.insert(codec.name().to_string(), bpd);
+    }
+    assert!(rates["bz2-style"] < rates["gzip"], "bz should beat gzip");
+    assert!(rates["gzip"] < rates["png"], "gzip should beat per-image png");
+    // Stream baselines must beat raw (1 bit/dim for binarized data).
+    assert!(rates["bz2-style"] < 1.0 && rates["gzip"] < 1.0);
+}
+
+#[test]
+fn whole_suite_roundtrips_on_artifact_data() {
+    if !artifacts_available(default_artifact_dir()) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let ds = load_split(default_artifact_dir(), "test", false)
+        .unwrap()
+        .subset(64);
+    for codec in standard_suite(false) {
+        let blobs = codec.compress_dataset(&ds).unwrap();
+        let images = codec
+            .decompress_dataset(&blobs, (ds.len(), ds.rows, ds.cols))
+            .unwrap();
+        assert_eq!(images, ds.images, "{} roundtrip on artifact data", codec.name());
+    }
+}
+
+#[test]
+fn stream_codecs_on_synthetic_natural_images() {
+    // Table 3 substrate: 64x64 "natural" images roundtrip + rates < 9 bpd.
+    let ds = synth::natural(8, 64, 77);
+    for codec in [
+        Box::new(GzipCodec { max_chain: 128 }) as Box<dyn ImageCodec>,
+        Box::new(BzCodec {
+            block_size: 256 * 1024,
+        }),
+    ] {
+        let blobs = codec.compress_dataset(&ds).unwrap();
+        let images = codec
+            .decompress_dataset(&blobs, (ds.len(), ds.rows, ds.cols))
+            .unwrap();
+        assert_eq!(images, ds.images);
+        let bpd = codec.bits_per_dim(&ds).unwrap();
+        eprintln!("{:>10}: {bpd:.3} bits/dim (natural 64x64)", codec.name());
+        assert!(bpd < 9.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! End-to-end BB-ANS over the *trained* models: roundtrip correctness and
+//! the paper's core claim — achieved rate ≈ negative test ELBO (§3.2).
+//! Self-skips without artifacts.
+
+use bbans::bbans::{container::Container, BbAnsConfig, VaeCodec};
+use bbans::data::load_split;
+use bbans::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta};
+use bbans::runtime::{artifacts_available, default_artifact_dir, load_config, Engine};
+use std::sync::Arc;
+
+fn have_artifacts() -> bool {
+    artifacts_available(default_artifact_dir())
+}
+
+fn native(name: &str) -> NativeVae {
+    let dir = default_artifact_dir();
+    let config = load_config(&dir).unwrap();
+    let m = config.get("models").unwrap().get(name).unwrap();
+    let meta = ModelMeta {
+        name: name.to_string(),
+        pixels: config.get("pixels").unwrap().as_usize().unwrap(),
+        latent_dim: m.get("latent_dim").unwrap().as_usize().unwrap(),
+        hidden: m.get("hidden").unwrap().as_usize().unwrap(),
+        likelihood: Likelihood::parse(m.get("likelihood").unwrap().as_str().unwrap()).unwrap(),
+        test_elbo_bpd: m.get("test_elbo_bpd").unwrap().as_f64().unwrap(),
+    };
+    let weights = dir.join(m.get("weights").unwrap().as_str().unwrap());
+    NativeVae::load(weights, meta).unwrap()
+}
+
+#[test]
+fn native_bin_roundtrip_and_rate_near_elbo() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let backend = native("bin");
+    let elbo = backend.meta().test_elbo_bpd;
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let ds = load_split(default_artifact_dir(), "test", true).unwrap();
+    let n = 300; // enough to amortize chain startup
+    let images: Vec<Vec<u8>> = ds.images.iter().take(n).cloned().collect();
+
+    let (mut ans, stats) = codec.encode_dataset(&images).unwrap();
+    let total_bits = ans.frac_bit_len();
+    let bpd = total_bits / (n as f64 * 784.0);
+    eprintln!("bin: rate {bpd:.4} bpd vs test ELBO {elbo:.4}");
+    // Within 5% of the ELBO (the test-set slice differs slightly from the
+    // full test-set ELBO; the paper reports ~1% on the full set).
+    assert!(
+        (bpd - elbo).abs() / elbo < 0.05,
+        "rate {bpd} vs elbo {elbo}"
+    );
+
+    // Per-image net bits average to roughly the ELBO too.
+    let mean_net: f64 =
+        stats.iter().map(|s| s.net_bits).sum::<f64>() / (n as f64 * 784.0);
+    assert!((mean_net - elbo).abs() / elbo < 0.05, "net {mean_net}");
+
+    let decoded = codec.decode_dataset(&mut ans, n).unwrap();
+    assert_eq!(decoded, images, "lossless roundtrip");
+}
+
+#[test]
+fn native_full_roundtrip_and_rate_near_elbo() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let backend = native("full");
+    let elbo = backend.meta().test_elbo_bpd;
+    let cfg = BbAnsConfig {
+        pixel_prec: 18,
+        ..Default::default()
+    };
+    let codec = VaeCodec::new(&backend, cfg).unwrap();
+    let ds = load_split(default_artifact_dir(), "test", false).unwrap();
+    let n = 100;
+    let images: Vec<Vec<u8>> = ds.images.iter().take(n).cloned().collect();
+    let (mut ans, _) = codec.encode_dataset(&images).unwrap();
+    let bpd = ans.frac_bit_len() / (n as f64 * 784.0);
+    eprintln!("full: rate {bpd:.4} bpd vs test ELBO {elbo:.4}");
+    assert!(
+        (bpd - elbo).abs() / elbo < 0.06,
+        "rate {bpd} vs elbo {elbo}"
+    );
+    let decoded = codec.decode_dataset(&mut ans, n).unwrap();
+    assert_eq!(decoded, images);
+}
+
+#[test]
+fn pjrt_bin_roundtrip_via_container() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = default_artifact_dir();
+    let engine = Arc::new(Engine::cpu(&dir).unwrap());
+    let config = load_config(&dir).unwrap();
+    let backend = PjrtVae::from_config(engine, &config, "bin").unwrap();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let ds = load_split(&dir, "test", true).unwrap();
+    let n = 40;
+    let images: Vec<Vec<u8>> = ds.images.iter().take(n).cloned().collect();
+    let (ans, _) = codec.encode_dataset(&images).unwrap();
+
+    // Serialize to a container and decode a fresh coder from the bytes.
+    let container = Container {
+        model: "bin".into(),
+        backend_id: backend.backend_id(),
+        cfg: codec.cfg,
+        num_images: n as u32,
+        pixels: 784,
+        message: ans.into_message(),
+    };
+    let bytes = container.to_bytes();
+    let parsed = Container::from_bytes(&bytes).unwrap();
+    assert_eq!(parsed.backend_id, backend.backend_id());
+    let mut ans2 = bbans::ans::Ans::from_message(&parsed.message, parsed.cfg.clean_seed);
+    let decoded = codec.decode_dataset(&mut ans2, n).unwrap();
+    assert_eq!(decoded, images);
+}
+
+#[test]
+fn pjrt_and_native_rates_agree() {
+    // Backends can't be mixed within a stream, but both should achieve
+    // nearly identical rates (same weights, same quantization).
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = default_artifact_dir();
+    let ds = load_split(&dir, "test", true).unwrap();
+    let n = 50;
+    let images: Vec<Vec<u8>> = ds.images.iter().take(n).cloned().collect();
+
+    let nat = native("bin");
+    let codec_n = VaeCodec::new(&nat, BbAnsConfig::default()).unwrap();
+    let (ans_n, _) = codec_n.encode_dataset(&images).unwrap();
+
+    let engine = Arc::new(Engine::cpu(&dir).unwrap());
+    let config = load_config(&dir).unwrap();
+    let pj = PjrtVae::from_config(engine, &config, "bin").unwrap();
+    let codec_p = VaeCodec::new(&pj, BbAnsConfig::default()).unwrap();
+    let (ans_p, _) = codec_p.encode_dataset(&images).unwrap();
+
+    let rate_n = ans_n.frac_bit_len();
+    let rate_p = ans_p.frac_bit_len();
+    let rel = (rate_n - rate_p).abs() / rate_n;
+    eprintln!("native {rate_n:.0} bits vs pjrt {rate_p:.0} bits (rel {rel:.5})");
+    assert!(rel < 0.01, "backend rates diverge: {rate_n} vs {rate_p}");
+}
+
+#[test]
+fn clean_bits_to_start_chain_are_small() {
+    // Paper §3.2: "around 400 bits" of clean bits to start the chain.
+    // Scale depends on posterior entropy; assert it's hundreds, not
+    // thousands-per-image.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let backend = native("bin");
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let ds = load_split(default_artifact_dir(), "test", true).unwrap();
+    let images: Vec<Vec<u8>> = ds.images.iter().take(20).cloned().collect();
+    let (ans, _) = codec.encode_dataset(&images).unwrap();
+    let clean = ans.clean_bits_used();
+    eprintln!("clean bits used to start the chain: {clean}");
+    assert!(clean > 0, "chain must consume some clean bits");
+    assert!(
+        clean < 3000,
+        "startup cost should be a few hundred bits, got {clean}"
+    );
+}

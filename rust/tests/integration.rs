@@ -1,0 +1,110 @@
+//! Cross-module integration tests that need no artifacts: the HMM
+//! time-series extension, container/codec interplay, and rate accounting
+//! consistency between layers.
+
+use bbans::ans::Ans;
+use bbans::bbans::timeseries::{demo_hmm, sample_sequence, HmmCodec};
+use bbans::bbans::{container::Container, BbAnsConfig, VaeCodec};
+use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
+use bbans::util::rng::Rng;
+
+fn toy_backend(seed: u64) -> NativeVae {
+    NativeVae::random(
+        ModelMeta {
+            name: "toy".into(),
+            pixels: 49,
+            latent_dim: 7,
+            hidden: 14,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        },
+        seed,
+    )
+}
+
+#[test]
+fn container_roundtrip_preserves_decodability() {
+    let backend = toy_backend(1);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(2);
+    let images: Vec<Vec<u8>> = (0..12)
+        .map(|_| (0..49).map(|_| (rng.f64() < 0.35) as u8).collect())
+        .collect();
+    let (ans, _) = codec.encode_dataset(&images).unwrap();
+    let container = Container {
+        model: "toy".into(),
+        backend_id: backend.backend_id(),
+        cfg: codec.cfg,
+        num_images: images.len() as u32,
+        pixels: 49,
+        message: ans.into_message(),
+    };
+    // Through bytes and back.
+    let parsed = Container::from_bytes(&container.to_bytes()).unwrap();
+    assert_eq!(parsed, container);
+    let mut ans2 = Ans::from_message(&parsed.message, parsed.cfg.clean_seed);
+    let decoded = codec.decode_dataset(&mut ans2, parsed.num_images as usize).unwrap();
+    assert_eq!(decoded, images);
+}
+
+#[test]
+fn image_and_sequence_codecs_share_one_stack() {
+    // BB-ANS image coding and HMM sequence coding interleave on one ANS
+    // stack — the "everything is a stack op" property that makes the
+    // scheme composable across model families.
+    let backend = toy_backend(3);
+    let vcodec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let hmm = demo_hmm();
+    let hcodec = HmmCodec::new(&hmm, 16);
+    let mut rng = Rng::new(4);
+
+    let img: Vec<u8> = (0..49).map(|_| (rng.f64() < 0.4) as u8).collect();
+    let seq = sample_sequence(&hmm, 120, &mut rng);
+
+    let mut ans = Ans::new(9);
+    vcodec.encode_image(&mut ans, &img).unwrap();
+    hcodec.encode_sequence(&mut ans, &seq).unwrap();
+    // LIFO: decode sequence first, then image.
+    let got_seq = hcodec.decode_sequence(&mut ans, seq.len()).unwrap();
+    assert_eq!(got_seq, seq);
+    let got_img = vcodec.decode_image(&mut ans).unwrap();
+    assert_eq!(got_img, img);
+}
+
+#[test]
+fn per_image_stats_sum_to_total_message_growth() {
+    let backend = toy_backend(5);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(6);
+    let images: Vec<Vec<u8>> = (0..30)
+        .map(|_| (0..49).map(|_| (rng.f64() < 0.3) as u8).collect())
+        .collect();
+    let (ans, stats) = codec.encode_dataset(&images).unwrap();
+    let net_sum: f64 = stats.iter().map(|s| s.net_bits).sum();
+    // Effective message length (content minus borrowed clean words)
+    // relative to the pristine coder (64-bit head).
+    let total = ans.frac_bit_len() - 32.0 * ans.clean_words_used() as f64 - 32.0;
+    assert!(
+        (net_sum - total).abs() < 1.0,
+        "stats sum {net_sum} vs message growth {total}"
+    );
+}
+
+#[test]
+fn hmm_vs_vae_rate_accounting_consistent() {
+    // Both codecs' "net bits" must equal actual coder growth.
+    let hmm = demo_hmm();
+    let codec = HmmCodec::new(&hmm, 16);
+    let mut rng = Rng::new(7);
+    let mut ans = Ans::new(8);
+    let mut claimed = 0.0;
+    for _ in 0..20 {
+        let seq = sample_sequence(&hmm, 100, &mut rng);
+        claimed += codec.encode_sequence(&mut ans, &seq).unwrap();
+    }
+    let actual = ans.frac_bit_len() - 32.0 * ans.clean_words_used() as f64 - 32.0;
+    assert!(
+        (claimed - actual).abs() < 1.0,
+        "claimed {claimed} vs actual {actual}"
+    );
+}

@@ -1,0 +1,184 @@
+//! Cross-module property tests (our mini prop framework stands in for
+//! proptest): codec invariants swept across random shapes, configs and
+//! adversarial inputs.
+
+use bbans::ans::Ans;
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::codecs::categorical::Categorical;
+use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
+use bbans::codecs::SymbolCodec;
+use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
+use bbans::util::rng::Rng;
+
+/// Fuzz BB-ANS roundtrips across model shapes, likelihoods and coding
+/// precisions.
+#[test]
+fn bbans_roundtrip_sweep() {
+    let mut rng = Rng::new(0xfeed);
+    for trial in 0..15 {
+        let pixels = 4 + rng.below(60) as usize;
+        let latent = 1 + rng.below(12) as usize;
+        let likelihood = if trial % 2 == 0 {
+            Likelihood::Bernoulli
+        } else {
+            Likelihood::BetaBinomial
+        };
+        let meta = ModelMeta {
+            name: format!("fuzz{trial}"),
+            pixels,
+            latent_dim: latent,
+            hidden: 4 + rng.below(20) as usize,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 1000 + trial as u64);
+        let cfg = BbAnsConfig {
+            latent_bits: 8 + (trial % 3) as u32 * 4, // 8, 12, 16
+            posterior_prec: 24,
+            pixel_prec: 12 + (trial % 4) as u32 * 2, // 12..18
+            clean_seed: trial as u64,
+        };
+        let codec = VaeCodec::new(&backend, cfg).unwrap();
+        let levels = match likelihood {
+            Likelihood::Bernoulli => 2u64,
+            Likelihood::BetaBinomial => 256,
+        };
+        let n_imgs = 1 + rng.below(10) as usize;
+        let images: Vec<Vec<u8>> = (0..n_imgs)
+            .map(|_| (0..pixels).map(|_| rng.below(levels) as u8).collect())
+            .collect();
+        let (mut ans, _) = codec.encode_dataset(&images).unwrap();
+        let decoded = codec.decode_dataset(&mut ans, n_imgs).unwrap();
+        assert_eq!(decoded, images, "trial {trial}");
+    }
+}
+
+/// Interleaving pushes/pops of unrelated codecs on one stack must still
+/// invert exactly (the property BB-ANS chaining relies on).
+#[test]
+fn mixed_codec_stack_discipline() {
+    let mut rng = Rng::new(0xabcd);
+    let buckets = MaxEntropyBuckets::new(10);
+    #[derive(Debug)]
+    enum Op {
+        Cat(Categorical, usize),
+        Gauss(DiscretizedGaussian, u32),
+    }
+    let mut ans = Ans::new(1);
+    let mut ops = Vec::new();
+    for _ in 0..3000 {
+        if rng.f64() < 0.5 {
+            let k = 2 + rng.below(40) as usize;
+            let pmf: Vec<f64> = (0..k).map(|_| rng.f64() + 1e-9).collect();
+            let c = Categorical::from_pmf(&pmf, 16);
+            let s = rng.below(k as u64) as usize;
+            c.push(&mut ans, s);
+            ops.push(Op::Cat(c, s));
+        } else {
+            let d = DiscretizedGaussian::new(
+                buckets.clone(),
+                rng.normal() * 3.0,
+                0.05 + rng.f64() * 2.0,
+                22,
+            );
+            let s = rng.below(1 << 10) as u32;
+            d.push(&mut ans, s);
+            ops.push(Op::Gauss(d, s));
+        }
+    }
+    for op in ops.iter().rev() {
+        match op {
+            Op::Cat(c, s) => assert_eq!(c.pop(&mut ans), *s),
+            Op::Gauss(d, s) => assert_eq!(d.pop(&mut ans), *s),
+        }
+    }
+    assert!(ans.is_empty());
+}
+
+/// The ANS message after compressing data is incompressible (near-optimal
+/// codes look uniformly random): gzip on top must not gain > 2%.
+#[test]
+fn bbans_output_is_incompressible() {
+    let meta = ModelMeta {
+        name: "t".into(),
+        pixels: 64,
+        latent_dim: 8,
+        hidden: 16,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    };
+    let backend = NativeVae::random(meta, 31);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(32);
+    let images: Vec<Vec<u8>> = (0..200)
+        .map(|_| (0..64).map(|_| (rng.f64() < 0.3) as u8).collect())
+        .collect();
+    let (ans, _) = codec.encode_dataset(&images).unwrap();
+    let payload = ans.into_message().to_bytes();
+    let gz = bbans::baselines::gzip::gzip_compress(&payload, 128);
+    assert!(
+        gz.len() as f64 > payload.len() as f64 * 0.98,
+        "BB-ANS output should be incompressible: {} -> {}",
+        payload.len(),
+        gz.len()
+    );
+}
+
+/// Baseline codecs vs adversarial byte patterns (all-zero, all-0xff,
+/// single byte, alternating, long runs at buffer boundaries).
+#[test]
+fn baseline_edge_case_inputs() {
+    let cases: Vec<Vec<u8>> = vec![
+        vec![],
+        vec![0],
+        vec![0xff],
+        vec![0; 100_000],
+        vec![0xaa; 65_536],
+        (0..=255u8).collect(),
+        (0..70_000u32).map(|i| (i % 2) as u8 * 255).collect(),
+        {
+            // runs exactly at the 32k window boundary
+            let mut v = vec![7u8; 32 * 1024];
+            v.extend_from_slice(&[9u8; 300]);
+            v.extend_from_slice(&vec![7u8; 32 * 1024]);
+            v
+        },
+    ];
+    for (i, data) in cases.iter().enumerate() {
+        let d = bbans::baselines::deflate::compress(data, 128);
+        assert_eq!(
+            bbans::baselines::deflate::decompress(&d).unwrap(),
+            *data,
+            "deflate case {i}"
+        );
+        let b = bbans::baselines::bz::compress(data, 16 * 1024);
+        assert_eq!(
+            bbans::baselines::bz::decompress(&b).unwrap(),
+            *data,
+            "bz case {i}"
+        );
+    }
+}
+
+/// ANS rate is invariant to clean-seed choice and deterministic given the
+/// seed (container reproducibility).
+#[test]
+fn encode_is_deterministic_given_seed() {
+    let meta = ModelMeta {
+        name: "t".into(),
+        pixels: 36,
+        latent_dim: 6,
+        hidden: 12,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    };
+    let backend = NativeVae::random(meta, 77);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(5);
+    let images: Vec<Vec<u8>> = (0..10)
+        .map(|_| (0..36).map(|_| (rng.f64() < 0.4) as u8).collect())
+        .collect();
+    let (a1, _) = codec.encode_dataset(&images).unwrap();
+    let (a2, _) = codec.encode_dataset(&images).unwrap();
+    assert_eq!(a1.to_message(), a2.to_message());
+}

@@ -1,0 +1,156 @@
+//! Integration tests for the PJRT runtime against the real AOT artifacts.
+//!
+//! These self-skip when `make artifacts` has not been run (e.g. fresh
+//! checkout); every other suite runs without artifacts.
+
+use bbans::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PixelParams};
+use bbans::runtime::{artifacts_available, default_artifact_dir, load_config, Engine, Tensor};
+use std::sync::Arc;
+
+fn engine_or_skip() -> Option<Arc<Engine>> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::cpu(&dir).expect("PJRT cpu client")))
+}
+
+fn native(name: &str) -> NativeVae {
+    let dir = default_artifact_dir();
+    let config = load_config(&dir).unwrap();
+    let m = config.get("models").unwrap().get(name).unwrap();
+    let meta = ModelMeta {
+        name: name.to_string(),
+        pixels: config.get("pixels").unwrap().as_usize().unwrap(),
+        latent_dim: m.get("latent_dim").unwrap().as_usize().unwrap(),
+        hidden: m.get("hidden").unwrap().as_usize().unwrap(),
+        likelihood: Likelihood::parse(m.get("likelihood").unwrap().as_str().unwrap()).unwrap(),
+        test_elbo_bpd: m.get("test_elbo_bpd").unwrap().as_f64().unwrap(),
+    };
+    let weights = dir.join(m.get("weights").unwrap().as_str().unwrap());
+    NativeVae::load(weights, meta).unwrap()
+}
+
+#[test]
+fn engine_loads_and_runs_bin_encoder() {
+    let Some(engine) = engine_or_skip() else { return };
+    engine.load("enc_bin_b1.hlo.txt").unwrap();
+    let x = Tensor::new(vec![1, 784], vec![0.5; 784]);
+    let out = engine.run("enc_bin_b1.hlo.txt", &[x]).unwrap();
+    assert_eq!(out.len(), 2, "(mu, sigma)");
+    assert_eq!(out[0].dims, vec![1, 40]);
+    assert_eq!(out[1].dims, vec![1, 40]);
+    assert!(out[1].data.iter().all(|&s| s > 0.0), "sigma must be positive");
+}
+
+#[test]
+fn pjrt_matches_native_bin() {
+    let Some(engine) = engine_or_skip() else { return };
+    let config = load_config(default_artifact_dir()).unwrap();
+    let pjrt = PjrtVae::from_config(engine, &config, "bin").unwrap();
+    let nat = native("bin");
+
+    // A quasi-image: sparse binary pattern.
+    let x: Vec<f32> = (0..784).map(|i| ((i * 37 + 11) % 5 == 0) as u32 as f32).collect();
+    let pj = pjrt.posterior(&[&x]).unwrap();
+    let nv = nat.posterior(&[&x]).unwrap();
+    for (a, b) in pj[0].0.iter().zip(nv[0].0.iter()) {
+        assert!((a - b).abs() < 1e-3, "mu mismatch {a} vs {b}");
+    }
+    for (a, b) in pj[0].1.iter().zip(nv[0].1.iter()) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "sigma mismatch {a} vs {b}");
+    }
+
+    // Decoder paths agree too.
+    let y: Vec<f32> = (0..40).map(|i| (i as f32 / 40.0) - 0.5).collect();
+    let pl = pjrt.likelihood(&[&y]).unwrap();
+    let nl = nat.likelihood(&[&y]).unwrap();
+    match (&pl[0], &nl[0]) {
+        (PixelParams::Bernoulli(a), PixelParams::Bernoulli(b)) => {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-3, "prob mismatch {x} vs {y}");
+            }
+        }
+        other => panic!("unexpected params {other:?}"),
+    }
+}
+
+#[test]
+fn pjrt_full_decoder_outputs_valid_pmf_table() {
+    let Some(engine) = engine_or_skip() else { return };
+    let config = load_config(default_artifact_dir()).unwrap();
+    let pjrt = PjrtVae::from_config(engine, &config, "full").unwrap();
+    let y: Vec<f32> = (0..50).map(|i| ((i as f32) * 0.1).sin() * 0.8).collect();
+    let out = pjrt.likelihood(&[&y]).unwrap();
+    match &out[0] {
+        PixelParams::BetaBinomialTable(table) => {
+            assert_eq!(table.len(), 784 * 256);
+            // Each row is a PMF: non-negative, sums ~1.
+            for px in 0..784 {
+                let row = &table[px * 256..(px + 1) * 256];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-2, "pixel {px} pmf sum {sum}");
+                assert!(row.iter().all(|&p| p >= 0.0));
+            }
+        }
+        other => panic!("unexpected params {other:?}"),
+    }
+}
+
+#[test]
+fn pjrt_full_table_matches_native_analytic() {
+    let Some(engine) = engine_or_skip() else { return };
+    let config = load_config(default_artifact_dir()).unwrap();
+    let pjrt = PjrtVae::from_config(engine, &config, "full").unwrap();
+    let nat = native("full");
+    let y: Vec<f32> = (0..50).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.2).collect();
+    let (table, ab) = (
+        pjrt.likelihood(&[&y]).unwrap().remove(0),
+        nat.likelihood(&[&y]).unwrap().remove(0),
+    );
+    let (PixelParams::BetaBinomialTable(t), PixelParams::BetaBinomialAb { alpha, beta }) =
+        (table, ab)
+    else {
+        panic!("unexpected param kinds");
+    };
+    // Spot-check a few pixels: analytic beta-binomial pmf vs the L1
+    // kernel's table.
+    for &px in &[0usize, 100, 399, 783] {
+        let row = &t[px * 256..(px + 1) * 256];
+        for &k in &[0u32, 50, 128, 255] {
+            let want = bbans::util::math::beta_binomial_logpmf(
+                k,
+                255,
+                alpha[px] as f64,
+                beta[px] as f64,
+            )
+            .exp();
+            let got = row[k as usize] as f64;
+            assert!(
+                (got - want).abs() < 5e-4 + want * 0.02,
+                "pixel {px} k {k}: table {got} vs analytic {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_variants_agree_with_b1() {
+    let Some(engine) = engine_or_skip() else { return };
+    let config = load_config(default_artifact_dir()).unwrap();
+    let pjrt = PjrtVae::from_config(engine, &config, "bin").unwrap();
+    let imgs: Vec<Vec<f32>> = (0..5)
+        .map(|s| (0..784).map(|i| ((i + s * 31) % 3 == 0) as u32 as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    // One batched call (chunks into b4+b1 or b16 padded) ...
+    let batched = pjrt.posterior(&refs).unwrap();
+    // ... vs one-at-a-time.
+    for (i, img) in refs.iter().enumerate() {
+        let single = pjrt.posterior(&[img]).unwrap();
+        for (a, b) in batched[i].0.iter().zip(single[0].0.iter()) {
+            assert!((a - b).abs() < 1e-4, "img {i}: batched {a} vs single {b}");
+        }
+    }
+}

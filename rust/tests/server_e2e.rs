@@ -1,0 +1,113 @@
+//! End-to-end server tests: framed TCP → batcher → BB-ANS → back.
+//! Runs against a NativeVae::random toy model (no artifacts needed);
+//! artifact-backed serving is exercised by `examples/serve_demo.rs`.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use bbans::bbans::BbAnsConfig;
+use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
+use bbans::util::rng::Rng;
+
+fn toy_service() -> ModelService {
+    let params = ServiceParams {
+        max_jobs: 8,
+        batch_window: Duration::from_millis(10),
+        bbans: BbAnsConfig::default(),
+    };
+    ModelService::spawn_with(params, || {
+        let meta = ModelMeta {
+            name: "toy".into(),
+            pixels: 64,
+            latent_dim: 8,
+            hidden: 16,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+        map.insert("toy".into(), Box::new(NativeVae::random(meta, 2024)));
+        Ok(map)
+    })
+}
+
+fn sample_images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..64).map(|_| (rng.f64() < 0.25) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn tcp_compress_decompress_roundtrip() {
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    let mut client = Client::connect(addr).unwrap();
+    let images = sample_images(9, 5);
+    let container = client.compress("toy", 64, images.clone()).unwrap();
+    assert!(!container.is_empty());
+    let out = client.decompress(container).unwrap();
+    assert_eq!(out, images);
+
+    let stats = client.stats().unwrap();
+    let json = bbans::util::json::Json::parse(&stats).unwrap();
+    assert_eq!(json.get("images_encoded").unwrap().as_u64(), Some(9));
+    assert_eq!(json.get("images_decoded").unwrap().as_u64(), Some(9));
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn many_concurrent_clients_roundtrip_and_batch() {
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let images = sample_images(6, 100 + t);
+            let c = client.compress("toy", 64, images.clone()).unwrap();
+            let out = client.decompress(c).unwrap();
+            assert_eq!(out, images);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Cross-stream batching must have happened with 8 concurrent clients.
+    let mbs = svc.metrics.mean_batch_size();
+    assert!(mbs > 1.3, "expected batched NN dispatches, got {mbs:.2}");
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn server_reports_errors_cleanly() {
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // Unknown model.
+    let err = client
+        .compress("missing", 64, sample_images(1, 1))
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+
+    // Garbage container.
+    let err = client.decompress(vec![0xde, 0xad]).unwrap_err();
+    assert!(err.to_string().contains("bad container"), "{err}");
+
+    // Connection still usable afterwards.
+    let images = sample_images(2, 2);
+    let c = client.compress("toy", 64, images.clone()).unwrap();
+    assert_eq!(client.decompress(c).unwrap(), images);
+
+    server.stop();
+    svc.shutdown();
+}
