@@ -1,8 +1,10 @@
-//! ANS coder micro-benchmarks: push/pop throughput, plus the interleaved
-//! multi-lane extension (paper §4.2 / Giesen 2014).
+//! ANS coder micro-benchmarks: push/pop throughput, the interleaved
+//! multi-lane extension (paper §4.2 / Giesen 2014), and the unified
+//! `EntropyCoder` trait driving single-lane vs multi-lane coding through
+//! the exact same call path.
 
 use bbans::ans::interleaved::{InterleavedAns, Interval};
-use bbans::ans::Ans;
+use bbans::ans::{Ans, EntropyCoder};
 use bbans::bench::{black_box, table_header, Bench};
 use bbans::util::rng::Rng;
 
@@ -94,4 +96,59 @@ fn main() {
         }
         black_box(ans.stream_len());
     });
+
+    // ---- EntropyCoder trait: single-lane vs multi-lane through the SAME
+    // ---- generic call path (what the codecs and the bbans fast path use).
+    fn coder_encode_decode<C: EntropyCoder>(
+        bench: &mut Bench,
+        label: &str,
+        make: impl Fn() -> C,
+        ivs: &[Interval],
+        d: &[Interval],
+        prec: u32,
+    ) {
+        let n = ivs.len();
+        bench.run(&format!("coder/{label} encode 1M"), n as f64, || {
+            let mut c = make();
+            c.encode_all(ivs, prec);
+            black_box(c.bit_len());
+        });
+        bench.run(&format!("coder/{label} decode 1M"), n as f64, || {
+            let mut c = make();
+            c.encode_all(ivs, prec);
+            let out = c.decode_all(n, prec, |cf| {
+                let i = d.partition_point(|iv| iv.start <= cf) - 1;
+                (i, d[i])
+            });
+            black_box(out.len());
+        });
+    }
+
+    println!("\n-- EntropyCoder trait: multi-lane vs single-lane throughput --");
+    coder_encode_decode(&mut bench, "stack (1 lane)", || Ans::new(0), &ivs, &d, prec);
+    coder_encode_decode(
+        &mut bench,
+        "interleaved-2",
+        InterleavedAns::<2>::new,
+        &ivs,
+        &d,
+        prec,
+    );
+    coder_encode_decode(
+        &mut bench,
+        "interleaved-4",
+        InterleavedAns::<4>::new,
+        &ivs,
+        &d,
+        prec,
+    );
+    coder_encode_decode(
+        &mut bench,
+        "interleaved-8",
+        InterleavedAns::<8>::new,
+        &ivs,
+        &d,
+        prec,
+    );
+    println!("(same trait calls, same distribution: lane count is the only variable)");
 }

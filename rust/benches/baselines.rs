@@ -1,7 +1,8 @@
 //! Baseline codec benchmarks: throughput + rate of our from-scratch
-//! implementations vs the reference crates on image data.
+//! implementations on image data. With `--features external-codecs` the
+//! reference flate2/bzip2 crates run alongside for cross-validation.
 
-use bbans::baselines::{bz, deflate, external, gzip, png, webp};
+use bbans::baselines::{bz, deflate, gzip, png, webp};
 use bbans::bench::{black_box, table_header, Bench};
 use bbans::data::synth;
 
@@ -19,36 +20,48 @@ fn main() {
         nat.raw_bytes()
     );
 
-    // Our DEFLATE vs flate2.
+    // Our DEFLATE (vs flate2 when the external-codecs feature is on).
     bench.run("deflate/ours compress digits", flat.len() as f64, || {
         black_box(deflate::compress(&flat, 128));
     });
-    bench.run("deflate/flate2 compress digits", flat.len() as f64, || {
-        black_box(external::flate2_gzip(&flat));
-    });
     let compressed = deflate::compress(&flat, 128);
-    println!(
-        "    rate: ours {} B vs flate2 {} B\n",
-        compressed.len(),
-        external::flate2_gzip(&flat).len()
-    );
+    #[cfg(feature = "external-codecs")]
+    {
+        use bbans::baselines::external;
+        bench.run("deflate/flate2 compress digits", flat.len() as f64, || {
+            black_box(external::flate2_gzip(&flat));
+        });
+        println!(
+            "    rate: ours {} B vs flate2 {} B\n",
+            compressed.len(),
+            external::flate2_gzip(&flat).len()
+        );
+    }
+    #[cfg(not(feature = "external-codecs"))]
+    println!("    rate: ours {} B (flate2 comparison needs --features external-codecs)\n", compressed.len());
     bench.run("deflate/ours decompress digits", flat.len() as f64, || {
         black_box(deflate::decompress(&compressed).unwrap());
     });
 
-    // Our bz-style vs bzip2.
+    // Our bz-style (vs bzip2 when the feature is on).
     bench.run("bz/ours compress digits", flat.len() as f64, || {
         black_box(bz::compress(&flat, 256 * 1024));
     });
-    bench.run("bz/bzip2 compress digits", flat.len() as f64, || {
-        black_box(external::bzip2_compress(&flat));
-    });
     let bzc = bz::compress(&flat, 256 * 1024);
-    println!(
-        "    rate: ours {} B vs bzip2 {} B\n",
-        bzc.len(),
-        external::bzip2_compress(&flat).len()
-    );
+    #[cfg(feature = "external-codecs")]
+    {
+        use bbans::baselines::external;
+        bench.run("bz/bzip2 compress digits", flat.len() as f64, || {
+            black_box(external::bzip2_compress(&flat));
+        });
+        println!(
+            "    rate: ours {} B vs bzip2 {} B\n",
+            bzc.len(),
+            external::bzip2_compress(&flat).len()
+        );
+    }
+    #[cfg(not(feature = "external-codecs"))]
+    println!("    rate: ours {} B (bzip2 comparison needs --features external-codecs)\n", bzc.len());
     bench.run("bz/ours decompress digits", flat.len() as f64, || {
         black_box(bz::decompress(&bzc).unwrap());
     });

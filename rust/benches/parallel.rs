@@ -1,0 +1,98 @@
+//! Chunk-parallel container benchmarks: BB-ANS encode/decode wall time
+//! vs chunk count (paper §4.2 — independent chains parallelize
+//! perfectly; this target measures how close std-thread fan-out gets).
+//!
+//! Runs on the artifact-free NativeVae::random backend, so it always
+//! executes. Scale with BBANS_BENCH_IMAGES (default 192).
+
+use bbans::bbans::container::ParallelContainer;
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
+use bbans::util::rng::Rng;
+
+fn main() {
+    let n_images: usize = std::env::var("BBANS_BENCH_IMAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(192);
+    table_header(&format!(
+        "chunk-parallel container: {n_images} images x 784 px, toy VAE"
+    ));
+    let mut bench = Bench::new();
+
+    let meta = ModelMeta {
+        name: "toy".into(),
+        pixels: 784,
+        latent_dim: 40,
+        hidden: 100,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    };
+    let backend = NativeVae::random(meta, 7);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+
+    let mut rng = Rng::new(1);
+    let images: Vec<Vec<u8>> = (0..n_images)
+        .map(|_| (0..784).map(|_| (rng.f64() < 0.2) as u8).collect())
+        .collect();
+
+    let mut single_lane = f64::NAN;
+    for n_chunks in [1usize, 2, 4, 8] {
+        let m = bench.run(
+            &format!("parallel/encode {n_images} imgs, {n_chunks} chunks"),
+            n_images as f64,
+            || {
+                let pc = ParallelContainer::encode_with(&codec, &images, n_chunks).unwrap();
+                black_box(pc.byte_len());
+            },
+        );
+        let rate = m.units_per_sec();
+        if n_chunks == 1 {
+            single_lane = rate;
+        }
+        println!(
+            "    {n_chunks} chunk(s): {rate:.1} img/s encode ({:.2}x vs 1 chunk)",
+            rate / single_lane
+        );
+    }
+
+    // Decode side.
+    let containers: Vec<ParallelContainer> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&k| ParallelContainer::encode_with(&codec, &images, k).unwrap())
+        .collect();
+    let mut single_dec = f64::NAN;
+    for pc in &containers {
+        let k = pc.chunks.len();
+        let m = bench.run(
+            &format!("parallel/decode {n_images} imgs, {k} chunks"),
+            n_images as f64,
+            || {
+                black_box(pc.decode_with(&codec).unwrap().len());
+            },
+        );
+        let rate = m.units_per_sec();
+        if k == 1 {
+            single_dec = rate;
+        }
+        println!(
+            "    {k} chunk(s): {rate:.1} img/s decode ({:.2}x vs 1 chunk)",
+            rate / single_dec
+        );
+    }
+
+    // Rate overhead of chunking: each extra chunk pays its own chain
+    // startup (clean bits) and head, nothing else.
+    let b1 = containers[0].byte_len();
+    println!();
+    for pc in &containers {
+        println!(
+            "    {} chunk(s): {} bytes ({:.4} bits/dim, +{} B vs 1 chunk)",
+            pc.chunks.len(),
+            pc.byte_len(),
+            pc.bits_per_dim(),
+            pc.byte_len() as i64 - b1 as i64
+        );
+    }
+}

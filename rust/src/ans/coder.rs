@@ -1,0 +1,214 @@
+//! [`EntropyCoder`] — the unified interface over the stack [`Ans`] coder
+//! and the multi-lane [`InterleavedAns`] coder.
+//!
+//! Codecs (`crate::codecs`) and the BB-ANS likelihood path are written
+//! once against this trait and run on either coder: the plain stack coder
+//! for bits-back work (it alone has the clean-bit facility), the
+//! interleaved coder for the fully-observed fast path where lanes expose
+//! instruction-level parallelism (paper §4.2; `benches/ans.rs` measures
+//! single-lane vs multi-lane throughput through this trait).
+//!
+//! # Contract
+//!
+//! * **Stream order.** `encode_all` receives symbol intervals in *stream
+//!   order* (the order the decoder will produce them); implementations
+//!   handle their own internal ordering (the stack coder pushes the slice
+//!   back-to-front, the interleaved coder stripes lanes). `decode_all`
+//!   invokes `lookup` once per position, in stream order.
+//! * **Normalization invariant.** Between operations every head lies in
+//!   `[2³², 2⁶⁴)`; a freshly constructed coder sits exactly at the lower
+//!   bound. [`EntropyCoder::is_pristine`] reports that ground state, and
+//!   a full encode→decode cycle must restore it.
+//! * **LIFO discipline.** Whole-message encodes and decodes are inverses;
+//!   interleaving *partial* encodes and decodes of unrelated data is only
+//!   guaranteed for the stack coder (BB-ANS relies on it), not for the
+//!   interleaved coder, whose batch striping fixes the schedule.
+//! * **Shared precision.** All intervals of one `encode_all`/`decode_all`
+//!   call quantize to the same `2^prec` total; `prec ≤` [`MAX_PREC`].
+
+use super::interleaved::{InterleavedAns, Interval};
+use super::{Ans, MAX_PREC};
+
+/// A coder that maps sequences of quantized symbol intervals to bits.
+pub trait EntropyCoder {
+    /// Encode `intervals` (in stream order) at precision `prec`.
+    fn encode_all(&mut self, intervals: &[Interval], prec: u32);
+
+    /// Decode `n` symbols in stream order. `lookup` maps each position's
+    /// cumulative value to `(symbol, interval)` and is called exactly once
+    /// per position, in order — stateful closures may rely on that.
+    fn decode_all<S>(
+        &mut self,
+        n: usize,
+        prec: u32,
+        lookup: impl FnMut(u32) -> (S, Interval),
+    ) -> Vec<S>;
+
+    /// Message length in bits if serialized right now.
+    fn bit_len(&self) -> u64;
+
+    /// Is the coder in its ground state (heads at the normalization lower
+    /// bound, no stream words, no information)?
+    fn is_pristine(&self) -> bool;
+}
+
+impl EntropyCoder for Ans {
+    fn encode_all(&mut self, intervals: &[Interval], prec: u32) {
+        debug_assert!(prec <= MAX_PREC);
+        // Stack discipline: push back-to-front so pops yield stream order.
+        for iv in intervals.iter().rev() {
+            self.push(iv.start, iv.freq, prec);
+        }
+    }
+
+    fn decode_all<S>(
+        &mut self,
+        n: usize,
+        prec: u32,
+        mut lookup: impl FnMut(u32) -> (S, Interval),
+    ) -> Vec<S> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cf = self.pop_cf(prec);
+            let (sym, iv) = lookup(cf);
+            self.update(iv.start, iv.freq, prec);
+            out.push(sym);
+        }
+        out
+    }
+
+    fn bit_len(&self) -> u64 {
+        Ans::bit_len(self)
+    }
+
+    fn is_pristine(&self) -> bool {
+        self.is_empty()
+    }
+}
+
+impl<const N: usize> EntropyCoder for InterleavedAns<N> {
+    fn encode_all(&mut self, intervals: &[Interval], prec: u32) {
+        InterleavedAns::encode(self, intervals, prec)
+    }
+
+    fn decode_all<S>(
+        &mut self,
+        n: usize,
+        prec: u32,
+        lookup: impl FnMut(u32) -> (S, Interval),
+    ) -> Vec<S> {
+        InterleavedAns::decode(self, n, prec, lookup)
+    }
+
+    fn bit_len(&self) -> u64 {
+        InterleavedAns::bit_len(self)
+    }
+
+    fn is_pristine(&self) -> bool {
+        InterleavedAns::is_pristine(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn geometric_intervals(prec: u32, k: usize) -> Vec<Interval> {
+        let total = 1u64 << prec;
+        let raw: Vec<u64> = (0..k).map(|i| 1u64 << (i % 30)).collect();
+        let s: u64 = raw.iter().sum();
+        let mut freqs: Vec<u32> = raw
+            .iter()
+            .map(|&r| ((r * (total - k as u64)) / s + 1) as u32)
+            .collect();
+        let fix = total as i64 - freqs.iter().map(|&f| f as i64).sum::<i64>();
+        let last = freqs.len() - 1;
+        freqs[last] = (freqs[last] as i64 + fix) as u32;
+        let mut start = 0u32;
+        freqs
+            .into_iter()
+            .map(|f| {
+                let iv = Interval { start, freq: f };
+                start += f;
+                iv
+            })
+            .collect()
+    }
+
+    fn lookup(cf: u32, d: &[Interval]) -> usize {
+        d.iter()
+            .position(|iv| cf >= iv.start && cf < iv.start + iv.freq)
+            .unwrap()
+    }
+
+    fn roundtrip_generic<C: EntropyCoder>(coder: &mut C, n: usize, seed: u64) {
+        let prec = 14;
+        let d = geometric_intervals(prec, 10);
+        let mut rng = Rng::new(seed);
+        let syms: Vec<usize> = (0..n).map(|_| rng.below(10) as usize).collect();
+        let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+        assert!(coder.is_pristine());
+        coder.encode_all(&ivs, prec);
+        assert!(coder.bit_len() >= 64);
+        let got = coder.decode_all(n, prec, |cf| {
+            let s = lookup(cf, &d);
+            (s, d[s])
+        });
+        assert_eq!(got, syms);
+        assert!(coder.is_pristine(), "coder must return to ground state");
+    }
+
+    #[test]
+    fn trait_roundtrip_stack_and_interleaved() {
+        roundtrip_generic(&mut Ans::new(0), 5000, 1);
+        roundtrip_generic(&mut InterleavedAns::<1>::new(), 5000, 2);
+        roundtrip_generic(&mut InterleavedAns::<4>::new(), 4999, 3);
+        roundtrip_generic(&mut InterleavedAns::<8>::new(), 5001, 4);
+    }
+
+    #[test]
+    fn stream_order_is_decode_order_for_both_coders() {
+        // The same interval sequence must come back in the same order from
+        // every implementation — that's what lets callers swap coders.
+        let prec = 12;
+        let d = geometric_intervals(prec, 6);
+        let seq: Vec<usize> = (0..100).map(|i| (i * 7 + 3) % 6).collect();
+        let ivs: Vec<Interval> = seq.iter().map(|&s| d[s]).collect();
+
+        let mut a = Ans::new(0);
+        a.encode_all(&ivs, prec);
+        let from_stack = a.decode_all(seq.len(), prec, |cf| {
+            let s = lookup(cf, &d);
+            (s, d[s])
+        });
+
+        let mut il = InterleavedAns::<4>::new();
+        il.encode_all(&ivs, prec);
+        let from_lanes = il.decode_all(seq.len(), prec, |cf| {
+            let s = lookup(cf, &d);
+            (s, d[s])
+        });
+
+        assert_eq!(from_stack, seq);
+        assert_eq!(from_lanes, seq);
+    }
+
+    #[test]
+    fn rates_agree_up_to_head_overhead() {
+        let prec = 14;
+        let d = geometric_intervals(prec, 16);
+        let mut rng = Rng::new(9);
+        let ivs: Vec<Interval> = (0..50_000)
+            .map(|_| d[lookup(rng.below(1 << prec) as u32, &d)])
+            .collect();
+        let mut a = Ans::new(0);
+        a.encode_all(&ivs, prec);
+        let mut il = InterleavedAns::<8>::new();
+        il.encode_all(&ivs, prec);
+        let diff = il.bit_len() as i64 - a.bit_len() as i64;
+        // Interleaving pays only for the 7 extra 64-bit heads (±1 word of
+        // renormalization slack per lane).
+        assert!(diff.abs() <= 64 * 8 + 32 * 8, "head overhead too large: {diff}");
+    }
+}

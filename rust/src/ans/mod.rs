@@ -26,7 +26,11 @@
 //! chain" measurement).
 
 pub mod arith;
+pub mod coder;
 pub mod interleaved;
+
+pub use coder::EntropyCoder;
+pub use interleaved::Interval;
 
 use crate::util::rng::Rng;
 
@@ -216,9 +220,15 @@ impl AnsMessage {
         let head = u64::from_le_bytes(b[0..8].try_into().unwrap());
         let clean_words_used = u64::from_le_bytes(b[8..16].try_into().unwrap());
         let n = u64::from_le_bytes(b[16..24].try_into().unwrap()) as usize;
-        let need = 24 + 4 * n;
-        if b.len() < need {
-            bail!("ANS message truncated: have {}, need {need}", b.len());
+        // Guard the word count before computing byte offsets, so an
+        // attacker-controlled length can neither overflow `24 + 4 * n`
+        // nor drive the collect loop below past the buffer.
+        if n > (b.len() - 24) / 4 {
+            bail!(
+                "ANS message truncated: have {}, need {} stream words",
+                b.len(),
+                n
+            );
         }
         let stream = (0..n)
             .map(|i| {

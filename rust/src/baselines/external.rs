@@ -1,43 +1,54 @@
-//! Reference codecs from the vendored `flate2` and `bzip2` crates.
+//! Reference codecs from the `flate2` and `bzip2` crates.
 //!
 //! These exist purely to *cross-validate* our from-scratch baselines:
 //! format interop for gzip (tested in `gzip.rs` and the integration
 //! suite) and rate sanity for the bz-style codec (our container differs
 //! from bzip2's, so only rates are compared).
+//!
+//! The reference crates are **not vendored** in this offline workspace,
+//! so the whole module is gated behind the `external-codecs` feature;
+//! without it the cross-validation tests and benches are compiled out
+//! and the from-scratch implementations stand on their own test suites.
 
-use std::io::{Read, Write};
+#[cfg(feature = "external-codecs")]
+mod real {
+    use std::io::{Read, Write};
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-pub fn flate2_gzip(data: &[u8]) -> Vec<u8> {
-    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::new(6));
-    enc.write_all(data).unwrap();
-    enc.finish().unwrap()
+    pub fn flate2_gzip(data: &[u8]) -> Vec<u8> {
+        let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::new(6));
+        enc.write_all(data).unwrap();
+        enc.finish().unwrap()
+    }
+
+    pub fn flate2_gunzip(data: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        flate2::read::GzDecoder::new(data)
+            .read_to_end(&mut out)
+            .context("flate2 gunzip")?;
+        Ok(out)
+    }
+
+    pub fn bzip2_compress(data: &[u8]) -> Vec<u8> {
+        let mut enc = bzip2::write::BzEncoder::new(Vec::new(), bzip2::Compression::default());
+        enc.write_all(data).unwrap();
+        enc.finish().unwrap()
+    }
+
+    pub fn bzip2_decompress(data: &[u8]) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        bzip2::read::BzDecoder::new(data)
+            .read_to_end(&mut out)
+            .context("bzip2 decompress")?;
+        Ok(out)
+    }
 }
 
-pub fn flate2_gunzip(data: &[u8]) -> Result<Vec<u8>> {
-    let mut out = Vec::new();
-    flate2::read::GzDecoder::new(data)
-        .read_to_end(&mut out)
-        .context("flate2 gunzip")?;
-    Ok(out)
-}
+#[cfg(feature = "external-codecs")]
+pub use real::*;
 
-pub fn bzip2_compress(data: &[u8]) -> Vec<u8> {
-    let mut enc = bzip2::write::BzEncoder::new(Vec::new(), bzip2::Compression::default());
-    enc.write_all(data).unwrap();
-    enc.finish().unwrap()
-}
-
-pub fn bzip2_decompress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut out = Vec::new();
-    bzip2::read::BzDecoder::new(data)
-        .read_to_end(&mut out)
-        .context("bzip2 decompress")?;
-    Ok(out)
-}
-
-#[cfg(test)]
+#[cfg(all(test, feature = "external-codecs"))]
 mod tests {
     use super::*;
 

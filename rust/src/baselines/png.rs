@@ -5,6 +5,7 @@
 //! binarized MNIST meaningful).
 
 use super::gzip::{zlib_compress, zlib_decompress};
+use crate::util::crc32;
 use anyhow::{bail, Context, Result};
 
 const SIGNATURE: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n'];
@@ -20,7 +21,7 @@ fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], body: &[u8]) {
     out.extend_from_slice(&(body.len() as u32).to_be_bytes());
     out.extend_from_slice(kind);
     out.extend_from_slice(body);
-    let mut h = crc32fast::Hasher::new();
+    let mut h = crc32::Hasher::new();
     h.update(kind);
     h.update(body);
     out.extend_from_slice(&h.finalize().to_be_bytes());
@@ -194,7 +195,7 @@ pub fn decode(data: &[u8]) -> Result<(Vec<u8>, PngInfo)> {
         let body = &data[pos + 8..pos + 8 + len];
         let want_crc =
             u32::from_be_bytes(data[pos + 8 + len..pos + 12 + len].try_into().unwrap());
-        let mut h = crc32fast::Hasher::new();
+        let mut h = crc32::Hasher::new();
         h.update(&kind);
         h.update(body);
         if h.finalize() != want_crc {

@@ -26,7 +26,7 @@ pub mod timeseries;
 
 use anyhow::{bail, Result};
 
-use crate::ans::Ans;
+use crate::ans::{Ans, EntropyCoder, Interval};
 use crate::codecs::beta_binomial::{BetaBinomial, BetaBinomialDirect};
 use crate::codecs::categorical::Bernoulli;
 use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
@@ -56,7 +56,7 @@ impl Default for BbAnsConfig {
             latent_bits: 12,
             posterior_prec: 24,
             pixel_prec: 16,
-            clean_seed: 0xBBA4_55EED,
+            clean_seed: 0xB_BA45_5EED,
         }
     }
 }
@@ -138,14 +138,16 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         DiscretizedGaussian::new(self.buckets.clone(), mu, sigma, self.cfg.posterior_prec)
     }
 
-    /// Push one pixel under the likelihood params.
-    fn push_pixel(&self, ans: &mut Ans, params: &PixelParams, p: usize, sym: u8) {
+    /// Quantized interval of pixel `p` taking value `sym` under the
+    /// likelihood params (all pixels code at `cfg.pixel_prec`).
+    fn pixel_interval(&self, params: &PixelParams, p: usize, sym: u8) -> Interval {
         match params {
             PixelParams::Bernoulli(probs) => {
                 // Allocation-free fast path (§Perf #5), bit-identical to
                 // Categorical::bernoulli.
                 let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
-                c.push(ans, (sym != 0) as usize);
+                let (start, freq) = c.interval((sym != 0) as usize);
+                Interval { start, freq }
             }
             PixelParams::BetaBinomialAb { alpha, beta } => {
                 // Lazy direct codec: O(sym) work, O(1) for the black
@@ -156,21 +158,28 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
                     beta[p] as f64,
                     self.cfg.pixel_prec,
                 );
-                c.push(ans, sym as u32);
+                let (start, freq) = c.interval(sym as u32);
+                Interval { start, freq }
             }
             PixelParams::BetaBinomialTable(table) => {
                 let c =
                     BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
-                c.push(ans, sym as u32);
+                let q = c.quantized();
+                Interval {
+                    start: q.start(sym as usize),
+                    freq: q.freq(sym as usize),
+                }
             }
         }
     }
 
-    fn pop_pixel(&self, ans: &mut Ans, params: &PixelParams, p: usize) -> u8 {
+    /// Inverse of [`Self::pixel_interval`]: classify a cumulative value.
+    fn pixel_lookup(&self, params: &PixelParams, p: usize, cf: u32) -> (u8, Interval) {
         match params {
             PixelParams::Bernoulli(probs) => {
                 let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
-                c.pop(ans) as u8
+                let (sym, start, freq) = c.lookup(cf);
+                (sym as u8, Interval { start, freq })
             }
             PixelParams::BetaBinomialAb { alpha, beta } => {
                 let c = BetaBinomialDirect::new(
@@ -179,12 +188,21 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
                     beta[p] as f64,
                     self.cfg.pixel_prec,
                 );
-                c.pop(ans) as u8
+                let (sym, start, freq) = c.lookup(cf);
+                (sym as u8, Interval { start, freq })
             }
             PixelParams::BetaBinomialTable(table) => {
                 let c =
                     BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
-                c.pop(ans) as u8
+                let q = c.quantized();
+                let sym = q.lookup(cf);
+                (
+                    sym as u8,
+                    Interval {
+                        start: q.start(sym),
+                        freq: q.freq(sym),
+                    },
+                )
             }
         }
     }
@@ -199,11 +217,28 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
             .collect()
     }
 
-    /// Step 2 of encode: push all pixels under the likelihood.
+    /// Step 2 of encode: push all pixels under the likelihood. Thin
+    /// wrapper over the coder-generic [`Self::push_pixels_coder`].
     pub fn push_pixels(&self, ans: &mut Ans, params: &PixelParams, img: &[u8]) {
-        for (p, &sym) in img.iter().enumerate() {
-            self.push_pixel(ans, params, p, sym);
-        }
+        self.push_pixels_coder(ans, params, img)
+    }
+
+    /// Coder-generic likelihood encode: codes the whole image through any
+    /// [`EntropyCoder`] — the stack coder on the bits-back path, the
+    /// interleaved multi-lane coder on the fully-observed fast path
+    /// (paper §4.2).
+    pub fn push_pixels_coder<C: EntropyCoder>(
+        &self,
+        coder: &mut C,
+        params: &PixelParams,
+        img: &[u8],
+    ) {
+        let ivs: Vec<Interval> = img
+            .iter()
+            .enumerate()
+            .map(|(p, &sym)| self.pixel_interval(params, p, sym))
+            .collect();
+        coder.encode_all(&ivs, self.cfg.pixel_prec);
     }
 
     /// Step 3 of encode: push the latent under the uniform prior.
@@ -225,14 +260,22 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         idx
     }
 
-    /// Step 2⁻¹ of decode: pop all pixels under the likelihood.
+    /// Step 2⁻¹ of decode: pop all pixels under the likelihood. Thin
+    /// wrapper over the coder-generic [`Self::pop_pixels_coder`].
     pub fn pop_pixels(&self, ans: &mut Ans, params: &PixelParams) -> Vec<u8> {
+        self.pop_pixels_coder(ans, params)
+    }
+
+    /// Coder-generic likelihood decode (inverse of
+    /// [`Self::push_pixels_coder`]; pixels come back in raster order).
+    pub fn pop_pixels_coder<C: EntropyCoder>(&self, coder: &mut C, params: &PixelParams) -> Vec<u8> {
         let pixels = self.backend.meta().pixels;
-        let mut img = vec![0u8; pixels];
-        for p in (0..pixels).rev() {
-            img[p] = self.pop_pixel(ans, params, p);
-        }
-        img
+        let mut p = 0usize;
+        coder.decode_all(pixels, self.cfg.pixel_prec, |cf| {
+            let out = self.pixel_lookup(params, p, cf);
+            p += 1;
+            out
+        })
     }
 
     /// Step 1⁻¹ of decode: push the latent back under q(y|s).
@@ -353,6 +396,99 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
             out.push(self.decode_image(ans)?);
         }
         out.reverse(); // stack order → original order
+        Ok(out)
+    }
+
+    /// Deterministic near-even partition of `n` items into `k` chunks
+    /// (first `n % k` chunks get one extra item). The split depends only
+    /// on `(n, k)`, never on thread scheduling, so chunked containers are
+    /// reproducible.
+    pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+        let k = k.clamp(1, n.max(1));
+        let base = n / k;
+        let rem = n % k;
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0;
+        for i in 0..k {
+            let len = base + usize::from(i < rem);
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+}
+
+/// Chunk-parallel coding (paper §4.2: BB-ANS chains are sequential, but
+/// *independent* chains parallelize perfectly). Requires a `Sync` backend
+/// — the pure-Rust [`crate::model::vae::NativeVae`] qualifies; the PJRT
+/// backend is deliberately single-threaded and instead parallelizes via
+/// the coordinator's cross-stream batcher.
+impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
+    /// Encode `images` as `n_chunks` independent BB-ANS chains, one per
+    /// chunk, fanned out over std threads. Chunk `i` seeds its clean-bit
+    /// supply from [`container::chunk_seed`]`(cfg.clean_seed, i)`, so the
+    /// result is bit-reproducible for a given `(images, n_chunks, cfg)`
+    /// regardless of how many threads actually run.
+    pub fn encode_dataset_chunked(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<Vec<container::ChunkEntry>> {
+        let ranges = Self::chunk_ranges(images.len(), n_chunks);
+        let results: Vec<Result<container::ChunkEntry>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .enumerate()
+                .map(|(ci, r)| {
+                    let chunk = &images[r.clone()];
+                    scope.spawn(move || {
+                        let mut ans = Ans::new(container::chunk_seed(self.cfg.clean_seed, ci));
+                        self.encode_dataset_into(&mut ans, chunk)?;
+                        Ok(container::ChunkEntry {
+                            num_images: chunk.len() as u32,
+                            message: ans.into_message(),
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("chunk encode thread panicked"))
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    /// Decode chunks produced by [`Self::encode_dataset_chunked`], fanned
+    /// out over std threads; images return in original dataset order.
+    /// Borrows the chunk messages — no payload copies.
+    pub fn decode_dataset_chunked(
+        &self,
+        chunks: &[container::ChunkEntry],
+    ) -> Result<Vec<Vec<u8>>> {
+        let results: Vec<Result<Vec<Vec<u8>>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    scope.spawn(move || {
+                        let mut ans = Ans::from_message(
+                            &chunk.message,
+                            container::chunk_seed(self.cfg.clean_seed, ci),
+                        );
+                        self.decode_dataset(&mut ans, chunk.num_images as usize)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("chunk decode thread panicked"))
+                .collect()
+        });
+        let mut out = Vec::new();
+        for r in results {
+            out.extend(r?);
+        }
         Ok(out)
     }
 }

@@ -92,6 +92,12 @@ impl BetaBinomial {
     pub fn bits(&self, sym: usize) -> f64 {
         self.inner.bits(sym)
     }
+
+    /// The quantized CDF backing this codec (interval extraction for
+    /// coder-generic paths).
+    pub fn quantized(&self) -> &super::quantize::QuantizedCdf {
+        self.inner.quantized()
+    }
 }
 
 impl SymbolCodec for BetaBinomial {

@@ -6,7 +6,7 @@
 
 use super::quantize::QuantizedCdf;
 use super::SymbolCodec;
-use crate::ans::Ans;
+use crate::ans::{Ans, EntropyCoder, Interval};
 
 #[derive(Debug, Clone)]
 pub struct Categorical {
@@ -39,6 +39,31 @@ impl Categorical {
     /// Ideal code length (bits) of `sym` under the quantized distribution.
     pub fn bits(&self, sym: usize) -> f64 {
         -self.q.prob(sym).log2()
+    }
+
+    /// Quantized interval of `sym`.
+    #[inline]
+    pub fn interval(&self, sym: usize) -> Interval {
+        Interval {
+            start: self.q.start(sym),
+            freq: self.q.freq(sym),
+        }
+    }
+
+    /// Encode a whole symbol sequence through any [`EntropyCoder`] —
+    /// stack or interleaved multi-lane (paper §4.2 fast path).
+    pub fn encode_all<C: EntropyCoder>(&self, coder: &mut C, syms: &[usize]) {
+        let ivs: Vec<Interval> = syms.iter().map(|&s| self.interval(s)).collect();
+        coder.encode_all(&ivs, self.q.prec);
+    }
+
+    /// Decode `n` symbols through any [`EntropyCoder`] (inverse of
+    /// [`Categorical::encode_all`], same symbol order).
+    pub fn decode_all<C: EntropyCoder>(&self, coder: &mut C, n: usize) -> Vec<usize> {
+        coder.decode_all(n, self.q.prec, |cf| {
+            let s = self.q.lookup(cf);
+            (s, self.interval(s))
+        })
     }
 }
 
@@ -97,6 +122,14 @@ impl Bernoulli {
             (self.g1, m - self.g1)
         }
     }
+
+    /// Classify a cumulative value: `(symbol, start, freq)`.
+    #[inline]
+    pub fn lookup(&self, cf: u32) -> (usize, u32, u32) {
+        let sym = (cf >= self.g1) as usize;
+        let (start, freq) = self.interval(sym);
+        (sym, start, freq)
+    }
 }
 
 impl SymbolCodec for Bernoulli {
@@ -110,11 +143,7 @@ impl SymbolCodec for Bernoulli {
 
     #[inline]
     fn pop(&self, ans: &mut Ans) -> usize {
-        ans.pop_with(self.prec, |cf| {
-            let sym = (cf >= self.g1) as usize;
-            let (start, freq) = self.interval(sym);
-            (sym, start, freq)
-        })
+        ans.pop_with(self.prec, |cf| self.lookup(cf))
     }
 }
 
@@ -227,6 +256,27 @@ mod tests {
             assert_eq!(c.pop(&mut ans), *s);
         }
         assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn encode_all_roundtrips_on_both_coders() {
+        // The codec is written once against EntropyCoder and must behave
+        // identically on the stack coder and every lane count.
+        use crate::ans::interleaved::InterleavedAns;
+        let mut rng = Rng::new(77);
+        let pmf: Vec<f64> = (0..50).map(|_| rng.f64() + 1e-9).collect();
+        let c = Categorical::from_pmf(&pmf, 16);
+        let syms: Vec<usize> = (0..4001).map(|_| rng.below(50) as usize).collect();
+
+        let mut stack = Ans::new(0);
+        c.encode_all(&mut stack, &syms);
+        assert_eq!(c.decode_all(&mut stack, syms.len()), syms);
+        assert!(stack.is_empty());
+
+        let mut lanes = InterleavedAns::<4>::new();
+        c.encode_all(&mut lanes, &syms);
+        assert_eq!(c.decode_all(&mut lanes, syms.len()), syms);
+        assert!(lanes.is_pristine());
     }
 
     #[test]

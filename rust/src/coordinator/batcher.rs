@@ -17,7 +17,7 @@
 //!   ⌈S/B⌉ NN dispatches per image instead of S.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -27,7 +27,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use crate::ans::Ans;
-use crate::bbans::container::Container;
+use crate::bbans::container::{Container, ParallelContainer, MAGIC_PARALLEL};
 use crate::bbans::{BbAnsConfig, VaeCodec};
 use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta};
 use crate::runtime::{load_config, Engine};
@@ -178,7 +178,7 @@ impl ServiceHandle {
 
 /// Standard backends from the artifact bundle.
 fn standard_backends(
-    artifact_dir: &PathBuf,
+    artifact_dir: &Path,
     use_pjrt: bool,
 ) -> Result<HashMap<String, Box<dyn Backend>>> {
     let config = load_config(artifact_dir)?;
@@ -469,11 +469,18 @@ fn batched_decode(
     metrics: &Metrics,
     jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
 ) {
-    // Parse containers and group by model.
+    // Parse containers and group by model. Chunk-parallel (BBC2)
+    // containers have no cross-stream NN batching to exploit here — each
+    // chunk is an independent chain — so they decode chunk-by-chunk
+    // directly instead of joining the lock-step loop below.
     let mut by_model: HashMap<String, Vec<(Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>> =
         HashMap::new();
     for (bytes, reply) in jobs {
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
+        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
+            decode_parallel_container(backends, metrics, &bytes, reply);
+            continue;
+        }
         match Container::from_bytes(&bytes) {
             Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
             Err(e) => {
@@ -619,6 +626,47 @@ fn batched_decode(
     }
 }
 
+/// Decode one chunk-parallel (BBC2) container against the owning model's
+/// backend. `dyn Backend` is not `Sync`, so chunks decode sequentially
+/// inside the worker thread; the parallel win belongs to `Sync` backends
+/// via [`ParallelContainer::decode_with`].
+fn decode_parallel_container(
+    backends: &HashMap<String, Box<dyn Backend>>,
+    metrics: &Metrics,
+    bytes: &[u8],
+    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+) {
+    let fail = |msg: String| {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(msg));
+    };
+    let pc = match ParallelContainer::from_bytes(bytes) {
+        Ok(pc) => pc,
+        Err(e) => return fail(format!("bad container: {e:#}")),
+    };
+    let Some(backend) = backends.get(&pc.model) else {
+        return fail(format!("unknown model '{}'", pc.model));
+    };
+    if pc.backend_id != backend.backend_id() {
+        return fail(format!(
+            "container encoded with backend '{}', this service runs '{}'",
+            pc.backend_id,
+            backend.backend_id()
+        ));
+    }
+    let codec = match VaeCodec::new(backend.as_ref(), pc.cfg) {
+        Ok(c) => c,
+        Err(e) => return fail(format!("{e:#}")),
+    };
+    match pc.decode_sequential(&codec) {
+        Ok(images) => {
+            Metrics::inc(&metrics.images_decoded, images.len() as u64);
+            let _ = reply.send(Ok(images));
+        }
+        Err(e) => fail(format!("parallel container decode failed: {e:#}")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -707,6 +755,36 @@ mod tests {
         let mut parsed = Container::from_bytes(&c).unwrap();
         parsed.backend_id = "pjrt-b16".into();
         assert!(h.decompress(parsed.to_bytes()).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn chunk_parallel_container_decodes_through_service() {
+        // A BBC2 container produced offline by the chunk-parallel encoder
+        // must decode through the serving path. The test backend mirrors
+        // test_service's factory (same meta, same seed → same weights).
+        let meta = ModelMeta {
+            name: "toy".into(),
+            pixels: 36,
+            latent_dim: 6,
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 77);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(9, 21);
+        let pc = crate::bbans::container::ParallelContainer::encode_with(&codec, &images, 3)
+            .unwrap();
+
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        assert_eq!(h.decompress(pc.to_bytes()).unwrap(), images);
+
+        // Wrong backend id still rejected for BBC2.
+        let mut bad = pc;
+        bad.backend_id = "pjrt-b16".into();
+        assert!(h.decompress(bad.to_bytes()).is_err());
         svc.shutdown();
     }
 

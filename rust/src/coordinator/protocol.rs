@@ -95,7 +95,7 @@ impl Frame {
         let p = &buf[1..];
         Ok(match ty {
             0x01 => {
-                if p.len() < 1 {
+                if p.is_empty() {
                     bail!("short CompressReq");
                 }
                 let mlen = p[0] as usize;

@@ -14,10 +14,11 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use bbans::bbans::container::Container;
-use bbans::bbans::BbAnsConfig;
+use bbans::bbans::container::{Container, ParallelContainer, MAGIC_PARALLEL};
+use bbans::bbans::{BbAnsConfig, VaeCodec};
 use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
 use bbans::data;
+use bbans::model::vae::load_native;
 use bbans::runtime::{default_artifact_dir, load_config};
 
 struct Args {
@@ -69,10 +70,13 @@ fn usage() -> ! {
         "usage: bbans <info|compress|decompress|serve|client> [args]\n\
          \n\
          bbans info\n\
-         bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native]\n\
+         bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native] [--chunks K]\n\
          bbans decompress -i in.bbc -o out.idx [--native]\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16] [--window-ms 2]\n\
          bbans client     --addr HOST:PORT --stats\n\
+         \n\
+         --chunks K > 1 encodes K independent chains on K threads (native\n\
+         backend; produces a BBC2 chunk-parallel container).\n\
          \n\
          Artifacts default to ./artifacts ($BBANS_ARTIFACTS overrides)."
     );
@@ -175,6 +179,35 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let images: Vec<Vec<u8>> = ds.images.into_iter().take(n).collect();
     let raw_bytes = images.len() * rows * cols;
 
+    let chunks: usize = match args.flags.get("chunks") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("invalid --chunks value '{v}' (want a positive integer)"))?,
+        None => 1,
+    };
+    if chunks > 1 {
+        // Chunk-parallel fast path: independent chains on threads, native
+        // backend (the PJRT handles are not Sync; it parallelizes through
+        // the serving batcher instead).
+        let backend = load_native(default_artifact_dir(), &model)?;
+        let codec = VaeCodec::new(&backend, bbans_config(args))?;
+        let t = std::time::Instant::now();
+        let container = ParallelContainer::encode_with(&codec, &images, chunks)?;
+        let dt = t.elapsed();
+        let bytes = container.to_bytes();
+        std::fs::write(&output, &bytes)?;
+        let n_images = container.num_images();
+        let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
+        println!(
+            "compressed {n_images} images in {} chunks: {raw_bytes} -> {} bytes ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+            container.chunks.len(),
+            bytes.len(),
+            dt.as_secs_f64(),
+            n_images as f64 / dt.as_secs_f64(),
+        );
+        return Ok(());
+    }
+
     let svc = service(args);
     let h = svc.handle();
     let t = std::time::Instant::now();
@@ -199,19 +232,40 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o IDX")?);
     let container = std::fs::read(&input)?;
+
+    if container.len() >= 4 && &container[0..4] == MAGIC_PARALLEL {
+        // Chunk-parallel container: decode chunks on threads with the
+        // native backend named in the header.
+        let pc = ParallelContainer::from_bytes(&container)?;
+        let backend = load_native(default_artifact_dir(), &pc.model)?;
+        if pc.backend_id != backend.backend_id() {
+            bail!(
+                "container encoded with backend '{}', local backend is '{}'",
+                pc.backend_id,
+                backend.backend_id()
+            );
+        }
+        let codec = VaeCodec::new(&backend, pc.cfg)?;
+        let t = std::time::Instant::now();
+        let images = pc.decode_with(&codec)?;
+        let dt = t.elapsed();
+        let n = write_square_idx(images, &output)?;
+        println!(
+            "decompressed {n} images ({} chunks) in {:.2}s ({:.1} img/s) -> {}",
+            pc.chunks.len(),
+            dt.as_secs_f64(),
+            n as f64 / dt.as_secs_f64(),
+            output.display()
+        );
+        return Ok(());
+    }
+
     let svc = service(args);
     let h = svc.handle();
     let t = std::time::Instant::now();
     let images = h.decompress(container)?;
     let dt = t.elapsed();
-    let n = images.len();
-    let side = (images.first().map(|i| i.len()).unwrap_or(0) as f64).sqrt() as usize;
-    let ds = data::Dataset {
-        rows: side,
-        cols: side,
-        images,
-    };
-    std::fs::write(&output, data::write_idx_images(&ds))?;
+    let n = write_square_idx(images, &output)?;
     println!(
         "decompressed {n} images in {:.2}s ({:.1} img/s) -> {}",
         dt.as_secs_f64(),
@@ -220,6 +274,19 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     );
     svc.shutdown();
     Ok(())
+}
+
+/// Write decoded images as a square-image IDX file; returns the count.
+fn write_square_idx(images: Vec<Vec<u8>>, output: &std::path::Path) -> Result<usize> {
+    let n = images.len();
+    let side = (images.first().map(|i| i.len()).unwrap_or(0) as f64).sqrt() as usize;
+    let ds = data::Dataset {
+        rows: side,
+        cols: side,
+        images,
+    };
+    std::fs::write(output, data::write_idx_images(&ds))?;
+    Ok(n)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

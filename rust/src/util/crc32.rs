@@ -1,0 +1,90 @@
+//! CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320) from scratch —
+//! the checksum used by gzip (RFC 1952) and PNG chunks. Replaces the
+//! `crc32fast` crate, which is unavailable in this offline build. The
+//! API mirrors the subset of `crc32fast` the baselines use (`hash`, and
+//! a streaming `Hasher` with `update`/`finalize`).
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = make_table();
+
+/// Streaming CRC-32 (same call shape as `crc32fast::Hasher`).
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Self { state: !0 }
+    }
+
+    #[inline]
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    #[inline]
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC-32 of `data`.
+pub fn hash(data: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // Canonical check value for CRC-32/IEEE.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        // PNG spec: CRC of "IEND" chunk type with empty body.
+        assert_eq!(hash(b"IEND"), 0xAE42_6082);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(37) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), hash(&data));
+    }
+}

@@ -3,6 +3,7 @@
 //! serde, proptest, criterion) that are unavailable in this offline build.
 
 pub mod bitio;
+pub mod crc32;
 pub mod json;
 pub mod math;
 pub mod prop;

@@ -1,8 +1,11 @@
 //! A tiny property-based-testing harness (proptest is not available
 //! offline). Provides seeded case generation with automatic minimal-ish
-//! shrinking for byte-vector inputs, which is what most codec roundtrip
-//! properties need.
+//! shrinking for byte-vector inputs (what most codec roundtrip properties
+//! need), plus generators for quantized symbol intervals and coder
+//! configurations used to fuzz the [`crate::ans::EntropyCoder`]
+//! implementations against each other.
 
+use crate::ans::Interval;
 use crate::util::rng::Rng;
 
 /// Run `prop` on `cases` random byte vectors of length up to `max_len`,
@@ -119,6 +122,95 @@ pub fn check_u64(seed: u64, cases: usize, prop: impl Fn(u64) -> bool) {
     }
 }
 
+/// A random entropy-coder configuration: coding precision, alphabet size
+/// and symbol-sequence length, drawn from ranges that stress both the
+/// stack and the interleaved coder (tiny alphabets, near-maximal
+/// precision, lengths around lane-count boundaries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoderConfig {
+    /// Quantization precision; intervals tile `[0, 2^prec)`.
+    pub prec: u32,
+    /// Alphabet size (`2 ≤ n_syms < 2^prec`).
+    pub n_syms: usize,
+    /// Number of symbols to code.
+    pub len: usize,
+}
+
+/// Draw a [`CoderConfig`]. `case` cycles length families so lane-count
+/// edge cases (`len % N ≠ 0`, empty, single-symbol) always appear.
+pub fn gen_coder_config(rng: &mut Rng, case: usize) -> CoderConfig {
+    let prec = 8 + rng.below(17) as u32; // 8..=24
+    let max_syms = ((1u64 << prec) / 4).min(300) as usize;
+    let n_syms = 2 + rng.below(max_syms as u64 - 1) as usize;
+    let len = match case % 4 {
+        0 => rng.below(8) as usize,              // tiny (incl. empty)
+        1 => 1 + rng.below(64) as usize,         // around lane boundaries
+        2 => 256 + rng.below(1024) as usize,     // medium
+        _ => 2048 + rng.below(4096) as usize,    // long chains
+    };
+    CoderConfig { prec, n_syms, len }
+}
+
+/// Generate a quantized interval table for `cfg.n_syms` symbols tiling
+/// `[0, 2^prec)` exactly, with every frequency ≥ 1 (the invariant the
+/// quantizer guarantees and the coders rely on). Weight families mirror
+/// [`gen_bytes`]: uniform, geometric (skewed), and spiked.
+pub fn gen_intervals(rng: &mut Rng, cfg: &CoderConfig) -> Vec<Interval> {
+    let k = cfg.n_syms;
+    let total = 1u64 << cfg.prec;
+    let weights: Vec<f64> = match rng.below(3) {
+        0 => (0..k).map(|_| 1.0).collect(),
+        1 => (0..k).map(|i| 0.7f64.powi((i % 40) as i32)).collect(),
+        _ => {
+            let spike = rng.below(k as u64) as usize;
+            (0..k).map(|i| if i == spike { 1e6 } else { 1.0 }).collect()
+        }
+    };
+    let wsum: f64 = weights.iter().sum();
+    // Strictly-monotone CDF map (same construction as QuantizedCdf).
+    let mut cdf = Vec::with_capacity(k + 1);
+    cdf.push(0u64);
+    let scale = (total - k as u64) as f64 / wsum;
+    let mut acc = 0.0;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        let g = if i + 1 == k {
+            total
+        } else {
+            ((acc * scale).round() as u64 + i as u64 + 1).min(total)
+        };
+        cdf.push(g);
+    }
+    (0..k)
+        .map(|i| Interval {
+            start: cdf[i] as u32,
+            freq: (cdf[i + 1] - cdf[i]) as u32,
+        })
+        .collect()
+}
+
+/// Run `prop` over `cases` random coder configs. For each case the
+/// property receives the config, the interval table, and a random symbol
+/// sequence of length `cfg.len`.
+pub fn check_coders(
+    seed: u64,
+    cases: usize,
+    prop: impl Fn(&CoderConfig, &[Interval], &[usize]) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let cfg = gen_coder_config(&mut rng, case);
+        let intervals = gen_intervals(&mut rng, &cfg);
+        let syms: Vec<usize> = (0..cfg.len)
+            .map(|_| rng.below(cfg.n_syms as u64) as usize)
+            .collect();
+        assert!(
+            prop(&cfg, &intervals, &syms),
+            "coder property failed (seed={seed}, case={case}, cfg={cfg:?})"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +242,45 @@ mod tests {
             let v = gen_bytes(&mut rng, 100, case);
             assert!(v.len() <= 100);
         }
+    }
+
+    #[test]
+    fn interval_generator_tiles_exactly_with_nonzero_freqs() {
+        let mut rng = Rng::new(31);
+        for case in 0..200 {
+            let cfg = gen_coder_config(&mut rng, case);
+            let ivs = gen_intervals(&mut rng, &cfg);
+            assert_eq!(ivs.len(), cfg.n_syms);
+            let mut pos = 0u64;
+            for iv in &ivs {
+                assert_eq!(iv.start as u64, pos, "intervals must tile ({cfg:?})");
+                assert!(iv.freq >= 1, "zero-frequency symbol ({cfg:?})");
+                pos += iv.freq as u64;
+            }
+            assert_eq!(pos, 1u64 << cfg.prec, "mass must sum to 2^prec ({cfg:?})");
+        }
+    }
+
+    #[test]
+    fn coder_config_hits_all_length_families() {
+        let mut rng = Rng::new(32);
+        let mut saw_empty = false;
+        let mut saw_long = false;
+        for case in 0..64 {
+            let cfg = gen_coder_config(&mut rng, case);
+            assert!((8..=24).contains(&cfg.prec));
+            assert!(cfg.n_syms >= 2 && (cfg.n_syms as u64) < (1u64 << cfg.prec));
+            saw_empty |= cfg.len == 0;
+            saw_long |= cfg.len >= 2048;
+        }
+        assert!(saw_long, "long-chain family never drawn");
+        let _ = saw_empty; // empty is probabilistic; long is guaranteed by case % 4
+    }
+
+    #[test]
+    fn check_coders_runs_properties() {
+        check_coders(33, 20, |cfg, ivs, syms| {
+            syms.len() == cfg.len && ivs.len() == cfg.n_syms
+        });
     }
 }

@@ -2,9 +2,12 @@
 //! time-series extension, container/codec interplay, and rate accounting
 //! consistency between layers.
 
-use bbans::ans::Ans;
+use bbans::ans::{Ans, AnsMessage};
 use bbans::bbans::timeseries::{demo_hmm, sample_sequence, HmmCodec};
-use bbans::bbans::{container::Container, BbAnsConfig, VaeCodec};
+use bbans::bbans::{
+    container::{Container, ParallelContainer},
+    BbAnsConfig, VaeCodec,
+};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::rng::Rng;
 
@@ -45,6 +48,100 @@ fn container_roundtrip_preserves_decodability() {
     let mut ans2 = Ans::from_message(&parsed.message, parsed.cfg.clean_seed);
     let decoded = codec.decode_dataset(&mut ans2, parsed.num_images as usize).unwrap();
     assert_eq!(decoded, images);
+}
+
+/// Tentpole acceptance: the chunk-parallel container roundtrips with
+/// chunk counts 1, 2 and 8 on the same input, every chunk count decodes
+/// to byte-identical pixels, and serialization is deterministic.
+#[test]
+fn parallel_container_roundtrips_across_chunk_counts() {
+    let backend = toy_backend(11);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(12);
+    let images: Vec<Vec<u8>> = (0..37)
+        .map(|_| (0..49).map(|_| (rng.f64() < 0.3) as u8).collect())
+        .collect();
+
+    let mut decoded_by_chunks = Vec::new();
+    for n_chunks in [1usize, 2, 8] {
+        let pc = ParallelContainer::encode_with(&codec, &images, n_chunks).unwrap();
+        assert_eq!(pc.chunks.len(), n_chunks);
+        assert_eq!(pc.num_images() as usize, images.len());
+
+        // Deterministic bytes: encoding twice gives the identical blob.
+        let bytes = pc.to_bytes();
+        let again = ParallelContainer::encode_with(&codec, &images, n_chunks).unwrap();
+        assert_eq!(bytes, again.to_bytes(), "{n_chunks}-chunk encode not deterministic");
+
+        // Through bytes and back, then thread-parallel decode.
+        let parsed = ParallelContainer::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed, pc);
+        let decoded = parsed.decode_with(&codec).unwrap();
+        assert_eq!(decoded, images, "{n_chunks}-chunk roundtrip");
+
+        // Sequential decode (the coordinator's dyn-Backend path) agrees.
+        assert_eq!(parsed.decode_sequential(&codec).unwrap(), images);
+        decoded_by_chunks.push(decoded);
+    }
+    // 1-chunk and N-chunk encodings of the same stream decode identically.
+    assert_eq!(decoded_by_chunks[0], decoded_by_chunks[1]);
+    assert_eq!(decoded_by_chunks[0], decoded_by_chunks[2]);
+}
+
+#[test]
+fn parallel_container_rejects_mismatched_codec() {
+    let backend = toy_backend(13);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let images = vec![vec![0u8; 49]; 4];
+    let pc = ParallelContainer::encode_with(&codec, &images, 2).unwrap();
+    // Different coding config than the header: must refuse to decode.
+    let other = VaeCodec::new(
+        &backend,
+        BbAnsConfig {
+            latent_bits: 10,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(pc.decode_with(&other).is_err());
+}
+
+/// Satellite: clean-bit accounting survives serialization. The clean
+/// words drawn during encode are replayed exactly by `Ans::from_message`,
+/// so a decoder resumed from bytes behaves bit-for-bit like one that
+/// never left memory (encode → serialize → resume → decode equals
+/// straight decode).
+#[test]
+fn clean_bits_replay_exactly_through_from_message() {
+    let backend = toy_backend(17);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let mut rng = Rng::new(18);
+    let images: Vec<Vec<u8>> = (0..20)
+        .map(|_| (0..49).map(|_| (rng.f64() < 0.4) as u8).collect())
+        .collect();
+
+    let (encoded, _) = codec.encode_dataset(&images).unwrap();
+    let clean_after_encode = encoded.clean_words_used();
+    assert!(clean_after_encode > 0, "chain must draw clean bits");
+
+    // Straight decode: the coder object that did the encoding.
+    let mut straight = encoded.clone();
+    let straight_out = codec.decode_dataset(&mut straight, images.len()).unwrap();
+
+    // Resumed decode: serialize, parse, and rebuild via from_message.
+    let bytes = encoded.to_message().to_bytes();
+    let msg = AnsMessage::from_bytes(&bytes).unwrap();
+    assert_eq!(msg.clean_words_used, clean_after_encode);
+    let mut resumed = Ans::from_message(&msg, codec.cfg.clean_seed);
+    assert_eq!(resumed.clean_words_used(), clean_after_encode);
+    let resumed_out = codec.decode_dataset(&mut resumed, images.len()).unwrap();
+
+    assert_eq!(resumed_out, straight_out);
+    assert_eq!(resumed_out, images);
+    // Bit-for-bit identical end states: same clean-word count, same
+    // message (decode returns the borrowed bits in both).
+    assert_eq!(resumed.clean_words_used(), straight.clean_words_used());
+    assert_eq!(resumed.to_message(), straight.to_message());
 }
 
 #[test]

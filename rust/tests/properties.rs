@@ -2,12 +2,14 @@
 //! proptest): codec invariants swept across random shapes, configs and
 //! adversarial inputs.
 
-use bbans::ans::Ans;
+use bbans::ans::interleaved::InterleavedAns;
+use bbans::ans::{Ans, EntropyCoder, Interval};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
 use bbans::codecs::categorical::Categorical;
 use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use bbans::codecs::SymbolCodec;
 use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
+use bbans::util::prop::check_coders;
 use bbans::util::rng::Rng;
 
 /// Fuzz BB-ANS roundtrips across model shapes, likelihoods and coding
@@ -93,6 +95,56 @@ fn mixed_codec_stack_discipline() {
         }
     }
     assert!(ans.is_empty());
+}
+
+/// Cross-coder fuzz through the `EntropyCoder` trait: the stack coder and
+/// every interleaved lane count must roundtrip the same generated interval
+/// tables and symbol sequences, return to the pristine state, and decode
+/// symbols in identical (stream) order.
+#[test]
+fn entropy_coder_cross_coder_roundtrips() {
+    fn run_one<C: EntropyCoder>(
+        coder: &mut C,
+        ivs: &[Interval],
+        syms: &[usize],
+        prec: u32,
+    ) -> Option<Vec<usize>> {
+        let seq: Vec<Interval> = syms.iter().map(|&s| ivs[s]).collect();
+        coder.encode_all(&seq, prec);
+        let decoded = coder.decode_all(syms.len(), prec, |cf| {
+            let s = ivs.partition_point(|iv| iv.start <= cf) - 1;
+            (s, ivs[s])
+        });
+        coder.is_pristine().then_some(decoded)
+    }
+
+    check_coders(0xC0DE, 48, |cfg, ivs, syms| {
+        let from_stack = run_one(&mut Ans::new(0), ivs, syms, cfg.prec);
+        let from_l2 = run_one(&mut InterleavedAns::<2>::new(), ivs, syms, cfg.prec);
+        let from_l4 = run_one(&mut InterleavedAns::<4>::new(), ivs, syms, cfg.prec);
+        let from_l8 = run_one(&mut InterleavedAns::<8>::new(), ivs, syms, cfg.prec);
+        let want = Some(syms.to_vec());
+        from_stack == want && from_l2 == want && from_l4 == want && from_l8 == want
+    });
+}
+
+/// Rates through the trait agree across coders up to the fixed per-lane
+/// head overhead — interleaving buys parallelism, not rate.
+#[test]
+fn entropy_coder_rates_agree_across_lane_counts() {
+    check_coders(0xBEEF, 16, |cfg, ivs, syms| {
+        if syms.is_empty() {
+            return true;
+        }
+        let seq: Vec<Interval> = syms.iter().map(|&s| ivs[s]).collect();
+        let mut stack = Ans::new(0);
+        stack.encode_all(&seq, cfg.prec);
+        let mut lanes = InterleavedAns::<8>::new();
+        lanes.encode_all(&seq, cfg.prec);
+        let diff = lanes.bit_len() as i64 - EntropyCoder::bit_len(&stack) as i64;
+        // 7 extra 64-bit heads, ±1 renormalization word per lane.
+        diff.abs() <= 8 * 64 + 8 * 32
+    });
 }
 
 /// The ANS message after compressing data is incompressible (near-optimal

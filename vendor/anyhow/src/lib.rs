@@ -1,0 +1,220 @@
+//! Minimal, offline stand-in for the `anyhow` crate.
+//!
+//! The build runs with no network access, so the real `anyhow` cannot be
+//! fetched from crates.io. This vendored crate reimplements exactly the
+//! surface `bbans` uses:
+//!
+//! * [`Error`] — a context-chain error type (`Display` prints the
+//!   outermost message, `{:#}` prints the whole `outer: ...: root` chain,
+//!   `Debug` prints a `Caused by:` list);
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros;
+//! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!   so `?` works on `io::Error`, parse errors, etc.
+//!
+//! Downcasting and backtraces are intentionally omitted — nothing in the
+//! workspace uses them.
+
+use std::fmt::{self, Display};
+
+/// A context-chain error. `chain[0]` is the outermost message; the last
+/// element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a plain message (what `anyhow!` / `bail!` produce).
+    pub fn msg(message: impl Into<String>) -> Self {
+        Self {
+            chain: vec![message.into()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost → root messages.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent with `From<T> for T`
+// (the same trick the real anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e).context("reading file")
+    }
+
+    #[test]
+    fn context_chain_and_display() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading file");
+        assert_eq!(format!("{err:#}"), "reading file: gone");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(5).unwrap_err().to_string(), "five is right out");
+        assert!(inner(11).unwrap_err().to_string().contains("11"));
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn option_context_and_question_mark() {
+        fn grab(v: Option<u32>) -> Result<u32> {
+            let x = v.context("missing value")?;
+            let s: u32 = "12".parse()?; // From<ParseIntError>
+            Ok(x + s)
+        }
+        assert_eq!(grab(Some(1)).unwrap(), 13);
+        assert_eq!(grab(None).unwrap_err().to_string(), "missing value");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::num::ParseIntError> = "4".parse();
+        let mut called = false;
+        let got = ok.with_context(|| {
+            called = true;
+            "not called on Ok"
+        });
+        assert_eq!(got.unwrap(), 4);
+        assert!(!called, "with_context must not build context on Ok");
+        let bad: Result<u32, std::num::ParseIntError> = "x".parse();
+        let err = bad.with_context(|| format!("parsing {}", "x")).unwrap_err();
+        assert_eq!(format!("{err}"), "parsing x");
+    }
+}
