@@ -4,8 +4,9 @@
 //! the exact same call path.
 
 use bbans::ans::interleaved::{InterleavedAns, Interval};
-use bbans::ans::{Ans, EntropyCoder};
+use bbans::ans::{Ans, EntropyCoder, PreparedInterval, SymbolTable};
 use bbans::bench::{black_box, table_header, Bench};
+use bbans::codecs::quantize::DecodeLut;
 use bbans::util::rng::Rng;
 
 fn dist(prec: u32, k: usize) -> Vec<Interval> {
@@ -37,7 +38,18 @@ fn main() {
     let mut rng = Rng::new(1);
     let syms: Vec<usize> = (0..n).map(|_| rng.below(k as u64) as usize).collect();
 
+    // The headline hot path (ISSUE 2): prepared symbols — reciprocals
+    // built once per distribution symbol, every push division-free. Bit
+    // -identical output to the division baseline below.
+    let table = SymbolTable::from_intervals(&d, prec);
     bench.run("ans/push 1M skewed symbols", n as f64, || {
+        let mut ans = Ans::new(0);
+        for &s in &syms {
+            ans.push_prepared(table.get(s));
+        }
+        black_box(ans.stream_len());
+    });
+    bench.run("ans/push 1M skewed symbols (div baseline)", n as f64, || {
         let mut ans = Ans::new(0);
         for &s in &syms {
             ans.push(d[s].start, d[s].freq, prec);
@@ -45,27 +57,58 @@ fn main() {
         black_box(ans.stream_len());
     });
 
-    // Pre-encode once for the pop benchmark.
+    // Pre-encode once for the pop benchmarks.
     let mut encoded = Ans::new(0);
     for &s in syms.iter().rev() {
         encoded.push(d[s].start, d[s].freq, prec);
     }
     let msg = encoded.to_message();
+
+    // Decode-side hot path: O(1) direct-index LUT replacing the per-pop
+    // binary search.
+    let cdf: Vec<u32> = d
+        .iter()
+        .map(|iv| iv.start)
+        .chain(std::iter::once(1u32 << prec))
+        .collect();
+    let lut = DecodeLut::build(&cdf, prec);
     bench.run("ans/pop 1M skewed symbols", n as f64, || {
         let mut ans = Ans::from_message(&msg, 0);
         let mut acc = 0usize;
         for _ in 0..n {
             let s = ans.pop_with(prec, |cf| {
-                // Binary search over cumulative starts.
-                let i = d.partition_point(|iv| iv.start <= cf) - 1;
+                let i = lut.lookup(&cdf, cf);
                 (i, d[i].start, d[i].freq)
             });
             acc ^= s;
         }
         black_box(acc);
     });
+    bench.run(
+        "ans/pop 1M skewed symbols (binary-search baseline)",
+        n as f64,
+        || {
+            let mut ans = Ans::from_message(&msg, 0);
+            let mut acc = 0usize;
+            for _ in 0..n {
+                let s = ans.pop_with(prec, |cf| {
+                    // Binary search over cumulative starts.
+                    let i = d.partition_point(|iv| iv.start <= cf) - 1;
+                    (i, d[i].start, d[i].freq)
+                });
+                acc ^= s;
+            }
+            black_box(acc);
+        },
+    );
 
     let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+    let prepared: Vec<PreparedInterval> = syms.iter().map(|&s| *table.get(s)).collect();
+    bench.run("ans/interleaved-4 encode 1M (prepared)", n as f64, || {
+        let mut c = InterleavedAns::<4>::new();
+        c.encode_prepared(&prepared);
+        black_box(c.stream_len());
+    });
     bench.run("ans/interleaved-2 encode 1M", n as f64, || {
         let mut c = InterleavedAns::<2>::new();
         c.encode(&ivs, prec);
@@ -151,4 +194,7 @@ fn main() {
         prec,
     );
     println!("(same trait calls, same distribution: lane count is the only variable)");
+
+    // Record the trajectory (BENCH_ans.json with --json / BBANS_BENCH_JSON).
+    bench.finish("ans");
 }

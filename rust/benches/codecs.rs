@@ -1,7 +1,7 @@
 //! Distribution-codec benchmarks: the per-pixel and per-latent-dim costs
 //! that dominate the BB-ANS hot path.
 
-use bbans::ans::Ans;
+use bbans::ans::{Ans, EntropyCoder, Interval};
 use bbans::bench::{black_box, table_header, Bench};
 use bbans::codecs::beta_binomial::BetaBinomial;
 use bbans::codecs::categorical::Categorical;
@@ -60,6 +60,57 @@ fn main() {
         }
         black_box(ans.stream_len());
     });
+    // Same path with the reusable f64 row buffer (the CodecScratch form
+    // the BB-ANS image loops use): no per-pixel allocation.
+    bench.run("beta-binomial/from_pmf_row 784 pixels (scratch)", 784.0, || {
+        let mut ans = Ans::new(0);
+        let mut pmf = Vec::new();
+        for p in 0..784 {
+            let c = BetaBinomial::from_pmf_row_scratch(&table[p * 256..(p + 1) * 256], 18, &mut pmf);
+            c.push(&mut ans, pix[p]);
+        }
+        black_box(ans.stream_len());
+    });
+
+    // Bulk categorical coding through the prepared table + decode LUT
+    // (division-free pushes, O(1) symbol lookup).
+    let bulk_pmf: Vec<f64> = (0..256).map(|_| rng.f64() + 1e-6).collect();
+    let bulk_syms: Vec<usize> = (0..16_384).map(|_| rng.below(256) as usize).collect();
+    let plain_cat = Categorical::from_pmf(&bulk_pmf, 16);
+    let fast_cat = Categorical::from_pmf(&bulk_pmf, 16).prepare();
+    let mut scratch = Vec::new();
+    bench.run("categorical/encode_all 16k syms (prepared)", 16_384.0, || {
+        let mut ans = Ans::new(0);
+        fast_cat.encode_all_scratch(&mut ans, &bulk_syms, &mut scratch);
+        black_box(ans.stream_len());
+    });
+    let mut encoded = Ans::new(0);
+    fast_cat.encode_all_scratch(&mut encoded, &bulk_syms, &mut scratch);
+    bench.run("categorical/decode_all 16k syms (LUT)", 16_384.0, || {
+        let mut ans = encoded.clone();
+        black_box(fast_cat.decode_all(&mut ans, bulk_syms.len()).len());
+    });
+    // Raw binary-search baseline (decode_all itself now builds a coarse
+    // LUT past its break-even, so probe the search path directly).
+    bench.run(
+        "categorical/decode_all 16k syms (binary-search baseline)",
+        16_384.0,
+        || {
+            let mut ans = encoded.clone();
+            let q = plain_cat.quantized();
+            let out = EntropyCoder::decode_all(&mut ans, bulk_syms.len(), 16, |cf| {
+                let s = q.lookup_binary(cf);
+                (
+                    s,
+                    Interval {
+                        start: q.start(s),
+                        freq: q.freq(s),
+                    },
+                )
+            });
+            black_box(out.len());
+        },
+    );
 
     // Discretized Gaussian posterior: pop (sampling via bisection) and push.
     let buckets = MaxEntropyBuckets::new(12);
@@ -87,4 +138,6 @@ fn main() {
     bench.run("quantize/256-symbol pmf -> 2^18", 256.0, || {
         black_box(QuantizedCdf::from_pmf(&pmf, 18));
     });
+
+    bench.finish("codecs");
 }

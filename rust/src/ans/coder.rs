@@ -27,12 +27,23 @@
 //!   call quantize to the same `2^prec` total; `prec ≤` [`MAX_PREC`].
 
 use super::interleaved::{InterleavedAns, Interval};
+use super::prepared::PreparedInterval;
 use super::{Ans, MAX_PREC};
 
 /// A coder that maps sequences of quantized symbol intervals to bits.
 pub trait EntropyCoder {
     /// Encode `intervals` (in stream order) at precision `prec`.
     fn encode_all(&mut self, intervals: &[Interval], prec: u32);
+
+    /// Encode prepared (division-free) symbols in stream order — the hot
+    /// path (`crate::ans::prepared`). Every element must be prepared at
+    /// precision `prec`. Output is byte-identical to [`Self::encode_all`]
+    /// on the corresponding intervals; the default implementation proves
+    /// it by falling back to that path.
+    fn encode_all_prepared(&mut self, prepared: &[PreparedInterval], prec: u32) {
+        let ivs: Vec<Interval> = prepared.iter().map(|p| p.interval()).collect();
+        self.encode_all(&ivs, prec);
+    }
 
     /// Decode `n` symbols in stream order. `lookup` maps each position's
     /// cumulative value to `(symbol, interval)` and is called exactly once
@@ -58,6 +69,14 @@ impl EntropyCoder for Ans {
         // Stack discipline: push back-to-front so pops yield stream order.
         for iv in intervals.iter().rev() {
             self.push(iv.start, iv.freq, prec);
+        }
+    }
+
+    fn encode_all_prepared(&mut self, prepared: &[PreparedInterval], prec: u32) {
+        debug_assert!(prec <= MAX_PREC);
+        for p in prepared.iter().rev() {
+            debug_assert_eq!(p.prec(), prec, "mixed-precision prepared batch");
+            self.push_prepared(p);
         }
     }
 
@@ -89,6 +108,12 @@ impl EntropyCoder for Ans {
 impl<const N: usize> EntropyCoder for InterleavedAns<N> {
     fn encode_all(&mut self, intervals: &[Interval], prec: u32) {
         InterleavedAns::encode(self, intervals, prec)
+    }
+
+    fn encode_all_prepared(&mut self, prepared: &[PreparedInterval], prec: u32) {
+        debug_assert!(prec <= MAX_PREC);
+        debug_assert!(prepared.iter().all(|p| p.prec() == prec));
+        InterleavedAns::encode_prepared(self, prepared)
     }
 
     fn decode_all<S>(
@@ -165,6 +190,36 @@ mod tests {
         roundtrip_generic(&mut InterleavedAns::<1>::new(), 5000, 2);
         roundtrip_generic(&mut InterleavedAns::<4>::new(), 4999, 3);
         roundtrip_generic(&mut InterleavedAns::<8>::new(), 5001, 4);
+    }
+
+    #[test]
+    fn prepared_trait_path_matches_interval_path() {
+        use crate::ans::SymbolTable;
+        let prec = 14;
+        let d = geometric_intervals(prec, 10);
+        let syms: Vec<usize> = (0..3001).map(|i| (i * 13 + 5) % 10).collect();
+        let ivs: Vec<Interval> = syms.iter().map(|&s| d[s]).collect();
+        let table = SymbolTable::from_intervals(&d, prec);
+        let mut prepared = Vec::new();
+        table.gather_into(&syms, &mut prepared);
+
+        let mut a = Ans::new(0);
+        a.encode_all(&ivs, prec);
+        let mut b = Ans::new(0);
+        b.encode_all_prepared(&prepared, prec);
+        assert_eq!(a.to_message(), b.to_message(), "stack coder bytes drifted");
+        let got = b.decode_all(syms.len(), prec, |cf| {
+            let s = lookup(cf, &d);
+            (s, d[s])
+        });
+        assert_eq!(got, syms);
+        assert!(b.is_pristine());
+
+        let mut ia = InterleavedAns::<4>::new();
+        ia.encode_all(&ivs, prec);
+        let mut ib = InterleavedAns::<4>::new();
+        ib.encode_all_prepared(&prepared, prec);
+        assert_eq!(ia, ib, "interleaved coder state drifted");
     }
 
     #[test]

@@ -13,10 +13,14 @@
 //! clean-bit facility here — this coder targets the fully-observed fast
 //! path (likelihood coding), not bits-back sampling.
 
+use super::prepared::PreparedInterval;
 use super::RANS_L;
 
 /// An N-lane interleaved rANS encoder/decoder over a shared word stream.
-#[derive(Debug, Clone)]
+/// Equality compares the full coder state (heads + stream), which the
+/// property tests use to pin the prepared encode path to the division
+/// path bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InterleavedAns<const N: usize> {
     heads: [u64; N],
     stream: Vec<u32>,
@@ -53,6 +57,15 @@ impl<const N: usize> InterleavedAns<N> {
                 | (*head % iv.freq as u64 + iv.start as u64);
         }
         // The decoder reads words in reverse push order.
+    }
+
+    /// Division-free variant of [`InterleavedAns::encode`] over prepared
+    /// symbols — identical lane striping and renormalization schedule, so
+    /// the output is byte-identical to the division path.
+    pub fn encode_prepared(&mut self, prepared: &[PreparedInterval]) {
+        for (i, p) in prepared.iter().enumerate().rev() {
+            p.push_raw(&mut self.heads[i % N], &mut self.stream);
+        }
     }
 
     /// Decode `n` symbols front-to-back. `lookup(lane_cf) -> (sym, interval)`.
@@ -180,6 +193,25 @@ mod tests {
         // Interleaving costs only the extra heads (<= 3 * 64 bits here).
         let diff = il.bit_len() as i64 - plain.bit_len() as i64;
         assert!(diff.abs() <= 64 * 4, "interleaved overhead too large: {diff}");
+    }
+
+    #[test]
+    fn prepared_encode_is_bit_identical() {
+        let prec = 14;
+        let d = dist(prec);
+        let mut rng = Rng::new(11);
+        let ivs: Vec<Interval> = (0..5001)
+            .map(|_| d[rng.below(16) as usize])
+            .collect();
+        let prepared: Vec<PreparedInterval> = ivs
+            .iter()
+            .map(|iv| PreparedInterval::new(iv.start, iv.freq, prec))
+            .collect();
+        let mut a = InterleavedAns::<4>::new();
+        a.encode(&ivs, prec);
+        let mut b = InterleavedAns::<4>::new();
+        b.encode_prepared(&prepared);
+        assert_eq!(a, b, "prepared lanes must match the division path");
     }
 
     #[test]

@@ -28,9 +28,11 @@
 pub mod arith;
 pub mod coder;
 pub mod interleaved;
+pub mod prepared;
 
 pub use coder::EntropyCoder;
 pub use interleaved::Interval;
+pub use prepared::{PreparedInterval, SymbolTable};
 
 use crate::util::rng::Rng;
 
@@ -96,6 +98,15 @@ impl Ans {
         }
         self.head =
             ((self.head / freq as u64) << prec) | (self.head % freq as u64 + start as u64);
+    }
+
+    /// Division-free variant of [`Ans::push`] for a precomputed symbol —
+    /// byte-identical output (see [`prepared`]). This is the per-symbol
+    /// hot path for the uniform prior (`freq == 1` prepares without any
+    /// division) and for codecs that hold a [`SymbolTable`].
+    #[inline]
+    pub fn push_prepared(&mut self, sym: &PreparedInterval) {
+        sym.push_raw(&mut self.head, &mut self.stream);
     }
 
     /// Pop step 1: peek the cumulative value in `[0, 2^prec)` identifying
@@ -213,7 +224,7 @@ impl AnsMessage {
     }
 
     pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
-        use anyhow::{bail, Context};
+        use anyhow::bail;
         if b.len() < 24 {
             bail!("ANS message too short: {} bytes", b.len());
         }
@@ -222,7 +233,7 @@ impl AnsMessage {
         let n = u64::from_le_bytes(b[16..24].try_into().unwrap()) as usize;
         // Guard the word count before computing byte offsets, so an
         // attacker-controlled length can neither overflow `24 + 4 * n`
-        // nor drive the collect loop below past the buffer.
+        // nor push the word slice below past the buffer.
         if n > (b.len() - 24) / 4 {
             bail!(
                 "ANS message truncated: have {}, need {} stream words",
@@ -230,13 +241,10 @@ impl AnsMessage {
                 n
             );
         }
-        let stream = (0..n)
-            .map(|i| {
-                let o = 24 + 4 * i;
-                Ok(u32::from_le_bytes(b[o..o + 4].try_into().unwrap()))
-            })
-            .collect::<anyhow::Result<Vec<u32>>>()
-            .context("stream words")?;
+        let stream = b[24..24 + 4 * n]
+            .chunks_exact(4)
+            .map(|w| u32::from_le_bytes(w.try_into().unwrap()))
+            .collect();
         Ok(Self {
             head,
             stream,

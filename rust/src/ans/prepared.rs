@@ -1,0 +1,422 @@
+//! Division-free symbol encoding (the ISSUE 2 hot-path layer).
+//!
+//! `Ans::push` pays a hardware `u64` divide + modulo per symbol, and the
+//! division sits on the loop-carried dependency chain through the coder
+//! head — every symbol's divide must retire before the next can start.
+//! Production rANS implementations (ryg's `rans64.h`; Alverson, *Integer
+//! division using reciprocals*, 1991) precompute, per symbol interval, a
+//! fixed-point reciprocal of the frequency so the encode step becomes a
+//! high-multiply plus shifts:
+//!
+//! ```text
+//! q  = (x · rcp_freq) >> 64 >> rcp_shift          // exactly x / freq
+//! x' = x + bias + q · cmpl_freq                   // == (q << prec) | (x % freq + start)
+//! ```
+//!
+//! The one division left (building `rcp_freq`) runs once per *distribution
+//! symbol* when a [`SymbolTable`] is built, or — for one-shot symbols —
+//! off the dependency chain, where it pipelines with neighbouring work
+//! instead of serializing the coder.
+//!
+//! **Bit-exactness.** For every `(start, freq, prec, head)` the prepared
+//! step produces the same head and the same renormalization words as the
+//! division step; `freq == 1` (the uniform-prior path) is special-cased
+//! with `rcp = 2⁶⁴ − 1`, which needs no division at all to build. The
+//! equivalence is enforced by exhaustive unit tests here and by the
+//! cross-coder property tests in `tests/properties.rs`, so the prepared
+//! path never changes a byte of any container.
+//!
+//! One subtlety vs ryg's rans64: that coder renormalizes its state below
+//! 2⁶³, where a 64-bit round-up reciprocal is exact for every frequency.
+//! Our head lives in `[2³², 2⁶⁴)` and after renormalization can reach
+//! `freq · 2^(64−prec) − 1`, which for `freq > 2^(prec−1)` (symbols with
+//! probability > ½) exceeds the Granlund–Montgomery exactness range for
+//! some frequencies. [`PreparedInterval::new`] therefore checks the exact
+//! bound `rem · 2^(64−prec) < rcp` at build time; the rare symbol that
+//! fails it (only possible at p > ½) encodes through the division path,
+//! flagged by a `rcp_freq == 0` sentinel — correctness never depends on
+//! the reciprocal being exact.
+
+use super::interleaved::Interval;
+use super::MAX_PREC;
+
+/// A symbol interval with its precomputed encode constants.
+///
+/// Immutable once built; `Copy` so tables can hand out values without
+/// indirection in the hot loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PreparedInterval {
+    /// Fixed-point reciprocal: `ceil(2^(shift+63) / freq)` for `freq ≥ 2`,
+    /// `2⁶⁴ − 1` for `freq == 1`, or `0` as the sentinel for the rare
+    /// p > ½ symbol whose reciprocal is not exact over the full head
+    /// range (encodes via division; see the module docs).
+    rcp_freq: u64,
+    /// `start` for `freq ≥ 2`; `start + 2^prec − 1` for `freq == 1`.
+    bias: u64,
+    /// `2^prec − freq`.
+    cmpl_freq: u64,
+    /// Renormalization threshold: `freq << (64 − prec)`.
+    limit: u64,
+    /// `ceil(log2 freq) − 1` for `freq ≥ 2`; `0` for `freq == 1`.
+    rcp_shift: u32,
+    start: u32,
+    freq: u32,
+    prec: u32,
+}
+
+impl PreparedInterval {
+    /// Prepare the interval `[start, start+freq)` out of `2^prec`.
+    #[inline]
+    pub fn new(start: u32, freq: u32, prec: u32) -> Self {
+        debug_assert!(prec >= 1 && prec <= MAX_PREC);
+        debug_assert!(freq > 0, "zero-frequency symbol");
+        debug_assert!((start as u64 + freq as u64) <= (1u64 << prec));
+        let m = 1u64 << prec;
+        let limit = (freq as u64) << (64 - prec);
+        if freq == 1 {
+            // x / 1 == x: encode as mulhi(x, 2⁶⁴−1) = x − 1, compensated
+            // through the bias so x' = (x << prec) | start. No division.
+            Self {
+                rcp_freq: u64::MAX,
+                bias: start as u64 + m - 1,
+                cmpl_freq: m - 1,
+                limit,
+                rcp_shift: 0,
+                start,
+                freq,
+                prec,
+            }
+        } else {
+            // shift = ceil(log2 freq); rcp = ceil(2^(shift+63) / freq),
+            // computed as a 2-limb long division so no u128 division (a
+            // libcall) is needed (as in ryg rans64.h).
+            let shift = 32 - (freq - 1).leading_zeros();
+            let f = freq as u64;
+            let hi = 1u64 << (shift + 31);
+            let t1 = hi / f;
+            let t0 = ((hi % f) << 32 | (f - 1)) / f;
+            let rcp = (t1 << 32) + t0;
+            // Exactness guard (Granlund–Montgomery): with rem =
+            // rcp·freq − 2^(shift+63), the reciprocal reproduces x / freq
+            // for every q = x/freq < 2^(64−prec) — i.e. every x this
+            // symbol can see after renormalization — iff
+            // rem · 2^(64−prec) < rcp. Symbols with freq ≤ 2^(prec−1)
+            // always pass; a failing p > ½ symbol keeps the division
+            // path (sentinel rcp_freq = 0) so output never changes.
+            let rem = ((rcp as u128 * f as u128) - (1u128 << (shift + 63))) as u64;
+            if rem <= (rcp - 1) >> (64 - prec) {
+                Self {
+                    rcp_freq: rcp,
+                    bias: start as u64,
+                    cmpl_freq: m - f,
+                    limit,
+                    rcp_shift: shift - 1,
+                    start,
+                    freq,
+                    prec,
+                }
+            } else {
+                Self {
+                    rcp_freq: 0,
+                    bias: 0,
+                    cmpl_freq: 0,
+                    limit,
+                    rcp_shift: 0,
+                    start,
+                    freq,
+                    prec,
+                }
+            }
+        }
+    }
+
+    /// The plain quantized interval (fallback for coders without a
+    /// prepared fast path).
+    #[inline]
+    pub fn interval(&self) -> Interval {
+        Interval {
+            start: self.start,
+            freq: self.freq,
+        }
+    }
+
+    /// Coding precision this symbol was prepared at.
+    #[inline]
+    pub fn prec(&self) -> u32 {
+        self.prec
+    }
+
+    /// Does this symbol encode through the reciprocal (vs the rare
+    /// division fallback)?
+    #[inline]
+    fn uses_reciprocal(&self) -> bool {
+        self.rcp_freq != 0
+    }
+
+    /// The encoder's quotient term (reciprocal symbols only). For
+    /// `freq ≥ 2` this is exactly `x / freq` for every `x` below this
+    /// symbol's renormalization threshold; for `freq == 1` it is `x − 1`
+    /// (for `x ≥ 1`), which the bias compensates.
+    #[inline(always)]
+    fn quotient(&self, x: u64) -> u64 {
+        (((x as u128 * self.rcp_freq as u128) >> 64) as u64) >> self.rcp_shift
+    }
+
+    /// One encode step: renormalize `head` against this symbol's
+    /// precomputed threshold (emitting 32-bit words to `stream`), then
+    /// apply the state transition — division-free except for the rare
+    /// sentinel symbol (see the module docs). Byte-identical to
+    /// `Ans::push`.
+    #[inline(always)]
+    pub(crate) fn push_raw(&self, head: &mut u64, stream: &mut Vec<u32>) {
+        let mut x = *head;
+        while x >= self.limit {
+            stream.push(x as u32);
+            x >>= 32;
+        }
+        *head = if self.uses_reciprocal() {
+            x + self.bias + self.quotient(x) * self.cmpl_freq
+        } else {
+            ((x / self.freq as u64) << self.prec) | (x % self.freq as u64 + self.start as u64)
+        };
+    }
+}
+
+/// All symbols of one quantized distribution, prepared once.
+///
+/// Build cost is one reciprocal per *distribution symbol*; every encoded
+/// occurrence after that is division-free. Pays for itself as soon as a
+/// distribution codes more symbols than its alphabet size.
+#[derive(Debug, Clone)]
+pub struct SymbolTable {
+    prec: u32,
+    syms: Vec<PreparedInterval>,
+}
+
+impl SymbolTable {
+    /// Prepare a full interval table (intervals must tile `[0, 2^prec)`
+    /// in symbol order, as produced by the quantizer).
+    pub fn from_intervals(intervals: &[Interval], prec: u32) -> Self {
+        Self {
+            prec,
+            syms: intervals
+                .iter()
+                .map(|iv| PreparedInterval::new(iv.start, iv.freq, prec))
+                .collect(),
+        }
+    }
+
+    /// Prepare from cumulative bounds (`cdf.len() == num_symbols + 1`,
+    /// `cdf[0] == 0`, strictly increasing) — the layout
+    /// `codecs::quantize::QuantizedCdf` stores.
+    pub fn from_cdf(cdf: &[u32], prec: u32) -> Self {
+        debug_assert!(cdf.len() >= 2);
+        Self {
+            prec,
+            syms: cdf
+                .windows(2)
+                .map(|w| PreparedInterval::new(w[0], w[1] - w[0], prec))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, sym: usize) -> &PreparedInterval {
+        &self.syms[sym]
+    }
+
+    #[inline]
+    pub fn prec(&self) -> u32 {
+        self.prec
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.syms.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.syms.is_empty()
+    }
+
+    /// Gather the prepared symbols for a sequence into a reusable buffer
+    /// (cleared first) — the allocation-free feeding path for
+    /// [`crate::ans::EntropyCoder::encode_all_prepared`].
+    pub fn gather_into(&self, syms: &[usize], out: &mut Vec<PreparedInterval>) {
+        out.clear();
+        out.extend(syms.iter().map(|&s| self.syms[s]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::RANS_L;
+    use crate::util::rng::Rng;
+
+    /// The reference (division) state transition from `Ans::push`.
+    fn div_step(mut head: u64, start: u32, freq: u32, prec: u32) -> (u64, Vec<u32>) {
+        let mut stream = Vec::new();
+        let limit = (freq as u64) << (64 - prec);
+        while head >= limit {
+            stream.push(head as u32);
+            head >>= 32;
+        }
+        head = ((head / freq as u64) << prec) | (head % freq as u64 + start as u64);
+        (head, stream)
+    }
+
+    fn prep_step(mut head: u64, start: u32, freq: u32, prec: u32) -> (u64, Vec<u32>) {
+        let mut stream = Vec::new();
+        PreparedInterval::new(start, freq, prec).push_raw(&mut head, &mut stream);
+        (head, stream)
+    }
+
+    #[test]
+    fn prepared_step_matches_division_step_exhaustively() {
+        // Every frequency at a mid-size precision, against heads covering
+        // the renormalization boundaries and the extremes of the invariant
+        // range [2³², 2⁶⁴). freq == 2^prec is excluded: such a symbol
+        // carries zero information and `Ans::push`'s renormalization is
+        // undefined for it (limit wraps to 0) — the quantizer never emits
+        // it for alphabets of two or more symbols.
+        let prec = 12u32;
+        let mut via_rcp = 0u32;
+        let mut via_div = 0u32;
+        for freq in 1..(1u32 << prec) {
+            if PreparedInterval::new(0, freq, prec).uses_reciprocal() {
+                via_rcp += 1;
+            } else {
+                via_div += 1;
+            }
+            let start_max = (1u32 << prec) - freq;
+            let limit = (freq as u64) << (64 - prec);
+            for start in [0, start_max / 2, start_max] {
+                for head in [
+                    RANS_L,
+                    RANS_L + 1,
+                    limit.saturating_sub(1).max(RANS_L),
+                    limit.max(RANS_L),
+                    u64::MAX - 1,
+                    u64::MAX,
+                ] {
+                    assert_eq!(
+                        div_step(head, start, freq, prec),
+                        prep_step(head, start, freq, prec),
+                        "freq={freq} start={start} head={head:#x}"
+                    );
+                }
+            }
+        }
+        // The sweep must exercise both the reciprocal path and the
+        // p > ½ division-fallback path (the exactness-guard boundary).
+        assert!(
+            via_rcp > 0 && via_div > 0,
+            "encode paths not both covered: rcp={via_rcp} div={via_div}"
+        );
+    }
+
+    #[test]
+    fn prepared_step_matches_division_step_random_wide() {
+        // Random (prec, freq, start, head) across the full supported
+        // precision range, including prec = 32.
+        let mut rng = Rng::new(0x9E1D);
+        for _ in 0..200_000 {
+            let prec = 1 + rng.below(MAX_PREC as u64) as u32;
+            let m = 1u64 << prec;
+            // freq in [1, 2^prec) — full-range symbols are excluded (see
+            // the exhaustive test above); prec = 1 only admits freq = 1.
+            let fmax = (m - 1).max(1).min(u32::MAX as u64);
+            let freq = (1 + rng.below(fmax)) as u32;
+            let start = rng.below(m - freq as u64 + 1) as u32;
+            // Heads from the full invariant range; bias toward boundaries.
+            let head = match rng.below(4) {
+                0 => RANS_L + rng.below(1 << 20),
+                1 => u64::MAX - rng.below(1 << 20),
+                _ => rng.next_u64() | RANS_L, // ≥ RANS_L
+            };
+            assert_eq!(
+                div_step(head, start, freq, prec),
+                prep_step(head, start, freq, prec),
+                "prec={prec} freq={freq} start={start} head={head:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn reciprocal_quotient_is_exact_within_renorm_range() {
+        // For reciprocal symbols the quotient must equal x / freq for
+        // every x below the renormalization threshold — the only values
+        // `push_raw` ever feeds it. Sentinel (division-fallback) symbols
+        // are covered by the step-equality tests.
+        let prec = 32u32;
+        let mut rng = Rng::new(0x51ED);
+        let mut checked = 0u64;
+        let check = |freq: u32, x: u64| {
+            let p = PreparedInterval::new(0, freq, prec);
+            if !p.uses_reciprocal() {
+                return false;
+            }
+            debug_assert!(x < p.limit);
+            assert_eq!(p.quotient(x), x / freq as u64, "freq={freq} x={x:#x}");
+            true
+        };
+        for shift in 1..32u32 {
+            for d in [-1i64, 0, 1] {
+                let freq = ((1i64 << shift) + d) as u32;
+                if freq < 2 {
+                    continue;
+                }
+                let limit = (freq as u64) << (64 - prec);
+                for x in [0, 1, freq as u64 - 1, freq as u64, limit - freq as u64, limit - 1] {
+                    if check(freq, x) {
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        for _ in 0..200_000 {
+            let freq = (2 + rng.below((1u64 << 32) - 2)) as u32;
+            let limit = (freq as u64) << (64 - prec);
+            let x = rng.next_u64() % limit;
+            // Random interior point, the worst case (top of the range),
+            // and the quotient boundaries k·freq ± 1.
+            let k = x / freq as u64;
+            for probe in [x, limit - 1, k * freq as u64, (k * freq as u64).saturating_sub(1)] {
+                if check(freq, probe) {
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 400_000, "reciprocal path under-exercised: {checked}");
+    }
+
+    #[test]
+    fn symbol_table_matches_per_symbol_preparation() {
+        let prec = 10;
+        let intervals = [
+            Interval { start: 0, freq: 600 },
+            Interval { start: 600, freq: 1 },
+            Interval {
+                start: 601,
+                freq: 1024 - 601,
+            },
+        ];
+        let t = SymbolTable::from_intervals(&intervals, prec);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.prec(), prec);
+        assert!(!t.is_empty());
+        let cdf = [0u32, 600, 601, 1024];
+        let t2 = SymbolTable::from_cdf(&cdf, prec);
+        for (s, iv) in intervals.iter().enumerate() {
+            assert_eq!(*t.get(s), PreparedInterval::new(iv.start, iv.freq, prec));
+            assert_eq!(t.get(s), t2.get(s));
+        }
+        let mut buf = vec![PreparedInterval::new(0, 1, 1); 7];
+        t.gather_into(&[2, 0, 0, 1], &mut buf);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf[0], *t.get(2));
+        assert_eq!(buf[3], *t.get(1));
+    }
+}

@@ -26,13 +26,32 @@ pub mod timeseries;
 
 use anyhow::{bail, Result};
 
-use crate::ans::{Ans, EntropyCoder, Interval};
+use crate::ans::{Ans, EntropyCoder, Interval, PreparedInterval};
 use crate::codecs::beta_binomial::{BetaBinomial, BetaBinomialDirect};
 use crate::codecs::categorical::Bernoulli;
 use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use crate::codecs::uniform::Uniform;
 use crate::codecs::SymbolCodec;
 use crate::model::{Backend, Likelihood, PixelParams};
+
+/// Reusable buffers for the per-image coding loops (ISSUE 2): one scratch
+/// per chain/thread removes every per-pixel and per-image heap allocation
+/// from the hot path — the prepared-symbol vector that used to be
+/// `collect()`ed fresh per image, and the f64 PMF row the table-backed
+/// beta-binomial codec used to allocate per *pixel*.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    /// Per-pixel prepared symbols for the likelihood encode.
+    prepared: Vec<PreparedInterval>,
+    /// Widened f64 PMF row for `BetaBinomial::from_pmf_row_scratch`.
+    pmf: Vec<f64>,
+}
+
+impl CodecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Coding hyper-parameters (recorded in the container header; encoder and
 /// decoder must agree).
@@ -138,16 +157,22 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         DiscretizedGaussian::new(self.buckets.clone(), mu, sigma, self.cfg.posterior_prec)
     }
 
-    /// Quantized interval of pixel `p` taking value `sym` under the
-    /// likelihood params (all pixels code at `cfg.pixel_prec`).
-    fn pixel_interval(&self, params: &PixelParams, p: usize, sym: u8) -> Interval {
+    /// Prepared (division-free) interval of pixel `p` taking value `sym`
+    /// under the likelihood params (all pixels code at `cfg.pixel_prec`).
+    /// `pmf` is the reusable f64 row buffer for the table path.
+    fn pixel_prepared(
+        &self,
+        params: &PixelParams,
+        p: usize,
+        sym: u8,
+        pmf: &mut Vec<f64>,
+    ) -> PreparedInterval {
         match params {
             PixelParams::Bernoulli(probs) => {
                 // Allocation-free fast path (§Perf #5), bit-identical to
                 // Categorical::bernoulli.
                 let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
-                let (start, freq) = c.interval((sym != 0) as usize);
-                Interval { start, freq }
+                c.prepared_interval((sym != 0) as usize)
             }
             PixelParams::BetaBinomialAb { alpha, beta } => {
                 // Lazy direct codec: O(sym) work, O(1) for the black
@@ -158,23 +183,36 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
                     beta[p] as f64,
                     self.cfg.pixel_prec,
                 );
-                let (start, freq) = c.interval(sym as u32);
-                Interval { start, freq }
+                c.prepared_interval(sym as u32)
             }
             PixelParams::BetaBinomialTable(table) => {
-                let c =
-                    BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
+                let c = BetaBinomial::from_pmf_row_scratch(
+                    &table[p * 256..(p + 1) * 256],
+                    self.cfg.pixel_prec,
+                    pmf,
+                );
                 let q = c.quantized();
-                Interval {
-                    start: q.start(sym as usize),
-                    freq: q.freq(sym as usize),
-                }
+                PreparedInterval::new(
+                    q.start(sym as usize),
+                    q.freq(sym as usize),
+                    self.cfg.pixel_prec,
+                )
             }
         }
     }
 
-    /// Inverse of [`Self::pixel_interval`]: classify a cumulative value.
-    fn pixel_lookup(&self, params: &PixelParams, p: usize, cf: u32) -> (u8, Interval) {
+    /// Inverse of [`Self::pixel_prepared`]: classify a cumulative value.
+    /// Lookup is O(1)/O(sym) for the Bernoulli and direct beta-binomial
+    /// paths; the per-pixel table path keeps the short binary search (a
+    /// LUT would cost more to build than the ~8 probes it saves on a
+    /// single-lookup codec — see `QuantizedCdf::build_lut`).
+    fn pixel_lookup(
+        &self,
+        params: &PixelParams,
+        p: usize,
+        cf: u32,
+        pmf: &mut Vec<f64>,
+    ) -> (u8, Interval) {
         match params {
             PixelParams::Bernoulli(probs) => {
                 let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
@@ -192,8 +230,11 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
                 (sym as u8, Interval { start, freq })
             }
             PixelParams::BetaBinomialTable(table) => {
-                let c =
-                    BetaBinomial::from_pmf_row(&table[p * 256..(p + 1) * 256], self.cfg.pixel_prec);
+                let c = BetaBinomial::from_pmf_row_scratch(
+                    &table[p * 256..(p + 1) * 256],
+                    self.cfg.pixel_prec,
+                    pmf,
+                );
                 let q = c.quantized();
                 let sym = q.lookup(cf);
                 (
@@ -226,19 +267,35 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// Coder-generic likelihood encode: codes the whole image through any
     /// [`EntropyCoder`] — the stack coder on the bits-back path, the
     /// interleaved multi-lane coder on the fully-observed fast path
-    /// (paper §4.2).
+    /// (paper §4.2). Allocates a fresh scratch; loops should use
+    /// [`Self::push_pixels_coder_scratch`].
     pub fn push_pixels_coder<C: EntropyCoder>(
         &self,
         coder: &mut C,
         params: &PixelParams,
         img: &[u8],
     ) {
-        let ivs: Vec<Interval> = img
-            .iter()
-            .enumerate()
-            .map(|(p, &sym)| self.pixel_interval(params, p, sym))
-            .collect();
-        coder.encode_all(&ivs, self.cfg.pixel_prec);
+        self.push_pixels_coder_scratch(coder, params, img, &mut CodecScratch::new())
+    }
+
+    /// [`Self::push_pixels_coder`] with reusable buffers: the whole image
+    /// is gathered as prepared symbols (division-free encode) with zero
+    /// heap allocation after the first image on a scratch.
+    pub fn push_pixels_coder_scratch<C: EntropyCoder>(
+        &self,
+        coder: &mut C,
+        params: &PixelParams,
+        img: &[u8],
+        scratch: &mut CodecScratch,
+    ) {
+        let CodecScratch { prepared, pmf } = scratch;
+        prepared.clear();
+        prepared.extend(
+            img.iter()
+                .enumerate()
+                .map(|(p, &sym)| self.pixel_prepared(params, p, sym, pmf)),
+        );
+        coder.encode_all_prepared(prepared, self.cfg.pixel_prec);
     }
 
     /// Step 3 of encode: push the latent under the uniform prior.
@@ -269,10 +326,22 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// Coder-generic likelihood decode (inverse of
     /// [`Self::push_pixels_coder`]; pixels come back in raster order).
     pub fn pop_pixels_coder<C: EntropyCoder>(&self, coder: &mut C, params: &PixelParams) -> Vec<u8> {
+        self.pop_pixels_coder_scratch(coder, params, &mut CodecScratch::new())
+    }
+
+    /// [`Self::pop_pixels_coder`] with reusable buffers (the table-path
+    /// PMF row; the decoded image itself is the return value).
+    pub fn pop_pixels_coder_scratch<C: EntropyCoder>(
+        &self,
+        coder: &mut C,
+        params: &PixelParams,
+        scratch: &mut CodecScratch,
+    ) -> Vec<u8> {
         let pixels = self.backend.meta().pixels;
+        let pmf = &mut scratch.pmf;
         let mut p = 0usize;
         coder.decode_all(pixels, self.cfg.pixel_prec, |cf| {
-            let out = self.pixel_lookup(params, p, cf);
+            let out = self.pixel_lookup(params, p, cf, pmf);
             p += 1;
             out
         })
@@ -299,6 +368,20 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         mu: &[f32],
         sigma: &[f32],
     ) -> Result<ImageStats> {
+        self.encode_image_with_posterior_scratch(ans, img, mu, sigma, &mut CodecScratch::new())
+    }
+
+    /// [`Self::encode_image_with_posterior`] with reusable buffers — the
+    /// form the dataset loops use so chained encoding allocates nothing
+    /// per image.
+    pub fn encode_image_with_posterior_scratch(
+        &self,
+        ans: &mut Ans,
+        img: &[u8],
+        mu: &[f32],
+        sigma: &[f32],
+        scratch: &mut CodecScratch,
+    ) -> Result<ImageStats> {
         let meta = self.backend.meta();
         if img.len() != meta.pixels {
             bail!("image has {} pixels, model wants {}", img.len(), meta.pixels);
@@ -319,7 +402,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         // (2) push s under p(s|y).
         let y = self.centres(&idx);
         let params = self.backend.likelihood(&[&y])?.remove(0);
-        self.push_pixels(ans, &params, img);
+        self.push_pixels_coder_scratch(ans, &params, img, scratch);
         let b2 = bits_at(ans);
 
         // (3) push y under the (exactly uniform) discretized prior.
@@ -344,13 +427,18 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// Decode one image from the stack — the exact inverse of
     /// [`Self::encode_image`].
     pub fn decode_image(&self, ans: &mut Ans) -> Result<Vec<u8>> {
+        self.decode_image_scratch(ans, &mut CodecScratch::new())
+    }
+
+    /// [`Self::decode_image`] with reusable buffers.
+    pub fn decode_image_scratch(&self, ans: &mut Ans, scratch: &mut CodecScratch) -> Result<Vec<u8>> {
         // (3 inverse) pop y from the prior.
         let idx = self.pop_prior(ans);
 
         // (2 inverse) pop s under p(s|y).
         let y = self.centres(&idx);
         let params = self.backend.likelihood(&[&y])?.remove(0);
-        let img = self.pop_pixels(ans, &params);
+        let img = self.pop_pixels_coder_scratch(ans, &params, scratch);
 
         // (1 inverse) push y back under q(y|s) — returns the borrowed bits.
         let x = self.scale_image(&img);
@@ -378,12 +466,15 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     ) -> Result<Vec<ImageStats>> {
         const NN_CHUNK: usize = 64;
         let mut stats = Vec::with_capacity(images.len());
+        let mut scratch = CodecScratch::new();
         for chunk in images.chunks(NN_CHUNK) {
             let scaled: Vec<Vec<f32>> = chunk.iter().map(|i| self.scale_image(i)).collect();
             let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
             let posts = self.backend.posterior(&refs)?;
             for (img, (mu, sigma)) in chunk.iter().zip(posts.iter()) {
-                stats.push(self.encode_image_with_posterior(ans, img, mu, sigma)?);
+                stats.push(
+                    self.encode_image_with_posterior_scratch(ans, img, mu, sigma, &mut scratch)?,
+                );
             }
         }
         Ok(stats)
@@ -392,8 +483,9 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// Decode `n` chained images; returns them in original encode order.
     pub fn decode_dataset(&self, ans: &mut Ans, n: usize) -> Result<Vec<Vec<u8>>> {
         let mut out = Vec::with_capacity(n);
+        let mut scratch = CodecScratch::new();
         for _ in 0..n {
-            out.push(self.decode_image(ans)?);
+            out.push(self.decode_image_scratch(ans, &mut scratch)?);
         }
         out.reverse(); // stack order → original order
         Ok(out)

@@ -5,8 +5,22 @@
 //! Methodology: warm up, then run timed batches until both a minimum
 //! duration and a minimum iteration count are reached; report mean ±
 //! stddev of per-iteration time plus derived throughput.
+//!
+//! ## Machine-readable trajectory (ISSUE 2)
+//!
+//! Targets that call [`Bench::finish`] emit their measurements as JSON so
+//! perf PRs leave a recorded trajectory. Output is enabled by either:
+//!
+//! * `BBANS_BENCH_JSON=<path>` — write to an explicit path, or
+//! * a `--json` argument (`cargo bench --bench ans -- --json`) — write
+//!   `BENCH_<target>.json` at the repository root.
+//!
+//! Each record is `{name, iters, ns_per_op, ops_per_sec}`; `ops_per_sec`
+//! is `null` for benches without a unit count.
 
+use crate::util::json::Json;
 use crate::util::timer::{fmt_duration, Stats};
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -23,6 +37,17 @@ pub struct Measurement {
 impl Measurement {
     pub fn units_per_sec(&self) -> f64 {
         self.units_per_iter / self.mean.as_secs_f64()
+    }
+
+    /// Mean time per work unit in nanoseconds (per iteration when no unit
+    /// count was supplied).
+    pub fn ns_per_op(&self) -> f64 {
+        let units = if self.units_per_iter > 0.0 {
+            self.units_per_iter
+        } else {
+            1.0
+        };
+        self.mean.as_secs_f64() * 1e9 / units
     }
 }
 
@@ -104,6 +129,63 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Serialize all measurements as the `BENCH_*.json` trajectory format.
+    pub fn to_json(&self, target: &str) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut rec = BTreeMap::new();
+                rec.insert("name".to_string(), Json::Str(m.name.clone()));
+                rec.insert("iters".to_string(), Json::Num(m.iters as f64));
+                rec.insert("ns_per_op".to_string(), Json::Num(m.ns_per_op()));
+                rec.insert(
+                    "ops_per_sec".to_string(),
+                    if m.units_per_iter > 0.0 {
+                        Json::Num(m.units_per_sec())
+                    } else {
+                        Json::Null
+                    },
+                );
+                Json::Obj(rec)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("target".to_string(), Json::Str(target.to_string()));
+        top.insert(
+            "fast_mode".to_string(),
+            Json::Bool(std::env::var_os("BBANS_BENCH_FAST").is_some()),
+        );
+        top.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(top)
+    }
+
+    /// Write the JSON trajectory if requested (see the module docs):
+    /// `BBANS_BENCH_JSON=<path>` wins; otherwise a `--json` CLI argument
+    /// writes `BENCH_<target>.json` at the repository root. Call once at
+    /// the end of a bench target's `main`. Panics on I/O failure so CI
+    /// fails loudly rather than silently dropping the trajectory.
+    pub fn finish(&self, target: &str) {
+        let path = match std::env::var_os("BBANS_BENCH_JSON") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => {
+                if !std::env::args().any(|a| a == "--json") {
+                    return;
+                }
+                // CARGO_MANIFEST_DIR is rust/; the trajectory lives at the
+                // repository root next to CHANGES.md.
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                    .parent()
+                    .expect("crate dir has a parent")
+                    .join(format!("BENCH_{target}.json"))
+            }
+        };
+        let body = format!("{}\n", self.to_json(target));
+        std::fs::write(&path, body)
+            .unwrap_or_else(|e| panic!("writing bench JSON {}: {e}", path.display()));
+        println!("bench: wrote {}", path.display());
+    }
 }
 
 /// Black-box to stop the optimizer deleting benchmarked work.
@@ -123,6 +205,45 @@ pub fn table_header(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_trajectory_parses_and_writes() {
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(1);
+        b.measure = Duration::from_millis(5);
+        let mut acc = 0u64;
+        b.run("with-units", 10.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.run("no-units", 0.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+
+        let parsed = Json::parse(&b.to_json("unit").to_string()).unwrap();
+        assert_eq!(parsed.get("target").unwrap().as_str().unwrap(), "unit");
+        let results = match parsed.get("results").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("results not an array: {other:?}"),
+        };
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str().unwrap(),
+            "with-units"
+        );
+        assert!(results[0].get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(results[0].get("ns_per_op").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(*results[1].get("ops_per_sec").unwrap(), Json::Null);
+
+        // finish() honours an explicit BBANS_BENCH_JSON path.
+        let path = std::env::temp_dir().join(format!("bbans_bench_test_{}.json", std::process::id()));
+        std::env::set_var("BBANS_BENCH_JSON", &path);
+        b.finish("unit");
+        std::env::remove_var("BBANS_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let reread = Json::parse(text.trim()).unwrap();
+        assert_eq!(reread.get("target").unwrap().as_str().unwrap(), "unit");
+    }
 
     #[test]
     fn bench_runs_and_reports() {

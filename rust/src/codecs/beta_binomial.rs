@@ -67,24 +67,33 @@ impl BetaBinomial {
 
     /// Construction from a PMF row computed inside the model graph (f32).
     pub fn from_pmf_row(row: &[f32], prec: u32) -> Self {
+        Self::from_pmf_row_scratch(row, prec, &mut Vec::new())
+    }
+
+    /// [`BetaBinomial::from_pmf_row`] reusing a caller-owned f64 buffer
+    /// for the widened PMF row — the per-pixel table path builds one codec
+    /// per pixel, and this keeps that loop free of the `Vec<f64>`
+    /// allocation (ISSUE 2). Bit-identical to the allocating constructor.
+    pub fn from_pmf_row_scratch(row: &[f32], prec: u32, pmf: &mut Vec<f64>) -> Self {
         let n = (row.len() - 1) as u32;
-        let pmf: Vec<f64> = row
-            .iter()
-            .map(|&p| {
-                let p = p as f64;
-                if p.is_finite() && p > 0.0 {
-                    p
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        pmf.clear();
+        pmf.extend(row.iter().map(|&p| {
+            let p = p as f64;
+            if p.is_finite() && p > 0.0 {
+                p
+            } else {
+                0.0
+            }
+        }));
         // A fully-zero row (pathological network output) degrades to
         // uniform rather than panicking.
         let total: f64 = pmf.iter().sum();
-        let pmf = if total > 0.0 { pmf } else { vec![1.0; row.len()] };
+        if total <= 0.0 {
+            pmf.clear();
+            pmf.resize(row.len(), 1.0);
+        }
         Self {
-            inner: Categorical::from_pmf(&pmf, prec),
+            inner: Categorical::from_pmf(pmf, prec),
             n,
         }
     }
@@ -191,6 +200,14 @@ impl BetaBinomialDirect {
         unreachable!()
     }
 
+    /// The prepared (division-free) form of `sym`'s interval, for the
+    /// batch pixel path (`encode_all_prepared`).
+    #[inline]
+    pub fn prepared_interval(&self, sym: u32) -> crate::ans::PreparedInterval {
+        let (start, freq) = self.interval(sym);
+        crate::ans::PreparedInterval::new(start, freq, self.prec)
+    }
+
     /// Find `(sym, start, freq)` containing `cf`, walking upward.
     #[inline]
     pub fn lookup(&self, cf: u32) -> (u32, u32, u32) {
@@ -282,6 +299,24 @@ mod tests {
                 c2.bits(s)
             );
         }
+    }
+
+    #[test]
+    fn scratch_row_construction_matches_allocating() {
+        let (a, b) = (3.5, 1.2);
+        let row: Vec<f32> = (0..=255u32)
+            .map(|k| beta_binomial_logpmf(k, 255, a, b).exp() as f32)
+            .collect();
+        let mut buf = Vec::new();
+        let c1 = BetaBinomial::from_pmf_row(&row, 16);
+        let c2 = BetaBinomial::from_pmf_row_scratch(&row, 16, &mut buf);
+        assert_eq!(c1.quantized(), c2.quantized());
+        // The buffer is reusable across rows, including the degenerate
+        // all-zero fallback.
+        let zero = [0.0f32; 256];
+        let c3 = BetaBinomial::from_pmf_row_scratch(&zero, 16, &mut buf);
+        let c4 = BetaBinomial::from_pmf_row(&zero, 16);
+        assert_eq!(c3.quantized(), c4.quantized());
     }
 
     #[test]

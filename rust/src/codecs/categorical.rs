@@ -4,24 +4,46 @@
 //! beta-binomial codecs both reduce to a categorical over the pixel
 //! alphabet with a deterministic quantization of the model's PMF.
 
-use super::quantize::QuantizedCdf;
+use super::quantize::{DecodeLut, QuantizedCdf};
 use super::SymbolCodec;
-use crate::ans::{Ans, EntropyCoder, Interval};
+use crate::ans::{Ans, EntropyCoder, Interval, PreparedInterval, SymbolTable};
 
 #[derive(Debug, Clone)]
 pub struct Categorical {
     q: QuantizedCdf,
+    /// Division-free encode table, built by [`Categorical::prepare`].
+    prepared: Option<SymbolTable>,
 }
 
 impl Categorical {
     pub fn from_pmf(pmf: &[f64], prec: u32) -> Self {
         Self {
             q: QuantizedCdf::from_pmf(pmf, prec),
+            prepared: None,
         }
     }
 
     pub fn from_quantized(q: QuantizedCdf) -> Self {
-        Self { q }
+        Self { q, prepared: None }
+    }
+
+    /// Build the hot-path tables once: the prepared-symbol encode table
+    /// (division-free pushes) and the decode LUT (O(1) cumulative→symbol).
+    /// Worth it for any distribution that codes more symbols than its
+    /// alphabet size; `encode_all`/`decode_all` also build throwaway
+    /// tables on their own past that break-even, so `prepare` mainly helps
+    /// callers that amortize one codec across many calls.
+    pub fn prepare(mut self) -> Self {
+        self.q.build_lut();
+        if self.prepared.is_none() {
+            self.prepared = Some(SymbolTable::from_cdf(&self.q.cdf, self.q.prec));
+        }
+        self
+    }
+
+    /// The prepared encode table, if [`Categorical::prepare`] was called.
+    pub fn prepared(&self) -> Option<&SymbolTable> {
+        self.prepared.as_ref()
     }
 
     /// Bernoulli over {0, 1} with P(1) = p.
@@ -51,19 +73,58 @@ impl Categorical {
     }
 
     /// Encode a whole symbol sequence through any [`EntropyCoder`] —
-    /// stack or interleaved multi-lane (paper §4.2 fast path).
+    /// stack or interleaved multi-lane (paper §4.2 fast path). Always
+    /// routes through the division-free prepared path (bit-identical to
+    /// interval encoding): via the table from [`Categorical::prepare`]
+    /// when present, via a throwaway table when the sequence is long
+    /// enough to amortize one, and per-symbol otherwise.
     pub fn encode_all<C: EntropyCoder>(&self, coder: &mut C, syms: &[usize]) {
-        let ivs: Vec<Interval> = syms.iter().map(|&s| self.interval(s)).collect();
-        coder.encode_all(&ivs, self.q.prec);
+        self.encode_all_scratch(coder, syms, &mut Vec::new());
+    }
+
+    /// [`Categorical::encode_all`] with a caller-owned prepared-symbol
+    /// buffer, so per-image/per-batch callers allocate nothing.
+    pub fn encode_all_scratch<C: EntropyCoder>(
+        &self,
+        coder: &mut C,
+        syms: &[usize],
+        scratch: &mut Vec<PreparedInterval>,
+    ) {
+        match &self.prepared {
+            Some(t) => t.gather_into(syms, scratch),
+            None if syms.len() >= self.q.num_symbols() => {
+                SymbolTable::from_cdf(&self.q.cdf, self.q.prec).gather_into(syms, scratch)
+            }
+            None => {
+                scratch.clear();
+                scratch.extend(syms.iter().map(|&s| {
+                    PreparedInterval::new(self.q.start(s), self.q.freq(s), self.q.prec)
+                }));
+            }
+        }
+        coder.encode_all_prepared(scratch, self.q.prec);
     }
 
     /// Decode `n` symbols through any [`EntropyCoder`] (inverse of
-    /// [`Categorical::encode_all`], same symbol order).
+    /// [`Categorical::encode_all`], same symbol order). Symbol lookup is
+    /// O(1) through the decode LUT when one is built (or when `n` is large
+    /// enough to amortize a throwaway coarse table); binary search
+    /// otherwise.
     pub fn decode_all<C: EntropyCoder>(&self, coder: &mut C, n: usize) -> Vec<usize> {
-        coder.decode_all(n, self.q.prec, |cf| {
-            let s = self.q.lookup(cf);
-            (s, self.interval(s))
-        })
+        if self.q.lut().is_some() || n < self.q.num_symbols() {
+            coder.decode_all(n, self.q.prec, |cf| {
+                let s = self.q.lookup(cf);
+                (s, self.interval(s))
+            })
+        } else {
+            // Coarse build is O(K); past the break-even it beats n binary
+            // searches regardless of precision.
+            let lut = DecodeLut::coarse(&self.q.cdf, self.q.prec);
+            coder.decode_all(n, self.q.prec, |cf| {
+                let s = lut.lookup(&self.q.cdf, cf);
+                (s, self.interval(s))
+            })
+        }
     }
 }
 
@@ -129,6 +190,16 @@ impl Bernoulli {
         let sym = (cf >= self.g1) as usize;
         let (start, freq) = self.interval(sym);
         (sym, start, freq)
+    }
+
+    /// The prepared (division-free) form of `sym`'s interval, for the
+    /// batch pixel path (`encode_all_prepared`). The reciprocal build is
+    /// independent of the coder state, so it pipelines with neighbouring
+    /// pixels instead of serializing on the ANS head.
+    #[inline]
+    pub fn prepared_interval(&self, sym: usize) -> PreparedInterval {
+        let (start, freq) = self.interval(sym);
+        PreparedInterval::new(start, freq, self.prec)
     }
 }
 
@@ -277,6 +348,36 @@ mod tests {
         c.encode_all(&mut lanes, &syms);
         assert_eq!(c.decode_all(&mut lanes, syms.len()), syms);
         assert!(lanes.is_pristine());
+    }
+
+    #[test]
+    fn prepared_tables_do_not_change_bytes() {
+        let mut rng = Rng::new(123);
+        let pmf: Vec<f64> = (0..40).map(|_| rng.f64() + 1e-9).collect();
+        let plain = Categorical::from_pmf(&pmf, 16);
+        let fast = Categorical::from_pmf(&pmf, 16).prepare();
+        assert!(fast.prepared().is_some());
+
+        // Long (amortized-table branch) and short (per-symbol branch)
+        // sequences, against the raw interval reference.
+        for len in [3000usize, 5] {
+            let syms: Vec<usize> = (0..len).map(|_| rng.below(40) as usize).collect();
+            let ivs: Vec<Interval> = syms.iter().map(|&s| plain.interval(s)).collect();
+            let mut reference = Ans::new(0);
+            EntropyCoder::encode_all(&mut reference, &ivs, 16);
+
+            let mut a = Ans::new(0);
+            plain.encode_all(&mut a, &syms);
+            let mut b = Ans::new(0);
+            fast.encode_all(&mut b, &syms);
+            assert_eq!(a.to_message(), reference.to_message(), "len={len}");
+            assert_eq!(b.to_message(), reference.to_message(), "len={len}");
+
+            // Decode back through both lookup paths (LUT and search).
+            assert_eq!(fast.decode_all(&mut b, len), syms);
+            assert_eq!(plain.decode_all(&mut a, len), syms);
+            assert!(a.is_empty() && b.is_empty());
+        }
     }
 
     #[test]

@@ -215,7 +215,11 @@ impl SymbolCodec for DiscretizedGaussian {
     #[inline]
     fn push(&self, ans: &mut Ans, sym: u32) {
         let (start, freq) = self.interval(sym);
-        ans.push(start, freq, self.prec);
+        // Prepared push: the reciprocal build is independent work that
+        // overlaps the two `phi` evaluations above, while the serial
+        // coder-state update stays division-free. Bit-identical to
+        // `ans.push(start, freq, prec)`.
+        ans.push_prepared(&crate::ans::PreparedInterval::new(start, freq, self.prec));
     }
 
     #[inline]

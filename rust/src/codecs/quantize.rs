@@ -16,13 +16,108 @@
 //! so `freq(i) = G(i+1) − G(i) ≥ 1` always; the redundancy is at most
 //! `log(M / (M − K))` bits per symbol — negligible for `K ≪ M`.
 
-/// Quantized distribution over `0..K` with total mass `2^prec`.
+/// Densest precision at which [`DecodeLut::build`] uses a direct-index
+/// table (`2^prec` u16 entries); above it a coarse bucket table is used.
+pub const DENSE_LUT_MAX_PREC: u32 = 16;
+
+/// Optional cumulative→symbol lookup table replacing the per-pop binary
+/// search (ISSUE 2: the decode-side hot path).
+///
+/// * [`DecodeLut::Dense`] — one `u16` per mass unit; `lookup` is a single
+///   indexed load. Build cost `O(2^prec)`, so it is reserved for
+///   `prec ≤` [`DENSE_LUT_MAX_PREC`] and for distributions that decode
+///   many symbols (opt-in via [`QuantizedCdf::build_lut`]).
+/// * [`DecodeLut::Coarse`] — `cf >> shift` indexes a bucket holding the
+///   first symbol whose interval intersects it; a short forward scan on
+///   the cdf finishes the job. Build cost `O(K + buckets)`, expected scan
+///   length `≤ K / buckets` (buckets ≈ 4K, capped at 2¹⁶).
 #[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeLut {
+    Dense(Vec<u16>),
+    Coarse { shift: u32, first: Vec<u32> },
+}
+
+impl DecodeLut {
+    /// Pick the right variant for `prec` (dense at or below
+    /// [`DENSE_LUT_MAX_PREC`], coarse above).
+    pub fn build(cdf: &[u32], prec: u32) -> Self {
+        if prec <= DENSE_LUT_MAX_PREC {
+            Self::dense(cdf, prec)
+        } else {
+            Self::coarse(cdf, prec)
+        }
+    }
+
+    /// Direct-index table: `lookup` is O(1) with no scan.
+    pub fn dense(cdf: &[u32], prec: u32) -> Self {
+        assert!(
+            prec <= DENSE_LUT_MAX_PREC,
+            "dense LUT at prec {prec} would need {} entries",
+            1u64 << prec
+        );
+        let mut t = vec![0u16; 1usize << prec];
+        for (s, w) in cdf.windows(2).enumerate() {
+            t[w[0] as usize..w[1] as usize].fill(s as u16);
+        }
+        DecodeLut::Dense(t)
+    }
+
+    /// Bucket table + short scan: O(K) build, O(1) expected lookup.
+    pub fn coarse(cdf: &[u32], prec: u32) -> Self {
+        let k = cdf.len() - 1;
+        // ~4 buckets per symbol, capped at 2^16 entries and at 2^prec.
+        let bucket_bits = (((k.max(2) - 1).ilog2() + 3).min(16)).min(prec);
+        let shift = prec - bucket_bits;
+        let n_buckets = 1usize << bucket_bits;
+        let mut first = Vec::with_capacity(n_buckets);
+        let mut s = 0usize;
+        for b in 0..n_buckets {
+            let lo = (b as u64) << shift;
+            while (cdf[s + 1] as u64) <= lo {
+                s += 1;
+            }
+            first.push(s as u32);
+        }
+        DecodeLut::Coarse { shift, first }
+    }
+
+    /// The symbol whose interval contains `cf`. `cdf` must be the table
+    /// this LUT was built from.
+    #[inline]
+    pub fn lookup(&self, cdf: &[u32], cf: u32) -> usize {
+        match self {
+            DecodeLut::Dense(t) => t[cf as usize] as usize,
+            DecodeLut::Coarse { shift, first } => {
+                let mut s = first[(cf >> shift) as usize] as usize;
+                while cdf[s + 1] <= cf {
+                    s += 1;
+                }
+                s
+            }
+        }
+    }
+}
+
+/// Quantized distribution over `0..K` with total mass `2^prec`.
+///
+/// Equality compares the distribution (`cdf`, `prec`) only — the optional
+/// decode LUT is derived data and never affects semantics.
+#[derive(Debug, Clone)]
 pub struct QuantizedCdf {
     /// Cumulative bounds; length K+1, `cdf[0] = 0`, `cdf[K] = 2^prec`.
     pub cdf: Vec<u32>,
     pub prec: u32,
+    /// Optional O(1) cumulative→symbol table (see [`DecodeLut`]).
+    lut: Option<DecodeLut>,
 }
+
+impl PartialEq for QuantizedCdf {
+    fn eq(&self, other: &Self) -> bool {
+        self.cdf == other.cdf && self.prec == other.prec
+    }
+}
+
+impl Eq for QuantizedCdf {}
 
 impl QuantizedCdf {
     /// Quantize a PMF (need not be normalized; must be non-negative with a
@@ -56,7 +151,34 @@ impl QuantizedCdf {
         }
         // Strict monotonicity is guaranteed by construction; check in debug.
         debug_assert!(cdf.windows(2).all(|w| w[0] < w[1]), "non-monotone cdf");
-        Self { cdf, prec }
+        Self {
+            cdf,
+            prec,
+            lut: None,
+        }
+    }
+
+    /// Build the cumulative→symbol [`DecodeLut`] once (idempotent); every
+    /// subsequent [`QuantizedCdf::lookup`] is O(1) instead of a binary
+    /// search. Opt-in because the dense table costs `O(2^prec)` to build —
+    /// worth it for distributions that decode many symbols, not for the
+    /// per-pixel codecs built fresh for a single lookup.
+    pub fn build_lut(&mut self) {
+        if self.lut.is_none() {
+            self.lut = Some(DecodeLut::build(&self.cdf, self.prec));
+        }
+    }
+
+    /// Builder-style [`QuantizedCdf::build_lut`].
+    pub fn with_lut(mut self) -> Self {
+        self.build_lut();
+        self
+    }
+
+    /// The built LUT, if any.
+    #[inline]
+    pub fn lut(&self) -> Option<&DecodeLut> {
+        self.lut.as_ref()
     }
 
     #[inline]
@@ -74,10 +196,21 @@ impl QuantizedCdf {
         self.cdf[sym + 1] - self.cdf[sym]
     }
 
-    /// Find the symbol whose interval contains `cf` (binary search).
+    /// Find the symbol whose interval contains `cf`: O(1) through the
+    /// [`DecodeLut`] when one was built, binary search otherwise.
     #[inline]
     pub fn lookup(&self, cf: u32) -> usize {
         debug_assert!((cf as u64) < (1u64 << self.prec));
+        match &self.lut {
+            Some(lut) => lut.lookup(&self.cdf, cf),
+            None => self.lookup_binary(cf),
+        }
+    }
+
+    /// The LUT-free binary search (kept as the reference the property
+    /// tests pin the LUT against).
+    #[inline]
+    pub fn lookup_binary(&self, cf: u32) -> usize {
         // partition_point: first index where cdf[i] > cf, minus one.
         self.cdf.partition_point(|&c| c <= cf) - 1
     }
@@ -175,6 +308,50 @@ mod tests {
             })
             .sum();
         assert!(kl < 0.005, "quantization KL too large: {kl}");
+    }
+
+    #[test]
+    fn dense_lut_agrees_with_binary_search_exhaustively() {
+        let mut rng = Rng::new(21);
+        let pmf: Vec<f64> = (0..200).map(|_| rng.f64() + 1e-7).collect();
+        let q = QuantizedCdf::from_pmf(&pmf, 14).with_lut();
+        assert!(matches!(q.lut(), Some(DecodeLut::Dense(_))));
+        for cf in 0..(1u32 << 14) {
+            assert_eq!(q.lookup(cf), q.lookup_binary(cf), "cf={cf}");
+        }
+    }
+
+    #[test]
+    fn coarse_lut_agrees_with_binary_search() {
+        let mut rng = Rng::new(22);
+        // Spiked pmf: crowds many symbols into few buckets (worst case
+        // for the scan) while one bucket spans many mass units.
+        let mut pmf: Vec<f64> = (0..300).map(|_| rng.f64() * 1e-6 + 1e-9).collect();
+        pmf[137] = 1.0;
+        let q = QuantizedCdf::from_pmf(&pmf, 20).with_lut();
+        assert!(matches!(q.lut(), Some(DecodeLut::Coarse { .. })));
+        // Every interval boundary, plus random probes.
+        for s in 0..q.num_symbols() {
+            for cf in [q.start(s), q.start(s) + q.freq(s) - 1] {
+                assert_eq!(q.lookup(cf), s, "cf={cf}");
+            }
+        }
+        for _ in 0..20_000 {
+            let cf = rng.below(1 << 20) as u32;
+            assert_eq!(q.lookup(cf), q.lookup_binary(cf), "cf={cf}");
+        }
+    }
+
+    #[test]
+    fn build_lut_is_idempotent_and_ignored_by_equality() {
+        let pmf = [0.2, 0.5, 0.3];
+        let plain = QuantizedCdf::from_pmf(&pmf, 12);
+        let mut lutted = QuantizedCdf::from_pmf(&pmf, 12);
+        lutted.build_lut();
+        lutted.build_lut();
+        assert_eq!(plain, lutted, "LUT must not affect distribution equality");
+        assert!(plain.lut().is_none());
+        assert!(lutted.lut().is_some());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! uniform, so prior coding has **zero** quantization loss (DESIGN.md §6).
 
 use super::SymbolCodec;
-use crate::ans::Ans;
+use crate::ans::{Ans, PreparedInterval};
 
 #[derive(Debug, Clone, Copy)]
 pub struct Uniform {
@@ -29,7 +29,10 @@ impl SymbolCodec for Uniform {
     #[inline]
     fn push(&self, ans: &mut Ans, sym: u32) {
         debug_assert!((sym as u64) < (1u64 << self.bits));
-        ans.push(sym, 1, self.bits);
+        // freq == 1 prepares without any division, so the prior path —
+        // every latent dim of every image — is entirely division-free
+        // (bit-identical to `ans.push(sym, 1, bits)`).
+        ans.push_prepared(&PreparedInterval::new(sym, 1, self.bits));
     }
 
     #[inline]

@@ -151,6 +151,23 @@ pub fn gen_coder_config(rng: &mut Rng, case: usize) -> CoderConfig {
     CoderConfig { prec, n_syms, len }
 }
 
+/// Like [`gen_coder_config`] but over the *full* supported precision
+/// range (2..=32), with shorter sequences — used to pin the prepared
+/// (division-free) encode path to the division path at the extremes,
+/// where the reciprocal and renormalization-threshold arithmetic is most
+/// delicate.
+pub fn gen_coder_config_wide(rng: &mut Rng, case: usize) -> CoderConfig {
+    let prec = 2 + rng.below(31) as u32; // 2..=32
+    let max_syms = ((1u64 << prec) - 1).min(300) as usize;
+    let n_syms = 2 + rng.below(max_syms as u64 - 1) as usize;
+    let len = match case % 3 {
+        0 => rng.below(8) as usize,
+        1 => 1 + rng.below(128) as usize,
+        _ => 512 + rng.below(1536) as usize,
+    };
+    CoderConfig { prec, n_syms, len }
+}
+
 /// Generate a quantized interval table for `cfg.n_syms` symbols tiling
 /// `[0, 2^prec)` exactly, with every frequency ≥ 1 (the invariant the
 /// quantizer guarantees and the coders rely on). Weight families mirror
@@ -197,9 +214,28 @@ pub fn check_coders(
     cases: usize,
     prop: impl Fn(&CoderConfig, &[Interval], &[usize]) -> bool,
 ) {
+    check_coders_with(seed, cases, gen_coder_config, prop)
+}
+
+/// [`check_coders`] over the full precision range (2..=32) via
+/// [`gen_coder_config_wide`].
+pub fn check_coders_wide(
+    seed: u64,
+    cases: usize,
+    prop: impl Fn(&CoderConfig, &[Interval], &[usize]) -> bool,
+) {
+    check_coders_with(seed, cases, gen_coder_config_wide, prop)
+}
+
+fn check_coders_with(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng, usize) -> CoderConfig,
+    prop: impl Fn(&CoderConfig, &[Interval], &[usize]) -> bool,
+) {
     let mut rng = Rng::new(seed);
     for case in 0..cases {
-        let cfg = gen_coder_config(&mut rng, case);
+        let cfg = gen(&mut rng, case);
         let intervals = gen_intervals(&mut rng, &cfg);
         let syms: Vec<usize> = (0..cfg.len)
             .map(|_| rng.below(cfg.n_syms as u64) as usize)
@@ -282,5 +318,29 @@ mod tests {
         check_coders(33, 20, |cfg, ivs, syms| {
             syms.len() == cfg.len && ivs.len() == cfg.n_syms
         });
+    }
+
+    #[test]
+    fn wide_config_covers_extreme_precisions_with_valid_tables() {
+        let mut rng = Rng::new(34);
+        let mut lo = u32::MAX;
+        let mut hi = 0;
+        for case in 0..300 {
+            let cfg = gen_coder_config_wide(&mut rng, case);
+            assert!((2..=32).contains(&cfg.prec));
+            assert!(cfg.n_syms >= 2 && (cfg.n_syms as u64) < (1u64 << cfg.prec));
+            lo = lo.min(cfg.prec);
+            hi = hi.max(cfg.prec);
+            let ivs = gen_intervals(&mut rng, &cfg);
+            let mut pos = 0u64;
+            for iv in &ivs {
+                assert_eq!(iv.start as u64, pos, "{cfg:?}");
+                assert!(iv.freq >= 1, "{cfg:?}");
+                pos += iv.freq as u64;
+            }
+            assert_eq!(pos, 1u64 << cfg.prec, "{cfg:?}");
+        }
+        assert!(lo <= 4, "low precisions never drawn (min {lo})");
+        assert!(hi >= 30, "high precisions never drawn (max {hi})");
     }
 }

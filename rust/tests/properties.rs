@@ -3,13 +3,14 @@
 //! adversarial inputs.
 
 use bbans::ans::interleaved::InterleavedAns;
-use bbans::ans::{Ans, EntropyCoder, Interval};
+use bbans::ans::{Ans, EntropyCoder, Interval, PreparedInterval, SymbolTable};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
 use bbans::codecs::categorical::Categorical;
 use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
+use bbans::codecs::quantize::DecodeLut;
 use bbans::codecs::SymbolCodec;
 use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
-use bbans::util::prop::check_coders;
+use bbans::util::prop::{check_coders, check_coders_wide};
 use bbans::util::rng::Rng;
 
 /// Fuzz BB-ANS roundtrips across model shapes, likelihoods and coding
@@ -125,6 +126,99 @@ fn entropy_coder_cross_coder_roundtrips() {
         let from_l8 = run_one(&mut InterleavedAns::<8>::new(), ivs, syms, cfg.prec);
         let want = Some(syms.to_vec());
         from_stack == want && from_l2 == want && from_l4 == want && from_l8 == want
+    });
+}
+
+/// The prepared (division-free) encode path must be bit-identical to the
+/// division path on both coders, for every random distribution, symbol
+/// sequence and precision — the invariant that lets the hot path swap in
+/// without bumping any container version (ISSUE 2).
+#[test]
+fn prepared_encode_bit_identical_to_division_path() {
+    fn identical(ivs: &[Interval], syms: &[usize], prec: u32) -> bool {
+        let seq: Vec<Interval> = syms.iter().map(|&s| ivs[s]).collect();
+        let table = SymbolTable::from_intervals(ivs, prec);
+        let mut prep = Vec::new();
+        table.gather_into(syms, &mut prep);
+
+        // Stack coder: identical serialized message.
+        let mut a = Ans::new(9);
+        a.encode_all(&seq, prec);
+        let mut b = Ans::new(9);
+        b.encode_all_prepared(&prep, prec);
+        if a.to_message() != b.to_message() {
+            return false;
+        }
+
+        // Interleaved coder: identical full state (heads + stream), at a
+        // lane count that exercises striping.
+        let mut ia = InterleavedAns::<4>::new();
+        ia.encode_all(&seq, prec);
+        let mut ib = InterleavedAns::<4>::new();
+        ib.encode_all_prepared(&prep, prec);
+        if ia != ib {
+            return false;
+        }
+
+        // Per-symbol prepared pushes (the prior/posterior path) match the
+        // batched path too.
+        let mut c = Ans::new(9);
+        for &s in syms.iter().rev() {
+            c.push_prepared(&PreparedInterval::new(ivs[s].start, ivs[s].freq, prec));
+        }
+        c.to_message() == b.to_message()
+    }
+
+    check_coders(0x11AD, 40, |cfg, ivs, syms| identical(ivs, syms, cfg.prec));
+    // Full precision range 2..=32: reciprocal + renormalization edges.
+    check_coders_wide(0xF1DE, 60, |cfg, ivs, syms| identical(ivs, syms, cfg.prec));
+}
+
+/// Decode-side LUTs (dense and coarse) must agree with binary search for
+/// every cumulative value of every random distribution.
+#[test]
+fn lut_lookup_agrees_with_binary_search_for_every_cf() {
+    let probe_rng = std::cell::RefCell::new(Rng::new(0x10075));
+    check_coders(0xC0A5, 40, |cfg, ivs, _syms| {
+        // check_coders precisions stay ≤ 24, so 2^prec fits u32.
+        let cdf: Vec<u32> = ivs
+            .iter()
+            .map(|iv| iv.start)
+            .chain(std::iter::once(1u32 << cfg.prec))
+            .collect();
+        let reference = |cf: u32| cdf.partition_point(|&c| c <= cf) - 1;
+
+        let mut luts = vec![DecodeLut::coarse(&cdf, cfg.prec)];
+        if cfg.prec <= 16 {
+            luts.push(DecodeLut::dense(&cdf, cfg.prec));
+        }
+        for lut in &luts {
+            // Every interval boundary (first/last cf of each symbol)...
+            for (s, iv) in ivs.iter().enumerate() {
+                if lut.lookup(&cdf, iv.start) != s
+                    || lut.lookup(&cdf, iv.start + iv.freq - 1) != s
+                {
+                    return false;
+                }
+            }
+            // ...plus exhaustive or sampled interior probes.
+            if cfg.prec <= 12 {
+                for cf in 0..(1u32 << cfg.prec) {
+                    if lut.lookup(&cdf, cf) != reference(cf) {
+                        return false;
+                    }
+                }
+            } else {
+                let mut rng = probe_rng.borrow_mut();
+                for _ in 0..4096 {
+                    let cf = rng.below(1 << cfg.prec) as u32;
+                    if lut.lookup(&cdf, cf) != reference(cf) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
     });
 }
 
