@@ -114,7 +114,9 @@ fn main() {
     );
     for t_len in [10usize, 30, 100, 300, 1000] {
         let mut rng = Rng::new(11);
-        let seqs: Vec<Vec<usize>> = (0..30).map(|_| sample_sequence(&hmm, t_len, &mut rng)).collect();
+        let seqs: Vec<Vec<usize>> = (0..30)
+            .map(|_| sample_sequence(&hmm, t_len, &mut rng))
+            .collect();
         let mut ans = bbans::ans::Ans::new(5);
         let mut net = 0.0;
         let mut ideal = 0.0;

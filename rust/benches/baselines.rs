@@ -38,7 +38,10 @@ fn main() {
         );
     }
     #[cfg(not(feature = "external-codecs"))]
-    println!("    rate: ours {} B (flate2 comparison needs --features external-codecs)\n", compressed.len());
+    println!(
+        "    rate: ours {} B (flate2 comparison needs --features external-codecs)\n",
+        compressed.len()
+    );
     bench.run("deflate/ours decompress digits", flat.len() as f64, || {
         black_box(deflate::decompress(&compressed).unwrap());
     });
@@ -61,7 +64,10 @@ fn main() {
         );
     }
     #[cfg(not(feature = "external-codecs"))]
-    println!("    rate: ours {} B (bzip2 comparison needs --features external-codecs)\n", bzc.len());
+    println!(
+        "    rate: ours {} B (bzip2 comparison needs --features external-codecs)\n",
+        bzc.len()
+    );
     bench.run("bz/ours decompress digits", flat.len() as f64, || {
         black_box(bz::decompress(&bzc).unwrap());
     });

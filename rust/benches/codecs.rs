@@ -66,7 +66,8 @@ fn main() {
         let mut ans = Ans::new(0);
         let mut pmf = Vec::new();
         for p in 0..784 {
-            let c = BetaBinomial::from_pmf_row_scratch(&table[p * 256..(p + 1) * 256], 18, &mut pmf);
+            let c =
+                BetaBinomial::from_pmf_row_scratch(&table[p * 256..(p + 1) * 256], 18, &mut pmf);
             c.push(&mut ans, pix[p]);
         }
         black_box(ans.stream_len());

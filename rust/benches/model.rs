@@ -1,0 +1,99 @@
+//! Model-layer benchmarks (ISSUE 3): packed-GEMM GFLOP/s vs the scalar
+//! reference kernel, and VAE forward throughput in images/sec at
+//! B ∈ {1, 16, 64, 256}. The acceptance target is batched packed forward
+//! ≥ 3× the B=1 scalar baseline at B=64.
+//!
+//! Emits `BENCH_model.json` via `--json` / `BBANS_BENCH_JSON` (the same
+//! trajectory format as the `ans` target); CI's quick-bench job records
+//! it on every push.
+
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::model::tensor::{dense, dense_packed, Epilogue, Matrix};
+use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
+use bbans::util::rng::Rng;
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, sparsity: f64) -> Matrix {
+    Matrix::new(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| {
+                if rng.f64() < sparsity {
+                    0.0
+                } else {
+                    (rng.normal() * 0.5) as f32
+                }
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    table_header("model layer: packed GEMM + batched VAE forward");
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(3);
+
+    // ---- raw GEMM at the VAE's layer shapes (dense latent inputs; the
+    // ---- generative net dominates runtime, exactly as the paper notes).
+    for &(m, k, n) in &[(64usize, 40usize, 100usize), (64, 100, 1568), (256, 784, 100)] {
+        let x = rand_matrix(&mut rng, m, k, 0.0);
+        let w = rand_matrix(&mut rng, k, n, 0.0);
+        let wp = w.packed();
+        let b: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.1) as f32).collect();
+        // units = FLOPs, so units/s in the JSON is FLOP/s.
+        let flops = 2.0 * (m * k * n) as f64;
+        bench.run(&format!("model/gemm {m}x{k}x{n} packed"), flops, || {
+            black_box(dense_packed(&x, &wp, &b, Epilogue::Linear).data[0]);
+        });
+        bench.run(&format!("model/gemm {m}x{k}x{n} scalar"), flops, || {
+            black_box(dense(&x, &w, &b).data[0]);
+        });
+    }
+
+    // ---- full VAE forward (recognition + generative net) per image.
+    let meta = ModelMeta {
+        name: "bench".into(),
+        pixels: 784,
+        latent_dim: 40,
+        hidden: 100,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    };
+    let packed = NativeVae::random(meta.clone(), 7);
+    let scalar = NativeVae::random(meta, 7).with_reference_gemm(true);
+
+    let max_b = 256usize;
+    // MNIST-like sparse images (scaled) and dense latents.
+    let xs = rand_matrix(&mut rng, max_b, 784, 0.8);
+    let ys = rand_matrix(&mut rng, max_b, 40, 0.0);
+    let sub = |m: &Matrix, b: usize, cols: usize| -> Matrix {
+        Matrix::new(b, cols, m.data[..b * cols].to_vec())
+    };
+
+    println!();
+    let scalar_b1 = {
+        let (xb, yb) = (sub(&xs, 1, 784), sub(&ys, 1, 40));
+        bench
+            .run("model/forward B=1 scalar", 1.0, || {
+                let p = scalar.encode_batch(&xb).unwrap();
+                let l = scalar.decode_batch(&yb).unwrap();
+                black_box((p.len(), l.len()));
+            })
+            .units_per_sec()
+    };
+    for &b in &[1usize, 16, 64, 256] {
+        let (xb, yb) = (sub(&xs, b, 784), sub(&ys, b, 40));
+        let m = bench.run(&format!("model/forward B={b} packed"), b as f64, || {
+            let p = packed.encode_batch(&xb).unwrap();
+            let l = packed.decode_batch(&yb).unwrap();
+            black_box((p.len(), l.len()));
+        });
+        println!(
+            "    B={b}: {:.1} img/s packed ({:.2}x vs B=1 scalar)",
+            m.units_per_sec(),
+            m.units_per_sec() / scalar_b1
+        );
+    }
+
+    bench.finish("model");
+}

@@ -82,6 +82,31 @@ fn main() {
         );
     }
 
+    // Worker-pool sweep at a fixed chunk count (ISSUE 3): n_chunks is a
+    // container-format knob, workers a machine knob — bytes identical
+    // (property-tested), wall time scales with the pool.
+    for workers in [1usize, 2, 4, 8] {
+        bench.run(
+            &format!("parallel/encode {n_images} imgs, 8 chunks, {workers} workers"),
+            n_images as f64,
+            || {
+                let pc =
+                    ParallelContainer::encode_with_workers(&codec, &images, 8, workers).unwrap();
+                black_box(pc.byte_len());
+            },
+        );
+    }
+    let pc8 = ParallelContainer::encode_with(&codec, &images, 8).unwrap();
+    for workers in [1usize, 2, 4, 8] {
+        bench.run(
+            &format!("parallel/decode {n_images} imgs, 8 chunks, {workers} workers"),
+            n_images as f64,
+            || {
+                black_box(pc8.decode_with_workers(&codec, workers).unwrap().len());
+            },
+        );
+    }
+
     // Rate overhead of chunking: each extra chunk pays its own chain
     // startup (clean bits) and head, nothing else.
     let b1 = containers[0].byte_len();

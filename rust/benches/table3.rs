@@ -11,7 +11,10 @@ fn main() {
     table_header("Table 3: benchmark codecs for the PixelVAE prediction");
     let mut bench = Bench::new();
 
-    println!("BB-ANS w/ PixelVAE predictions (paper constants): bin-MNIST 0.15, ImageNet64 3.66 bits/dim\n");
+    println!(
+        "BB-ANS w/ PixelVAE predictions (paper constants): bin-MNIST 0.15, \
+         ImageNet64 3.66 bits/dim\n"
+    );
 
     let nat = synth::natural(64, 64, 4242);
     for codec in standard_suite(false) {

@@ -158,8 +158,20 @@ impl ParallelContainer {
         images: &[Vec<u8>],
         n_chunks: usize,
     ) -> Result<Self> {
+        Self::encode_with_workers(codec, images, n_chunks, super::default_workers())
+    }
+
+    /// [`Self::encode_with`] pinning the worker-pool size (the container
+    /// format depends only on `n_chunks`; `workers` is a machine knob and
+    /// never changes the produced bytes).
+    pub fn encode_with_workers<B: Backend + Sync + ?Sized>(
+        codec: &VaeCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Self> {
         let meta = codec.backend().meta();
-        let chunks = codec.encode_dataset_chunked(images, n_chunks)?;
+        let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
         Ok(Self {
             model: meta.name.clone(),
             backend_id: codec.backend().backend_id(),
@@ -176,6 +188,16 @@ impl ParallelContainer {
     ) -> Result<Vec<Vec<u8>>> {
         self.validate_for(codec)?;
         codec.decode_dataset_chunked(&self.chunks)
+    }
+
+    /// [`Self::decode_with`] pinning the worker-pool size.
+    pub fn decode_with_workers<B: Backend + Sync + ?Sized>(
+        &self,
+        codec: &VaeCodec<'_, B>,
+        workers: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        self.validate_for(codec)?;
+        codec.decode_dataset_chunked_with_workers(&self.chunks, workers)
     }
 
     /// Single-threaded decode for backends that are not `Sync` (the

@@ -32,7 +32,14 @@ use crate::codecs::categorical::Bernoulli;
 use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use crate::codecs::uniform::Uniform;
 use crate::codecs::SymbolCodec;
-use crate::model::{Backend, Likelihood, PixelParams};
+use crate::model::tensor::Matrix;
+use crate::model::{Backend, Likelihood, PixelParams, PosteriorBatch};
+
+/// Images per recognition-net dispatch in the dataset loops: one
+/// [`Backend::encode_batch`] call covers this many rows. Both the
+/// sequential and the pipelined encode paths chunk identically, so their
+/// NN inputs — and therefore their bitstreams — are identical.
+pub const NN_CHUNK: usize = 64;
 
 /// Reusable buffers for the per-image coding loops (ISSUE 2): one scratch
 /// per chain/thread removes every per-pixel and per-image heap allocation
@@ -45,6 +52,14 @@ pub struct CodecScratch {
     prepared: Vec<PreparedInterval>,
     /// Widened f64 PMF row for `BetaBinomial::from_pmf_row_scratch`.
     pmf: Vec<f64>,
+    /// Latent bucket-index buffer for the posterior/prior steps. Public
+    /// (like `gauss`) so multi-stream callers such as the coordinator can
+    /// `mem::take` it around the batched NN dispatches.
+    pub idx: Vec<u32>,
+    /// Cached posterior codec: built once, then only `(mu, sigma)` change
+    /// per dimension — no `MaxEntropyBuckets` clone or
+    /// `DiscretizedGaussian` construction per latent (ISSUE 3).
+    pub gauss: Option<DiscretizedGaussian>,
 }
 
 impl CodecScratch {
@@ -135,18 +150,41 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     }
 
     pub fn scale_image(&self, img: &[u8]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(img.len());
+        self.scale_image_into(img, &mut out);
+        out
+    }
+
+    /// [`Self::scale_image`] appending to a caller-owned buffer — the
+    /// batch builders pack many images into one flat matrix this way.
+    pub fn scale_image_into(&self, img: &[u8], out: &mut Vec<f32>) {
         match self.backend.meta().likelihood {
-            Likelihood::Bernoulli => img.iter().map(|&v| (v != 0) as u32 as f32).collect(),
-            Likelihood::BetaBinomial => img.iter().map(|&v| v as f32 / 255.0).collect(),
+            Likelihood::Bernoulli => out.extend(img.iter().map(|&v| (v != 0) as u32 as f32)),
+            Likelihood::BetaBinomial => out.extend(img.iter().map(|&v| v as f32 / 255.0)),
         }
     }
 
     /// Latent bucket centres → the f32 latent vector fed to the decoder.
     fn centres(&self, idx: &[u32]) -> Vec<f32> {
-        idx.iter().map(|&i| self.buckets.centre(i) as f32).collect()
+        let mut out = Vec::with_capacity(idx.len());
+        self.centres_into(idx, &mut out);
+        out
     }
 
-    fn posterior_codec(&self, mu: f32, sigma: f32) -> DiscretizedGaussian {
+    fn centres_into(&self, idx: &[u32], out: &mut Vec<f32>) {
+        out.extend(idx.iter().map(|&i| self.buckets.centre(i) as f32));
+    }
+
+    /// Reusable-codec variant of the posterior-codec constructor: `slot`
+    /// caches one `DiscretizedGaussian` whose `(mu, sigma)` are updated in
+    /// place per latent dimension (validity of the updated fields matches
+    /// what `DiscretizedGaussian::new` asserts — sanitized here).
+    fn posterior_codec_scratch<'g>(
+        &self,
+        mu: f32,
+        sigma: f32,
+        slot: &'g mut Option<DiscretizedGaussian>,
+    ) -> &'g DiscretizedGaussian {
         // Guard against degenerate network outputs.
         let mu = if mu.is_finite() { mu as f64 } else { 0.0 };
         let sigma = if sigma.is_finite() && sigma > 0.0 {
@@ -154,7 +192,26 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         } else {
             1.0
         };
-        DiscretizedGaussian::new(self.buckets.clone(), mu, sigma, self.cfg.posterior_prec)
+        match slot {
+            // Reuse only if the cached geometry matches this codec (a
+            // scratch may migrate between codecs with different configs).
+            Some(g)
+                if g.buckets.latent_bits == self.cfg.latent_bits
+                    && g.prec == self.cfg.posterior_prec =>
+            {
+                g.mu = mu;
+                g.sigma = sigma;
+            }
+            _ => {
+                *slot = Some(DiscretizedGaussian::new(
+                    self.buckets.clone(),
+                    mu,
+                    sigma,
+                    self.cfg.posterior_prec,
+                ));
+            }
+        }
+        slot.as_ref().expect("slot populated above")
     }
 
     /// Prepared (division-free) interval of pixel `p` taking value `sym`
@@ -253,9 +310,27 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// Step 1 of encode: pop the latent bucket indices from q(y|s).
     pub fn pop_posterior(&self, ans: &mut Ans, mu: &[f32], sigma: &[f32]) -> Vec<u32> {
-        (0..self.backend.meta().latent_dim)
-            .map(|d| self.posterior_codec(mu[d], sigma[d]).pop(ans))
-            .collect()
+        let mut idx = Vec::with_capacity(self.backend.meta().latent_dim);
+        self.pop_posterior_into(ans, mu, sigma, &mut idx, &mut None);
+        idx
+    }
+
+    /// [`Self::pop_posterior`] with reusable buffers: `idx` is cleared and
+    /// refilled, `slot` caches the posterior codec across dims and images
+    /// (the `CodecScratch` fields the dataset loops thread through).
+    pub fn pop_posterior_into(
+        &self,
+        ans: &mut Ans,
+        mu: &[f32],
+        sigma: &[f32],
+        idx: &mut Vec<u32>,
+        slot: &mut Option<DiscretizedGaussian>,
+    ) {
+        idx.clear();
+        for d in 0..self.backend.meta().latent_dim {
+            let g = self.posterior_codec_scratch(mu[d], sigma[d], slot);
+            idx.push(g.pop(ans));
+        }
     }
 
     /// Step 2 of encode: push all pixels under the likelihood. Thin
@@ -288,7 +363,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         img: &[u8],
         scratch: &mut CodecScratch,
     ) {
-        let CodecScratch { prepared, pmf } = scratch;
+        let CodecScratch { prepared, pmf, .. } = scratch;
         prepared.clear();
         prepared.extend(
             img.iter()
@@ -308,13 +383,20 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// Step 3⁻¹ of decode: pop the latent from the prior.
     pub fn pop_prior(&self, ans: &mut Ans) -> Vec<u32> {
+        let mut idx = Vec::new();
+        self.pop_prior_into(ans, &mut idx);
+        idx
+    }
+
+    /// [`Self::pop_prior`] into a reusable buffer.
+    pub fn pop_prior_into(&self, ans: &mut Ans, idx: &mut Vec<u32>) {
         let l = self.backend.meta().latent_dim;
         let prior = Uniform::new(self.cfg.latent_bits);
-        let mut idx = vec![0u32; l];
+        idx.clear();
+        idx.resize(l, 0);
         for d in (0..l).rev() {
             idx[d] = prior.pop(ans);
         }
-        idx
     }
 
     /// Step 2⁻¹ of decode: pop all pixels under the likelihood. Thin
@@ -325,7 +407,11 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// Coder-generic likelihood decode (inverse of
     /// [`Self::push_pixels_coder`]; pixels come back in raster order).
-    pub fn pop_pixels_coder<C: EntropyCoder>(&self, coder: &mut C, params: &PixelParams) -> Vec<u8> {
+    pub fn pop_pixels_coder<C: EntropyCoder>(
+        &self,
+        coder: &mut C,
+        params: &PixelParams,
+    ) -> Vec<u8> {
         self.pop_pixels_coder_scratch(coder, params, &mut CodecScratch::new())
     }
 
@@ -349,14 +435,33 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// Step 1⁻¹ of decode: push the latent back under q(y|s).
     pub fn push_posterior(&self, ans: &mut Ans, mu: &[f32], sigma: &[f32], idx: &[u32]) {
+        self.push_posterior_scratch(ans, mu, sigma, idx, &mut None)
+    }
+
+    /// [`Self::push_posterior`] with the cached posterior codec.
+    pub fn push_posterior_scratch(
+        &self,
+        ans: &mut Ans,
+        mu: &[f32],
+        sigma: &[f32],
+        idx: &[u32],
+        slot: &mut Option<DiscretizedGaussian>,
+    ) {
         for d in (0..self.backend.meta().latent_dim).rev() {
-            self.posterior_codec(mu[d], sigma[d]).push(ans, idx[d]);
+            self.posterior_codec_scratch(mu[d], sigma[d], slot)
+                .push(ans, idx[d]);
         }
     }
 
     /// Bucket indices → the latent vector fed to the generative net.
     pub fn latent_centres(&self, idx: &[u32]) -> Vec<f32> {
         self.centres(idx)
+    }
+
+    /// [`Self::latent_centres`] appending to a caller-owned buffer (the
+    /// coordinator packs many streams' latents into one matrix).
+    pub fn latent_centres_into(&self, idx: &[u32], out: &mut Vec<f32>) {
+        self.centres_into(idx, out)
     }
 
     /// Encode one image onto the stack (paper Table 1), given its already-
@@ -386,20 +491,24 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         if img.len() != meta.pixels {
             bail!("image has {} pixels, model wants {}", img.len(), meta.pixels);
         }
-        let l = meta.latent_dim;
         // Effective message length: actual content minus the clean words
         // drawn so far. Treating the clean supply as virtual pre-existing
         // stack content makes a posterior pop cost exactly -log q and a
         // push cost exactly -log p, so per-image net = -ELBO estimate.
         let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
 
-        let _ = l;
-        // (1) pop y ~ q(y|s): dims in increasing order.
+        // (1) pop y ~ q(y|s): dims in increasing order. The bucket-index
+        // buffer is borrowed out of the scratch so the pixel step below
+        // can borrow the rest of it.
+        let mut idx = std::mem::take(&mut scratch.idx);
         let b0 = bits_at(ans);
-        let idx = self.pop_posterior(ans, mu, sigma);
+        self.pop_posterior_into(ans, mu, sigma, &mut idx, &mut scratch.gauss);
         let b1 = bits_at(ans);
 
-        // (2) push s under p(s|y).
+        // (2) push s under p(s|y). The decoder net is inherently B=1 on
+        // this path: the latent depends on the coder state, so chunk-level
+        // batching happens on the posterior side only (see
+        // `encode_dataset_pipelined`).
         let y = self.centres(&idx);
         let params = self.backend.likelihood(&[&y])?.remove(0);
         self.push_pixels_coder_scratch(ans, &params, img, scratch);
@@ -408,6 +517,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         // (3) push y under the (exactly uniform) discretized prior.
         self.push_prior(ans, &idx);
         let b3 = bits_at(ans);
+        scratch.idx = idx;
 
         Ok(ImageStats {
             net_bits: b3 - b0,
@@ -431,9 +541,14 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     }
 
     /// [`Self::decode_image`] with reusable buffers.
-    pub fn decode_image_scratch(&self, ans: &mut Ans, scratch: &mut CodecScratch) -> Result<Vec<u8>> {
+    pub fn decode_image_scratch(
+        &self,
+        ans: &mut Ans,
+        scratch: &mut CodecScratch,
+    ) -> Result<Vec<u8>> {
         // (3 inverse) pop y from the prior.
-        let idx = self.pop_prior(ans);
+        let mut idx = std::mem::take(&mut scratch.idx);
+        self.pop_prior_into(ans, &mut idx);
 
         // (2 inverse) pop s under p(s|y).
         let y = self.centres(&idx);
@@ -443,7 +558,8 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         // (1 inverse) push y back under q(y|s) — returns the borrowed bits.
         let x = self.scale_image(&img);
         let (mu, sigma) = self.backend.posterior(&[&x])?.remove(0);
-        self.push_posterior(ans, &mu, &sigma, &idx);
+        self.push_posterior_scratch(ans, &mu, &sigma, &idx, &mut scratch.gauss);
+        scratch.idx = idx;
         Ok(img)
     }
 
@@ -458,20 +574,35 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         Ok((ans, stats))
     }
 
+    /// Scale a chunk of images into one `[B, pixels]` matrix and run the
+    /// recognition net as a single batched dispatch. Both dataset encode
+    /// paths (sequential and pipelined) share this, so their NN inputs
+    /// are identical by construction.
+    pub fn posterior_batch_for(&self, chunk: &[Vec<u8>]) -> Result<PosteriorBatch> {
+        let pixels = self.backend.meta().pixels;
+        let mut data = Vec::with_capacity(chunk.len() * pixels);
+        for img in chunk {
+            if img.len() != pixels {
+                bail!("image has {} pixels, model wants {pixels}", img.len());
+            }
+            self.scale_image_into(img, &mut data);
+        }
+        let x = Matrix::new(chunk.len(), pixels, data);
+        self.backend.encode_batch(&x)
+    }
+
     /// Chain `images` onto an existing coder state.
     pub fn encode_dataset_into(
         &self,
         ans: &mut Ans,
         images: &[Vec<u8>],
     ) -> Result<Vec<ImageStats>> {
-        const NN_CHUNK: usize = 64;
         let mut stats = Vec::with_capacity(images.len());
         let mut scratch = CodecScratch::new();
         for chunk in images.chunks(NN_CHUNK) {
-            let scaled: Vec<Vec<f32>> = chunk.iter().map(|i| self.scale_image(i)).collect();
-            let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
-            let posts = self.backend.posterior(&refs)?;
-            for (img, (mu, sigma)) in chunk.iter().zip(posts.iter()) {
+            let posts = self.posterior_batch_for(chunk)?;
+            for (r, img) in chunk.iter().enumerate() {
+                let (mu, sigma) = posts.row(r);
                 stats.push(
                     self.encode_image_with_posterior_scratch(ans, img, mu, sigma, &mut scratch)?,
                 );
@@ -510,75 +641,201 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     }
 }
 
-/// Chunk-parallel coding (paper §4.2: BB-ANS chains are sequential, but
-/// *independent* chains parallelize perfectly). Requires a `Sync` backend
-/// — the pure-Rust [`crate::model::vae::NativeVae`] qualifies; the PJRT
-/// backend is deliberately single-threaded and instead parallelizes via
-/// the coordinator's cross-stream batcher.
+/// Default worker-thread count for the parallel paths.
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `n_jobs` indexed jobs on a bounded pool of `workers` scoped
+/// threads (atomic work-stealing queue) and return the results in job
+/// order. The pool shape never affects outputs — only which thread
+/// happens to compute each job.
+fn pooled_indexed<T: Send, F: Fn(usize) -> T + Sync>(
+    n_jobs: usize,
+    workers: usize,
+    job: F,
+) -> Vec<T> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    let workers = workers.clamp(1, n_jobs.max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (next, job) = (&next, &job);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs || tx.send((i, job(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n_jobs).map(|_| None).collect();
+        for _ in 0..n_jobs {
+            let (i, v) = rx.recv().expect("pool worker exited without a result");
+            out[i] = Some(v);
+        }
+        out.into_iter()
+            .map(|v| v.expect("every job index delivered once"))
+            .collect()
+    })
+}
+
+/// Chunk-parallel and pipelined coding (paper §4.2: BB-ANS chains are
+/// sequential, but *independent* chains parallelize perfectly, and the
+/// posterior precompute is data-parallel even within one chain). Requires
+/// a `Sync` backend — the pure-Rust [`crate::model::vae::NativeVae`]
+/// qualifies; the PJRT backend is deliberately single-threaded and
+/// instead parallelizes via the coordinator's cross-stream batcher.
 impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
-    /// Encode `images` as `n_chunks` independent BB-ANS chains, one per
-    /// chunk, fanned out over std threads. Chunk `i` seeds its clean-bit
-    /// supply from [`container::chunk_seed`]`(cfg.clean_seed, i)`, so the
-    /// result is bit-reproducible for a given `(images, n_chunks, cfg)`
+    /// Encode one sequential chain with the recognition net pipelined
+    /// against it: worker threads precompute [`PosteriorBatch`]es for
+    /// [`NN_CHUNK`]-image blocks (they depend only on the data) while
+    /// this thread runs the strictly sequential ANS chain, consuming
+    /// blocks in order. Bit-identical to [`Self::encode_dataset_into`]
+    /// for every worker count: the chain work is untouched and the
+    /// posterior batches are row-independent and identically chunked.
+    pub fn encode_dataset_pipelined(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+        workers: usize,
+    ) -> Result<Vec<ImageStats>> {
+        use std::collections::BTreeMap;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::mpsc;
+
+        let blocks: Vec<&[Vec<u8>]> = images.chunks(NN_CHUNK).collect();
+        if blocks.len() <= 1 || workers <= 1 {
+            return self.encode_dataset_into(ans, images);
+        }
+        let workers = workers.min(blocks.len());
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<PosteriorBatch>)>();
+        std::thread::scope(|scope| -> Result<Vec<ImageStats>> {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let (next, blocks) = (&next, &blocks);
+                scope.spawn(move || loop {
+                    let bi = next.fetch_add(1, Ordering::Relaxed);
+                    if bi >= blocks.len()
+                        || tx.send((bi, self.posterior_batch_for(blocks[bi]))).is_err()
+                    {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+
+            // Consume blocks strictly in chain order as they land.
+            let mut ready: BTreeMap<usize, Result<PosteriorBatch>> = BTreeMap::new();
+            let mut scratch = CodecScratch::new();
+            let mut stats = Vec::with_capacity(images.len());
+            for (bi, block) in blocks.iter().enumerate() {
+                let posts = loop {
+                    if let Some(p) = ready.remove(&bi) {
+                        break p;
+                    }
+                    let (i, p) = rx.recv().expect("posterior worker exited early");
+                    ready.insert(i, p);
+                }?;
+                for (r, img) in block.iter().enumerate() {
+                    let (mu, sigma) = posts.row(r);
+                    stats.push(self.encode_image_with_posterior_scratch(
+                        ans,
+                        img,
+                        mu,
+                        sigma,
+                        &mut scratch,
+                    )?);
+                }
+            }
+            Ok(stats)
+        })
+    }
+
+    /// Encode `images` as `n_chunks` independent BB-ANS chains on the
+    /// default-sized worker pool. Chunk `i` seeds its clean-bit supply
+    /// from [`container::chunk_seed`]`(cfg.clean_seed, i)`, so the result
+    /// is bit-reproducible for a given `(images, n_chunks, cfg)`
     /// regardless of how many threads actually run.
     pub fn encode_dataset_chunked(
         &self,
         images: &[Vec<u8>],
         n_chunks: usize,
     ) -> Result<Vec<container::ChunkEntry>> {
-        let ranges = Self::chunk_ranges(images.len(), n_chunks);
-        let results: Vec<Result<container::ChunkEntry>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .enumerate()
-                .map(|(ci, r)| {
-                    let chunk = &images[r.clone()];
-                    scope.spawn(move || {
-                        let mut ans = Ans::new(container::chunk_seed(self.cfg.clean_seed, ci));
-                        self.encode_dataset_into(&mut ans, chunk)?;
-                        Ok(container::ChunkEntry {
-                            num_images: chunk.len() as u32,
-                            message: ans.into_message(),
-                        })
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("chunk encode thread panicked"))
-                .collect()
-        });
-        results.into_iter().collect()
+        self.encode_dataset_chunked_with_workers(images, n_chunks, default_workers())
     }
 
-    /// Decode chunks produced by [`Self::encode_dataset_chunked`], fanned
-    /// out over std threads; images return in original dataset order.
-    /// Borrows the chunk messages — no payload copies.
+    /// [`Self::encode_dataset_chunked`] with an explicit worker count:
+    /// `n_chunks` (the container format) and `workers` (the machine) are
+    /// independent knobs. With more chunks than workers the pool
+    /// pipelines — chunk `i+1`'s recognition-net batches run on one
+    /// worker while chunk `i`'s ANS chain is still coding on another.
+    pub fn encode_dataset_chunked_with_workers(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Vec<container::ChunkEntry>> {
+        let ranges = Self::chunk_ranges(images.len(), n_chunks);
+        // Workers left over after one-per-chunk go to each chain's
+        // posterior-precompute pipeline, counting the consuming pool
+        // thread against the budget so `workers` is a true ceiling:
+        // a pipelined chunk costs 1 (consumer) + inner (precompute)
+        // threads, so e.g. 8 workers / 2 chunks → inner = 3 (2·(1+3) = 8
+        // live threads); with chunks ≥ workers, inner = 1 and the
+        // pipelined path degrades to the sequential one.
+        let pool = workers.clamp(1, ranges.len().max(1));
+        let inner = (workers / pool).saturating_sub(1).max(1);
+        pooled_indexed(ranges.len(), workers, |ci| {
+            let chunk = &images[ranges[ci].clone()];
+            let mut ans = Ans::new(container::chunk_seed(self.cfg.clean_seed, ci));
+            self.encode_dataset_pipelined(&mut ans, chunk, inner)?;
+            Ok(container::ChunkEntry {
+                num_images: chunk.len() as u32,
+                message: ans.into_message(),
+            })
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// Decode chunks produced by [`Self::encode_dataset_chunked`] on the
+    /// default-sized worker pool; images return in original dataset
+    /// order. Borrows the chunk messages — no payload copies.
     pub fn decode_dataset_chunked(
         &self,
         chunks: &[container::ChunkEntry],
     ) -> Result<Vec<Vec<u8>>> {
-        let results: Vec<Result<Vec<Vec<u8>>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = chunks
-                .iter()
-                .enumerate()
-                .map(|(ci, chunk)| {
-                    scope.spawn(move || {
-                        let mut ans = Ans::from_message(
-                            &chunk.message,
-                            container::chunk_seed(self.cfg.clean_seed, ci),
-                        );
-                        self.decode_dataset(&mut ans, chunk.num_images as usize)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("chunk decode thread panicked"))
-                .collect()
+        self.decode_dataset_chunked_with_workers(chunks, default_workers())
+    }
+
+    /// [`Self::decode_dataset_chunked`] with an explicit worker count.
+    /// Within a chain, decode steps are strictly serial (each image's
+    /// decoder-net input is popped from the stream), so decode-side
+    /// pipelining is across chunks: the pool keeps chunk `i+1`'s NN and
+    /// coding work running while chunk `i` finishes.
+    pub fn decode_dataset_chunked_with_workers(
+        &self,
+        chunks: &[container::ChunkEntry],
+        workers: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        let per_chunk = pooled_indexed(chunks.len(), workers, |ci| {
+            let chunk = &chunks[ci];
+            let mut ans = Ans::from_message(
+                &chunk.message,
+                container::chunk_seed(self.cfg.clean_seed, ci),
+            );
+            self.decode_dataset(&mut ans, chunk.num_images as usize)
         });
         let mut out = Vec::new();
-        for r in results {
+        for r in per_chunk {
             out.extend(r?);
         }
         Ok(out)

@@ -440,7 +440,9 @@ mod tests {
         // the rate with the bad initial model.
         let truth = demo_hmm();
         let mut rng = Rng::new(17);
-        let seqs: Vec<Vec<usize>> = (0..40).map(|_| sample_sequence(&truth, 150, &mut rng)).collect();
+        let seqs: Vec<Vec<usize>> = (0..40)
+            .map(|_| sample_sequence(&truth, 150, &mut rng))
+            .collect();
 
         // Perturbed start: near-uniform everything.
         let k = 3;

@@ -235,7 +235,8 @@ mod tests {
         assert_eq!(*results[1].get("ops_per_sec").unwrap(), Json::Null);
 
         // finish() honours an explicit BBANS_BENCH_JSON path.
-        let path = std::env::temp_dir().join(format!("bbans_bench_test_{}.json", std::process::id()));
+        let path =
+            std::env::temp_dir().join(format!("bbans_bench_test_{}.json", std::process::id()));
         std::env::set_var("BBANS_BENCH_JSON", &path);
         b.finish("unit");
         std::env::remove_var("BBANS_BENCH_JSON");

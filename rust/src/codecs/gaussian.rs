@@ -330,7 +330,12 @@ mod tests {
         let mut ans = Ans::new(17);
         let mut trace = Vec::new();
         for k in 0..500 {
-            let d = DiscretizedGaussian::new(b.clone(), (k % 7) as f64 - 3.0, 0.2 + (k % 5) as f64 * 0.3, 24);
+            let d = DiscretizedGaussian::new(
+                b.clone(),
+                (k % 7) as f64 - 3.0,
+                0.2 + (k % 5) as f64 * 0.3,
+                24,
+            );
             let y = d.pop(&mut ans); // sample posterior (consumes bits)
             prior.push(&mut ans, y); // encode under prior (adds bits)
             trace.push((d, y));

@@ -28,8 +28,9 @@ use anyhow::{anyhow, bail, Result};
 use super::metrics::Metrics;
 use crate::ans::Ans;
 use crate::bbans::container::{Container, ParallelContainer, MAGIC_PARALLEL};
-use crate::bbans::{BbAnsConfig, VaeCodec};
-use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta};
+use crate::bbans::{BbAnsConfig, CodecScratch, VaeCodec};
+use crate::model::tensor::Matrix;
+use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PosteriorBatch};
 use crate::runtime::{load_config, Engine};
 
 /// Service tuning knobs.
@@ -281,8 +282,8 @@ fn worker_loop<F>(
         }
 
         let t_batch = Instant::now();
-        let mut compress: HashMap<String, Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>> =
-            HashMap::new();
+        type CompressJob = (Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>);
+        let mut compress: HashMap<String, Vec<CompressJob>> = HashMap::new();
         let mut decompress: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)> = Vec::new();
         let mut saw_shutdown = false;
         for job in jobs {
@@ -342,52 +343,53 @@ fn batched_encode(
     };
     let meta = backend.meta();
 
-    // Streams: (images, ans, per-image latent idx buffer, reply)
     struct Stream {
         images: Vec<Vec<u8>>,
-        posts: Vec<(Vec<f32>, Vec<f32>)>,
+        /// First row of this stream in the shared posterior batch.
+        base: usize,
         ans: Ans,
         next: usize,
         reply: mpsc::Sender<Result<Vec<u8>, String>>,
         failed: Option<String>,
+        /// Per-stream coder buffers; `scratch.idx` carries the popped
+        /// bucket indices across the batched generative-net dispatch.
+        scratch: CodecScratch,
     }
     let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
 
-    // Phase 1: one big batched posterior dispatch for everything.
+    // Phase 1: ONE batched recognition-net dispatch for every image of
+    // every stream, packed into a single [rows, pixels] matrix.
+    let mut posts: Option<PosteriorBatch> = None;
     {
-        let mut scaled: Vec<Vec<f32>> = Vec::new();
-        let mut owners: Vec<(usize, usize)> = Vec::new();
-        for (si, (images, reply)) in group.into_iter().enumerate() {
-            let bad = images.iter().any(|i| i.len() != meta.pixels);
+        let mut data: Vec<f32> = Vec::new();
+        let mut rows = 0usize;
+        for (images, reply) in group {
+            let failed = images
+                .iter()
+                .any(|i| i.len() != meta.pixels)
+                .then(|| format!("image size != {}", meta.pixels));
+            let base = rows;
+            if failed.is_none() {
+                for img in &images {
+                    codec.scale_image_into(img, &mut data);
+                }
+                rows += images.len();
+            }
             streams.push(Stream {
-                posts: Vec::with_capacity(images.len()),
+                images,
+                base,
                 ans: Ans::new(params.bbans.clean_seed),
                 next: 0,
                 reply,
-                failed: if bad {
-                    Some(format!("image size != {}", meta.pixels))
-                } else {
-                    None
-                },
-                images,
+                failed,
+                scratch: CodecScratch::new(),
             });
-            if streams[si].failed.is_none() {
-                for (ii, img) in streams[si].images.iter().enumerate() {
-                    scaled.push(codec.scale_image(img));
-                    owners.push((si, ii));
-                }
-            }
         }
-        let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
-        if !refs.is_empty() {
+        if rows > 0 {
             Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, refs.len() as u64);
-            match backend.posterior(&refs) {
-                Ok(posts) => {
-                    for ((si, _ii), post) in owners.into_iter().zip(posts) {
-                        streams[si].posts.push(post);
-                    }
-                }
+            Metrics::inc(&metrics.nn_items, rows as u64);
+            match backend.encode_batch(&Matrix::new(rows, meta.pixels, data)) {
+                Ok(p) => posts = Some(p),
                 Err(e) => {
                     for s in &mut streams {
                         s.failed = Some(format!("posterior failed: {e:#}"));
@@ -397,7 +399,9 @@ fn batched_encode(
         }
     }
 
-    // Phase 2: lock-step image coding with cross-stream likelihood batches.
+    // Phase 2: lock-step image coding with one cross-stream batched
+    // generative-net dispatch per image step.
+    let mut ys_data: Vec<f32> = Vec::new();
     loop {
         let active: Vec<usize> = streams
             .iter()
@@ -408,27 +412,34 @@ fn batched_encode(
         if active.is_empty() {
             break;
         }
-        // (1) pop posteriors per stream.
-        let mut ys: Vec<Vec<f32>> = Vec::with_capacity(active.len());
-        let mut idxs: Vec<Vec<u32>> = Vec::with_capacity(active.len());
+        let pb = posts.as_ref().expect("active streams imply a posterior batch");
+        // (1) pop posteriors per stream; pack latents into one matrix.
+        ys_data.clear();
         for &si in &active {
             let s = &mut streams[si];
-            let (mu, sigma) = &s.posts[s.next];
-            let idx = codec.pop_posterior(&mut s.ans, mu, sigma);
-            ys.push(codec.latent_centres(&idx));
-            idxs.push(idx);
+            let (mu, sigma) = pb.row(s.base + s.next);
+            let mut idx = std::mem::take(&mut s.scratch.idx);
+            codec.pop_posterior_into(&mut s.ans, mu, sigma, &mut idx, &mut s.scratch.gauss);
+            codec.latent_centres_into(&idx, &mut ys_data);
+            s.scratch.idx = idx;
         }
-        // (2) one batched likelihood call for all active streams.
-        let refs: Vec<&[f32]> = ys.iter().map(|v| v.as_slice()).collect();
+        // (2) one batched generative-net dispatch for all active streams.
+        let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
         Metrics::inc(&metrics.nn_calls, 1);
-        Metrics::inc(&metrics.nn_items, refs.len() as u64);
-        match backend.likelihood(&refs) {
+        Metrics::inc(&metrics.nn_items, active.len() as u64);
+        match backend.decode_batch(&ym) {
             Ok(param_list) => {
-                for ((&si, idx), pp) in active.iter().zip(idxs).zip(param_list) {
+                for (&si, pp) in active.iter().zip(param_list) {
                     let s = &mut streams[si];
-                    let img = s.images[s.next].clone();
-                    codec.push_pixels(&mut s.ans, &pp, &img);
+                    let idx = std::mem::take(&mut s.scratch.idx);
+                    codec.push_pixels_coder_scratch(
+                        &mut s.ans,
+                        &pp,
+                        &s.images[s.next],
+                        &mut s.scratch,
+                    );
                     codec.push_prior(&mut s.ans, &idx);
+                    s.scratch.idx = idx;
                     s.next += 1;
                     Metrics::inc(&metrics.images_encoded, 1);
                 }
@@ -439,6 +450,7 @@ fn batched_encode(
                 }
             }
         }
+        ys_data = ym.data;
     }
 
     // Phase 3: containers out.
@@ -473,8 +485,8 @@ fn batched_decode(
     // containers have no cross-stream NN batching to exploit here — each
     // chunk is an independent chain — so they decode chunk-by-chunk
     // directly instead of joining the lock-step loop below.
-    let mut by_model: HashMap<String, Vec<(Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>> =
-        HashMap::new();
+    type DecodeJob = (Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>);
+    let mut by_model: HashMap<String, Vec<DecodeJob>> = HashMap::new();
     for (bytes, reply) in jobs {
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
@@ -509,6 +521,7 @@ fn batched_decode(
             failed: Option<String>,
             pending_idx: Vec<u32>,
             pending_img: Vec<u8>,
+            scratch: CodecScratch,
         }
         let mut streams: Vec<Stream> = group
             .into_iter()
@@ -531,10 +544,14 @@ fn batched_decode(
                     failed,
                     pending_idx: Vec::new(),
                     pending_img: Vec::new(),
+                    scratch: CodecScratch::new(),
                 }
             })
             .collect();
 
+        let meta = backend.meta();
+        let mut ys_data: Vec<f32> = Vec::new();
+        let mut xs_data: Vec<f32> = Vec::new();
         loop {
             let active: Vec<usize> = streams
                 .iter()
@@ -545,8 +562,8 @@ fn batched_decode(
             if active.is_empty() {
                 break;
             }
-            // (3⁻¹) pop priors; gather ys.
-            let mut ys = Vec::with_capacity(active.len());
+            // (3⁻¹) pop priors; pack latents into one matrix.
+            ys_data.clear();
             for &si in &active {
                 let s = &mut streams[si];
                 let codec = match VaeCodec::new(backend, s.cfg) {
@@ -556,9 +573,8 @@ fn batched_decode(
                         continue;
                     }
                 };
-                let idx = codec.pop_prior(&mut s.ans);
-                ys.push(codec.latent_centres(&idx));
-                s.pending_idx = idx;
+                codec.pop_prior_into(&mut s.ans, &mut s.pending_idx);
+                codec.latent_centres_into(&s.pending_idx, &mut ys_data);
             }
             let still: Vec<usize> = active
                 .iter()
@@ -568,38 +584,45 @@ fn batched_decode(
             if still.is_empty() {
                 continue;
             }
-            // (2⁻¹) batched likelihood, pop pixels.
-            let refs: Vec<&[f32]> = ys.iter().map(|v| v.as_slice()).collect();
+            // (2⁻¹) one batched generative-net dispatch, pop pixels.
+            let ym = Matrix::new(still.len(), meta.latent_dim, std::mem::take(&mut ys_data));
             Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, refs.len() as u64);
-            let params_list = match backend.likelihood(&refs) {
+            Metrics::inc(&metrics.nn_items, still.len() as u64);
+            let params_list = match backend.decode_batch(&ym) {
                 Ok(p) => p,
                 Err(e) => {
+                    ys_data = ym.data;
                     for &si in &still {
                         streams[si].failed = Some(format!("likelihood failed: {e:#}"));
                     }
                     continue;
                 }
             };
-            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(still.len());
+            ys_data = ym.data;
+            xs_data.clear();
             for (&si, pp) in still.iter().zip(params_list) {
                 let s = &mut streams[si];
                 let codec = VaeCodec::new(backend, s.cfg).expect("validated");
-                let img = codec.pop_pixels(&mut s.ans, &pp);
-                xs.push(codec.scale_image(&img));
-                s.pending_img = img;
+                s.pending_img = codec.pop_pixels_coder_scratch(&mut s.ans, &pp, &mut s.scratch);
+                codec.scale_image_into(&s.pending_img, &mut xs_data);
             }
-            // (1⁻¹) batched posterior, push bits back.
-            let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            // (1⁻¹) one batched recognition-net dispatch, push bits back.
+            let xm = Matrix::new(still.len(), meta.pixels, std::mem::take(&mut xs_data));
             Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, xrefs.len() as u64);
-            match backend.posterior(&xrefs) {
+            Metrics::inc(&metrics.nn_items, still.len() as u64);
+            match backend.encode_batch(&xm) {
                 Ok(posts) => {
-                    for (&si, (mu, sigma)) in still.iter().zip(posts) {
+                    for (r, &si) in still.iter().enumerate() {
                         let s = &mut streams[si];
                         let codec = VaeCodec::new(backend, s.cfg).expect("validated");
-                        let idx = std::mem::take(&mut s.pending_idx);
-                        codec.push_posterior(&mut s.ans, &mu, &sigma, &idx);
+                        let (mu, sigma) = posts.row(r);
+                        codec.push_posterior_scratch(
+                            &mut s.ans,
+                            mu,
+                            sigma,
+                            &s.pending_idx,
+                            &mut s.scratch.gauss,
+                        );
                         s.out.push(std::mem::take(&mut s.pending_img));
                         s.remaining -= 1;
                         Metrics::inc(&metrics.images_decoded, 1);
@@ -611,6 +634,7 @@ fn batched_decode(
                     }
                 }
             }
+            xs_data = xm.data;
         }
 
         for s in streams {

@@ -199,7 +199,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
         let n_images = container.num_images();
         let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
         println!(
-            "compressed {n_images} images in {} chunks: {raw_bytes} -> {} bytes ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+            "compressed {n_images} images in {} chunks: {raw_bytes} -> {} bytes \
+             ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
             container.chunks.len(),
             bytes.len(),
             dt.as_secs_f64(),

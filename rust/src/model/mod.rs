@@ -18,7 +18,9 @@ pub mod tensor;
 pub mod vae;
 pub mod weights;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use self::tensor::Matrix;
 
 /// Which per-pixel likelihood family the generative net parameterizes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +73,42 @@ pub enum PixelParams {
     BetaBinomialTable(Vec<f32>),
 }
 
+/// Posterior parameters for a batch of images: row `r` of `mu`/`sigma`
+/// belongs to input row `r`. Produced by [`Backend::encode_batch`]; the
+/// matrices keep the whole chunk contiguous so the BB-ANS dataset loops
+/// hand rows to the coder without per-image allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PosteriorBatch {
+    /// `[B, latent_dim]` posterior means.
+    pub mu: Matrix,
+    /// `[B, latent_dim]` posterior standard deviations.
+    pub sigma: Matrix,
+}
+
+impl PosteriorBatch {
+    /// Number of images in the batch.
+    pub fn len(&self) -> usize {
+        self.mu.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mu.rows == 0
+    }
+
+    /// `(mu, sigma)` of image `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[f32], &[f32]) {
+        (self.mu.row(r), self.sigma.row(r))
+    }
+
+    /// Split into the per-image representation of [`Backend::posterior`].
+    pub fn into_rows(self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        (0..self.len())
+            .map(|r| (self.mu.row(r).to_vec(), self.sigma.row(r).to_vec()))
+            .collect()
+    }
+}
+
 /// Where the VAE networks execute. Batched calls take several images /
 /// latents at once so callers (the coordinator) can amortize dispatch.
 ///
@@ -95,4 +133,38 @@ pub trait Backend {
     /// Generative net: latents (len `latent_dim` each) → per-pixel
     /// likelihood parameters per latent.
     fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>>;
+
+    /// Recognition net over a whole `[B, pixels]` batch in one dispatch.
+    ///
+    /// The default routes through [`Backend::posterior`]; backends with a
+    /// native batched path (the packed-GEMM `NativeVae`) override it.
+    /// Implementations must be row-independent and batch-size-invariant:
+    /// row `r` of the result depends only on row `r` of `xs`, bit-for-bit
+    /// — the BB-ANS pipeline batches freely on that guarantee.
+    fn encode_batch(&self, xs: &Matrix) -> Result<PosteriorBatch> {
+        let refs: Vec<&[f32]> = (0..xs.rows).map(|r| xs.row(r)).collect();
+        let posts = self.posterior(&refs)?;
+        let l = self.meta().latent_dim;
+        let mut mu = Vec::with_capacity(xs.rows * l);
+        let mut sigma = Vec::with_capacity(xs.rows * l);
+        for (m, s) in posts {
+            if m.len() != l || s.len() != l {
+                bail!("posterior returned {}/{} values, want {l}", m.len(), s.len());
+            }
+            mu.extend_from_slice(&m);
+            sigma.extend_from_slice(&s);
+        }
+        Ok(PosteriorBatch {
+            mu: Matrix::new(xs.rows, l, mu),
+            sigma: Matrix::new(xs.rows, l, sigma),
+        })
+    }
+
+    /// Generative net over a whole `[B, latent_dim]` batch in one
+    /// dispatch; same row-independence contract as
+    /// [`Backend::encode_batch`].
+    fn decode_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        let refs: Vec<&[f32]> = (0..ys.rows).map(|r| ys.row(r)).collect();
+        self.likelihood(&refs)
+    }
 }

@@ -1,10 +1,39 @@
-//! Minimal dense f32 tensor ops for the native (pure-Rust) model backend.
+//! Dense f32 tensor ops for the native (pure-Rust) model backend.
 //!
-//! This is deliberately small: the VAE needs matmul + bias + a few
-//! activations. The native backend exists to (a) cross-check the PJRT
-//! path, (b) run tests without artifacts, and (c) serve as the fallback
-//! when no accelerator runtime is available. The PJRT path is the
-//! production one.
+//! Two matmul paths share one numeric contract:
+//!
+//! * [`dense`] — the scalar reference kernel (kept for cross-checks and
+//!   as the validation baseline);
+//! * [`dense_packed`] — the production kernel: a cache-blocked,
+//!   register-tiled GEMM over a [`PackedMatrix`] (transposed weights in
+//!   panels of [`NR`] output columns, packed once at model load via
+//!   [`Matrix::packed`]), with optional fused bias+activation epilogues
+//!   ([`Epilogue`]).
+//!
+//! **Determinism contract.** Every output element is accumulated in ONE
+//! fixed order — `b[n]`, then `x[k]·w[k][n]` for `k` ascending — exactly
+//! the order of the reference kernel, independent of batch size, tile
+//! shape, or how rows are distributed across threads. BB-ANS needs the
+//! decoder to reproduce the encoder's f32 distribution parameters
+//! bit-for-bit, so the packed path can batch arbitrarily without changing
+//! a single coded bit (pinned by `packed_matches_reference_bitwise` below
+//! and the batch-identity property tests). The reference kernel skips
+//! exact-zero inputs and the packed kernel does too; for finite weights an
+//! elided `+= 0.0 * w` changes no value (at most the sign of a zero,
+//! which no downstream computation distinguishes).
+
+/// Output columns per packed panel (register-tile width; the microkernel
+/// keeps `NR` accumulators live per row).
+pub const NR: usize = 8;
+/// Rows per register tile: one panel pass accumulates `MR` rows so the
+/// L1-resident panel is reused before it is evicted.
+pub const MR: usize = 4;
+/// K-dimension cache block: the microkernel streams panels in `KC`-row
+/// slabs (`KC * NR * 4` bytes ≈ 16 KiB, comfortably L1-resident).
+pub const KC: usize = 512;
+/// Row-dimension cache block: `MC` input rows (`MC * K` floats) are
+/// re-streamed against every panel, so they should stay L2-resident.
+pub const MC: usize = 64;
 
 /// Row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +66,89 @@ impl Matrix {
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
+
+    /// Pack this weight matrix (`[K, N]`) for [`dense_packed`]: columns
+    /// are grouped into panels of [`NR`], each panel stored k-major with
+    /// the `NR` column weights of one `k` contiguous. Done once at model
+    /// load; the tail panel is zero-padded (padded lanes accumulate into
+    /// discarded registers).
+    pub fn packed(&self) -> PackedMatrix {
+        let (k, n) = (self.rows, self.cols);
+        let n_panels = n.div_ceil(NR).max(1);
+        let mut panels = vec![0.0f32; n_panels * k * NR];
+        for j in 0..n_panels {
+            let width = NR.min(n - (j * NR).min(n));
+            let base = j * k * NR;
+            for kk in 0..k {
+                for nn in 0..width {
+                    panels[base + kk * NR + nn] = self.data[kk * n + j * NR + nn];
+                }
+            }
+        }
+        PackedMatrix {
+            rows: k,
+            cols: n,
+            panels,
+        }
+    }
+}
+
+/// Transposed-panel weight layout produced by [`Matrix::packed`]; the
+/// input format of [`dense_packed`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedMatrix {
+    /// K — inner (contraction) dimension.
+    pub rows: usize,
+    /// N — output columns (before padding).
+    pub cols: usize,
+    /// `ceil(N/NR)` panels, each `K * NR` floats, k-major.
+    panels: Vec<f32>,
+}
+
+impl PackedMatrix {
+    #[inline]
+    fn n_panels(&self) -> usize {
+        self.cols.div_ceil(NR).max(1)
+    }
+
+    #[inline]
+    fn panel(&self, j: usize) -> &[f32] {
+        &self.panels[j * self.rows * NR..(j + 1) * self.rows * NR]
+    }
+}
+
+/// Fused epilogue applied to each output element while it is still in an
+/// accumulator register — saves a second full pass over the output matrix
+/// and its write-back/reload. Bit-identical to running the corresponding
+/// `*_inplace` pass afterwards (same scalar function, same input).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Epilogue {
+    /// Store the biased accumulator unchanged.
+    Linear,
+    /// `max(v, 0)` with the same `-0.0` semantics as [`relu_inplace`].
+    Relu,
+    /// Numerically stable [`sigmoid_f32`].
+    Sigmoid,
+    /// Numerically stable [`softplus_f32`].
+    Softplus,
+}
+
+impl Epilogue {
+    #[inline(always)]
+    fn apply(self, v: f32) -> f32 {
+        match self {
+            Epilogue::Linear => v,
+            Epilogue::Relu => {
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            Epilogue::Sigmoid => sigmoid_f32(v),
+            Epilogue::Softplus => softplus_f32(v),
+        }
+    }
 }
 
 /// `out = x @ w + b`, with `x: [B, K]`, `w: [K, N]`, `b: [N]`.
@@ -62,6 +174,76 @@ pub fn dense(x: &Matrix, w: &Matrix, b: &[f32]) -> Matrix {
         }
     }
     out
+}
+
+/// `out = epilogue(x @ w + b)` over packed weights — the production GEMM.
+///
+/// Loop structure (outer→inner): `MC` row blocks of `x` (L2 reuse) →
+/// weight panels of [`NR`] columns → [`MR`]-row register tiles → `KC`
+/// cache blocks of the contraction → rows of the tile → `k` ascending.
+/// The `NR` accumulators per row live in registers across the whole `k`
+/// loop, so each element's floating-point accumulation order is exactly
+/// the reference [`dense`] order regardless of every blocking parameter —
+/// see the module docs for why BB-ANS requires that.
+pub fn dense_packed(x: &Matrix, w: &PackedMatrix, b: &[f32], epilogue: Epilogue) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, w.cols);
+    dense_packed_into(x, w, b, epilogue, &mut out);
+    out
+}
+
+/// [`dense_packed`] writing into a caller-owned output matrix (the
+/// batched backend reuses one per layer across calls).
+pub fn dense_packed_into(
+    x: &Matrix,
+    w: &PackedMatrix,
+    b: &[f32],
+    epilogue: Epilogue,
+    out: &mut Matrix,
+) {
+    let (bsz, k, n) = (x.rows, w.rows, w.cols);
+    assert_eq!(x.cols, k, "dense_packed: inner dims {} vs {k}", x.cols);
+    assert_eq!(b.len(), n, "dense_packed: bias len");
+    assert_eq!((out.rows, out.cols), (bsz, n), "dense_packed: out shape");
+    if n == 0 {
+        return;
+    }
+    for rc in (0..bsz).step_by(MC) {
+        let rc_end = (rc + MC).min(bsz);
+        for j in 0..w.n_panels() {
+            let panel = w.panel(j);
+            let col0 = j * NR;
+            let width = NR.min(n - col0);
+            // Bias tile, zero-padded so every accumulator lane has a
+            // well-defined (discarded) value in the tail panel.
+            let mut btile = [0.0f32; NR];
+            btile[..width].copy_from_slice(&b[col0..col0 + width]);
+            for r0 in (rc..rc_end).step_by(MR) {
+                let mr = MR.min(rc_end - r0);
+                let mut acc = [btile; MR];
+                for kb in (0..k).step_by(KC) {
+                    let kb_end = (kb + KC).min(k);
+                    let pslab = &panel[kb * NR..kb_end * NR];
+                    for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
+                        let xrow = &x.row(r0 + i)[kb..kb_end];
+                        for (&xv, pk) in xrow.iter().zip(pslab.chunks_exact(NR)) {
+                            if xv == 0.0 {
+                                continue; // value-preserving sparse skip
+                            }
+                            for (a, &wv) in acc_i.iter_mut().zip(pk.iter()) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+                for (i, acc_i) in acc.iter().enumerate().take(mr) {
+                    let orow = &mut out.row_mut(r0 + i)[col0..col0 + width];
+                    for (o, &a) in orow.iter_mut().zip(acc_i.iter()) {
+                        *o = epilogue.apply(a);
+                    }
+                }
+            }
+        }
+    }
 }
 
 pub fn relu_inplace(m: &mut Matrix) {
@@ -178,6 +360,104 @@ mod tests {
                 "softplus({x}): f32 {p} vs f64 {p_ref}"
             );
             assert!(p.is_finite() && p >= 0.0);
+        }
+    }
+
+    fn rand_matrix(rng: &mut crate::util::rng::Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::new(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| {
+                    // Sparse-ish, like scaled MNIST, to exercise the skip.
+                    if rng.f64() < 0.3 {
+                        0.0
+                    } else {
+                        (rng.normal() * 0.7) as f32
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    /// The packed kernel must agree with the reference kernel BITWISE for
+    /// every shape, including tile tails (rows % MR, cols % NR, k % KC) —
+    /// this is the determinism contract the whole batched BB-ANS pipeline
+    /// rests on (module docs). Because the accumulation order also equals
+    /// the seed `dense()` order, every pre-existing golden vector remains
+    /// valid.
+    #[test]
+    fn packed_matches_reference_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(0x9e3);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 784, 100),
+            (3, 7, 1),
+            (4, 8, 8),
+            (5, 9, 17),
+            (64, 100, 40),
+            (65, 40, 103),
+            (130, 513, 23),
+        ];
+        for &(m, k, n) in &shapes {
+            let x = rand_matrix(&mut rng, m, k);
+            let w = rand_matrix(&mut rng, k, n);
+            let b: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.2) as f32).collect();
+            let reference = dense(&x, &w, &b);
+            let wp = w.packed();
+            let got = dense_packed(&x, &wp, &b, Epilogue::Linear);
+            assert_eq!((got.rows, got.cols), (m, n));
+            for (i, (a, r)) in got.data.iter().zip(reference.data.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    r.to_bits(),
+                    "shape {m}x{k}x{n} elem {i}: packed {a} vs reference {r}"
+                );
+            }
+        }
+    }
+
+    /// Fused epilogues equal the separate activation pass bit-for-bit.
+    #[test]
+    fn fused_epilogues_match_separate_passes() {
+        let mut rng = crate::util::rng::Rng::new(0xe91);
+        let x = rand_matrix(&mut rng, 9, 31);
+        let w = rand_matrix(&mut rng, 31, 21);
+        let b: Vec<f32> = (0..21).map(|_| (rng.normal()) as f32).collect();
+        let wp = w.packed();
+        let passes: [(Epilogue, fn(&mut Matrix)); 3] = [
+            (Epilogue::Relu, relu_inplace),
+            (Epilogue::Sigmoid, sigmoid_inplace),
+            (Epilogue::Softplus, softplus_inplace),
+        ];
+        for (ep, pass) in passes {
+            let fused = dense_packed(&x, &wp, &b, ep);
+            let mut separate = dense_packed(&x, &wp, &b, Epilogue::Linear);
+            pass(&mut separate);
+            let same = fused
+                .data
+                .iter()
+                .zip(separate.data.iter())
+                .all(|(a, r)| a.to_bits() == r.to_bits());
+            assert!(same, "epilogue {ep:?} diverged from the separate pass");
+        }
+    }
+
+    /// Batching must not change any row: the packed result for B rows
+    /// equals B separate 1-row calls (each element's accumulation touches
+    /// only its own row).
+    #[test]
+    fn packed_rows_independent_of_batch_grouping() {
+        let mut rng = crate::util::rng::Rng::new(0x77);
+        let x = rand_matrix(&mut rng, 11, 50);
+        let w = rand_matrix(&mut rng, 50, 19);
+        let b: Vec<f32> = (0..19).map(|_| (rng.normal()) as f32).collect();
+        let wp = w.packed();
+        let batched = dense_packed(&x, &wp, &b, Epilogue::Sigmoid);
+        for r in 0..x.rows {
+            let one = Matrix::new(1, 50, x.row(r).to_vec());
+            let single = dense_packed(&one, &wp, &b, Epilogue::Sigmoid);
+            assert_eq!(single.row(0), batched.row(r), "row {r}");
         }
     }
 

@@ -5,9 +5,12 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::tensor::{dense, relu_inplace, sigmoid_inplace, softplus_inplace, Matrix};
+use super::tensor::{
+    dense, dense_packed, relu_inplace, sigmoid_inplace, softplus_inplace, Epilogue, Matrix,
+    PackedMatrix,
+};
 use super::weights::Weights;
-use super::{Backend, Likelihood, ModelMeta, PixelParams};
+use super::{Backend, Likelihood, ModelMeta, PixelParams, PosteriorBatch};
 use crate::runtime::{Engine, Tensor};
 
 /// Matches `python/compile/model.py::LOGVAR_MIN/MAX`.
@@ -64,6 +67,16 @@ pub fn load_native(artifact_dir: impl AsRef<std::path::Path>, model: &str) -> Re
 
 // ---------------------------------------------------------------- native
 
+/// Weight panels for the packed GEMM, built once at model load
+/// (`Matrix::packed`) — the per-call work is pure microkernel.
+struct PackedWeights {
+    enc_w1: PackedMatrix,
+    enc_w_mu: PackedMatrix,
+    enc_w_lv: PackedMatrix,
+    dec_w1: PackedMatrix,
+    dec_w_out: PackedMatrix,
+}
+
 /// Pure-Rust VAE forward pass from `.bbwt` weights.
 pub struct NativeVae {
     meta: ModelMeta,
@@ -77,39 +90,89 @@ pub struct NativeVae {
     dec_b1: Vec<f32>,
     dec_w_out: Matrix,
     dec_b_out: Vec<f32>,
+    packed: PackedWeights,
+    /// Route the forward pass through the scalar reference kernel instead
+    /// of the packed GEMM (validation/bench baseline; bit-identical).
+    reference_gemm: bool,
 }
 
 impl NativeVae {
-    pub fn from_weights(weights: &Weights, meta: ModelMeta) -> Result<Self> {
-        let v = Self {
-            enc_w1: weights.matrix("enc_w1")?,
-            enc_b1: weights.vector("enc_b1")?,
-            enc_w_mu: weights.matrix("enc_w_mu")?,
-            enc_b_mu: weights.vector("enc_b_mu")?,
-            enc_w_lv: weights.matrix("enc_w_lv")?,
-            enc_b_lv: weights.vector("enc_b_lv")?,
-            dec_w1: weights.matrix("dec_w1")?,
-            dec_b1: weights.vector("dec_b1")?,
-            dec_w_out: weights.matrix("dec_w_out")?,
-            dec_b_out: weights.vector("dec_b_out")?,
-            meta,
-        };
+    fn finish(
+        meta: ModelMeta,
+        enc_w1: Matrix,
+        enc_b1: Vec<f32>,
+        enc_w_mu: Matrix,
+        enc_b_mu: Vec<f32>,
+        enc_w_lv: Matrix,
+        enc_b_lv: Vec<f32>,
+        dec_w1: Matrix,
+        dec_b1: Vec<f32>,
+        dec_w_out: Matrix,
+        dec_b_out: Vec<f32>,
+    ) -> Result<Self> {
         // Shape sanity.
-        let (p, l, h) = (v.meta.pixels, v.meta.latent_dim, v.meta.hidden);
-        let heads = match v.meta.likelihood {
+        let (p, l, h) = (meta.pixels, meta.latent_dim, meta.hidden);
+        let heads = match meta.likelihood {
             Likelihood::Bernoulli => 1,
             Likelihood::BetaBinomial => 2,
         };
-        if v.enc_w1.rows != p || v.enc_w1.cols != h {
-            bail!("enc_w1 shape {:?}", (v.enc_w1.rows, v.enc_w1.cols));
+        if enc_w1.rows != p || enc_w1.cols != h {
+            bail!("enc_w1 shape {:?}", (enc_w1.rows, enc_w1.cols));
         }
-        if v.enc_w_mu.cols != l || v.enc_w_lv.cols != l {
+        if enc_w_mu.cols != l || enc_w_lv.cols != l {
             bail!("latent head shapes");
         }
-        if v.dec_w1.rows != l || v.dec_w_out.cols != p * heads {
+        if dec_w1.rows != l || dec_w_out.cols != p * heads {
             bail!("decoder shapes");
         }
-        Ok(v)
+        let packed = PackedWeights {
+            enc_w1: enc_w1.packed(),
+            enc_w_mu: enc_w_mu.packed(),
+            enc_w_lv: enc_w_lv.packed(),
+            dec_w1: dec_w1.packed(),
+            dec_w_out: dec_w_out.packed(),
+        };
+        Ok(Self {
+            meta,
+            enc_w1,
+            enc_b1,
+            enc_w_mu,
+            enc_b_mu,
+            enc_w_lv,
+            enc_b_lv,
+            dec_w1,
+            dec_b1,
+            dec_w_out,
+            dec_b_out,
+            packed,
+            reference_gemm: false,
+        })
+    }
+
+    pub fn from_weights(weights: &Weights, meta: ModelMeta) -> Result<Self> {
+        Self::finish(
+            meta,
+            weights.matrix("enc_w1")?,
+            weights.vector("enc_b1")?,
+            weights.matrix("enc_w_mu")?,
+            weights.vector("enc_b_mu")?,
+            weights.matrix("enc_w_lv")?,
+            weights.vector("enc_b_lv")?,
+            weights.matrix("dec_w1")?,
+            weights.vector("dec_b1")?,
+            weights.matrix("dec_w_out")?,
+            weights.vector("dec_b_out")?,
+        )
+    }
+
+    /// Use the scalar reference kernel ([`dense`]) instead of the packed
+    /// GEMM. Bit-identical by the tensor-layer determinism contract — the
+    /// golden-container tests and the `model` bench use it as the seed
+    /// baseline. The `backend_id` is unchanged because streams encoded by
+    /// either path decode under the other.
+    pub fn with_reference_gemm(mut self, on: bool) -> Self {
+        self.reference_gemm = on;
+        self
     }
 
     pub fn load(path: impl AsRef<std::path::Path>, meta: ModelMeta) -> Result<Self> {
@@ -136,19 +199,20 @@ impl NativeVae {
                     .collect(),
             )
         };
-        Self {
-            enc_w1: mat(p, h, 0.05),
-            enc_b1: vec![0.0; h],
-            enc_w_mu: mat(h, l, 0.1),
-            enc_b_mu: vec![0.0; l],
-            enc_w_lv: mat(h, l, 0.05),
-            enc_b_lv: vec![-1.0; l],
-            dec_w1: mat(l, h, 0.1),
-            dec_b1: vec![0.0; h],
-            dec_w_out: mat(h, p * heads, 0.05),
-            dec_b_out: vec![0.0; p * heads],
+        Self::finish(
             meta,
-        }
+            mat(p, h, 0.05),
+            vec![0.0; h],
+            mat(h, l, 0.1),
+            vec![0.0; l],
+            mat(h, l, 0.05),
+            vec![-1.0; l],
+            mat(l, h, 0.1),
+            vec![0.0; h],
+            mat(h, p * heads, 0.05),
+            vec![0.0; p * heads],
+        )
+        .expect("random weights have consistent shapes")
     }
 
     fn batch_matrix(&self, xs: &[&[f32]], want_cols: usize) -> Result<Matrix> {
@@ -173,40 +237,75 @@ impl Backend for NativeVae {
     }
 
     fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        // Rerouted through the batched path (B = xs.len()); bit-identical
+        // to any other batch grouping by the tensor-layer contract.
         let x = self.batch_matrix(xs, self.meta.pixels)?;
-        let mut h = dense(&x, &self.enc_w1, &self.enc_b1);
-        relu_inplace(&mut h);
-        let mu = dense(&h, &self.enc_w_mu, &self.enc_b_mu);
-        let lv = dense(&h, &self.enc_w_lv, &self.enc_b_lv);
-        Ok((0..xs.len())
-            .map(|r| {
-                let mu_r = mu.row(r).to_vec();
-                let sigma_r = lv
-                    .row(r)
-                    .iter()
-                    .map(|&v| (0.5 * v.clamp(LOGVAR_MIN, LOGVAR_MAX)).exp())
-                    .collect();
-                (mu_r, sigma_r)
-            })
-            .collect())
+        Ok(self.encode_batch(&x)?.into_rows())
     }
 
     fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
         let y = self.batch_matrix(ys, self.meta.latent_dim)?;
-        let mut h = dense(&y, &self.dec_w1, &self.dec_b1);
-        relu_inplace(&mut h);
-        let mut out = dense(&h, &self.dec_w_out, &self.dec_b_out);
-        match self.meta.likelihood {
-            Likelihood::Bernoulli => {
-                sigmoid_inplace(&mut out);
-                Ok((0..ys.len())
-                    .map(|r| PixelParams::Bernoulli(out.row(r).to_vec()))
-                    .collect())
+        self.decode_batch(&y)
+    }
+
+    /// Recognition net, one packed-GEMM dispatch for the whole batch with
+    /// the ReLU fused into the hidden layer.
+    fn encode_batch(&self, xs: &Matrix) -> Result<PosteriorBatch> {
+        if xs.cols != self.meta.pixels {
+            bail!("input width {} != {}", xs.cols, self.meta.pixels);
+        }
+        let (mu, mut sigma) = if self.reference_gemm {
+            let mut h = dense(xs, &self.enc_w1, &self.enc_b1);
+            relu_inplace(&mut h);
+            (
+                dense(&h, &self.enc_w_mu, &self.enc_b_mu),
+                dense(&h, &self.enc_w_lv, &self.enc_b_lv),
+            )
+        } else {
+            let h = dense_packed(xs, &self.packed.enc_w1, &self.enc_b1, Epilogue::Relu);
+            (
+                dense_packed(&h, &self.packed.enc_w_mu, &self.enc_b_mu, Epilogue::Linear),
+                dense_packed(&h, &self.packed.enc_w_lv, &self.enc_b_lv, Epilogue::Linear),
+            )
+        };
+        // Log-variance head → sigma, in f32 exactly as the seed backend.
+        for v in &mut sigma.data {
+            *v = (0.5 * v.clamp(LOGVAR_MIN, LOGVAR_MAX)).exp();
+        }
+        Ok(PosteriorBatch { mu, sigma })
+    }
+
+    /// Generative net, one packed-GEMM dispatch with the output
+    /// nonlinearity (sigmoid/softplus) fused into the final layer.
+    fn decode_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        if ys.cols != self.meta.latent_dim {
+            bail!("latent width {} != {}", ys.cols, self.meta.latent_dim);
+        }
+        let out_ep = match self.meta.likelihood {
+            Likelihood::Bernoulli => Epilogue::Sigmoid,
+            Likelihood::BetaBinomial => Epilogue::Softplus,
+        };
+        let out = if self.reference_gemm {
+            let mut h = dense(ys, &self.dec_w1, &self.dec_b1);
+            relu_inplace(&mut h);
+            let mut o = dense(&h, &self.dec_w_out, &self.dec_b_out);
+            match out_ep {
+                Epilogue::Sigmoid => sigmoid_inplace(&mut o),
+                Epilogue::Softplus => softplus_inplace(&mut o),
+                _ => unreachable!(),
             }
+            o
+        } else {
+            let h = dense_packed(ys, &self.packed.dec_w1, &self.dec_b1, Epilogue::Relu);
+            dense_packed(&h, &self.packed.dec_w_out, &self.dec_b_out, out_ep)
+        };
+        match self.meta.likelihood {
+            Likelihood::Bernoulli => Ok((0..ys.rows)
+                .map(|r| PixelParams::Bernoulli(out.row(r).to_vec()))
+                .collect()),
             Likelihood::BetaBinomial => {
-                softplus_inplace(&mut out);
                 let p = self.meta.pixels;
-                Ok((0..ys.len())
+                Ok((0..ys.rows)
                     .map(|r| {
                         let row = out.row(r);
                         PixelParams::BetaBinomialAb {
@@ -244,7 +343,11 @@ pub struct PjrtVae {
 
 impl PjrtVae {
     /// Build from `model_config.json` (loads + compiles all variants).
-    pub fn from_config(engine: Arc<Engine>, config: &crate::util::json::Json, name: &str) -> Result<Self> {
+    pub fn from_config(
+        engine: Arc<Engine>,
+        config: &crate::util::json::Json,
+        name: &str,
+    ) -> Result<Self> {
         let m = config
             .get("models")
             .and_then(|ms| ms.get(name))
@@ -465,6 +568,62 @@ mod tests {
                 assert!(beta.iter().all(|&b| b > 0.0));
             }
             other => panic!("wrong params {other:?}"),
+        }
+    }
+
+    /// The packed forward must equal the scalar reference forward
+    /// bit-for-bit, for both likelihood heads — the backend-level face of
+    /// the tensor determinism contract.
+    #[test]
+    fn packed_forward_matches_reference_bitwise() {
+        for (seed, lk) in [(21u64, Likelihood::Bernoulli), (22, Likelihood::BetaBinomial)] {
+            let fast = NativeVae::random(meta(lk), seed);
+            let slow = NativeVae::random(meta(lk), seed).with_reference_gemm(true);
+            let mut rng = crate::util::rng::Rng::new(seed ^ 0xff);
+            let xs: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..16).map(|_| (rng.f64() * 0.9) as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            assert_eq!(fast.posterior(&refs).unwrap(), slow.posterior(&refs).unwrap());
+            let ys: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..4).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let yrefs: Vec<&[f32]> = ys.iter().map(|v| v.as_slice()).collect();
+            let (a, b) = (fast.likelihood(&yrefs).unwrap(), slow.likelihood(&yrefs).unwrap());
+            for (pa, pb) in a.iter().zip(b.iter()) {
+                match (pa, pb) {
+                    (PixelParams::Bernoulli(x), PixelParams::Bernoulli(y)) => assert_eq!(x, y),
+                    (
+                        PixelParams::BetaBinomialAb { alpha: a1, beta: b1 },
+                        PixelParams::BetaBinomialAb { alpha: a2, beta: b2 },
+                    ) => {
+                        assert_eq!(a1, a2);
+                        assert_eq!(b1, b2);
+                    }
+                    other => panic!("param kinds diverged: {other:?}"),
+                }
+            }
+        }
+    }
+
+    /// `encode_batch` rows must not depend on batch grouping: B images in
+    /// one call equal B one-image calls, bitwise.
+    #[test]
+    fn encode_batch_invariant_to_grouping() {
+        let v = NativeVae::random(meta(Likelihood::Bernoulli), 23);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let xs: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..16).map(|_| (rng.f64() < 0.4) as u32 as f32).collect())
+            .collect();
+        let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+        let batch = v.encode_batch(&Matrix::new(7, 16, flat)).unwrap();
+        for (r, x) in xs.iter().enumerate() {
+            let one = v
+                .encode_batch(&Matrix::new(1, 16, x.clone()))
+                .unwrap();
+            let (mu, sigma) = batch.row(r);
+            assert_eq!(one.mu.row(0), mu, "mu row {r}");
+            assert_eq!(one.sigma.row(0), sigma, "sigma row {r}");
         }
     }
 

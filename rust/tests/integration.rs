@@ -144,6 +144,65 @@ fn clean_bits_replay_exactly_through_from_message() {
     assert_eq!(resumed.to_message(), straight.to_message());
 }
 
+/// Golden roundtrip (ISSUE 3): container outputs are UNCHANGED by the
+/// batched/packed inference rebuild. The packed GEMM accumulates every
+/// output element in the seed `dense()` order (bias first, then `k`
+/// ascending — see `model::tensor` module docs), so no golden vector
+/// needed regenerating: the scalar reference pipeline, kept as
+/// `with_reference_gemm(true)`, must produce byte-identical containers,
+/// and both must decode losslessly.
+#[test]
+fn golden_containers_unchanged_by_batched_inference() {
+    for (seed, likelihood) in [(41u64, Likelihood::Bernoulli), (42, Likelihood::BetaBinomial)] {
+        let meta = || ModelMeta {
+            name: "golden".into(),
+            pixels: 49,
+            latent_dim: 7,
+            hidden: 14,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        };
+        let packed = NativeVae::random(meta(), seed);
+        let reference = NativeVae::random(meta(), seed).with_reference_gemm(true);
+        let levels = match likelihood {
+            Likelihood::Bernoulli => 2u64,
+            Likelihood::BetaBinomial => 256,
+        };
+        let mut rng = Rng::new(seed ^ 0xD00D);
+        let images: Vec<Vec<u8>> = (0..90)
+            .map(|_| (0..49).map(|_| rng.below(levels) as u8).collect())
+            .collect();
+
+        let cp = VaeCodec::new(&packed, BbAnsConfig::default()).unwrap();
+        let cr = VaeCodec::new(&reference, BbAnsConfig::default()).unwrap();
+
+        // BBC1: one sequential chain.
+        let (ans_p, _) = cp.encode_dataset(&images).unwrap();
+        let (ans_r, _) = cr.encode_dataset(&images).unwrap();
+        assert_eq!(
+            ans_p.to_message(),
+            ans_r.to_message(),
+            "seed {seed}: packed chain diverged from the scalar reference"
+        );
+
+        // BBC2: chunk-parallel container, byte-for-byte.
+        let pc_p = ParallelContainer::encode_with(&cp, &images, 3).unwrap();
+        let pc_r = ParallelContainer::encode_with(&cr, &images, 3).unwrap();
+        assert_eq!(
+            pc_p.to_bytes(),
+            pc_r.to_bytes(),
+            "seed {seed}: packed container bytes diverged"
+        );
+
+        // Cross-decode: reference-encoded bytes decode under the packed
+        // backend (the property that lets deployed decoders upgrade).
+        let parsed = ParallelContainer::from_bytes(&pc_r.to_bytes()).unwrap();
+        assert_eq!(parsed.decode_with(&cp).unwrap(), images);
+        let mut ans = Ans::from_message(&ans_r.to_message(), cp.cfg.clean_seed);
+        assert_eq!(cp.decode_dataset(&mut ans, images.len()).unwrap(), images);
+    }
+}
+
 #[test]
 fn image_and_sequence_codecs_share_one_stack() {
     // BB-ANS image coding and HMM sequence coding interleave on one ANS

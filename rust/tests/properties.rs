@@ -4,12 +4,13 @@
 
 use bbans::ans::interleaved::InterleavedAns;
 use bbans::ans::{Ans, EntropyCoder, Interval, PreparedInterval, SymbolTable};
+use bbans::bbans::container::ParallelContainer;
 use bbans::bbans::{BbAnsConfig, VaeCodec};
 use bbans::codecs::categorical::Categorical;
 use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use bbans::codecs::quantize::DecodeLut;
 use bbans::codecs::SymbolCodec;
-use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
+use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::prop::{check_coders, check_coders_wide};
 use bbans::util::rng::Rng;
 
@@ -53,6 +54,79 @@ fn bbans_roundtrip_sweep() {
         let (mut ans, _) = codec.encode_dataset(&images).unwrap();
         let decoded = codec.decode_dataset(&mut ans, n_imgs).unwrap();
         assert_eq!(decoded, images, "trial {trial}");
+    }
+}
+
+/// Tentpole property (ISSUE 3): batched inference and the pipelined /
+/// chunk-pooled encode paths are bit-identical to the B=1 sequential
+/// path for EVERY batch size and worker count — the packed GEMM and a
+/// fixed block order make the posterior parameters row-independent, so
+/// neither batching nor thread count can change a single coded bit.
+#[test]
+fn batched_inference_bit_identical_across_batch_and_workers() {
+    let mut rng = Rng::new(0xba7c);
+    for (trial, likelihood) in [Likelihood::Bernoulli, Likelihood::BetaBinomial]
+        .into_iter()
+        .enumerate()
+    {
+        let meta = ModelMeta {
+            name: format!("batch{trial}"),
+            pixels: 30,
+            latent_dim: 5,
+            hidden: 11,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 500 + trial as u64);
+        let cfg = BbAnsConfig::default();
+        let codec = VaeCodec::new(&backend, cfg).unwrap();
+        let levels = match likelihood {
+            Likelihood::Bernoulli => 2u64,
+            Likelihood::BetaBinomial => 256,
+        };
+        // > 2*NN_CHUNK images so the pipelined encode spans several
+        // posterior blocks.
+        let images: Vec<Vec<u8>> = (0..150)
+            .map(|_| (0..30).map(|_| rng.below(levels) as u8).collect())
+            .collect();
+
+        // Posterior params: full batch vs one-image calls, bitwise.
+        let scaled: Vec<Vec<f32>> = images.iter().map(|i| codec.scale_image(i)).collect();
+        let refs: Vec<&[f32]> = scaled.iter().map(|v| v.as_slice()).collect();
+        let full = backend.posterior(&refs).unwrap();
+        for (i, x) in scaled.iter().enumerate() {
+            let one = backend.posterior(&[x.as_slice()]).unwrap();
+            assert_eq!(one[0], full[i], "trial {trial} image {i}");
+        }
+
+        // One sequential chain vs the pipelined encode at several worker
+        // counts: identical serialized message.
+        let (base, _) = codec.encode_dataset(&images).unwrap();
+        let base_msg = base.to_message();
+        for workers in [1usize, 2, 5] {
+            let mut ans = Ans::new(cfg.clean_seed);
+            codec
+                .encode_dataset_pipelined(&mut ans, &images, workers)
+                .unwrap();
+            assert_eq!(
+                ans.to_message(),
+                base_msg,
+                "trial {trial}: pipelined encode with {workers} workers diverged"
+            );
+        }
+
+        // Chunk-parallel container: the worker pool never changes bytes,
+        // and every pool size decodes losslessly.
+        let c1 = ParallelContainer::encode_with_workers(&codec, &images, 4, 1).unwrap();
+        for workers in [2usize, 8] {
+            let c = ParallelContainer::encode_with_workers(&codec, &images, 4, workers).unwrap();
+            assert_eq!(
+                c.to_bytes(),
+                c1.to_bytes(),
+                "trial {trial}: chunked encode with {workers} workers diverged"
+            );
+        }
+        assert_eq!(c1.decode_with_workers(&codec, 3).unwrap(), images);
     }
 }
 
