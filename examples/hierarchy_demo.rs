@@ -1,0 +1,74 @@
+//! Hierarchical latents demo: naive BB-ANS vs the Bit-Swap schedule.
+//!
+//! ```sh
+//! cargo run --release --example hierarchy_demo [N]
+//! ```
+//!
+//! Fully artifact-free: the L-layer VAE is derived deterministically from
+//! a seed, the `BBC3` container records that seed plus the model geometry,
+//! and the decode side rebuilds the exact backend from the header alone.
+//! The table shows the subsystem's point — the **initial bits** a fresh
+//! chain borrows stay flat under Bit-Swap while the naive schedule's grow
+//! with depth.
+
+use bbans::bbans::container::HierContainer;
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
+use bbans::bbans::BbAnsConfig;
+use bbans::data::synth;
+use bbans::model::hierarchy::{HierMeta, HierVae};
+use bbans::model::Likelihood;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let images = synth::binarize(&synth::digits(n, 5), 6).images;
+
+    println!("=== hierarchical bits-back: naive vs Bit-Swap over {n} synthetic digits ===\n");
+    println!(
+        "{:<4} {:<9} {:>10} {:>14} {:>12}",
+        "L", "schedule", "bits/dim", "initial bits", "bytes"
+    );
+    println!("{}", "-".repeat(54));
+
+    for layers in 1..=3usize {
+        let dims: Vec<usize> = (0..layers).map(|l| 32usize >> l).collect();
+        let meta = HierMeta {
+            name: format!("hier{layers}"),
+            pixels: 784,
+            dims,
+            hidden: 64,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 0xB17);
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule)?;
+            let initial = codec.initial_bits(&images[0])?;
+            let container = HierContainer::encode_with(&codec, &images, 2)?;
+            let bytes = container.to_bytes();
+
+            // Round-trip through the serialized bytes and a backend
+            // rebuilt purely from the header.
+            let parsed = HierContainer::from_bytes(&bytes)?;
+            let rebuilt = parsed.build_backend()?;
+            let codec2 = HierCodec::new(&rebuilt, parsed.cfg, parsed.schedule)?;
+            anyhow::ensure!(parsed.decode_lockstep(&codec2)? == images, "lossless roundtrip");
+
+            println!(
+                "{:<4} {:<9} {:>10.4} {:>14} {:>12}",
+                layers,
+                schedule.name(),
+                container.payload_bits_per_dim(),
+                initial,
+                bytes.len()
+            );
+        }
+    }
+    println!(
+        "\nAll streams decoded losslessly via header-rebuilt models. Bit-Swap's\n\
+         initial-bits cost stays ~flat as L grows; the naive schedule pays the\n\
+         sum of every layer's posterior entropy before its first push."
+    );
+    Ok(())
+}

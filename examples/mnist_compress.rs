@@ -12,22 +12,29 @@
 
 use bbans::baselines::standard_suite;
 use bbans::bbans::{BbAnsConfig, VaeCodec};
-use bbans::data::load_split;
-use bbans::model::vae::load_native;
-use bbans::model::Backend;
+use bbans::data::{load_split, synth};
+use bbans::model::vae::{load_native, NativeVae};
+use bbans::model::{Backend, Likelihood, ModelMeta};
 use bbans::runtime::{artifacts_available, default_artifact_dir};
 use bbans::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifact_dir();
-    if !artifacts_available(&dir) {
-        eprintln!("artifacts not found — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let n: usize = std::env::args()
+    // Without an artifact bundle the pipeline still runs end to end on
+    // seeded random models + synthetic digits (CI's example-smoke job):
+    // the lossless checks are as strict, only the rates are illustrative.
+    let synthetic = !artifacts_available(&dir);
+    let mut n: usize = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(10_000);
+    if synthetic {
+        n = n.min(512);
+        eprintln!(
+            "artifacts not found — using seeded random models on {n} synthetic digits \
+             (rates are illustrative, lossless checks are real)"
+        );
+    }
 
     println!("=== Table 2 reproduction: compression rates in bits/dim (n = {n}) ===\n");
 
@@ -46,9 +53,36 @@ fn main() -> anyhow::Result<()> {
     for (row, (model, binarized, pixel_prec)) in
         [("bin", true, 16u32), ("full", false, 18u32)].iter().enumerate()
     {
-        let ds = load_split(&dir, "test", *binarized)?.subset(n);
+        let ds = if synthetic {
+            let base = synth::digits(n, 33);
+            if *binarized {
+                synth::binarize(&base, 34)
+            } else {
+                base
+            }
+        } else {
+            load_split(&dir, "test", *binarized)?.subset(n)
+        };
         let images = ds.images.clone();
-        let backend = load_native(&dir, model)?;
+        let backend = if synthetic {
+            NativeVae::random(
+                ModelMeta {
+                    name: model.to_string(),
+                    pixels: 784,
+                    latent_dim: 20,
+                    hidden: 50,
+                    likelihood: if *binarized {
+                        Likelihood::Bernoulli
+                    } else {
+                        Likelihood::BetaBinomial
+                    },
+                    test_elbo_bpd: f64::NAN,
+                },
+                40 + row as u64,
+            )
+        } else {
+            load_native(&dir, model)?
+        };
         let cfg = BbAnsConfig {
             pixel_prec: *pixel_prec,
             ..Default::default()
@@ -114,10 +148,17 @@ fn main() -> anyhow::Result<()> {
             .unwrap_or((f64::NAN, f64::NAN));
         println!("{name:<16}  {pb:>7.2} {ob:>8.3}  {pf:>7.2} {of:>8.3}");
     }
-    println!(
-        "\nShape check: BB-ANS beats every baseline on both datasets, and its\n\
-         rate sits within ~1% of the trained model's negative test ELBO —\n\
-         the paper's two headline claims."
-    );
+    if synthetic {
+        println!(
+            "\n(untrained random models: the rate columns are illustrative only;\n\
+             every stream above decoded losslessly.)"
+        );
+    } else {
+        println!(
+            "\nShape check: BB-ANS beats every baseline on both datasets, and its\n\
+             rate sits within ~1% of the trained model's negative test ELBO —\n\
+             the paper's two headline claims."
+        );
+    }
     Ok(())
 }

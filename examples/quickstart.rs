@@ -6,23 +6,42 @@
 //!
 //! Demonstrates the core public API: load a backend, build a [`VaeCodec`],
 //! chain-encode a dataset, serialize the container, decode it back.
+//!
+//! Runs without artifacts too (CI's example-smoke job relies on this): a
+//! seeded random model over synthetic digits stands in — same API, same
+//! lossless guarantee, illustrative rates only.
 
 use bbans::bbans::{container::Container, BbAnsConfig, VaeCodec};
-use bbans::data::load_split;
-use bbans::model::vae::load_native;
-use bbans::model::Backend;
+use bbans::data::{load_split, synth};
+use bbans::model::vae::{load_native, NativeVae};
+use bbans::model::{Backend, Likelihood, ModelMeta};
 use bbans::runtime::{artifacts_available, default_artifact_dir};
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifact_dir();
-    if !artifacts_available(&dir) {
-        eprintln!("artifacts not found — run `make artifacts` first");
-        std::process::exit(1);
-    }
 
     // 1. A trained VAE backend (pure-Rust forward pass; swap in
-    //    `PjrtVae::from_config` for the PJRT/XLA path).
-    let backend = load_native(&dir, "bin")?;
+    //    `PjrtVae::from_config` for the PJRT/XLA path), plus some
+    //    binarized test images — or a deterministic stand-in when no
+    //    artifact bundle is around.
+    let (backend, images) = if artifacts_available(&dir) {
+        let backend = load_native(&dir, "bin")?;
+        let ds = load_split(&dir, "test", true)?;
+        let images: Vec<Vec<u8>> = ds.images.iter().take(100).cloned().collect();
+        (backend, images)
+    } else {
+        eprintln!("artifacts not found — using a seeded random model on synthetic digits");
+        let meta = ModelMeta {
+            name: "bin".into(),
+            pixels: 784,
+            latent_dim: 20,
+            hidden: 50,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 7);
+        (backend, synth::binarize(&synth::digits(100, 1), 2).images)
+    };
     println!(
         "model 'bin': {} pixels, {}-dim latent, test ELBO {:.4} bits/dim",
         backend.meta().pixels,
@@ -32,13 +51,9 @@ fn main() -> anyhow::Result<()> {
 
     // 2. The BB-ANS codec.
     let codec = VaeCodec::new(&backend, BbAnsConfig::default())?;
-
-    // 3. Some binarized test images.
-    let ds = load_split(&dir, "test", true)?;
-    let images: Vec<Vec<u8>> = ds.images.iter().take(100).cloned().collect();
     let raw_bits = images.len() * 784;
 
-    // 4. Chain-encode.
+    // 3. Chain-encode.
     let (ans, stats) = codec.encode_dataset(&images)?;
     println!(
         "clean bits used to start the chain: {}",
@@ -64,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     let mean_net: f64 = stats.iter().map(|s| s.net_bits).sum::<f64>() / raw_bits as f64;
     println!("mean net cost per pixel (amortized): {mean_net:.4} bits");
 
-    // 5. Decode from the serialized container and verify.
+    // 4. Decode from the serialized container and verify.
     let parsed = Container::from_bytes(&bytes)?;
     let mut ans = bbans::ans::Ans::from_message(&parsed.message, parsed.cfg.clean_seed);
     let decoded = codec.decode_dataset(&mut ans, parsed.num_images as usize)?;

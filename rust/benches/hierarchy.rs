@@ -1,0 +1,86 @@
+//! Hierarchical-latent benchmarks: naive BB-ANS vs Bit-Swap over the
+//! L-layer VAE, L ∈ {1, 2, 3} — rate (bits/dim), chained throughput
+//! (img/s), and the **initial-bits** cost of starting a fresh chain, which
+//! is the quantity the Bit-Swap schedule exists to shrink.
+//!
+//! Emits `BENCH_hierarchy.json` via `--json` / `BBANS_BENCH_JSON` (same
+//! trajectory format as the other targets, with the rates and initial-bit
+//! measurements under `"annotations"`). The run **asserts** the
+//! subsystem's acceptance criterion — Bit-Swap initial bits strictly below
+//! the naive schedule's for L ≥ 2 — so CI's quick-bench job enforces it on
+//! every push.
+
+use bbans::ans::Ans;
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
+use bbans::bbans::BbAnsConfig;
+use bbans::bench::{black_box, table_header, Bench};
+use bbans::data::synth;
+use bbans::model::hierarchy::{HierMeta, HierVae};
+use bbans::model::Likelihood;
+
+fn main() {
+    table_header("hierarchical latents: naive BB-ANS vs Bit-Swap, L in {1,2,3}");
+    let mut bench = Bench::new();
+    let fast = std::env::var_os("BBANS_BENCH_FAST").is_some();
+    let n_images = if fast { 24 } else { 96 };
+
+    // Binarized synthetic digits (784 pixels, Bernoulli likelihood) — the
+    // artifact-free stand-in the test suites use.
+    let images = synth::binarize(&synth::digits(n_images, 11), 12).images;
+
+    for layers in 1..=3usize {
+        let dims: Vec<usize> = (0..layers).map(|l| 32usize >> l).collect();
+        let meta = HierMeta {
+            name: format!("hier{layers}"),
+            pixels: 784,
+            dims,
+            hidden: 64,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 77);
+        let mut initial = [0u64; 2];
+
+        for (i, schedule) in [Schedule::Naive, Schedule::BitSwap].into_iter().enumerate() {
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+
+            // Rate and chain-startup cost (measured once, not timed).
+            let (ans, _) = codec.encode_dataset(&images).unwrap();
+            let bpd = ans.frac_bit_len() / (images.len() as f64 * 784.0);
+            initial[i] = codec.initial_bits(&images[0]).unwrap();
+            let tag = format!("hier/L{layers}/{}", schedule.name());
+            bench.annotate(&format!("{tag}/bits_per_dim"), bpd);
+            bench.annotate(&format!("{tag}/initial_bits"), initial[i] as f64);
+            println!(
+                "    L={layers} {:>7}: {bpd:.4} bits/dim, {} initial bits",
+                schedule.name(),
+                initial[i]
+            );
+
+            // Chained encode / decode throughput (L=1 is the single-layer
+            // baseline the deeper chains compare against).
+            bench.run(&format!("{tag} encode"), images.len() as f64, || {
+                let (a, _) = codec.encode_dataset(&images).unwrap();
+                black_box(a.stream_len());
+            });
+            let msg = ans.to_message();
+            bench.run(&format!("{tag} decode"), images.len() as f64, || {
+                let mut a = Ans::from_message(&msg, codec.cfg.clean_seed);
+                let out = codec.decode_dataset(&mut a, images.len()).unwrap();
+                black_box(out.len());
+            });
+        }
+
+        // Acceptance criterion: interleaving must strictly shrink the
+        // chain-startup cost once there is more than one layer.
+        if layers >= 2 {
+            assert!(
+                initial[1] < initial[0],
+                "L={layers}: Bit-Swap initial bits {} must be strictly below naive {}",
+                initial[1],
+                initial[0]
+            );
+        }
+    }
+
+    bench.finish("hierarchy");
+}

@@ -62,7 +62,7 @@ fn main() {
     let packed = NativeVae::random(meta.clone(), 7);
     let scalar = NativeVae::random(meta, 7).with_reference_gemm(true);
 
-    let max_b = 256usize;
+    let max_b = 512usize;
     // MNIST-like sparse images (scaled) and dense latents.
     let xs = rand_matrix(&mut rng, max_b, 784, 0.8);
     let ys = rand_matrix(&mut rng, max_b, 40, 0.0);
@@ -81,7 +81,10 @@ fn main() {
             })
             .units_per_sec()
     };
-    for &b in &[1usize, 16, 64, 256] {
+    // Autoscaling sweep (ROADMAP): walk the batch axis to find the knee
+    // where forward throughput saturates, then suggest NN_CHUNK from it.
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for &b in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
         let (xb, yb) = (sub(&xs, b, 784), sub(&ys, b, 40));
         let m = bench.run(&format!("model/forward B={b} packed"), b as f64, || {
             let p = packed.encode_batch(&xb).unwrap();
@@ -93,7 +96,24 @@ fn main() {
             m.units_per_sec(),
             m.units_per_sec() / scalar_b1
         );
+        sweep.push((b, m.units_per_sec()));
     }
+    let best = sweep.iter().map(|&(_, r)| r).fold(0.0f64, f64::max);
+    // Knee = smallest batch within 10% of peak throughput; larger batches
+    // only add latency and memory. NN_CHUNK should sit at or past it so
+    // the posterior-precompute blocks dispatch at saturated throughput.
+    let knee = sweep
+        .iter()
+        .find(|&&(_, r)| r >= 0.9 * best)
+        .map(|&(b, _)| b)
+        .unwrap_or(bbans::bbans::NN_CHUNK);
+    let suggest = knee.max(16);
+    println!(
+        "\n    throughput knee at B={knee}; suggested NN_CHUNK = {suggest} (current {})",
+        bbans::bbans::NN_CHUNK
+    );
+    bench.annotate("model/throughput_knee_batch", knee as f64);
+    bench.annotate("model/suggested_nn_chunk", suggest as f64);
 
     bench.finish("model");
 }

@@ -90,6 +90,16 @@ impl Ans {
         debug_assert!(prec <= MAX_PREC);
         debug_assert!(freq > 0, "zero-frequency symbol");
         debug_assert!((start as u64 + freq as u64) <= (1u64 << prec));
+        if freq as u64 == 1u64 << prec {
+            // Full-mass symbol (single-symbol alphabets, e.g. a one-state
+            // HMM's latent): zero bits of information, and the textbook
+            // update below is the exact identity (start must be 0, so
+            // `(x / 2^prec) << prec | x % 2^prec == x`) — but its
+            // renormalization threshold `freq << (64 - prec)` would wrap
+            // to 0 and renormalize forever. Take the exact no-op early;
+            // the decode side (`update`) is naturally the identity.
+            return;
+        }
         // Renormalize: emit words until the push keeps head < 2^64.
         let limit = (freq as u64) << (64 - prec);
         while self.head >= limit {
@@ -443,6 +453,27 @@ mod tests {
         let bytes = msg.to_bytes();
         assert!(AnsMessage::from_bytes(&bytes[..bytes.len() - 1]).is_err());
         assert!(AnsMessage::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn full_mass_symbol_is_free_and_invertible() {
+        // A freq = 2^prec symbol (single-symbol alphabet) carries zero
+        // bits: pushes leave the coder untouched and pops return it with
+        // the state unchanged.
+        let mut ans = Ans::new(3);
+        ans.push(5, 3, 8); // some real content first
+        let before = ans.to_message();
+        for prec in [1u32, 8, 16, 24] {
+            for _ in 0..100 {
+                ans.push(0, 1u32 << prec, prec);
+            }
+            assert_eq!(ans.to_message(), before, "prec {prec}");
+            for _ in 0..100 {
+                let got = ans.pop_with(prec, |cf| (cf, 0, 1u32 << prec));
+                assert!((got as u64) < (1u64 << prec));
+            }
+            assert_eq!(ans.to_message(), before, "prec {prec} after pops");
+        }
     }
 
     #[test]

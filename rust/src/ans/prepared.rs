@@ -71,6 +71,16 @@ impl PreparedInterval {
         debug_assert!(prec >= 1 && prec <= MAX_PREC);
         debug_assert!(freq > 0, "zero-frequency symbol");
         debug_assert!((start as u64 + freq as u64) <= (1u64 << prec));
+        // A full-mass symbol (freq == 2^prec, single-symbol alphabets) is
+        // a coder no-op that this representation cannot express: `limit`
+        // below would wrap to 0 and `push_raw` would renormalize forever.
+        // `Ans::push` handles it as an explicit no-op; producers of
+        // prepared batches (`Categorical::encode_all_scratch`) skip such
+        // alphabets entirely. Fail fast here rather than hang.
+        debug_assert!(
+            (freq as u64) < (1u64 << prec),
+            "full-mass symbol cannot be prepared; encode via Ans::push"
+        );
         let m = 1u64 << prec;
         let limit = (freq as u64) << (64 - prec);
         if freq == 1 {

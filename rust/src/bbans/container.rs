@@ -9,14 +9,40 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::hierarchy::{HierCodec, Schedule};
 use super::{BbAnsConfig, VaeCodec};
 use crate::ans::AnsMessage;
-use crate::model::Backend;
+use crate::model::hierarchy::{HierBackend, HierMeta, HierVae};
+use crate::model::{Backend, Likelihood};
 
 pub const MAGIC: &[u8; 4] = b"BBC1";
 
 /// Magic of the chunk-parallel container format.
 pub const MAGIC_PARALLEL: &[u8; 4] = b"BBC2";
+
+/// Magic of the hierarchical-latent (Bit-Swap) container format.
+pub const MAGIC_HIER: &[u8; 4] = b"BBC3";
+
+/// Admission caps applied when parsing ANY container: headers are
+/// untrusted on the serving path, and `num_images`/`pixels` directly size
+/// decode work and output memory. Generous for every real dataset (full
+/// ImageNet64 is ~1.2M images / ~4.9G pixels) while keeping a crafted
+/// header's damage bounded; serving deployments that want tighter
+/// admission control should gate above this layer.
+const MAX_IMAGES: u64 = 1 << 24;
+const MAX_TOTAL_PIXELS: u64 = 1 << 32;
+
+/// Shared header sanity check: total image count and total decoded bytes.
+fn check_decode_budget(num_images: u64, pixels: u64) -> Result<()> {
+    if num_images > MAX_IMAGES {
+        bail!("implausible image count {num_images} (limit {MAX_IMAGES})");
+    }
+    let total = num_images.saturating_mul(pixels);
+    if total > MAX_TOTAL_PIXELS {
+        bail!("container would decode {total} pixels (limit {MAX_TOTAL_PIXELS})");
+    }
+    Ok(())
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Container {
@@ -55,12 +81,13 @@ impl Container {
             *pos += n;
             Ok(s)
         };
-        if take(&mut pos, 4)? != MAGIC {
-            bail!("bad container magic");
+        let magic = take(&mut pos, 4)?;
+        if magic != MAGIC {
+            bail!("bad container magic {magic:02x?} (want {MAGIC:02x?} = \"BBC1\")");
         }
         let version = take(&mut pos, 1)?[0];
         if version != 1 {
-            bail!("unsupported container version {version}");
+            bail!("unsupported BBC1 container version {version} (this build reads version 1)");
         }
         let model = read_str(b, &mut pos).context("model name")?;
         let backend_id = read_str(b, &mut pos).context("backend id")?;
@@ -70,6 +97,7 @@ impl Container {
         let clean_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
         let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
         let pixels = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        check_decode_budget(num_images as u64, pixels as u64)?;
         let message = AnsMessage::from_bytes(&b[pos..]).context("ANS payload")?;
         let cfg = BbAnsConfig {
             latent_bits,
@@ -273,12 +301,15 @@ impl ParallelContainer {
             *pos += n;
             Ok(s)
         };
-        if take(&mut pos, 4)? != MAGIC_PARALLEL {
-            bail!("bad parallel-container magic");
+        let magic = take(&mut pos, 4)?;
+        if magic != MAGIC_PARALLEL {
+            bail!(
+                "bad parallel-container magic {magic:02x?} (want {MAGIC_PARALLEL:02x?} = \"BBC2\")"
+            );
         }
         let version = take(&mut pos, 1)?[0];
         if version != 2 {
-            bail!("unsupported parallel-container version {version}");
+            bail!("unsupported BBC2 container version {version} (this build reads version 2)");
         }
         let model = read_str(b, &mut pos).context("model name")?;
         let backend_id = read_str(b, &mut pos).context("backend id")?;
@@ -297,6 +328,8 @@ impl ParallelContainer {
             let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
             table.push((num_images, len));
         }
+        let total: u64 = table.iter().map(|&(n, _)| n as u64).sum();
+        check_decode_budget(total, pixels as u64)?;
         let mut chunks = Vec::with_capacity(n_chunks);
         for (ci, (num_images, len)) in table.into_iter().enumerate() {
             let payload = take(&mut pos, len)?;
@@ -335,6 +368,360 @@ impl ParallelContainer {
     /// container.
     pub fn bits_per_dim(&self) -> f64 {
         (self.byte_len() as f64 * 8.0) / (self.num_images() as f64 * self.pixels as f64)
+    }
+}
+
+/// Hierarchical-latent container (format `BBC3`): chunk-parallel like
+/// `BBC2`, but the stream was produced by an L-layer [`HierCodec`] under a
+/// recorded coding [`Schedule`]. The header is **self-describing**: it
+/// carries the full model geometry (layer dims, hidden width, likelihood)
+/// plus the deterministic weight seed, so a decoder can rebuild the exact
+/// backend with [`HierContainer::build_backend`] without an artifact
+/// bundle (weight seed 0 is reserved for trained artifacts, loaded by
+/// model name once those exist).
+///
+/// Header layout (all little-endian):
+///
+/// ```text
+/// magic "BBC3" | version u8 | model str | backend_id str
+/// schedule u8 | latent_bits u8 | posterior_prec u8 | pixel_prec u8
+/// clean_seed u64 | likelihood u8 | hidden u32 | weight_seed u64
+/// pixels u32 | n_layers u8 | per layer: dim u32
+/// num_chunks u32
+/// per chunk: num_images u32, payload_len u64     (the offset table)
+/// concatenated chunk payloads (AnsMessage bytes)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierContainer {
+    pub model: String,
+    pub backend_id: String,
+    pub schedule: Schedule,
+    pub cfg: BbAnsConfig,
+    pub likelihood: Likelihood,
+    pub hidden: u32,
+    pub weight_seed: u64,
+    pub pixels: u32,
+    /// Latent widths bottom-up (`dims[0]` next to the data).
+    pub dims: Vec<u32>,
+    pub chunks: Vec<ChunkEntry>,
+}
+
+impl HierContainer {
+    /// Encode `images` into `n_chunks` independent hierarchical chains on
+    /// the default worker pool.
+    pub fn encode_with<B: HierBackend + Sync + ?Sized>(
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<Self> {
+        Self::encode_with_workers(codec, images, n_chunks, super::default_workers())
+    }
+
+    /// [`Self::encode_with`] pinning the worker-pool size (`workers` is a
+    /// machine knob and never changes the produced bytes).
+    pub fn encode_with_workers<B: HierBackend + Sync + ?Sized>(
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        let meta = codec.backend().meta();
+        let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
+        Ok(Self {
+            model: meta.name.clone(),
+            backend_id: codec.backend().backend_id(),
+            schedule: codec.schedule,
+            cfg: codec.cfg,
+            likelihood: meta.likelihood,
+            hidden: meta.hidden as u32,
+            weight_seed: codec.backend().weight_seed(),
+            pixels: meta.pixels as u32,
+            dims: meta.dims.iter().map(|&d| d as u32).collect(),
+            chunks,
+        })
+    }
+
+    /// Rebuild the exact backend this container was encoded with, from the
+    /// self-describing header.
+    pub fn build_backend(&self) -> Result<HierVae> {
+        if self.weight_seed == 0 {
+            bail!(
+                "container names artifact-backed hierarchical model '{}' (weight seed 0); \
+                 loading trained hierarchical artifacts is not wired yet",
+                self.model
+            );
+        }
+        // Bound the total weight allocation before constructing anything:
+        // the header fields are attacker-controlled on the serving path,
+        // and the per-field caps in `from_bytes` still admit combinations
+        // (pixels × hidden) far beyond any real model.
+        let heads: u64 = match self.likelihood {
+            Likelihood::Bernoulli => 1,
+            Likelihood::BetaBinomial => 2,
+        };
+        let h = self.hidden as u64;
+        let mut params: u64 = 0;
+        // `heads_out` = number of h×out head matrices: every Gaussian
+        // conditional has TWO (mu and logvar); the pixel head has one.
+        let mut add = |input: u64, out: u64, heads_out: u64| {
+            params = params
+                .saturating_add(input.saturating_mul(h))
+                .saturating_add(heads_out.saturating_mul(h.saturating_mul(out)));
+        };
+        for (l, &d) in self.dims.iter().enumerate() {
+            let input = if l == 0 { self.pixels as u64 } else { self.dims[l - 1] as u64 };
+            add(input, d as u64, 2); // recognition conditional
+            if l + 1 < self.dims.len() {
+                add(self.dims[l + 1] as u64, d as u64, 2); // generative conditional
+            }
+        }
+        add(self.dims[0] as u64, (self.pixels as u64).saturating_mul(heads), 1);
+        const MAX_PARAMS: u64 = 1 << 26; // 256 MiB of f32 weights
+        if params > MAX_PARAMS {
+            bail!(
+                "container model needs {params} weight parameters (limit {MAX_PARAMS}); \
+                 refusing to build"
+            );
+        }
+        let meta = HierMeta {
+            name: self.model.clone(),
+            pixels: self.pixels as usize,
+            dims: self.dims.iter().map(|&d| d as usize).collect(),
+            hidden: self.hidden as usize,
+            likelihood: self.likelihood,
+        };
+        let backend = HierVae::random(meta, self.weight_seed);
+        if backend.backend_id() != self.backend_id {
+            bail!(
+                "rebuilt backend '{}' does not match container backend '{}'",
+                backend.backend_id(),
+                self.backend_id
+            );
+        }
+        Ok(backend)
+    }
+
+    /// Lock-step decode (single thread, cross-chunk batched net calls —
+    /// the coordinator's serving loop for this format).
+    pub fn decode_lockstep<B: HierBackend + ?Sized>(
+        &self,
+        codec: &HierCodec<'_, B>,
+    ) -> Result<Vec<Vec<u8>>> {
+        self.validate_for(codec)?;
+        codec.decode_chunks_lockstep(&self.chunks)
+    }
+
+    /// Thread-parallel decode across chunks.
+    pub fn decode_with_workers<B: HierBackend + Sync + ?Sized>(
+        &self,
+        codec: &HierCodec<'_, B>,
+        workers: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        self.validate_for(codec)?;
+        codec.decode_dataset_chunked_with_workers(&self.chunks, workers)
+    }
+
+    /// [`Self::decode_with_workers`] on the default pool.
+    pub fn decode_with<B: HierBackend + Sync + ?Sized>(
+        &self,
+        codec: &HierCodec<'_, B>,
+    ) -> Result<Vec<Vec<u8>>> {
+        self.validate_for(codec)?;
+        codec.decode_dataset_chunked(&self.chunks)
+    }
+
+    fn validate_for<B: HierBackend + ?Sized>(&self, codec: &HierCodec<'_, B>) -> Result<()> {
+        let meta = codec.backend().meta();
+        if self.pixels as usize != meta.pixels {
+            bail!(
+                "container has {}-pixel images, model wants {}",
+                self.pixels,
+                meta.pixels
+            );
+        }
+        let dims: Vec<u32> = meta.dims.iter().map(|&d| d as u32).collect();
+        if self.dims != dims {
+            bail!(
+                "container layer dims {:?} do not match the model's {:?}",
+                self.dims,
+                dims
+            );
+        }
+        if self.cfg != codec.cfg {
+            bail!("decode codec config does not match the container header");
+        }
+        if self.schedule != codec.schedule {
+            bail!(
+                "container was coded with the {} schedule, codec uses {}",
+                self.schedule.name(),
+                codec.schedule.name()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn num_images(&self) -> u32 {
+        self.chunks.iter().map(|c| c.num_images).sum()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_HIER);
+        out.push(1u8); // version
+        push_str(&mut out, &self.model);
+        push_str(&mut out, &self.backend_id);
+        out.push(self.schedule.tag());
+        out.push(self.cfg.latent_bits as u8);
+        out.push(self.cfg.posterior_prec as u8);
+        out.push(self.cfg.pixel_prec as u8);
+        out.extend_from_slice(&self.cfg.clean_seed.to_le_bytes());
+        out.push(self.likelihood.tag());
+        out.extend_from_slice(&self.hidden.to_le_bytes());
+        out.extend_from_slice(&self.weight_seed.to_le_bytes());
+        out.extend_from_slice(&self.pixels.to_le_bytes());
+        assert!(
+            !self.dims.is_empty() && self.dims.len() <= 255,
+            "layer count out of range"
+        );
+        out.push(self.dims.len() as u8);
+        for &d in &self.dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        let payloads: Vec<Vec<u8>> = self.chunks.iter().map(|c| c.message.to_bytes()).collect();
+        for (c, p) in self.chunks.iter().zip(&payloads) {
+            out.extend_from_slice(&c.num_images.to_le_bytes());
+            out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        }
+        for p in &payloads {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        // `pos <= b.len()` is an invariant, so the bounds check cannot
+        // wrap (see ParallelContainer::from_bytes).
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if n > b.len() - *pos {
+                bail!("hierarchical container truncated at {} (+{n})", *pos);
+            }
+            let s = &b[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let magic = take(&mut pos, 4)?;
+        if magic != MAGIC_HIER {
+            bail!(
+                "bad hierarchical-container magic {magic:02x?} (want {MAGIC_HIER:02x?} = \"BBC3\")"
+            );
+        }
+        let version = take(&mut pos, 1)?[0];
+        if version != 1 {
+            bail!("unsupported BBC3 container version {version} (this build reads version 1)");
+        }
+        let model = read_str(b, &mut pos).context("model name")?;
+        let backend_id = read_str(b, &mut pos).context("backend id")?;
+        let schedule = Schedule::from_tag(take(&mut pos, 1)?[0])?;
+        let latent_bits = take(&mut pos, 1)?[0] as u32;
+        let posterior_prec = take(&mut pos, 1)?[0] as u32;
+        let pixel_prec = take(&mut pos, 1)?[0] as u32;
+        let clean_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let likelihood = Likelihood::from_tag(take(&mut pos, 1)?[0])?;
+        let hidden = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let weight_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let pixels = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        // Geometry sanity: these fields size real allocations on the
+        // decode side (`build_backend`), so an untrusted container must
+        // not be able to demand absurd models. The caps are far above any
+        // plausible configuration.
+        if pixels == 0 || pixels > 1 << 24 {
+            bail!("implausible pixel count {pixels}");
+        }
+        if hidden == 0 || hidden > 1 << 20 {
+            bail!("implausible hidden width {hidden}");
+        }
+        let n_layers = take(&mut pos, 1)?[0] as usize;
+        if n_layers == 0 {
+            bail!("hierarchical container declares zero latent layers");
+        }
+        if n_layers > 16 {
+            bail!("implausible layer count {n_layers}");
+        }
+        let mut dims = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let d = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            if d == 0 {
+                bail!("hierarchical container declares a zero-width latent layer");
+            }
+            if d > 1 << 16 {
+                bail!("implausible latent width {d}");
+            }
+            dims.push(d);
+        }
+        let n_chunks = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        if n_chunks > 1 << 20 {
+            bail!("implausible chunk count {n_chunks}");
+        }
+        let mut table = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            table.push((num_images, len));
+        }
+        let total: u64 = table.iter().map(|&(n, _)| n as u64).sum();
+        check_decode_budget(total, pixels as u64)?;
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for (ci, (num_images, len)) in table.into_iter().enumerate() {
+            let payload = take(&mut pos, len)?;
+            let message = AnsMessage::from_bytes(payload)
+                .with_context(|| format!("chunk {ci} payload"))?;
+            chunks.push(ChunkEntry {
+                num_images,
+                message,
+            });
+        }
+        if pos != b.len() {
+            bail!("hierarchical container has {} trailing bytes", b.len() - pos);
+        }
+        let cfg = BbAnsConfig {
+            latent_bits,
+            posterior_prec,
+            pixel_prec,
+            clean_seed,
+        };
+        cfg.validate()?;
+        Ok(Self {
+            model,
+            backend_id,
+            schedule,
+            cfg,
+            likelihood,
+            hidden,
+            weight_seed,
+            pixels,
+            dims,
+            chunks,
+        })
+    }
+
+    /// Total compressed size in bytes (header + payloads).
+    pub fn byte_len(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Compression rate in bits per pixel-dimension over the whole
+    /// container.
+    pub fn bits_per_dim(&self) -> f64 {
+        (self.byte_len() as f64 * 8.0) / (self.num_images() as f64 * self.pixels as f64)
+    }
+
+    /// Rate counting only the ANS payloads (the model geometry is header
+    /// overhead that amortizes over the dataset).
+    pub fn payload_bits_per_dim(&self) -> f64 {
+        let bits: u64 = self.chunks.iter().map(|c| c.message.bit_len()).sum();
+        bits as f64 / (self.num_images() as f64 * self.pixels as f64)
     }
 }
 
@@ -469,6 +856,18 @@ mod tests {
     }
 
     #[test]
+    fn containers_reject_absurd_image_counts() {
+        // num_images sizes decode work and output memory, so untrusted
+        // headers are budget-checked at parse time (all three formats).
+        let mut c1 = sample();
+        c1.num_images = u32::MAX;
+        assert!(Container::from_bytes(&c1.to_bytes()).is_err());
+        let mut c2 = sample_parallel();
+        c2.chunks[0].num_images = u32::MAX;
+        assert!(ParallelContainer::from_bytes(&c2.to_bytes()).is_err());
+    }
+
+    #[test]
     fn parallel_container_rejects_corruption() {
         let bytes = sample_parallel().to_bytes();
         assert!(ParallelContainer::from_bytes(&bytes[..bytes.len() - 1]).is_err());
@@ -481,6 +880,236 @@ mod tests {
         let mut trailing = bytes.clone();
         trailing.push(0);
         assert!(ParallelContainer::from_bytes(&trailing).is_err());
+    }
+
+    fn sample_hier() -> HierContainer {
+        HierContainer {
+            model: "h".into(),
+            backend_id: "hier-native-s7".into(),
+            schedule: Schedule::BitSwap,
+            cfg: BbAnsConfig {
+                latent_bits: 12,
+                posterior_prec: 24,
+                pixel_prec: 16,
+                clean_seed: 7,
+            },
+            likelihood: Likelihood::Bernoulli,
+            hidden: 8,
+            weight_seed: 7,
+            pixels: 4,
+            dims: vec![3, 2],
+            chunks: vec![ChunkEntry {
+                num_images: 1,
+                message: AnsMessage {
+                    head: crate::ans::RANS_L + 3,
+                    stream: vec![0xAABB_CCDD],
+                    clean_words_used: 2,
+                },
+            }],
+        }
+    }
+
+    /// Golden vector: the BBC3 wire format is pinned byte-for-byte. If
+    /// this test breaks, the container version must be bumped.
+    #[test]
+    fn hier_container_golden_bytes() {
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            // magic "BBC3", version
+            0x42, 0x42, 0x43, 0x33, 0x01,
+            // model "h"
+            0x01, 0x68,
+            // backend_id "hier-native-s7"
+            0x0E, 0x68, 0x69, 0x65, 0x72, 0x2D, 0x6E, 0x61, 0x74, 0x69, 0x76,
+            0x65, 0x2D, 0x73, 0x37,
+            // schedule = bitswap
+            0x01,
+            // latent_bits, posterior_prec, pixel_prec
+            0x0C, 0x18, 0x10,
+            // clean_seed = 7 (LE u64)
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // likelihood = bernoulli
+            0x00,
+            // hidden = 8 (LE u32)
+            0x08, 0x00, 0x00, 0x00,
+            // weight_seed = 7 (LE u64)
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // pixels = 4 (LE u32)
+            0x04, 0x00, 0x00, 0x00,
+            // n_layers = 2, dims = [3, 2]
+            0x02,
+            0x03, 0x00, 0x00, 0x00,
+            0x02, 0x00, 0x00, 0x00,
+            // num_chunks = 1 (LE u32)
+            0x01, 0x00, 0x00, 0x00,
+            // offset table: num_images = 1, payload_len = 28
+            0x01, 0x00, 0x00, 0x00,
+            0x1C, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // payload: head = 2^32 + 3 (LE u64)
+            0x03, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00,
+            // clean_words_used = 2 (LE u64)
+            0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // stream len = 1 (LE u64)
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // stream word 0xAABBCCDD (LE u32)
+            0xDD, 0xCC, 0xBB, 0xAA,
+        ];
+        let got = sample_hier().to_bytes();
+        assert_eq!(got, want, "BBC3 wire format drifted");
+        assert_eq!(HierContainer::from_bytes(&want).unwrap(), sample_hier());
+    }
+
+    #[test]
+    fn hier_container_rejects_corruption() {
+        let bytes = sample_hier().to_bytes();
+        for cut in [1usize, 10, 30, 45] {
+            assert!(
+                HierContainer::from_bytes(&bytes[..bytes.len() - cut]).is_err(),
+                "cut {cut}"
+            );
+        }
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(HierContainer::from_bytes(&bad_magic).is_err());
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 9;
+        assert!(HierContainer::from_bytes(&bad_version).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(HierContainer::from_bytes(&trailing).is_err());
+        // Unknown schedule tag fails cleanly: the schedule byte sits right
+        // after magic(4) + version(1) + model "h" (2) + backend str (15).
+        let mut bad_sched = bytes.clone();
+        bad_sched[22] = 9;
+        assert!(HierContainer::from_bytes(&bad_sched).is_err());
+    }
+
+    /// An untrusted header must not be able to demand an absurd model:
+    /// the serving path rebuilds backends from BBC3 headers, so geometry
+    /// is capped at parse time and the total weight count at build time.
+    #[test]
+    fn hier_container_rejects_absurd_geometry() {
+        let cases: [fn(&mut HierContainer); 5] = [
+            |c| c.hidden = u32::MAX,
+            |c| c.pixels = u32::MAX,
+            |c| c.dims = vec![u32::MAX, 2],
+            |c| c.dims = vec![3; 40],
+            |c| c.chunks[0].num_images = u32::MAX,
+        ];
+        for mutate in cases {
+            let mut c = sample_hier();
+            mutate(&mut c);
+            assert!(HierContainer::from_bytes(&c.to_bytes()).is_err(), "{c:?}");
+        }
+        // Within the per-field caps but over the total-parameter budget:
+        // parse succeeds, build_backend refuses.
+        let mut big = sample_hier();
+        big.pixels = 1 << 24;
+        big.hidden = 1 << 20;
+        let parsed = HierContainer::from_bytes(&big.to_bytes()).unwrap();
+        assert!(parsed.build_backend().is_err());
+    }
+
+    /// Error-path reporting (satellite): magic/version mismatches must name
+    /// the bytes actually found, for all three container formats.
+    #[test]
+    fn container_errors_report_found_bytes() {
+        let cases: Vec<(Vec<u8>, &str)> = vec![
+            (sample().to_bytes(), "bad container magic"),
+            (sample_parallel().to_bytes(), "bad parallel-container magic"),
+            (sample_hier().to_bytes(), "bad hierarchical-container magic"),
+        ];
+        for (bytes, want) in cases {
+            let mut bad = bytes.clone();
+            bad[0] = 0x58; // 'X'
+            let err = match want {
+                "bad container magic" => Container::from_bytes(&bad).unwrap_err(),
+                "bad parallel-container magic" => {
+                    ParallelContainer::from_bytes(&bad).unwrap_err()
+                }
+                _ => HierContainer::from_bytes(&bad).unwrap_err(),
+            };
+            let msg = format!("{err:#}");
+            assert!(msg.contains(want), "{msg}");
+            assert!(msg.contains("58"), "found byte missing from: {msg}");
+
+            let mut badver = bytes.clone();
+            badver[4] = 99;
+            let err = match want {
+                "bad container magic" => Container::from_bytes(&badver).unwrap_err(),
+                "bad parallel-container magic" => {
+                    ParallelContainer::from_bytes(&badver).unwrap_err()
+                }
+                _ => HierContainer::from_bytes(&badver).unwrap_err(),
+            };
+            let msg = format!("{err:#}");
+            assert!(msg.contains("version 99"), "found version missing from: {msg}");
+        }
+    }
+
+    /// Acceptance criterion: BBC3 containers round-trip (encode → decode →
+    /// byte-equal images) for L ∈ {2, 3} under both schedules, through the
+    /// serialized bytes and a header-rebuilt backend.
+    #[test]
+    fn hier_container_end_to_end_roundtrip() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xB175);
+        for dims in [&[6usize, 4][..], &[6, 4, 3]] {
+            let meta = HierMeta {
+                name: format!("hier{}", dims.len()),
+                pixels: 25,
+                dims: dims.to_vec(),
+                hidden: 10,
+                likelihood: Likelihood::Bernoulli,
+            };
+            let backend = HierVae::random(meta, 42);
+            let images: Vec<Vec<u8>> = (0..11)
+                .map(|_| (0..25).map(|_| (rng.f64() < 0.3) as u8).collect())
+                .collect();
+            for schedule in [Schedule::Naive, Schedule::BitSwap] {
+                let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+                let hc = HierContainer::encode_with_workers(&codec, &images, 3, 2).unwrap();
+                let bytes = hc.to_bytes();
+                let parsed = HierContainer::from_bytes(&bytes).unwrap();
+                assert_eq!(parsed, hc);
+                let rebuilt = parsed.build_backend().unwrap();
+                assert_eq!(rebuilt.backend_id(), backend.backend_id());
+                let codec2 = HierCodec::new(&rebuilt, parsed.cfg, parsed.schedule).unwrap();
+                assert_eq!(parsed.decode_lockstep(&codec2).unwrap(), images);
+                assert_eq!(parsed.decode_with_workers(&codec2, 2).unwrap(), images);
+            }
+        }
+    }
+
+    #[test]
+    fn hier_container_rejects_mismatched_codec() {
+        let meta = HierMeta {
+            name: "hier2".into(),
+            pixels: 16,
+            dims: vec![4, 3],
+            hidden: 8,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 5);
+        let codec =
+            HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let images = vec![vec![0u8; 16]; 3];
+        let hc = HierContainer::encode_with_workers(&codec, &images, 1, 1).unwrap();
+
+        // Wrong schedule.
+        let naive = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::Naive).unwrap();
+        assert!(hc.decode_lockstep(&naive).is_err());
+        // Wrong config.
+        let cfg = BbAnsConfig {
+            latent_bits: 10,
+            ..Default::default()
+        };
+        let other = HierCodec::new(&backend, cfg, Schedule::BitSwap).unwrap();
+        assert!(hc.decode_lockstep(&other).is_err());
+        // weight_seed 0 refuses to rebuild.
+        let mut artifact = hc.clone();
+        artifact.weight_seed = 0;
+        assert!(artifact.build_backend().is_err());
     }
 
     #[test]

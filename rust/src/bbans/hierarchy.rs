@@ -1,0 +1,969 @@
+//! Recursive bits-back coding over hierarchical latents — the codec half
+//! of the Bit-Swap subsystem (Kingma et al. 2019).
+//!
+//! Two coding schedules over the same Markov top-down model (see
+//! [`crate::model::hierarchy`]); both are exact and both reach the same
+//! asymptotic rate (the hierarchy's −ELBO), but they differ sharply in the
+//! **initial bits** a fresh chain must borrow:
+//!
+//! ```text
+//! naive BB-ANS (pop everything, then push everything):
+//!   pop z_0…z_{L-1}  →  push x | push p(z_0|z_1) … push p(z_{L-1})
+//!   initial bits ≈ Σ_l H(q_l)           — grows with depth L
+//!
+//! Bit-Swap (interleave pop/push layer by layer):
+//!   pop z_0 | push x | pop z_1 | push z_0 | … | pop z_{L-1} |
+//!   push z_{L-2} | push z_{L-1}
+//!   initial bits ≈ H(q_0)               — the pushes replenish the stack
+//!                                         before the next layer pops
+//! ```
+//!
+//! The interleaving is only valid because the hierarchy is Markov: after
+//! `pop z_l` the very next ops (`push z_{l-1}`, `pop z_{l+1}`) depend only
+//! on `z_l` — nothing later needs a value that has already been spent.
+//! `benches/hierarchy.rs` measures the gap; the schedule is recorded in
+//! the `BBC3` container header so decode runs the exact inverse.
+//!
+//! Every Gaussian conditional (recognition and generative) codes over the
+//! same max-entropy buckets as the single-layer codec, at
+//! `cfg.posterior_prec`; the top prior is exactly uniform. The pixel step
+//! shares the single-layer prepared-symbol hot path and [`CodecScratch`].
+
+use anyhow::{bail, Result};
+
+use super::container::{chunk_seed, ChunkEntry};
+use super::{
+    chunk_ranges, default_workers, gauss_codec_scratch, pixel_lookup, pixel_prepared,
+    pooled_indexed, scale_pixels_into, BbAnsConfig, CodecScratch, ImageStats, NN_CHUNK,
+};
+use crate::ans::{Ans, EntropyCoder};
+use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
+use crate::codecs::uniform::Uniform;
+use crate::codecs::SymbolCodec;
+use crate::model::hierarchy::HierBackend;
+use crate::model::tensor::Matrix;
+use crate::model::{PixelParams, PosteriorBatch};
+
+/// Which coding schedule a `BBC3` stream uses. Both are exact inverses of
+/// themselves under decode; they differ only in op interleaving (and
+/// therefore in which clean/stack bits each pop consumes, so the two
+/// schedules produce different — incompatible — bitstreams).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Pop all layers bottom-up, then push data and all priors.
+    Naive,
+    /// Interleaved per-layer pop/push (valid for Markov hierarchies).
+    BitSwap,
+}
+
+impl Schedule {
+    /// Wire tag recorded in the `BBC3` header.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Self::Naive => 0,
+            Self::BitSwap => 1,
+        }
+    }
+
+    /// Inverse of [`Schedule::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(Self::Naive),
+            1 => Ok(Self::BitSwap),
+            other => bail!("unknown schedule tag {other}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Naive => "naive",
+            Self::BitSwap => "bitswap",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "naive" => Ok(Self::Naive),
+            "bitswap" | "bit-swap" => Ok(Self::BitSwap),
+            other => bail!("unknown schedule '{other}' (want naive|bitswap)"),
+        }
+    }
+}
+
+/// Reusable buffers for the hierarchical coding loops: the shared
+/// [`CodecScratch`] (prepared pixels, PMF row, cached Gaussian codec) plus
+/// per-layer bucket-index buffers and an f32 staging buffer for the B=1
+/// net dispatches.
+#[derive(Debug, Default)]
+pub struct HierScratch {
+    pub codec: CodecScratch,
+    /// `z[l]` holds layer `l`'s bucket indices for the image in flight.
+    z: Vec<Vec<u32>>,
+    /// Staging buffer for net inputs (centres / scaled pixels).
+    buf: Vec<f32>,
+}
+
+impl HierScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure_layers(&mut self, layers: usize) {
+        while self.z.len() < layers {
+            self.z.push(Vec::new());
+        }
+    }
+}
+
+/// Per-stream state of the (lock-step capable) hierarchical decoder.
+struct DecState {
+    ans: Ans,
+    remaining: usize,
+    out: Vec<Vec<u8>>,
+    /// Per-layer bucket indices of the image being decoded.
+    z: Vec<Vec<u32>>,
+    /// Pixels of the image being decoded (kept until the recognition push
+    /// returns the borrowed bits).
+    img: Vec<u8>,
+    scratch: CodecScratch,
+}
+
+impl DecState {
+    fn new(ans: Ans, remaining: usize, layers: usize) -> Self {
+        Self {
+            ans,
+            remaining,
+            // Grown as images decode, NOT pre-reserved: `remaining` can
+            // come from an untrusted container header, and allocation
+            // should track work actually done.
+            out: Vec::new(),
+            z: vec![Vec::new(); layers],
+            img: Vec::new(),
+            scratch: CodecScratch::new(),
+        }
+    }
+}
+
+/// The hierarchical bits-back codec over a [`HierBackend`].
+pub struct HierCodec<'a, B: HierBackend + ?Sized> {
+    backend: &'a B,
+    pub cfg: BbAnsConfig,
+    pub schedule: Schedule,
+    buckets: MaxEntropyBuckets,
+}
+
+impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
+    pub fn new(backend: &'a B, cfg: BbAnsConfig, schedule: Schedule) -> Result<Self> {
+        cfg.validate()?;
+        let meta = backend.meta();
+        if meta.dims.is_empty() {
+            bail!("hierarchical model has no latent layers");
+        }
+        if meta.dims.iter().any(|&d| d == 0) {
+            bail!("hierarchical model has a zero-width latent layer");
+        }
+        Ok(Self {
+            backend,
+            cfg,
+            schedule,
+            buckets: MaxEntropyBuckets::new(cfg.latent_bits),
+        })
+    }
+
+    pub fn backend(&self) -> &B {
+        self.backend
+    }
+
+    fn centres_into(&self, idx: &[u32], out: &mut Vec<f32>) {
+        out.extend(idx.iter().map(|&i| self.buckets.centre(i) as f32));
+    }
+
+    // ---- per-vector coding primitives (dim orders mirror the
+    // ---- single-layer codec: pops ascending, pushes descending, so each
+    // ---- pair is an exact inverse) ----
+
+    fn pop_gauss(
+        &self,
+        ans: &mut Ans,
+        mu: &[f32],
+        sigma: &[f32],
+        dim: usize,
+        idx: &mut Vec<u32>,
+        slot: &mut Option<DiscretizedGaussian>,
+    ) {
+        idx.clear();
+        for d in 0..dim {
+            let g =
+                gauss_codec_scratch(&self.buckets, self.cfg.posterior_prec, mu[d], sigma[d], slot);
+            idx.push(g.pop(ans));
+        }
+    }
+
+    fn push_gauss(
+        &self,
+        ans: &mut Ans,
+        mu: &[f32],
+        sigma: &[f32],
+        idx: &[u32],
+        slot: &mut Option<DiscretizedGaussian>,
+    ) {
+        for d in (0..idx.len()).rev() {
+            gauss_codec_scratch(&self.buckets, self.cfg.posterior_prec, mu[d], sigma[d], slot)
+                .push(ans, idx[d]);
+        }
+    }
+
+    fn push_top(&self, ans: &mut Ans, idx: &[u32]) {
+        let prior = Uniform::new(self.cfg.latent_bits);
+        for &i in idx {
+            prior.push(ans, i);
+        }
+    }
+
+    fn pop_top(&self, ans: &mut Ans, idx: &mut Vec<u32>) {
+        let dim = *self.backend.meta().dims.last().expect("non-empty dims");
+        let prior = Uniform::new(self.cfg.latent_bits);
+        idx.clear();
+        idx.resize(dim, 0);
+        for d in (0..dim).rev() {
+            idx[d] = prior.pop(ans);
+        }
+    }
+
+    fn push_pixels(
+        &self,
+        ans: &mut Ans,
+        params: &PixelParams,
+        img: &[u8],
+        scratch: &mut CodecScratch,
+    ) {
+        let CodecScratch { prepared, pmf, .. } = scratch;
+        prepared.clear();
+        prepared.extend(
+            img.iter()
+                .enumerate()
+                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf)),
+        );
+        ans.encode_all_prepared(prepared, self.cfg.pixel_prec);
+    }
+
+    fn pop_pixels(
+        &self,
+        ans: &mut Ans,
+        params: &PixelParams,
+        scratch: &mut CodecScratch,
+    ) -> Vec<u8> {
+        let pixels = self.backend.meta().pixels;
+        let pmf = &mut scratch.pmf;
+        let mut p = 0usize;
+        ans.decode_all(pixels, self.cfg.pixel_prec, |cf| {
+            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf);
+            p += 1;
+            out
+        })
+    }
+
+    // ---- B=1 net dispatch helpers (the staging buffer round-trips
+    // ---- through the Matrix so steady-state coding allocates nothing) ----
+
+    fn infer1(&self, layer: usize, input: &mut Vec<f32>) -> Result<PosteriorBatch> {
+        let w = self.backend.meta().infer_in_dim(layer);
+        let m = Matrix::new(1, w, std::mem::take(input));
+        let out = self.backend.infer_batch(layer, &m);
+        *input = m.data;
+        out
+    }
+
+    fn gen1(&self, layer: usize, input: &mut Vec<f32>) -> Result<PosteriorBatch> {
+        let w = self.backend.meta().dims[layer + 1];
+        let m = Matrix::new(1, w, std::mem::take(input));
+        let out = self.backend.gen_batch(layer, &m);
+        *input = m.data;
+        out
+    }
+
+    fn like1(&self, input: &mut Vec<f32>) -> Result<PixelParams> {
+        let w = self.backend.meta().dims[0];
+        let m = Matrix::new(1, w, std::mem::take(input));
+        let out = self.backend.likelihood_batch(&m);
+        *input = m.data;
+        Ok(out?.remove(0))
+    }
+
+    // -------------------------------------------------------------- encode
+
+    /// Encode one image given layer 0's already-computed recognition
+    /// parameters (the data-dependent call the dataset loops batch).
+    /// Returns per-step rate telemetry; `posterior_bits` sums every pop
+    /// (negative), `prior_bits` every latent push, however the schedule
+    /// interleaves them.
+    pub fn encode_image_with_posterior_scratch(
+        &self,
+        ans: &mut Ans,
+        img: &[u8],
+        mu0: &[f32],
+        sigma0: &[f32],
+        scratch: &mut HierScratch,
+    ) -> Result<ImageStats> {
+        let meta = self.backend.meta();
+        if img.len() != meta.pixels {
+            bail!("image has {} pixels, model wants {}", img.len(), meta.pixels);
+        }
+        let layers = meta.layers();
+        scratch.ensure_layers(layers);
+        // Effective message length (clean words are virtual pre-existing
+        // content, exactly as in the single-layer codec).
+        let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
+        let (mut posterior, mut likelihood, mut prior) = (0.0f64, 0.0f64, 0.0f64);
+        let b0 = bits_at(ans);
+
+        let mut z = std::mem::take(&mut scratch.z);
+        // Every schedule starts by sampling the bottom layer from q(z_0|x).
+        {
+            let before = bits_at(ans);
+            self.pop_gauss(ans, mu0, sigma0, meta.dims[0], &mut z[0], &mut scratch.codec.gauss);
+            posterior += bits_at(ans) - before;
+        }
+
+        match self.schedule {
+            Schedule::Naive => {
+                // Pop the remaining layers bottom-up…
+                for layer in 1..layers {
+                    scratch.buf.clear();
+                    self.centres_into(&z[layer - 1], &mut scratch.buf);
+                    let pb = self.infer1(layer, &mut scratch.buf)?;
+                    let before = bits_at(ans);
+                    self.pop_gauss(
+                        ans,
+                        pb.mu.row(0),
+                        pb.sigma.row(0),
+                        meta.dims[layer],
+                        &mut z[layer],
+                        &mut scratch.codec.gauss,
+                    );
+                    posterior += bits_at(ans) - before;
+                }
+                // …then push the data…
+                scratch.buf.clear();
+                self.centres_into(&z[0], &mut scratch.buf);
+                let params = self.like1(&mut scratch.buf)?;
+                let before = bits_at(ans);
+                self.push_pixels(ans, &params, img, &mut scratch.codec);
+                likelihood += bits_at(ans) - before;
+                // …then every generative conditional bottom-up.
+                for layer in 0..layers - 1 {
+                    scratch.buf.clear();
+                    self.centres_into(&z[layer + 1], &mut scratch.buf);
+                    let pb = self.gen1(layer, &mut scratch.buf)?;
+                    let before = bits_at(ans);
+                    self.push_gauss(
+                        ans,
+                        pb.mu.row(0),
+                        pb.sigma.row(0),
+                        &z[layer],
+                        &mut scratch.codec.gauss,
+                    );
+                    prior += bits_at(ans) - before;
+                }
+            }
+            Schedule::BitSwap => {
+                // Push the data immediately — from here on the stack never
+                // runs dry, so only q(z_0|x)'s pop borrows clean bits.
+                scratch.buf.clear();
+                self.centres_into(&z[0], &mut scratch.buf);
+                let params = self.like1(&mut scratch.buf)?;
+                let before = bits_at(ans);
+                self.push_pixels(ans, &params, img, &mut scratch.codec);
+                likelihood += bits_at(ans) - before;
+                // Interleave: pop layer l, push layer l−1 under its
+                // generative conditional (both depend only on z_{l-1}/z_l —
+                // the Markov property that makes this valid).
+                for layer in 1..layers {
+                    scratch.buf.clear();
+                    self.centres_into(&z[layer - 1], &mut scratch.buf);
+                    let pb = self.infer1(layer, &mut scratch.buf)?;
+                    let before = bits_at(ans);
+                    self.pop_gauss(
+                        ans,
+                        pb.mu.row(0),
+                        pb.sigma.row(0),
+                        meta.dims[layer],
+                        &mut z[layer],
+                        &mut scratch.codec.gauss,
+                    );
+                    posterior += bits_at(ans) - before;
+
+                    scratch.buf.clear();
+                    self.centres_into(&z[layer], &mut scratch.buf);
+                    let pb = self.gen1(layer - 1, &mut scratch.buf)?;
+                    let before = bits_at(ans);
+                    self.push_gauss(
+                        ans,
+                        pb.mu.row(0),
+                        pb.sigma.row(0),
+                        &z[layer - 1],
+                        &mut scratch.codec.gauss,
+                    );
+                    prior += bits_at(ans) - before;
+                }
+            }
+        }
+        // Both schedules end by pushing the top layer under its exactly
+        // uniform discretized prior.
+        {
+            let before = bits_at(ans);
+            self.push_top(ans, &z[layers - 1]);
+            prior += bits_at(ans) - before;
+        }
+        scratch.z = z;
+
+        Ok(ImageStats {
+            net_bits: bits_at(ans) - b0,
+            posterior_bits: posterior,
+            likelihood_bits: likelihood,
+            prior_bits: prior,
+        })
+    }
+
+    /// Encode one image (computes the layer-0 recognition call itself).
+    pub fn encode_image_scratch(
+        &self,
+        ans: &mut Ans,
+        img: &[u8],
+        scratch: &mut HierScratch,
+    ) -> Result<ImageStats> {
+        let meta = self.backend.meta();
+        if img.len() != meta.pixels {
+            bail!("image has {} pixels, model wants {}", img.len(), meta.pixels);
+        }
+        scratch.buf.clear();
+        scale_pixels_into(meta.likelihood, img, &mut scratch.buf);
+        let pb = self.infer1(0, &mut scratch.buf)?;
+        self.encode_image_with_posterior_scratch(ans, img, pb.mu.row(0), pb.sigma.row(0), scratch)
+    }
+
+    /// Clean bits a fresh chain borrows to encode its first image — the
+    /// schedule comparison the subsystem exists to improve (Bit-Swap's is
+    /// strictly below the naive schedule's for L ≥ 2).
+    pub fn initial_bits(&self, img: &[u8]) -> Result<u64> {
+        let mut ans = Ans::new(self.cfg.clean_seed);
+        self.encode_image_scratch(&mut ans, img, &mut HierScratch::new())?;
+        Ok(ans.clean_bits_used())
+    }
+
+    /// Scale a chunk of images into one `[B, pixels]` matrix and run
+    /// recognition layer 0 as a single batched dispatch (it depends only
+    /// on the data, so both dataset encode paths share it and their
+    /// bitstreams are identical by construction).
+    pub fn posterior_batch_for(&self, chunk: &[Vec<u8>]) -> Result<PosteriorBatch> {
+        let meta = self.backend.meta();
+        let pixels = meta.pixels;
+        let mut data = Vec::with_capacity(chunk.len() * pixels);
+        for img in chunk {
+            if img.len() != pixels {
+                bail!("image has {} pixels, model wants {pixels}", img.len());
+            }
+            scale_pixels_into(meta.likelihood, img, &mut data);
+        }
+        self.backend.infer_batch(0, &Matrix::new(chunk.len(), pixels, data))
+    }
+
+    /// Chain `images` onto an existing coder state, batching the layer-0
+    /// recognition calls per [`NN_CHUNK`]-image block.
+    pub fn encode_dataset_into(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+    ) -> Result<Vec<ImageStats>> {
+        let mut stats = Vec::with_capacity(images.len());
+        let mut scratch = HierScratch::new();
+        for chunk in images.chunks(NN_CHUNK) {
+            let posts = self.posterior_batch_for(chunk)?;
+            for (r, img) in chunk.iter().enumerate() {
+                stats.push(self.encode_image_with_posterior_scratch(
+                    ans,
+                    img,
+                    posts.mu.row(r),
+                    posts.sigma.row(r),
+                    &mut scratch,
+                )?);
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Encode a dataset as one chained stream from a fresh coder.
+    pub fn encode_dataset(&self, images: &[Vec<u8>]) -> Result<(Ans, Vec<ImageStats>)> {
+        let mut ans = Ans::new(self.cfg.clean_seed);
+        let stats = self.encode_dataset_into(&mut ans, images)?;
+        Ok((ans, stats))
+    }
+
+    // -------------------------------------------------------------- decode
+
+    /// Decode `n` chained images; returns them in original encode order.
+    /// Runs through the same stream machinery as the lock-step multi-chunk
+    /// decoder, so there is exactly ONE implementation of each schedule's
+    /// inverse.
+    pub fn decode_dataset(&self, ans: &mut Ans, n: usize) -> Result<Vec<Vec<u8>>> {
+        let layers = self.backend.meta().layers();
+        let taken = std::mem::replace(ans, Ans::new(0));
+        let mut streams = vec![DecState::new(taken, n, layers)];
+        let res = self.decode_streams(&mut streams);
+        let st = streams.pop().expect("one stream");
+        *ans = st.ans;
+        res?;
+        let mut out = st.out;
+        out.reverse(); // stack order → original order
+        Ok(out)
+    }
+
+    /// Decode the independent chains of a `BBC3` container **in lock
+    /// step**: every chain advances one image per round, and each round's
+    /// net evaluations run as single cross-chain batched dispatches — the
+    /// coordinator's serving loop for hierarchical containers. Identical
+    /// output to decoding each chunk separately (net results are
+    /// row-independent and batch-invariant).
+    pub fn decode_chunks_lockstep(&self, chunks: &[ChunkEntry]) -> Result<Vec<Vec<u8>>> {
+        let layers = self.backend.meta().layers();
+        let mut streams: Vec<DecState> = chunks
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                DecState::new(
+                    Ans::from_message(&c.message, chunk_seed(self.cfg.clean_seed, ci)),
+                    c.num_images as usize,
+                    layers,
+                )
+            })
+            .collect();
+        self.decode_streams(&mut streams)?;
+        let mut out = Vec::new();
+        for st in streams {
+            let mut imgs = st.out;
+            imgs.reverse();
+            out.extend(imgs);
+        }
+        Ok(out)
+    }
+
+    /// Advance every stream to completion, one image per stream per round,
+    /// with each net call batched across the active streams. The per-op
+    /// order within each stream is exactly the inverse of the encode
+    /// schedule.
+    fn decode_streams(&self, streams: &mut [DecState]) -> Result<()> {
+        let meta = self.backend.meta();
+        let layers = meta.layers();
+        let top = layers - 1;
+        let mut buf: Vec<f32> = Vec::new();
+        loop {
+            let active: Vec<usize> = streams
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.remaining > 0)
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                return Ok(());
+            }
+
+            // Gather one layer's centres (or the scaled pixels) across the
+            // active streams into a [|active|, width] matrix.
+            let gather_z = |streams: &[DecState], layer: usize, buf: &mut Vec<f32>| -> Matrix {
+                buf.clear();
+                for &si in &active {
+                    self.centres_into(&streams[si].z[layer], buf);
+                }
+                Matrix::new(active.len(), meta.dims[layer], std::mem::take(buf))
+            };
+
+            // (inverse of the final encode op) pop the top layer from the
+            // uniform prior — no net call.
+            for &si in &active {
+                let s = &mut streams[si];
+                self.pop_top(&mut s.ans, &mut s.z[top]);
+            }
+
+            match self.schedule {
+                Schedule::Naive => {
+                    // Pop the generative conditionals top-down.
+                    for layer in (0..top).rev() {
+                        let m = gather_z(streams, layer + 1, &mut buf);
+                        let pb = self.backend.gen_batch(layer, &m)?;
+                        buf = m.data;
+                        for (r, &si) in active.iter().enumerate() {
+                            let s = &mut streams[si];
+                            let mut zl = std::mem::take(&mut s.z[layer]);
+                            self.pop_gauss(
+                                &mut s.ans,
+                                pb.mu.row(r),
+                                pb.sigma.row(r),
+                                meta.dims[layer],
+                                &mut zl,
+                                &mut s.scratch.gauss,
+                            );
+                            s.z[layer] = zl;
+                        }
+                    }
+                    // Pop the pixels.
+                    let m = gather_z(streams, 0, &mut buf);
+                    let params = self.backend.likelihood_batch(&m)?;
+                    buf = m.data;
+                    for (r, &si) in active.iter().enumerate() {
+                        let s = &mut streams[si];
+                        s.img = self.pop_pixels(&mut s.ans, &params[r], &mut s.scratch);
+                    }
+                    // Push the recognition conditionals top-down (exact
+                    // inverse of the bottom-up pops), returning the
+                    // borrowed bits.
+                    for layer in (1..layers).rev() {
+                        let m = gather_z(streams, layer - 1, &mut buf);
+                        let pb = self.backend.infer_batch(layer, &m)?;
+                        buf = m.data;
+                        for (r, &si) in active.iter().enumerate() {
+                            let s = &mut streams[si];
+                            let zl = std::mem::take(&mut s.z[layer]);
+                            self.push_gauss(
+                                &mut s.ans,
+                                pb.mu.row(r),
+                                pb.sigma.row(r),
+                                &zl,
+                                &mut s.scratch.gauss,
+                            );
+                            s.z[layer] = zl;
+                        }
+                    }
+                }
+                Schedule::BitSwap => {
+                    // Un-interleave: pop p(z_{l-1}|z_l), push q(z_l|z_{l-1}),
+                    // top-down.
+                    for layer in (1..layers).rev() {
+                        let m = gather_z(streams, layer, &mut buf);
+                        let pb = self.backend.gen_batch(layer - 1, &m)?;
+                        buf = m.data;
+                        for (r, &si) in active.iter().enumerate() {
+                            let s = &mut streams[si];
+                            let mut zl = std::mem::take(&mut s.z[layer - 1]);
+                            self.pop_gauss(
+                                &mut s.ans,
+                                pb.mu.row(r),
+                                pb.sigma.row(r),
+                                meta.dims[layer - 1],
+                                &mut zl,
+                                &mut s.scratch.gauss,
+                            );
+                            s.z[layer - 1] = zl;
+                        }
+
+                        let m = gather_z(streams, layer - 1, &mut buf);
+                        let pb = self.backend.infer_batch(layer, &m)?;
+                        buf = m.data;
+                        for (r, &si) in active.iter().enumerate() {
+                            let s = &mut streams[si];
+                            let zl = std::mem::take(&mut s.z[layer]);
+                            self.push_gauss(
+                                &mut s.ans,
+                                pb.mu.row(r),
+                                pb.sigma.row(r),
+                                &zl,
+                                &mut s.scratch.gauss,
+                            );
+                            s.z[layer] = zl;
+                        }
+                    }
+                    // Pop the pixels.
+                    let m = gather_z(streams, 0, &mut buf);
+                    let params = self.backend.likelihood_batch(&m)?;
+                    buf = m.data;
+                    for (r, &si) in active.iter().enumerate() {
+                        let s = &mut streams[si];
+                        s.img = self.pop_pixels(&mut s.ans, &params[r], &mut s.scratch);
+                    }
+                }
+            }
+
+            // (inverse of the first encode op) push z_0 back under q(z_0|x).
+            buf.clear();
+            for &si in &active {
+                scale_pixels_into(meta.likelihood, &streams[si].img, &mut buf);
+            }
+            let m = Matrix::new(active.len(), meta.pixels, std::mem::take(&mut buf));
+            let pb = self.backend.infer_batch(0, &m)?;
+            buf = m.data;
+            for (r, &si) in active.iter().enumerate() {
+                let s = &mut streams[si];
+                let z0 = std::mem::take(&mut s.z[0]);
+                self.push_gauss(
+                    &mut s.ans,
+                    pb.mu.row(r),
+                    pb.sigma.row(r),
+                    &z0,
+                    &mut s.scratch.gauss,
+                );
+                s.z[0] = z0;
+                s.out.push(std::mem::take(&mut s.img));
+                s.remaining -= 1;
+            }
+        }
+    }
+}
+
+/// Chunk-parallel and pipelined hierarchical coding (the PR 3 machinery
+/// applied to the deeper chain). Requires a `Sync` backend — the pure-Rust
+/// [`crate::model::hierarchy::HierVae`] qualifies.
+impl<B: HierBackend + Sync + ?Sized> HierCodec<'_, B> {
+    /// Encode one sequential chain with the layer-0 recognition batches
+    /// precomputed by worker threads (they depend only on the data) while
+    /// this thread runs the strictly sequential chain
+    /// ([`pipelined_blocks`], the skeleton shared with the single-layer
+    /// codec). Bit-identical to [`Self::encode_dataset_into`] for every
+    /// worker count.
+    pub fn encode_dataset_pipelined(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+        workers: usize,
+    ) -> Result<Vec<ImageStats>> {
+        let mut scratch = HierScratch::new();
+        let mut stats = Vec::with_capacity(images.len());
+        super::pipelined_blocks(
+            images,
+            workers,
+            |block: &[Vec<u8>]| self.posterior_batch_for(block),
+            |block: &[Vec<u8>], posts: PosteriorBatch| {
+                for (r, img) in block.iter().enumerate() {
+                    stats.push(self.encode_image_with_posterior_scratch(
+                        ans,
+                        img,
+                        posts.mu.row(r),
+                        posts.sigma.row(r),
+                        &mut scratch,
+                    )?);
+                }
+                Ok(())
+            },
+        )?;
+        Ok(stats)
+    }
+
+    /// Encode `images` as `n_chunks` independent chains on a bounded
+    /// worker pool; chunk `i` seeds its clean-bit supply from
+    /// [`chunk_seed`]`(cfg.clean_seed, i)`, so the result depends only on
+    /// `(images, n_chunks, cfg, schedule)` — never on `workers`.
+    pub fn encode_dataset_chunked_with_workers(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Vec<ChunkEntry>> {
+        let ranges = chunk_ranges(images.len(), n_chunks);
+        let pool = workers.clamp(1, ranges.len().max(1));
+        let inner = (workers / pool).saturating_sub(1).max(1);
+        pooled_indexed(ranges.len(), workers, |ci| {
+            let chunk = &images[ranges[ci].clone()];
+            let mut ans = Ans::new(chunk_seed(self.cfg.clean_seed, ci));
+            self.encode_dataset_pipelined(&mut ans, chunk, inner)?;
+            Ok(ChunkEntry {
+                num_images: chunk.len() as u32,
+                message: ans.into_message(),
+            })
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// [`Self::encode_dataset_chunked_with_workers`] on the default pool.
+    pub fn encode_dataset_chunked(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<Vec<ChunkEntry>> {
+        self.encode_dataset_chunked_with_workers(images, n_chunks, default_workers())
+    }
+
+    /// Decode chunks on a worker pool (each chunk decodes independently;
+    /// the lock-step [`Self::decode_chunks_lockstep`] is the batched
+    /// single-thread alternative). Images return in original order.
+    pub fn decode_dataset_chunked_with_workers(
+        &self,
+        chunks: &[ChunkEntry],
+        workers: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        let per_chunk = pooled_indexed(chunks.len(), workers, |ci| {
+            let chunk = &chunks[ci];
+            let mut ans = Ans::from_message(&chunk.message, chunk_seed(self.cfg.clean_seed, ci));
+            self.decode_dataset(&mut ans, chunk.num_images as usize)
+        });
+        let mut out = Vec::new();
+        for r in per_chunk {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+
+    /// [`Self::decode_dataset_chunked_with_workers`] on the default pool.
+    pub fn decode_dataset_chunked(&self, chunks: &[ChunkEntry]) -> Result<Vec<Vec<u8>>> {
+        self.decode_dataset_chunked_with_workers(chunks, default_workers())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::hierarchy::{HierMeta, HierVae};
+    use crate::model::Likelihood;
+    use crate::util::rng::Rng;
+
+    fn meta(likelihood: Likelihood, pixels: usize, dims: &[usize]) -> HierMeta {
+        HierMeta {
+            name: "hier-t".into(),
+            pixels,
+            dims: dims.to_vec(),
+            hidden: 12,
+            likelihood,
+        }
+    }
+
+    fn sample_images(n: usize, pixels: usize, levels: u32, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..pixels)
+                    .map(|_| {
+                        if rng.f64() < 0.7 {
+                            0
+                        } else {
+                            rng.below(levels as u64) as u8
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_both_schedules_and_depths() {
+        for (trial, likelihood) in [Likelihood::Bernoulli, Likelihood::BetaBinomial]
+            .into_iter()
+            .enumerate()
+        {
+            let levels = match likelihood {
+                Likelihood::Bernoulli => 2u32,
+                Likelihood::BetaBinomial => 256,
+            };
+            for dims in [&[5usize][..], &[5, 4], &[5, 4, 3]] {
+                let backend =
+                    HierVae::random(meta(likelihood, 24, dims), 100 + trial as u64);
+                for schedule in [Schedule::Naive, Schedule::BitSwap] {
+                    let codec =
+                        HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+                    let images = sample_images(9, 24, levels, 7 + trial as u64);
+                    let (mut ans, stats) = codec.encode_dataset(&images).unwrap();
+                    assert_eq!(stats.len(), 9);
+                    let decoded = codec.decode_dataset(&mut ans, 9).unwrap();
+                    assert_eq!(decoded, images, "{schedule:?} dims={dims:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_layer_schedules_are_bit_identical() {
+        // With L = 1 the two schedules are literally the same op sequence.
+        let backend = HierVae::random(meta(Likelihood::Bernoulli, 30, &[6]), 5);
+        let images = sample_images(6, 30, 2, 11);
+        let naive = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::Naive).unwrap();
+        let swap = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let (a, _) = naive.encode_dataset(&images).unwrap();
+        let (b, _) = swap.encode_dataset(&images).unwrap();
+        assert_eq!(a.to_message(), b.to_message());
+    }
+
+    #[test]
+    fn bitswap_initial_bits_strictly_below_naive() {
+        // The subsystem's reason to exist (acceptance criterion): a fresh
+        // Bit-Swap chain borrows strictly fewer clean bits than the naive
+        // schedule for L >= 2 — the data push after layer 0 replenishes
+        // the stack before the higher layers pop.
+        for dims in [&[16usize, 12][..], &[16, 12, 8]] {
+            let backend = HierVae::random(meta(Likelihood::Bernoulli, 256, dims), 21);
+            let img = &sample_images(1, 256, 2, 3)[0];
+            let naive = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::Naive)
+                .unwrap()
+                .initial_bits(img)
+                .unwrap();
+            let swap = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap)
+                .unwrap()
+                .initial_bits(img)
+                .unwrap();
+            assert!(
+                swap < naive,
+                "dims={dims:?}: bitswap {swap} must be < naive {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_returns_clean_bits() {
+        // After decoding everything, the stream holds exactly the clean
+        // words the encoder borrowed — bits back, layer-recursively.
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let backend = HierVae::random(meta(Likelihood::Bernoulli, 24, &[5, 3]), 9);
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+            let images = sample_images(8, 24, 2, 13);
+            let (mut ans, _) = codec.encode_dataset(&images).unwrap();
+            let borrowed = ans.clean_words_used();
+            let _ = codec.decode_dataset(&mut ans, 8).unwrap();
+            assert_eq!(ans.stream_len() as u64, borrowed, "{schedule:?}");
+            let msg = ans.to_message();
+            let mut fresh = Rng::new(codec.cfg.clean_seed);
+            let expect: Vec<u32> = (0..borrowed).map(|_| fresh.next_u32()).collect();
+            let mut got = msg.stream.clone();
+            got.reverse();
+            assert_eq!(got, expect, "{schedule:?}");
+        }
+    }
+
+    #[test]
+    fn lockstep_decode_matches_per_chunk_decode() {
+        let backend = HierVae::random(meta(Likelihood::Bernoulli, 24, &[5, 4, 3]), 31);
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+            let images = sample_images(23, 24, 2, 17);
+            let chunks = codec.encode_dataset_chunked_with_workers(&images, 4, 2).unwrap();
+            let lockstep = codec.decode_chunks_lockstep(&chunks).unwrap();
+            let pooled = codec.decode_dataset_chunked_with_workers(&chunks, 3).unwrap();
+            assert_eq!(lockstep, images, "{schedule:?}");
+            assert_eq!(pooled, images, "{schedule:?}");
+        }
+    }
+
+    #[test]
+    fn stats_components_are_consistent() {
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let backend = HierVae::random(meta(Likelihood::Bernoulli, 24, &[5, 4]), 15);
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+            let images = sample_images(5, 24, 2, 19);
+            let (_, stats) = codec.encode_dataset(&images).unwrap();
+            for s in &stats {
+                assert!(
+                    (s.net_bits - (s.posterior_bits + s.likelihood_bits + s.prior_bits)).abs()
+                        < 1e-6
+                );
+                assert!(s.posterior_bits < 0.0, "{schedule:?}");
+                assert!(s.likelihood_bits > 0.0, "{schedule:?}");
+                assert!(s.prior_bits > 0.0, "{schedule:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let backend = HierVae::random(meta(Likelihood::Bernoulli, 24, &[5]), 3);
+        let codec = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let mut ans = Ans::new(0);
+        assert!(codec
+            .encode_image_scratch(&mut ans, &[0u8; 23], &mut HierScratch::new())
+            .is_err());
+    }
+}

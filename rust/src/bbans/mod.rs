@@ -22,6 +22,7 @@
 //! [`crate::codecs::gaussian::DiscretizedGaussian`].
 
 pub mod container;
+pub mod hierarchy;
 pub mod timeseries;
 
 use anyhow::{bail, Result};
@@ -65,6 +66,119 @@ pub struct CodecScratch {
 impl CodecScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+}
+
+/// Scale raw pixel bytes into the f32 input of a recognition net,
+/// appending to `out`. Shared by the single-layer and hierarchical codecs
+/// (the scaling depends only on the likelihood family).
+pub(crate) fn scale_pixels_into(likelihood: Likelihood, img: &[u8], out: &mut Vec<f32>) {
+    match likelihood {
+        Likelihood::Bernoulli => out.extend(img.iter().map(|&v| (v != 0) as u32 as f32)),
+        Likelihood::BetaBinomial => out.extend(img.iter().map(|&v| v as f32 / 255.0)),
+    }
+}
+
+/// Reusable-codec constructor for a discretized Gaussian over max-entropy
+/// buckets: `slot` caches one `DiscretizedGaussian` whose `(mu, sigma)`
+/// are updated in place per dimension (validity of the updated fields
+/// matches what `DiscretizedGaussian::new` asserts — sanitized here).
+/// Shared by the posterior path of [`VaeCodec`] and every Gaussian
+/// conditional of [`hierarchy::HierCodec`].
+pub(crate) fn gauss_codec_scratch<'g>(
+    buckets: &MaxEntropyBuckets,
+    prec: u32,
+    mu: f32,
+    sigma: f32,
+    slot: &'g mut Option<DiscretizedGaussian>,
+) -> &'g DiscretizedGaussian {
+    // Guard against degenerate network outputs.
+    let mu = if mu.is_finite() { mu as f64 } else { 0.0 };
+    let sigma = if sigma.is_finite() && sigma > 0.0 {
+        sigma as f64
+    } else {
+        1.0
+    };
+    match slot {
+        // Reuse only if the cached geometry matches this codec (a scratch
+        // may migrate between codecs with different configs).
+        Some(g) if g.buckets.latent_bits == buckets.latent_bits && g.prec == prec => {
+            g.mu = mu;
+            g.sigma = sigma;
+        }
+        _ => {
+            *slot = Some(DiscretizedGaussian::new(buckets.clone(), mu, sigma, prec));
+        }
+    }
+    slot.as_ref().expect("slot populated above")
+}
+
+/// Prepared (division-free) interval of pixel `p` taking value `sym` under
+/// the likelihood params, at precision `prec`. `pmf` is the reusable f64
+/// row buffer for the table path.
+pub(crate) fn pixel_prepared(
+    params: &PixelParams,
+    p: usize,
+    sym: u8,
+    prec: u32,
+    pmf: &mut Vec<f64>,
+) -> PreparedInterval {
+    match params {
+        PixelParams::Bernoulli(probs) => {
+            // Allocation-free fast path (§Perf #5), bit-identical to
+            // Categorical::bernoulli.
+            let c = Bernoulli::new(probs[p] as f64, prec);
+            c.prepared_interval((sym != 0) as usize)
+        }
+        PixelParams::BetaBinomialAb { alpha, beta } => {
+            // Lazy direct codec: O(sym) work, O(1) for the black
+            // background pixels that dominate MNIST (§Perf #3).
+            let c = BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec);
+            c.prepared_interval(sym as u32)
+        }
+        PixelParams::BetaBinomialTable(table) => {
+            let c = BetaBinomial::from_pmf_row_scratch(&table[p * 256..(p + 1) * 256], prec, pmf);
+            let q = c.quantized();
+            PreparedInterval::new(q.start(sym as usize), q.freq(sym as usize), prec)
+        }
+    }
+}
+
+/// Inverse of [`pixel_prepared`]: classify a cumulative value. Lookup is
+/// O(1)/O(sym) for the Bernoulli and direct beta-binomial paths; the
+/// per-pixel table path keeps the short binary search (a LUT would cost
+/// more to build than the ~8 probes it saves on a single-lookup codec —
+/// see `QuantizedCdf::build_lut`).
+pub(crate) fn pixel_lookup(
+    params: &PixelParams,
+    p: usize,
+    cf: u32,
+    prec: u32,
+    pmf: &mut Vec<f64>,
+) -> (u8, Interval) {
+    match params {
+        PixelParams::Bernoulli(probs) => {
+            let c = Bernoulli::new(probs[p] as f64, prec);
+            let (sym, start, freq) = c.lookup(cf);
+            (sym as u8, Interval { start, freq })
+        }
+        PixelParams::BetaBinomialAb { alpha, beta } => {
+            let c = BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec);
+            let (sym, start, freq) = c.lookup(cf);
+            (sym as u8, Interval { start, freq })
+        }
+        PixelParams::BetaBinomialTable(table) => {
+            let c = BetaBinomial::from_pmf_row_scratch(&table[p * 256..(p + 1) * 256], prec, pmf);
+            let q = c.quantized();
+            let sym = q.lookup(cf);
+            (
+                sym as u8,
+                Interval {
+                    start: q.start(sym),
+                    freq: q.freq(sym),
+                },
+            )
+        }
     }
 }
 
@@ -158,10 +272,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// [`Self::scale_image`] appending to a caller-owned buffer — the
     /// batch builders pack many images into one flat matrix this way.
     pub fn scale_image_into(&self, img: &[u8], out: &mut Vec<f32>) {
-        match self.backend.meta().likelihood {
-            Likelihood::Bernoulli => out.extend(img.iter().map(|&v| (v != 0) as u32 as f32)),
-            Likelihood::BetaBinomial => out.extend(img.iter().map(|&v| v as f32 / 255.0)),
-        }
+        scale_pixels_into(self.backend.meta().likelihood, img, out)
     }
 
     /// Latent bucket centres → the f32 latent vector fed to the decoder.
@@ -175,134 +286,16 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         out.extend(idx.iter().map(|&i| self.buckets.centre(i) as f32));
     }
 
-    /// Reusable-codec variant of the posterior-codec constructor: `slot`
-    /// caches one `DiscretizedGaussian` whose `(mu, sigma)` are updated in
-    /// place per latent dimension (validity of the updated fields matches
-    /// what `DiscretizedGaussian::new` asserts — sanitized here).
+    /// Reusable-codec variant of the posterior-codec constructor (thin
+    /// wrapper over the module-level [`gauss_codec_scratch`], pinned to
+    /// this codec's buckets and posterior precision).
     fn posterior_codec_scratch<'g>(
         &self,
         mu: f32,
         sigma: f32,
         slot: &'g mut Option<DiscretizedGaussian>,
     ) -> &'g DiscretizedGaussian {
-        // Guard against degenerate network outputs.
-        let mu = if mu.is_finite() { mu as f64 } else { 0.0 };
-        let sigma = if sigma.is_finite() && sigma > 0.0 {
-            sigma as f64
-        } else {
-            1.0
-        };
-        match slot {
-            // Reuse only if the cached geometry matches this codec (a
-            // scratch may migrate between codecs with different configs).
-            Some(g)
-                if g.buckets.latent_bits == self.cfg.latent_bits
-                    && g.prec == self.cfg.posterior_prec =>
-            {
-                g.mu = mu;
-                g.sigma = sigma;
-            }
-            _ => {
-                *slot = Some(DiscretizedGaussian::new(
-                    self.buckets.clone(),
-                    mu,
-                    sigma,
-                    self.cfg.posterior_prec,
-                ));
-            }
-        }
-        slot.as_ref().expect("slot populated above")
-    }
-
-    /// Prepared (division-free) interval of pixel `p` taking value `sym`
-    /// under the likelihood params (all pixels code at `cfg.pixel_prec`).
-    /// `pmf` is the reusable f64 row buffer for the table path.
-    fn pixel_prepared(
-        &self,
-        params: &PixelParams,
-        p: usize,
-        sym: u8,
-        pmf: &mut Vec<f64>,
-    ) -> PreparedInterval {
-        match params {
-            PixelParams::Bernoulli(probs) => {
-                // Allocation-free fast path (§Perf #5), bit-identical to
-                // Categorical::bernoulli.
-                let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
-                c.prepared_interval((sym != 0) as usize)
-            }
-            PixelParams::BetaBinomialAb { alpha, beta } => {
-                // Lazy direct codec: O(sym) work, O(1) for the black
-                // background pixels that dominate MNIST (§Perf #3).
-                let c = BetaBinomialDirect::new(
-                    255,
-                    alpha[p] as f64,
-                    beta[p] as f64,
-                    self.cfg.pixel_prec,
-                );
-                c.prepared_interval(sym as u32)
-            }
-            PixelParams::BetaBinomialTable(table) => {
-                let c = BetaBinomial::from_pmf_row_scratch(
-                    &table[p * 256..(p + 1) * 256],
-                    self.cfg.pixel_prec,
-                    pmf,
-                );
-                let q = c.quantized();
-                PreparedInterval::new(
-                    q.start(sym as usize),
-                    q.freq(sym as usize),
-                    self.cfg.pixel_prec,
-                )
-            }
-        }
-    }
-
-    /// Inverse of [`Self::pixel_prepared`]: classify a cumulative value.
-    /// Lookup is O(1)/O(sym) for the Bernoulli and direct beta-binomial
-    /// paths; the per-pixel table path keeps the short binary search (a
-    /// LUT would cost more to build than the ~8 probes it saves on a
-    /// single-lookup codec — see `QuantizedCdf::build_lut`).
-    fn pixel_lookup(
-        &self,
-        params: &PixelParams,
-        p: usize,
-        cf: u32,
-        pmf: &mut Vec<f64>,
-    ) -> (u8, Interval) {
-        match params {
-            PixelParams::Bernoulli(probs) => {
-                let c = Bernoulli::new(probs[p] as f64, self.cfg.pixel_prec);
-                let (sym, start, freq) = c.lookup(cf);
-                (sym as u8, Interval { start, freq })
-            }
-            PixelParams::BetaBinomialAb { alpha, beta } => {
-                let c = BetaBinomialDirect::new(
-                    255,
-                    alpha[p] as f64,
-                    beta[p] as f64,
-                    self.cfg.pixel_prec,
-                );
-                let (sym, start, freq) = c.lookup(cf);
-                (sym as u8, Interval { start, freq })
-            }
-            PixelParams::BetaBinomialTable(table) => {
-                let c = BetaBinomial::from_pmf_row_scratch(
-                    &table[p * 256..(p + 1) * 256],
-                    self.cfg.pixel_prec,
-                    pmf,
-                );
-                let q = c.quantized();
-                let sym = q.lookup(cf);
-                (
-                    sym as u8,
-                    Interval {
-                        start: q.start(sym),
-                        freq: q.freq(sym),
-                    },
-                )
-            }
-        }
+        gauss_codec_scratch(&self.buckets, self.cfg.posterior_prec, mu, sigma, slot)
     }
 
     // ---- stepwise primitives (public so the coordinator can interleave
@@ -368,7 +361,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         prepared.extend(
             img.iter()
                 .enumerate()
-                .map(|(p, &sym)| self.pixel_prepared(params, p, sym, pmf)),
+                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf)),
         );
         coder.encode_all_prepared(prepared, self.cfg.pixel_prec);
     }
@@ -427,7 +420,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         let pmf = &mut scratch.pmf;
         let mut p = 0usize;
         coder.decode_all(pixels, self.cfg.pixel_prec, |cf| {
-            let out = self.pixel_lookup(params, p, cf, pmf);
+            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf);
             p += 1;
             out
         })
@@ -623,22 +616,29 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     }
 
     /// Deterministic near-even partition of `n` items into `k` chunks
-    /// (first `n % k` chunks get one extra item). The split depends only
-    /// on `(n, k)`, never on thread scheduling, so chunked containers are
-    /// reproducible.
+    /// (delegates to the module-level [`chunk_ranges`]; kept on the codec
+    /// for API compatibility).
     pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
-        let k = k.clamp(1, n.max(1));
-        let base = n / k;
-        let rem = n % k;
-        let mut out = Vec::with_capacity(k);
-        let mut start = 0;
-        for i in 0..k {
-            let len = base + usize::from(i < rem);
-            out.push(start..start + len);
-            start += len;
-        }
-        out
+        chunk_ranges(n, k)
     }
+}
+
+/// Deterministic near-even partition of `n` items into `k` chunks (first
+/// `n % k` chunks get one extra item). The split depends only on `(n, k)`,
+/// never on thread scheduling, so chunked containers are reproducible.
+/// Shared by the single-layer and hierarchical chunked coding paths.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let k = k.clamp(1, n.max(1));
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
 }
 
 /// Default worker-thread count for the parallel paths.
@@ -646,6 +646,69 @@ fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Fan [`NN_CHUNK`]-image blocks of `images` out to `workers` precompute
+/// threads and consume each block's result **strictly in block order** on
+/// the calling thread — the pipelined-encode skeleton shared by the
+/// single-layer and hierarchical codecs. `precompute` must depend only on
+/// its block (it runs on worker threads, any order); `consume` runs
+/// sequentially, so the coder chain it advances sees exactly the same
+/// inputs at every worker count — bit-identity by construction. With one
+/// block or one worker everything runs inline on the caller.
+pub(crate) fn pipelined_blocks<P, F, G>(
+    images: &[Vec<u8>],
+    workers: usize,
+    precompute: F,
+    mut consume: G,
+) -> Result<()>
+where
+    P: Send,
+    F: Fn(&[Vec<u8>]) -> Result<P> + Sync,
+    G: FnMut(&[Vec<u8>], P) -> Result<()>,
+{
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    let blocks: Vec<&[Vec<u8>]> = images.chunks(NN_CHUNK).collect();
+    if blocks.len() <= 1 || workers <= 1 {
+        for block in blocks {
+            let p = precompute(block)?;
+            consume(block, p)?;
+        }
+        return Ok(());
+    }
+    let workers = workers.min(blocks.len());
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<P>)>();
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (next, blocks, precompute) = (&next, &blocks, &precompute);
+            scope.spawn(move || loop {
+                let bi = next.fetch_add(1, Ordering::Relaxed);
+                if bi >= blocks.len() || tx.send((bi, precompute(blocks[bi]))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        // Consume blocks strictly in order as they land.
+        let mut ready: BTreeMap<usize, Result<P>> = BTreeMap::new();
+        for (bi, block) in blocks.iter().enumerate() {
+            let p = loop {
+                if let Some(p) = ready.remove(&bi) {
+                    break p;
+                }
+                let (i, p) = rx.recv().expect("precompute worker exited early");
+                ready.insert(i, p);
+            }?;
+            consume(block, p)?;
+        }
+        Ok(())
+    })
 }
 
 /// Run `n_jobs` indexed jobs on a bounded pool of `workers` scoped
@@ -697,53 +760,23 @@ impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
     /// against it: worker threads precompute [`PosteriorBatch`]es for
     /// [`NN_CHUNK`]-image blocks (they depend only on the data) while
     /// this thread runs the strictly sequential ANS chain, consuming
-    /// blocks in order. Bit-identical to [`Self::encode_dataset_into`]
-    /// for every worker count: the chain work is untouched and the
-    /// posterior batches are row-independent and identically chunked.
+    /// blocks in order ([`pipelined_blocks`]). Bit-identical to
+    /// [`Self::encode_dataset_into`] for every worker count: the chain
+    /// work is untouched and the posterior batches are row-independent
+    /// and identically chunked.
     pub fn encode_dataset_pipelined(
         &self,
         ans: &mut Ans,
         images: &[Vec<u8>],
         workers: usize,
     ) -> Result<Vec<ImageStats>> {
-        use std::collections::BTreeMap;
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        use std::sync::mpsc;
-
-        let blocks: Vec<&[Vec<u8>]> = images.chunks(NN_CHUNK).collect();
-        if blocks.len() <= 1 || workers <= 1 {
-            return self.encode_dataset_into(ans, images);
-        }
-        let workers = workers.min(blocks.len());
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Result<PosteriorBatch>)>();
-        std::thread::scope(|scope| -> Result<Vec<ImageStats>> {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                let (next, blocks) = (&next, &blocks);
-                scope.spawn(move || loop {
-                    let bi = next.fetch_add(1, Ordering::Relaxed);
-                    if bi >= blocks.len()
-                        || tx.send((bi, self.posterior_batch_for(blocks[bi]))).is_err()
-                    {
-                        break;
-                    }
-                });
-            }
-            drop(tx);
-
-            // Consume blocks strictly in chain order as they land.
-            let mut ready: BTreeMap<usize, Result<PosteriorBatch>> = BTreeMap::new();
-            let mut scratch = CodecScratch::new();
-            let mut stats = Vec::with_capacity(images.len());
-            for (bi, block) in blocks.iter().enumerate() {
-                let posts = loop {
-                    if let Some(p) = ready.remove(&bi) {
-                        break p;
-                    }
-                    let (i, p) = rx.recv().expect("posterior worker exited early");
-                    ready.insert(i, p);
-                }?;
+        let mut scratch = CodecScratch::new();
+        let mut stats = Vec::with_capacity(images.len());
+        pipelined_blocks(
+            images,
+            workers,
+            |block: &[Vec<u8>]| self.posterior_batch_for(block),
+            |block: &[Vec<u8>], posts: PosteriorBatch| {
                 for (r, img) in block.iter().enumerate() {
                     let (mu, sigma) = posts.row(r);
                     stats.push(self.encode_image_with_posterior_scratch(
@@ -754,9 +787,10 @@ impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
                         &mut scratch,
                     )?);
                 }
-            }
-            Ok(stats)
-        })
+                Ok(())
+            },
+        )?;
+        Ok(stats)
     }
 
     /// Encode `images` as `n_chunks` independent BB-ANS chains on the

@@ -499,6 +499,132 @@ mod tests {
     }
 
     #[test]
+    fn empty_sequence_costs_nothing() {
+        // T = 0 edge case: a no-op on the coder, interleavable anywhere
+        // in a chain.
+        let hmm = demo_hmm();
+        let codec = HmmCodec::new(&hmm, 16);
+        let mut ans = Ans::new(1);
+        let bits = codec.encode_sequence(&mut ans, &[]).unwrap();
+        assert_eq!(bits, 0.0);
+        assert!(ans.is_empty());
+        assert_eq!(codec.decode_sequence(&mut ans, 0).unwrap(), Vec::<usize>::new());
+
+        let mut rng = Rng::new(2);
+        let x = sample_sequence(&hmm, 30, &mut rng);
+        codec.encode_sequence(&mut ans, &x).unwrap();
+        codec.encode_sequence(&mut ans, &[]).unwrap();
+        assert_eq!(codec.decode_sequence(&mut ans, 0).unwrap(), Vec::<usize>::new());
+        assert_eq!(codec.decode_sequence(&mut ans, 30).unwrap(), x);
+    }
+
+    #[test]
+    fn single_state_hmm_codes_at_emission_entropy() {
+        // K = 1 edge case: the latent carries zero information (its codec
+        // has a single full-mass symbol), so the rate is pure emission
+        // coding and the roundtrip must still invert exactly.
+        let hmm = Hmm::new(vec![1.0], vec![1.0], vec![0.5, 0.25, 0.125, 0.125], 4).unwrap();
+        let codec = HmmCodec::new(&hmm, 16);
+        let mut rng = Rng::new(5);
+        let seqs: Vec<Vec<usize>> =
+            (0..8).map(|_| sample_sequence(&hmm, 100, &mut rng)).collect();
+        let mut ans = Ans::new(3);
+        let mut net = 0.0;
+        for s in &seqs {
+            net += codec.encode_sequence(&mut ans, s).unwrap();
+        }
+        for s in seqs.iter().rev() {
+            assert_eq!(codec.decode_sequence(&mut ans, s.len()).unwrap(), *s);
+        }
+        let mut ideal = 0.0;
+        for s in &seqs {
+            for &x in s {
+                ideal -= hmm.emit[x].log2();
+            }
+        }
+        assert!((net - ideal).abs() < 0.02 * ideal + 8.0, "net={net} ideal={ideal}");
+    }
+
+    #[test]
+    fn deterministic_transitions_roundtrip() {
+        // Identity transition matrix: the state never changes. The
+        // factorized posteriors may still sample "impossible" state
+        // flips, which the delta transition priors must code (every
+        // symbol keeps freq >= 1 under quantization) and invert exactly.
+        let (k, m) = (3usize, 5usize);
+        let mut trans = vec![0.0; k * k];
+        for i in 0..k {
+            trans[i * k + i] = 1.0;
+        }
+        let mut emit = vec![0.0; k * m];
+        for (i, row) in emit.chunks_mut(m).enumerate() {
+            for (s, e) in row.iter_mut().enumerate() {
+                *e = if s == i { 0.6 } else { 0.1 };
+            }
+        }
+        let hmm = Hmm::new(vec![0.25, 0.5, 0.25], trans, emit, m).unwrap();
+        let codec = HmmCodec::new(&hmm, 16);
+        let mut rng = Rng::new(9);
+        let seqs: Vec<Vec<usize>> = (0..6)
+            .map(|i| sample_sequence(&hmm, 10 + 7 * i, &mut rng))
+            .collect();
+        let mut ans = Ans::new(11);
+        for s in &seqs {
+            codec.encode_sequence(&mut ans, s).unwrap();
+        }
+        for s in seqs.iter().rev() {
+            assert_eq!(codec.decode_sequence(&mut ans, s.len()).unwrap(), *s);
+        }
+    }
+
+    /// Golden-vector replay (satellite): the serialized bitstream of a
+    /// fixed dyadic-parameter HMM is pinned byte-for-byte. Every float on
+    /// this model is exact (delta posteriors from deterministic
+    /// transitions, dyadic emission PMFs), so the bytes are a pure
+    /// function of the coder, the quantizer and the op schedule — if this
+    /// test breaks, chained HMM streams in the wild stop decoding and the
+    /// format owes a version bump.
+    #[test]
+    fn golden_bitstream_replay() {
+        let hmm = Hmm::new(
+            vec![1.0, 0.0],
+            vec![1.0, 0.0, 0.0, 1.0],
+            vec![0.5, 0.25, 0.125, 0.125, 0.125, 0.125, 0.25, 0.5],
+            4,
+        )
+        .unwrap();
+        let codec = HmmCodec::new(&hmm, 16);
+        let seqs: Vec<Vec<usize>> = vec![
+            vec![0, 2, 1, 0, 3, 1, 0, 0],
+            vec![1, 1, 2, 0],
+            vec![3, 0, 2, 2, 1, 0],
+        ];
+        let mut ans = Ans::new(0xD00D);
+        for s in &seqs {
+            codec.encode_sequence(&mut ans, s).unwrap();
+        }
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            // head (LE u64)
+            0xD6, 0x09, 0x71, 0xFF, 0x07, 0x00, 0x00, 0x00,
+            // clean_words_used = 1 (LE u64)
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // stream len = 2 (LE u64)
+            0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            // stream words (LE u32 each)
+            0x98, 0x94, 0x63, 0x8A, 0xD8, 0xD3, 0x7A, 0x78,
+        ];
+        assert_eq!(ans.to_message().to_bytes(), want, "HMM bitstream drifted");
+
+        // The pinned bytes replay through a fresh coder.
+        let msg = crate::ans::AnsMessage::from_bytes(&want).unwrap();
+        let mut ans2 = Ans::from_message(&msg, 0xD00D);
+        for s in seqs.iter().rev() {
+            assert_eq!(codec.decode_sequence(&mut ans2, s.len()).unwrap(), *s);
+        }
+    }
+
+    #[test]
     fn startup_bits_scale_with_sequence_length() {
         // The paper's §4.1 concern, measured: clean bits consumed by the
         // FIRST sequence grow with T.

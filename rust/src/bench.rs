@@ -57,6 +57,9 @@ pub struct Bench {
     pub measure: Duration,
     pub min_iters: u64,
     results: Vec<Measurement>,
+    /// Derived scalars recorded alongside the measurements (knee points,
+    /// suggested knobs, rates) — see [`Bench::annotate`].
+    annotations: BTreeMap<String, f64>,
 }
 
 impl Default for Bench {
@@ -83,7 +86,16 @@ impl Bench {
             },
             min_iters: 3,
             results: Vec::new(),
+            annotations: BTreeMap::new(),
         }
+    }
+
+    /// Record a derived scalar into the JSON trajectory under
+    /// `"annotations"` — for values that are conclusions rather than raw
+    /// timings (a throughput knee, a suggested chunk size, a measured
+    /// bits/dim).
+    pub fn annotate(&mut self, key: &str, value: f64) {
+        self.annotations.insert(key.to_string(), value);
     }
 
     /// Time `f`, which performs `units` work units per call.
@@ -158,6 +170,12 @@ impl Bench {
             Json::Bool(std::env::var_os("BBANS_BENCH_FAST").is_some()),
         );
         top.insert("results".to_string(), Json::Arr(results));
+        let ann: BTreeMap<String, Json> = self
+            .annotations
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        top.insert("annotations".to_string(), Json::Obj(ann));
         Json::Obj(top)
     }
 
@@ -218,8 +236,11 @@ mod tests {
         b.run("no-units", 0.0, || {
             acc = black_box(acc.wrapping_add(1));
         });
+        b.annotate("knee", 64.0);
 
         let parsed = Json::parse(&b.to_json("unit").to_string()).unwrap();
+        let ann = parsed.get("annotations").unwrap();
+        assert_eq!(ann.get("knee").unwrap().as_f64().unwrap(), 64.0);
         assert_eq!(parsed.get("target").unwrap().as_str().unwrap(), "unit");
         let results = match parsed.get("results").unwrap() {
             Json::Arr(a) => a,

@@ -90,6 +90,16 @@ impl Categorical {
         syms: &[usize],
         scratch: &mut Vec<PreparedInterval>,
     ) {
+        if self.q.num_symbols() == 1 {
+            // Single-symbol alphabet: the one interval carries the full
+            // mass 2^prec, i.e. zero bits per symbol, and the coders'
+            // renormalization thresholds cannot represent a full-mass
+            // symbol (`freq << (64 - prec)` wraps) — so the whole encode
+            // is the exact no-op it is mathematically. `decode_all` needs
+            // no twin guard: its update step is naturally the identity.
+            debug_assert!(syms.iter().all(|&s| s == 0));
+            return;
+        }
         match &self.prepared {
             Some(t) => t.gather_into(syms, scratch),
             None if syms.len() >= self.q.num_symbols() => {
@@ -378,6 +388,27 @@ mod tests {
             assert_eq!(plain.decode_all(&mut a, len), syms);
             assert!(a.is_empty() && b.is_empty());
         }
+    }
+
+    #[test]
+    fn single_symbol_alphabet_is_free() {
+        // K = 1 (e.g. a one-state HMM's latent): every symbol carries zero
+        // bits. Both the per-symbol and the batch encode paths must be
+        // exact no-ops, and decode must invert them.
+        let c = Categorical::from_pmf(&[1.0], 16);
+        let mut ans = Ans::new(7);
+        ans.push(3, 5, 12); // pre-existing content
+        let before = ans.to_message();
+        for _ in 0..50 {
+            c.push(&mut ans, 0);
+        }
+        c.encode_all(&mut ans, &[0; 200]);
+        assert_eq!(ans.to_message(), before, "k=1 coding must not change state");
+        assert_eq!(c.decode_all(&mut ans, 200), vec![0usize; 200]);
+        for _ in 0..50 {
+            assert_eq!(c.pop(&mut ans), 0);
+        }
+        assert_eq!(ans.to_message(), before);
     }
 
     #[test]

@@ -27,8 +27,12 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use crate::ans::Ans;
-use crate::bbans::container::{Container, ParallelContainer, MAGIC_PARALLEL};
+use crate::bbans::container::{
+    Container, HierContainer, ParallelContainer, MAGIC_HIER, MAGIC_PARALLEL,
+};
+use crate::bbans::hierarchy::HierCodec;
 use crate::bbans::{BbAnsConfig, CodecScratch, VaeCodec};
+use crate::model::hierarchy::HierVae;
 use crate::model::tensor::Matrix;
 use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PosteriorBatch};
 use crate::runtime::{load_config, Engine};
@@ -260,6 +264,11 @@ fn worker_loop<F>(
         }
     };
 
+    // Hierarchical backends rebuilt from BBC3 headers, memoized across
+    // requests: the common case is many decodes of one published
+    // container, and a rebuild re-derives every weight from the seed.
+    let mut hier_cache: HashMap<String, HierVae> = HashMap::new();
+
     loop {
         // Block for the first job.
         let first = match rx.recv() {
@@ -315,7 +324,7 @@ fn worker_loop<F>(
         }
         if !decompress.is_empty() {
             Metrics::inc(&metrics.requests, decompress.len() as u64);
-            batched_decode(&backends, &metrics, decompress);
+            batched_decode(&backends, &metrics, decompress, &mut hier_cache);
         }
         metrics.batch_latency.observe(t_batch.elapsed());
 
@@ -480,6 +489,7 @@ fn batched_decode(
     backends: &HashMap<String, Box<dyn Backend>>,
     metrics: &Metrics,
     jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
+    hier_cache: &mut HashMap<String, HierVae>,
 ) {
     // Parse containers and group by model. Chunk-parallel (BBC2)
     // containers have no cross-stream NN batching to exploit here — each
@@ -491,6 +501,10 @@ fn batched_decode(
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
             decode_parallel_container(backends, metrics, &bytes, reply);
+            continue;
+        }
+        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
+            decode_hier_container(metrics, &bytes, reply, hier_cache);
             continue;
         }
         match Container::from_bytes(&bytes) {
@@ -691,6 +705,63 @@ fn decode_parallel_container(
     }
 }
 
+/// Decode one hierarchical (`BBC3`) container. The header is
+/// self-describing, so the backend is rebuilt from it instead of looked up
+/// in the model map, and the container's chunks then decode **in lock
+/// step**: every chain advances one image per round with each round's net
+/// evaluations batched across all chains — the coordinator's serving-loop
+/// pattern applied to the deeper bits-back chain.
+fn decode_hier_container(
+    metrics: &Metrics,
+    bytes: &[u8],
+    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+    cache: &mut HashMap<String, HierVae>,
+) {
+    let fail = |msg: String| {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(msg));
+    };
+    let hc = match HierContainer::from_bytes(bytes) {
+        Ok(hc) => hc,
+        Err(e) => return fail(format!("bad container: {e:#}")),
+    };
+    // Memoization key covers the FULL header identity — backend_id alone
+    // encodes only the seed, and a warm cache must accept/reject exactly
+    // the same headers a cold one would (build_backend checks that
+    // weight_seed and backend_id agree).
+    let key = format!(
+        "{}|{}|{}|{}|{}|{:?}",
+        hc.backend_id,
+        hc.weight_seed,
+        hc.pixels,
+        hc.hidden,
+        hc.likelihood.tag(),
+        hc.dims
+    );
+    if !cache.contains_key(&key) {
+        let backend = match hc.build_backend() {
+            Ok(b) => b,
+            Err(e) => return fail(format!("{e:#}")),
+        };
+        if cache.len() >= 8 {
+            cache.clear(); // crude bound; rebuilds are correct, just slow
+        }
+        cache.insert(key.clone(), backend);
+    }
+    let backend = cache.get(&key).expect("inserted above");
+    let codec = match HierCodec::new(backend, hc.cfg, hc.schedule) {
+        Ok(c) => c,
+        Err(e) => return fail(format!("{e:#}")),
+    };
+    match hc.decode_lockstep(&codec) {
+        Ok(images) => {
+            Metrics::inc(&metrics.images_decoded, images.len() as u64);
+            let _ = reply.send(Ok(images));
+        }
+        Err(e) => fail(format!("hierarchical container decode failed: {e:#}")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -808,6 +879,36 @@ mod tests {
         // Wrong backend id still rejected for BBC2.
         let mut bad = pc;
         bad.backend_id = "pjrt-b16".into();
+        assert!(h.decompress(bad.to_bytes()).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hier_container_decodes_through_service() {
+        // A BBC3 container produced offline decodes through the serving
+        // path via its self-describing header (lock-step across chunks).
+        use crate::bbans::hierarchy::Schedule;
+        use crate::model::hierarchy::{HierMeta, HierVae};
+        let meta = HierMeta {
+            name: "hier2".into(),
+            pixels: 36,
+            dims: vec![6, 4],
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 99);
+        let codec = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let images = sample_images(8, 21);
+        let hc = HierContainer::encode_with_workers(&codec, &images, 3, 2).unwrap();
+
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        assert_eq!(h.decompress(hc.to_bytes()).unwrap(), images);
+
+        // A header whose backend id does not match its weight seed is
+        // rejected instead of silently decoding with the wrong model.
+        let mut bad = hc;
+        bad.backend_id = "hier-native-s1".into();
         assert!(h.decompress(bad.to_bytes()).is_err());
         svc.shutdown();
     }

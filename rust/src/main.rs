@@ -14,12 +14,21 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use bbans::bbans::container::{Container, ParallelContainer, MAGIC_PARALLEL};
+use bbans::bbans::container::{
+    Container, HierContainer, ParallelContainer, MAGIC_HIER, MAGIC_PARALLEL,
+};
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
 use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
 use bbans::data;
+use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::model::vae::load_native;
+use bbans::model::Likelihood;
 use bbans::runtime::{default_artifact_dir, load_config};
+
+/// Default weight seed of CLI-built hierarchical models (any nonzero value
+/// works; encoder and decoder derive identical weights from the header).
+const DEFAULT_HIER_SEED: u64 = 0xB175_3A77;
 
 struct Args {
     positional: Vec<String>,
@@ -71,12 +80,18 @@ fn usage() -> ! {
          \n\
          bbans info\n\
          bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native] [--chunks K]\n\
+         bbans compress   --layers L -i images.idx -o out.bbc [--schedule naive|bitswap]\n\
+                          [--hier-dims 32,16,8] [--hier-hidden H] [--hier-seed S]\n\
+                          [--binarized] [--chunks K]\n\
          bbans decompress -i in.bbc -o out.idx [--native]\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16] [--window-ms 2]\n\
          bbans client     --addr HOST:PORT --stats\n\
          \n\
          --chunks K > 1 encodes K independent chains on K threads (native\n\
          backend; produces a BBC2 chunk-parallel container).\n\
+         --layers L codes through an L-layer hierarchical VAE (Bit-Swap by\n\
+         default; produces a self-describing BBC3 container that any bbans\n\
+         binary can decode without artifacts).\n\
          \n\
          Artifacts default to ./artifacts ($BBANS_ARTIFACTS overrides)."
     );
@@ -166,7 +181,6 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    let model = args.flags.get("model").context("need -m MODEL")?.clone();
     let input = PathBuf::from(args.flags.get("input").context("need -i IDX")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o FILE")?);
     let ds = data::load_idx_images(&input)?;
@@ -185,6 +199,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
             .map_err(|_| anyhow!("invalid --chunks value '{v}' (want a positive integer)"))?,
         None => 1,
     };
+
+    if args.flags.contains_key("layers") {
+        return cmd_compress_hier(args, images, rows * cols, raw_bytes, chunks, &output);
+    }
+
+    let model = args.flags.get("model").context("need -m MODEL")?.clone();
     if chunks > 1 {
         // Chunk-parallel fast path: independent chains on threads, native
         // backend (the PJRT handles are not Sync; it parallelizes through
@@ -229,10 +249,140 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compress --layers L`: code through an L-layer hierarchical VAE into a
+/// self-describing `BBC3` container. No artifacts are needed — the model
+/// is derived deterministically from `--hier-seed` and its geometry, both
+/// recorded in the header, so any `bbans` binary can decode the result.
+fn cmd_compress_hier(
+    args: &Args,
+    mut images: Vec<Vec<u8>>,
+    pixels: usize,
+    raw_bytes: usize,
+    chunks: usize,
+    output: &std::path::Path,
+) -> Result<()> {
+    let layers: usize = args
+        .flags
+        .get("layers")
+        .expect("checked by caller")
+        .parse()
+        .map_err(|_| anyhow!("invalid --layers value"))?;
+    if !(1..=8).contains(&layers) {
+        bail!("--layers must be in 1..=8");
+    }
+    let schedule = match args.flags.get("schedule") {
+        Some(s) => Schedule::parse(s)?,
+        None => Schedule::BitSwap,
+    };
+    let dims: Vec<usize> = match args.flags.get("hier-dims") {
+        Some(v) => {
+            let parsed: Result<Vec<usize>> = v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("invalid --hier-dims value '{v}'"))
+                })
+                .collect();
+            parsed?
+        }
+        // Default: geometric halving from 32, e.g. L=3 → 32,16,8.
+        None => (0..layers).map(|l| (32usize >> l).max(2)).collect(),
+    };
+    if dims.len() != layers {
+        bail!("--hier-dims lists {} layers, --layers says {layers}", dims.len());
+    }
+    if dims.iter().any(|&d| d == 0 || d > 1 << 16) {
+        bail!("--hier-dims entries must be in 1..=65536 (got {dims:?})");
+    }
+    let hidden: usize = args
+        .flags
+        .get("hier-hidden")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|_| anyhow!("invalid --hier-hidden value"))?
+        .unwrap_or(64);
+    if hidden == 0 || hidden > 1 << 20 {
+        bail!("--hier-hidden must be in 1..=1048576");
+    }
+    let seed: u64 = args
+        .flags
+        .get("hier-seed")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|_| anyhow!("invalid --hier-seed value"))?
+        .unwrap_or(DEFAULT_HIER_SEED);
+    if seed == 0 {
+        bail!("--hier-seed must be nonzero (0 is reserved for artifact-backed models)");
+    }
+    let likelihood = if args.switches.contains("binarized") {
+        // A Bernoulli likelihood codes pixels as zero/nonzero, so make the
+        // data genuinely binary up front to keep the roundtrip lossless.
+        for img in &mut images {
+            for v in img.iter_mut() {
+                *v = (*v != 0) as u8;
+            }
+        }
+        Likelihood::Bernoulli
+    } else {
+        Likelihood::BetaBinomial
+    };
+
+    let meta = HierMeta {
+        name: format!("hier{layers}"),
+        pixels,
+        dims,
+        hidden,
+        likelihood,
+    };
+    let backend = HierVae::random(meta, seed);
+    let codec = HierCodec::new(&backend, bbans_config(args), schedule)?;
+    let t = std::time::Instant::now();
+    let container = HierContainer::encode_with(&codec, &images, chunks)?;
+    let dt = t.elapsed();
+    let bytes = container.to_bytes();
+    std::fs::write(output, &bytes)?;
+    let n_images = container.num_images();
+    let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
+    println!(
+        "compressed {n_images} images through {layers}-layer hierarchy ({} schedule, \
+         {} chunks): {raw_bytes} -> {} bytes ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+        schedule.name(),
+        container.chunks.len(),
+        bytes.len(),
+        dt.as_secs_f64(),
+        n_images as f64 / dt.as_secs_f64(),
+    );
+    Ok(())
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o IDX")?);
     let container = std::fs::read(&input)?;
+
+    if container.len() >= 4 && &container[0..4] == MAGIC_HIER {
+        // Hierarchical container: the header is self-describing, so the
+        // exact backend is rebuilt from it (no artifacts needed).
+        let hc = HierContainer::from_bytes(&container)?;
+        let backend = hc.build_backend()?;
+        let codec = HierCodec::new(&backend, hc.cfg, hc.schedule)?;
+        let t = std::time::Instant::now();
+        let images = hc.decode_with(&codec)?;
+        let dt = t.elapsed();
+        let n = write_square_idx(images, &output)?;
+        println!(
+            "decompressed {n} images ({}-layer hierarchy, {} schedule, {} chunks) \
+             in {:.2}s ({:.1} img/s) -> {}",
+            hc.dims.len(),
+            hc.schedule.name(),
+            hc.chunks.len(),
+            dt.as_secs_f64(),
+            n as f64 / dt.as_secs_f64(),
+            output.display()
+        );
+        return Ok(());
+    }
 
     if container.len() >= 4 && &container[0..4] == MAGIC_PARALLEL {
         // Chunk-parallel container: decode chunks on threads with the

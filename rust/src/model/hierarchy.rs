@@ -1,0 +1,380 @@
+//! Hierarchical (multi-layer) VAE backends — the model half of the
+//! Bit-Swap subsystem (Kingma et al. 2019; HiLLoC, Townsend et al. 2020).
+//!
+//! The model class is a **Markov top-down hierarchy** over latent layers
+//! `z_0 … z_{L-1}` (`z_0` closest to the data, `z_{L-1}` the top):
+//!
+//! ```text
+//! generative:   p(z_{L-1}) · p(z_{L-2} | z_{L-1}) ··· p(z_0 | z_1) · p(x | z_0)
+//! recognition:  q(z_0 | x) · q(z_1 | z_0) ··· q(z_{L-1} | z_{L-2})
+//! ```
+//!
+//! Every conditional between latent layers is a diagonal Gaussian whose
+//! `(mu, sigma)` come from a small MLP on the *discretized* layer below
+//! (recognition) or above (generative); the top prior is the standard
+//! normal, which the max-entropy bucketing turns into an exactly uniform
+//! discrete prior. The Markov structure is what makes the interleaved
+//! Bit-Swap coding schedule valid (see [`crate::bbans::hierarchy`]): at
+//! every step of the chain, the next conditional depends only on the one
+//! vector just coded.
+//!
+//! [`HierVae`] is the pure-Rust implementation, built entirely on the
+//! packed-GEMM kernels from the tensor layer, so the determinism contract
+//! carries over: every `(mu, sigma)` row is independent of batch grouping
+//! bit-for-bit, which is what lets the coding loops batch the data-side
+//! recognition calls and the coordinator batch across streams without
+//! changing a single coded bit.
+
+use anyhow::{bail, Result};
+
+use super::tensor::{dense_packed, Epilogue, Matrix};
+use super::vae::{AB_EPS, LOGVAR_MAX, LOGVAR_MIN};
+use super::{Likelihood, PixelParams, PosteriorBatch};
+use crate::util::rng::Rng;
+
+/// Static description of one hierarchical model.
+#[derive(Debug, Clone)]
+pub struct HierMeta {
+    pub name: String,
+    pub pixels: usize,
+    /// Latent widths bottom-up: `dims[0]` is `z_0` (next to the data),
+    /// `dims[L-1]` the top layer.
+    pub dims: Vec<usize>,
+    /// Hidden width shared by every conditional's MLP.
+    pub hidden: usize,
+    pub likelihood: Likelihood,
+}
+
+impl HierMeta {
+    /// Number of latent layers `L`.
+    pub fn layers(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Input width of recognition layer `l` (`q(z_l | z_{l-1})`, with
+    /// `z_{-1} = x`).
+    pub fn infer_in_dim(&self, layer: usize) -> usize {
+        if layer == 0 {
+            self.pixels
+        } else {
+            self.dims[layer - 1]
+        }
+    }
+}
+
+/// Where a hierarchical VAE's conditionals execute — the multi-layer
+/// sibling of [`super::Backend`]. All calls are batched (`[B, ·]` matrices
+/// in, batches out) and must be **row-independent and batch-invariant**:
+/// row `r` of any output depends only on row `r` of the input, bit-for-bit,
+/// so the BB-ANS/Bit-Swap loops and the coordinator's lock-step serving
+/// loops may group rows freely.
+pub trait HierBackend {
+    fn meta(&self) -> &HierMeta;
+
+    /// Stable identifier recorded in `BBC3` containers; decode must use a
+    /// backend with the same id.
+    fn backend_id(&self) -> String;
+
+    /// Seed that deterministically reproduces this backend's weights, for
+    /// self-describing containers (`0` = weights come from trained
+    /// artifacts and must be loaded by model name).
+    fn weight_seed(&self) -> u64 {
+        0
+    }
+
+    /// Recognition conditional `q(z_layer | z_{layer-1})` (`z_{-1} = x`):
+    /// `[B, infer_in_dim(layer)]` → `(mu, sigma)` of width `dims[layer]`.
+    fn infer_batch(&self, layer: usize, xs: &Matrix) -> Result<PosteriorBatch>;
+
+    /// Generative conditional `p(z_layer | z_{layer+1})` for
+    /// `layer < L-1`: `[B, dims[layer+1]]` → `(mu, sigma)` of width
+    /// `dims[layer]`. (The top layer has no conditional — its prior is the
+    /// exactly-uniform discretized standard normal.)
+    fn gen_batch(&self, layer: usize, ys: &Matrix) -> Result<PosteriorBatch>;
+
+    /// Data likelihood `p(x | z_0)`: `[B, dims[0]]` → per-pixel parameters
+    /// per row.
+    fn likelihood_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>>;
+}
+
+/// One diagonal-Gaussian conditional: `input → hidden (ReLU) → (mu, lv)`,
+/// with `sigma = exp(lv/2)` exactly as the single-layer backend computes
+/// it. Weights are stored packed only — the packed GEMM *is* the reference
+/// semantics at this layer (pinned against the scalar kernel by the tensor
+/// tests).
+struct GaussNet {
+    w1: super::tensor::PackedMatrix,
+    b1: Vec<f32>,
+    w_mu: super::tensor::PackedMatrix,
+    b_mu: Vec<f32>,
+    w_lv: super::tensor::PackedMatrix,
+    b_lv: Vec<f32>,
+}
+
+impl GaussNet {
+    fn random(rng: &mut Rng, input: usize, hidden: usize, out: usize) -> Self {
+        let mut mat = |r: usize, c: usize, scale: f64| {
+            Matrix::new(
+                r,
+                c,
+                (0..r * c).map(|_| (rng.normal() * scale) as f32).collect(),
+            )
+            .packed()
+        };
+        Self {
+            w1: mat(input, hidden, 0.08),
+            b1: vec![0.0; hidden],
+            w_mu: mat(hidden, out, 0.1),
+            b_mu: vec![0.0; out],
+            w_lv: mat(hidden, out, 0.05),
+            b_lv: vec![-1.0; out],
+        }
+    }
+
+    fn forward(&self, xs: &Matrix) -> PosteriorBatch {
+        let h = dense_packed(xs, &self.w1, &self.b1, Epilogue::Relu);
+        let mu = dense_packed(&h, &self.w_mu, &self.b_mu, Epilogue::Linear);
+        let mut sigma = dense_packed(&h, &self.w_lv, &self.b_lv, Epilogue::Linear);
+        for v in &mut sigma.data {
+            *v = (0.5 * v.clamp(LOGVAR_MIN, LOGVAR_MAX)).exp();
+        }
+        PosteriorBatch { mu, sigma }
+    }
+}
+
+/// The pixel head `p(x | z_0)`: `dims[0] → hidden (ReLU) → pixels·heads`
+/// with the output nonlinearity fused, mirroring the single-layer
+/// generative net.
+struct OutNet {
+    w1: super::tensor::PackedMatrix,
+    b1: Vec<f32>,
+    w_out: super::tensor::PackedMatrix,
+    b_out: Vec<f32>,
+}
+
+impl OutNet {
+    fn random(rng: &mut Rng, input: usize, hidden: usize, out: usize) -> Self {
+        let mut mat = |r: usize, c: usize, scale: f64| {
+            Matrix::new(
+                r,
+                c,
+                (0..r * c).map(|_| (rng.normal() * scale) as f32).collect(),
+            )
+            .packed()
+        };
+        Self {
+            w1: mat(input, hidden, 0.1),
+            b1: vec![0.0; hidden],
+            w_out: mat(hidden, out, 0.05),
+            b_out: vec![0.0; out],
+        }
+    }
+
+    fn forward(&self, ys: &Matrix, likelihood: Likelihood, pixels: usize) -> Vec<PixelParams> {
+        let ep = match likelihood {
+            Likelihood::Bernoulli => Epilogue::Sigmoid,
+            Likelihood::BetaBinomial => Epilogue::Softplus,
+        };
+        let h = dense_packed(ys, &self.w1, &self.b1, Epilogue::Relu);
+        let out = dense_packed(&h, &self.w_out, &self.b_out, ep);
+        match likelihood {
+            Likelihood::Bernoulli => (0..ys.rows)
+                .map(|r| PixelParams::Bernoulli(out.row(r).to_vec()))
+                .collect(),
+            Likelihood::BetaBinomial => (0..ys.rows)
+                .map(|r| {
+                    let row = out.row(r);
+                    PixelParams::BetaBinomialAb {
+                        alpha: row[..pixels].iter().map(|v| v + AB_EPS).collect(),
+                        beta: row[pixels..].iter().map(|v| v + AB_EPS).collect(),
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Pure-Rust hierarchical VAE on the packed-GEMM kernels. `Sync` by
+/// construction (plain data), so the chunk-parallel coding paths apply.
+pub struct HierVae {
+    meta: HierMeta,
+    /// `inf[l]` computes `q(z_l | z_{l-1})` (`z_{-1} = x`); length `L`.
+    inf: Vec<GaussNet>,
+    /// `gen[l]` computes `p(z_l | z_{l+1})`; length `L-1`.
+    gen: Vec<GaussNet>,
+    out: OutNet,
+    weight_seed: u64,
+}
+
+impl HierVae {
+    /// A deterministic, seeded model: the same `(meta, seed)` always yields
+    /// the same weights, on the encoder and the decoder side alike — this
+    /// is what makes `BBC3` containers self-describing until trained
+    /// hierarchical artifacts exist (the header records `(dims, hidden,
+    /// likelihood, weight_seed)`).
+    pub fn random(meta: HierMeta, seed: u64) -> Self {
+        assert!(!meta.dims.is_empty(), "hierarchy needs at least one layer");
+        assert!(meta.dims.iter().all(|&d| d >= 1), "zero-width latent layer");
+        assert_ne!(seed, 0, "weight seed 0 is reserved for artifact-backed models");
+        let mut rng = Rng::new(seed);
+        let heads = match meta.likelihood {
+            Likelihood::Bernoulli => 1,
+            Likelihood::BetaBinomial => 2,
+        };
+        let l = meta.layers();
+        let inf = (0..l)
+            .map(|layer| {
+                GaussNet::random(&mut rng, meta.infer_in_dim(layer), meta.hidden, meta.dims[layer])
+            })
+            .collect();
+        let gen = (0..l.saturating_sub(1))
+            .map(|layer| {
+                GaussNet::random(&mut rng, meta.dims[layer + 1], meta.hidden, meta.dims[layer])
+            })
+            .collect();
+        let out = OutNet::random(&mut rng, meta.dims[0], meta.hidden, meta.pixels * heads);
+        Self {
+            meta,
+            inf,
+            gen,
+            out,
+            weight_seed: seed,
+        }
+    }
+}
+
+impl HierBackend for HierVae {
+    fn meta(&self) -> &HierMeta {
+        &self.meta
+    }
+
+    fn backend_id(&self) -> String {
+        format!("hier-native-s{}", self.weight_seed)
+    }
+
+    fn weight_seed(&self) -> u64 {
+        self.weight_seed
+    }
+
+    fn infer_batch(&self, layer: usize, xs: &Matrix) -> Result<PosteriorBatch> {
+        let Some(net) = self.inf.get(layer) else {
+            bail!("recognition layer {layer} out of range (L = {})", self.meta.layers());
+        };
+        let want = self.meta.infer_in_dim(layer);
+        if xs.cols != want {
+            bail!("recognition layer {layer} input width {} != {want}", xs.cols);
+        }
+        Ok(net.forward(xs))
+    }
+
+    fn gen_batch(&self, layer: usize, ys: &Matrix) -> Result<PosteriorBatch> {
+        let Some(net) = self.gen.get(layer) else {
+            bail!(
+                "generative conditional {layer} out of range (L = {})",
+                self.meta.layers()
+            );
+        };
+        let want = self.meta.dims[layer + 1];
+        if ys.cols != want {
+            bail!("generative conditional {layer} input width {} != {want}", ys.cols);
+        }
+        Ok(net.forward(ys))
+    }
+
+    fn likelihood_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        if ys.cols != self.meta.dims[0] {
+            bail!("likelihood input width {} != {}", ys.cols, self.meta.dims[0]);
+        }
+        Ok(self
+            .out
+            .forward(ys, self.meta.likelihood, self.meta.pixels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(likelihood: Likelihood, dims: &[usize]) -> HierMeta {
+        HierMeta {
+            name: "hier-test".into(),
+            pixels: 20,
+            dims: dims.to_vec(),
+            hidden: 9,
+            likelihood,
+        }
+    }
+
+    #[test]
+    fn shapes_and_positivity() {
+        let v = HierVae::random(meta(Likelihood::Bernoulli, &[6, 4, 3]), 3);
+        let x = Matrix::new(2, 20, vec![0.5; 40]);
+        let p0 = v.infer_batch(0, &x).unwrap();
+        assert_eq!((p0.mu.rows, p0.mu.cols), (2, 6));
+        assert!(p0.sigma.data.iter().all(|&s| s > 0.0));
+
+        let z0 = Matrix::new(2, 6, vec![0.1; 12]);
+        let p1 = v.infer_batch(1, &z0).unwrap();
+        assert_eq!(p1.mu.cols, 4);
+
+        let z1 = Matrix::new(2, 4, vec![-0.2; 8]);
+        let g0 = v.gen_batch(0, &z1).unwrap();
+        assert_eq!(g0.mu.cols, 6);
+
+        match &v.likelihood_batch(&z0).unwrap()[0] {
+            PixelParams::Bernoulli(p) => {
+                assert_eq!(p.len(), 20);
+                assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            }
+            other => panic!("wrong params {other:?}"),
+        }
+    }
+
+    #[test]
+    fn beta_binomial_head_positive() {
+        let v = HierVae::random(meta(Likelihood::BetaBinomial, &[5, 3]), 4);
+        let z0 = Matrix::new(1, 5, vec![0.3; 5]);
+        match &v.likelihood_batch(&z0).unwrap()[0] {
+            PixelParams::BetaBinomialAb { alpha, beta } => {
+                assert_eq!(alpha.len(), 20);
+                assert_eq!(beta.len(), 20);
+                assert!(alpha.iter().all(|&a| a > 0.0));
+                assert!(beta.iter().all(|&b| b > 0.0));
+            }
+            other => panic!("wrong params {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deterministic_and_batch_invariant() {
+        // Same seed → same weights; row r of a batch equals the same row
+        // computed alone, bitwise (the contract every coding loop needs).
+        let a = HierVae::random(meta(Likelihood::Bernoulli, &[6, 4]), 11);
+        let b = HierVae::random(meta(Likelihood::Bernoulli, &[6, 4]), 11);
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..20).map(|_| (rng.f64() < 0.4) as u32 as f32).collect())
+            .collect();
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let batch = a.infer_batch(0, &Matrix::new(5, 20, flat)).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            let one = a.infer_batch(0, &Matrix::new(1, 20, row.clone())).unwrap();
+            assert_eq!(one.mu.row(0), batch.mu.row(r), "mu row {r}");
+            assert_eq!(one.sigma.row(0), batch.sigma.row(r), "sigma row {r}");
+            let other = b.infer_batch(0, &Matrix::new(1, 20, row.clone())).unwrap();
+            assert_eq!(other.mu.row(0), one.mu.row(0), "seeded rebuild row {r}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_layer_and_width() {
+        let v = HierVae::random(meta(Likelihood::Bernoulli, &[6, 4]), 7);
+        let x = Matrix::new(1, 20, vec![0.0; 20]);
+        assert!(v.infer_batch(2, &x).is_err());
+        assert!(v.infer_batch(1, &x).is_err()); // wants width 6
+        assert!(v.gen_batch(1, &x).is_err()); // only conditional 0 exists
+        let z1 = Matrix::new(1, 4, vec![0.0; 4]);
+        assert!(v.gen_batch(0, &z1).is_ok());
+        assert!(v.likelihood_batch(&z1).is_err()); // wants width 6
+    }
+}

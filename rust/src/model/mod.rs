@@ -14,6 +14,7 @@
 //! results differ across backends at the ULP level, and BB-ANS requires
 //! the decoder to reproduce the encoder's quantized distributions exactly.
 
+pub mod hierarchy;
 pub mod tensor;
 pub mod vae;
 pub mod weights;
@@ -44,6 +45,24 @@ impl Likelihood {
         match self {
             Self::Bernoulli => "bernoulli",
             Self::BetaBinomial => "beta_binomial",
+        }
+    }
+
+    /// Wire tag used by container headers (`BBC3` records the likelihood
+    /// family so self-describing hierarchical models rebuild exactly).
+    pub fn tag(&self) -> u8 {
+        match self {
+            Self::Bernoulli => 0,
+            Self::BetaBinomial => 1,
+        }
+    }
+
+    /// Inverse of [`Likelihood::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(Self::Bernoulli),
+            1 => Ok(Self::BetaBinomial),
+            other => bail!("unknown likelihood tag {other}"),
         }
     }
 }

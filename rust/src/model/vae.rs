@@ -13,11 +13,13 @@ use super::weights::Weights;
 use super::{Backend, Likelihood, ModelMeta, PixelParams, PosteriorBatch};
 use crate::runtime::{Engine, Tensor};
 
-/// Matches `python/compile/model.py::LOGVAR_MIN/MAX`.
-const LOGVAR_MIN: f32 = -10.0;
-const LOGVAR_MAX: f32 = 10.0;
+/// Matches `python/compile/model.py::LOGVAR_MIN/MAX`. Shared with the
+/// hierarchical backend so every Gaussian head in the system uses one
+/// sigma transform.
+pub(crate) const LOGVAR_MIN: f32 = -10.0;
+pub(crate) const LOGVAR_MAX: f32 = 10.0;
 /// Matches `python/compile/model.py::AB_EPS`.
-const AB_EPS: f32 = 1e-3;
+pub(crate) const AB_EPS: f32 = 1e-3;
 
 /// Load a [`NativeVae`] for `model` from the artifact bundle (shared by
 /// the CLI, examples, benches and tests).

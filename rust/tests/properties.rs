@@ -4,8 +4,10 @@
 
 use bbans::ans::interleaved::InterleavedAns;
 use bbans::ans::{Ans, EntropyCoder, Interval, PreparedInterval, SymbolTable};
-use bbans::bbans::container::ParallelContainer;
+use bbans::bbans::container::{HierContainer, ParallelContainer};
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::codecs::categorical::Categorical;
 use bbans::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use bbans::codecs::quantize::DecodeLut;
@@ -127,6 +129,57 @@ fn batched_inference_bit_identical_across_batch_and_workers() {
             );
         }
         assert_eq!(c1.decode_with_workers(&codec, 3).unwrap(), images);
+    }
+}
+
+/// Hierarchical extension of the invariance suite (ISSUE 4): for BOTH
+/// coding schedules and L ∈ {2, 3}, the encode bitstream is identical
+/// across worker counts and batch groupings, chunked container bytes are
+/// worker-invariant, and every decode route (per-chunk pooled, lock-step
+/// batched) restores the images byte-for-byte.
+#[test]
+fn hier_bit_identity_across_workers_and_schedules() {
+    for (trial, dims) in [[5usize, 4].as_slice(), &[5, 4, 3]].into_iter().enumerate() {
+        let meta = HierMeta {
+            name: format!("hier{trial}"),
+            pixels: 30,
+            dims: dims.to_vec(),
+            hidden: 11,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 700 + trial as u64);
+        let mut rng = Rng::new(0x41e7 + trial as u64);
+        // > 2*NN_CHUNK images so the pipelined encode spans several
+        // layer-0 posterior blocks.
+        let images: Vec<Vec<u8>> = (0..150)
+            .map(|_| (0..30).map(|_| (rng.f64() < 0.35) as u8).collect())
+            .collect();
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let cfg = BbAnsConfig::default();
+            let codec = HierCodec::new(&backend, cfg, schedule).unwrap();
+
+            // One sequential chain vs the pipelined encode at several
+            // worker counts: identical serialized message.
+            let (base, _) = codec.encode_dataset(&images).unwrap();
+            let base_msg = base.to_message();
+            for workers in [1usize, 2, 5] {
+                let mut ans = Ans::new(cfg.clean_seed);
+                codec
+                    .encode_dataset_pipelined(&mut ans, &images, workers)
+                    .unwrap();
+                assert_eq!(ans.to_message(), base_msg, "{schedule:?} w={workers}");
+            }
+
+            // Chunked container: the worker pool never changes bytes, and
+            // both decode routes restore the dataset.
+            let c1 = HierContainer::encode_with_workers(&codec, &images, 4, 1).unwrap();
+            for workers in [2usize, 8] {
+                let c = HierContainer::encode_with_workers(&codec, &images, 4, workers).unwrap();
+                assert_eq!(c.to_bytes(), c1.to_bytes(), "{schedule:?} w={workers}");
+            }
+            assert_eq!(c1.decode_with_workers(&codec, 3).unwrap(), images);
+            assert_eq!(c1.decode_lockstep(&codec).unwrap(), images);
+        }
     }
 }
 
