@@ -4,7 +4,6 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use bbans::bbans::BbAnsConfig;
 use bbans::bench::table_header;
 use bbans::coordinator::{ModelService, ServiceParams};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
@@ -16,7 +15,7 @@ fn toy_service(window_ms: u64) -> ModelService {
         ServiceParams {
             max_jobs: 32,
             batch_window: Duration::from_millis(window_ms),
-            bbans: BbAnsConfig::default(),
+            ..Default::default()
         },
         || {
             let meta = ModelMeta {

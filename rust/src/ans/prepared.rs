@@ -71,17 +71,28 @@ impl PreparedInterval {
         debug_assert!(prec >= 1 && prec <= MAX_PREC);
         debug_assert!(freq > 0, "zero-frequency symbol");
         debug_assert!((start as u64 + freq as u64) <= (1u64 << prec));
-        // A full-mass symbol (freq == 2^prec, single-symbol alphabets) is
-        // a coder no-op that this representation cannot express: `limit`
-        // below would wrap to 0 and `push_raw` would renormalize forever.
-        // `Ans::push` handles it as an explicit no-op; producers of
-        // prepared batches (`Categorical::encode_all_scratch`) skip such
-        // alphabets entirely. Fail fast here rather than hang.
-        debug_assert!(
-            (freq as u64) < (1u64 << prec),
-            "full-mass symbol cannot be prepared; encode via Ans::push"
-        );
         let m = 1u64 << prec;
+        // A full-mass symbol (freq == 2^prec, single-symbol alphabets)
+        // carries zero bits and `Ans::push` treats it as an exact no-op —
+        // but the renormalization threshold `freq << (64 − prec)` wraps to
+        // 0, which the hot loop cannot use. It is represented as the
+        // explicit no-op sentinel `limit == 0` (push_raw returns
+        // immediately), mirroring `Ans::push`'s early return bit-for-bit.
+        // Batch producers therefore need no pre-filtering (ISSUE 5's
+        // `new_batch` relies on this).
+        if freq as u64 == m {
+            debug_assert!(start == 0, "full-mass symbol must start at 0");
+            return Self {
+                rcp_freq: 0,
+                bias: 0,
+                cmpl_freq: 0,
+                limit: 0,
+                rcp_shift: 0,
+                start,
+                freq,
+                prec,
+            };
+        }
         let limit = (freq as u64) << (64 - prec);
         if freq == 1 {
             // x / 1 == x: encode as mulhi(x, 2⁶⁴−1) = x − 1, compensated
@@ -140,6 +151,39 @@ impl PreparedInterval {
         }
     }
 
+    /// Batch-prepare a whole interval sequence into a reusable buffer
+    /// (cleared first) — the ISSUE 5 build path for symbol tables and
+    /// gathered pixel batches.
+    ///
+    /// The per-symbol math is [`PreparedInterval::new`] exactly (bitwise-
+    /// identical output, pinned by tests below); the win is structural:
+    /// the loop is unrolled four-wide over **independent** symbols so the
+    /// 2-limb reciprocal divisions — the only remaining divides, and the
+    /// long-latency op of the build — overlap in the pipeline instead of
+    /// serializing behind one `Vec::push` at a time, and `freq == 1` /
+    /// full-mass symbols take their division-free constructors. (u64
+    /// division has no SIMD form on x86/aarch64; across-symbol ILP is the
+    /// vector unit this loop gets.)
+    pub fn new_batch(intervals: &[Interval], prec: u32, out: &mut Vec<Self>) {
+        out.clear();
+        out.reserve(intervals.len());
+        let mut chunks = intervals.chunks_exact(4);
+        for q in chunks.by_ref() {
+            // Four independent builds; no data dependence between them.
+            let a = Self::new(q[0].start, q[0].freq, prec);
+            let b = Self::new(q[1].start, q[1].freq, prec);
+            let c = Self::new(q[2].start, q[2].freq, prec);
+            let d = Self::new(q[3].start, q[3].freq, prec);
+            out.extend_from_slice(&[a, b, c, d]);
+        }
+        out.extend(
+            chunks
+                .remainder()
+                .iter()
+                .map(|iv| Self::new(iv.start, iv.freq, prec)),
+        );
+    }
+
     /// The plain quantized interval (fallback for coders without a
     /// prepared fast path).
     #[inline]
@@ -172,6 +216,13 @@ impl PreparedInterval {
         (((x as u128 * self.rcp_freq as u128) >> 64) as u64) >> self.rcp_shift
     }
 
+    /// Is this the zero-information full-mass sentinel (`freq == 2^prec`),
+    /// whose encode step is an exact no-op?
+    #[inline]
+    pub fn is_full_mass(&self) -> bool {
+        self.limit == 0
+    }
+
     /// One encode step: renormalize `head` against this symbol's
     /// precomputed threshold (emitting 32-bit words to `stream`), then
     /// apply the state transition — division-free except for the rare
@@ -179,6 +230,9 @@ impl PreparedInterval {
     /// `Ans::push`.
     #[inline(always)]
     pub(crate) fn push_raw(&self, head: &mut u64, stream: &mut Vec<u32>) {
+        if self.limit == 0 {
+            return; // full-mass no-op, exactly as Ans::push
+        }
         let mut x = *head;
         while x >= self.limit {
             stream.push(x as u32);
@@ -205,15 +259,12 @@ pub struct SymbolTable {
 
 impl SymbolTable {
     /// Prepare a full interval table (intervals must tile `[0, 2^prec)`
-    /// in symbol order, as produced by the quantizer).
+    /// in symbol order, as produced by the quantizer). Routes through the
+    /// batched [`PreparedInterval::new_batch`] build.
     pub fn from_intervals(intervals: &[Interval], prec: u32) -> Self {
-        Self {
-            prec,
-            syms: intervals
-                .iter()
-                .map(|iv| PreparedInterval::new(iv.start, iv.freq, prec))
-                .collect(),
-        }
+        let mut syms = Vec::new();
+        PreparedInterval::new_batch(intervals, prec, &mut syms);
+        Self { prec, syms }
     }
 
     /// Prepare from cumulative bounds (`cdf.len() == num_symbols + 1`,
@@ -400,6 +451,109 @@ mod tests {
             }
         }
         assert!(checked > 400_000, "reciprocal path under-exercised: {checked}");
+    }
+
+    /// The batch constructor must equal per-symbol construction exactly
+    /// (all fields), across random tables covering the `freq == 1`
+    /// no-division path, the reciprocal path, and the p > ½ division-
+    /// fallback sentinel — plus the full-mass no-op sentinel a
+    /// single-symbol alphabet produces.
+    #[test]
+    fn new_batch_matches_per_symbol_construction() {
+        let mut rng = Rng::new(0xBA7C4);
+        let mut out = Vec::new();
+        let (mut saw_rcp, mut saw_div, mut saw_one) = (false, false, false);
+        for _ in 0..400 {
+            let prec = 1 + rng.below(MAX_PREC as u64) as u32;
+            let m = 1u64 << prec;
+            // Random tiling of [0, 2^prec) into 1..=24 intervals. A
+            // single-symbol tiling is the full-mass case, which only fits
+            // `Interval::freq: u32` below prec 32.
+            let k_min = if prec == MAX_PREC { 2u64 } else { 1 };
+            let k = (k_min + rng.below(24.min(m) - k_min + 1)) as usize;
+            let mut cuts: Vec<u64> = (0..k - 1).map(|_| 1 + rng.below(m - 1)).collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mut ivs = Vec::new();
+            let mut prev = 0u64;
+            for &c in cuts.iter().chain(std::iter::once(&m)) {
+                ivs.push(Interval {
+                    start: prev as u32,
+                    freq: (c - prev) as u32,
+                });
+                prev = c;
+            }
+            PreparedInterval::new_batch(&ivs, prec, &mut out);
+            assert_eq!(out.len(), ivs.len());
+            for (iv, got) in ivs.iter().zip(out.iter()) {
+                let want = PreparedInterval::new(iv.start, iv.freq, prec);
+                assert_eq!(*got, want, "prec={prec} iv={iv:?}");
+                if got.is_full_mass() {
+                    saw_one = true;
+                } else if got.uses_reciprocal() {
+                    saw_rcp = true;
+                } else {
+                    saw_div = true;
+                }
+            }
+        }
+        assert!(
+            saw_rcp && saw_div && saw_one,
+            "batch sweep must cover all three symbol kinds: \
+             rcp={saw_rcp} div-fallback={saw_div} full-mass={saw_one}"
+        );
+    }
+
+    /// The full-mass sentinel (`freq == 2^prec`, single-symbol alphabets)
+    /// must be an exact no-op under the prepared push — byte-identical to
+    /// `Ans::push`'s early return — at every precision it can occur at.
+    #[test]
+    fn full_mass_sentinel_is_exact_noop() {
+        for prec in [1u32, 8, 16, 24, 31] {
+            let p = PreparedInterval::new(0, (1u64 << prec) as u32, prec);
+            assert!(p.is_full_mass());
+            assert_eq!(p.prec(), prec);
+            for head0 in [RANS_L, RANS_L + 12345, u64::MAX] {
+                let mut head = head0;
+                let mut stream = vec![7u32];
+                p.push_raw(&mut head, &mut stream);
+                assert_eq!(head, head0, "prec={prec}");
+                assert_eq!(stream, vec![7u32], "prec={prec}");
+            }
+        }
+    }
+
+    /// The p > ½ exactness-guard fallback must survive the batched build:
+    /// a frequency known to fail the Granlund–Montgomery bound keeps the
+    /// division sentinel and still steps identically to the division path.
+    #[test]
+    fn division_fallback_sentinel_under_batched_build() {
+        // At prec = 12, sweep p > ½ frequencies for one that falls back
+        // (the exhaustive step test proves both kinds exist there).
+        let prec = 12u32;
+        let fallback = (1u32 << (prec - 1)..1u32 << prec)
+            .find(|&f| !PreparedInterval::new(0, f, prec).uses_reciprocal())
+            .expect("a p > 1/2 division-fallback frequency exists at prec 12");
+        let ivs = [
+            Interval {
+                start: 0,
+                freq: fallback,
+            },
+            Interval {
+                start: fallback,
+                freq: (1u32 << prec) - fallback,
+            },
+        ];
+        let mut out = Vec::new();
+        PreparedInterval::new_batch(&ivs, prec, &mut out);
+        assert!(!out[0].uses_reciprocal() && !out[0].is_full_mass());
+        for head in [RANS_L, RANS_L + 999, u64::MAX] {
+            assert_eq!(
+                div_step(head, 0, fallback, prec),
+                prep_step(head, 0, fallback, prec),
+                "fallback freq={fallback} head={head:#x}"
+            );
+        }
     }
 
     #[test]

@@ -237,12 +237,18 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         img: &[u8],
         scratch: &mut CodecScratch,
     ) {
-        let CodecScratch { prepared, pmf, .. } = scratch;
+        let CodecScratch {
+            prepared,
+            pmf,
+            direct,
+            ..
+        } = scratch;
+        super::prepare_pixel_codecs(params, self.cfg.pixel_prec, direct);
         prepared.clear();
         prepared.extend(
             img.iter()
                 .enumerate()
-                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf)),
+                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf, direct)),
         );
         ans.encode_all_prepared(prepared, self.cfg.pixel_prec);
     }
@@ -254,10 +260,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         scratch: &mut CodecScratch,
     ) -> Vec<u8> {
         let pixels = self.backend.meta().pixels;
-        let pmf = &mut scratch.pmf;
+        let CodecScratch { pmf, direct, .. } = scratch;
+        super::prepare_pixel_codecs(params, self.cfg.pixel_prec, direct);
         let mut p = 0usize;
         ans.decode_all(pixels, self.cfg.pixel_prec, |cf| {
-            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf);
+            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf, &*direct);
             p += 1;
             out
         })
@@ -783,22 +790,27 @@ impl<B: HierBackend + Sync + ?Sized> HierCodec<'_, B> {
 
     /// Decode chunks on a worker pool (each chunk decodes independently;
     /// the lock-step [`Self::decode_chunks_lockstep`] is the batched
-    /// single-thread alternative). Images return in original order.
+    /// single-thread alternative), with the speculative first-image
+    /// scheduling of [`super::decode_chunks_speculative`] — chunk `i+1`'s
+    /// first image decodes while chunk `i` drains, hiding pool ramp-down.
+    /// Images return in original order, bit-identical to whole-chunk
+    /// pooling.
     pub fn decode_dataset_chunked_with_workers(
         &self,
         chunks: &[ChunkEntry],
         workers: usize,
     ) -> Result<Vec<Vec<u8>>> {
-        let per_chunk = pooled_indexed(chunks.len(), workers, |ci| {
-            let chunk = &chunks[ci];
-            let mut ans = Ans::from_message(&chunk.message, chunk_seed(self.cfg.clean_seed, ci));
-            self.decode_dataset(&mut ans, chunk.num_images as usize)
-        });
-        let mut out = Vec::new();
-        for r in per_chunk {
-            out.extend(r?);
-        }
-        Ok(out)
+        super::decode_chunks_speculative(
+            chunks.len(),
+            workers,
+            |ci| {
+                (
+                    Ans::from_message(&chunks[ci].message, chunk_seed(self.cfg.clean_seed, ci)),
+                    chunks[ci].num_images as usize,
+                )
+            },
+            |_ci, ans, n| self.decode_dataset(ans, n),
+        )
     }
 
     /// [`Self::decode_dataset_chunked_with_workers`] on the default pool.

@@ -53,6 +53,10 @@ pub struct CodecScratch {
     prepared: Vec<PreparedInterval>,
     /// Widened f64 PMF row for `BetaBinomial::from_pmf_row_scratch`.
     pmf: Vec<f64>,
+    /// Per-pixel direct beta-binomial codecs, batch-built once per image
+    /// by the SIMD lane-parallel [`BetaBinomialDirect::new_batch`]
+    /// (ISSUE 5); empty for non-`BetaBinomialAb` params.
+    direct: Vec<BetaBinomialDirect>,
     /// Latent bucket-index buffer for the posterior/prior steps. Public
     /// (like `gauss`) so multi-stream callers such as the coordinator can
     /// `mem::take` it around the batched NN dispatches.
@@ -113,15 +117,38 @@ pub(crate) fn gauss_codec_scratch<'g>(
     slot.as_ref().expect("slot populated above")
 }
 
+/// Batch-build the per-pixel direct codecs for one image's likelihood
+/// params into a reusable buffer (ISSUE 5): for the analytic
+/// beta-binomial head this is the SIMD lane-parallel
+/// [`BetaBinomialDirect::new_batch`] — four pixels' normalization
+/// recurrences per vector step, bit-identical to per-pixel construction —
+/// and a cleared buffer otherwise ([`pixel_prepared`]/[`pixel_lookup`]
+/// fall back to their per-pixel constructors when `direct` is empty).
+pub(crate) fn prepare_pixel_codecs(
+    params: &PixelParams,
+    prec: u32,
+    direct: &mut Vec<BetaBinomialDirect>,
+) {
+    match params {
+        PixelParams::BetaBinomialAb { alpha, beta } => {
+            BetaBinomialDirect::new_batch(255, alpha, beta, prec, direct)
+        }
+        _ => direct.clear(),
+    }
+}
+
 /// Prepared (division-free) interval of pixel `p` taking value `sym` under
 /// the likelihood params, at precision `prec`. `pmf` is the reusable f64
-/// row buffer for the table path.
+/// row buffer for the table path; `direct` the batch-built per-pixel
+/// codecs from [`prepare_pixel_codecs`] (empty ⇒ construct per pixel,
+/// bit-identical either way).
 pub(crate) fn pixel_prepared(
     params: &PixelParams,
     p: usize,
     sym: u8,
     prec: u32,
     pmf: &mut Vec<f64>,
+    direct: &[BetaBinomialDirect],
 ) -> PreparedInterval {
     match params {
         PixelParams::Bernoulli(probs) => {
@@ -132,8 +159,12 @@ pub(crate) fn pixel_prepared(
         }
         PixelParams::BetaBinomialAb { alpha, beta } => {
             // Lazy direct codec: O(sym) work, O(1) for the black
-            // background pixels that dominate MNIST (§Perf #3).
-            let c = BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec);
+            // background pixels that dominate MNIST (§Perf #3); the
+            // construction itself comes from the SIMD batch when the
+            // caller prepared one.
+            let c = direct.get(p).copied().unwrap_or_else(|| {
+                BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec)
+            });
             c.prepared_interval(sym as u32)
         }
         PixelParams::BetaBinomialTable(table) => {
@@ -155,6 +186,7 @@ pub(crate) fn pixel_lookup(
     cf: u32,
     prec: u32,
     pmf: &mut Vec<f64>,
+    direct: &[BetaBinomialDirect],
 ) -> (u8, Interval) {
     match params {
         PixelParams::Bernoulli(probs) => {
@@ -163,7 +195,9 @@ pub(crate) fn pixel_lookup(
             (sym as u8, Interval { start, freq })
         }
         PixelParams::BetaBinomialAb { alpha, beta } => {
-            let c = BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec);
+            let c = direct.get(p).copied().unwrap_or_else(|| {
+                BetaBinomialDirect::new(255, alpha[p] as f64, beta[p] as f64, prec)
+            });
             let (sym, start, freq) = c.lookup(cf);
             (sym as u8, Interval { start, freq })
         }
@@ -356,12 +390,18 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         img: &[u8],
         scratch: &mut CodecScratch,
     ) {
-        let CodecScratch { prepared, pmf, .. } = scratch;
+        let CodecScratch {
+            prepared,
+            pmf,
+            direct,
+            ..
+        } = scratch;
+        prepare_pixel_codecs(params, self.cfg.pixel_prec, direct);
         prepared.clear();
         prepared.extend(
             img.iter()
                 .enumerate()
-                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf)),
+                .map(|(p, &sym)| pixel_prepared(params, p, sym, self.cfg.pixel_prec, pmf, direct)),
         );
         coder.encode_all_prepared(prepared, self.cfg.pixel_prec);
     }
@@ -417,10 +457,11 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         scratch: &mut CodecScratch,
     ) -> Vec<u8> {
         let pixels = self.backend.meta().pixels;
-        let pmf = &mut scratch.pmf;
+        let CodecScratch { pmf, direct, .. } = scratch;
+        prepare_pixel_codecs(params, self.cfg.pixel_prec, direct);
         let mut p = 0usize;
         coder.decode_all(pixels, self.cfg.pixel_prec, |cf| {
-            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf);
+            let out = pixel_lookup(params, p, cf, self.cfg.pixel_prec, pmf, &*direct);
             p += 1;
             out
         })
@@ -624,21 +665,12 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 }
 
 /// Deterministic near-even partition of `n` items into `k` chunks (first
-/// `n % k` chunks get one extra item). The split depends only on `(n, k)`,
-/// never on thread scheduling, so chunked containers are reproducible.
-/// Shared by the single-layer and hierarchical chunked coding paths.
+/// `n % k` chunks get one extra item). Delegates to the single shared
+/// implementation in [`crate::util::chunk_ranges`] — the same split the
+/// model layer's row sharding uses — so chunked containers stay
+/// reproducible against one partition semantics.
 pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
-    let k = k.clamp(1, n.max(1));
-    let base = n / k;
-    let rem = n % k;
-    let mut out = Vec::with_capacity(k);
-    let mut start = 0;
-    for i in 0..k {
-        let len = base + usize::from(i < rem);
-        out.push(start..start + len);
-        start += len;
-    }
-    out
+    crate::util::chunk_ranges(n, k)
 }
 
 /// Default worker-thread count for the parallel paths.
@@ -709,6 +741,111 @@ where
         }
         Ok(())
     })
+}
+
+/// A one-shot rendezvous slot for handing a value between pool workers
+/// (the speculative-decode head → tail handoff; `mpsc` endpoints are not
+/// `Sync`, so a `Mutex` + `Condvar` pair stands in).
+struct HandoffSlot<T> {
+    value: std::sync::Mutex<Option<T>>,
+    ready: std::sync::Condvar,
+}
+
+impl<T> HandoffSlot<T> {
+    fn new() -> Self {
+        Self {
+            value: std::sync::Mutex::new(None),
+            ready: std::sync::Condvar::new(),
+        }
+    }
+
+    fn put(&self, v: T) {
+        *self.value.lock().expect("handoff poisoned") = Some(v);
+        self.ready.notify_all();
+    }
+
+    fn take(&self) -> T {
+        let mut guard = self.value.lock().expect("handoff poisoned");
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = self.ready.wait(guard).expect("handoff poisoned");
+        }
+    }
+}
+
+/// Pool-decode independent chunks with **speculative first-image
+/// scheduling** (ISSUE 5 / ROADMAP): each chunk splits into a cheap
+/// *head* job (decode just its first image) and a *tail* job (drain the
+/// rest), and all heads are queued before any tail. A free worker
+/// therefore starts chunk `i+1`'s first image while chunk `i` is still
+/// draining, and the finer job granularity packs uneven chunks with a
+/// shorter idle tail (ramp-down) than whole-chunk jobs can.
+///
+/// Bit-identity is by construction: a chunk's decode is a deterministic
+/// sequence of per-image steps on its own coder, so splitting the loop
+/// after one image changes nothing — the tail resumes from the exact
+/// coder state the head produced (heads never depend on anything, so the
+/// head-first queue order also makes the tail's rendezvous deadlock-free
+/// at every worker count).
+///
+/// `start(ci)` yields chunk `ci`'s fresh coder and image count;
+/// `decode_n(ci, ans, k)` decodes `k` images and returns them in original
+/// (encode) order — exactly the `decode_dataset` contract, so a head of
+/// one image holds the chunk's *last* image and `tail ++ head` restores
+/// the original order. Results concatenate across chunks in index order.
+pub(crate) fn decode_chunks_speculative<F>(
+    n_chunks: usize,
+    workers: usize,
+    start: impl Fn(usize) -> (Ans, usize) + Sync,
+    decode_n: F,
+) -> Result<Vec<Vec<u8>>>
+where
+    F: Fn(usize, &mut Ans, usize) -> Result<Vec<Vec<u8>>> + Sync,
+{
+    type Head = (Result<Vec<Vec<u8>>>, Ans, usize);
+    let slots: Vec<HandoffSlot<Head>> = (0..n_chunks).map(|_| HandoffSlot::new()).collect();
+    let per_chunk = pooled_indexed(2 * n_chunks, workers, |job| {
+        if job < n_chunks {
+            // Head: first image only (or nothing for an empty chunk). A
+            // panicking head must still fill its slot, otherwise the tail
+            // job would block forever and turn the panic into a hang —
+            // fill with an error Head, then re-raise.
+            let ci = job;
+            let head = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let (mut ans, total) = start(ci);
+                let head = decode_n(ci, &mut ans, total.min(1));
+                (head, ans, total)
+            }));
+            match head {
+                Ok(v) => slots[ci].put(v),
+                Err(payload) => {
+                    slots[ci].put((
+                        Err(anyhow::anyhow!("chunk {ci} head decode panicked")),
+                        Ans::new(0),
+                        0,
+                    ));
+                    std::panic::resume_unwind(payload);
+                }
+            }
+            None
+        } else {
+            // Tail: resume from the head's coder state and drain.
+            let ci = job - n_chunks;
+            let (head, mut ans, total) = slots[ci].take();
+            Some(head.and_then(|head_imgs| {
+                let mut out = decode_n(ci, &mut ans, total - head_imgs.len())?;
+                out.extend(head_imgs);
+                Ok(out)
+            }))
+        }
+    });
+    let mut out = Vec::new();
+    for r in per_chunk.into_iter().flatten() {
+        out.extend(r?);
+    }
+    Ok(out)
 }
 
 /// Run `n_jobs` indexed jobs on a bounded pool of `workers` scoped
@@ -853,26 +990,31 @@ impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
     /// [`Self::decode_dataset_chunked`] with an explicit worker count.
     /// Within a chain, decode steps are strictly serial (each image's
     /// decoder-net input is popped from the stream), so decode-side
-    /// pipelining is across chunks: the pool keeps chunk `i+1`'s NN and
-    /// coding work running while chunk `i` finishes.
+    /// pipelining is across chunks — with speculative first-image
+    /// scheduling ([`decode_chunks_speculative`]): every chunk's first
+    /// image is queued ahead of the chunk drains, so chunk `i+1` starts
+    /// while chunk `i` is still coding and the pool's ramp-down tail
+    /// shrinks. Output is bit-identical to whole-chunk pooling (the split
+    /// only relocates a loop boundary).
     pub fn decode_dataset_chunked_with_workers(
         &self,
         chunks: &[container::ChunkEntry],
         workers: usize,
     ) -> Result<Vec<Vec<u8>>> {
-        let per_chunk = pooled_indexed(chunks.len(), workers, |ci| {
-            let chunk = &chunks[ci];
-            let mut ans = Ans::from_message(
-                &chunk.message,
-                container::chunk_seed(self.cfg.clean_seed, ci),
-            );
-            self.decode_dataset(&mut ans, chunk.num_images as usize)
-        });
-        let mut out = Vec::new();
-        for r in per_chunk {
-            out.extend(r?);
-        }
-        Ok(out)
+        decode_chunks_speculative(
+            chunks.len(),
+            workers,
+            |ci| {
+                (
+                    Ans::from_message(
+                        &chunks[ci].message,
+                        container::chunk_seed(self.cfg.clean_seed, ci),
+                    ),
+                    chunks[ci].num_images as usize,
+                )
+            },
+            |_ci, ans, n| self.decode_dataset(ans, n),
+        )
     }
 }
 
@@ -996,6 +1138,31 @@ mod tests {
                 "prior bits {}",
                 s.prior_bits
             );
+        }
+    }
+
+    /// The speculative head/tail chunk decode must restore every dataset
+    /// exactly at every worker count, including the empty dataset (a
+    /// zero-image chunk's head decodes nothing), single-image chunks
+    /// (the tail decodes nothing), and more workers than jobs.
+    #[test]
+    fn speculative_chunk_decode_edge_cases() {
+        let backend = NativeVae::random(meta(Likelihood::Bernoulli, 36, 6), 17);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        for n in [0usize, 1, 3, 7] {
+            let images = sample_images(n, 36, 2, 40 + n as u64);
+            let chunks = codec
+                .encode_dataset_chunked_with_workers(&images, 3, 2)
+                .unwrap();
+            for workers in [1usize, 2, 8] {
+                assert_eq!(
+                    codec
+                        .decode_dataset_chunked_with_workers(&chunks, workers)
+                        .unwrap(),
+                    images,
+                    "n={n} workers={workers}"
+                );
+            }
         }
     }
 

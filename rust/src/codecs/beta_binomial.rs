@@ -74,26 +74,24 @@ impl BetaBinomial {
     /// for the widened PMF row — the per-pixel table path builds one codec
     /// per pixel, and this keeps that loop free of the `Vec<f64>`
     /// allocation (ISSUE 2). Bit-identical to the allocating constructor.
+    ///
+    /// ISSUE 5: the widen+sanitize pass and the CDF quantization's
+    /// multiply+round both run through the SIMD-dispatched helpers
+    /// ([`crate::simd`]), still bit-identical to the historical loops
+    /// (pinned by `scratch_row_construction_matches_allocating` plus the
+    /// quantizer's own equivalence test).
     pub fn from_pmf_row_scratch(row: &[f32], prec: u32, pmf: &mut Vec<f64>) -> Self {
         let n = (row.len() - 1) as u32;
-        pmf.clear();
-        pmf.extend(row.iter().map(|&p| {
-            let p = p as f64;
-            if p.is_finite() && p > 0.0 {
-                p
-            } else {
-                0.0
-            }
-        }));
+        crate::simd::widen_sanitize_f32(row, pmf);
         // A fully-zero row (pathological network output) degrades to
-        // uniform rather than panicking.
-        let total: f64 = pmf.iter().sum();
-        if total <= 0.0 {
+        // uniform rather than panicking. Entries are ≥ 0 and finite after
+        // sanitization, so "sum ≤ 0" is exactly "no positive entry".
+        if !pmf.iter().any(|&p| p > 0.0) {
             pmf.clear();
             pmf.resize(row.len(), 1.0);
         }
         Self {
-            inner: Categorical::from_pmf(pmf, prec),
+            inner: Categorical::from_pmf_in_place(pmf, prec),
             n,
         }
     }
@@ -135,7 +133,7 @@ impl SymbolCodec for BetaBinomial {
 /// differ (unnormalized vs normalized anchor), so a stream must use ONE
 /// construction for both encode and decode. `VaeCodec` uses `Direct`
 /// exclusively for the analytic (native-backend) path.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BetaBinomialDirect {
     pub n: u32,
     pub prec: u32,
@@ -171,6 +169,30 @@ impl BetaBinomialDirect {
             alpha,
             beta,
             scale,
+        }
+    }
+
+    /// Batch-construct one codec per `(alpha, beta)` pixel pair — the
+    /// whole-image form of [`BetaBinomialDirect::new`] and the ISSUE 5
+    /// vectorization of the native pixel hot path.
+    ///
+    /// `new` is dominated by the `n`-step normalization recurrence, whose
+    /// `cur *= ratio` / `total += cur` chain is strictly sequential *per
+    /// pixel* — but pixels are independent, so the AVX2 path runs **four
+    /// pixels' recurrences in four f64 lanes**, each lane executing
+    /// exactly the scalar op sequence (sub/add/mul/div are lane-wise
+    /// IEEE-754 ops, so every pixel's codec is bit-identical to its
+    /// scalar construction; pinned by `new_batch_matches_new_bitwise`).
+    /// This divides the dominant per-image construction cost by the lane
+    /// count: the loop-carried multiply chain and the one divide per step
+    /// now serve four pixels each.
+    pub fn new_batch(n: u32, alphas: &[f32], betas: &[f32], prec: u32, out: &mut Vec<Self>) {
+        assert_eq!(alphas.len(), betas.len(), "alpha/beta length mismatch");
+        out.clear();
+        out.reserve(alphas.len());
+        let done = new_batch_simd(n, alphas, betas, prec, out);
+        for p in done..alphas.len() {
+            out.push(Self::new(n, alphas[p] as f64, betas[p] as f64, prec));
         }
     }
 
@@ -233,6 +255,113 @@ impl BetaBinomialDirect {
         }
         unreachable!("cf {cf} out of range")
     }
+}
+
+/// SIMD front half of [`BetaBinomialDirect::new_batch`]: build as many
+/// leading codecs as the active vector path covers, returning the count
+/// (always a multiple of the lane width; the caller finishes the tail
+/// through the scalar constructor).
+#[cfg(target_arch = "x86_64")]
+fn new_batch_simd(
+    n: u32,
+    alphas: &[f32],
+    betas: &[f32],
+    prec: u32,
+    out: &mut Vec<BetaBinomialDirect>,
+) -> usize {
+    if crate::simd::active() == crate::simd::Kernel::Avx2 {
+        // SAFETY: AVX2 availability checked by dispatch.
+        unsafe { new_batch_avx2(n, alphas, betas, prec, out) }
+    } else {
+        0
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn new_batch_simd(
+    _n: u32,
+    _alphas: &[f32],
+    _betas: &[f32],
+    _prec: u32,
+    _out: &mut Vec<BetaBinomialDirect>,
+) -> usize {
+    0
+}
+
+/// AVX2 lane-parallel body of [`BetaBinomialDirect::new_batch`]: four
+/// pixels per iteration, each lane the exact scalar op sequence (see the
+/// method docs). Returns how many leading pairs were consumed (a multiple
+/// of 4); the dispatcher finishes the tail through the scalar
+/// constructor, which is bit-identical by the same lane argument.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn new_batch_avx2(
+    n: u32,
+    alphas: &[f32],
+    betas: &[f32],
+    prec: u32,
+    out: &mut Vec<BetaBinomialDirect>,
+) -> usize {
+    use core::arch::x86_64::*;
+    let lanes = alphas.len() / 4 * 4;
+    let nn = n as f64;
+    let numer = ((1u64 << prec) - (n as u64 + 1)) as f64;
+    let lo = _mm256_set1_pd(1e-4);
+    let hi = _mm256_set1_pd(200.0);
+    let one = _mm256_set1_pd(1.0);
+    let zero = _mm256_setzero_pd();
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    let mut i = 0;
+    while i < lanes {
+        let a = _mm256_cvtps_pd(_mm_loadu_ps(alphas.as_ptr().add(i)));
+        let b = _mm256_cvtps_pd(_mm_loadu_ps(betas.as_ptr().add(i)));
+        // Jointly valid ⟺ both parameters finite and > 0, exactly the
+        // scalar guard (NaN fails the ordered compares).
+        let va = _mm256_and_pd(
+            _mm256_cmp_pd::<_CMP_GT_OQ>(a, zero),
+            _mm256_cmp_pd::<_CMP_LT_OQ>(a, inf),
+        );
+        let vb = _mm256_and_pd(
+            _mm256_cmp_pd::<_CMP_GT_OQ>(b, zero),
+            _mm256_cmp_pd::<_CMP_LT_OQ>(b, inf),
+        );
+        let valid = _mm256_and_pd(va, vb);
+        let av = _mm256_blendv_pd(one, _mm256_min_pd(_mm256_max_pd(a, lo), hi), valid);
+        let bv = _mm256_blendv_pd(one, _mm256_min_pd(_mm256_max_pd(b, lo), hi), valid);
+        // Four normalization recurrences, one per lane: the scalar-
+        // computed per-step constants broadcast, then lane-wise
+        // add/mul/div in the scalar evaluation order.
+        let mut cur = one;
+        let mut total = one;
+        for k in 0..n as usize {
+            let kf = k as f64;
+            let num = _mm256_mul_pd(
+                _mm256_set1_pd(nn - kf),
+                _mm256_add_pd(_mm256_set1_pd(kf), av),
+            );
+            let den = _mm256_mul_pd(
+                _mm256_set1_pd(kf + 1.0),
+                _mm256_add_pd(_mm256_set1_pd(nn - kf - 1.0), bv),
+            );
+            cur = _mm256_mul_pd(cur, _mm256_div_pd(num, den));
+            total = _mm256_add_pd(total, cur);
+        }
+        let (mut aa, mut bb, mut tt) = ([0.0f64; 4], [0.0f64; 4], [0.0f64; 4]);
+        _mm256_storeu_pd(aa.as_mut_ptr(), av);
+        _mm256_storeu_pd(bb.as_mut_ptr(), bv);
+        _mm256_storeu_pd(tt.as_mut_ptr(), total);
+        for l in 0..4 {
+            out.push(BetaBinomialDirect {
+                n,
+                prec,
+                alpha: aa[l],
+                beta: bb[l],
+                scale: numer / tt[l],
+            });
+        }
+        i += 4;
+    }
+    lanes
 }
 
 impl SymbolCodec for BetaBinomialDirect {
@@ -440,6 +569,53 @@ mod direct_tests {
             (bits_direct - bits_table).abs() / bits_table < 0.001,
             "direct {bits_direct} vs table {bits_table}"
         );
+    }
+
+    /// The batched constructor must produce field-for-field identical
+    /// codecs to per-pixel `new` — including the degenerate-parameter
+    /// fallback and every remainder length — under the active kernel (the
+    /// forced-scalar CI leg covers the scalar arm) and, when AVX2 is up,
+    /// through the lane-parallel body directly.
+    #[test]
+    fn new_batch_matches_new_bitwise() {
+        let mut rng = Rng::new(0xD1CE);
+        for len in [0usize, 1, 3, 4, 5, 8, 63, 784] {
+            let mut alphas: Vec<f32> = (0..len).map(|_| (rng.f64() * 30.0) as f32).collect();
+            let mut betas: Vec<f32> = (0..len).map(|_| (rng.f64() * 30.0) as f32).collect();
+            // Sprinkle degenerate and out-of-clamp-range values.
+            for (i, v) in alphas.iter_mut().enumerate() {
+                match i % 9 {
+                    1 => *v = 0.0,
+                    3 => *v = f32::NAN,
+                    5 => *v = f32::INFINITY,
+                    7 => *v = 5e5, // clamped to 200.0
+                    _ => {}
+                }
+            }
+            if len > 2 {
+                betas[2] = -1.0;
+                betas[len - 1] = 1e-9; // clamped to 1e-4
+            }
+            for prec in [14u32, 18] {
+                let want: Vec<BetaBinomialDirect> = alphas
+                    .iter()
+                    .zip(betas.iter())
+                    .map(|(&a, &b)| BetaBinomialDirect::new(255, a as f64, b as f64, prec))
+                    .collect();
+                let mut got = Vec::new();
+                BetaBinomialDirect::new_batch(255, &alphas, &betas, prec, &mut got);
+                assert_eq!(got, want, "len={len} prec={prec} (dispatched)");
+                #[cfg(target_arch = "x86_64")]
+                if crate::simd::available().contains(&crate::simd::Kernel::Avx2) {
+                    let mut lanes = Vec::new();
+                    // SAFETY: AVX2 presence just checked.
+                    let done =
+                        unsafe { super::new_batch_avx2(255, &alphas, &betas, prec, &mut lanes) };
+                    assert_eq!(done, len / 4 * 4);
+                    assert_eq!(lanes[..], want[..done], "len={len} prec={prec} (avx2)");
+                }
+            }
+        }
     }
 
     #[test]

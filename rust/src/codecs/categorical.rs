@@ -23,6 +23,16 @@ impl Categorical {
         }
     }
 
+    /// [`Categorical::from_pmf`] consuming the buffer in place
+    /// ([`QuantizedCdf::from_pmf_in_place`]) — the allocation-free form
+    /// the per-pixel row path threads its scratch through.
+    pub fn from_pmf_in_place(pmf: &mut [f64], prec: u32) -> Self {
+        Self {
+            q: QuantizedCdf::from_pmf_in_place(pmf, prec),
+            prepared: None,
+        }
+    }
+
     pub fn from_quantized(q: QuantizedCdf) -> Self {
         Self { q, prepared: None }
     }
@@ -92,10 +102,10 @@ impl Categorical {
     ) {
         if self.q.num_symbols() == 1 {
             // Single-symbol alphabet: the one interval carries the full
-            // mass 2^prec, i.e. zero bits per symbol, and the coders'
-            // renormalization thresholds cannot represent a full-mass
-            // symbol (`freq << (64 - prec)` wraps) — so the whole encode
-            // is the exact no-op it is mathematically. `decode_all` needs
+            // mass 2^prec, i.e. zero bits per symbol. `PreparedInterval`
+            // represents that as an explicit no-op sentinel these days, so
+            // this early return is just the cheap shortcut (skip the
+            // gather and the per-symbol no-op pushes). `decode_all` needs
             // no twin guard: its update step is naturally the identity.
             debug_assert!(syms.iter().all(|&s| s == 0));
             return;

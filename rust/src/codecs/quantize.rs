@@ -123,6 +123,24 @@ impl QuantizedCdf {
     /// Quantize a PMF (need not be normalized; must be non-negative with a
     /// positive sum and finite entries).
     pub fn from_pmf(pmf: &[f64], prec: u32) -> Self {
+        let mut buf = pmf.to_vec();
+        Self::from_pmf_in_place(&mut buf, prec)
+    }
+
+    /// [`QuantizedCdf::from_pmf`] consuming the buffer in place — the
+    /// allocation-free form the per-pixel row path feeds its scratch
+    /// through (ISSUE 5). The construction is split so its element-wise
+    /// half vectorizes while staying bit-identical to the historical
+    /// single loop:
+    ///
+    /// 1. a **sequential** in-place prefix sum (the running `acc` of the
+    ///    old loop; its final entry is bitwise the old `pmf.iter().sum()`
+    ///    because both perform the same left-to-right adds), then
+    /// 2. the **element-wise** `G(i) = round(acc_i · scale) + i + 1`,
+    ///    whose multiply+round runs through the SIMD-dispatched
+    ///    [`crate::simd::scaled_round_half_away`] (exact round-half-away
+    ///    emulation for the non-negative domain — see that module's docs).
+    pub fn from_pmf_in_place(pmf: &mut [f64], prec: u32) -> Self {
         let k = pmf.len();
         assert!(k >= 1, "empty pmf");
         let m = 1u64 << prec;
@@ -130,25 +148,27 @@ impl QuantizedCdf {
             (k as u64) < m,
             "pmf has {k} symbols but precision {prec} provides only {m} mass units"
         );
-        let total: f64 = pmf.iter().sum();
+        let mut acc = 0.0f64;
+        for p in pmf.iter_mut() {
+            debug_assert!(*p >= 0.0, "negative pmf entry {p}");
+            acc += *p;
+            *p = acc;
+        }
+        let total = acc;
         assert!(
             total > 0.0 && total.is_finite(),
             "pmf must have positive finite mass (total={total})"
         );
         let scale = (m - k as u64) as f64 / total;
+        // Vectorized: prefix[i] ← round(prefix[i] · scale), half away
+        // from zero. The last entry is pinned to m below, so skip it.
+        crate::simd::scaled_round_half_away(&mut pmf[..k - 1], scale);
         let mut cdf = Vec::with_capacity(k + 1);
         cdf.push(0u32);
-        let mut acc = 0.0f64;
-        for (i, &p) in pmf.iter().enumerate() {
-            debug_assert!(p >= 0.0, "negative pmf entry {p}");
-            acc += p;
-            let g = if i + 1 == k {
-                m
-            } else {
-                (acc * scale).round() as u64 + (i as u64 + 1)
-            };
-            cdf.push(g.min(m) as u32);
+        for (i, &g) in pmf[..k - 1].iter().enumerate() {
+            cdf.push((g as u64 + (i as u64 + 1)).min(m) as u32);
         }
+        cdf.push(m as u32);
         // Strict monotonicity is guaranteed by construction; check in debug.
         debug_assert!(cdf.windows(2).all(|w| w[0] < w[1]), "non-monotone cdf");
         Self {
@@ -352,6 +372,62 @@ mod tests {
         assert_eq!(plain, lutted, "LUT must not affect distribution equality");
         assert!(plain.lut().is_none());
         assert!(lutted.lut().is_some());
+    }
+
+    /// The split prefix-sum + vectorized-round construction must equal the
+    /// historical single loop bitwise, for every pmf shape, under the
+    /// active kernel (CI's forced-scalar leg covers the scalar arm; the
+    /// `simd` unit tests pin the variants against each other) — the
+    /// guarantee that no stream, including PJRT table-path streams,
+    /// changes a byte under ISSUE 5.
+    #[test]
+    fn split_construction_matches_historical_loop_bitwise() {
+        fn historical(pmf: &[f64], prec: u32) -> Vec<u32> {
+            let k = pmf.len();
+            let m = 1u64 << prec;
+            let total: f64 = pmf.iter().sum();
+            let scale = (m - k as u64) as f64 / total;
+            let mut cdf = vec![0u32];
+            let mut acc = 0.0f64;
+            for (i, &p) in pmf.iter().enumerate() {
+                acc += p;
+                let g = if i + 1 == k {
+                    m
+                } else {
+                    (acc * scale).round() as u64 + (i as u64 + 1)
+                };
+                cdf.push(g.min(m) as u32);
+            }
+            cdf
+        }
+        let mut rng = Rng::new(0xC0F);
+        for trial in 0..200 {
+            let k = 1 + rng.below(400) as usize;
+            let prec = (12 + rng.below(13) as u32).max((k as u32).ilog2() + 2);
+            let pmf: Vec<f64> = (0..k)
+                .map(|i| match trial % 4 {
+                    0 => rng.f64() + 1e-9,
+                    1 => 0.7f64.powi((i % 50) as i32),
+                    2 => {
+                        if i == k / 2 {
+                            1e9
+                        } else {
+                            1e-12
+                        }
+                    }
+                    _ => (i % 7) as f64, // exact zeros allowed
+                })
+                .collect();
+            if pmf.iter().sum::<f64>() <= 0.0 {
+                continue;
+            }
+            let want = historical(&pmf, prec);
+            let q = QuantizedCdf::from_pmf(&pmf, prec);
+            assert_eq!(q.cdf, want, "trial {trial} k={k} prec={prec}");
+            let mut buf = pmf.clone();
+            let q2 = QuantizedCdf::from_pmf_in_place(&mut buf, prec);
+            assert_eq!(q2, q, "in-place construction diverged");
+        }
     }
 
     #[test]

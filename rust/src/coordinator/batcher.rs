@@ -15,6 +15,27 @@
 //!   one batched decoder call, pop pixels (per stream), one batched
 //!   encoder call to return the bits — so S concurrent decodes cost
 //!   ⌈S/B⌉ NN dispatches per image instead of S.
+//!
+//! ## The `Sync`-backend fan-out (ISSUE 5)
+//!
+//! The single-threaded worker is a *PJRT* constraint, not an
+//! architectural one. When every backend is `Send + Sync` (the pure-Rust
+//! `NativeVae`), [`ModelService::spawn_with_sync`] runs the same batching
+//! loop with each lock-step phase **fanned out over a scoped worker
+//! pool** ([`ServiceParams::fanout_workers`]):
+//!
+//! * NN dispatches split their rows over the pool
+//!   ([`crate::model::encode_batch_sharded`] /
+//!   [`crate::model::decode_batch_sharded`]) — bitwise safe by the
+//!   batched-call row-independence contract;
+//! * the per-stream ANS phases (pop posteriors, push pixels+priors, pop
+//!   priors, push posteriors) run streams in parallel — each stream's
+//!   coder state is independent, and results are stitched back in stream
+//!   order, so the containers are byte-identical to the serial worker's
+//!   (pinned by `sync_service_bytes_match_serial_service`);
+//! * chunk-parallel (`BBC2`) and hierarchical (`BBC3`) containers decode
+//!   over the pool (speculative first-image scheduling included) instead
+//!   of sequentially inside the worker thread.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -34,7 +55,9 @@ use crate::bbans::hierarchy::HierCodec;
 use crate::bbans::{BbAnsConfig, CodecScratch, VaeCodec};
 use crate::model::hierarchy::HierVae;
 use crate::model::tensor::Matrix;
-use crate::model::{vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PosteriorBatch};
+use crate::model::{
+    vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PixelParams, PosteriorBatch,
+};
 use crate::runtime::{load_config, Engine};
 
 /// Service tuning knobs.
@@ -46,6 +69,10 @@ pub struct ServiceParams {
     pub batch_window: Duration,
     /// Default coding config for compression (decode uses the container's).
     pub bbans: BbAnsConfig,
+    /// Worker threads the `Sync`-backend service variant fans lock-step
+    /// phases out over (`0` = available parallelism). Ignored by the
+    /// single-threaded (PJRT-constrained) worker.
+    pub fanout_workers: usize,
 }
 
 impl Default for ServiceParams {
@@ -54,8 +81,22 @@ impl Default for ServiceParams {
             max_jobs: 16,
             batch_window: Duration::from_millis(2),
             bbans: BbAnsConfig::default(),
+            fanout_workers: 0,
         }
     }
+}
+
+/// A backend shareable across the fan-out pool.
+pub type SharedBackend = Arc<dyn Backend + Send + Sync>;
+
+/// What the model worker owns: thread-local backends behind the classic
+/// single-threaded loop, or shared `Sync` backends plus a fan-out width.
+enum BackendSet {
+    Local(HashMap<String, Box<dyn Backend>>),
+    Shared {
+        map: HashMap<String, SharedBackend>,
+        workers: usize,
+    },
 }
 
 enum Job {
@@ -90,9 +131,15 @@ pub struct ServiceHandle {
 }
 
 impl ModelService {
-    /// Spawn with the standard artifact-backed backends.
+    /// Spawn with the standard artifact-backed backends. The PJRT path
+    /// keeps the single-threaded worker (its handles are thread-local);
+    /// the native path upgrades to the `Sync`-backend fan-out service.
     pub fn spawn(artifact_dir: PathBuf, use_pjrt: bool, params: ServiceParams) -> ModelService {
-        Self::spawn_with(params, move || standard_backends(&artifact_dir, use_pjrt))
+        if use_pjrt {
+            Self::spawn_with(params, move || pjrt_backends(&artifact_dir))
+        } else {
+            Self::spawn_with_sync(params, move || native_backends(&artifact_dir))
+        }
     }
 
     /// Spawn with a custom backend factory (runs inside the worker thread
@@ -100,6 +147,31 @@ impl ModelService {
     pub fn spawn_with<F>(params: ServiceParams, factory: F) -> ModelService
     where
         F: FnOnce() -> Result<HashMap<String, Box<dyn Backend>>> + Send + 'static,
+    {
+        Self::spawn_set(params, move || factory().map(BackendSet::Local))
+    }
+
+    /// Spawn the `Sync`-backend service variant: the same batching worker
+    /// loop, with every lock-step phase fanned out over
+    /// [`ServiceParams::fanout_workers`] scoped threads (module docs).
+    /// Containers are byte-identical to the single-threaded worker's.
+    pub fn spawn_with_sync<F>(params: ServiceParams, factory: F) -> ModelService
+    where
+        F: FnOnce() -> Result<HashMap<String, SharedBackend>> + Send + 'static,
+    {
+        let workers = if params.fanout_workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            params.fanout_workers
+        };
+        Self::spawn_set(params, move || {
+            factory().map(|map| BackendSet::Shared { map, workers })
+        })
+    }
+
+    fn spawn_set<F>(params: ServiceParams, factory: F) -> ModelService
+    where
+        F: FnOnce() -> Result<BackendSet> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Metrics::new());
@@ -181,51 +253,68 @@ impl ServiceHandle {
     }
 }
 
-/// Standard backends from the artifact bundle.
-fn standard_backends(
-    artifact_dir: &Path,
-    use_pjrt: bool,
-) -> Result<HashMap<String, Box<dyn Backend>>> {
-    let config = load_config(artifact_dir)?;
-    let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
-    let engine = if use_pjrt {
-        Some(Arc::new(Engine::cpu(artifact_dir)?))
-    } else {
-        None
-    };
-    let models = match config.get("models") {
-        Some(crate::util::json::Json::Obj(m)) => m.keys().cloned().collect::<Vec<_>>(),
+/// Model names listed in the artifact config.
+fn config_models(config: &crate::util::json::Json) -> Result<Vec<String>> {
+    match config.get("models") {
+        Some(crate::util::json::Json::Obj(m)) => Ok(m.keys().cloned().collect()),
         _ => bail!("model_config.json missing models"),
+    }
+}
+
+/// Load one named native backend from the artifact bundle.
+fn native_backend(
+    artifact_dir: &Path,
+    config: &crate::util::json::Json,
+    name: &str,
+) -> Result<NativeVae> {
+    let m = config.get("models").unwrap().get(name).unwrap();
+    let meta = ModelMeta {
+        name: name.to_string(),
+        pixels: config.req("pixels").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+        latent_dim: m.req("latent_dim").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+        hidden: m.req("hidden").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
+        likelihood: Likelihood::parse(
+            m.req("likelihood").map_err(|e| anyhow!("{e}"))?.as_str().unwrap(),
+        )?,
+        test_elbo_bpd: m
+            .get("test_elbo_bpd")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN),
     };
-    for name in models {
-        if let Some(engine) = &engine {
-            map.insert(
-                name.clone(),
-                Box::new(PjrtVae::from_config(engine.clone(), &config, &name)?),
-            );
-        } else {
-            let m = config.get("models").unwrap().get(&name).unwrap();
-            let meta = ModelMeta {
-                name: name.clone(),
-                pixels: config.req("pixels").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-                latent_dim: m.req("latent_dim").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-                hidden: m.req("hidden").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-                likelihood: Likelihood::parse(
-                    m.req("likelihood").map_err(|e| anyhow!("{e}"))?.as_str().unwrap(),
-                )?,
-                test_elbo_bpd: m
-                    .get("test_elbo_bpd")
-                    .and_then(|v| v.as_f64())
-                    .unwrap_or(f64::NAN),
-            };
-            let weights = artifact_dir.join(
-                m.req("weights")
-                    .map_err(|e| anyhow!("{e}"))?
-                    .as_str()
-                    .unwrap(),
-            );
-            map.insert(name.clone(), Box::new(NativeVae::load(weights, meta)?));
-        }
+    let weights = artifact_dir.join(
+        m.req("weights")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .unwrap(),
+    );
+    NativeVae::load(weights, meta)
+}
+
+/// PJRT backends from the artifact bundle — the single-threaded worker's
+/// set (the handles are thread-local). Native backends go through
+/// [`native_backends`] and the fan-out service instead.
+fn pjrt_backends(artifact_dir: &Path) -> Result<HashMap<String, Box<dyn Backend>>> {
+    let config = load_config(artifact_dir)?;
+    let engine = Arc::new(Engine::cpu(artifact_dir)?);
+    let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+    for name in config_models(&config)? {
+        map.insert(
+            name.clone(),
+            Box::new(PjrtVae::from_config(engine.clone(), &config, &name)?),
+        );
+    }
+    Ok(map)
+}
+
+/// Native (`Send + Sync`) backends for the fan-out service variant.
+fn native_backends(artifact_dir: &Path) -> Result<HashMap<String, SharedBackend>> {
+    let config = load_config(artifact_dir)?;
+    let mut map: HashMap<String, SharedBackend> = HashMap::new();
+    for name in config_models(&config)? {
+        map.insert(
+            name.clone(),
+            Arc::new(native_backend(artifact_dir, &config, &name)?),
+        );
     }
     Ok(map)
 }
@@ -238,7 +327,7 @@ fn worker_loop<F>(
     params: ServiceParams,
     factory: F,
 ) where
-    F: FnOnce() -> Result<HashMap<String, Box<dyn Backend>>>,
+    F: FnOnce() -> Result<BackendSet>,
 {
     let backends = match factory() {
         Ok(b) => b,
@@ -312,19 +401,27 @@ fn worker_loop<F>(
 
         for (model, group) in compress {
             Metrics::inc(&metrics.requests, group.len() as u64);
-            match backends.get(&model) {
-                Some(backend) => batched_encode(backend.as_ref(), &params, &metrics, group),
-                None => {
-                    for (_, reply) in group {
-                        Metrics::inc(&metrics.errors, 1);
-                        let _ = reply.send(Err(format!("unknown model '{model}'")));
-                    }
-                }
+            match &backends {
+                BackendSet::Local(map) => match map.get(&model) {
+                    Some(b) => batched_encode(b.as_ref(), &params, &metrics, group),
+                    None => reject_unknown_model(&metrics, &model, group),
+                },
+                BackendSet::Shared { map, workers } => match map.get(&model) {
+                    Some(b) => batched_encode_fanout(&**b, *workers, &params, &metrics, group),
+                    None => reject_unknown_model(&metrics, &model, group),
+                },
             }
         }
         if !decompress.is_empty() {
             Metrics::inc(&metrics.requests, decompress.len() as u64);
-            batched_decode(&backends, &metrics, decompress, &mut hier_cache);
+            match &backends {
+                BackendSet::Local(map) => {
+                    batched_decode(map, &metrics, decompress, &mut hier_cache)
+                }
+                BackendSet::Shared { map, workers } => {
+                    batched_decode_fanout(map, *workers, &metrics, decompress, &mut hier_cache)
+                }
+            }
         }
         metrics.batch_latency.observe(t_batch.elapsed());
 
@@ -334,7 +431,26 @@ fn worker_loop<F>(
     }
 }
 
+fn reject_unknown_model(
+    metrics: &Metrics,
+    model: &str,
+    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
+) {
+    for (_, reply) in group {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(format!("unknown model '{model}'")));
+    }
+}
+
 /// Cross-stream batched encode for one model.
+///
+/// KEEP IN SYNC with [`batched_encode_fanout`]: the two are the same
+/// three-phase loop, but Rust cannot express "parallel only when
+/// `B: Sync`" over one body — `dyn Backend` (PJRT) can never satisfy the
+/// `Sync` bound the fanned phases need, even at `workers == 1` — so the
+/// serial loop exists as a twin. Error handling, metrics accounting and
+/// admission must match; the byte-identity test pins the happy path
+/// (see ROADMAP for the unification idea).
 fn batched_encode(
     backend: &dyn Backend,
     params: &ServiceParams,
@@ -483,8 +599,448 @@ fn batched_encode(
     }
 }
 
+/// Run `f` over every element of `items` on up to `workers` scoped
+/// threads (contiguous slabs — the lock-step phases are short and even,
+/// so stealing would buy nothing). Each element is mutated independently
+/// and the caller reads results back in slice order, so thread scheduling
+/// cannot reorder anything observable.
+fn par_each<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], workers: usize, f: F) {
+    let per = items.len().div_ceil(workers.max(1)).max(1);
+    if workers <= 1 || items.len() <= 1 || per >= items.len() {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for chunk in items.chunks_mut(per) {
+            scope.spawn(move || {
+                for it in chunk {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+/// [`batched_encode`] for `Sync` backends: the same three-phase loop with
+/// the NN dispatches row-sharded over the pool and the per-stream ANS
+/// phases run streams-in-parallel. Byte-identical containers — each
+/// stream's coder work is untouched, the NN row contract guarantees the
+/// sharded dispatches, and every cross-stream buffer is packed serially
+/// in stream order. KEEP IN SYNC with [`batched_encode`] (see its docs
+/// for why the twins cannot share one body).
+fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
+    backend: &B,
+    workers: usize,
+    params: &ServiceParams,
+    metrics: &Metrics,
+    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
+) {
+    let codec = match VaeCodec::new(backend, params.bbans) {
+        Ok(c) => c,
+        Err(e) => {
+            for (_, reply) in group {
+                let _ = reply.send(Err(format!("{e:#}")));
+            }
+            return;
+        }
+    };
+    let meta = backend.meta();
+
+    struct Stream {
+        images: Vec<Vec<u8>>,
+        /// First row of this stream in the shared posterior batch.
+        base: usize,
+        ans: Ans,
+        next: usize,
+        reply: mpsc::Sender<Result<Vec<u8>, String>>,
+        failed: Option<String>,
+        scratch: CodecScratch,
+        /// This round's latent centres (packed serially after the phase).
+        ys: Vec<f32>,
+        /// This round's likelihood params (distributed serially before
+        /// the push phase).
+        pending: Option<PixelParams>,
+    }
+    let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
+
+    // Phase 1: one row-sharded recognition dispatch for every image of
+    // every stream.
+    let mut posts: Option<PosteriorBatch> = None;
+    {
+        let mut data: Vec<f32> = Vec::new();
+        let mut rows = 0usize;
+        for (images, reply) in group {
+            let failed = images
+                .iter()
+                .any(|i| i.len() != meta.pixels)
+                .then(|| format!("image size != {}", meta.pixels));
+            let base = rows;
+            if failed.is_none() {
+                for img in &images {
+                    codec.scale_image_into(img, &mut data);
+                }
+                rows += images.len();
+            }
+            streams.push(Stream {
+                images,
+                base,
+                ans: Ans::new(params.bbans.clean_seed),
+                next: 0,
+                reply,
+                failed,
+                scratch: CodecScratch::new(),
+                ys: Vec::new(),
+                pending: None,
+            });
+        }
+        if rows > 0 {
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, rows as u64);
+            match crate::model::encode_batch_sharded(
+                backend,
+                &Matrix::new(rows, meta.pixels, data),
+                workers,
+            ) {
+                Ok(p) => posts = Some(p),
+                Err(e) => {
+                    for s in &mut streams {
+                        s.failed = Some(format!("posterior failed: {e:#}"));
+                    }
+                }
+            }
+        }
+    }
+
+    // Phase 2: lock-step image coding; each round's per-stream ANS work
+    // fans out over the pool, the generative dispatch row-shards.
+    let mut ys_data: Vec<f32> = Vec::new();
+    loop {
+        let mut active: Vec<&mut Stream> = streams
+            .iter_mut()
+            .filter(|s| s.failed.is_none() && s.next < s.images.len())
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        let pb = posts.as_ref().expect("active streams imply a posterior batch");
+        // (1) pop posteriors per stream — parallel across streams.
+        par_each(&mut active, workers, |s| {
+            let (mu, sigma) = pb.row(s.base + s.next);
+            let mut idx = std::mem::take(&mut s.scratch.idx);
+            codec.pop_posterior_into(&mut s.ans, mu, sigma, &mut idx, &mut s.scratch.gauss);
+            s.ys.clear();
+            codec.latent_centres_into(&idx, &mut s.ys);
+            s.scratch.idx = idx;
+        });
+        // Pack the latent matrix serially, in stream order.
+        ys_data.clear();
+        for s in active.iter() {
+            ys_data.extend_from_slice(&s.ys);
+        }
+        // (2) one row-sharded generative dispatch for all active streams.
+        let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
+        Metrics::inc(&metrics.nn_calls, 1);
+        Metrics::inc(&metrics.nn_items, active.len() as u64);
+        match crate::model::decode_batch_sharded(backend, &ym, workers) {
+            Ok(param_list) => {
+                for (s, pp) in active.iter_mut().zip(param_list) {
+                    s.pending = Some(pp);
+                }
+                // (3) push pixels + prior — parallel across streams.
+                par_each(&mut active, workers, |s| {
+                    let pp = s.pending.take().expect("params distributed above");
+                    let idx = std::mem::take(&mut s.scratch.idx);
+                    codec.push_pixels_coder_scratch(
+                        &mut s.ans,
+                        &pp,
+                        &s.images[s.next],
+                        &mut s.scratch,
+                    );
+                    codec.push_prior(&mut s.ans, &idx);
+                    s.scratch.idx = idx;
+                    s.next += 1;
+                });
+                Metrics::inc(&metrics.images_encoded, active.len() as u64);
+            }
+            Err(e) => {
+                for s in active.iter_mut() {
+                    s.failed = Some(format!("likelihood failed: {e:#}"));
+                }
+            }
+        }
+        ys_data = ym.data;
+    }
+
+    // Phase 3: containers out (serial, stream order).
+    for s in streams {
+        if let Some(msg) = s.failed {
+            Metrics::inc(&metrics.errors, 1);
+            let _ = s.reply.send(Err(msg));
+            continue;
+        }
+        let container = Container {
+            model: meta.name.clone(),
+            backend_id: backend.backend_id(),
+            cfg: params.bbans,
+            num_images: s.images.len() as u32,
+            pixels: meta.pixels as u32,
+            message: s.ans.into_message(),
+        };
+        let bytes = container.to_bytes();
+        Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
+        let _ = s.reply.send(Ok(bytes));
+    }
+}
+
+/// [`batched_decode`] for `Sync` backends: BBC1 streams run the lock-step
+/// loop with fanned phases and row-sharded dispatches; chunk-parallel
+/// BBC2 and hierarchical BBC3 containers decode over the worker pool
+/// (speculative first-image scheduling included) instead of sequentially.
+/// KEEP IN SYNC with [`batched_decode`] (shared admission lives in
+/// [`bbc2_codec`] / [`decode_hier_container`]).
+fn batched_decode_fanout(
+    backends: &HashMap<String, SharedBackend>,
+    workers: usize,
+    metrics: &Metrics,
+    jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
+    hier_cache: &mut HashMap<String, HierVae>,
+) {
+    type DecodeJob = (Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>);
+    let mut by_model: HashMap<String, Vec<DecodeJob>> = HashMap::new();
+    for (bytes, reply) in jobs {
+        Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
+        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
+            decode_parallel_container_fanout(backends, workers, metrics, &bytes, reply);
+            continue;
+        }
+        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
+            decode_hier_container(Some(workers), metrics, &bytes, reply, hier_cache);
+            continue;
+        }
+        match Container::from_bytes(&bytes) {
+            Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
+            Err(e) => {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(format!("bad container: {e:#}")));
+            }
+        }
+    }
+
+    for (model, group) in by_model {
+        let Some(backend) = backends.get(&model) else {
+            for (_, reply) in group {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(format!("unknown model '{model}'")));
+            }
+            continue;
+        };
+        let backend: &(dyn Backend + Send + Sync) = &**backend;
+
+        struct Stream<'a> {
+            ans: Ans,
+            remaining: usize,
+            out: Vec<Vec<u8>>,
+            /// Built once at admission (each container carries its own
+            /// config); `None` iff `failed` — constructing per phase
+            /// would serialize the pool on the global bucket-table lock.
+            codec: Option<VaeCodec<'a, dyn Backend + Send + Sync>>,
+            reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+            failed: Option<String>,
+            pending_idx: Vec<u32>,
+            pending_img: Vec<u8>,
+            scratch: CodecScratch,
+            /// This round's latent centres / scaled pixels and params.
+            ys: Vec<f32>,
+            xs: Vec<f32>,
+            pending: Option<PixelParams>,
+            /// Row of this stream in the current round's batched outputs.
+            row: usize,
+        }
+        let mut streams: Vec<Stream> = group
+            .into_iter()
+            .map(|(c, reply)| {
+                let mut failed = if c.backend_id != backend.backend_id() {
+                    Some(format!(
+                        "container encoded with backend '{}', this service runs '{}'",
+                        c.backend_id,
+                        backend.backend_id()
+                    ))
+                } else {
+                    None
+                };
+                let codec = match VaeCodec::new(backend, c.cfg) {
+                    Ok(codec) => Some(codec),
+                    Err(e) => {
+                        if failed.is_none() {
+                            failed = Some(format!("{e:#}"));
+                        }
+                        None
+                    }
+                };
+                Stream {
+                    ans: Ans::from_message(&c.message, c.cfg.clean_seed),
+                    remaining: c.num_images as usize,
+                    out: Vec::with_capacity(c.num_images as usize),
+                    codec,
+                    reply,
+                    failed,
+                    pending_idx: Vec::new(),
+                    pending_img: Vec::new(),
+                    scratch: CodecScratch::new(),
+                    ys: Vec::new(),
+                    xs: Vec::new(),
+                    pending: None,
+                    row: 0,
+                }
+            })
+            .collect();
+
+        let meta = backend.meta();
+        let mut ys_data: Vec<f32> = Vec::new();
+        let mut xs_data: Vec<f32> = Vec::new();
+        loop {
+            let mut active: Vec<&mut Stream> = streams
+                .iter_mut()
+                .filter(|s| s.failed.is_none() && s.remaining > 0)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            // (3⁻¹) pop priors — parallel across streams.
+            par_each(&mut active, workers, |s| {
+                let s = &mut **s;
+                let codec = s.codec.as_ref().expect("validated at admission");
+                codec.pop_prior_into(&mut s.ans, &mut s.pending_idx);
+                s.ys.clear();
+                codec.latent_centres_into(&s.pending_idx, &mut s.ys);
+            });
+            ys_data.clear();
+            for s in active.iter() {
+                ys_data.extend_from_slice(&s.ys);
+            }
+            // (2⁻¹) one row-sharded generative dispatch, pop pixels.
+            let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, active.len() as u64);
+            let params_list = match crate::model::decode_batch_sharded(backend, &ym, workers) {
+                Ok(p) => p,
+                Err(e) => {
+                    ys_data = ym.data;
+                    for s in active.iter_mut() {
+                        s.failed = Some(format!("likelihood failed: {e:#}"));
+                    }
+                    continue;
+                }
+            };
+            ys_data = ym.data;
+            for (s, pp) in active.iter_mut().zip(params_list) {
+                s.pending = Some(pp);
+            }
+            par_each(&mut active, workers, |s| {
+                let s = &mut **s;
+                let pp = s.pending.take().expect("params distributed above");
+                let codec = s.codec.as_ref().expect("validated at admission");
+                s.pending_img = codec.pop_pixels_coder_scratch(&mut s.ans, &pp, &mut s.scratch);
+                s.xs.clear();
+                codec.scale_image_into(&s.pending_img, &mut s.xs);
+            });
+            xs_data.clear();
+            for s in active.iter() {
+                xs_data.extend_from_slice(&s.xs);
+            }
+            // (1⁻¹) one row-sharded recognition dispatch, push bits back.
+            let xm = Matrix::new(active.len(), meta.pixels, std::mem::take(&mut xs_data));
+            Metrics::inc(&metrics.nn_calls, 1);
+            Metrics::inc(&metrics.nn_items, active.len() as u64);
+            match crate::model::encode_batch_sharded(backend, &xm, workers) {
+                Ok(posts) => {
+                    for (r, s) in active.iter_mut().enumerate() {
+                        s.row = r;
+                    }
+                    let posts = &posts;
+                    par_each(&mut active, workers, |s| {
+                        let s = &mut **s;
+                        let codec = s.codec.as_ref().expect("validated at admission");
+                        let (mu, sigma) = posts.row(s.row);
+                        codec.push_posterior_scratch(
+                            &mut s.ans,
+                            mu,
+                            sigma,
+                            &s.pending_idx,
+                            &mut s.scratch.gauss,
+                        );
+                        s.out.push(std::mem::take(&mut s.pending_img));
+                        s.remaining -= 1;
+                    });
+                    Metrics::inc(&metrics.images_decoded, active.len() as u64);
+                }
+                Err(e) => {
+                    for s in active.iter_mut() {
+                        s.failed = Some(format!("posterior failed: {e:#}"));
+                    }
+                }
+            }
+            xs_data = xm.data;
+        }
+
+        for s in streams {
+            if let Some(msg) = s.failed {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = s.reply.send(Err(msg));
+            } else {
+                let mut out = s.out;
+                out.reverse(); // stack order → original order
+                let _ = s.reply.send(Ok(out));
+            }
+        }
+    }
+}
+
+/// [`decode_parallel_container`] with the chunk pool: `Sync` backends
+/// decode the independent BBC2 chains across `workers` threads
+/// (speculative first-image scheduling included). Admission is the
+/// shared [`bbc2_codec`] — identical accept/reject behaviour to the
+/// single-threaded worker.
+fn decode_parallel_container_fanout(
+    backends: &HashMap<String, SharedBackend>,
+    workers: usize,
+    metrics: &Metrics,
+    bytes: &[u8],
+    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+) {
+    let fail = |msg: String| {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(msg));
+    };
+    let pc = match ParallelContainer::from_bytes(bytes) {
+        Ok(pc) => pc,
+        Err(e) => return fail(format!("bad container: {e:#}")),
+    };
+    let Some(backend) = backends.get(&pc.model) else {
+        return fail(format!("unknown model '{}'", pc.model));
+    };
+    let backend: &(dyn Backend + Send + Sync) = &**backend;
+    let codec = match bbc2_codec(&pc, backend) {
+        Ok(c) => c,
+        Err(msg) => return fail(msg),
+    };
+    match pc.decode_with_workers(&codec, workers) {
+        Ok(images) => {
+            Metrics::inc(&metrics.images_decoded, images.len() as u64);
+            let _ = reply.send(Ok(images));
+        }
+        Err(e) => fail(format!("parallel container decode failed: {e:#}")),
+    }
+}
+
 /// Cross-stream batched decode (streams may use different models only if
 /// those models share a backend entry; in practice we group by model).
+///
+/// KEEP IN SYNC with [`batched_decode_fanout`] — same twin situation as
+/// [`batched_encode`] / [`batched_encode_fanout`].
 fn batched_decode(
     backends: &HashMap<String, Box<dyn Backend>>,
     metrics: &Metrics,
@@ -504,7 +1060,7 @@ fn batched_decode(
             continue;
         }
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
-            decode_hier_container(metrics, &bytes, reply, hier_cache);
+            decode_hier_container(None, metrics, &bytes, reply, hier_cache);
             continue;
         }
         match Container::from_bytes(&bytes) {
@@ -664,10 +1220,27 @@ fn batched_decode(
     }
 }
 
+/// Shared BBC2 admission: check the recorded backend id against the
+/// hosted backend and build the container's codec — both service
+/// variants must accept/reject exactly the same containers.
+fn bbc2_codec<'a, B: Backend + ?Sized>(
+    pc: &ParallelContainer,
+    backend: &'a B,
+) -> Result<VaeCodec<'a, B>, String> {
+    if pc.backend_id != backend.backend_id() {
+        return Err(format!(
+            "container encoded with backend '{}', this service runs '{}'",
+            pc.backend_id,
+            backend.backend_id()
+        ));
+    }
+    VaeCodec::new(backend, pc.cfg).map_err(|e| format!("{e:#}"))
+}
+
 /// Decode one chunk-parallel (BBC2) container against the owning model's
 /// backend. `dyn Backend` is not `Sync`, so chunks decode sequentially
 /// inside the worker thread; the parallel win belongs to `Sync` backends
-/// via [`ParallelContainer::decode_with`].
+/// via [`ParallelContainer::decode_with`] (the fan-out service's route).
 fn decode_parallel_container(
     backends: &HashMap<String, Box<dyn Backend>>,
     metrics: &Metrics,
@@ -685,16 +1258,9 @@ fn decode_parallel_container(
     let Some(backend) = backends.get(&pc.model) else {
         return fail(format!("unknown model '{}'", pc.model));
     };
-    if pc.backend_id != backend.backend_id() {
-        return fail(format!(
-            "container encoded with backend '{}', this service runs '{}'",
-            pc.backend_id,
-            backend.backend_id()
-        ));
-    }
-    let codec = match VaeCodec::new(backend.as_ref(), pc.cfg) {
+    let codec = match bbc2_codec(&pc, backend.as_ref()) {
         Ok(c) => c,
-        Err(e) => return fail(format!("{e:#}")),
+        Err(msg) => return fail(msg),
     };
     match pc.decode_sequential(&codec) {
         Ok(images) => {
@@ -707,11 +1273,16 @@ fn decode_parallel_container(
 
 /// Decode one hierarchical (`BBC3`) container. The header is
 /// self-describing, so the backend is rebuilt from it instead of looked up
-/// in the model map, and the container's chunks then decode **in lock
-/// step**: every chain advances one image per round with each round's net
-/// evaluations batched across all chains — the coordinator's serving-loop
-/// pattern applied to the deeper bits-back chain.
+/// in the model map. With `workers: None` (the single-threaded worker)
+/// the container's chunks decode **in lock step**: every chain advances
+/// one image per round with each round's net evaluations batched across
+/// all chains. With `Some(workers)` (the `Sync`-backend fan-out service)
+/// the independent chunks decode across the pool instead, speculative
+/// first-image scheduling included — the rebuilt `HierVae` is `Sync`.
+/// ONE function on purpose: the memoization key and its eviction bound
+/// must stay identical across both service variants.
 fn decode_hier_container(
+    workers: Option<usize>,
     metrics: &Metrics,
     bytes: &[u8],
     reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
@@ -753,7 +1324,11 @@ fn decode_hier_container(
         Ok(c) => c,
         Err(e) => return fail(format!("{e:#}")),
     };
-    match hc.decode_lockstep(&codec) {
+    let decoded = match workers {
+        None => hc.decode_lockstep(&codec),
+        Some(w) => hc.decode_with_workers(&codec, w),
+    };
+    match decoded {
         Ok(images) => {
             Metrics::inc(&metrics.images_decoded, images.len() as u64);
             let _ = reply.send(Ok(images));
@@ -771,7 +1346,7 @@ mod tests {
         let params = ServiceParams {
             max_jobs,
             batch_window: Duration::from_millis(window_ms),
-            bbans: BbAnsConfig::default(),
+            ..Default::default()
         };
         ModelService::spawn_with(params, || {
             let meta = ModelMeta {
@@ -793,6 +1368,118 @@ mod tests {
         (0..n)
             .map(|_| (0..36).map(|_| (rng.f64() < 0.3) as u8).collect())
             .collect()
+    }
+
+    /// The `Sync`-backend fan-out variant of [`test_service`]: same model
+    /// (same meta, same seed → same weights), phases spread over `fanout`
+    /// workers.
+    fn test_service_sync(max_jobs: usize, window_ms: u64, fanout: usize) -> ModelService {
+        let params = ServiceParams {
+            max_jobs,
+            batch_window: Duration::from_millis(window_ms),
+            fanout_workers: fanout,
+            ..Default::default()
+        };
+        ModelService::spawn_with_sync(params, || {
+            let meta = ModelMeta {
+                name: "toy".into(),
+                pixels: 36,
+                latent_dim: 6,
+                hidden: 10,
+                likelihood: Likelihood::Bernoulli,
+                test_elbo_bpd: f64::NAN,
+            };
+            let mut map: HashMap<String, SharedBackend> = HashMap::new();
+            map.insert("toy".into(), Arc::new(NativeVae::random(meta, 77)));
+            Ok(map)
+        })
+    }
+
+    /// The fan-out service must produce byte-identical containers to the
+    /// single-threaded worker at every fan-out width, and each service
+    /// must decode the other's output — the coordinator-level face of the
+    /// ISSUE 5 determinism contract.
+    #[test]
+    fn sync_service_bytes_match_serial_service() {
+        let serial = test_service(4, 1);
+        let images = sample_images(9, 31);
+        let reference = serial.handle().compress("toy", images.clone()).unwrap();
+        for fanout in [1usize, 3] {
+            let sync = test_service_sync(4, 1, fanout);
+            let h = sync.handle();
+            let bytes = h.compress("toy", images.clone()).unwrap();
+            assert_eq!(bytes, reference, "fanout={fanout} changed container bytes");
+            assert_eq!(h.decompress(reference.clone()).unwrap(), images);
+            sync.shutdown();
+        }
+        assert_eq!(serial.handle().decompress(reference).unwrap(), images);
+        serial.shutdown();
+    }
+
+    #[test]
+    fn sync_service_concurrent_requests_roundtrip_and_batch() {
+        let svc = test_service_sync(8, 30, 2);
+        let h = svc.handle();
+        let mut threads = Vec::new();
+        for t in 0..6 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                let images = sample_images(5, 300 + t);
+                let c = h.compress("toy", images.clone()).unwrap();
+                let out = h.decompress(c).unwrap();
+                assert_eq!(out, images);
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mbs = svc.metrics.mean_batch_size();
+        assert!(mbs > 1.5, "expected cross-stream batching, got {mbs:.2}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sync_service_decodes_chunked_and_hier_containers() {
+        use crate::bbans::hierarchy::Schedule;
+        use crate::model::hierarchy::{HierMeta, HierVae};
+        // Offline BBC2 from the same toy model the service hosts.
+        let meta = ModelMeta {
+            name: "toy".into(),
+            pixels: 36,
+            latent_dim: 6,
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 77);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = sample_images(9, 21);
+        let pc = crate::bbans::container::ParallelContainer::encode_with(&codec, &images, 3)
+            .unwrap();
+        // Offline BBC3 (self-describing header).
+        let hmeta = HierMeta {
+            name: "hier2".into(),
+            pixels: 36,
+            dims: vec![6, 4],
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let hbackend = HierVae::random(hmeta, 99);
+        let hcodec = HierCodec::new(&hbackend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let hc = HierContainer::encode_with_workers(&hcodec, &images, 3, 2).unwrap();
+
+        let svc = test_service_sync(4, 1, 3);
+        let h = svc.handle();
+        assert_eq!(h.decompress(pc.to_bytes()).unwrap(), images);
+        assert_eq!(h.decompress(hc.to_bytes()).unwrap(), images);
+        // Wrong backend ids still rejected through the fan-out paths.
+        let mut bad = pc;
+        bad.backend_id = "pjrt-b16".into();
+        assert!(h.decompress(bad.to_bytes()).is_err());
+        let mut badh = hc;
+        badh.backend_id = "hier-native-s1".into();
+        assert!(h.decompress(badh.to_bytes()).is_err());
+        svc.shutdown();
     }
 
     #[test]

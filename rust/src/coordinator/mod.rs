@@ -16,5 +16,5 @@ pub mod metrics;
 pub mod protocol;
 pub mod server;
 
-pub use batcher::{ModelService, ServiceHandle, ServiceParams};
+pub use batcher::{ModelService, ServiceHandle, ServiceParams, SharedBackend};
 pub use server::{Client, Server};

@@ -29,4 +29,5 @@ pub mod coordinator;
 pub mod data;
 pub mod model;
 pub mod runtime;
+pub mod simd;
 pub mod util;

@@ -4,7 +4,7 @@
 //!   info                         show artifact/model info
 //!   compress   -m MODEL -i IDX -o FILE [-n N] [--native] [--latent-bits B]
 //!   decompress -i FILE -o IDX [--native]
-//!   serve      [--bind ADDR] [--native] [--max-jobs J] [--window-ms W]
+//!   serve      [--bind ADDR] [--native] [--max-jobs J] [--window-ms W] [--fanout-workers W]
 //!   client     --addr ADDR --stats
 //!
 //! Arg parsing is hand-rolled (clap is unavailable offline).
@@ -85,6 +85,7 @@ fn usage() -> ! {
                           [--binarized] [--chunks K]\n\
          bbans decompress -i in.bbc -o out.idx [--native]\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16] [--window-ms 2]\n\
+                          [--fanout-workers W]\n\
          bbans client     --addr HOST:PORT --stats\n\
          \n\
          --chunks K > 1 encodes K independent chains on K threads (native\n\
@@ -133,6 +134,11 @@ fn service(args: &Args) -> ModelService {
                 .unwrap_or(2),
         ),
         bbans: bbans_config(args),
+        fanout_workers: args
+            .flags
+            .get("fanout-workers")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
     };
     ModelService::spawn(
         default_artifact_dir(),
@@ -156,6 +162,7 @@ fn cmd_info() -> Result<()> {
     let dir = default_artifact_dir();
     let config = load_config(&dir)?;
     println!("artifact dir : {}", dir.display());
+    println!("simd kernel  : {}", bbans::simd::kernel_name());
     println!(
         "pixels       : {}",
         config
@@ -449,6 +456,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let svc = service(args);
     let server = Server::start(&bind, svc.handle())?;
     println!("bbans serving on {}", server.addr);
+    if args.switches.contains("native") {
+        // The native service fans lock-step phases over a Sync-backend
+        // worker pool; the kernel variant is diagnostic only (all
+        // variants are bit-identical — see README "SIMD dispatch").
+        println!(
+            "native Sync-backend fan-out service (compute kernel: {})",
+            bbans::simd::kernel_name()
+        );
+    }
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -75,6 +75,13 @@ pub trait HierBackend {
     /// backend with the same id.
     fn backend_id(&self) -> String;
 
+    /// Diagnostic compute-kernel variant, mirroring
+    /// [`super::Backend::kernel_id`]: never part of the container
+    /// identity because every variant is bit-identical.
+    fn kernel_id(&self) -> String {
+        crate::simd::kernel_name().to_string()
+    }
+
     /// Seed that deterministically reproduces this backend's weights, for
     /// self-describing containers (`0` = weights come from trained
     /// artifacts and must be loaded by model name).

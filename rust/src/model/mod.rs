@@ -145,6 +145,17 @@ pub trait Backend {
     /// variant).
     fn backend_id(&self) -> String;
 
+    /// Diagnostic identifier of the compute-kernel variant this backend
+    /// dispatches to (`avx2`/`neon`/`scalar`/...), surfaced next to
+    /// [`Backend::backend_id`] in logs, serve banners and bench
+    /// annotations. Deliberately **not** part of the container identity:
+    /// every kernel variant is bit-identical by the tensor-layer
+    /// determinism contract, so streams move freely between machines with
+    /// different vector units.
+    fn kernel_id(&self) -> String {
+        crate::simd::kernel_name().to_string()
+    }
+
     /// Recognition net: scaled images (len `pixels` each, values in [0,1])
     /// → (mu, sigma) per image.
     fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>>;
@@ -185,5 +196,158 @@ pub trait Backend {
     fn decode_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
         let refs: Vec<&[f32]> = (0..ys.rows).map(|r| ys.row(r)).collect();
         self.likelihood(&refs)
+    }
+}
+
+/// Near-even contiguous split of `rows` into at most `parts` non-empty
+/// row ranges — the shared [`crate::util::chunk_ranges`] partition, so
+/// batch sharding and chunked coding agree on one split semantics.
+fn row_shards(rows: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    crate::util::chunk_ranges(rows, parts)
+}
+
+fn shard_matrix(m: &Matrix, r: &std::ops::Range<usize>) -> Matrix {
+    Matrix::new(
+        r.len(),
+        m.cols,
+        m.data[r.start * m.cols..r.end * m.cols].to_vec(),
+    )
+}
+
+/// [`Backend::encode_batch`] with the batch's rows fanned out over
+/// `workers` scoped threads (ISSUE 5's serving-side fan-out primitive).
+///
+/// Bitwise identical to the single call for any worker count: the
+/// batched-call contract says row `r` depends only on input row `r`, so
+/// splitting rows into contiguous shards and stitching the outputs back
+/// in shard order changes nothing (pinned by
+/// `sharded_batches_match_unsharded_bitwise`). Requires a `Sync` backend;
+/// PJRT backends stay on the single-threaded worker instead.
+pub fn encode_batch_sharded<B: Backend + Sync + ?Sized>(
+    backend: &B,
+    xs: &Matrix,
+    workers: usize,
+) -> Result<PosteriorBatch> {
+    let shards = row_shards(xs.rows, workers);
+    if shards.len() <= 1 {
+        return backend.encode_batch(xs);
+    }
+    let parts: Vec<PosteriorBatch> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|r| {
+                let sub = shard_matrix(xs, r);
+                scope.spawn(move || backend.encode_batch(&sub))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("encode shard panicked"))
+            .collect::<Result<_>>()
+    })?;
+    let l = backend.meta().latent_dim;
+    let mut mu = Vec::with_capacity(xs.rows * l);
+    let mut sigma = Vec::with_capacity(xs.rows * l);
+    for p in parts {
+        mu.extend_from_slice(&p.mu.data);
+        sigma.extend_from_slice(&p.sigma.data);
+    }
+    Ok(PosteriorBatch {
+        mu: Matrix::new(xs.rows, l, mu),
+        sigma: Matrix::new(xs.rows, l, sigma),
+    })
+}
+
+/// [`Backend::decode_batch`] with rows fanned out over `workers` scoped
+/// threads — same contract and bit-identity argument as
+/// [`encode_batch_sharded`].
+pub fn decode_batch_sharded<B: Backend + Sync + ?Sized>(
+    backend: &B,
+    ys: &Matrix,
+    workers: usize,
+) -> Result<Vec<PixelParams>> {
+    let shards = row_shards(ys.rows, workers);
+    if shards.len() <= 1 {
+        return backend.decode_batch(ys);
+    }
+    let parts: Vec<Vec<PixelParams>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|r| {
+                let sub = shard_matrix(ys, r);
+                scope.spawn(move || backend.decode_batch(&sub))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("decode shard panicked"))
+            .collect::<Result<_>>()
+    })?;
+    Ok(parts.into_iter().flatten().collect())
+}
+
+#[cfg(test)]
+mod shard_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn backend(likelihood: Likelihood) -> vae::NativeVae {
+        vae::NativeVae::random(
+            ModelMeta {
+                name: "shard".into(),
+                pixels: 24,
+                latent_dim: 5,
+                hidden: 9,
+                likelihood,
+                test_elbo_bpd: f64::NAN,
+            },
+            0xFA40,
+        )
+    }
+
+    /// Row-sharded dispatch must equal the single batched call bitwise
+    /// for every worker count — the contract the coordinator's sync
+    /// fan-out rests on.
+    #[test]
+    fn sharded_batches_match_unsharded_bitwise() {
+        let mut rng = Rng::new(0x54A2);
+        for likelihood in [Likelihood::Bernoulli, Likelihood::BetaBinomial] {
+            let v = backend(likelihood);
+            for rows in [1usize, 2, 5, 16] {
+                let xs = Matrix::new(
+                    rows,
+                    24,
+                    (0..rows * 24).map(|_| (rng.f64() < 0.4) as u32 as f32).collect(),
+                );
+                let ys = Matrix::new(
+                    rows,
+                    5,
+                    (0..rows * 5).map(|_| rng.normal() as f32).collect(),
+                );
+                let want_post = v.encode_batch(&xs).unwrap();
+                let want_par = v.decode_batch(&ys).unwrap();
+                for workers in [1usize, 2, 3, 7, 32] {
+                    let post = encode_batch_sharded(&v, &xs, workers).unwrap();
+                    assert_eq!(post, want_post, "{likelihood:?} rows={rows} w={workers}");
+                    let par = decode_batch_sharded(&v, &ys, workers).unwrap();
+                    assert_eq!(par.len(), want_par.len());
+                    for (a, b) in par.iter().zip(want_par.iter()) {
+                        match (a, b) {
+                            (PixelParams::Bernoulli(x), PixelParams::Bernoulli(y)) => {
+                                assert_eq!(x, y)
+                            }
+                            (
+                                PixelParams::BetaBinomialAb { alpha: a1, beta: b1 },
+                                PixelParams::BetaBinomialAb { alpha: a2, beta: b2 },
+                            ) => {
+                                assert_eq!(a1, a2);
+                                assert_eq!(b1, b2);
+                            }
+                            other => panic!("param kinds diverged: {other:?}"),
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -21,6 +21,23 @@
 //! exact-zero inputs and the packed kernel does too; for finite weights an
 //! elided `+= 0.0 * w` changes no value (at most the sign of a zero,
 //! which no downstream computation distinguishes).
+//!
+//! **SIMD microkernels** (ISSUE 5). [`dense_packed_into`] dispatches at
+//! runtime ([`crate::simd::active`]) between the scalar-with-
+//! autovectorization body and explicit AVX2 (`x86_64`) / NEON (`aarch64`)
+//! microkernels. The SIMD bodies vectorize **across the [`NR`] output
+//! lanes of a panel — never across `k`**: one vector register holds a
+//! row-tile's `NR` accumulators, each updated with a lane-wise
+//! `acc + x·w` (separate mul and add; FMA would fuse the two roundings
+//! the contract requires). Each lane therefore performs the exact scalar
+//! accumulation sequence, so every variant is bit-identical to the
+//! reference — pinned by `simd_kernels_match_scalar_bitwise` below and
+//! the container-level invariance tests in `tests/properties.rs`. The
+//! bias load and ReLU epilogue are vectorized too (ReLU via compare+mask,
+//! preserving `-0.0` and NaN semantics); the sigmoid/softplus epilogues
+//! apply the scalar libm-exact functions lane by lane at store time — a
+//! vector `exp` approximation would break bit-identity — still fused in
+//! the sense that the output matrix is written exactly once.
 
 /// Output columns per packed panel (register-tile width; the microkernel
 /// keeps `NR` accumulators live per row).
@@ -192,7 +209,9 @@ pub fn dense_packed(x: &Matrix, w: &PackedMatrix, b: &[f32], epilogue: Epilogue)
 }
 
 /// [`dense_packed`] writing into a caller-owned output matrix (the
-/// batched backend reuses one per layer across calls).
+/// batched backend reuses one per layer across calls). Dispatches to the
+/// scalar or SIMD microkernel selected by [`crate::simd::active`]; every
+/// variant is bit-identical (module docs).
 pub fn dense_packed_into(
     x: &Matrix,
     w: &PackedMatrix,
@@ -207,6 +226,40 @@ pub fn dense_packed_into(
     if n == 0 {
         return;
     }
+    dense_packed_into_kernel(crate::simd::active(), x, w, b, epilogue, out);
+}
+
+/// [`dense_packed_into`] pinned to one kernel variant (tests and benches;
+/// shape checks are the caller's).
+pub(crate) fn dense_packed_into_kernel(
+    kernel: crate::simd::Kernel,
+    x: &Matrix,
+    w: &PackedMatrix,
+    b: &[f32],
+    epilogue: Epilogue,
+    out: &mut Matrix,
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Kernel::Avx2` is only ever active()/forced when the CPU
+        // reports AVX2 (see `simd::detect` / `simd::force`).
+        crate::simd::Kernel::Avx2 => unsafe { dense_packed_into_avx2(x, w, b, epilogue, out) },
+        #[cfg(target_arch = "aarch64")]
+        crate::simd::Kernel::Neon => dense_packed_into_neon(x, w, b, epilogue, out),
+        _ => dense_packed_into_scalar(x, w, b, epilogue, out),
+    }
+}
+
+/// The scalar-with-autovectorization body (the pre-SIMD production kernel,
+/// kept verbatim as the portable reference of the packed loop structure).
+fn dense_packed_into_scalar(
+    x: &Matrix,
+    w: &PackedMatrix,
+    b: &[f32],
+    epilogue: Epilogue,
+    out: &mut Matrix,
+) {
+    let (bsz, k, n) = (x.rows, w.rows, w.cols);
     for rc in (0..bsz).step_by(MC) {
         let rc_end = (rc + MC).min(bsz);
         for j in 0..w.n_panels() {
@@ -239,6 +292,189 @@ pub fn dense_packed_into(
                     let orow = &mut out.row_mut(r0 + i)[col0..col0 + width];
                     for (o, &a) in orow.iter_mut().zip(acc_i.iter()) {
                         *o = epilogue.apply(a);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 microkernel: identical loop structure to the scalar body, with a
+/// row-tile's [`NR`] = 8 accumulators held in one `ymm` register. Each
+/// k-step is `acc = acc + broadcast(x[k]) * panel[k]` as a separate
+/// `vmulps` + `vaddps` (NOT `vfmadd`), so every lane's value sequence is
+/// exactly the scalar one — bit-identical by IEEE-754 lane semantics. The
+/// `x[k] == 0` sparse skip is kept (same value-preservation argument and
+/// the same perf win on MNIST-like inputs).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dense_packed_into_avx2(
+    x: &Matrix,
+    w: &PackedMatrix,
+    b: &[f32],
+    epilogue: Epilogue,
+    out: &mut Matrix,
+) {
+    use core::arch::x86_64::*;
+    const _: () = assert!(NR == 8, "the AVX2 microkernel is written for 8 f32 lanes");
+    let (bsz, k, n) = (x.rows, w.rows, w.cols);
+    for rc in (0..bsz).step_by(MC) {
+        let rc_end = (rc + MC).min(bsz);
+        for j in 0..w.n_panels() {
+            let panel = w.panel(j);
+            let col0 = j * NR;
+            let width = NR.min(n - col0);
+            let mut btile = [0.0f32; NR];
+            btile[..width].copy_from_slice(&b[col0..col0 + width]);
+            let bvec = _mm256_loadu_ps(btile.as_ptr());
+            for r0 in (rc..rc_end).step_by(MR) {
+                let mr = MR.min(rc_end - r0);
+                let mut acc = [bvec; MR];
+                for kb in (0..k).step_by(KC) {
+                    let kb_end = (kb + KC).min(k);
+                    let pslab = &panel[kb * NR..kb_end * NR];
+                    for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
+                        let xrow = &x.row(r0 + i)[kb..kb_end];
+                        let mut a = *acc_i;
+                        for (kk, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue; // value-preserving sparse skip
+                            }
+                            let wv = _mm256_loadu_ps(pslab.as_ptr().add(kk * NR));
+                            a = _mm256_add_ps(a, _mm256_mul_ps(_mm256_set1_ps(xv), wv));
+                        }
+                        *acc_i = a;
+                    }
+                }
+                for (i, &acc_i) in acc.iter().enumerate().take(mr) {
+                    // ReLU stays fully vectorized: where `a < 0.0` select
+                    // +0.0, else keep the bits — matches `Epilogue::apply`
+                    // for -0.0 (kept) and NaN (kept) exactly.
+                    let v = if matches!(epilogue, Epilogue::Relu) {
+                        let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(acc_i, _mm256_setzero_ps());
+                        _mm256_andnot_ps(neg, acc_i)
+                    } else {
+                        acc_i
+                    };
+                    let mut tmp = [0.0f32; NR];
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+                    let orow = &mut out.row_mut(r0 + i)[col0..col0 + width];
+                    match epilogue {
+                        // Already applied (or nothing to apply).
+                        Epilogue::Linear | Epilogue::Relu => {
+                            orow.copy_from_slice(&tmp[..width]);
+                        }
+                        // Transcendentals must match libm bit-for-bit, so
+                        // they run scalar per lane, fused at store time.
+                        Epilogue::Sigmoid => {
+                            for (o, &t) in orow.iter_mut().zip(tmp.iter()) {
+                                *o = sigmoid_f32(t);
+                            }
+                        }
+                        Epilogue::Softplus => {
+                            for (o, &t) in orow.iter_mut().zip(tmp.iter()) {
+                                *o = softplus_f32(t);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// NEON microkernel (`aarch64`): the AVX2 body with the 8 output lanes
+/// split across two `float32x4_t` registers (NEON is 128-bit). Same
+/// lane-direction rule, same separate mul+add (`vmulq`/`vaddq`, never
+/// `vfmaq`), same sparse skip, same scalar transcendental epilogues —
+/// bit-identical to the scalar kernel by the identical per-lane op
+/// sequence. NEON is a baseline `aarch64` feature, so the intrinsics are
+/// unconditionally safe to issue there.
+#[cfg(target_arch = "aarch64")]
+fn dense_packed_into_neon(
+    x: &Matrix,
+    w: &PackedMatrix,
+    b: &[f32],
+    epilogue: Epilogue,
+    out: &mut Matrix,
+) {
+    use core::arch::aarch64::*;
+    const _: () = assert!(NR == 8, "the NEON microkernel is written for 2x4 f32 lanes");
+    let (bsz, k, n) = (x.rows, w.rows, w.cols);
+    for rc in (0..bsz).step_by(MC) {
+        let rc_end = (rc + MC).min(bsz);
+        for j in 0..w.n_panels() {
+            let panel = w.panel(j);
+            let col0 = j * NR;
+            let width = NR.min(n - col0);
+            let mut btile = [0.0f32; NR];
+            btile[..width].copy_from_slice(&b[col0..col0 + width]);
+            // SAFETY: NEON is baseline on aarch64; all pointers below stay
+            // in bounds of their slices (panel rows are NR-strided, the
+            // btile/tmp arrays are NR long).
+            unsafe {
+                let blo = vld1q_f32(btile.as_ptr());
+                let bhi = vld1q_f32(btile.as_ptr().add(4));
+                for r0 in (rc..rc_end).step_by(MR) {
+                    let mr = MR.min(rc_end - r0);
+                    let mut acc = [[blo, bhi]; MR];
+                    for kb in (0..k).step_by(KC) {
+                        let kb_end = (kb + KC).min(k);
+                        let pslab = &panel[kb * NR..kb_end * NR];
+                        for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
+                            let xrow = &x.row(r0 + i)[kb..kb_end];
+                            let (mut alo, mut ahi) = (acc_i[0], acc_i[1]);
+                            for (kk, &xv) in xrow.iter().enumerate() {
+                                if xv == 0.0 {
+                                    continue; // value-preserving sparse skip
+                                }
+                                let xb = vdupq_n_f32(xv);
+                                let wlo = vld1q_f32(pslab.as_ptr().add(kk * NR));
+                                let whi = vld1q_f32(pslab.as_ptr().add(kk * NR + 4));
+                                alo = vaddq_f32(alo, vmulq_f32(xb, wlo));
+                                ahi = vaddq_f32(ahi, vmulq_f32(xb, whi));
+                            }
+                            *acc_i = [alo, ahi];
+                        }
+                    }
+                    for (i, &[alo, ahi]) in acc.iter().enumerate().take(mr) {
+                        let (vlo, vhi) = if matches!(epilogue, Epilogue::Relu) {
+                            // where a < 0.0 clear to +0.0, else keep bits.
+                            let z = vdupq_n_f32(0.0);
+                            let nlo = vcltq_f32(alo, z);
+                            let nhi = vcltq_f32(ahi, z);
+                            (
+                                vreinterpretq_f32_u32(vbicq_u32(
+                                    vreinterpretq_u32_f32(alo),
+                                    nlo,
+                                )),
+                                vreinterpretq_f32_u32(vbicq_u32(
+                                    vreinterpretq_u32_f32(ahi),
+                                    nhi,
+                                )),
+                            )
+                        } else {
+                            (alo, ahi)
+                        };
+                        let mut tmp = [0.0f32; NR];
+                        vst1q_f32(tmp.as_mut_ptr(), vlo);
+                        vst1q_f32(tmp.as_mut_ptr().add(4), vhi);
+                        let orow = &mut out.row_mut(r0 + i)[col0..col0 + width];
+                        match epilogue {
+                            Epilogue::Linear | Epilogue::Relu => {
+                                orow.copy_from_slice(&tmp[..width]);
+                            }
+                            Epilogue::Sigmoid => {
+                                for (o, &t) in orow.iter_mut().zip(tmp.iter()) {
+                                    *o = sigmoid_f32(t);
+                                }
+                            }
+                            Epilogue::Softplus => {
+                                for (o, &t) in orow.iter_mut().zip(tmp.iter()) {
+                                    *o = softplus_f32(t);
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -414,6 +650,71 @@ mod tests {
                     "shape {m}x{k}x{n} elem {i}: packed {a} vs reference {r}"
                 );
             }
+        }
+    }
+
+    /// Every runtime-dispatchable SIMD kernel must agree with the scalar
+    /// packed kernel BITWISE, for every epilogue and for shapes covering
+    /// all tile tails (rows % MR, cols % NR, k % KC) — the ISSUE 5 face
+    /// of the determinism contract. Kernels are invoked directly (not via
+    /// the global dispatch), so this test is race-free under the parallel
+    /// test harness.
+    #[test]
+    fn simd_kernels_match_scalar_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(0x51D0);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 784, 100),
+            (3, 7, 1),
+            (4, 8, 8),
+            (5, 9, 17),
+            (2, 513, 23), // k > KC: multiple cache slabs
+            (65, 40, 103),
+        ];
+        let epilogues = [
+            Epilogue::Linear,
+            Epilogue::Relu,
+            Epilogue::Sigmoid,
+            Epilogue::Softplus,
+        ];
+        for &(m, k, n) in &shapes {
+            let x = rand_matrix(&mut rng, m, k);
+            let w = rand_matrix(&mut rng, k, n);
+            let wp = w.packed();
+            let b: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.2) as f32).collect();
+            for ep in epilogues {
+                let mut want = Matrix::zeros(m, n);
+                dense_packed_into_kernel(crate::simd::Kernel::Scalar, &x, &wp, &b, ep, &mut want);
+                for kernel in crate::simd::available() {
+                    let mut got = Matrix::zeros(m, n);
+                    dense_packed_into_kernel(kernel, &x, &wp, &b, ep, &mut got);
+                    for (i, (a, r)) in got.data.iter().zip(want.data.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            r.to_bits(),
+                            "{kernel:?} {ep:?} shape {m}x{k}x{n} elem {i}: {a} vs {r}"
+                        );
+                    }
+                }
+            }
+        }
+        // Special values through ReLU: with all-zero inputs the sparse
+        // skip leaves acc = bias exactly, so the vectorized compare+mask
+        // must keep -0.0 (scalar `v < 0.0` is false for it) and zero the
+        // negative subnormal.
+        let x = Matrix::new(1, 2, vec![0.0, 0.0]);
+        let w = Matrix::new(2, 9, vec![0.0; 18]);
+        let wp = w.packed();
+        let mut bias = vec![0.0f32; 9];
+        bias[0] = -0.0;
+        bias[1] = f32::MIN_POSITIVE;
+        bias[2] = -f32::MIN_POSITIVE;
+        for kernel in crate::simd::available() {
+            let mut got = Matrix::zeros(1, 9);
+            dense_packed_into_kernel(kernel, &x, &wp, &bias, Epilogue::Relu, &mut got);
+            assert_eq!(got.data[0].to_bits(), (-0.0f32).to_bits(), "{kernel:?} -0.0");
+            assert_eq!(got.data[1], f32::MIN_POSITIVE, "{kernel:?}");
+            assert_eq!(got.data[2], 0.0, "{kernel:?} negative subnormal");
         }
     }
 

@@ -238,6 +238,17 @@ impl Backend for NativeVae {
         "native".to_string()
     }
 
+    /// The GEMM variant this forward pass dispatches to. Diagnostic only:
+    /// every variant (and the scalar reference) is bit-identical, so the
+    /// container-identity `backend_id` stays "native" regardless.
+    fn kernel_id(&self) -> String {
+        if self.reference_gemm {
+            "reference".to_string()
+        } else {
+            crate::simd::kernel_name().to_string()
+        }
+    }
+
     fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
         // Rerouted through the batched path (B = xs.len()); bit-identical
         // to any other batch grouping by the tensor-layer contract.
@@ -482,6 +493,10 @@ impl Backend for PjrtVae {
 
     fn backend_id(&self) -> String {
         self.backend_id.clone()
+    }
+
+    fn kernel_id(&self) -> String {
+        "pjrt".to_string()
     }
 
     fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {

@@ -1,0 +1,396 @@
+//! Runtime-dispatched SIMD kernel selection and the shared vectorized
+//! f64 helpers (ISSUE 5).
+//!
+//! Every explicit SIMD path in this crate is **bit-identical** to its
+//! scalar twin — that is the ground rule, not an aspiration. BB-ANS
+//! requires the decoder to reproduce the encoder's quantized
+//! distributions exactly, and streams move between machines, so a kernel
+//! variant may never change a single coded bit. The two disciplines that
+//! make this possible:
+//!
+//! * **Vectorize across independent outputs, never across a reduction.**
+//!   The GEMM microkernels ([`crate::model::tensor`]) spread the `NR`
+//!   output-column lanes over one vector register and keep each element's
+//!   accumulation order (bias, then `k` ascending) untouched; the
+//!   beta-binomial batch constructor runs four *pixels'* recurrences in
+//!   four lanes, each lane executing exactly the scalar op sequence.
+//!   Lane-wise IEEE-754 mul/add/div are identical to their scalar
+//!   counterparts, so this is exact. FMA is **never** used — it fuses the
+//!   rounding step that the scalar code performs twice.
+//! * **Emulate libm exactly or stay scalar.** `f64::round` (half away
+//!   from zero) is reproduced for the non-negative quantizer domain as
+//!   `floor(x) + (x − floor(x) ≥ ½)`, which is exact because
+//!   `x − floor(x)` is always exact for `x ≥ 0` (Sterbenz for `x ≥ 1`,
+//!   trivial below). Transcendentals (`exp`, `ln_1p` in the GEMM
+//!   epilogues) stay scalar per lane — no vector approximation matches
+//!   libm bit-for-bit.
+//!
+//! Dispatch is resolved once per process: AVX2 on `x86_64` when the CPU
+//! reports it, NEON on `aarch64` (baseline there), scalar otherwise. The
+//! `BBANS_FORCE_SCALAR` environment variable (any value except `0` or
+//! empty) pins the scalar path — the debugging escape hatch documented in
+//! the README — and [`force`] lets tests flip variants in-process to pin
+//! the bit-identity contract.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A compute-kernel variant. All variants are bit-identical; the choice
+/// affects throughput only, which is why it is deliberately **not** part
+/// of any container's `backend_id` (see `Backend::kernel_id`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar code (the reference semantics).
+    Scalar,
+    /// 8-lane f32 / 4-lane f64 AVX2 paths (`x86_64`, runtime-detected).
+    Avx2,
+    /// 4-lane f32 NEON paths (`aarch64`, baseline feature there).
+    Neon,
+}
+
+impl Kernel {
+    /// Stable lowercase name, used in `kernel_id` strings and bench
+    /// annotations.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// Test/debug override: 0 = none, else `Kernel` discriminant + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static DETECTED: OnceLock<Kernel> = OnceLock::new();
+
+fn detect() -> Kernel {
+    // Escape hatch first: BBANS_FORCE_SCALAR pins the scalar path for
+    // debugging and for CI's forced-scalar leg (unset, empty or "0"
+    // leaves dispatch alone).
+    match std::env::var("BBANS_FORCE_SCALAR") {
+        Ok(v) if !v.is_empty() && v != "0" => Kernel::Scalar,
+        _ => detect_arch(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Kernel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Kernel {
+    Kernel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Kernel {
+    Kernel::Scalar
+}
+
+/// The kernel variant every dispatched hot path uses right now.
+#[inline]
+pub fn active() -> Kernel {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        2 => Kernel::Avx2,
+        3 => Kernel::Neon,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// Name of the active kernel (diagnostics, bench annotations,
+/// `kernel_id`).
+pub fn kernel_name() -> &'static str {
+    active().name()
+}
+
+/// Every variant this process can actually execute (always includes
+/// [`Kernel::Scalar`]). Tests iterate this to pin cross-variant
+/// bit-identity.
+pub fn available() -> Vec<Kernel> {
+    let mut out = vec![Kernel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        out.push(Kernel::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    out.push(Kernel::Neon);
+    out
+}
+
+/// Pin dispatch to one variant (`None` restores runtime detection).
+/// Panics if `k` is not in [`available`] — forcing an unsupported variant
+/// would execute illegal instructions. Intended for tests and benches;
+/// the change is process-global.
+pub fn force(k: Option<Kernel>) {
+    if let Some(k) = k {
+        assert!(
+            available().contains(&k),
+            "kernel {k:?} is not available on this CPU"
+        );
+    }
+    let v = match k {
+        None => 0,
+        Some(Kernel::Scalar) => 1,
+        Some(Kernel::Avx2) => 2,
+        Some(Kernel::Neon) => 3,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------- f64 helpers
+
+/// Widen an f32 PMF row to f64, mapping every non-finite or non-positive
+/// entry to `0.0` — exactly `if p.is_finite() && p > 0.0 { p } else
+/// { 0.0 }` on the widened value, vectorized. `dst` is cleared first and
+/// every element is written exactly once (no zero-fill pass: this sits
+/// on the per-pixel table hot path).
+// The AVX2 arm initializes the spare capacity through
+// `widen_sanitize_f32_avx2` before `set_len`; clippy cannot see through
+// the call.
+#[allow(clippy::uninit_vec)]
+pub fn widen_sanitize_f32(src: &[f32], dst: &mut Vec<f64>) {
+    dst.clear();
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx2 {
+        dst.reserve(src.len());
+        // SAFETY: AVX2 availability checked by dispatch; the body writes
+        // all `src.len()` elements of the spare capacity before set_len.
+        unsafe {
+            widen_sanitize_f32_avx2(src, dst.spare_capacity_mut().as_mut_ptr() as *mut f64);
+            dst.set_len(src.len());
+        }
+        return;
+    }
+    dst.extend(src.iter().map(|&s| {
+        let p = s as f64;
+        if p.is_finite() && p > 0.0 {
+            p
+        } else {
+            0.0
+        }
+    }));
+}
+
+/// Scalar reference used by the cross-variant tests.
+#[cfg(test)]
+fn widen_sanitize_f32_scalar(src: &[f32], dst: &mut [f64]) {
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        let p = s as f64;
+        *d = if p.is_finite() && p > 0.0 { p } else { 0.0 };
+    }
+}
+
+/// Writes exactly `src.len()` f64s starting at `out` (which must be
+/// valid for that many writes; may be uninitialized).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn widen_sanitize_f32_avx2(src: &[f32], out: *mut f64) {
+    use core::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    let zero = _mm256_setzero_pd();
+    let inf = _mm256_set1_pd(f64::INFINITY);
+    while i + 4 <= n {
+        let v = _mm256_cvtps_pd(_mm_loadu_ps(src.as_ptr().add(i)));
+        // valid ⟺ 0 < v < +∞ (NaN fails both ordered compares).
+        let gt0 = _mm256_cmp_pd::<_CMP_GT_OQ>(v, zero);
+        let fin = _mm256_cmp_pd::<_CMP_LT_OQ>(v, inf);
+        let keep = _mm256_and_pd(gt0, fin);
+        _mm256_storeu_pd(out.add(i), _mm256_and_pd(keep, v));
+        i += 4;
+    }
+    while i < n {
+        let p = *src.get_unchecked(i) as f64;
+        out.add(i)
+            .write(if p.is_finite() && p > 0.0 { p } else { 0.0 });
+        i += 1;
+    }
+}
+
+/// In place, `x[i] ← round_half_away(x[i] · scale)` for the non-negative
+/// quantizer domain — bit-identical to `(x[i] * scale).round()` there
+/// (see the module docs for the floor-based emulation argument; pinned
+/// by `round_emulation_matches_f64_round` below). This is the vectorized
+/// core of `QuantizedCdf` construction.
+pub fn scaled_round_half_away(xs: &mut [f64], scale: f64) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx2 {
+        // SAFETY: AVX2 availability checked by dispatch.
+        unsafe { scaled_round_half_away_avx2(xs, scale) };
+        return;
+    }
+    scaled_round_half_away_scalar(xs, scale);
+}
+
+/// The one formula every variant uses, so scalar and SIMD machines agree
+/// even on inputs outside the sanitized domain.
+#[inline(always)]
+fn round_half_away_nonneg(v: f64) -> f64 {
+    let f = v.floor();
+    // `v - f` is exact for v ≥ 0; a NaN fraction (v = ±∞/NaN) fails the
+    // comparison, matching `f64::round`'s identity on those inputs.
+    f + f64::from(u8::from(v - f >= 0.5))
+}
+
+fn scaled_round_half_away_scalar(xs: &mut [f64], scale: f64) {
+    for x in xs {
+        *x = round_half_away_nonneg(*x * scale);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scaled_round_half_away_avx2(xs: &mut [f64], scale: f64) {
+    use core::arch::x86_64::*;
+    let n = xs.len();
+    let s = _mm256_set1_pd(scale);
+    let half = _mm256_set1_pd(0.5);
+    let one = _mm256_set1_pd(1.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_mul_pd(_mm256_loadu_pd(xs.as_ptr().add(i)), s);
+        let f = _mm256_floor_pd(v);
+        let frac = _mm256_sub_pd(v, f);
+        let up = _mm256_and_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(frac, half), one);
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_add_pd(f, up));
+        i += 4;
+    }
+    scaled_round_half_away_scalar(&mut xs[i..], scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::{Mutex, MutexGuard};
+
+    /// Tests that flip the process-global override serialize on this lock
+    /// so the harness's test threads cannot observe each other's forcing.
+    fn forced(k: Kernel) -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        let guard = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        force(Some(k));
+        guard
+    }
+
+    #[test]
+    fn dispatch_reports_a_real_variant() {
+        let avail = available();
+        assert!(avail.contains(&Kernel::Scalar));
+        assert!(avail.contains(&active()), "active kernel must be available");
+        assert!(!kernel_name().is_empty());
+    }
+
+    #[test]
+    fn force_round_trips_and_rejects_unavailable() {
+        let before = *DETECTED.get_or_init(detect);
+        let guard = forced(Kernel::Scalar);
+        assert_eq!(active(), Kernel::Scalar);
+        force(None);
+        assert_eq!(active(), before);
+        #[cfg(target_arch = "x86_64")]
+        {
+            let r = std::panic::catch_unwind(|| force(Some(Kernel::Neon)));
+            assert!(r.is_err(), "forcing NEON on x86_64 must panic");
+            force(None);
+        }
+        drop(guard);
+    }
+
+    #[test]
+    fn round_emulation_matches_f64_round() {
+        // The floor-based emulation must equal f64::round on the whole
+        // non-negative domain, including exact .5 ties (away from zero)
+        // and the largest double below 0.5 (where `v + 0.5` would round
+        // to 1.0 and a naive trunc(v + 0.5) would be wrong).
+        let mut rng = Rng::new(0x51D);
+        for _ in 0..200_000 {
+            let e = rng.below(56) as i32 - 3;
+            let v = rng.f64() * (2.0f64).powi(e);
+            assert_eq!(
+                round_half_away_nonneg(v).to_bits(),
+                v.round().to_bits(),
+                "v={v:e}"
+            );
+        }
+        for t in 0..1000u32 {
+            let v = t as f64 + 0.5;
+            assert_eq!(round_half_away_nonneg(v), v.round());
+        }
+        let edge = 0.49999999999999994f64; // largest f64 < 0.5
+        assert_eq!(round_half_away_nonneg(edge), 0.0);
+        assert_eq!(round_half_away_nonneg(0.0), 0.0);
+        assert!(round_half_away_nonneg(f64::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn widen_sanitize_matches_scalar_on_every_variant() {
+        let mut rng = Rng::new(0xA11);
+        for len in [0usize, 1, 3, 4, 5, 17, 256, 1023] {
+            let src: Vec<f32> = (0..len)
+                .map(|i| match i % 7 {
+                    0 => 0.0,
+                    1 => -1.5,
+                    2 => f32::NAN,
+                    3 => f32::INFINITY,
+                    4 => f32::NEG_INFINITY,
+                    5 => f32::MIN_POSITIVE / 2.0, // subnormal
+                    _ => (rng.f64() * 10.0) as f32,
+                })
+                .collect();
+            let mut want = vec![0.0f64; len];
+            widen_sanitize_f32_scalar(&src, &mut want);
+            for &k in &available() {
+                let guard = forced(k);
+                let mut got = Vec::new();
+                widen_sanitize_f32(&src, &mut got);
+                force(None);
+                drop(guard);
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{k:?} len={len} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_round_matches_scalar_on_every_variant() {
+        let mut rng = Rng::new(0xB22);
+        for len in [0usize, 1, 4, 7, 255, 256] {
+            let base: Vec<f64> = (0..len)
+                .map(|i| {
+                    if i % 11 == 0 {
+                        i as f64 / 2.0 // exact .5 ties after scale = 1.0
+                    } else {
+                        rng.f64() * 1e6
+                    }
+                })
+                .collect();
+            for scale in [1.0f64, 0.37, 65519.0, 1e-12] {
+                let mut want = base.clone();
+                scaled_round_half_away_scalar(&mut want, scale);
+                for (w, &b) in want.iter().zip(base.iter()) {
+                    assert_eq!(w.to_bits(), (b * scale).round().to_bits());
+                }
+                for &k in &available() {
+                    let guard = forced(k);
+                    let mut got = base.clone();
+                    scaled_round_half_away(&mut got, scale);
+                    force(None);
+                    drop(guard);
+                    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                        assert_eq!(g.to_bits(), w.to_bits(), "{k:?} len={len} i={i}");
+                    }
+                }
+            }
+        }
+    }
+}

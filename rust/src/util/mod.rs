@@ -9,3 +9,46 @@ pub mod math;
 pub mod prop;
 pub mod rng;
 pub mod timer;
+
+/// Deterministic near-even partition of `n` items into at most `k`
+/// non-empty contiguous ranges (the first `n % k` ranges get one extra
+/// item). The split depends only on `(n, k)` — never on thread
+/// scheduling — which is what makes chunked containers reproducible and
+/// row-sharded NN dispatches bitwise-stitchable. ONE implementation on
+/// purpose: the bbans chunked-coding paths and the model-layer batch
+/// sharding must agree on the same split semantics.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    let k = k.clamp(1, n.max(1));
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_tile_exactly_and_clamp() {
+        for (n, k) in [(0usize, 3usize), (1, 1), (5, 2), (7, 7), (7, 50), (100, 3)] {
+            let r = chunk_ranges(n, k);
+            assert!(!r.is_empty());
+            assert!(r.len() <= k.max(1));
+            assert_eq!(r.first().unwrap().start, 0);
+            assert_eq!(r.last().unwrap().end, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must tile");
+            }
+            if n > 0 {
+                assert!(r.iter().all(|x| !x.is_empty()), "n={n} k={k}: empty range");
+            }
+        }
+    }
+}

@@ -132,6 +132,150 @@ fn batched_inference_bit_identical_across_batch_and_workers() {
     }
 }
 
+/// ISSUE 5 golden-stream invariance: the scalar reference GEMM, the
+/// scalar packed kernel, and every SIMD kernel this CPU can dispatch
+/// must produce byte-identical BBC1/BBC2/BBC3 containers — across chunk
+/// counts and worker counts — and each variant must decode the others'
+/// output. This is the container-level pin of the whole SIMD layer's
+/// bit-identity contract.
+#[test]
+fn simd_kernel_variants_bit_identical_across_containers() {
+    use bbans::bbans::container::Container;
+    use bbans::simd;
+
+    // Restore runtime dispatch even if an assertion fails mid-test.
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::force(None);
+        }
+    }
+    let _restore = Restore;
+
+    let cfg = BbAnsConfig::default();
+    for (trial, likelihood) in [Likelihood::Bernoulli, Likelihood::BetaBinomial]
+        .into_iter()
+        .enumerate()
+    {
+        let meta = ModelMeta {
+            name: format!("simd{trial}"),
+            pixels: 30,
+            latent_dim: 5,
+            hidden: 11,
+            likelihood,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta.clone(), 0x51D0 + trial as u64);
+        let reference = NativeVae::random(meta, 0x51D0 + trial as u64).with_reference_gemm(true);
+        let levels = match likelihood {
+            Likelihood::Bernoulli => 2u64,
+            Likelihood::BetaBinomial => 256,
+        };
+        let mut rng = Rng::new(0xE5 + trial as u64);
+        // > NN_CHUNK images so batched recognition spans several blocks.
+        let images: Vec<Vec<u8>> = (0..70)
+            .map(|_| (0..30).map(|_| rng.below(levels) as u8).collect())
+            .collect();
+
+        // Reference bytes: scalar reference GEMM under the forced-scalar
+        // kernel (the most conservative path in the system).
+        simd::force(Some(simd::Kernel::Scalar));
+        let ref_codec = VaeCodec::new(&reference, cfg).unwrap();
+        let bbc1_ref = {
+            let (ans, _) = ref_codec.encode_dataset(&images).unwrap();
+            Container {
+                model: "simd".into(),
+                backend_id: reference.backend_id(),
+                cfg,
+                num_images: images.len() as u32,
+                pixels: 30,
+                message: ans.into_message(),
+            }
+            .to_bytes()
+        };
+        let bbc2_ref = ParallelContainer::encode_with_workers(&ref_codec, &images, 3, 1)
+            .unwrap()
+            .to_bytes();
+
+        for kernel in simd::available() {
+            simd::force(Some(kernel));
+            let codec = VaeCodec::new(&backend, cfg).unwrap();
+            // BBC1: one chained stream.
+            let (ans, _) = codec.encode_dataset(&images).unwrap();
+            let bbc1 = Container {
+                model: "simd".into(),
+                backend_id: backend.backend_id(),
+                cfg,
+                num_images: images.len() as u32,
+                pixels: 30,
+                message: ans.into_message(),
+            }
+            .to_bytes();
+            assert_eq!(bbc1, bbc1_ref, "{kernel:?} {likelihood:?}: BBC1 bytes diverged");
+            // BBC2: chunk counts x worker counts.
+            for (n_chunks, workers) in [(1usize, 1usize), (3, 2), (3, 5)] {
+                let pc =
+                    ParallelContainer::encode_with_workers(&codec, &images, n_chunks, workers)
+                        .unwrap();
+                if n_chunks == 3 {
+                    assert_eq!(
+                        pc.to_bytes(),
+                        bbc2_ref,
+                        "{kernel:?} {likelihood:?}: BBC2 bytes diverged (w={workers})"
+                    );
+                }
+                // Cross-kernel decode of this variant's own output.
+                assert_eq!(pc.decode_with_workers(&codec, 2).unwrap(), images);
+            }
+            // Decode the scalar-reference container under this kernel.
+            let parsed = ParallelContainer::from_bytes(&bbc2_ref).unwrap();
+            assert_eq!(
+                parsed.decode_with_workers(&codec, 3).unwrap(),
+                images,
+                "{kernel:?}: failed to decode the reference stream"
+            );
+        }
+        simd::force(None);
+    }
+
+    // BBC3: the hierarchical chain (no reference-GEMM switch exists, so
+    // the forced-scalar kernel is the reference arm).
+    let hmeta = HierMeta {
+        name: "simd-hier".into(),
+        pixels: 30,
+        dims: vec![5, 4],
+        hidden: 11,
+        likelihood: Likelihood::Bernoulli,
+    };
+    let hbackend = HierVae::random(hmeta, 0xAB0);
+    let mut rng = Rng::new(0x77AB);
+    let images: Vec<Vec<u8>> = (0..70)
+        .map(|_| (0..30).map(|_| (rng.f64() < 0.35) as u8).collect())
+        .collect();
+    for schedule in [Schedule::Naive, Schedule::BitSwap] {
+        let codec = HierCodec::new(&hbackend, BbAnsConfig::default(), schedule).unwrap();
+        simd::force(Some(simd::Kernel::Scalar));
+        let href = HierContainer::encode_with_workers(&codec, &images, 3, 1)
+            .unwrap()
+            .to_bytes();
+        for kernel in simd::available() {
+            simd::force(Some(kernel));
+            for workers in [1usize, 4] {
+                let hc = HierContainer::encode_with_workers(&codec, &images, 3, workers).unwrap();
+                assert_eq!(
+                    hc.to_bytes(),
+                    href,
+                    "{kernel:?} {schedule:?}: BBC3 bytes diverged (w={workers})"
+                );
+            }
+            let parsed = HierContainer::from_bytes(&href).unwrap();
+            assert_eq!(parsed.decode_with_workers(&codec, 3).unwrap(), images);
+            assert_eq!(parsed.decode_lockstep(&codec).unwrap(), images);
+        }
+        simd::force(None);
+    }
+}
+
 /// Hierarchical extension of the invariance suite (ISSUE 4): for BOTH
 /// coding schedules and L ∈ {2, 3}, the encode bitstream is identical
 /// across worker counts and batch groupings, chunked container bytes are

@@ -5,7 +5,6 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use bbans::bbans::BbAnsConfig;
 use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::rng::Rng;
@@ -14,7 +13,7 @@ fn toy_service() -> ModelService {
     let params = ServiceParams {
         max_jobs: 8,
         batch_window: Duration::from_millis(10),
-        bbans: BbAnsConfig::default(),
+        ..Default::default()
     };
     ModelService::spawn_with(params, || {
         let meta = ModelMeta {
