@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     let params = ServiceParams {
         max_jobs: 16,
-        batch_window: Duration::from_millis(3),
+        max_batch_delay: Duration::from_millis(3),
         ..Default::default()
     };
     let svc = ModelService::spawn(dir.clone(), use_pjrt, params);

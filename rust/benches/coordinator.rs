@@ -14,7 +14,7 @@ fn toy_service(window_ms: u64) -> ModelService {
     ModelService::spawn_with(
         ServiceParams {
             max_jobs: 32,
-            batch_window: Duration::from_millis(window_ms),
+            max_batch_delay: Duration::from_millis(window_ms),
             ..Default::default()
         },
         || {

@@ -33,7 +33,9 @@ const MAX_IMAGES: u64 = 1 << 24;
 const MAX_TOTAL_PIXELS: u64 = 1 << 32;
 
 /// Shared header sanity check: total image count and total decoded bytes.
-fn check_decode_budget(num_images: u64, pixels: u64) -> Result<()> {
+/// `pub(crate)` so the wire protocol can hold untrusted request grids to
+/// the same budget as untrusted container headers.
+pub(crate) fn check_decode_budget(num_images: u64, pixels: u64) -> Result<()> {
     if num_images > MAX_IMAGES {
         bail!("implausible image count {num_images} (limit {MAX_IMAGES})");
     }

@@ -34,7 +34,7 @@ use crate::codecs::gaussian::{DiscretizedGaussian, MaxEntropyBuckets};
 use crate::codecs::uniform::Uniform;
 use crate::codecs::SymbolCodec;
 use crate::model::tensor::Matrix;
-use crate::model::{Backend, Likelihood, PixelParams, PosteriorBatch};
+use crate::model::{Backend, Likelihood, ModelMeta, PixelParams, PosteriorBatch};
 
 /// Images per recognition-net dispatch in the dataset loops: one
 /// [`Backend::encode_batch`] call covers this many rows. Both the
@@ -276,25 +276,34 @@ pub struct ImageStats {
     pub prior_bits: f64,
 }
 
-/// The BB-ANS codec over a VAE [`Backend`].
-pub struct VaeCodec<'a, B: Backend + ?Sized> {
-    backend: &'a B,
+/// The backend-free stepwise core of the BB-ANS codec: the latent bucket
+/// geometry, the coding hyper-parameters, and every per-stream ANS
+/// primitive. None of these touch the network — they need only the
+/// model's *shape* ([`ModelMeta`]) — so the core is plain `Send + Sync`
+/// data even when the backend it was derived from is thread-bound (PJRT
+/// handles are neither `Send` nor `Sync`). The coordinator's executors
+/// rely on exactly that split: per-stream phase closures capture a
+/// `&CodecCore` and may fan out across pool threads, while the batched
+/// NN dispatches stay wherever the backend lives.
+pub struct CodecCore {
+    meta: ModelMeta,
     pub cfg: BbAnsConfig,
     buckets: MaxEntropyBuckets,
 }
 
-impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
-    pub fn new(backend: &'a B, cfg: BbAnsConfig) -> Result<Self> {
+impl CodecCore {
+    pub fn new(meta: ModelMeta, cfg: BbAnsConfig) -> Result<Self> {
         cfg.validate()?;
         Ok(Self {
-            backend,
+            meta,
             cfg,
             buckets: MaxEntropyBuckets::new(cfg.latent_bits),
         })
     }
 
-    pub fn backend(&self) -> &B {
-        self.backend
+    /// Shape of the model this core codes for.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
     }
 
     pub fn scale_image(&self, img: &[u8]) -> Vec<f32> {
@@ -306,7 +315,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// [`Self::scale_image`] appending to a caller-owned buffer — the
     /// batch builders pack many images into one flat matrix this way.
     pub fn scale_image_into(&self, img: &[u8], out: &mut Vec<f32>) {
-        scale_pixels_into(self.backend.meta().likelihood, img, out)
+        scale_pixels_into(self.meta.likelihood, img, out)
     }
 
     /// Latent bucket centres → the f32 latent vector fed to the decoder.
@@ -337,7 +346,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// Step 1 of encode: pop the latent bucket indices from q(y|s).
     pub fn pop_posterior(&self, ans: &mut Ans, mu: &[f32], sigma: &[f32]) -> Vec<u32> {
-        let mut idx = Vec::with_capacity(self.backend.meta().latent_dim);
+        let mut idx = Vec::with_capacity(self.meta.latent_dim);
         self.pop_posterior_into(ans, mu, sigma, &mut idx, &mut None);
         idx
     }
@@ -354,7 +363,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         slot: &mut Option<DiscretizedGaussian>,
     ) {
         idx.clear();
-        for d in 0..self.backend.meta().latent_dim {
+        for d in 0..self.meta.latent_dim {
             let g = self.posterior_codec_scratch(mu[d], sigma[d], slot);
             idx.push(g.pop(ans));
         }
@@ -423,7 +432,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
 
     /// [`Self::pop_prior`] into a reusable buffer.
     pub fn pop_prior_into(&self, ans: &mut Ans, idx: &mut Vec<u32>) {
-        let l = self.backend.meta().latent_dim;
+        let l = self.meta.latent_dim;
         let prior = Uniform::new(self.cfg.latent_bits);
         idx.clear();
         idx.resize(l, 0);
@@ -456,7 +465,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         params: &PixelParams,
         scratch: &mut CodecScratch,
     ) -> Vec<u8> {
-        let pixels = self.backend.meta().pixels;
+        let pixels = self.meta.pixels;
         let CodecScratch { pmf, direct, .. } = scratch;
         prepare_pixel_codecs(params, self.cfg.pixel_prec, direct);
         let mut p = 0usize;
@@ -481,7 +490,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         idx: &[u32],
         slot: &mut Option<DiscretizedGaussian>,
     ) {
-        for d in (0..self.backend.meta().latent_dim).rev() {
+        for d in (0..self.meta.latent_dim).rev() {
             self.posterior_codec_scratch(mu[d], sigma[d], slot)
                 .push(ans, idx[d]);
         }
@@ -496,6 +505,41 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
     /// coordinator packs many streams' latents into one matrix).
     pub fn latent_centres_into(&self, idx: &[u32], out: &mut Vec<f32>) {
         self.centres_into(idx, out)
+    }
+}
+
+/// The BB-ANS codec over a VAE [`Backend`]: a [`CodecCore`] plus the
+/// backend that runs the recognition/generative nets. Derefs to the
+/// core, so every stepwise primitive is callable directly on the codec.
+pub struct VaeCodec<'a, B: Backend + ?Sized> {
+    backend: &'a B,
+    core: CodecCore,
+}
+
+impl<B: Backend + ?Sized> std::ops::Deref for VaeCodec<'_, B> {
+    type Target = CodecCore;
+
+    fn deref(&self) -> &CodecCore {
+        &self.core
+    }
+}
+
+impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
+    pub fn new(backend: &'a B, cfg: BbAnsConfig) -> Result<Self> {
+        Ok(Self {
+            backend,
+            core: CodecCore::new(backend.meta().clone(), cfg)?,
+        })
+    }
+
+    pub fn backend(&self) -> &B {
+        self.backend
+    }
+
+    /// Borrow the backend-free stepwise core (what the coordinator's
+    /// executors thread through their phase closures).
+    pub fn core(&self) -> &CodecCore {
+        &self.core
     }
 
     /// Encode one image onto the stack (paper Table 1), given its already-

@@ -3,12 +3,23 @@
 //! batch across concurrent streams even though each BB-ANS stream is
 //! sequential).
 //!
-//! The PJRT handles are not `Send`, so ONE worker thread owns the engine
-//! and all backends; callers talk to it through an MPSC queue. The worker
-//! drains up to `max_jobs` requests inside a `batch_window`, then:
+//! ## Admission
+//!
+//! Callers submit through a **bounded** queue
+//! ([`ServiceParams::queue_cap`]) with `try_send` semantics: a full queue
+//! rejects immediately ("service overloaded") instead of buffering
+//! without limit, so backpressure surfaces at the client where it can be
+//! acted on. The worker drains up to [`ServiceParams::max_jobs`] jobs per
+//! round and flushes when the OLDEST admitted job has waited
+//! [`ServiceParams::max_batch_delay`] — a deadline, not a sliding window,
+//! so a trickle of arrivals cannot postpone the flush indefinitely.
+//!
+//! ## One loop, two executors
+//!
+//! Each round runs the lock-step batching loop:
 //!
 //! * **encode**: all posterior parameters for all images of all jobs in
-//!   the batch are computed in one chunked NN dispatch up front; then the
+//!   the batch are computed in one NN dispatch up front; then the
 //!   per-stream ANS coding interleaves with *cross-stream* batched
 //!   likelihood calls, image-step by image-step.
 //! * **decode**: streams advance in lock-step — pop priors (per stream),
@@ -16,26 +27,23 @@
 //!   encoder call to return the bits — so S concurrent decodes cost
 //!   ⌈S/B⌉ NN dispatches per image instead of S.
 //!
-//! ## The `Sync`-backend fan-out (ISSUE 5)
+//! The loop is written ONCE, generic over
+//! [`super::executor::PhaseExecutor`]. Thread-bound (PJRT) backends run
+//! it on a [`super::executor::SerialExecutor`] — everything inline on
+//! the worker thread. `Send + Sync` backends (the pure-Rust `NativeVae`,
+//! via [`ModelService::spawn_with_sync`]) run it on a
+//! [`super::executor::PooledExecutor`]: NN dispatches row-sharded and
+//! per-stream ANS phases slabbed over a **persistent** pool of
+//! [`ServiceParams::fanout_workers`] threads, with a barrier between
+//! phases. Containers are byte-identical across executors and worker
+//! counts (the executor module states the contract; pinned by
+//! `sync_service_bytes_match_serial_service`). Chunk-parallel (`BBC2`)
+//! and hierarchical (`BBC3`) containers decode over the same pool.
 //!
-//! The single-threaded worker is a *PJRT* constraint, not an
-//! architectural one. When every backend is `Send + Sync` (the pure-Rust
-//! `NativeVae`), [`ModelService::spawn_with_sync`] runs the same batching
-//! loop with each lock-step phase **fanned out over a scoped worker
-//! pool** ([`ServiceParams::fanout_workers`]):
-//!
-//! * NN dispatches split their rows over the pool
-//!   ([`crate::model::encode_batch_sharded`] /
-//!   [`crate::model::decode_batch_sharded`]) — bitwise safe by the
-//!   batched-call row-independence contract;
-//! * the per-stream ANS phases (pop posteriors, push pixels+priors, pop
-//!   priors, push posteriors) run streams in parallel — each stream's
-//!   coder state is independent, and results are stitched back in stream
-//!   order, so the containers are byte-identical to the serial worker's
-//!   (pinned by `sync_service_bytes_match_serial_service`);
-//! * chunk-parallel (`BBC2`) and hierarchical (`BBC3`) containers decode
-//!   over the pool (speculative first-image scheduling included) instead
-//!   of sequentially inside the worker thread.
+//! Hierarchical **encode** is reachable here too: a `CompressHier` job
+//! carries a [`HierSpec`] (seed + shape instead of a hosted-model name),
+//! is validated by the exact admission the BBC3 decode path uses, and
+//! shares its rebuilt-backend memo cache.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -46,13 +54,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::executor::{PhaseExecutor, PhasePool, PooledExecutor, SerialExecutor};
 use super::metrics::Metrics;
+use super::protocol::HierSpec;
 use crate::ans::Ans;
 use crate::bbans::container::{
     Container, HierContainer, ParallelContainer, MAGIC_HIER, MAGIC_PARALLEL,
 };
 use crate::bbans::hierarchy::HierCodec;
-use crate::bbans::{BbAnsConfig, CodecScratch, VaeCodec};
+use crate::bbans::{BbAnsConfig, CodecCore, CodecScratch, VaeCodec};
 use crate::model::hierarchy::HierVae;
 use crate::model::tensor::Matrix;
 use crate::model::{
@@ -65,13 +75,20 @@ use crate::runtime::{load_config, Engine};
 pub struct ServiceParams {
     /// Max jobs drained into one scheduling round.
     pub max_jobs: usize,
-    /// How long to linger after the first job arrives, collecting more.
-    pub batch_window: Duration,
+    /// Deadline for flushing a round, measured from the moment the
+    /// OLDEST job in it was admitted (not from when the worker noticed
+    /// it): a job never lingers longer than this plus the round running
+    /// in front of it.
+    pub max_batch_delay: Duration,
+    /// Bound on jobs admitted but not yet drained into a round;
+    /// submissions past it are rejected with "service overloaded"
+    /// (backpressure, not unbounded buffering).
+    pub queue_cap: usize,
     /// Default coding config for compression (decode uses the container's).
     pub bbans: BbAnsConfig,
-    /// Worker threads the `Sync`-backend service variant fans lock-step
-    /// phases out over (`0` = available parallelism). Ignored by the
-    /// single-threaded (PJRT-constrained) worker.
+    /// Worker threads the `Sync`-backend service variant keeps in its
+    /// persistent phase pool (`0` = available parallelism). Ignored by
+    /// the single-threaded (PJRT-constrained) worker.
     pub fanout_workers: usize,
 }
 
@@ -79,35 +96,50 @@ impl Default for ServiceParams {
     fn default() -> Self {
         Self {
             max_jobs: 16,
-            batch_window: Duration::from_millis(2),
+            max_batch_delay: Duration::from_millis(2),
+            queue_cap: 256,
             bbans: BbAnsConfig::default(),
             fanout_workers: 0,
         }
     }
 }
 
-/// A backend shareable across the fan-out pool.
+/// A backend shareable across the phase pool.
 pub type SharedBackend = Arc<dyn Backend + Send + Sync>;
 
-/// What the model worker owns: thread-local backends behind the classic
-/// single-threaded loop, or shared `Sync` backends plus a fan-out width.
+/// What the model worker owns: thread-local backends driven serially, or
+/// shared `Sync` backends plus the persistent pool that fans the
+/// lock-step phases out.
 enum BackendSet {
     Local(HashMap<String, Box<dyn Backend>>),
     Shared {
         map: HashMap<String, SharedBackend>,
-        workers: usize,
+        pool: PhasePool,
     },
 }
+
+type CompressReply = mpsc::Sender<Result<Vec<u8>, String>>;
+type DecompressReply = mpsc::Sender<Result<Vec<Vec<u8>>, String>>;
+type CompressJob = (Vec<Vec<u8>>, CompressReply);
+type DecompressJob = (Vec<u8>, DecompressReply);
+type HierJob = (HierSpec, Vec<Vec<u8>>, CompressReply);
 
 enum Job {
     Compress {
         model: String,
         images: Vec<Vec<u8>>,
-        reply: mpsc::Sender<Result<Vec<u8>, String>>,
+        reply: CompressReply,
+    },
+    /// Hierarchical (Bit-Swap / BBC3) compression: the model is given by
+    /// seed + shape in the spec rather than a hosted-model name.
+    CompressHier {
+        spec: HierSpec,
+        images: Vec<Vec<u8>>,
+        reply: CompressReply,
     },
     Decompress {
         container: Vec<u8>,
-        reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+        reply: DecompressReply,
     },
     Stats {
         reply: mpsc::Sender<String>,
@@ -115,10 +147,17 @@ enum Job {
     Shutdown,
 }
 
+/// A job plus its admission timestamp — drives the flush deadline and
+/// the queue-wait histogram.
+struct Queued {
+    job: Job,
+    at: Instant,
+}
+
 /// Handle to the model-worker thread. Clonable; all clones feed the same
-/// batcher queue.
+/// bounded batcher queue.
 pub struct ModelService {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::SyncSender<Queued>,
     pub metrics: Arc<Metrics>,
     handle: Option<JoinHandle<()>>,
 }
@@ -126,7 +165,7 @@ pub struct ModelService {
 /// Cheap clonable submitter (no join handle).
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: mpsc::Sender<Job>,
+    tx: mpsc::SyncSender<Queued>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -152,8 +191,8 @@ impl ModelService {
     }
 
     /// Spawn the `Sync`-backend service variant: the same batching worker
-    /// loop, with every lock-step phase fanned out over
-    /// [`ServiceParams::fanout_workers`] scoped threads (module docs).
+    /// loop, with every lock-step phase fanned out over a persistent pool
+    /// of [`ServiceParams::fanout_workers`] threads (module docs).
     /// Containers are byte-identical to the single-threaded worker's.
     pub fn spawn_with_sync<F>(params: ServiceParams, factory: F) -> ModelService
     where
@@ -165,7 +204,10 @@ impl ModelService {
             params.fanout_workers
         };
         Self::spawn_set(params, move || {
-            factory().map(|map| BackendSet::Shared { map, workers })
+            factory().map(|map| BackendSet::Shared {
+                map,
+                pool: PhasePool::new(workers),
+            })
         })
     }
 
@@ -173,7 +215,7 @@ impl ModelService {
     where
         F: FnOnce() -> Result<BackendSet> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let (tx, rx) = mpsc::sync_channel::<Queued>(params.queue_cap.max(1));
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         let handle = std::thread::Builder::new()
@@ -195,7 +237,12 @@ impl ModelService {
     }
 
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Job::Shutdown);
+        // Blocking send on purpose: shutdown must not be droppable by a
+        // momentarily full queue (it is NOT counted in queue metrics).
+        let _ = self.tx.send(Queued {
+            job: Job::Shutdown,
+            at: Instant::now(),
+        });
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -204,7 +251,10 @@ impl ModelService {
 
 impl Drop for ModelService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
+        let _ = self.tx.send(Queued {
+            job: Job::Shutdown,
+            at: Instant::now(),
+        });
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -212,16 +262,53 @@ impl Drop for ModelService {
 }
 
 impl ServiceHandle {
+    /// Admit one job to the bounded queue without blocking. A full queue
+    /// is the backpressure signal: the caller gets an immediate error
+    /// instead of feeding a silently growing backlog.
+    fn submit(&self, job: Job) -> Result<()> {
+        match self.tx.try_send(Queued {
+            job,
+            at: Instant::now(),
+        }) {
+            Ok(()) => {
+                Metrics::inc(&self.metrics.queue_depth, 1);
+                Ok(())
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                Metrics::inc(&self.metrics.rejected, 1);
+                bail!("service overloaded: admission queue full")
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => bail!("service stopped"),
+        }
+    }
+
     pub fn compress(&self, model: &str, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Job::Compress {
-                model: model.to_string(),
-                images,
-                reply,
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
+        self.submit(Job::Compress {
+            model: model.to_string(),
+            images,
+            reply,
+        })?;
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped request"))?
+            .map_err(|e| anyhow!("{e}"));
+        self.metrics.request_latency.observe(t.elapsed());
+        out
+    }
+
+    /// Hierarchical (Bit-Swap / BBC3) compression. The model is specified
+    /// by seed + shape in `spec`; admission mirrors the BBC3 decode path
+    /// (seed, parameter budget, backend-id agreement).
+    pub fn compress_hier(&self, spec: HierSpec, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        let t = Instant::now();
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::CompressHier {
+            spec,
+            images,
+            reply,
+        })?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -233,9 +320,7 @@ impl ServiceHandle {
     pub fn decompress(&self, container: Vec<u8>) -> Result<Vec<Vec<u8>>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Job::Decompress { container, reply })
-            .map_err(|_| anyhow!("service stopped"))?;
+        self.submit(Job::Decompress { container, reply })?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -246,9 +331,7 @@ impl ServiceHandle {
 
     pub fn stats_json(&self) -> Result<String> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Job::Stats { reply })
-            .map_err(|_| anyhow!("service stopped"))?;
+        self.submit(Job::Stats { reply })?;
         rx.recv().map_err(|_| anyhow!("service dropped request"))
     }
 }
@@ -322,7 +405,7 @@ fn native_backends(artifact_dir: &Path) -> Result<HashMap<String, SharedBackend>
 // ------------------------------------------------------------ the worker
 
 fn worker_loop<F>(
-    rx: mpsc::Receiver<Job>,
+    rx: mpsc::Receiver<Queued>,
     metrics: Arc<Metrics>,
     params: ServiceParams,
     factory: F,
@@ -335,15 +418,18 @@ fn worker_loop<F>(
             // Fail every request with the construction error.
             let msg = format!("backend init failed: {e:#}");
             eprintln!("[coordinator] {msg}");
-            while let Ok(job) = rx.recv() {
+            while let Ok(Queued { job, .. }) = rx.recv() {
                 match job {
-                    Job::Compress { reply, .. } => {
+                    Job::Compress { reply, .. } | Job::CompressHier { reply, .. } => {
+                        Metrics::dec(&metrics.queue_depth, 1);
                         let _ = reply.send(Err(msg.clone()));
                     }
                     Job::Decompress { reply, .. } => {
+                        Metrics::dec(&metrics.queue_depth, 1);
                         let _ = reply.send(Err(msg.clone()));
                     }
                     Job::Stats { reply } => {
+                        Metrics::dec(&metrics.queue_depth, 1);
                         let _ = reply.send(metrics.snapshot_json().to_string());
                     }
                     Job::Shutdown => return,
@@ -353,75 +439,85 @@ fn worker_loop<F>(
         }
     };
 
-    // Hierarchical backends rebuilt from BBC3 headers, memoized across
-    // requests: the common case is many decodes of one published
-    // container, and a rebuild re-derives every weight from the seed.
+    // Hierarchical backends rebuilt from BBC3 headers (or CompressHier
+    // specs), memoized across requests: the common case is many requests
+    // against one published model, and a rebuild re-derives every weight
+    // from the seed.
     let mut hier_cache: HashMap<String, HierVae> = HashMap::new();
 
     loop {
         // Block for the first job.
         let first = match rx.recv() {
-            Ok(j) => j,
+            Ok(q) => q,
             Err(_) => return,
         };
+        // The flush deadline is anchored to the OLDEST job's ADMISSION
+        // time: queue time spent waiting behind the previous round counts
+        // against the linger budget, so under load rounds flush
+        // immediately instead of lingering per round.
+        let deadline = first.at + params.max_batch_delay;
         let mut jobs = vec![first];
-        // Linger to fill the batch.
-        let deadline = Instant::now() + params.batch_window;
         while jobs.len() < params.max_jobs {
             let now = Instant::now();
             if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                // Past the deadline: take whatever is already queued,
+                // never wait for more.
+                match rx.try_recv() {
+                    Ok(q) => jobs.push(q),
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(q) => jobs.push(q),
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
             }
         }
 
+        Metrics::inc(&metrics.rounds, 1);
         let t_batch = Instant::now();
-        type CompressJob = (Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>);
         let mut compress: HashMap<String, Vec<CompressJob>> = HashMap::new();
-        let mut decompress: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)> = Vec::new();
+        let mut hier: Vec<HierJob> = Vec::new();
+        let mut decompress: Vec<DecompressJob> = Vec::new();
         let mut saw_shutdown = false;
-        for job in jobs {
+        for Queued { job, at } in jobs {
+            if matches!(job, Job::Shutdown) {
+                saw_shutdown = true;
+                continue;
+            }
+            Metrics::dec(&metrics.queue_depth, 1);
+            metrics.queue_wait.observe(at.elapsed());
             match job {
                 Job::Compress {
                     model,
                     images,
                     reply,
                 } => compress.entry(model).or_default().push((images, reply)),
+                Job::CompressHier {
+                    spec,
+                    images,
+                    reply,
+                } => hier.push((spec, images, reply)),
                 Job::Decompress { container, reply } => decompress.push((container, reply)),
                 Job::Stats { reply } => {
                     let _ = reply.send(metrics.snapshot_json().to_string());
                 }
-                Job::Shutdown => saw_shutdown = true,
+                Job::Shutdown => unreachable!("filtered above"),
             }
         }
 
         for (model, group) in compress {
             Metrics::inc(&metrics.requests, group.len() as u64);
-            match &backends {
-                BackendSet::Local(map) => match map.get(&model) {
-                    Some(b) => batched_encode(b.as_ref(), &params, &metrics, group),
-                    None => reject_unknown_model(&metrics, &model, group),
-                },
-                BackendSet::Shared { map, workers } => match map.get(&model) {
-                    Some(b) => batched_encode_fanout(&**b, *workers, &params, &metrics, group),
-                    None => reject_unknown_model(&metrics, &model, group),
-                },
-            }
+            encode_group(&backends, &params, &metrics, &model, group);
+        }
+        if !hier.is_empty() {
+            Metrics::inc(&metrics.requests, hier.len() as u64);
+            compress_hier_jobs(&backends, &params, &metrics, hier, &mut hier_cache);
         }
         if !decompress.is_empty() {
             Metrics::inc(&metrics.requests, decompress.len() as u64);
-            match &backends {
-                BackendSet::Local(map) => {
-                    batched_decode(map, &metrics, decompress, &mut hier_cache)
-                }
-                BackendSet::Shared { map, workers } => {
-                    batched_decode_fanout(map, *workers, &metrics, decompress, &mut hier_cache)
-                }
-            }
+            decode_jobs(&backends, &metrics, decompress, &mut hier_cache);
         }
         metrics.batch_latency.observe(t_batch.elapsed());
 
@@ -431,33 +527,59 @@ fn worker_loop<F>(
     }
 }
 
-fn reject_unknown_model(
-    metrics: &Metrics,
-    model: &str,
-    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
-) {
+fn reject_unknown_model(metrics: &Metrics, model: &str, group: Vec<CompressJob>) {
     for (_, reply) in group {
         Metrics::inc(&metrics.errors, 1);
         let _ = reply.send(Err(format!("unknown model '{model}'")));
     }
 }
 
-/// Cross-stream batched encode for one model.
-///
-/// KEEP IN SYNC with [`batched_encode_fanout`]: the two are the same
-/// three-phase loop, but Rust cannot express "parallel only when
-/// `B: Sync`" over one body — `dyn Backend` (PJRT) can never satisfy the
-/// `Sync` bound the fanned phases need, even at `workers == 1` — so the
-/// serial loop exists as a twin. Error handling, metrics accounting and
-/// admission must match; the byte-identity test pins the happy path
-/// (see ROADMAP for the unification idea).
-fn batched_encode(
-    backend: &dyn Backend,
+/// Route one model's compress group to the right executor over the
+/// unified [`batched_encode`] loop.
+fn encode_group(
+    backends: &BackendSet,
     params: &ServiceParams,
     metrics: &Metrics,
-    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
+    model: &str,
+    group: Vec<CompressJob>,
 ) {
-    let codec = match VaeCodec::new(backend, params.bbans) {
+    match backends {
+        BackendSet::Local(map) => match map.get(model) {
+            Some(b) => {
+                let id = b.backend_id();
+                let exec = SerialExecutor {
+                    backend: b.as_ref(),
+                };
+                batched_encode(&exec, b.meta(), &id, params, metrics, group);
+            }
+            None => reject_unknown_model(metrics, model, group),
+        },
+        BackendSet::Shared { map, pool } => match map.get(model) {
+            Some(b) => {
+                let backend: &(dyn Backend + Send + Sync) = &**b;
+                let id = backend.backend_id();
+                let exec = PooledExecutor { backend, pool };
+                batched_encode(&exec, backend.meta(), &id, params, metrics, group);
+            }
+            None => reject_unknown_model(metrics, model, group),
+        },
+    }
+}
+
+/// Cross-stream batched encode for one model — ONE loop for both service
+/// variants, parameterized by the executor. Byte-identity across
+/// executors and worker counts holds because each stream's coder work is
+/// per-stream state only, the NN dispatches are row-independent, and
+/// every cross-stream buffer is packed serially in stream order.
+fn batched_encode<E: PhaseExecutor>(
+    exec: &E,
+    meta: &ModelMeta,
+    backend_id: &str,
+    params: &ServiceParams,
+    metrics: &Metrics,
+    group: Vec<CompressJob>,
+) {
+    let core = match CodecCore::new(meta.clone(), params.bbans) {
         Ok(c) => c,
         Err(e) => {
             for (_, reply) in group {
@@ -466,7 +588,7 @@ fn batched_encode(
             return;
         }
     };
-    let meta = backend.meta();
+    let core = &core;
 
     struct Stream {
         images: Vec<Vec<u8>>,
@@ -474,11 +596,16 @@ fn batched_encode(
         base: usize,
         ans: Ans,
         next: usize,
-        reply: mpsc::Sender<Result<Vec<u8>, String>>,
+        reply: CompressReply,
         failed: Option<String>,
         /// Per-stream coder buffers; `scratch.idx` carries the popped
         /// bucket indices across the batched generative-net dispatch.
         scratch: CodecScratch,
+        /// This round's latent centres (packed serially after the phase).
+        ys: Vec<f32>,
+        /// This round's likelihood params (distributed serially before
+        /// the push phase).
+        pending: Option<PixelParams>,
     }
     let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
 
@@ -496,191 +623,7 @@ fn batched_encode(
             let base = rows;
             if failed.is_none() {
                 for img in &images {
-                    codec.scale_image_into(img, &mut data);
-                }
-                rows += images.len();
-            }
-            streams.push(Stream {
-                images,
-                base,
-                ans: Ans::new(params.bbans.clean_seed),
-                next: 0,
-                reply,
-                failed,
-                scratch: CodecScratch::new(),
-            });
-        }
-        if rows > 0 {
-            Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, rows as u64);
-            match backend.encode_batch(&Matrix::new(rows, meta.pixels, data)) {
-                Ok(p) => posts = Some(p),
-                Err(e) => {
-                    for s in &mut streams {
-                        s.failed = Some(format!("posterior failed: {e:#}"));
-                    }
-                }
-            }
-        }
-    }
-
-    // Phase 2: lock-step image coding with one cross-stream batched
-    // generative-net dispatch per image step.
-    let mut ys_data: Vec<f32> = Vec::new();
-    loop {
-        let active: Vec<usize> = streams
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.failed.is_none() && s.next < s.images.len())
-            .map(|(i, _)| i)
-            .collect();
-        if active.is_empty() {
-            break;
-        }
-        let pb = posts.as_ref().expect("active streams imply a posterior batch");
-        // (1) pop posteriors per stream; pack latents into one matrix.
-        ys_data.clear();
-        for &si in &active {
-            let s = &mut streams[si];
-            let (mu, sigma) = pb.row(s.base + s.next);
-            let mut idx = std::mem::take(&mut s.scratch.idx);
-            codec.pop_posterior_into(&mut s.ans, mu, sigma, &mut idx, &mut s.scratch.gauss);
-            codec.latent_centres_into(&idx, &mut ys_data);
-            s.scratch.idx = idx;
-        }
-        // (2) one batched generative-net dispatch for all active streams.
-        let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
-        Metrics::inc(&metrics.nn_calls, 1);
-        Metrics::inc(&metrics.nn_items, active.len() as u64);
-        match backend.decode_batch(&ym) {
-            Ok(param_list) => {
-                for (&si, pp) in active.iter().zip(param_list) {
-                    let s = &mut streams[si];
-                    let idx = std::mem::take(&mut s.scratch.idx);
-                    codec.push_pixels_coder_scratch(
-                        &mut s.ans,
-                        &pp,
-                        &s.images[s.next],
-                        &mut s.scratch,
-                    );
-                    codec.push_prior(&mut s.ans, &idx);
-                    s.scratch.idx = idx;
-                    s.next += 1;
-                    Metrics::inc(&metrics.images_encoded, 1);
-                }
-            }
-            Err(e) => {
-                for &si in &active {
-                    streams[si].failed = Some(format!("likelihood failed: {e:#}"));
-                }
-            }
-        }
-        ys_data = ym.data;
-    }
-
-    // Phase 3: containers out.
-    for s in streams {
-        if let Some(msg) = s.failed {
-            Metrics::inc(&metrics.errors, 1);
-            let _ = s.reply.send(Err(msg));
-            continue;
-        }
-        let container = Container {
-            model: meta.name.clone(),
-            backend_id: backend.backend_id(),
-            cfg: params.bbans,
-            num_images: s.images.len() as u32,
-            pixels: meta.pixels as u32,
-            message: s.ans.into_message(),
-        };
-        let bytes = container.to_bytes();
-        Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
-        let _ = s.reply.send(Ok(bytes));
-    }
-}
-
-/// Run `f` over every element of `items` on up to `workers` scoped
-/// threads (contiguous slabs — the lock-step phases are short and even,
-/// so stealing would buy nothing). Each element is mutated independently
-/// and the caller reads results back in slice order, so thread scheduling
-/// cannot reorder anything observable.
-fn par_each<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], workers: usize, f: F) {
-    let per = items.len().div_ceil(workers.max(1)).max(1);
-    if workers <= 1 || items.len() <= 1 || per >= items.len() {
-        for it in items {
-            f(it);
-        }
-        return;
-    }
-    let f = &f;
-    std::thread::scope(|scope| {
-        for chunk in items.chunks_mut(per) {
-            scope.spawn(move || {
-                for it in chunk {
-                    f(it);
-                }
-            });
-        }
-    });
-}
-
-/// [`batched_encode`] for `Sync` backends: the same three-phase loop with
-/// the NN dispatches row-sharded over the pool and the per-stream ANS
-/// phases run streams-in-parallel. Byte-identical containers — each
-/// stream's coder work is untouched, the NN row contract guarantees the
-/// sharded dispatches, and every cross-stream buffer is packed serially
-/// in stream order. KEEP IN SYNC with [`batched_encode`] (see its docs
-/// for why the twins cannot share one body).
-fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
-    backend: &B,
-    workers: usize,
-    params: &ServiceParams,
-    metrics: &Metrics,
-    group: Vec<(Vec<Vec<u8>>, mpsc::Sender<Result<Vec<u8>, String>>)>,
-) {
-    let codec = match VaeCodec::new(backend, params.bbans) {
-        Ok(c) => c,
-        Err(e) => {
-            for (_, reply) in group {
-                let _ = reply.send(Err(format!("{e:#}")));
-            }
-            return;
-        }
-    };
-    let meta = backend.meta();
-
-    struct Stream {
-        images: Vec<Vec<u8>>,
-        /// First row of this stream in the shared posterior batch.
-        base: usize,
-        ans: Ans,
-        next: usize,
-        reply: mpsc::Sender<Result<Vec<u8>, String>>,
-        failed: Option<String>,
-        scratch: CodecScratch,
-        /// This round's latent centres (packed serially after the phase).
-        ys: Vec<f32>,
-        /// This round's likelihood params (distributed serially before
-        /// the push phase).
-        pending: Option<PixelParams>,
-    }
-    let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
-
-    // Phase 1: one row-sharded recognition dispatch for every image of
-    // every stream.
-    let mut posts: Option<PosteriorBatch> = None;
-    {
-        let mut data: Vec<f32> = Vec::new();
-        let mut rows = 0usize;
-        for (images, reply) in group {
-            let failed = images
-                .iter()
-                .any(|i| i.len() != meta.pixels)
-                .then(|| format!("image size != {}", meta.pixels));
-            let base = rows;
-            if failed.is_none() {
-                for img in &images {
-                    codec.scale_image_into(img, &mut data);
+                    core.scale_image_into(img, &mut data);
                 }
                 rows += images.len();
             }
@@ -699,11 +642,10 @@ fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
         if rows > 0 {
             Metrics::inc(&metrics.nn_calls, 1);
             Metrics::inc(&metrics.nn_items, rows as u64);
-            match crate::model::encode_batch_sharded(
-                backend,
-                &Matrix::new(rows, meta.pixels, data),
-                workers,
-            ) {
+            let t = Instant::now();
+            let r = exec.nn_posterior(&Matrix::new(rows, meta.pixels, data));
+            metrics.phase_nn.observe(t.elapsed());
+            match r {
                 Ok(p) => posts = Some(p),
                 Err(e) => {
                     for s in &mut streams {
@@ -714,8 +656,8 @@ fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
         }
     }
 
-    // Phase 2: lock-step image coding; each round's per-stream ANS work
-    // fans out over the pool, the generative dispatch row-shards.
+    // Phase 2: lock-step image coding with one cross-stream batched
+    // generative-net dispatch per image step.
     let mut ys_data: Vec<f32> = Vec::new();
     loop {
         let mut active: Vec<&mut Stream> = streams
@@ -726,43 +668,52 @@ fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
             break;
         }
         let pb = posts.as_ref().expect("active streams imply a posterior batch");
-        // (1) pop posteriors per stream — parallel across streams.
-        par_each(&mut active, workers, |s| {
+        // (1) pop posteriors per stream — across the executor's lanes.
+        let t = Instant::now();
+        exec.each_stream(&mut active, |s| {
+            let s = &mut **s;
             let (mu, sigma) = pb.row(s.base + s.next);
             let mut idx = std::mem::take(&mut s.scratch.idx);
-            codec.pop_posterior_into(&mut s.ans, mu, sigma, &mut idx, &mut s.scratch.gauss);
+            core.pop_posterior_into(&mut s.ans, mu, sigma, &mut idx, &mut s.scratch.gauss);
             s.ys.clear();
-            codec.latent_centres_into(&idx, &mut s.ys);
+            core.latent_centres_into(&idx, &mut s.ys);
             s.scratch.idx = idx;
         });
+        metrics.phase_ans.observe(t.elapsed());
         // Pack the latent matrix serially, in stream order.
         ys_data.clear();
         for s in active.iter() {
             ys_data.extend_from_slice(&s.ys);
         }
-        // (2) one row-sharded generative dispatch for all active streams.
+        // (2) one batched generative-net dispatch for all active streams.
         let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
         Metrics::inc(&metrics.nn_calls, 1);
         Metrics::inc(&metrics.nn_items, active.len() as u64);
-        match crate::model::decode_batch_sharded(backend, &ym, workers) {
+        let t = Instant::now();
+        let r = exec.nn_likelihood(&ym);
+        metrics.phase_nn.observe(t.elapsed());
+        match r {
             Ok(param_list) => {
                 for (s, pp) in active.iter_mut().zip(param_list) {
                     s.pending = Some(pp);
                 }
-                // (3) push pixels + prior — parallel across streams.
-                par_each(&mut active, workers, |s| {
+                // (3) push pixels + prior — across the executor's lanes.
+                let t = Instant::now();
+                exec.each_stream(&mut active, |s| {
+                    let s = &mut **s;
                     let pp = s.pending.take().expect("params distributed above");
                     let idx = std::mem::take(&mut s.scratch.idx);
-                    codec.push_pixels_coder_scratch(
+                    core.push_pixels_coder_scratch(
                         &mut s.ans,
                         &pp,
                         &s.images[s.next],
                         &mut s.scratch,
                     );
-                    codec.push_prior(&mut s.ans, &idx);
+                    core.push_prior(&mut s.ans, &idx);
                     s.scratch.idx = idx;
                     s.next += 1;
                 });
+                metrics.phase_ans.observe(t.elapsed());
                 Metrics::inc(&metrics.images_encoded, active.len() as u64);
             }
             Err(e) => {
@@ -783,7 +734,7 @@ fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
         }
         let container = Container {
             model: meta.name.clone(),
-            backend_id: backend.backend_id(),
+            backend_id: backend_id.to_string(),
             cfg: params.bbans,
             num_images: s.images.len() as u32,
             pixels: meta.pixels as u32,
@@ -795,264 +746,18 @@ fn batched_encode_fanout<B: Backend + Sync + ?Sized>(
     }
 }
 
-/// [`batched_decode`] for `Sync` backends: BBC1 streams run the lock-step
-/// loop with fanned phases and row-sharded dispatches; chunk-parallel
-/// BBC2 and hierarchical BBC3 containers decode over the worker pool
-/// (speculative first-image scheduling included) instead of sequentially.
-/// KEEP IN SYNC with [`batched_decode`] (shared admission lives in
-/// [`bbc2_codec`] / [`decode_hier_container`]).
-fn batched_decode_fanout(
-    backends: &HashMap<String, SharedBackend>,
-    workers: usize,
+/// Sniff and route one round's decompress jobs: BBC2 and BBC3 containers
+/// go to their dedicated decoders (over the phase pool when the backends
+/// are `Sync`); plain BBC1 containers group by model and run the unified
+/// lock-step [`batched_decode`] loop on the matching executor.
+fn decode_jobs(
+    backends: &BackendSet,
     metrics: &Metrics,
-    jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
+    jobs: Vec<DecompressJob>,
     hier_cache: &mut HashMap<String, HierVae>,
 ) {
-    type DecodeJob = (Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>);
-    let mut by_model: HashMap<String, Vec<DecodeJob>> = HashMap::new();
-    for (bytes, reply) in jobs {
-        Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
-        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
-            decode_parallel_container_fanout(backends, workers, metrics, &bytes, reply);
-            continue;
-        }
-        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
-            decode_hier_container(Some(workers), metrics, &bytes, reply, hier_cache);
-            continue;
-        }
-        match Container::from_bytes(&bytes) {
-            Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
-            Err(e) => {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = reply.send(Err(format!("bad container: {e:#}")));
-            }
-        }
-    }
-
-    for (model, group) in by_model {
-        let Some(backend) = backends.get(&model) else {
-            for (_, reply) in group {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = reply.send(Err(format!("unknown model '{model}'")));
-            }
-            continue;
-        };
-        let backend: &(dyn Backend + Send + Sync) = &**backend;
-
-        struct Stream<'a> {
-            ans: Ans,
-            remaining: usize,
-            out: Vec<Vec<u8>>,
-            /// Built once at admission (each container carries its own
-            /// config); `None` iff `failed` — constructing per phase
-            /// would serialize the pool on the global bucket-table lock.
-            codec: Option<VaeCodec<'a, dyn Backend + Send + Sync>>,
-            reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
-            failed: Option<String>,
-            pending_idx: Vec<u32>,
-            pending_img: Vec<u8>,
-            scratch: CodecScratch,
-            /// This round's latent centres / scaled pixels and params.
-            ys: Vec<f32>,
-            xs: Vec<f32>,
-            pending: Option<PixelParams>,
-            /// Row of this stream in the current round's batched outputs.
-            row: usize,
-        }
-        let mut streams: Vec<Stream> = group
-            .into_iter()
-            .map(|(c, reply)| {
-                let mut failed = if c.backend_id != backend.backend_id() {
-                    Some(format!(
-                        "container encoded with backend '{}', this service runs '{}'",
-                        c.backend_id,
-                        backend.backend_id()
-                    ))
-                } else {
-                    None
-                };
-                let codec = match VaeCodec::new(backend, c.cfg) {
-                    Ok(codec) => Some(codec),
-                    Err(e) => {
-                        if failed.is_none() {
-                            failed = Some(format!("{e:#}"));
-                        }
-                        None
-                    }
-                };
-                Stream {
-                    ans: Ans::from_message(&c.message, c.cfg.clean_seed),
-                    remaining: c.num_images as usize,
-                    out: Vec::with_capacity(c.num_images as usize),
-                    codec,
-                    reply,
-                    failed,
-                    pending_idx: Vec::new(),
-                    pending_img: Vec::new(),
-                    scratch: CodecScratch::new(),
-                    ys: Vec::new(),
-                    xs: Vec::new(),
-                    pending: None,
-                    row: 0,
-                }
-            })
-            .collect();
-
-        let meta = backend.meta();
-        let mut ys_data: Vec<f32> = Vec::new();
-        let mut xs_data: Vec<f32> = Vec::new();
-        loop {
-            let mut active: Vec<&mut Stream> = streams
-                .iter_mut()
-                .filter(|s| s.failed.is_none() && s.remaining > 0)
-                .collect();
-            if active.is_empty() {
-                break;
-            }
-            // (3⁻¹) pop priors — parallel across streams.
-            par_each(&mut active, workers, |s| {
-                let s = &mut **s;
-                let codec = s.codec.as_ref().expect("validated at admission");
-                codec.pop_prior_into(&mut s.ans, &mut s.pending_idx);
-                s.ys.clear();
-                codec.latent_centres_into(&s.pending_idx, &mut s.ys);
-            });
-            ys_data.clear();
-            for s in active.iter() {
-                ys_data.extend_from_slice(&s.ys);
-            }
-            // (2⁻¹) one row-sharded generative dispatch, pop pixels.
-            let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
-            Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, active.len() as u64);
-            let params_list = match crate::model::decode_batch_sharded(backend, &ym, workers) {
-                Ok(p) => p,
-                Err(e) => {
-                    ys_data = ym.data;
-                    for s in active.iter_mut() {
-                        s.failed = Some(format!("likelihood failed: {e:#}"));
-                    }
-                    continue;
-                }
-            };
-            ys_data = ym.data;
-            for (s, pp) in active.iter_mut().zip(params_list) {
-                s.pending = Some(pp);
-            }
-            par_each(&mut active, workers, |s| {
-                let s = &mut **s;
-                let pp = s.pending.take().expect("params distributed above");
-                let codec = s.codec.as_ref().expect("validated at admission");
-                s.pending_img = codec.pop_pixels_coder_scratch(&mut s.ans, &pp, &mut s.scratch);
-                s.xs.clear();
-                codec.scale_image_into(&s.pending_img, &mut s.xs);
-            });
-            xs_data.clear();
-            for s in active.iter() {
-                xs_data.extend_from_slice(&s.xs);
-            }
-            // (1⁻¹) one row-sharded recognition dispatch, push bits back.
-            let xm = Matrix::new(active.len(), meta.pixels, std::mem::take(&mut xs_data));
-            Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, active.len() as u64);
-            match crate::model::encode_batch_sharded(backend, &xm, workers) {
-                Ok(posts) => {
-                    for (r, s) in active.iter_mut().enumerate() {
-                        s.row = r;
-                    }
-                    let posts = &posts;
-                    par_each(&mut active, workers, |s| {
-                        let s = &mut **s;
-                        let codec = s.codec.as_ref().expect("validated at admission");
-                        let (mu, sigma) = posts.row(s.row);
-                        codec.push_posterior_scratch(
-                            &mut s.ans,
-                            mu,
-                            sigma,
-                            &s.pending_idx,
-                            &mut s.scratch.gauss,
-                        );
-                        s.out.push(std::mem::take(&mut s.pending_img));
-                        s.remaining -= 1;
-                    });
-                    Metrics::inc(&metrics.images_decoded, active.len() as u64);
-                }
-                Err(e) => {
-                    for s in active.iter_mut() {
-                        s.failed = Some(format!("posterior failed: {e:#}"));
-                    }
-                }
-            }
-            xs_data = xm.data;
-        }
-
-        for s in streams {
-            if let Some(msg) = s.failed {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = s.reply.send(Err(msg));
-            } else {
-                let mut out = s.out;
-                out.reverse(); // stack order → original order
-                let _ = s.reply.send(Ok(out));
-            }
-        }
-    }
-}
-
-/// [`decode_parallel_container`] with the chunk pool: `Sync` backends
-/// decode the independent BBC2 chains across `workers` threads
-/// (speculative first-image scheduling included). Admission is the
-/// shared [`bbc2_codec`] — identical accept/reject behaviour to the
-/// single-threaded worker.
-fn decode_parallel_container_fanout(
-    backends: &HashMap<String, SharedBackend>,
-    workers: usize,
-    metrics: &Metrics,
-    bytes: &[u8],
-    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
-) {
-    let fail = |msg: String| {
-        Metrics::inc(&metrics.errors, 1);
-        let _ = reply.send(Err(msg));
-    };
-    let pc = match ParallelContainer::from_bytes(bytes) {
-        Ok(pc) => pc,
-        Err(e) => return fail(format!("bad container: {e:#}")),
-    };
-    let Some(backend) = backends.get(&pc.model) else {
-        return fail(format!("unknown model '{}'", pc.model));
-    };
-    let backend: &(dyn Backend + Send + Sync) = &**backend;
-    let codec = match bbc2_codec(&pc, backend) {
-        Ok(c) => c,
-        Err(msg) => return fail(msg),
-    };
-    match pc.decode_with_workers(&codec, workers) {
-        Ok(images) => {
-            Metrics::inc(&metrics.images_decoded, images.len() as u64);
-            let _ = reply.send(Ok(images));
-        }
-        Err(e) => fail(format!("parallel container decode failed: {e:#}")),
-    }
-}
-
-/// Cross-stream batched decode (streams may use different models only if
-/// those models share a backend entry; in practice we group by model).
-///
-/// KEEP IN SYNC with [`batched_decode_fanout`] — same twin situation as
-/// [`batched_encode`] / [`batched_encode_fanout`].
-fn batched_decode(
-    backends: &HashMap<String, Box<dyn Backend>>,
-    metrics: &Metrics,
-    jobs: Vec<(Vec<u8>, mpsc::Sender<Result<Vec<Vec<u8>>, String>>)>,
-    hier_cache: &mut HashMap<String, HierVae>,
-) {
-    // Parse containers and group by model. Chunk-parallel (BBC2)
-    // containers have no cross-stream NN batching to exploit here — each
-    // chunk is an independent chain — so they decode chunk-by-chunk
-    // directly instead of joining the lock-step loop below.
-    type DecodeJob = (Container, mpsc::Sender<Result<Vec<Vec<u8>>, String>>);
-    let mut by_model: HashMap<String, Vec<DecodeJob>> = HashMap::new();
+    type GroupJob = (Container, DecompressReply);
+    let mut by_model: HashMap<String, Vec<GroupJob>> = HashMap::new();
     for (bytes, reply) in jobs {
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
@@ -1060,7 +765,11 @@ fn batched_decode(
             continue;
         }
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
-            decode_hier_container(None, metrics, &bytes, reply, hier_cache);
+            let workers = match backends {
+                BackendSet::Local(_) => None,
+                BackendSet::Shared { pool, .. } => Some(pool.lanes()),
+            };
+            decode_hier_container(workers, metrics, &bytes, reply, hier_cache);
             continue;
         }
         match Container::from_bytes(&bytes) {
@@ -1073,149 +782,211 @@ fn batched_decode(
     }
 
     for (model, group) in by_model {
-        let Some(backend) = backends.get(&model) else {
+        let reject = |group: Vec<GroupJob>| {
             for (_, reply) in group {
                 Metrics::inc(&metrics.errors, 1);
                 let _ = reply.send(Err(format!("unknown model '{model}'")));
             }
-            continue;
         };
-        let backend = backend.as_ref();
-
-        struct Stream {
-            ans: Ans,
-            remaining: usize,
-            out: Vec<Vec<u8>>,
-            cfg: BbAnsConfig,
-            reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
-            failed: Option<String>,
-            pending_idx: Vec<u32>,
-            pending_img: Vec<u8>,
-            scratch: CodecScratch,
-        }
-        let mut streams: Vec<Stream> = group
-            .into_iter()
-            .map(|(c, reply)| {
-                let failed = if c.backend_id != backend.backend_id() {
-                    Some(format!(
-                        "container encoded with backend '{}', this service runs '{}'",
-                        c.backend_id,
-                        backend.backend_id()
-                    ))
-                } else {
-                    None
-                };
-                Stream {
-                    ans: Ans::from_message(&c.message, c.cfg.clean_seed),
-                    remaining: c.num_images as usize,
-                    out: Vec::with_capacity(c.num_images as usize),
-                    cfg: c.cfg,
-                    reply,
-                    failed,
-                    pending_idx: Vec::new(),
-                    pending_img: Vec::new(),
-                    scratch: CodecScratch::new(),
+        match backends {
+            BackendSet::Local(map) => match map.get(&model) {
+                Some(b) => {
+                    let id = b.backend_id();
+                    let exec = SerialExecutor {
+                        backend: b.as_ref(),
+                    };
+                    batched_decode(&exec, b.meta(), &id, metrics, group);
                 }
-            })
-            .collect();
+                None => reject(group),
+            },
+            BackendSet::Shared { map, pool } => match map.get(&model) {
+                Some(b) => {
+                    let backend: &(dyn Backend + Send + Sync) = &**b;
+                    let id = backend.backend_id();
+                    let exec = PooledExecutor { backend, pool };
+                    batched_decode(&exec, backend.meta(), &id, metrics, group);
+                }
+                None => reject(group),
+            },
+        }
+    }
+}
 
-        let meta = backend.meta();
-        let mut ys_data: Vec<f32> = Vec::new();
-        let mut xs_data: Vec<f32> = Vec::new();
-        loop {
-            let active: Vec<usize> = streams
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.failed.is_none() && s.remaining > 0)
-                .map(|(i, _)| i)
-                .collect();
-            if active.is_empty() {
-                break;
-            }
-            // (3⁻¹) pop priors; pack latents into one matrix.
-            ys_data.clear();
-            for &si in &active {
-                let s = &mut streams[si];
-                let codec = match VaeCodec::new(backend, s.cfg) {
-                    Ok(c) => c,
-                    Err(e) => {
-                        s.failed = Some(format!("{e:#}"));
-                        continue;
-                    }
-                };
-                codec.pop_prior_into(&mut s.ans, &mut s.pending_idx);
-                codec.latent_centres_into(&s.pending_idx, &mut ys_data);
-            }
-            let still: Vec<usize> = active
-                .iter()
-                .copied()
-                .filter(|&si| streams[si].failed.is_none())
-                .collect();
-            if still.is_empty() {
-                continue;
-            }
-            // (2⁻¹) one batched generative-net dispatch, pop pixels.
-            let ym = Matrix::new(still.len(), meta.latent_dim, std::mem::take(&mut ys_data));
-            Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, still.len() as u64);
-            let params_list = match backend.decode_batch(&ym) {
-                Ok(p) => p,
+/// Cross-stream batched decode for one model's BBC1 containers — ONE
+/// lock-step loop for both service variants, parameterized by the
+/// executor (same byte/behaviour contract as [`batched_encode`]).
+fn batched_decode<E: PhaseExecutor>(
+    exec: &E,
+    meta: &ModelMeta,
+    backend_id: &str,
+    metrics: &Metrics,
+    group: Vec<(Container, DecompressReply)>,
+) {
+    struct Stream {
+        ans: Ans,
+        remaining: usize,
+        out: Vec<Vec<u8>>,
+        /// Built once at admission (each container carries its own
+        /// config); `None` iff `failed` — constructing per phase would
+        /// serialize the pool on the global bucket-table lock.
+        core: Option<CodecCore>,
+        reply: DecompressReply,
+        failed: Option<String>,
+        pending_idx: Vec<u32>,
+        pending_img: Vec<u8>,
+        scratch: CodecScratch,
+        /// This round's latent centres / scaled pixels and params.
+        ys: Vec<f32>,
+        xs: Vec<f32>,
+        pending: Option<PixelParams>,
+        /// Row of this stream in the current round's batched outputs.
+        row: usize,
+    }
+    let mut streams: Vec<Stream> = group
+        .into_iter()
+        .map(|(c, reply)| {
+            let mut failed = if c.backend_id != backend_id {
+                Some(format!(
+                    "container encoded with backend '{}', this service runs '{}'",
+                    c.backend_id, backend_id
+                ))
+            } else {
+                None
+            };
+            let core = match CodecCore::new(meta.clone(), c.cfg) {
+                Ok(core) => Some(core),
                 Err(e) => {
-                    ys_data = ym.data;
-                    for &si in &still {
-                        streams[si].failed = Some(format!("likelihood failed: {e:#}"));
+                    if failed.is_none() {
+                        failed = Some(format!("{e:#}"));
                     }
-                    continue;
+                    None
                 }
             };
-            ys_data = ym.data;
-            xs_data.clear();
-            for (&si, pp) in still.iter().zip(params_list) {
-                let s = &mut streams[si];
-                let codec = VaeCodec::new(backend, s.cfg).expect("validated");
-                s.pending_img = codec.pop_pixels_coder_scratch(&mut s.ans, &pp, &mut s.scratch);
-                codec.scale_image_into(&s.pending_img, &mut xs_data);
+            Stream {
+                ans: Ans::from_message(&c.message, c.cfg.clean_seed),
+                remaining: c.num_images as usize,
+                out: Vec::with_capacity(c.num_images as usize),
+                core,
+                reply,
+                failed,
+                pending_idx: Vec::new(),
+                pending_img: Vec::new(),
+                scratch: CodecScratch::new(),
+                ys: Vec::new(),
+                xs: Vec::new(),
+                pending: None,
+                row: 0,
             }
-            // (1⁻¹) one batched recognition-net dispatch, push bits back.
-            let xm = Matrix::new(still.len(), meta.pixels, std::mem::take(&mut xs_data));
-            Metrics::inc(&metrics.nn_calls, 1);
-            Metrics::inc(&metrics.nn_items, still.len() as u64);
-            match backend.encode_batch(&xm) {
-                Ok(posts) => {
-                    for (r, &si) in still.iter().enumerate() {
-                        let s = &mut streams[si];
-                        let codec = VaeCodec::new(backend, s.cfg).expect("validated");
-                        let (mu, sigma) = posts.row(r);
-                        codec.push_posterior_scratch(
-                            &mut s.ans,
-                            mu,
-                            sigma,
-                            &s.pending_idx,
-                            &mut s.scratch.gauss,
-                        );
-                        s.out.push(std::mem::take(&mut s.pending_img));
-                        s.remaining -= 1;
-                        Metrics::inc(&metrics.images_decoded, 1);
-                    }
-                }
-                Err(e) => {
-                    for &si in &still {
-                        streams[si].failed = Some(format!("posterior failed: {e:#}"));
-                    }
-                }
-            }
-            xs_data = xm.data;
-        }
+        })
+        .collect();
 
-        for s in streams {
-            if let Some(msg) = s.failed {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = s.reply.send(Err(msg));
-            } else {
-                let mut out = s.out;
-                out.reverse(); // stack order → original order
-                let _ = s.reply.send(Ok(out));
+    let mut ys_data: Vec<f32> = Vec::new();
+    let mut xs_data: Vec<f32> = Vec::new();
+    loop {
+        let mut active: Vec<&mut Stream> = streams
+            .iter_mut()
+            .filter(|s| s.failed.is_none() && s.remaining > 0)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        // (3⁻¹) pop priors — across the executor's lanes.
+        let t = Instant::now();
+        exec.each_stream(&mut active, |s| {
+            let s = &mut **s;
+            let core = s.core.as_ref().expect("validated at admission");
+            core.pop_prior_into(&mut s.ans, &mut s.pending_idx);
+            s.ys.clear();
+            core.latent_centres_into(&s.pending_idx, &mut s.ys);
+        });
+        metrics.phase_ans.observe(t.elapsed());
+        ys_data.clear();
+        for s in active.iter() {
+            ys_data.extend_from_slice(&s.ys);
+        }
+        // (2⁻¹) one batched generative dispatch, pop pixels.
+        let ym = Matrix::new(active.len(), meta.latent_dim, std::mem::take(&mut ys_data));
+        Metrics::inc(&metrics.nn_calls, 1);
+        Metrics::inc(&metrics.nn_items, active.len() as u64);
+        let t = Instant::now();
+        let r = exec.nn_likelihood(&ym);
+        metrics.phase_nn.observe(t.elapsed());
+        let params_list = match r {
+            Ok(p) => p,
+            Err(e) => {
+                ys_data = ym.data;
+                for s in active.iter_mut() {
+                    s.failed = Some(format!("likelihood failed: {e:#}"));
+                }
+                continue;
             }
+        };
+        ys_data = ym.data;
+        for (s, pp) in active.iter_mut().zip(params_list) {
+            s.pending = Some(pp);
+        }
+        let t = Instant::now();
+        exec.each_stream(&mut active, |s| {
+            let s = &mut **s;
+            let pp = s.pending.take().expect("params distributed above");
+            let core = s.core.as_ref().expect("validated at admission");
+            s.pending_img = core.pop_pixels_coder_scratch(&mut s.ans, &pp, &mut s.scratch);
+            s.xs.clear();
+            core.scale_image_into(&s.pending_img, &mut s.xs);
+        });
+        metrics.phase_ans.observe(t.elapsed());
+        xs_data.clear();
+        for s in active.iter() {
+            xs_data.extend_from_slice(&s.xs);
+        }
+        // (1⁻¹) one batched recognition dispatch, push bits back.
+        let xm = Matrix::new(active.len(), meta.pixels, std::mem::take(&mut xs_data));
+        Metrics::inc(&metrics.nn_calls, 1);
+        Metrics::inc(&metrics.nn_items, active.len() as u64);
+        let t = Instant::now();
+        let r = exec.nn_posterior(&xm);
+        metrics.phase_nn.observe(t.elapsed());
+        match r {
+            Ok(posts) => {
+                for (r, s) in active.iter_mut().enumerate() {
+                    s.row = r;
+                }
+                let posts = &posts;
+                let t = Instant::now();
+                exec.each_stream(&mut active, |s| {
+                    let s = &mut **s;
+                    let core = s.core.as_ref().expect("validated at admission");
+                    let (mu, sigma) = posts.row(s.row);
+                    core.push_posterior_scratch(
+                        &mut s.ans,
+                        mu,
+                        sigma,
+                        &s.pending_idx,
+                        &mut s.scratch.gauss,
+                    );
+                    s.out.push(std::mem::take(&mut s.pending_img));
+                    s.remaining -= 1;
+                });
+                metrics.phase_ans.observe(t.elapsed());
+                Metrics::inc(&metrics.images_decoded, active.len() as u64);
+            }
+            Err(e) => {
+                for s in active.iter_mut() {
+                    s.failed = Some(format!("posterior failed: {e:#}"));
+                }
+            }
+        }
+        xs_data = xm.data;
+    }
+
+    for s in streams {
+        if let Some(msg) = s.failed {
+            Metrics::inc(&metrics.errors, 1);
+            let _ = s.reply.send(Err(msg));
+        } else {
+            let mut out = s.out;
+            out.reverse(); // stack order → original order
+            let _ = s.reply.send(Ok(out));
         }
     }
 }
@@ -1238,14 +1009,16 @@ fn bbc2_codec<'a, B: Backend + ?Sized>(
 }
 
 /// Decode one chunk-parallel (BBC2) container against the owning model's
-/// backend. `dyn Backend` is not `Sync`, so chunks decode sequentially
-/// inside the worker thread; the parallel win belongs to `Sync` backends
-/// via [`ParallelContainer::decode_with`] (the fan-out service's route).
+/// backend. Thread-bound (`Local`) backends decode chunks sequentially
+/// inside the worker thread; `Sync` backends decode the independent
+/// chains across the phase pool (speculative first-image scheduling
+/// included). Admission is the shared [`bbc2_codec`] — identical
+/// accept/reject behaviour across variants.
 fn decode_parallel_container(
-    backends: &HashMap<String, Box<dyn Backend>>,
+    backends: &BackendSet,
     metrics: &Metrics,
     bytes: &[u8],
-    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+    reply: DecompressReply,
 ) {
     let fail = |msg: String| {
         Metrics::inc(&metrics.errors, 1);
@@ -1255,19 +1028,29 @@ fn decode_parallel_container(
         Ok(pc) => pc,
         Err(e) => return fail(format!("bad container: {e:#}")),
     };
-    let Some(backend) = backends.get(&pc.model) else {
-        return fail(format!("unknown model '{}'", pc.model));
+    let decode_err = |e: anyhow::Error| format!("parallel container decode failed: {e:#}");
+    let decoded: Result<Vec<Vec<u8>>, String> = match backends {
+        BackendSet::Local(map) => match map.get(&pc.model) {
+            None => Err(format!("unknown model '{}'", pc.model)),
+            Some(b) => bbc2_codec(&pc, b.as_ref())
+                .and_then(|codec| pc.decode_sequential(&codec).map_err(decode_err)),
+        },
+        BackendSet::Shared { map, pool } => match map.get(&pc.model) {
+            None => Err(format!("unknown model '{}'", pc.model)),
+            Some(b) => {
+                let backend: &(dyn Backend + Send + Sync) = &**b;
+                bbc2_codec(&pc, backend).and_then(|codec| {
+                    pc.decode_with_workers(&codec, pool.lanes()).map_err(decode_err)
+                })
+            }
+        },
     };
-    let codec = match bbc2_codec(&pc, backend.as_ref()) {
-        Ok(c) => c,
-        Err(msg) => return fail(msg),
-    };
-    match pc.decode_sequential(&codec) {
+    match decoded {
         Ok(images) => {
             Metrics::inc(&metrics.images_decoded, images.len() as u64);
             let _ = reply.send(Ok(images));
         }
-        Err(e) => fail(format!("parallel container decode failed: {e:#}")),
+        Err(msg) => fail(msg),
     }
 }
 
@@ -1285,7 +1068,7 @@ fn decode_hier_container(
     workers: Option<usize>,
     metrics: &Metrics,
     bytes: &[u8],
-    reply: mpsc::Sender<Result<Vec<Vec<u8>>, String>>,
+    reply: DecompressReply,
     cache: &mut HashMap<String, HierVae>,
 ) {
     let fail = |msg: String| {
@@ -1296,30 +1079,10 @@ fn decode_hier_container(
         Ok(hc) => hc,
         Err(e) => return fail(format!("bad container: {e:#}")),
     };
-    // Memoization key covers the FULL header identity — backend_id alone
-    // encodes only the seed, and a warm cache must accept/reject exactly
-    // the same headers a cold one would (build_backend checks that
-    // weight_seed and backend_id agree).
-    let key = format!(
-        "{}|{}|{}|{}|{}|{:?}",
-        hc.backend_id,
-        hc.weight_seed,
-        hc.pixels,
-        hc.hidden,
-        hc.likelihood.tag(),
-        hc.dims
-    );
-    if !cache.contains_key(&key) {
-        let backend = match hc.build_backend() {
-            Ok(b) => b,
-            Err(e) => return fail(format!("{e:#}")),
-        };
-        if cache.len() >= 8 {
-            cache.clear(); // crude bound; rebuilds are correct, just slow
-        }
-        cache.insert(key.clone(), backend);
-    }
-    let backend = cache.get(&key).expect("inserted above");
+    let backend = match cached_hier_backend(cache, &hc) {
+        Ok(b) => b,
+        Err(e) => return fail(format!("{e:#}")),
+    };
     let codec = match HierCodec::new(backend, hc.cfg, hc.schedule) {
         Ok(c) => c,
         Err(e) => return fail(format!("{e:#}")),
@@ -1337,28 +1100,143 @@ fn decode_hier_container(
     }
 }
 
+/// Memoization key for rebuilt hierarchical backends. Covers the FULL
+/// header identity — backend_id alone encodes only the seed, and a warm
+/// cache must accept/reject exactly the same headers a cold one would
+/// ([`HierContainer::build_backend`] checks that weight_seed and
+/// backend_id agree). ONE function on purpose: the `CompressHier` encode
+/// path and the BBC3 decode path must share cache entries.
+fn hier_cache_key(hc: &HierContainer) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{:?}",
+        hc.backend_id,
+        hc.weight_seed,
+        hc.pixels,
+        hc.hidden,
+        hc.likelihood.tag(),
+        hc.dims
+    )
+}
+
+/// Look up (or build and memoize) the backend a header describes.
+fn cached_hier_backend<'c>(
+    cache: &'c mut HashMap<String, HierVae>,
+    hc: &HierContainer,
+) -> Result<&'c HierVae> {
+    let key = hier_cache_key(hc);
+    if !cache.contains_key(&key) {
+        let backend = hc.build_backend()?;
+        if cache.len() >= 8 {
+            cache.clear(); // crude bound; rebuilds are correct, just slow
+        }
+        cache.insert(key.clone(), backend);
+    }
+    Ok(cache.get(&key).expect("inserted above"))
+}
+
+/// Run one round's hierarchical compress jobs. Chunks within a job
+/// encode across the phase pool when the service owns one; bytes do not
+/// depend on the worker count.
+fn compress_hier_jobs(
+    backends: &BackendSet,
+    params: &ServiceParams,
+    metrics: &Metrics,
+    jobs: Vec<HierJob>,
+    cache: &mut HashMap<String, HierVae>,
+) {
+    let workers = match backends {
+        BackendSet::Local(_) => 1,
+        BackendSet::Shared { pool, .. } => pool.lanes(),
+    };
+    for (spec, images, reply) in jobs {
+        match encode_hier(&spec, &images, params, workers, cache) {
+            Ok(bytes) => {
+                Metrics::inc(&metrics.images_encoded, images.len() as u64);
+                Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
+                let _ = reply.send(Ok(bytes));
+            }
+            Err(e) => {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(format!("{e:#}")));
+            }
+        }
+    }
+}
+
+/// Encode one hierarchical (`CompressHier`) job. The spec is expanded
+/// into a header-equivalent [`HierContainer`] so admission — seed,
+/// parameter budget, backend-id agreement — is exactly the decode path's
+/// [`HierContainer::build_backend`], and the rebuilt backend lands in the
+/// same memo cache BBC3 decodes read.
+fn encode_hier(
+    spec: &HierSpec,
+    images: &[Vec<u8>],
+    params: &ServiceParams,
+    workers: usize,
+    cache: &mut HashMap<String, HierVae>,
+) -> Result<Vec<u8>> {
+    if spec.dims.is_empty() {
+        bail!("hierarchical compress needs at least one latent layer");
+    }
+    if images.is_empty() {
+        bail!("hierarchical compress with no images");
+    }
+    let pixels = images[0].len();
+    if pixels == 0 {
+        bail!("hierarchical compress with zero-pixel images");
+    }
+    if images.iter().any(|i| i.len() != pixels) {
+        bail!("hierarchical compress images must share one size");
+    }
+    if matches!(spec.likelihood, Likelihood::Bernoulli)
+        && images.iter().flatten().any(|&p| p > 1)
+    {
+        bail!("Bernoulli hierarchy codes binary pixels; got a value > 1");
+    }
+    let hc = HierContainer {
+        model: format!("hier{}", spec.dims.len()),
+        backend_id: format!("hier-native-s{}", spec.seed),
+        schedule: spec.schedule,
+        cfg: params.bbans,
+        likelihood: spec.likelihood,
+        hidden: spec.hidden,
+        weight_seed: spec.seed,
+        pixels: pixels as u32,
+        dims: spec.dims.clone(),
+        chunks: Vec::new(),
+    };
+    let backend = cached_hier_backend(cache, &hc)?;
+    let codec = HierCodec::new(backend, params.bbans, spec.schedule)?;
+    let container =
+        HierContainer::encode_with_workers(&codec, images, spec.chunks.max(1) as usize, workers)?;
+    Ok(container.to_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::vae::NativeVae;
 
-    fn test_service(max_jobs: usize, window_ms: u64) -> ModelService {
+    fn toy_meta() -> ModelMeta {
+        ModelMeta {
+            name: "toy".into(),
+            pixels: 36,
+            latent_dim: 6,
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        }
+    }
+
+    fn test_service(max_jobs: usize, delay_ms: u64) -> ModelService {
         let params = ServiceParams {
             max_jobs,
-            batch_window: Duration::from_millis(window_ms),
+            max_batch_delay: Duration::from_millis(delay_ms),
             ..Default::default()
         };
         ModelService::spawn_with(params, || {
-            let meta = ModelMeta {
-                name: "toy".into(),
-                pixels: 36,
-                latent_dim: 6,
-                hidden: 10,
-                likelihood: Likelihood::Bernoulli,
-                test_elbo_bpd: f64::NAN,
-            };
             let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
-            map.insert("toy".into(), Box::new(NativeVae::random(meta, 77)));
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
             Ok(map)
         })
     }
@@ -1370,27 +1248,19 @@ mod tests {
             .collect()
     }
 
-    /// The `Sync`-backend fan-out variant of [`test_service`]: same model
+    /// The `Sync`-backend pooled variant of [`test_service`]: same model
     /// (same meta, same seed → same weights), phases spread over `fanout`
     /// workers.
-    fn test_service_sync(max_jobs: usize, window_ms: u64, fanout: usize) -> ModelService {
+    fn test_service_sync(max_jobs: usize, delay_ms: u64, fanout: usize) -> ModelService {
         let params = ServiceParams {
             max_jobs,
-            batch_window: Duration::from_millis(window_ms),
+            max_batch_delay: Duration::from_millis(delay_ms),
             fanout_workers: fanout,
             ..Default::default()
         };
         ModelService::spawn_with_sync(params, || {
-            let meta = ModelMeta {
-                name: "toy".into(),
-                pixels: 36,
-                latent_dim: 6,
-                hidden: 10,
-                likelihood: Likelihood::Bernoulli,
-                test_elbo_bpd: f64::NAN,
-            };
             let mut map: HashMap<String, SharedBackend> = HashMap::new();
-            map.insert("toy".into(), Arc::new(NativeVae::random(meta, 77)));
+            map.insert("toy".into(), Arc::new(NativeVae::random(toy_meta(), 77)));
             Ok(map)
         })
     }
@@ -1443,15 +1313,7 @@ mod tests {
         use crate::bbans::hierarchy::Schedule;
         use crate::model::hierarchy::{HierMeta, HierVae};
         // Offline BBC2 from the same toy model the service hosts.
-        let meta = ModelMeta {
-            name: "toy".into(),
-            pixels: 36,
-            latent_dim: 6,
-            hidden: 10,
-            likelihood: Likelihood::Bernoulli,
-            test_elbo_bpd: f64::NAN,
-        };
-        let backend = NativeVae::random(meta, 77);
+        let backend = NativeVae::random(toy_meta(), 77);
         let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
         let images = sample_images(9, 21);
         let pc = crate::bbans::container::ParallelContainer::encode_with(&codec, &images, 3)
@@ -1545,15 +1407,7 @@ mod tests {
         // A BBC2 container produced offline by the chunk-parallel encoder
         // must decode through the serving path. The test backend mirrors
         // test_service's factory (same meta, same seed → same weights).
-        let meta = ModelMeta {
-            name: "toy".into(),
-            pixels: 36,
-            latent_dim: 6,
-            hidden: 10,
-            likelihood: Likelihood::Bernoulli,
-            test_elbo_bpd: f64::NAN,
-        };
-        let backend = NativeVae::random(meta, 77);
+        let backend = NativeVae::random(toy_meta(), 77);
         let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
         let images = sample_images(9, 21);
         let pc = crate::bbans::container::ParallelContainer::encode_with(&codec, &images, 3)
@@ -1609,6 +1463,118 @@ mod tests {
         // Service still alive for good requests.
         let good = sample_images(2, 4);
         assert!(h.compress("toy", good).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_with_overloaded_error() {
+        use std::sync::atomic::Ordering;
+        // Hold the worker inside its factory so nothing drains, then
+        // overfill the bounded admission queue.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let params = ServiceParams {
+            max_jobs: 4,
+            max_batch_delay: Duration::from_millis(1),
+            queue_cap: 2,
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, move || {
+            gate_rx.recv().ok();
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            Ok(map)
+        });
+        let h = svc.handle();
+        let mut waiters = Vec::new();
+        for t in 0..2u64 {
+            let h = h.clone();
+            waiters.push(std::thread::spawn(move || {
+                h.compress("toy", sample_images(1, 400 + t))
+            }));
+        }
+        // Wait until both submissions sit in the queue.
+        let t0 = Instant::now();
+        while svc.metrics.queue_depth.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "jobs never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let err = h.compress("toy", sample_images(1, 9)).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "got: {err}");
+        assert!(svc.metrics.rejected.load(Ordering::Relaxed) >= 1);
+        // Release the worker; the queued jobs complete normally.
+        gate_tx.send(()).unwrap();
+        for w in waiters {
+            assert!(w.join().unwrap().is_ok());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hier_compress_is_byte_identical_to_offline_encoder() {
+        use crate::bbans::hierarchy::Schedule;
+        use crate::model::hierarchy::{HierMeta, HierVae};
+        let images = sample_images(8, 41);
+        // Offline reference bytes (worker count never changes bytes).
+        let hmeta = HierMeta {
+            name: "hier2".into(),
+            pixels: 36,
+            dims: vec![6, 4],
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(hmeta, 99);
+        let codec = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        let reference = HierContainer::encode_with_workers(&codec, &images, 3, 2)
+            .unwrap()
+            .to_bytes();
+
+        let spec = HierSpec {
+            schedule: Schedule::BitSwap,
+            likelihood: Likelihood::Bernoulli,
+            dims: vec![6, 4],
+            hidden: 10,
+            seed: 99,
+            chunks: 3,
+        };
+        let serial = test_service(4, 1);
+        let h = serial.handle();
+        let bytes = h.compress_hier(spec.clone(), images.clone()).unwrap();
+        assert_eq!(bytes, reference, "serial executor changed BBC3 bytes");
+        assert_eq!(h.decompress(bytes).unwrap(), images);
+        serial.shutdown();
+        for fanout in [1usize, 3] {
+            let sync = test_service_sync(4, 1, fanout);
+            let bytes = sync.handle().compress_hier(spec.clone(), images.clone()).unwrap();
+            assert_eq!(bytes, reference, "fanout={fanout} changed BBC3 bytes");
+            sync.shutdown();
+        }
+    }
+
+    #[test]
+    fn hier_compress_validates_input() {
+        use crate::bbans::hierarchy::Schedule;
+        let spec = HierSpec {
+            schedule: Schedule::BitSwap,
+            likelihood: Likelihood::Bernoulli,
+            dims: vec![6, 4],
+            hidden: 10,
+            seed: 99,
+            chunks: 2,
+        };
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        assert!(h.compress_hier(spec.clone(), vec![]).is_err());
+        let ragged = vec![vec![0u8; 36], vec![0u8; 35]];
+        assert!(h.compress_hier(spec.clone(), ragged).is_err());
+        let mut nonbinary = vec![0u8; 36];
+        nonbinary[0] = 2;
+        assert!(h.compress_hier(spec.clone(), vec![nonbinary]).is_err());
+        // Seed 0 is reserved for artifact-backed models and rejected.
+        let mut zero_seed = spec;
+        zero_seed.seed = 0;
+        assert!(h.compress_hier(zero_seed, sample_images(1, 5)).is_err());
+        // Service still alive for good requests.
+        assert!(h.compress("toy", sample_images(2, 6)).is_ok());
         svc.shutdown();
     }
 }

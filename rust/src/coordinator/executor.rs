@@ -1,0 +1,416 @@
+//! Phase executors for the coordinator's lock-step batch loops.
+//!
+//! PR 5 left the batcher with twin ~400-line encode/decode loops — a
+//! serial pair for `Box<dyn Backend>` maps (PJRT handles are neither
+//! `Send` nor `Sync`) and a `_fanout` pair for `Sync` backends that
+//! spawned fresh scoped threads *per phase*. This module collapses that
+//! split: one [`PhaseExecutor`] trait abstracts the two things a
+//! lock-step round actually does —
+//!
+//! 1. batched NN dispatches ([`PhaseExecutor::nn_posterior`] /
+//!    [`PhaseExecutor::nn_likelihood`]), and
+//! 2. per-stream ANS work fanned across the active streams
+//!    ([`PhaseExecutor::each_stream`]) —
+//!
+//! with a [`SerialExecutor`] that runs everything inline on the worker
+//! thread and a [`PooledExecutor`] that shards NN rows and stream slabs
+//! over a **persistent** [`PhasePool`] (threads spawned once per
+//! service, parked between phases on a condvar — no per-phase spawn
+//! cost, no per-round thread churn).
+//!
+//! Bit-identity contract: every NN dispatch is row-independent (row `r`
+//! of the output depends only on row `r` of the input — pinned by
+//! `sharded_batches_match_unsharded_bitwise`), every stream's coder
+//! state is independent, and callers read results back in slice order.
+//! So the executor choice and the pool width are unobservable in the
+//! container bytes; `sync_service_bytes_match_serial_service` pins this
+//! end to end.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::model::tensor::Matrix;
+use crate::model::{row_shards, shard_matrix, Backend, PixelParams, PosteriorBatch};
+
+/// One lock-step round's execution strategy: how NN dispatches run and
+/// how per-stream ANS work is scheduled. Implementations must keep the
+/// bit-identity contract in the module docs — callers assume the bytes
+/// do not depend on which executor (or pool width) ran the round.
+pub(crate) trait PhaseExecutor {
+    /// One batched recognition-net dispatch over `xs` (`[B, pixels]`).
+    fn nn_posterior(&self, xs: &Matrix) -> Result<PosteriorBatch>;
+
+    /// One batched generative-net dispatch over `ys` (`[B, latent]`).
+    fn nn_likelihood(&self, ys: &Matrix) -> Result<Vec<PixelParams>>;
+
+    /// Run `f` over every stream of a phase. Implementations may reorder
+    /// or parallelize the calls — stream states are independent and the
+    /// caller reads results back in slice order, so the schedule never
+    /// shows in the output.
+    fn each_stream<T: Send>(&self, items: &mut [T], f: impl Fn(&mut T) + Sync);
+}
+
+/// Inline executor for thread-bound backends: every dispatch and every
+/// stream runs on the calling (worker) thread.
+pub(crate) struct SerialExecutor<'a> {
+    pub backend: &'a dyn Backend,
+}
+
+impl PhaseExecutor for SerialExecutor<'_> {
+    fn nn_posterior(&self, xs: &Matrix) -> Result<PosteriorBatch> {
+        self.backend.encode_batch(xs)
+    }
+
+    fn nn_likelihood(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        self.backend.decode_batch(ys)
+    }
+
+    fn each_stream<T: Send>(&self, items: &mut [T], f: impl Fn(&mut T) + Sync) {
+        for it in items {
+            f(it);
+        }
+    }
+}
+
+/// Pool-backed executor for `Sync` backends: NN dispatches are sharded
+/// by row across the pool lanes and stitched back in shard order; stream
+/// work is slabbed across lanes. Same observable behavior as
+/// [`SerialExecutor`], by the module-level contract.
+pub(crate) struct PooledExecutor<'a> {
+    pub backend: &'a (dyn Backend + Send + Sync),
+    pub pool: &'a PhasePool,
+}
+
+impl PhaseExecutor for PooledExecutor<'_> {
+    fn nn_posterior(&self, xs: &Matrix) -> Result<PosteriorBatch> {
+        let shards = row_shards(xs.rows, self.pool.lanes());
+        if shards.len() <= 1 {
+            return self.backend.encode_batch(xs);
+        }
+        let parts: Vec<Mutex<Option<Result<PosteriorBatch>>>> =
+            shards.iter().map(|_| Mutex::new(None)).collect();
+        self.pool.run(shards.len(), &|i| {
+            let sub = shard_matrix(xs, &shards[i]);
+            *parts[i].lock().expect("shard slot") = Some(self.backend.encode_batch(&sub));
+        });
+        let l = self.backend.meta().latent_dim;
+        let mut mu = Vec::with_capacity(xs.rows * l);
+        let mut sigma = Vec::with_capacity(xs.rows * l);
+        for slot in parts {
+            let p = slot.into_inner().expect("shard lock").expect("shard ran")?;
+            mu.extend_from_slice(&p.mu.data);
+            sigma.extend_from_slice(&p.sigma.data);
+        }
+        Ok(PosteriorBatch {
+            mu: Matrix::new(xs.rows, l, mu),
+            sigma: Matrix::new(xs.rows, l, sigma),
+        })
+    }
+
+    fn nn_likelihood(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        let shards = row_shards(ys.rows, self.pool.lanes());
+        if shards.len() <= 1 {
+            return self.backend.decode_batch(ys);
+        }
+        let parts: Vec<Mutex<Option<Result<Vec<PixelParams>>>>> =
+            shards.iter().map(|_| Mutex::new(None)).collect();
+        self.pool.run(shards.len(), &|i| {
+            let sub = shard_matrix(ys, &shards[i]);
+            *parts[i].lock().expect("shard slot") = Some(self.backend.decode_batch(&sub));
+        });
+        let mut out = Vec::with_capacity(ys.rows);
+        for slot in parts {
+            out.extend(slot.into_inner().expect("shard lock").expect("shard ran")?);
+        }
+        Ok(out)
+    }
+
+    fn each_stream<T: Send>(&self, items: &mut [T], f: impl Fn(&mut T) + Sync) {
+        self.pool.each(items, f);
+    }
+}
+
+/// A task published to the pool for one phase. The `'static` is a lie
+/// told under supervision: [`PhasePool::run`] erases the caller's
+/// lifetime and is responsible for clearing the slot (behind its
+/// barrier) before the real borrow ends.
+type Task = &'static (dyn Fn(usize) + Sync);
+
+struct Slot {
+    task: Option<Task>,
+    n_jobs: usize,
+    next: usize,
+    done_jobs: usize,
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Signaled when a new phase is published (or on shutdown).
+    go: Condvar,
+    /// Signaled when the last job of a phase completes.
+    done: Condvar,
+}
+
+/// Persistent worker pool with phase barriers: `workers - 1` threads are
+/// spawned once and parked on a condvar; each [`PhasePool::run`] wakes
+/// them, dispenses job indices from a shared counter, and returns only
+/// after all jobs finished (the barrier). The caller is the remaining
+/// lane — it helps drain the job queue instead of blocking, so
+/// `lanes() == workers` and a 1-worker pool has no threads at all.
+///
+/// A panic inside a job is caught on whichever lane ran it (workers stay
+/// alive for the next phase), stashed, and re-raised on the caller after
+/// the barrier — so a poisoned request round cannot wedge or kill the
+/// service thread's pool.
+pub(crate) struct PhasePool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl PhasePool {
+    pub(crate) fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                task: None,
+                n_jobs: 0,
+                next: 0,
+                done_jobs: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let threads = (1..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bbans-phase-{i}"))
+                    .spawn(move || worker(shared))
+                    .expect("spawn phase-pool worker")
+            })
+            .collect();
+        Self { shared, threads }
+    }
+
+    /// Concurrency width: pool threads plus the calling lane.
+    pub(crate) fn lanes(&self) -> usize {
+        self.threads.len() + 1
+    }
+
+    /// Run `f(0..n_jobs)` across the lanes and barrier until every job
+    /// has finished. Panics in `f` propagate to the caller; the pool
+    /// stays usable. Not reentrant (a job must not call `run`).
+    pub(crate) fn run(&self, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads.is_empty() || n_jobs <= 1 {
+            for i in 0..n_jobs {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the erased borrow is published to workers only for the
+        // duration of this call — the barrier below does not return
+        // until `done_jobs == n_jobs`, and the lane that finishes the
+        // last job clears the task slot before signaling, so no worker
+        // can hold or re-dispense the pointer once `run` returns.
+        let task = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), Task>(f) };
+        {
+            let mut slot = self.shared.slot.lock().expect("phase-pool lock");
+            debug_assert!(slot.task.is_none(), "PhasePool::run is not reentrant");
+            slot.task = Some(task);
+            slot.n_jobs = n_jobs;
+            slot.next = 0;
+            slot.done_jobs = 0;
+            slot.panic = None;
+        }
+        self.shared.go.notify_all();
+
+        // The caller is a lane too: help drain, then wait out the tail.
+        let mut slot = self.shared.slot.lock().expect("phase-pool lock");
+        loop {
+            if slot.next < slot.n_jobs {
+                let i = slot.next;
+                slot.next += 1;
+                drop(slot);
+                let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+                slot = self.shared.slot.lock().expect("phase-pool lock");
+                finish_job(&self.shared, &mut slot, r);
+            } else if slot.done_jobs < slot.n_jobs {
+                slot = self.shared.done.wait(slot).expect("phase-pool lock");
+            } else {
+                break;
+            }
+        }
+        let payload = slot.panic.take();
+        drop(slot);
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Run `f` once per item, slabbing `items` near-evenly across the
+    /// lanes (the same split the old per-phase `par_each` used, so slab
+    /// shapes — and with them, nothing observable — are unchanged).
+    pub(crate) fn each<T: Send>(&self, items: &mut [T], f: impl Fn(&mut T) + Sync) {
+        let per = items.len().div_ceil(self.lanes()).max(1);
+        if self.threads.is_empty() || items.len() <= 1 || per >= items.len() {
+            for it in items {
+                f(it);
+            }
+            return;
+        }
+        let slabs: Vec<Mutex<&mut [T]>> = items.chunks_mut(per).map(Mutex::new).collect();
+        self.run(slabs.len(), &|i| {
+            let mut slab = slabs[i].lock().expect("slab slot");
+            for it in slab.iter_mut() {
+                f(it);
+            }
+        });
+    }
+}
+
+impl Drop for PhasePool {
+    fn drop(&mut self) {
+        self.shared.slot.lock().expect("phase-pool lock").shutdown = true;
+        self.shared.go.notify_all();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Mark one job finished; the lane that completes the phase clears the
+/// task slot (ending the erased borrow) and wakes the barrier.
+fn finish_job(shared: &Shared, slot: &mut Slot, r: std::thread::Result<()>) {
+    if let Err(payload) = r {
+        if slot.panic.is_none() {
+            slot.panic = Some(payload);
+        }
+    }
+    slot.done_jobs += 1;
+    if slot.done_jobs == slot.n_jobs {
+        slot.task = None;
+        shared.done.notify_all();
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut slot = shared.slot.lock().expect("phase-pool lock");
+    loop {
+        if slot.shutdown {
+            return;
+        }
+        let job = match slot.task {
+            Some(task) if slot.next < slot.n_jobs => {
+                let i = slot.next;
+                slot.next += 1;
+                Some((task, i))
+            }
+            _ => None,
+        };
+        match job {
+            Some((task, i)) => {
+                drop(slot);
+                let r = catch_unwind(AssertUnwindSafe(|| task(i)));
+                slot = shared.slot.lock().expect("phase-pool lock");
+                finish_job(&shared, &mut slot, r);
+            }
+            None => slot = shared.go.wait(slot).expect("phase-pool lock"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vae::NativeVae;
+    use crate::model::{Likelihood, ModelMeta};
+    use crate::util::rng::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_index_exactly_once_across_reuse() {
+        let pool = PhasePool::new(4);
+        for round in 0..3 {
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} job {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn each_visits_every_item_at_every_width() {
+        for workers in [1usize, 2, 3, 8] {
+            let pool = PhasePool::new(workers);
+            let mut items: Vec<u64> = (0..17).collect();
+            pool.each(&mut items, |v| *v += 100);
+            assert_eq!(items, (100..117).collect::<Vec<u64>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = PhasePool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool must stay usable for the next phase.
+        let n = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn pooled_nn_dispatches_match_serial_bitwise() {
+        let meta = ModelMeta {
+            name: "x".into(),
+            pixels: 24,
+            latent_dim: 5,
+            hidden: 9,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let vae = NativeVae::random(meta, 11);
+        let mut rng = Rng::new(7);
+        let xs = Matrix::new(13, 24, (0..13 * 24).map(|_| rng.f64() as f32).collect());
+        let ys = Matrix::new(13, 5, (0..13 * 5).map(|_| rng.f64() as f32 - 0.5).collect());
+        let serial = SerialExecutor { backend: &vae };
+        let want_post = serial.nn_posterior(&xs).unwrap();
+        let want_like = serial.nn_likelihood(&ys).unwrap();
+        for workers in [1usize, 2, 5] {
+            let pool = PhasePool::new(workers);
+            let exec = PooledExecutor {
+                backend: &vae,
+                pool: &pool,
+            };
+            let got = exec.nn_posterior(&xs).unwrap();
+            assert_eq!(got.mu.data, want_post.mu.data, "workers={workers}");
+            assert_eq!(got.sigma.data, want_post.sigma.data, "workers={workers}");
+            let got = exec.nn_likelihood(&ys).unwrap();
+            assert_eq!(got.len(), want_like.len());
+            for (g, w) in got.iter().zip(&want_like) {
+                match (g, w) {
+                    (PixelParams::Bernoulli(a), PixelParams::Bernoulli(b)) => assert_eq!(a, b),
+                    other => panic!("unexpected params {other:?}"),
+                }
+            }
+        }
+    }
+}

@@ -86,8 +86,22 @@ pub struct Metrics {
     pub nn_calls: AtomicU64,
     pub nn_items: AtomicU64,
     pub errors: AtomicU64,
+    /// Jobs refused at admission because the bounded queue was full.
+    pub rejected: AtomicU64,
+    /// Malformed frames seen by the server's connection handlers.
+    pub protocol_errors: AtomicU64,
+    /// Lock-step batch rounds the worker has run.
+    pub rounds: AtomicU64,
+    /// Gauge: jobs admitted but not yet drained into a round.
+    pub queue_depth: AtomicU64,
     pub batch_latency: Histogram,
     pub request_latency: Histogram,
+    /// Admission-to-drain wait per job (the queueing half of latency).
+    pub queue_wait: Histogram,
+    /// Per-phase NN dispatch time inside a round.
+    pub phase_nn: Histogram,
+    /// Per-phase ANS (per-stream coder) time inside a round.
+    pub phase_ans: Histogram,
 }
 
 impl Metrics {
@@ -97,6 +111,12 @@ impl Metrics {
 
     pub fn inc(counter: &AtomicU64, by: u64) {
         counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Decrement a gauge (saturating in practice: pair every `dec` with
+    /// an earlier `inc` on the same gauge).
+    pub fn dec(gauge: &AtomicU64, by: u64) {
+        gauge.fetch_sub(by, Ordering::Relaxed);
     }
 
     /// Mean images per NN dispatch — the batching win (1.0 = no batching).
@@ -143,8 +163,27 @@ impl Metrics {
                 "errors",
                 Json::Num(self.errors.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "rejected",
+                Json::Num(self.rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "protocol_errors",
+                Json::Num(self.protocol_errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rounds",
+                Json::Num(self.rounds.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "queue_depth",
+                Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
             ("batch_latency", self.batch_latency.to_json()),
             ("request_latency", self.request_latency.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("phase_nn", self.phase_nn.to_json()),
+            ("phase_ans", self.phase_ans.to_json()),
         ])
     }
 }
@@ -173,8 +212,14 @@ mod tests {
         Metrics::inc(&m.nn_calls, 2);
         Metrics::inc(&m.nn_items, 20);
         m.request_latency.observe(Duration::from_millis(5));
+        Metrics::inc(&m.queue_depth, 5);
+        Metrics::dec(&m.queue_depth, 3);
+        m.queue_wait.observe(Duration::from_micros(40));
         let j = m.snapshot_json();
         assert_eq!(j.get("requests").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("queue_depth").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("rejected").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("protocol_errors").unwrap().as_u64(), Some(0));
         assert!((j.get("mean_batch_size").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
         // Round-trips through the serializer.
         let text = j.to_string();

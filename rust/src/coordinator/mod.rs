@@ -2,7 +2,11 @@
 //!
 //! * [`batcher`] — the model-worker thread + dynamic batcher: NN work from
 //!   concurrent compression/decompression streams is batched into shared
-//!   PJRT dispatches (paper §4.2's parallelization argument, realized);
+//!   PJRT dispatches (paper §4.2's parallelization argument, realized),
+//!   behind a bounded admission queue with deadline-based flushing;
+//! * [`executor`] — the phase executor the batch loops are generic over:
+//!   serial (one exclusive backend) or pooled (persistent worker pool
+//!   sharding NN rows and per-stream coder work);
 //! * [`server`] — framed-TCP front end feeding the batcher;
 //! * [`protocol`] — the wire format;
 //! * [`metrics`] — counters + latency histograms exported as JSON.
@@ -12,9 +16,11 @@
 //! need an async reactor).
 
 pub mod batcher;
+pub mod executor;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 
 pub use batcher::{ModelService, ServiceHandle, ServiceParams, SharedBackend};
+pub use protocol::HierSpec;
 pub use server::{Client, Server};

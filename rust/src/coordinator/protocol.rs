@@ -2,11 +2,55 @@
 //! TCP (or any `Read`/`Write` pair — tests use in-memory buffers).
 //!
 //! Frame layout: `u32 LE total payload length | u8 frame type | payload`.
+//!
+//! | type | frame              | payload                                        |
+//! |------|--------------------|------------------------------------------------|
+//! | 0x01 | `CompressReq`      | model-name len u8, name, pixels u32, n u32, images |
+//! | 0x02 | `DecompressReq`    | container bytes                                |
+//! | 0x03 | `StatsReq`         | —                                              |
+//! | 0x04 | `Shutdown`         | —                                              |
+//! | 0x05 | `CompressHierReq`  | hier spec (see below), pixels u32, n u32, images |
+//! | 0x81 | `CompressResp`     | container bytes                                |
+//! | 0x82 | `DecompressResp`   | pixels u32, n u32, images                      |
+//! | 0x83 | `StatsResp`        | JSON text                                      |
+//! | 0x7f | `Error`            | UTF-8 message                                  |
+//!
+//! Every multi-byte integer is little-endian. Image grids (`n` images of
+//! `pixels` bytes each) are validated against the same untrusted-input
+//! budget the BBC1/2/3 container headers use *before* any allocation is
+//! sized from them — see [`read_image_grid`].
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
+use crate::bbans::container::check_decode_budget;
+use crate::bbans::hierarchy::Schedule;
+use crate::model::Likelihood;
+
 pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// Ceiling on the chunk count a hier request may ask for (matches the
+/// most chunks any real dataset split would use; a chunk is ≥1 image so
+/// the image budget bounds it anyway — this just fails fast).
+const MAX_HIER_CHUNKS: u32 = 1 << 16;
+
+/// Self-describing spec of a hierarchical (BBC3) model, as carried by
+/// [`Frame::CompressHierReq`]: everything the service needs to rebuild
+/// the seeded [`crate::model::hierarchy::HierVae`] and encode — the same
+/// fields the BBC3 container header records, so the response container
+/// is decodable by any decoder without side channels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierSpec {
+    pub schedule: Schedule,
+    pub likelihood: Likelihood,
+    /// Latent width per layer, bottom-up (`dims.len()` = layer count).
+    pub dims: Vec<u32>,
+    pub hidden: u32,
+    /// Weight seed (nonzero; 0 is reserved for artifact-backed models).
+    pub seed: u64,
+    /// Independent BB-ANS chains to split the images into.
+    pub chunks: u32,
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -21,11 +65,37 @@ pub enum Frame {
     /// Decompress a container blob.
     DecompressReq { container: Vec<u8> },
     DecompressResp { pixels: u32, images: Vec<Vec<u8>> },
+    /// Compress `images` with a freshly seeded hierarchical model (BBC3).
+    CompressHierReq {
+        spec: HierSpec,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+    },
     StatsReq,
     /// JSON metrics snapshot.
     StatsResp { json: String },
     Error { message: String },
     Shutdown,
+}
+
+/// Parse `n` images of `pixels` bytes each out of `body`, applying the
+/// untrusted-input budget the container headers use. Rejects the
+/// zero-pixel grid outright: `pixels == 0 && n > 0` used to satisfy the
+/// `body.len() == n * pixels` check as `0 == 0` and let a 13-byte frame
+/// demand 2^32 `Vec` allocations.
+fn read_image_grid(pixels: u32, n: u32, body: &[u8], what: &str) -> Result<Vec<Vec<u8>>> {
+    if pixels == 0 && n != 0 {
+        bail!("{what} claims {n} zero-pixel images");
+    }
+    check_decode_budget(n as u64, pixels as u64).map_err(|e| anyhow!("{what}: {e}"))?;
+    let px = pixels as usize;
+    // Budget passed, so `n * px` cannot overflow usize (≤ 2^32).
+    if body.len() != n as usize * px {
+        bail!("{what} body size mismatch");
+    }
+    Ok((0..n as usize)
+        .map(|i| body[i * px..(i + 1) * px].to_vec())
+        .collect())
 }
 
 impl Frame {
@@ -35,6 +105,7 @@ impl Frame {
             Frame::DecompressReq { .. } => 0x02,
             Frame::StatsReq => 0x03,
             Frame::Shutdown => 0x04,
+            Frame::CompressHierReq { .. } => 0x05,
             Frame::CompressResp { .. } => 0x81,
             Frame::DecompressResp { .. } => 0x82,
             Frame::StatsResp { .. } => 0x83,
@@ -70,6 +141,29 @@ impl Frame {
                     payload.extend_from_slice(img);
                 }
             }
+            Frame::CompressHierReq {
+                spec,
+                pixels,
+                images,
+            } => {
+                payload.push(spec.schedule.tag());
+                payload.push(spec.likelihood.tag());
+                payload.push(spec.dims.len() as u8);
+                payload.extend_from_slice(&spec.chunks.to_le_bytes());
+                payload.extend_from_slice(&spec.hidden.to_le_bytes());
+                payload.extend_from_slice(&spec.seed.to_le_bytes());
+                payload.extend_from_slice(&pixels.to_le_bytes());
+                payload.extend_from_slice(&(images.len() as u32).to_le_bytes());
+                for &d in &spec.dims {
+                    payload.extend_from_slice(&d.to_le_bytes());
+                }
+                for img in images {
+                    if img.len() != *pixels as usize {
+                        bail!("image length mismatch");
+                    }
+                    payload.extend_from_slice(img);
+                }
+            }
             Frame::StatsReq | Frame::Shutdown => {}
             Frame::StatsResp { json } => payload.extend_from_slice(json.as_bytes()),
             Frame::Error { message } => payload.extend_from_slice(message.as_bytes()),
@@ -82,17 +176,14 @@ impl Frame {
         Ok(())
     }
 
-    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
-        let mut len4 = [0u8; 4];
-        r.read_exact(&mut len4).context("frame length")?;
-        let total = u32::from_le_bytes(len4) as usize;
-        if total == 0 || total > MAX_FRAME {
-            bail!("bad frame length {total}");
-        }
-        let mut buf = vec![0u8; total];
-        r.read_exact(&mut buf).context("frame body")?;
-        let ty = buf[0];
-        let p = &buf[1..];
+    /// Parse one frame from `body` — the type byte plus payload, i.e. a
+    /// frame minus its length prefix. The server reads the prefix itself
+    /// (interruptibly, so shutdown can cut idle reads short);
+    /// [`Frame::read_from`] wraps this for plain blocking readers.
+    pub fn parse(body: &[u8]) -> Result<Frame> {
+        let Some((&ty, p)) = body.split_first() else {
+            bail!("empty frame");
+        };
         Ok(match ty {
             0x01 => {
                 if p.is_empty() {
@@ -105,15 +196,9 @@ impl Frame {
                 let model = std::str::from_utf8(&p[1..1 + mlen])
                     .context("model name")?
                     .to_string();
-                let pixels =
-                    u32::from_le_bytes(p[1 + mlen..5 + mlen].try_into().unwrap());
-                let n = u32::from_le_bytes(p[5 + mlen..9 + mlen].try_into().unwrap()) as usize;
-                let body = &p[9 + mlen..];
-                let px = pixels as usize;
-                if body.len() != n * px {
-                    bail!("CompressReq body size mismatch");
-                }
-                let images = (0..n).map(|i| body[i * px..(i + 1) * px].to_vec()).collect();
+                let pixels = u32::from_le_bytes(p[1 + mlen..5 + mlen].try_into().unwrap());
+                let n = u32::from_le_bytes(p[5 + mlen..9 + mlen].try_into().unwrap());
+                let images = read_image_grid(pixels, n, &p[9 + mlen..], "CompressReq")?;
                 Frame::CompressReq {
                     model,
                     pixels,
@@ -125,21 +210,68 @@ impl Frame {
             },
             0x03 => Frame::StatsReq,
             0x04 => Frame::Shutdown,
+            0x05 => {
+                // schedule u8 | likelihood u8 | layers u8 | chunks u32 |
+                // hidden u32 | seed u64 | pixels u32 | n u32 = 27 bytes.
+                if p.len() < 27 {
+                    bail!("short CompressHierReq header");
+                }
+                let schedule = Schedule::from_tag(p[0])?;
+                let likelihood = Likelihood::from_tag(p[1])?;
+                let layers = p[2] as usize;
+                if !(1..=8).contains(&layers) {
+                    bail!("CompressHierReq layer count {layers} out of range 1..=8");
+                }
+                let chunks = u32::from_le_bytes(p[3..7].try_into().unwrap());
+                if chunks == 0 || chunks > MAX_HIER_CHUNKS {
+                    bail!("CompressHierReq chunk count {chunks} out of range");
+                }
+                let hidden = u32::from_le_bytes(p[7..11].try_into().unwrap());
+                if hidden == 0 || hidden > 1 << 20 {
+                    bail!("CompressHierReq hidden width {hidden} out of range");
+                }
+                let seed = u64::from_le_bytes(p[11..19].try_into().unwrap());
+                if seed == 0 {
+                    bail!("CompressHierReq weight seed must be nonzero");
+                }
+                let pixels = u32::from_le_bytes(p[19..23].try_into().unwrap());
+                let n = u32::from_le_bytes(p[23..27].try_into().unwrap());
+                let dims_end = 27 + 4 * layers;
+                if p.len() < dims_end {
+                    bail!("short CompressHierReq dims");
+                }
+                let dims: Vec<u32> = (0..layers)
+                    .map(|l| u32::from_le_bytes(p[27 + 4 * l..31 + 4 * l].try_into().unwrap()))
+                    .collect();
+                if dims.iter().any(|&d| d == 0 || d > 1 << 16) {
+                    bail!("CompressHierReq layer dims must be in 1..=65536");
+                }
+                let images = read_image_grid(pixels, n, &p[dims_end..], "CompressHierReq")?;
+                Frame::CompressHierReq {
+                    spec: HierSpec {
+                        schedule,
+                        likelihood,
+                        dims,
+                        hidden,
+                        seed,
+                        chunks,
+                    },
+                    pixels,
+                    images,
+                }
+            }
             0x81 => Frame::CompressResp {
                 container: p.to_vec(),
             },
             0x82 => {
+                // Same grid validation as 0x01 — this direction had the
+                // identical zero-pixel hole.
                 if p.len() < 8 {
                     bail!("short DecompressResp");
                 }
                 let pixels = u32::from_le_bytes(p[0..4].try_into().unwrap());
-                let n = u32::from_le_bytes(p[4..8].try_into().unwrap()) as usize;
-                let body = &p[8..];
-                let px = pixels as usize;
-                if body.len() != n * px {
-                    bail!("DecompressResp body size mismatch");
-                }
-                let images = (0..n).map(|i| body[i * px..(i + 1) * px].to_vec()).collect();
+                let n = u32::from_le_bytes(p[4..8].try_into().unwrap());
+                let images = read_image_grid(pixels, n, &p[8..], "DecompressResp")?;
                 Frame::DecompressResp { pixels, images }
             }
             0x83 => Frame::StatsResp {
@@ -151,11 +283,24 @@ impl Frame {
             other => bail!("unknown frame type {other:#x}"),
         })
     }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).context("frame length")?;
+        let total = u32::from_le_bytes(len4) as usize;
+        if total == 0 || total > MAX_FRAME {
+            bail!("bad frame length {total}");
+        }
+        let mut buf = vec![0u8; total];
+        r.read_exact(&mut buf).context("frame body")?;
+        Frame::parse(&buf)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn roundtrip(f: Frame) {
         let mut buf = Vec::new();
@@ -163,6 +308,21 @@ mod tests {
         let mut r = &buf[..];
         let g = Frame::read_from(&mut r).unwrap();
         assert_eq!(f, g);
+    }
+
+    fn hier_frame() -> Frame {
+        Frame::CompressHierReq {
+            spec: HierSpec {
+                schedule: Schedule::BitSwap,
+                likelihood: Likelihood::Bernoulli,
+                dims: vec![6, 4],
+                hidden: 10,
+                seed: 99,
+                chunks: 3,
+            },
+            pixels: 4,
+            images: vec![vec![0, 1, 1, 0], vec![1, 0, 0, 1]],
+        }
     }
 
     #[test]
@@ -182,6 +342,7 @@ mod tests {
             pixels: 2,
             images: vec![vec![0, 1]],
         });
+        roundtrip(hier_frame());
         roundtrip(Frame::StatsReq);
         roundtrip(Frame::StatsResp {
             json: "{\"x\":1}".into(),
@@ -218,5 +379,100 @@ mod tests {
         bad[n - 5] ^= 1; // tamper with count
         let mut r = &bad[..];
         assert!(Frame::read_from(&mut r).is_err());
+    }
+
+    /// Hand-build a frame around a raw payload (type byte included by the
+    /// caller) so tests can express grids `write_to` refuses to emit.
+    fn raw_frame(ty: u8, payload: &[u8]) -> Vec<u8> {
+        let mut frame = Vec::with_capacity(5 + payload.len());
+        frame.extend_from_slice(&((payload.len() + 1) as u32).to_le_bytes());
+        frame.push(ty);
+        frame.extend_from_slice(payload);
+        frame
+    }
+
+    /// Regression: `CompressReq { pixels: 0, n: u32::MAX }` used to pass
+    /// the `body.len() == n * px` check as `0 == 0` and allocate 2^32
+    /// empty `Vec`s. The same hole existed in `DecompressResp`.
+    #[test]
+    fn rejects_zero_pixel_image_flood() {
+        let mut p = vec![3u8];
+        p.extend_from_slice(b"toy");
+        p.extend_from_slice(&0u32.to_le_bytes()); // pixels = 0
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // n = 2^32 - 1
+        let mut r = &raw_frame(0x01, &p)[..];
+        let err = Frame::read_from(&mut r).unwrap_err();
+        assert!(err.to_string().contains("zero-pixel"), "{err}");
+
+        let mut p = Vec::new();
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = &raw_frame(0x82, &p)[..];
+        let err = Frame::read_from(&mut r).unwrap_err();
+        assert!(err.to_string().contains("zero-pixel"), "{err}");
+    }
+
+    /// Image grids are held to the container untrusted-input budget —
+    /// an implausible `n`/`pixels` product errors before any sizing.
+    #[test]
+    fn rejects_budget_busting_image_grids() {
+        // n beyond MAX_IMAGES at 1 pixel each.
+        let mut p = vec![1u8, b'm'];
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&((1u32 << 24) + 1).to_le_bytes());
+        let mut r = &raw_frame(0x01, &p)[..];
+        let err = Frame::read_from(&mut r).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err}");
+
+        // n * pixels beyond the total-pixel budget.
+        let mut p = vec![1u8, b'm'];
+        p.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        p.extend_from_slice(&(1u32 << 16).to_le_bytes());
+        let mut r = &raw_frame(0x01, &p)[..];
+        let err = Frame::read_from(&mut r).unwrap_err();
+        assert!(err.to_string().contains("pixels"), "{err}");
+    }
+
+    /// Adversarial sweep: random frames, every truncation of a valid
+    /// frame, and an oversized length prefix must all return `Err` (or a
+    /// harmless parse) without panicking or over-allocating.
+    #[test]
+    fn fuzzed_frames_never_panic() {
+        let mut rng = Rng::new(0xF0_22);
+        for _ in 0..2000 {
+            let len = rng.below(64) as usize + 1;
+            let mut frame = (len as u32).to_le_bytes().to_vec();
+            for _ in 0..len {
+                frame.push(rng.below(256) as u8);
+            }
+            let mut r = &frame[..];
+            let _ = Frame::read_from(&mut r); // Ok or Err, never panic
+        }
+
+        // Every truncation of a valid multi-section frame errors cleanly.
+        let mut buf = Vec::new();
+        hier_frame().write_to(&mut buf).unwrap();
+        for cut in 0..buf.len() {
+            let mut r = &buf[..cut];
+            assert!(Frame::read_from(&mut r).is_err(), "cut={cut}");
+        }
+
+        // Oversized length prefix is rejected before allocating.
+        let mut r: &[u8] = &[0xff, 0xff, 0xff, 0xff, 0x01];
+        assert!(Frame::read_from(&mut r).is_err());
+
+        // Hier header validations: bad tags and zero fields all error.
+        let good = {
+            let mut buf = Vec::new();
+            hier_frame().write_to(&mut buf).unwrap();
+            buf[4..].to_vec() // type byte + payload
+        };
+        // (offset, value): bad schedule tag, bad likelihood tag, layer
+        // count 0, layer count > 8.
+        for (off, val) in [(1usize, 9u8), (2, 9), (3, 0), (3, 9)] {
+            let mut b = good.clone();
+            b[off] = val;
+            assert!(Frame::parse(&b).is_err(), "off={off} val={val}");
+        }
     }
 }

@@ -4,23 +4,38 @@
 //! interesting concurrency is inside the model worker's batcher, not the
 //! socket layer). All connections feed the shared [`ServiceHandle`], so
 //! concurrent clients' NN work batches together.
+//!
+//! Connection reads use a short [`READ_TIMEOUT`] so every handler notices
+//! the server's stop flag promptly even against an idle peer; that lets
+//! [`Server::stop`] join connection threads instead of leaking them.
+//! Handlers also distinguish a clean EOF at a frame boundary (normal
+//! close) from a malformed or truncated frame, which is answered with
+//! [`Frame::Error`], counted in `protocol_errors`, and followed by a
+//! close — framing is unrecoverable once the byte stream desyncs.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{self, BufReader, BufWriter, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::batcher::ServiceHandle;
-use super::protocol::Frame;
+use super::metrics::Metrics;
+use super::protocol::{Frame, HierSpec, MAX_FRAME};
 
-/// A running server (owns the acceptor thread).
+/// Poll granularity for connection reads: how long a blocked read waits
+/// before re-checking the stop flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// A running server (owns the acceptor and all connection threads).
 pub struct Server {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Server {
@@ -29,25 +44,30 @@ impl Server {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
         let acceptor = std::thread::Builder::new()
             .name("bbans-acceptor".into())
             .spawn(move || {
                 // Nonblocking accept loop so `stop` is honoured promptly.
-                // Connection threads are detached: they exit when the peer
-                // closes (joining them here would deadlock `stop()` against
-                // clients that keep their connection open).
                 listener.set_nonblocking(true).ok();
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let svc = service.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, svc);
+                            let conn_stop = stop2.clone();
+                            let handle = std::thread::spawn(move || {
+                                let _ = handle_conn(stream, svc, conn_stop);
                             });
+                            let mut guard = conns2.lock().expect("conns lock");
+                            // Reap finished handlers so the vec stays
+                            // bounded under connection churn.
+                            guard.retain(|h| !h.is_finished());
+                            guard.push(handle);
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
@@ -57,12 +77,24 @@ impl Server {
             addr,
             stop,
             acceptor: Some(acceptor),
+            conns,
         })
     }
 
+    /// Stop accepting, then join the acceptor and every connection
+    /// thread. Handlers poll the stop flag between reads, so this returns
+    /// once in-flight requests drain — no threads are leaked.
     pub fn stop(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().expect("conns lock"));
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -70,24 +102,113 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
-        }
+        self.shutdown_impl();
     }
 }
 
-fn handle_conn(stream: TcpStream, svc: ServiceHandle) -> Result<()> {
+/// How a completed full read ended.
+enum Status {
+    Done,
+    /// Clean close before the first byte of the buffer.
+    Eof,
+    /// The server's stop flag was raised while waiting.
+    Stopped,
+}
+
+/// Outcome of one framed read.
+enum ReadOutcome {
+    Frame(Frame),
+    Eof,
+    Stopped,
+}
+
+/// `WouldBlock` on Unix, `TimedOut` on Windows: both mean the read timer
+/// fired with no data.
+fn is_read_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` completely, polling `stop` whenever the read times out. A
+/// close before any byte arrives is `Status::Eof`; a close mid-buffer is
+/// an `UnexpectedEof` error (the peer truncated whatever it was sending).
+fn read_full(r: &mut impl Read, buf: &mut [u8], stop: &AtomicBool) -> io::Result<Status> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(Status::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("peer closed after {filled} of {} bytes", buf.len()),
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_read_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(Status::Stopped);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Status::Done)
+}
+
+/// Read one length-prefixed frame, honouring `stop`. EOF at a frame
+/// boundary is a clean close; anywhere else it is a protocol error.
+fn read_frame(r: &mut impl Read, stop: &AtomicBool) -> Result<ReadOutcome> {
+    let mut len4 = [0u8; 4];
+    match read_full(r, &mut len4, stop).context("frame length")? {
+        Status::Eof => return Ok(ReadOutcome::Eof),
+        Status::Stopped => return Ok(ReadOutcome::Stopped),
+        Status::Done => {}
+    }
+    let total = u32::from_le_bytes(len4) as usize;
+    if total == 0 || total > MAX_FRAME {
+        bail!("bad frame length {total}");
+    }
+    let mut buf = vec![0u8; total];
+    match read_full(r, &mut buf, stop).context("frame body")? {
+        Status::Eof => bail!("connection closed mid-frame"),
+        Status::Stopped => return Ok(ReadOutcome::Stopped),
+        Status::Done => {}
+    }
+    Ok(ReadOutcome::Frame(Frame::parse(&buf)?))
+}
+
+fn handle_conn(stream: TcpStream, svc: ServiceHandle, stop: Arc<AtomicBool>) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Short read timeout: the handler polls the stop flag between reads,
+    // so `Server::stop` can join this thread even while the peer idles.
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
-        let frame = match Frame::read_from(&mut reader) {
-            Ok(f) => f,
-            Err(_) => return Ok(()), // peer closed
+        let frame = match read_frame(&mut reader, &stop) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::Stopped) => return Ok(()),
+            Err(e) => {
+                // Malformed or truncated frame: tell the peer why, count
+                // it, and drop the connection.
+                Metrics::inc(&svc.metrics.protocol_errors, 1);
+                let reply = Frame::Error {
+                    message: format!("protocol error: {e:#}"),
+                };
+                let _ = reply.write_to(&mut writer);
+                return Ok(());
+            }
         };
         let resp = match frame {
             Frame::CompressReq { model, images, .. } => match svc.compress(&model, images) {
+                Ok(container) => Frame::CompressResp { container },
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            },
+            Frame::CompressHierReq { spec, images, .. } => match svc.compress_hier(spec, images) {
                 Ok(container) => Frame::CompressResp { container },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
@@ -145,6 +266,24 @@ impl Client {
     pub fn compress(&mut self, model: &str, pixels: u32, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
         match self.call(Frame::CompressReq {
             model: model.to_string(),
+            pixels,
+            images,
+        })? {
+            Frame::CompressResp { container } => Ok(container),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Compress with a freshly seeded hierarchical (BBC3) model described
+    /// entirely by `spec` — no pre-registered model name needed.
+    pub fn compress_hier(
+        &mut self,
+        spec: HierSpec,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+    ) -> Result<Vec<u8>> {
+        match self.call(Frame::CompressHierReq {
+            spec,
             pixels,
             images,
         })? {

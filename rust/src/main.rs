@@ -4,7 +4,8 @@
 //!   info                         show artifact/model info
 //!   compress   -m MODEL -i IDX -o FILE [-n N] [--native] [--latent-bits B]
 //!   decompress -i FILE -o IDX [--native]
-//!   serve      [--bind ADDR] [--native] [--max-jobs J] [--window-ms W] [--fanout-workers W]
+//!   serve      [--bind ADDR] [--native] [--max-jobs J] [--max-batch-delay-ms D]
+//!              [--queue-cap Q] [--fanout-workers W]
 //!   client     --addr ADDR --stats
 //!
 //! Arg parsing is hand-rolled (clap is unavailable offline).
@@ -84,8 +85,8 @@ fn usage() -> ! {
                           [--hier-dims 32,16,8] [--hier-hidden H] [--hier-seed S]\n\
                           [--binarized] [--chunks K]\n\
          bbans decompress -i in.bbc -o out.idx [--native]\n\
-         bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16] [--window-ms 2]\n\
-                          [--fanout-workers W]\n\
+         bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16]\n\
+                          [--max-batch-delay-ms 2] [--queue-cap 256] [--fanout-workers W]\n\
          bbans client     --addr HOST:PORT --stats\n\
          \n\
          --chunks K > 1 encodes K independent chains on K threads (native\n\
@@ -127,12 +128,20 @@ fn service(args: &Args) -> ModelService {
             .get("max-jobs")
             .and_then(|v| v.parse().ok())
             .unwrap_or(16),
-        batch_window: std::time::Duration::from_millis(
+        // `--window-ms` is the pre-admission-rework spelling; keep it as
+        // a fallback alias so existing invocations stay valid.
+        max_batch_delay: std::time::Duration::from_millis(
             args.flags
-                .get("window-ms")
+                .get("max-batch-delay-ms")
+                .or_else(|| args.flags.get("window-ms"))
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(2),
         ),
+        queue_cap: args
+            .flags
+            .get("queue-cap")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(256),
         bbans: bbans_config(args),
         fanout_workers: args
             .flags

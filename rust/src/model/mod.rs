@@ -202,11 +202,11 @@ pub trait Backend {
 /// Near-even contiguous split of `rows` into at most `parts` non-empty
 /// row ranges — the shared [`crate::util::chunk_ranges`] partition, so
 /// batch sharding and chunked coding agree on one split semantics.
-fn row_shards(rows: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+pub(crate) fn row_shards(rows: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
     crate::util::chunk_ranges(rows, parts)
 }
 
-fn shard_matrix(m: &Matrix, r: &std::ops::Range<usize>) -> Matrix {
+pub(crate) fn shard_matrix(m: &Matrix, r: &std::ops::Range<usize>) -> Matrix {
     Matrix::new(
         r.len(),
         m.cols,

@@ -1,33 +1,78 @@
 //! End-to-end server tests: framed TCP → batcher → BB-ANS → back.
 //! Runs against a NativeVae::random toy model (no artifacts needed);
 //! artifact-backed serving is exercised by `examples/serve_demo.rs`.
+//!
+//! Every test arms a [`Watchdog`] so a shutdown/join regression aborts
+//! the process instead of hanging `cargo test` until the CI timeout.
 
 use std::collections::HashMap;
-use std::time::Duration;
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use bbans::bbans::container::HierContainer;
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
+use bbans::bbans::BbAnsConfig;
+use bbans::coordinator::protocol::{Frame, HierSpec};
 use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::rng::Rng;
+
+/// Aborts the process if still armed after `secs` — a hung join is a bug
+/// this suite exists to catch, and a hang would otherwise mask it.
+struct Watchdog {
+    armed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn new(secs: u64) -> Watchdog {
+        let armed = Arc::new(AtomicBool::new(true));
+        let a = armed.clone();
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(secs);
+            while Instant::now() < deadline {
+                if !a.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            eprintln!("server_e2e watchdog expired after {secs}s — aborting");
+            std::process::abort();
+        });
+        Watchdog { armed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+}
+
+fn toy_map() -> HashMap<String, Box<dyn Backend>> {
+    let meta = ModelMeta {
+        name: "toy".into(),
+        pixels: 64,
+        latent_dim: 8,
+        hidden: 16,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    };
+    let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+    map.insert("toy".into(), Box::new(NativeVae::random(meta, 2024)));
+    map
+}
 
 fn toy_service() -> ModelService {
     let params = ServiceParams {
         max_jobs: 8,
-        batch_window: Duration::from_millis(10),
+        max_batch_delay: Duration::from_millis(10),
         ..Default::default()
     };
-    ModelService::spawn_with(params, || {
-        let meta = ModelMeta {
-            name: "toy".into(),
-            pixels: 64,
-            latent_dim: 8,
-            hidden: 16,
-            likelihood: Likelihood::Bernoulli,
-            test_elbo_bpd: f64::NAN,
-        };
-        let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
-        map.insert("toy".into(), Box::new(NativeVae::random(meta, 2024)));
-        Ok(map)
-    })
+    ModelService::spawn_with(params, || Ok(toy_map()))
 }
 
 fn sample_images(n: usize, seed: u64) -> Vec<Vec<u8>> {
@@ -39,6 +84,7 @@ fn sample_images(n: usize, seed: u64) -> Vec<Vec<u8>> {
 
 #[test]
 fn tcp_compress_decompress_roundtrip() {
+    let _wd = Watchdog::new(120);
     let svc = toy_service();
     let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
     let addr = server.addr;
@@ -61,6 +107,7 @@ fn tcp_compress_decompress_roundtrip() {
 
 #[test]
 fn many_concurrent_clients_roundtrip_and_batch() {
+    let _wd = Watchdog::new(120);
     let svc = toy_service();
     let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
     let addr = server.addr;
@@ -88,6 +135,7 @@ fn many_concurrent_clients_roundtrip_and_batch() {
 
 #[test]
 fn server_reports_errors_cleanly() {
+    let _wd = Watchdog::new(120);
     let svc = toy_service();
     let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
     let mut client = Client::connect(server.addr).unwrap();
@@ -106,6 +154,170 @@ fn server_reports_errors_cleanly() {
     let images = sample_images(2, 2);
     let c = client.compress("toy", 64, images.clone()).unwrap();
     assert_eq!(client.decompress(c).unwrap(), images);
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn stop_joins_live_connections() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+
+    // A connection that stays open and idle across the shutdown.
+    let mut client = Client::connect(server.addr).unwrap();
+    client.stats().unwrap();
+
+    // `stop` must join the handler serving `client` (it polls the stop
+    // flag between reads) instead of leaking it and returning early.
+    server.stop();
+
+    // The handler exited and closed the socket, so the next call fails.
+    assert!(client.stats().is_err());
+    svc.shutdown();
+}
+
+fn raw_roundtrip(addr: SocketAddr, payload: &[u8]) -> Frame {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut msg = (payload.len() as u32).to_le_bytes().to_vec();
+    msg.extend_from_slice(payload);
+    s.write_all(&msg).unwrap();
+    s.flush().unwrap();
+    Frame::read_from(&mut s).unwrap()
+}
+
+fn assert_error_contains(f: &Frame, needle: &str) {
+    match f {
+        Frame::Error { message } => assert!(message.contains(needle), "{message}"),
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_get_error_reply_and_count() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    // Unknown frame type: answered with Error, not silently dropped.
+    let reply = raw_roundtrip(addr, &[0xee, 1, 2, 3]);
+    assert_error_contains(&reply, "protocol error");
+    assert_error_contains(&reply, "unknown frame type");
+
+    // Zero-pixel image grid: a 13-byte frame must not demand n image
+    // allocations (regression for the `pixels == 0, n > 0` admission bug).
+    let mut p = vec![0x01, 3];
+    p.extend_from_slice(b"toy");
+    p.extend_from_slice(&0u32.to_le_bytes());
+    p.extend_from_slice(&4u32.to_le_bytes());
+    let reply = raw_roundtrip(addr, &p);
+    assert_error_contains(&reply, "zero-pixel");
+
+    // Truncated frame: the length prefix promises more than the peer
+    // sends. Must be told apart from a clean close between frames.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&100u32.to_le_bytes()).unwrap();
+    s.write_all(&[0x01; 10]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    assert_error_contains(&reply, "peer closed");
+
+    assert_eq!(svc.metrics.protocol_errors.load(Ordering::Relaxed), 3);
+
+    // Clean closes (each `Client` drop above) were NOT counted as
+    // protocol errors, and a well-formed connection still works.
+    let mut client = Client::connect(addr).unwrap();
+    let images = sample_images(2, 3);
+    let c = client.compress("toy", 64, images.clone()).unwrap();
+    assert_eq!(client.decompress(c).unwrap(), images);
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn overload_rejected_over_tcp() {
+    let _wd = Watchdog::new(120);
+    // Gate the backend factory so the worker cannot drain the queue yet.
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let params = ServiceParams {
+        max_jobs: 8,
+        max_batch_delay: Duration::from_millis(1),
+        queue_cap: 1,
+        ..Default::default()
+    };
+    let svc = ModelService::spawn_with(params, move || {
+        gate_rx.recv().ok();
+        Ok(toy_map())
+    });
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    // The first request occupies the only queue slot.
+    let occupant = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("toy", 64, sample_images(2, 7))
+    });
+    while svc.metrics.queue_depth.load(Ordering::Relaxed) < 1 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Queue full → the next request is rejected at admission, over TCP,
+    // instead of stalling the connection.
+    let mut c2 = Client::connect(addr).unwrap();
+    let err = c2.compress("toy", 64, sample_images(2, 8)).unwrap_err();
+    assert!(err.to_string().contains("overloaded"), "{err}");
+    assert!(svc.metrics.rejected.load(Ordering::Relaxed) >= 1);
+
+    // Release the gate: the admitted request drains and succeeds.
+    gate_tx.send(()).unwrap();
+    let out = occupant.join().unwrap();
+    assert!(out.is_ok(), "{out:?}");
+
+    server.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn compress_hier_roundtrips_over_tcp() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let images = sample_images(6, 11);
+    let spec = HierSpec {
+        schedule: Schedule::BitSwap,
+        likelihood: Likelihood::Bernoulli,
+        dims: vec![6, 4],
+        hidden: 12,
+        seed: 4242,
+        chunks: 2,
+    };
+    let bytes = client.compress_hier(spec, 64, images.clone()).unwrap();
+
+    // Wire bytes match the offline encoder exactly: the serving path may
+    // not perturb the container format.
+    let meta = HierMeta {
+        name: "hier2".into(),
+        pixels: 64,
+        dims: vec![6, 4],
+        hidden: 12,
+        likelihood: Likelihood::Bernoulli,
+    };
+    let backend = HierVae::random(meta, 4242);
+    let codec = HierCodec::new(&backend, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+    let reference = HierContainer::encode_with_workers(&codec, &images, 2, 1)
+        .unwrap()
+        .to_bytes();
+    assert_eq!(bytes, reference);
+
+    // The same connection decodes it back (BBC3 is self-describing, so
+    // no pre-registered model is needed).
+    let out = client.decompress(bytes).unwrap();
+    assert_eq!(out, images);
 
     server.stop();
     svc.shutdown();
