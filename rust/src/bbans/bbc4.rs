@@ -1,0 +1,1129 @@
+//! BBC4 — the integrity-checked paged container format.
+//!
+//! BBC1–BBC3 squander the independence of their chunk chains for
+//! robustness: the ANS state carries no integrity signal (every bit
+//! pattern is a decodable state), so one flipped bit or truncated tail
+//! anywhere silently corrupts the *entire* dataset on decode. BBC4 spends
+//! a few bytes per page to fix that:
+//!
+//! * each chunk's ANS stream rides in a self-delimiting, CRC-32-checked
+//!   [`PageFrame`] (see [`crate::format`]), so corruption is **detected**
+//!   and **isolated to a page**;
+//! * a trailer carries a redundant page index (offset/length/CRC per
+//!   page, itself CRC-protected), so a reader can locate pages even when
+//!   the forward scan is interrupted — including pages whose resync magic
+//!   was itself damaged;
+//! * pages are independently seeded chains ([`chunk_seed`]), so every
+//!   intact page decodes **bit-exactly** no matter what happened to its
+//!   neighbours.
+//!
+//! [`Bbc4Container::from_bytes`] is the strict reader (fail fast on the
+//! first bad byte — the serving default); [`Bbc4Container::salvage`] is
+//! the recovery reader (skip damaged regions, keep everything provably
+//! intact, and say exactly what was lost in a [`RecoveryReport`]).
+//!
+//! File layout (all little-endian):
+//!
+//! ```text
+//! magic "BBC4" | version u8 | kind u8 (1 = VAE, 2 = hierarchical)
+//! latent_bits u8 | posterior_prec u8 | pixel_prec u8 | clean_seed u64
+//! pixels u32 | num_images u32 | n_pages u32
+//! kind VAE : model str | backend_id str
+//! kind hier: model str | backend_id str | schedule u8 | likelihood u8
+//!            hidden u32 | weight_seed u64 | n_layers u8 | dims u32 each
+//! header_crc u32                      (CRC-32 over all bytes above)
+//! n_pages page frames                 (see crate::format)
+//! trailer: INDEX_MAGIC | n_pages u32
+//!          per page: offset u64 | frame_len u32 | first_image u32
+//!                    | num_images u32 | page_crc u32
+//!          index_crc u32 | trailer_len u32
+//! ```
+//!
+//! Pages tile the dataset by the deterministic [`chunk_ranges`] split, and
+//! both readers enforce that tiling — a crafted page cannot claim an
+//! overlapping or out-of-place image range.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::container::{
+    check_decode_budget, chunk_seed, push_str, read_str, ChunkEntry, HierContainer,
+};
+use super::hierarchy::{HierCodec, Schedule};
+use super::{BbAnsConfig, VaeCodec};
+use crate::ans::{Ans, AnsMessage};
+use crate::format::{self, FrameRead, PageFrame};
+use crate::model::hierarchy::{HierBackend, HierVae};
+use crate::model::{Backend, Likelihood};
+use crate::util::chunk_ranges;
+use crate::util::crc32;
+
+/// Magic of the paged, integrity-checked container format.
+pub const MAGIC_BBC4: &[u8; 4] = b"BBC4";
+
+/// Resync magic of the trailer index (non-ASCII like the page magic).
+pub const INDEX_MAGIC: [u8; 4] = [0xB4, 0x49, 0x58, 0x1A]; // ´IX␚
+
+/// Bytes per trailer index entry: offset u64 + frame_len, first_image,
+/// num_images, crc (u32 each).
+const INDEX_ENTRY_LEN: usize = 24;
+
+/// Trailer bytes beyond the entries: magic + count + index_crc +
+/// trailer_len.
+const TRAILER_FIXED: usize = 16;
+
+/// Which codec family produced the page chains.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Bbc4Model {
+    /// Single-layer VAE chains (the BBC2 coding process); the decoder
+    /// loads the named model from its artifact bundle.
+    Vae { model: String, backend_id: String },
+    /// Hierarchical chains (the BBC3 coding process); self-describing —
+    /// the decoder rebuilds the backend from the recorded geometry.
+    Hier {
+        model: String,
+        backend_id: String,
+        schedule: Schedule,
+        likelihood: Likelihood,
+        hidden: u32,
+        weight_seed: u64,
+        /// Latent widths bottom-up (`dims[0]` next to the data).
+        dims: Vec<u32>,
+    },
+}
+
+impl Bbc4Model {
+    fn kind_tag(&self) -> u8 {
+        match self {
+            Bbc4Model::Vae { .. } => 1,
+            Bbc4Model::Hier { .. } => 2,
+        }
+    }
+
+    /// Model name recorded in the header.
+    pub fn name(&self) -> &str {
+        match self {
+            Bbc4Model::Vae { model, .. } | Bbc4Model::Hier { model, .. } => model,
+        }
+    }
+
+    /// Backend id recorded in the header.
+    pub fn backend_id(&self) -> &str {
+        match self {
+            Bbc4Model::Vae { backend_id, .. } | Bbc4Model::Hier { backend_id, .. } => backend_id,
+        }
+    }
+}
+
+/// One recovered (or encoded) page: chunk `index`'s ANS chain covering
+/// images `[first_image, first_image + num_images)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bbc4Page {
+    pub index: u32,
+    pub first_image: u32,
+    pub num_images: u32,
+    pub message: AnsMessage,
+}
+
+/// The paged container. After [`Bbc4Container::from_bytes`] `pages` holds
+/// all `n_pages` pages; after [`Bbc4Container::salvage`] it holds the
+/// recovered subset (sorted by index).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bbc4Container {
+    pub cfg: BbAnsConfig,
+    pub pixels: u32,
+    /// Total images the *intact* container codes (header field — lost
+    /// pages do not shrink it).
+    pub num_images: u32,
+    /// Total pages the intact container carries (header field).
+    pub n_pages: u32,
+    pub model: Bbc4Model,
+    pub pages: Vec<Bbc4Page>,
+}
+
+/// What a salvage pass recovered and what it had to give up.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryReport {
+    pub pages_total: u32,
+    pub pages_recovered: u32,
+    /// Page indices that could not be recovered, ascending.
+    pub pages_lost: Vec<u32>,
+    pub images_total: u32,
+    /// Global image indices that are gone with the lost pages, ascending.
+    pub images_lost: Vec<u32>,
+    /// Byte ranges `[start, end)` not covered by the header, a valid
+    /// page, or the intact trailer index — the damage footprint.
+    pub damaged_ranges: Vec<(usize, usize)>,
+    /// Whether the redundant trailer index validated.
+    pub index_intact: bool,
+}
+
+impl RecoveryReport {
+    /// True iff the container verified end to end with nothing lost.
+    pub fn is_clean(&self) -> bool {
+        self.pages_lost.is_empty() && self.damaged_ranges.is_empty() && self.index_intact
+    }
+
+    /// One-line operator summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "pages {}/{} recovered, {} of {} images lost, {} damaged byte range(s), index {}",
+            self.pages_recovered,
+            self.pages_total,
+            self.images_lost.len(),
+            self.images_total,
+            self.damaged_ranges.len(),
+            if self.index_intact { "intact" } else { "damaged" },
+        )
+    }
+}
+
+/// Result of a salvage pass: whatever was recoverable, plus the report.
+#[derive(Debug, Clone)]
+pub struct Salvage {
+    pub container: Bbc4Container,
+    pub report: RecoveryReport,
+}
+
+/// One parsed trailer index entry.
+struct IndexEntry {
+    offset: u64,
+    frame_len: u32,
+    first_image: u32,
+    num_images: u32,
+    crc: u32,
+}
+
+impl Bbc4Container {
+    /// Encode `images` into `n_chunks` independently seeded single-layer
+    /// chains, one page per chunk.
+    pub fn encode_vae_with_workers<B: Backend + Sync + ?Sized>(
+        codec: &VaeCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        let meta = codec.backend().meta();
+        let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
+        Ok(Self::assemble(
+            Bbc4Model::Vae {
+                model: meta.name.clone(),
+                backend_id: codec.backend().backend_id(),
+            },
+            codec.cfg,
+            meta.pixels as u32,
+            chunks,
+        ))
+    }
+
+    /// [`Self::encode_vae_with_workers`] on the default pool.
+    pub fn encode_vae<B: Backend + Sync + ?Sized>(
+        codec: &VaeCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<Self> {
+        Self::encode_vae_with_workers(codec, images, n_chunks, super::default_workers())
+    }
+
+    /// Encode `images` into `n_chunks` hierarchical chains, one page per
+    /// chunk; the header is self-describing like BBC3.
+    pub fn encode_hier_with_workers<B: HierBackend + Sync + ?Sized>(
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        let meta = codec.backend().meta();
+        let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
+        Ok(Self::assemble(
+            Bbc4Model::Hier {
+                model: meta.name.clone(),
+                backend_id: codec.backend().backend_id(),
+                schedule: codec.schedule,
+                likelihood: meta.likelihood,
+                hidden: meta.hidden as u32,
+                weight_seed: codec.backend().weight_seed(),
+                dims: meta.dims.iter().map(|&d| d as u32).collect(),
+            },
+            codec.cfg,
+            meta.pixels as u32,
+            chunks,
+        ))
+    }
+
+    /// [`Self::encode_hier_with_workers`] on the default pool.
+    pub fn encode_hier<B: HierBackend + Sync + ?Sized>(
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<Self> {
+        Self::encode_hier_with_workers(codec, images, n_chunks, super::default_workers())
+    }
+
+    fn assemble(
+        model: Bbc4Model,
+        cfg: BbAnsConfig,
+        pixels: u32,
+        chunks: Vec<ChunkEntry>,
+    ) -> Self {
+        let mut pages = Vec::with_capacity(chunks.len());
+        let mut first = 0u32;
+        for (i, c) in chunks.into_iter().enumerate() {
+            pages.push(Bbc4Page {
+                index: i as u32,
+                first_image: first,
+                num_images: c.num_images,
+                message: c.message,
+            });
+            first += c.num_images;
+        }
+        Self {
+            cfg,
+            pixels,
+            num_images: first,
+            n_pages: pages.len() as u32,
+            model,
+            pages,
+        }
+    }
+
+    /// Total images recovered across the pages currently held.
+    pub fn images_present(&self) -> u32 {
+        self.pages.iter().map(|p| p.num_images).sum()
+    }
+
+    /// Total serialized size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Compression rate in bits per pixel-dimension over the whole
+    /// container (CRC and index overhead included).
+    pub fn bits_per_dim(&self) -> f64 {
+        (self.byte_len() as f64 * 8.0) / (self.num_images as f64 * self.pixels as f64)
+    }
+
+    /// The CRC-protected header (everything before the first page).
+    fn header_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_BBC4);
+        out.push(1u8); // version
+        out.push(self.model.kind_tag());
+        out.push(self.cfg.latent_bits as u8);
+        out.push(self.cfg.posterior_prec as u8);
+        out.push(self.cfg.pixel_prec as u8);
+        out.extend_from_slice(&self.cfg.clean_seed.to_le_bytes());
+        out.extend_from_slice(&self.pixels.to_le_bytes());
+        out.extend_from_slice(&self.num_images.to_le_bytes());
+        out.extend_from_slice(&self.n_pages.to_le_bytes());
+        match &self.model {
+            Bbc4Model::Vae { model, backend_id } => {
+                push_str(&mut out, model);
+                push_str(&mut out, backend_id);
+            }
+            Bbc4Model::Hier {
+                model,
+                backend_id,
+                schedule,
+                likelihood,
+                hidden,
+                weight_seed,
+                dims,
+            } => {
+                push_str(&mut out, model);
+                push_str(&mut out, backend_id);
+                out.push(schedule.tag());
+                out.push(likelihood.tag());
+                out.extend_from_slice(&hidden.to_le_bytes());
+                out.extend_from_slice(&weight_seed.to_le_bytes());
+                assert!(
+                    !dims.is_empty() && dims.len() <= 255,
+                    "layer count out of range"
+                );
+                out.push(dims.len() as u8);
+                for &d in dims {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+            }
+        }
+        let crc = crc32::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        debug_assert_eq!(self.pages.len() as u32, self.n_pages, "incomplete container");
+        let mut out = self.header_bytes();
+        let mut entries = Vec::with_capacity(self.pages.len());
+        for p in &self.pages {
+            let frame = PageFrame {
+                index: p.index,
+                first_image: p.first_image,
+                num_images: p.num_images,
+                payload: p.message.to_bytes(),
+            };
+            entries.push(IndexEntry {
+                offset: out.len() as u64,
+                frame_len: frame.byte_len() as u32,
+                first_image: p.first_image,
+                num_images: p.num_images,
+                crc: frame.crc(),
+            });
+            frame.write_to(&mut out);
+        }
+        // Redundant page index: lets a reader locate every page from the
+        // tail even when the forward scan is interrupted.
+        let trailer_start = out.len();
+        out.extend_from_slice(&INDEX_MAGIC);
+        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for e in &entries {
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.frame_len.to_le_bytes());
+            out.extend_from_slice(&e.first_image.to_le_bytes());
+            out.extend_from_slice(&e.num_images.to_le_bytes());
+            out.extend_from_slice(&e.crc.to_le_bytes());
+        }
+        let index_crc = crc32::hash(&out[trailer_start..]);
+        out.extend_from_slice(&index_crc.to_le_bytes());
+        let trailer_len = (out.len() - trailer_start + 4) as u32;
+        out.extend_from_slice(&trailer_len.to_le_bytes());
+        out
+    }
+
+    /// Parse and CRC-check the header; returns the container shell (no
+    /// pages yet) and the offset of the first page frame.
+    fn parse_header(b: &[u8]) -> Result<(Self, usize)> {
+        let mut pos = 0usize;
+        // `pos <= b.len()` is an invariant, so the bounds check cannot
+        // wrap (see ParallelContainer::from_bytes).
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if n > b.len() - *pos {
+                bail!("BBC4 header truncated at {} (+{n})", *pos);
+            }
+            let s = &b[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let magic = take(&mut pos, 4)?;
+        if magic != MAGIC_BBC4 {
+            bail!("bad BBC4 container magic {magic:02x?} (want {MAGIC_BBC4:02x?} = \"BBC4\")");
+        }
+        let version = take(&mut pos, 1)?[0];
+        if version != 1 {
+            bail!("unsupported BBC4 container version {version} (this build reads version 1)");
+        }
+        let kind = take(&mut pos, 1)?[0];
+        let latent_bits = take(&mut pos, 1)?[0] as u32;
+        let posterior_prec = take(&mut pos, 1)?[0] as u32;
+        let pixel_prec = take(&mut pos, 1)?[0] as u32;
+        let clean_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let pixels = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let n_pages = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let model = match kind {
+            1 => {
+                let model = read_str(b, &mut pos).context("model name")?;
+                let backend_id = read_str(b, &mut pos).context("backend id")?;
+                Bbc4Model::Vae { model, backend_id }
+            }
+            2 => {
+                let model = read_str(b, &mut pos).context("model name")?;
+                let backend_id = read_str(b, &mut pos).context("backend id")?;
+                let schedule = Schedule::from_tag(take(&mut pos, 1)?[0])?;
+                let likelihood = Likelihood::from_tag(take(&mut pos, 1)?[0])?;
+                let hidden = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+                let weight_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                if hidden == 0 || hidden > 1 << 20 {
+                    bail!("implausible hidden width {hidden}");
+                }
+                let n_layers = take(&mut pos, 1)?[0] as usize;
+                if n_layers == 0 || n_layers > 16 {
+                    bail!("implausible layer count {n_layers}");
+                }
+                let mut dims = Vec::with_capacity(n_layers);
+                for _ in 0..n_layers {
+                    let d = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+                    if d == 0 || d > 1 << 16 {
+                        bail!("implausible latent width {d}");
+                    }
+                    dims.push(d);
+                }
+                Bbc4Model::Hier {
+                    model,
+                    backend_id,
+                    schedule,
+                    likelihood,
+                    hidden,
+                    weight_seed,
+                    dims,
+                }
+            }
+            other => bail!("unknown BBC4 model kind {other} (want 1 = VAE or 2 = hierarchical)"),
+        };
+        let computed = crc32::hash(&b[..pos]);
+        let stored = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if computed != stored {
+            bail!("BBC4 header CRC mismatch: stored {stored:#010x}, computed {computed:#010x}");
+        }
+        // Untrusted-header admission, as for every other container.
+        if pixels == 0 || pixels > 1 << 24 {
+            bail!("implausible pixel count {pixels}");
+        }
+        check_decode_budget(num_images as u64, pixels as u64)?;
+        if n_pages > 1 << 20 {
+            bail!("implausible page count {n_pages}");
+        }
+        let tiling = chunk_ranges(num_images as usize, n_pages as usize);
+        if tiling.len() as u32 != n_pages {
+            bail!("page count {n_pages} is inconsistent with {num_images} images");
+        }
+        let cfg = BbAnsConfig {
+            latent_bits,
+            posterior_prec,
+            pixel_prec,
+            clean_seed,
+        };
+        cfg.validate()?;
+        Ok((
+            Self {
+                cfg,
+                pixels,
+                num_images,
+                n_pages,
+                model,
+                pages: Vec::new(),
+            },
+            pos,
+        ))
+    }
+
+    /// Validate one frame against the header's deterministic page tiling
+    /// and parse its payload. `None` means the frame is internally valid
+    /// but does not belong (crafted index, wrong range, garbage payload).
+    fn admit_page(&self, frame: &PageFrame) -> Option<Bbc4Page> {
+        if frame.index >= self.n_pages {
+            return None;
+        }
+        let want = chunk_ranges(self.num_images as usize, self.n_pages as usize);
+        let r = &want[frame.index as usize];
+        if frame.first_image as usize != r.start || frame.num_images as usize != r.len() {
+            return None;
+        }
+        let message = AnsMessage::from_bytes(&frame.payload).ok()?;
+        Some(Bbc4Page {
+            index: frame.index,
+            first_image: frame.first_image,
+            num_images: frame.num_images,
+            message,
+        })
+    }
+
+    /// Strict reader: every page and the trailer index must verify, in
+    /// order, with nothing missing and nothing trailing. Fails fast on
+    /// the first bad byte — the serving-path default, where a damaged
+    /// container should be rejected, not half-decoded.
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let (mut c, mut pos) = Self::parse_header(b)?;
+        let tiling = chunk_ranges(c.num_images as usize, c.n_pages as usize);
+        let mut entries = Vec::with_capacity(c.n_pages as usize);
+        for i in 0..c.n_pages {
+            let at = pos;
+            match format::read_frame(b, at) {
+                FrameRead::Ok { frame, next } => {
+                    if frame.index != i {
+                        bail!("page {i} at offset {at} carries page index {}", frame.index);
+                    }
+                    let r = &tiling[i as usize];
+                    if frame.first_image as usize != r.start
+                        || frame.num_images as usize != r.len()
+                    {
+                        bail!(
+                            "page {i} claims images [{}, +{}), expected [{}, +{})",
+                            frame.first_image,
+                            frame.num_images,
+                            r.start,
+                            r.len()
+                        );
+                    }
+                    let message = AnsMessage::from_bytes(&frame.payload)
+                        .with_context(|| format!("page {i} payload"))?;
+                    entries.push(IndexEntry {
+                        offset: at as u64,
+                        frame_len: (next - at) as u32,
+                        first_image: frame.first_image,
+                        num_images: frame.num_images,
+                        crc: frame.crc(),
+                    });
+                    c.pages.push(Bbc4Page {
+                        index: frame.index,
+                        first_image: frame.first_image,
+                        num_images: frame.num_images,
+                        message,
+                    });
+                    pos = next;
+                }
+                FrameRead::NoMagic => bail!("page {i} missing at offset {at}: no frame magic"),
+                FrameRead::Truncated { need, have } => {
+                    bail!("page {i} truncated: frame needs {need} bytes, container has {have}")
+                }
+                FrameRead::Damaged { detail } => bail!("page {i} at offset {at}: {detail}"),
+            }
+        }
+        let (index, index_range) = read_trailer_index(b)
+            .ok_or_else(|| anyhow!("BBC4 trailer index missing or damaged"))?;
+        if index_range.0 != pos {
+            bail!(
+                "BBC4 trailer index starts at offset {} but pages end at {pos}",
+                index_range.0
+            );
+        }
+        if index_range.1 != b.len() {
+            bail!("BBC4 container has {} trailing bytes", b.len() - index_range.1);
+        }
+        if index.len() != entries.len() {
+            bail!(
+                "trailer index lists {} pages, container has {}",
+                index.len(),
+                entries.len()
+            );
+        }
+        for (i, (got, want)) in index.iter().zip(&entries).enumerate() {
+            if got.offset != want.offset
+                || got.frame_len != want.frame_len
+                || got.first_image != want.first_image
+                || got.num_images != want.num_images
+                || got.crc != want.crc
+            {
+                bail!("trailer index entry {i} does not match page {i}'s frame");
+            }
+        }
+        Ok(c)
+    }
+
+    /// Recovery reader: parse the header (the one unrecoverable piece),
+    /// then keep every page that proves itself — via the forward resync
+    /// scan and, for pages the scan misses, via the redundant trailer
+    /// index. Returns the recovered subset plus an exact damage report.
+    pub fn salvage(b: &[u8]) -> Result<Salvage> {
+        let (mut c, header_end) = Self::parse_header(b)
+            .context("BBC4 header is damaged; nothing is recoverable without it")?;
+        let index = read_trailer_index(b);
+        let index_range = index.as_ref().map(|(_, r)| *r);
+        let scan_end = index_range.map(|(s, _)| s).unwrap_or(b.len());
+
+        // Forward scan with resync: walk frames from the header; after a
+        // damaged or unparseable region, hunt for the next page magic.
+        let mut found: BTreeMap<u32, (Bbc4Page, (usize, usize))> = BTreeMap::new();
+        let mut pos = header_end;
+        while pos < scan_end {
+            let advance = match format::read_frame(b, pos) {
+                FrameRead::Ok { frame, next } => match c.admit_page(&frame) {
+                    Some(page) => {
+                        found.entry(page.index).or_insert((page, (pos, next)));
+                        Some(next)
+                    }
+                    None => None,
+                },
+                _ => None,
+            };
+            match advance {
+                Some(next) => pos = next,
+                // Resync: the bytes at `pos` are not a valid page.
+                None => match format::find_magic(b, pos + 1) {
+                    Some(p) if p < scan_end => pos = p,
+                    _ => break,
+                },
+            }
+        }
+
+        // Index-guided recovery: the trailer knows where every page
+        // lives and what its CRC is, so pages the scan missed (e.g. a
+        // damaged resync magic) can still be validated in place.
+        if let Some((entries, _)) = &index {
+            for (i, e) in entries.iter().enumerate() {
+                let i = i as u32;
+                if found.contains_key(&i) || i >= c.n_pages {
+                    continue;
+                }
+                let at = e.offset as usize;
+                let end = at.saturating_add(e.frame_len as usize);
+                if end > b.len() {
+                    continue;
+                }
+                if let FrameRead::Ok { frame, next } = format::read_frame_body(b, at) {
+                    if frame.index == i && frame.crc() == e.crc && next == end {
+                        if let Some(page) = c.admit_page(&frame) {
+                            found.insert(i, (page, (at, next)));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Damage footprint: every byte not covered by the header, a
+        // recovered page, or the intact index.
+        let mut covered: Vec<(usize, usize)> = vec![(0, header_end)];
+        covered.extend(found.values().map(|(_, r)| *r));
+        if let Some(r) = index_range {
+            covered.push(r);
+        }
+        covered.sort_unstable();
+        let mut damaged_ranges = Vec::new();
+        let mut cur = 0usize;
+        for (s, e) in covered {
+            if s > cur {
+                damaged_ranges.push((cur, s));
+            }
+            cur = cur.max(e);
+        }
+        if cur < b.len() {
+            damaged_ranges.push((cur, b.len()));
+        }
+
+        let pages_lost: Vec<u32> = (0..c.n_pages).filter(|i| !found.contains_key(i)).collect();
+        let tiling = chunk_ranges(c.num_images as usize, c.n_pages as usize);
+        let images_lost: Vec<u32> = pages_lost
+            .iter()
+            .flat_map(|&i| tiling[i as usize].clone())
+            .map(|i| i as u32)
+            .collect();
+        let report = RecoveryReport {
+            pages_total: c.n_pages,
+            pages_recovered: found.len() as u32,
+            pages_lost,
+            images_total: c.num_images,
+            images_lost,
+            damaged_ranges,
+            index_intact: index.is_some(),
+        };
+        c.pages = found.into_values().map(|(p, _)| p).collect();
+        Ok(Salvage {
+            container: c,
+            report,
+        })
+    }
+
+    /// A header-equivalent chunkless [`HierContainer`] for code that keys
+    /// on BBC3 header identity (backend rebuild, the coordinator's
+    /// backend cache). Errors on `kind = vae` headers.
+    pub fn hier_shell(&self) -> Result<HierContainer> {
+        let Bbc4Model::Hier {
+            model,
+            backend_id,
+            schedule,
+            likelihood,
+            hidden,
+            weight_seed,
+            dims,
+        } = &self.model
+        else {
+            bail!("container codes a single-layer model; no hierarchical backend to build");
+        };
+        Ok(HierContainer {
+            model: model.clone(),
+            backend_id: backend_id.clone(),
+            schedule: *schedule,
+            cfg: self.cfg,
+            likelihood: *likelihood,
+            hidden: *hidden,
+            weight_seed: *weight_seed,
+            pixels: self.pixels,
+            dims: dims.clone(),
+            chunks: Vec::new(),
+        })
+    }
+
+    /// Rebuild the hierarchical backend a `kind = hier` header describes
+    /// (same admission budget as BBC3's self-describing decode path).
+    pub fn build_hier_backend(&self) -> Result<HierVae> {
+        self.hier_shell()?.build_backend()
+    }
+
+    fn validate_common(&self, pixels: usize, cfg: &BbAnsConfig) -> Result<()> {
+        if self.pixels as usize != pixels {
+            bail!(
+                "container has {}-pixel images, model wants {pixels}",
+                self.pixels
+            );
+        }
+        if &self.cfg != cfg {
+            bail!("decode codec config does not match the container header");
+        }
+        Ok(())
+    }
+
+    /// Decode the held pages into per-image slots: `slots[i]` is `None`
+    /// iff image `i` rode a page this container no longer holds. On a
+    /// strict parse every slot is `Some`; after salvage the gaps are
+    /// exactly `RecoveryReport::images_lost`.
+    pub fn decode_slots_vae<B: Backend + ?Sized>(
+        &self,
+        codec: &VaeCodec<'_, B>,
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        if !matches!(self.model, Bbc4Model::Vae { .. }) {
+            bail!("container codes a hierarchical model; decode it with a HierCodec");
+        }
+        self.validate_common(codec.backend().meta().pixels, &codec.cfg)?;
+        let mut slots = vec![None; self.num_images as usize];
+        for p in &self.pages {
+            let mut ans =
+                Ans::from_message(&p.message, chunk_seed(self.cfg.clean_seed, p.index as usize));
+            let imgs = codec
+                .decode_dataset(&mut ans, p.num_images as usize)
+                .with_context(|| format!("page {}", p.index))?;
+            for (k, img) in imgs.into_iter().enumerate() {
+                slots[p.first_image as usize + k] = Some(img);
+            }
+        }
+        Ok(slots)
+    }
+
+    /// [`Self::decode_slots_vae`] for hierarchical pages.
+    pub fn decode_slots_hier<B: HierBackend + ?Sized>(
+        &self,
+        codec: &HierCodec<'_, B>,
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        let Bbc4Model::Hier { schedule, .. } = &self.model else {
+            bail!("container codes a single-layer model; decode it with a VaeCodec");
+        };
+        if *schedule != codec.schedule {
+            bail!(
+                "container was coded with the {} schedule, codec uses {}",
+                schedule.name(),
+                codec.schedule.name()
+            );
+        }
+        self.validate_common(codec.backend().meta().pixels, &codec.cfg)?;
+        let mut slots = vec![None; self.num_images as usize];
+        for p in &self.pages {
+            let mut ans =
+                Ans::from_message(&p.message, chunk_seed(self.cfg.clean_seed, p.index as usize));
+            let imgs = codec
+                .decode_dataset(&mut ans, p.num_images as usize)
+                .with_context(|| format!("page {}", p.index))?;
+            for (k, img) in imgs.into_iter().enumerate() {
+                slots[p.first_image as usize + k] = Some(img);
+            }
+        }
+        Ok(slots)
+    }
+
+    /// Strict full decode (every page present).
+    pub fn decode_vae<B: Backend + ?Sized>(
+        &self,
+        codec: &VaeCodec<'_, B>,
+    ) -> Result<Vec<Vec<u8>>> {
+        collect_complete(self.decode_slots_vae(codec)?)
+    }
+
+    /// Strict full decode (every page present), hierarchical.
+    pub fn decode_hier<B: HierBackend + ?Sized>(
+        &self,
+        codec: &HierCodec<'_, B>,
+    ) -> Result<Vec<Vec<u8>>> {
+        collect_complete(self.decode_slots_hier(codec)?)
+    }
+}
+
+fn collect_complete(slots: Vec<Option<Vec<u8>>>) -> Result<Vec<Vec<u8>>> {
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("image {i} is missing (its page was lost)")))
+        .collect()
+}
+
+/// Locate and validate the redundant trailer index from the tail of the
+/// file. Returns the entries and the byte range `[start, end)` the
+/// trailer occupies, or `None` if any part of it fails validation.
+fn read_trailer_index(b: &[u8]) -> Option<(Vec<IndexEntry>, (usize, usize))> {
+    if b.len() < TRAILER_FIXED {
+        return None;
+    }
+    let trailer_len =
+        u32::from_le_bytes(b[b.len() - 4..].try_into().unwrap()) as usize;
+    if trailer_len < TRAILER_FIXED || trailer_len > b.len() {
+        return None;
+    }
+    let start = b.len() - trailer_len;
+    if b[start..start + 4] != INDEX_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(b[start + 4..start + 8].try_into().unwrap()) as usize;
+    if trailer_len != TRAILER_FIXED + n * INDEX_ENTRY_LEN {
+        return None;
+    }
+    let crc_at = start + 8 + n * INDEX_ENTRY_LEN;
+    let stored = u32::from_le_bytes(b[crc_at..crc_at + 4].try_into().unwrap());
+    if crc32::hash(&b[start..crc_at]) != stored {
+        return None;
+    }
+    let mut entries = Vec::with_capacity(n);
+    let mut at = start + 8;
+    for _ in 0..n {
+        entries.push(IndexEntry {
+            offset: u64::from_le_bytes(b[at..at + 8].try_into().unwrap()),
+            frame_len: u32::from_le_bytes(b[at + 8..at + 12].try_into().unwrap()),
+            first_image: u32::from_le_bytes(b[at + 12..at + 16].try_into().unwrap()),
+            num_images: u32::from_le_bytes(b[at + 16..at + 20].try_into().unwrap()),
+            crc: u32::from_le_bytes(b[at + 20..at + 24].try_into().unwrap()),
+        });
+        at += INDEX_ENTRY_LEN;
+    }
+    Some((entries, (start, b.len())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::RANS_L;
+    use crate::model::hierarchy::HierMeta;
+    use crate::model::vae::NativeVae;
+    use crate::model::ModelMeta;
+    use crate::util::rng::Rng;
+
+    fn sample_bbc4() -> Bbc4Container {
+        Bbc4Container {
+            cfg: BbAnsConfig {
+                latent_bits: 12,
+                posterior_prec: 24,
+                pixel_prec: 16,
+                clean_seed: 7,
+            },
+            pixels: 4,
+            num_images: 1,
+            n_pages: 1,
+            model: Bbc4Model::Vae {
+                model: "m".into(),
+                backend_id: "native".into(),
+            },
+            pages: vec![Bbc4Page {
+                index: 0,
+                first_image: 0,
+                num_images: 1,
+                message: AnsMessage {
+                    head: RANS_L + 3,
+                    stream: vec![0xAABB_CCDD],
+                    clean_words_used: 2,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = sample_bbc4();
+        let bytes = c.to_bytes();
+        let c2 = Bbc4Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    fn toy_backend() -> NativeVae {
+        NativeVae::random(
+            ModelMeta {
+                name: "toy".into(),
+                pixels: 16,
+                latent_dim: 4,
+                hidden: 8,
+                likelihood: Likelihood::Bernoulli,
+                test_elbo_bpd: f64::NAN,
+            },
+            2024,
+        )
+    }
+
+    fn toy_images(n: usize, pixels: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..pixels).map(|_| (rng.f64() < 0.3) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn vae_end_to_end_roundtrip() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(11, 16, 5);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 3, 2).unwrap();
+        assert_eq!(c.n_pages, 3);
+        assert_eq!(c.num_images, 11);
+        let bytes = c.to_bytes();
+        let parsed = Bbc4Container::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed, c);
+        assert_eq!(parsed.decode_vae(&codec).unwrap(), images);
+        // The strict bytes also salvage cleanly with a clean report.
+        let s = Bbc4Container::salvage(&bytes).unwrap();
+        assert!(s.report.is_clean(), "{:?}", s.report);
+        assert_eq!(s.container, parsed);
+    }
+
+    #[test]
+    fn hier_end_to_end_roundtrip() {
+        let meta = HierMeta {
+            name: "hier2".into(),
+            pixels: 9,
+            dims: vec![4, 3],
+            hidden: 8,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 42);
+        let images = toy_images(7, 9, 9);
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+            let c = Bbc4Container::encode_hier_with_workers(&codec, &images, 2, 2).unwrap();
+            let bytes = c.to_bytes();
+            let parsed = Bbc4Container::from_bytes(&bytes).unwrap();
+            // Self-describing: rebuild the backend from the header alone.
+            let rebuilt = parsed.build_hier_backend().unwrap();
+            assert_eq!(rebuilt.backend_id(), backend.backend_id());
+            let codec2 = HierCodec::new(&rebuilt, parsed.cfg, schedule).unwrap();
+            assert_eq!(parsed.decode_hier(&codec2).unwrap(), images);
+        }
+    }
+
+    /// Find the byte range of page `i`'s frame in a serialized container
+    /// (via the trailer index, which tests may then damage).
+    fn page_range(bytes: &[u8], i: usize) -> (usize, usize) {
+        let (entries, _) = read_trailer_index(bytes).expect("intact trailer");
+        let e = &entries[i];
+        (e.offset as usize, e.offset as usize + e.frame_len as usize)
+    }
+
+    #[test]
+    fn salvage_skips_damaged_page_and_reports_it() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(12, 16, 6);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 4, 1).unwrap();
+        let clean = c.to_bytes();
+        let (s1, _e1) = page_range(&clean, 1);
+
+        // Flip one payload bit inside page 1.
+        let mut bad = clean.clone();
+        bad[s1 + format::FRAME_OVERHEAD - 4] ^= 0x10;
+        assert!(Bbc4Container::from_bytes(&bad).is_err());
+        let s = Bbc4Container::salvage(&bad).unwrap();
+        assert_eq!(s.report.pages_lost, vec![1]);
+        assert_eq!(s.report.pages_recovered, 3);
+        assert!(s.report.index_intact);
+        let tiling = chunk_ranges(12, 4);
+        let want_lost: Vec<u32> = tiling[1].clone().map(|i| i as u32).collect();
+        assert_eq!(s.report.images_lost, want_lost);
+        // Damage footprint covers the damaged page and nothing else.
+        assert_eq!(s.report.damaged_ranges.len(), 1);
+
+        // Every intact image decodes bit-exactly.
+        let slots = s.container.decode_slots_vae(&codec).unwrap();
+        for (i, slot) in slots.iter().enumerate() {
+            if want_lost.contains(&(i as u32)) {
+                assert!(slot.is_none(), "image {i} should be lost");
+            } else {
+                assert_eq!(slot.as_deref(), Some(&images[i][..]), "image {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn salvage_recovers_smashed_magic_via_index() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(9, 16, 7);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 3, 1).unwrap();
+        let clean = c.to_bytes();
+        let (s1, _) = page_range(&clean, 1);
+
+        // Destroy page 1's resync magic: the forward scan cannot find it,
+        // but the trailer index still locates and validates the body.
+        let mut bad = clean.clone();
+        bad[s1..s1 + 4].copy_from_slice(&[0; 4]);
+        let s = Bbc4Container::salvage(&bad).unwrap();
+        assert!(s.report.pages_lost.is_empty(), "{:?}", s.report);
+        assert_eq!(s.container.decode_vae(&codec).unwrap(), images);
+    }
+
+    #[test]
+    fn salvage_survives_truncation_and_dead_index() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(10, 16, 8);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 5, 1).unwrap();
+        let clean = c.to_bytes();
+        let (s3, _) = page_range(&clean, 3);
+
+        // Truncate mid-page-3: the index and pages 3..5 are gone; pages
+        // 0..3 must still come back through the forward scan alone.
+        let bad = &clean[..s3 + 10];
+        let s = Bbc4Container::salvage(bad).unwrap();
+        assert!(!s.report.index_intact);
+        assert_eq!(s.report.pages_lost, vec![3, 4]);
+        let slots = s.container.decode_slots_vae(&codec).unwrap();
+        let tiling = chunk_ranges(10, 5);
+        for i in 0..10 {
+            let lost = tiling[3].contains(&i) || tiling[4].contains(&i);
+            assert_eq!(slots[i].is_none(), lost, "image {i}");
+            if !lost {
+                assert_eq!(slots[i].as_deref(), Some(&images[i][..]));
+            }
+        }
+    }
+
+    #[test]
+    fn salvage_resyncs_over_zero_filled_region() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(12, 16, 11);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 4, 1).unwrap();
+        let clean = c.to_bytes();
+        let (s0, e0) = page_range(&clean, 0);
+
+        // Zero-fill page 0 entirely (magic included) — the scanner must
+        // resync at page 1 and the index adds nothing for page 0.
+        let mut bad = clean.clone();
+        bad[s0..e0].fill(0);
+        let s = Bbc4Container::salvage(&bad).unwrap();
+        assert_eq!(s.report.pages_lost, vec![0]);
+        assert_eq!(s.report.pages_recovered, 3);
+        assert_eq!(s.report.damaged_ranges, vec![(s0, e0)]);
+    }
+
+    #[test]
+    fn damaged_header_is_unrecoverable_but_clean() {
+        let c = sample_bbc4();
+        let mut bytes = c.to_bytes();
+        bytes[8] ^= 0xFF; // inside the CRC-protected header
+        let err = Bbc4Container::salvage(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("header"), "{err:#}");
+    }
+
+    #[test]
+    fn strict_reader_rejects_crafted_page_ranges() {
+        // A page claiming a range outside the deterministic tiling must
+        // be rejected even though its own CRC is valid.
+        let c = sample_bbc4();
+        let mut tampered = c.clone();
+        tampered.pages[0].first_image = 1;
+        let bytes = tampered.to_bytes();
+        let err = Bbc4Container::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("claims images"), "{err:#}");
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected_at_decode() {
+        let backend = toy_backend();
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+        let images = toy_images(3, 16, 13);
+        let c = Bbc4Container::encode_vae_with_workers(&codec, &images, 1, 1).unwrap();
+        assert!(c.build_hier_backend().is_err());
+        let meta = HierMeta {
+            name: "hier2".into(),
+            pixels: 16,
+            dims: vec![4, 3],
+            hidden: 8,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let hb = HierVae::random(meta, 5);
+        let hcodec = HierCodec::new(&hb, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+        assert!(c.decode_slots_hier(&hcodec).is_err());
+    }
+}

@@ -101,6 +101,13 @@ impl Container {
         let pixels = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
         check_decode_budget(num_images as u64, pixels as u64)?;
         let message = AnsMessage::from_bytes(&b[pos..]).context("ANS payload")?;
+        let canonical = 24 + 4 * message.stream.len();
+        if b.len() - pos != canonical {
+            bail!(
+                "container has {} trailing bytes after the ANS payload",
+                b.len() - pos - canonical
+            );
+        }
         let cfg = BbAnsConfig {
             latent_bits,
             posterior_prec,
@@ -324,24 +331,10 @@ impl ParallelContainer {
         if n_chunks > 1 << 20 {
             bail!("implausible chunk count {n_chunks}");
         }
-        let mut table = Vec::with_capacity(n_chunks);
-        for _ in 0..n_chunks {
-            let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-            table.push((num_images, len));
-        }
+        let table = read_chunk_table("parallel", b, &mut pos, n_chunks)?;
         let total: u64 = table.iter().map(|&(n, _)| n as u64).sum();
         check_decode_budget(total, pixels as u64)?;
-        let mut chunks = Vec::with_capacity(n_chunks);
-        for (ci, (num_images, len)) in table.into_iter().enumerate() {
-            let payload = take(&mut pos, len)?;
-            let message = AnsMessage::from_bytes(payload)
-                .with_context(|| format!("chunk {ci} payload"))?;
-            chunks.push(ChunkEntry {
-                num_images,
-                message,
-            });
-        }
+        let chunks = read_chunk_payloads("parallel", b, &mut pos, table)?;
         if pos != b.len() {
             bail!("parallel container has {} trailing bytes", b.len() - pos);
         }
@@ -666,24 +659,10 @@ impl HierContainer {
         if n_chunks > 1 << 20 {
             bail!("implausible chunk count {n_chunks}");
         }
-        let mut table = Vec::with_capacity(n_chunks);
-        for _ in 0..n_chunks {
-            let num_images = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-            table.push((num_images, len));
-        }
+        let table = read_chunk_table("hierarchical", b, &mut pos, n_chunks)?;
         let total: u64 = table.iter().map(|&(n, _)| n as u64).sum();
         check_decode_budget(total, pixels as u64)?;
-        let mut chunks = Vec::with_capacity(n_chunks);
-        for (ci, (num_images, len)) in table.into_iter().enumerate() {
-            let payload = take(&mut pos, len)?;
-            let message = AnsMessage::from_bytes(payload)
-                .with_context(|| format!("chunk {ci} payload"))?;
-            chunks.push(ChunkEntry {
-                num_images,
-                message,
-            });
-        }
+        let chunks = read_chunk_payloads("hierarchical", b, &mut pos, table)?;
         if pos != b.len() {
             bail!("hierarchical container has {} trailing bytes", b.len() - pos);
         }
@@ -727,13 +706,86 @@ impl HierContainer {
     }
 }
 
-fn push_str(out: &mut Vec<u8>, s: &str) {
+/// Read an `n_chunks`-entry offset table (`num_images` u32, `payload_len`
+/// u64 per chunk) at `*pos` and validate the declared lengths **as a
+/// whole** against the payload region that follows: every prefix sum must
+/// fit and the chunks must tile the region exactly. The table is
+/// attacker-controlled; validating up front means a bad entry names
+/// itself (chunk index, declared length, bytes available) instead of
+/// surfacing as a generic truncation error mid-parse — and the payload
+/// reader below can slice without any further bounds checks.
+fn read_chunk_table(
+    what: &str,
+    b: &[u8],
+    pos: &mut usize,
+    n_chunks: usize,
+) -> Result<Vec<(u32, u64)>> {
+    let mut table = Vec::with_capacity(n_chunks);
+    for ci in 0..n_chunks {
+        if 12 > b.len() - *pos {
+            bail!("{what} container truncated in the chunk table at entry {ci}");
+        }
+        let num_images = u32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
+        let len = u64::from_le_bytes(b[*pos + 4..*pos + 12].try_into().unwrap());
+        *pos += 12;
+        table.push((num_images, len));
+    }
+    let avail = (b.len() - *pos) as u128;
+    let mut declared: u128 = 0; // u128: sums of u64 lengths cannot wrap
+    for (ci, &(_, len)) in table.iter().enumerate() {
+        declared += len as u128;
+        if declared > avail {
+            bail!(
+                "{what} chunk {ci} declares a {len}-byte payload, but chunks 0..={ci} \
+                 would need {declared} of the {avail} payload bytes present"
+            );
+        }
+    }
+    if declared != avail {
+        bail!("{what} chunk table declares {declared} payload bytes, container has {avail}");
+    }
+    Ok(table)
+}
+
+/// Slice the chunk payloads a validated [`read_chunk_table`] result
+/// describes, parsing each as an [`AnsMessage`] and rejecting any chunk
+/// whose declared length is not exactly its message's canonical size (a
+/// padded or truncated-in-place payload must not parse as valid).
+fn read_chunk_payloads(
+    what: &str,
+    b: &[u8],
+    pos: &mut usize,
+    table: Vec<(u32, u64)>,
+) -> Result<Vec<ChunkEntry>> {
+    let mut chunks = Vec::with_capacity(table.len());
+    for (ci, (num_images, len)) in table.into_iter().enumerate() {
+        let len = len as usize; // fits: the table tiles the buffer tail
+        let payload = &b[*pos..*pos + len];
+        *pos += len;
+        let message =
+            AnsMessage::from_bytes(payload).with_context(|| format!("{what} chunk {ci} payload"))?;
+        let canonical = 24 + 4 * message.stream.len();
+        if len != canonical {
+            bail!(
+                "{what} chunk {ci} declares {len} payload bytes, \
+                 but its ANS message occupies {canonical}"
+            );
+        }
+        chunks.push(ChunkEntry {
+            num_images,
+            message,
+        });
+    }
+    Ok(chunks)
+}
+
+pub(crate) fn push_str(out: &mut Vec<u8>, s: &str) {
     assert!(s.len() <= u8::MAX as usize, "string too long for container");
     out.push(s.len() as u8);
     out.extend_from_slice(s.as_bytes());
 }
 
-fn read_str(b: &[u8], pos: &mut usize) -> Result<String> {
+pub(crate) fn read_str(b: &[u8], pos: &mut usize) -> Result<String> {
     if *pos >= b.len() {
         bail!("truncated string length");
     }
@@ -882,6 +934,72 @@ mod tests {
         let mut trailing = bytes.clone();
         trailing.push(0);
         assert!(ParallelContainer::from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn bbc1_rejects_trailing_payload_bytes() {
+        // The ANS message parser tolerates oversized buffers; the
+        // container must not — a BBC1 byte stream is exactly header +
+        // canonical message.
+        let mut bytes = sample().to_bytes();
+        bytes.extend_from_slice(&[0, 0, 0, 0]);
+        let err = Container::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn chunk_table_overrun_names_the_chunk() {
+        // sample_parallel has one chunk with a 28-byte payload; its
+        // payload_len u64 is the 8 bytes just before the payload.
+        let mut bytes = sample_parallel().to_bytes();
+        let at = bytes.len() - 36;
+        bytes[at..at + 8].copy_from_slice(&1000u64.to_le_bytes());
+        let err = ParallelContainer::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk 0") && msg.contains("1000"), "{msg}");
+
+        let mut hier = sample_hier().to_bytes();
+        let at = hier.len() - 36;
+        hier[at..at + 8].copy_from_slice(&1000u64.to_le_bytes());
+        let err = HierContainer::from_bytes(&hier).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk 0") && msg.contains("1000"), "{msg}");
+    }
+
+    #[test]
+    fn chunk_table_undercoverage_is_rejected() {
+        // A table whose declared lengths do not tile the payload region
+        // exactly (here: one byte short) must fail in the table pre-pass.
+        let mut bytes = sample_parallel().to_bytes();
+        let at = bytes.len() - 36;
+        bytes[at..at + 8].copy_from_slice(&27u64.to_le_bytes());
+        let err = ParallelContainer::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("27") && msg.contains("28"), "{msg}");
+    }
+
+    #[test]
+    fn noncanonical_chunk_payload_is_rejected() {
+        // Keep the declared 28-byte payload but shrink the message's own
+        // stream length to 0: the message parses, yet it no longer
+        // occupies the declared bytes — padded payloads must not pass.
+        let mut bytes = sample_parallel().to_bytes();
+        let at = bytes.len() - 12; // stream-len u64 of the only payload
+        bytes[at..at + 8].copy_from_slice(&0u64.to_le_bytes());
+        let err = ParallelContainer::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("28") && msg.contains("24"), "{msg}");
+    }
+
+    #[test]
+    fn truncated_chunk_table_names_the_entry() {
+        // Cut the container mid-table: the error should point at the
+        // table entry, not at a generic offset.
+        let bytes = sample_parallel().to_bytes();
+        let cut = bytes.len() - 30; // inside the single table entry
+        let err = ParallelContainer::from_bytes(&bytes[..cut]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk table"), "{msg}");
     }
 
     fn sample_hier() -> HierContainer {

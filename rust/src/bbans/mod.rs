@@ -21,6 +21,7 @@
 //! posterior is coded over the *same* buckets via
 //! [`crate::codecs::gaussian::DiscretizedGaussian`].
 
+pub mod bbc4;
 pub mod container;
 pub mod hierarchy;
 pub mod timeseries;

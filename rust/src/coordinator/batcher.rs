@@ -58,6 +58,7 @@ use super::executor::{PhaseExecutor, PhasePool, PooledExecutor, SerialExecutor};
 use super::metrics::Metrics;
 use super::protocol::HierSpec;
 use crate::ans::Ans;
+use crate::bbans::bbc4::{Bbc4Container, Bbc4Model, MAGIC_BBC4};
 use crate::bbans::container::{
     Container, HierContainer, ParallelContainer, MAGIC_HIER, MAGIC_PARALLEL,
 };
@@ -772,6 +773,10 @@ fn decode_jobs(
             decode_hier_container(workers, metrics, &bytes, reply, hier_cache);
             continue;
         }
+        if bytes.len() >= 4 && &bytes[0..4] == MAGIC_BBC4 {
+            decode_bbc4_container(backends, metrics, &bytes, reply, hier_cache);
+            continue;
+        }
         match Container::from_bytes(&bytes) {
             Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
             Err(e) => {
@@ -1097,6 +1102,80 @@ fn decode_hier_container(
             let _ = reply.send(Ok(images));
         }
         Err(e) => fail(format!("hierarchical container decode failed: {e:#}")),
+    }
+}
+
+/// Admission for a BBC4 container carrying single-layer pages: same
+/// backend-id check as [`bbc2_codec`], against the id the BBC4 header
+/// recorded.
+fn bbc4_vae_codec<'a, B: Backend + ?Sized>(
+    c: &Bbc4Container,
+    recorded: &str,
+    backend: &'a B,
+) -> Result<VaeCodec<'a, B>, String> {
+    if recorded != backend.backend_id() {
+        return Err(format!(
+            "container encoded with backend '{recorded}', this service runs '{}'",
+            backend.backend_id()
+        ));
+    }
+    VaeCodec::new(backend, c.cfg).map_err(|e| format!("{e:#}"))
+}
+
+/// Decode one paged (`BBC4`) container. The serving path is **strict**:
+/// a damaged container is rejected whole (`Bbc4Container::from_bytes`
+/// verifies every page CRC and the trailer index) — salvage decoding is
+/// an operator decision, exposed through the CLI's `--salvage`, not
+/// something a server should silently do to a request. Single-layer
+/// pages resolve their model from the hosted map (BBC2 admission rules);
+/// hierarchical pages rebuild their backend from the self-describing
+/// header through the shared memoization cache.
+fn decode_bbc4_container(
+    backends: &BackendSet,
+    metrics: &Metrics,
+    bytes: &[u8],
+    reply: DecompressReply,
+    cache: &mut HashMap<String, HierVae>,
+) {
+    let fail = |msg: String| {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(msg));
+    };
+    let c = match Bbc4Container::from_bytes(bytes) {
+        Ok(c) => c,
+        Err(e) => return fail(format!("bad container: {e:#}")),
+    };
+    let decode_err = |e: anyhow::Error| format!("BBC4 container decode failed: {e:#}");
+    let decoded: Result<Vec<Vec<u8>>, String> = match &c.model {
+        Bbc4Model::Vae { model, backend_id } => match backends {
+            BackendSet::Local(map) => match map.get(model) {
+                None => Err(format!("unknown model '{model}'")),
+                Some(b) => bbc4_vae_codec(&c, backend_id, b.as_ref())
+                    .and_then(|codec| c.decode_vae(&codec).map_err(decode_err)),
+            },
+            BackendSet::Shared { map, .. } => match map.get(model) {
+                None => Err(format!("unknown model '{model}'")),
+                Some(b) => {
+                    let backend: &(dyn Backend + Send + Sync) = &**b;
+                    bbc4_vae_codec(&c, backend_id, backend)
+                        .and_then(|codec| c.decode_vae(&codec).map_err(decode_err))
+                }
+            },
+        },
+        Bbc4Model::Hier { .. } => (|| {
+            let shell = c.hier_shell().map_err(|e| format!("{e:#}"))?;
+            let backend = cached_hier_backend(cache, &shell).map_err(|e| format!("{e:#}"))?;
+            let codec =
+                HierCodec::new(backend, c.cfg, shell.schedule).map_err(|e| format!("{e:#}"))?;
+            c.decode_hier(&codec).map_err(decode_err)
+        })(),
+    };
+    match decoded {
+        Ok(images) => {
+            Metrics::inc(&metrics.images_decoded, images.len() as u64);
+            let _ = reply.send(Ok(images));
+        }
+        Err(msg) => fail(msg),
     }
 }
 

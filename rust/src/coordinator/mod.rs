@@ -23,4 +23,4 @@ pub mod server;
 
 pub use batcher::{ModelService, ServiceHandle, ServiceParams, SharedBackend};
 pub use protocol::HierSpec;
-pub use server::{Client, Server};
+pub use server::{Client, RetryPolicy, Server};

@@ -25,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use super::batcher::ServiceHandle;
 use super::metrics::Metrics;
 use super::protocol::{Frame, HierSpec, MAX_FRAME};
+use crate::util::rng::Rng;
 
 /// Poll granularity for connection reads: how long a blocked read waits
 /// before re-checking the stop flag.
@@ -238,29 +239,244 @@ fn handle_conn(stream: TcpStream, svc: ServiceHandle, stop: Arc<AtomicBool>) -> 
     }
 }
 
-/// Blocking client for the framed protocol.
+/// Dial the first responsive address under the policy's connect timeout
+/// and apply the policy's socket options.
+fn dial(addrs: &[SocketAddr], policy: &RetryPolicy) -> Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for a in addrs {
+        match TcpStream::connect_timeout(a, policy.connect_timeout) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                s.set_read_timeout(policy.read_timeout).ok();
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    let e = last
+        .unwrap_or_else(|| io::Error::new(io::ErrorKind::NotConnected, "no addresses to dial"));
+    Err(anyhow::Error::new(e).context("connect"))
+}
+
+/// Retry/backoff knobs for [`Client`]'s transient-failure handling.
+///
+/// Transient means the request may succeed if simply tried again: an
+/// admission rejection from the server's bounded queue ("service
+/// overloaded"), a connection reset/refusal, or a read timeout. Anything
+/// else — a protocol error, a codec failure, an unknown model — is
+/// returned immediately; retrying cannot fix it.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retry attempts after the first try (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before retry `k` (0-based) is `base_delay << k`, capped at
+    /// [`Self::max_delay`], then jittered to 50–100% of that value so a
+    /// burst of rejected clients does not re-converge on the same instant.
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+    /// Timeout for establishing the TCP connection.
+    pub connect_timeout: Duration,
+    /// Socket read timeout while awaiting a response (`None` = block
+    /// until the peer answers or closes).
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 4,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast policy: no retries, no read timeout — the pre-policy
+    /// client behaviour (what [`Client::connect`] uses).
+    pub fn none() -> Self {
+        Self {
+            max_retries: 0,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: None,
+        }
+    }
+
+    /// Jittered exponential backoff before 0-based retry `attempt`.
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.max_delay);
+        exp.mul_f64(0.5 + 0.5 * rng.f64())
+    }
+}
+
+/// Io error kinds that signal a transient transport failure (the peer or
+/// network hiccuped; the byte stream is dead but a fresh connection may
+/// work).
+fn is_transient_io(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::NotConnected
+            | io::ErrorKind::TimedOut
+            | io::ErrorKind::WouldBlock
+    )
+}
+
+/// Whether any cause in `e`'s chain is a transient io error.
+fn has_transient_io(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<io::Error>()
+            .is_some_and(|io_err| is_transient_io(io_err.kind()))
+    })
+}
+
+/// How one request attempt failed, for the retry loop.
+enum CallError {
+    /// Worth retrying after backoff; `reconnect` says whether the
+    /// connection byte stream is suspect and must be re-established.
+    Transient { error: anyhow::Error, reconnect: bool },
+    Fatal(anyhow::Error),
+}
+
+/// Blocking client for the framed protocol, with bounded retry and
+/// jittered exponential backoff for transient failures.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Resolved server addresses, kept so a retry can re-dial.
+    addrs: Vec<SocketAddr>,
+    policy: RetryPolicy,
+    rng: Rng,
 }
 
 impl Client {
+    /// Connect fail-fast (no retries, no read timeout).
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
-        let stream = TcpStream::connect(addr).context("connect")?;
-        stream.set_nodelay(true).ok();
+        Self::connect_with(addr, RetryPolicy::none())
+    }
+
+    /// Connect under `policy`: the dial honours
+    /// [`RetryPolicy::connect_timeout`] and transient connect failures
+    /// are retried with backoff like any other request.
+    pub fn connect_with(addr: impl std::net::ToSocketAddrs, policy: RetryPolicy) -> Result<Client> {
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .context("resolve server address")?
+            .collect();
+        if addrs.is_empty() {
+            bail!("server address resolved to nothing");
+        }
+        // Seed the jitter from wall clock + pid: backoff spread needs
+        // distinctness across client processes, not reproducibility.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9E37_79B9);
+        let mut rng = Rng::new(nanos ^ ((std::process::id() as u64) << 32));
+        let mut attempt = 0u32;
+        let stream = loop {
+            match dial(&addrs, &policy) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if attempt >= policy.max_retries || !has_transient_io(&e) {
+                        return Err(e);
+                    }
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    attempt += 1;
+                }
+            }
+        };
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            addrs,
+            policy,
+            rng,
         })
     }
 
-    fn call(&mut self, req: Frame) -> Result<Frame> {
-        req.write_to(&mut self.writer)?;
-        let resp = Frame::read_from(&mut self.reader)?;
+    /// Replace the connection after a transport-level failure (the old
+    /// byte stream may be dead or desynchronized mid-frame).
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = dial(&self.addrs, &self.policy)?;
+        self.reader = BufReader::new(stream.try_clone()?);
+        self.writer = BufWriter::new(stream);
+        Ok(())
+    }
+
+    /// One request/response exchange on the current connection.
+    fn call_once(&mut self, req: &Frame) -> std::result::Result<Frame, CallError> {
+        if let Err(e) = req.write_to(&mut self.writer) {
+            let reconnect = has_transient_io(&e);
+            return Err(if reconnect {
+                CallError::Transient { error: e, reconnect: true }
+            } else {
+                CallError::Fatal(e)
+            });
+        }
+        let resp = match Frame::read_from(&mut self.reader) {
+            Ok(f) => f,
+            Err(e) => {
+                let reconnect = has_transient_io(&e);
+                return Err(if reconnect {
+                    CallError::Transient { error: e, reconnect: true }
+                } else {
+                    CallError::Fatal(e)
+                });
+            }
+        };
         if let Frame::Error { message } = &resp {
-            anyhow::bail!("server error: {message}");
+            let error = anyhow::anyhow!("server error: {message}");
+            // An admission rejection leaves the connection at a clean
+            // frame boundary — retry on the same connection; anything
+            // else the server reports is not fixed by retrying.
+            return Err(if message.contains("overloaded") {
+                CallError::Transient { error, reconnect: false }
+            } else {
+                CallError::Fatal(error)
+            });
         }
         Ok(resp)
+    }
+
+    fn call(&mut self, req: Frame) -> Result<Frame> {
+        let mut attempt = 0u32;
+        loop {
+            match self.call_once(&req) {
+                Ok(resp) => return Ok(resp),
+                Err(CallError::Fatal(e)) => return Err(e),
+                Err(CallError::Transient { error, reconnect }) => {
+                    if attempt >= self.policy.max_retries {
+                        return Err(error.context(format!(
+                            "request failed after {} attempt(s)",
+                            attempt + 1
+                        )));
+                    }
+                    std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+                    attempt += 1;
+                    if reconnect {
+                        // A failed re-dial is itself transient: charge an
+                        // attempt and keep backing off.
+                        if let Err(e) = self.reconnect() {
+                            if attempt > self.policy.max_retries || !has_transient_io(&e) {
+                                return Err(e.context("reconnect for retry"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     pub fn compress(&mut self, model: &str, pixels: u32, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {

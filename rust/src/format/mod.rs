@@ -1,0 +1,267 @@
+//! Self-delimiting page frames — the integrity layer under paged
+//! container formats (BBC4).
+//!
+//! A frame is `[magic | body_len u32 | page header | payload | crc32]`.
+//! Three properties make damaged files recoverable page-by-page:
+//!
+//! * **self-delimiting** — `body_len` lets a reader skip a frame without
+//!   understanding its payload, so one parser bug or corrupt page never
+//!   desynchronizes the rest of the file;
+//! * **integrity-checked** — the CRC-32 covers everything from the length
+//!   field through the payload, so a flipped bit anywhere in the frame
+//!   (including the length itself) is detected, never silently decoded;
+//! * **resynchronizable** — the leading [`PAGE_MAGIC`] is *excluded* from
+//!   the CRC, so a reader can re-find page boundaries after a torn region
+//!   by scanning for the magic, and an index-guided reader can recover a
+//!   page whose magic bytes themselves were damaged (the CRC still
+//!   vouches for the body).
+//!
+//! The ANS payload gives no integrity signal at all — any bit pattern is
+//! a decodable state — which is why this layer exists: without it a
+//! single flipped bit silently corrupts every image in the container.
+
+use crate::util::crc32;
+
+/// Leading bytes of every page frame. Deliberately non-ASCII so runs of
+/// text or zeros in headers/payloads cannot alias a frame start.
+pub const PAGE_MAGIC: [u8; 4] = [0xB4, 0x50, 0x47, 0x1A]; // ´PG␚
+
+/// Fixed page-header bytes inside the body: index, first_image,
+/// num_images (u32 LE each).
+pub const PAGE_HEADER_LEN: usize = 12;
+
+/// Frame bytes beyond the payload: magic + body_len + header + crc.
+pub const FRAME_OVERHEAD: usize = 4 + 4 + PAGE_HEADER_LEN + 4;
+
+/// Cap on `body_len` so a corrupted length field cannot demand an absurd
+/// skip or allocation (matches the wire protocol's 256 MiB frame cap).
+pub const MAX_BODY: usize = 256 << 20;
+
+/// One page: a self-contained slice of the dataset plus its chain bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageFrame {
+    /// Position of this page in the container's page sequence (also the
+    /// chunk index that seeds the page's clean-bit supply).
+    pub index: u32,
+    /// Global index of the first image coded in this page.
+    pub first_image: u32,
+    /// Number of images coded in this page.
+    pub num_images: u32,
+    /// Opaque payload (a serialized ANS message).
+    pub payload: Vec<u8>,
+}
+
+impl PageFrame {
+    /// Serialized size of this frame.
+    pub fn byte_len(&self) -> usize {
+        FRAME_OVERHEAD + self.payload.len()
+    }
+
+    /// Append the frame to `out`: magic, body length, header, payload,
+    /// then a CRC-32 over body length + header + payload.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        let body_len = (PAGE_HEADER_LEN + self.payload.len()) as u32;
+        out.extend_from_slice(&PAGE_MAGIC);
+        let crc_from = out.len();
+        out.extend_from_slice(&body_len.to_le_bytes());
+        out.extend_from_slice(&self.index.to_le_bytes());
+        out.extend_from_slice(&self.first_image.to_le_bytes());
+        out.extend_from_slice(&self.num_images.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32::hash(&out[crc_from..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+
+    /// The CRC this frame serializes with (what a trailer index records).
+    pub fn crc(&self) -> u32 {
+        let mut h = crc32::Hasher::new();
+        let body_len = (PAGE_HEADER_LEN + self.payload.len()) as u32;
+        h.update(&body_len.to_le_bytes());
+        h.update(&self.index.to_le_bytes());
+        h.update(&self.first_image.to_le_bytes());
+        h.update(&self.num_images.to_le_bytes());
+        h.update(&self.payload);
+        h.finalize()
+    }
+}
+
+/// Outcome of reading one frame at a byte offset.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A valid frame; `next` is the offset one past its last byte.
+    Ok { frame: PageFrame, next: usize },
+    /// The bytes at the offset do not start with [`PAGE_MAGIC`].
+    NoMagic,
+    /// Magic and length are present but the frame runs past the end of
+    /// the buffer — the file was truncated mid-frame.
+    Truncated { need: usize, have: usize },
+    /// The frame is structurally present but fails validation; `detail`
+    /// names the mismatch (CRC values, implausible length).
+    Damaged { detail: String },
+}
+
+/// Read one frame starting exactly at `pos`, magic included.
+pub fn read_frame(b: &[u8], pos: usize) -> FrameRead {
+    if pos + 4 > b.len() || b[pos..pos + 4] != PAGE_MAGIC {
+        return FrameRead::NoMagic;
+    }
+    read_frame_body(b, pos)
+}
+
+/// Read the frame body at `pos` **without** checking the magic — the
+/// index-guided recovery path, where the trailer index vouches for the
+/// offset and the CRC vouches for the body even if the magic bytes were
+/// damaged.
+pub fn read_frame_body(b: &[u8], pos: usize) -> FrameRead {
+    let body_at = pos + 4;
+    if body_at + 4 > b.len() {
+        return FrameRead::Truncated {
+            need: body_at + 4,
+            have: b.len(),
+        };
+    }
+    let body_len = u32::from_le_bytes(b[body_at..body_at + 4].try_into().unwrap()) as usize;
+    if !(PAGE_HEADER_LEN..=MAX_BODY).contains(&body_len) {
+        return FrameRead::Damaged {
+            detail: format!("implausible page body length {body_len}"),
+        };
+    }
+    let end = body_at + 4 + body_len + 4; // len field + body + crc
+    if end > b.len() {
+        return FrameRead::Truncated {
+            need: end,
+            have: b.len(),
+        };
+    }
+    let computed = crc32::hash(&b[body_at..end - 4]);
+    let stored = u32::from_le_bytes(b[end - 4..end].try_into().unwrap());
+    if computed != stored {
+        return FrameRead::Damaged {
+            detail: format!("page CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"),
+        };
+    }
+    let h = body_at + 4;
+    let frame = PageFrame {
+        index: u32::from_le_bytes(b[h..h + 4].try_into().unwrap()),
+        first_image: u32::from_le_bytes(b[h + 4..h + 8].try_into().unwrap()),
+        num_images: u32::from_le_bytes(b[h + 8..h + 12].try_into().unwrap()),
+        payload: b[h + PAGE_HEADER_LEN..end - 4].to_vec(),
+    };
+    FrameRead::Ok { frame, next: end }
+}
+
+/// Find the next possible frame start at or after `from` (the salvage
+/// scanner's resync step after a torn region).
+pub fn find_magic(b: &[u8], from: usize) -> Option<usize> {
+    if from >= b.len() {
+        return None;
+    }
+    b[from..]
+        .windows(4)
+        .position(|w| w == PAGE_MAGIC)
+        .map(|p| from + p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PageFrame {
+        PageFrame {
+            index: 3,
+            first_image: 42,
+            num_images: 7,
+            payload: vec![0xDE, 0xAD, 0xBE, 0xEF, 0x00, 0x11],
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        assert_eq!(buf.len(), f.byte_len());
+        match read_frame(&buf, 0) {
+            FrameRead::Ok { frame, next } => {
+                assert_eq!(frame, f);
+                assert_eq!(next, buf.len());
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crc_matches_serialized_frame() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        let stored = u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+        assert_eq!(stored, f.crc());
+    }
+
+    #[test]
+    fn every_flipped_bit_is_detected() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        // Any single bit flip anywhere in the frame must be caught: the
+        // magic flips to NoMagic, everything else to Damaged/Truncated.
+        for byte in 0..buf.len() {
+            for bit in 0..8 {
+                let mut bad = buf.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    !matches!(read_frame(&bad, 0), FrameRead::Ok { .. }),
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_detected() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        for cut in 0..buf.len() {
+            assert!(
+                !matches!(read_frame(&buf[..cut], 0), FrameRead::Ok { .. }),
+                "truncation to {cut} bytes went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn body_read_recovers_smashed_magic() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        buf[0] = 0x00; // damage the magic only
+        assert!(matches!(read_frame(&buf, 0), FrameRead::NoMagic));
+        match read_frame_body(&buf, 0) {
+            FrameRead::Ok { frame, .. } => assert_eq!(frame, f),
+            other => panic!("expected body recovery, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn find_magic_resyncs_past_garbage() {
+        let f = sample();
+        let mut buf = vec![0xFF; 9];
+        f.write_to(&mut buf);
+        assert_eq!(find_magic(&buf, 0), Some(9));
+        assert_eq!(find_magic(&buf, 10), None);
+        assert_eq!(find_magic(&[], 0), None);
+    }
+
+    #[test]
+    fn implausible_length_is_damaged_not_panic() {
+        let f = sample();
+        let mut buf = Vec::new();
+        f.write_to(&mut buf);
+        buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_frame(&buf, 0), FrameRead::Damaged { .. }));
+        buf[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(read_frame(&buf, 0), FrameRead::Damaged { .. }));
+    }
+}

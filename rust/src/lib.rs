@@ -27,6 +27,7 @@ pub mod bench;
 pub mod codecs;
 pub mod coordinator;
 pub mod data;
+pub mod format;
 pub mod model;
 pub mod runtime;
 pub mod simd;

@@ -1,9 +1,11 @@
 //! `bbans` — command-line front end for the BB-ANS compression system.
 //!
 //! Subcommands:
-//!   info                         show artifact/model info
+//!   info       [-i FILE]         artifact/model info, or container inspection
 //!   compress   -m MODEL -i IDX -o FILE [-n N] [--native] [--latent-bits B]
-//!   decompress -i FILE -o IDX [--native]
+//!              [--format bbc4]
+//!   decompress -i FILE -o IDX [--native] [--salvage]
+//!   verify     -i FILE           integrity-check a container without decoding
 //!   serve      [--bind ADDR] [--native] [--max-jobs J] [--max-batch-delay-ms D]
 //!              [--queue-cap Q] [--fanout-workers W]
 //!   client     --addr ADDR --stats
@@ -15,8 +17,9 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use bbans::bbans::bbc4::{Bbc4Container, Bbc4Model, MAGIC_BBC4};
 use bbans::bbans::container::{
-    Container, HierContainer, ParallelContainer, MAGIC_HIER, MAGIC_PARALLEL,
+    Container, HierContainer, ParallelContainer, MAGIC, MAGIC_HIER, MAGIC_PARALLEL,
 };
 use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
@@ -72,19 +75,21 @@ fn parse_args(argv: &[String]) -> Args {
 }
 
 fn is_switch(name: &str) -> bool {
-    matches!(name, "native" | "stats" | "binarized" | "help")
+    matches!(name, "native" | "stats" | "binarized" | "help" | "salvage")
 }
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bbans <info|compress|decompress|serve|client> [args]\n\
+        "usage: bbans <info|compress|decompress|verify|serve|client> [args]\n\
          \n\
-         bbans info\n\
+         bbans info       [-i FILE]\n\
          bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native] [--chunks K]\n\
+                          [--format bbc4]\n\
          bbans compress   --layers L -i images.idx -o out.bbc [--schedule naive|bitswap]\n\
                           [--hier-dims 32,16,8] [--hier-hidden H] [--hier-seed S]\n\
-                          [--binarized] [--chunks K]\n\
-         bbans decompress -i in.bbc -o out.idx [--native]\n\
+                          [--binarized] [--chunks K] [--format bbc4]\n\
+         bbans decompress -i in.bbc -o out.idx [--native] [--salvage]\n\
+         bbans verify     -i in.bbc\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16]\n\
                           [--max-batch-delay-ms 2] [--queue-cap 256] [--fanout-workers W]\n\
          bbans client     --addr HOST:PORT --stats\n\
@@ -94,6 +99,9 @@ fn usage() -> ! {
          --layers L codes through an L-layer hierarchical VAE (Bit-Swap by\n\
          default; produces a self-describing BBC3 container that any bbans\n\
          binary can decode without artifacts).\n\
+         --format bbc4 wraps each chain in a CRC-framed page with a redundant\n\
+         trailer index; `verify` checks integrity without decoding and\n\
+         `decompress --salvage` recovers every intact page after damage.\n\
          \n\
          Artifacts default to ./artifacts ($BBANS_ARTIFACTS overrides)."
     );
@@ -108,9 +116,10 @@ fn main() {
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
     let result = match cmd.as_str() {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "compress" => cmd_compress(&args),
         "decompress" => cmd_decompress(&args),
+        "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         _ => usage(),
@@ -167,7 +176,10 @@ fn bbans_config(args: &Args) -> BbAnsConfig {
     cfg
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    if let Some(input) = args.flags.get("input") {
+        return container_info(&PathBuf::from(input));
+    }
     let dir = default_artifact_dir();
     let config = load_config(&dir)?;
     println!("artifact dir : {}", dir.display());
@@ -196,6 +208,131 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// `info -i FILE`: report a container's format and what integrity signal
+/// it carries (none, or per-page CRC with a salvageable index).
+fn container_info(input: &std::path::Path) -> Result<()> {
+    let bytes = std::fs::read(input)?;
+    let magic: &[u8] = if bytes.len() >= 4 { &bytes[0..4] } else { &[] };
+    println!("file      : {}", input.display());
+    println!("size      : {} bytes", bytes.len());
+    if magic == MAGIC_BBC4 {
+        let s = Bbc4Container::salvage(&bytes)?;
+        let c = &s.container;
+        let kind = match &c.model {
+            Bbc4Model::Vae { .. } => "single-layer VAE".to_string(),
+            Bbc4Model::Hier { dims, .. } => format!("{}-layer hierarchy", dims.len()),
+        };
+        println!("format    : BBC4 v1 ({kind})");
+        println!(
+            "model     : {} (backend {})",
+            c.model.name(),
+            c.model.backend_id()
+        );
+        println!("images    : {} across {} pages", c.num_images, c.n_pages);
+        println!(
+            "integrity : per-page CRC-32 + CRC'd header + redundant trailer \
+             index (salvageable with `decompress --salvage`)"
+        );
+        if s.report.is_clean() {
+            println!("status    : intact ({})", s.report.summary());
+        } else {
+            println!("status    : DAMAGED ({})", s.report.summary());
+        }
+        return Ok(());
+    }
+    let (name, detail) = if magic == MAGIC_HIER {
+        let hc = HierContainer::from_bytes(&bytes)?;
+        (
+            "BBC3",
+            format!(
+                "{}-layer hierarchy, {} chunks, {} images",
+                hc.dims.len(),
+                hc.chunks.len(),
+                hc.num_images()
+            ),
+        )
+    } else if magic == MAGIC_PARALLEL {
+        let pc = ParallelContainer::from_bytes(&bytes)?;
+        (
+            "BBC2",
+            format!(
+                "model '{}', {} chunks, {} images",
+                pc.model,
+                pc.chunks.len(),
+                pc.num_images()
+            ),
+        )
+    } else if magic == MAGIC {
+        let c = Container::from_bytes(&bytes)?;
+        (
+            "BBC1",
+            format!("model '{}', single chain, {} images", c.model, c.num_images),
+        )
+    } else {
+        bail!("unrecognized container magic (not BBC1/BBC2/BBC3/BBC4)");
+    };
+    println!("format    : {name}");
+    println!("layout    : {detail}");
+    println!(
+        "integrity : none — {name} carries no checksums; corruption surfaces \
+         as a parse error or garbage pixels (re-encode with --format bbc4)"
+    );
+    Ok(())
+}
+
+/// `verify -i FILE`: integrity-check a container without decoding pixels.
+/// Exits nonzero when any page fails its checksum. Pre-BBC4 formats can
+/// only be structurally parsed — they carry no integrity data.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
+    let bytes = std::fs::read(&input)?;
+    let magic: &[u8] = if bytes.len() >= 4 { &bytes[0..4] } else { &[] };
+    if magic == MAGIC_BBC4 {
+        let s = Bbc4Container::salvage(&bytes)?;
+        let r = &s.report;
+        println!("{}: BBC4, {}", input.display(), r.summary());
+        if r.is_clean() {
+            println!("all pages pass CRC; header and trailer index intact");
+            return Ok(());
+        }
+        for (start, end) in &r.damaged_ranges {
+            println!("  damaged byte range [{start}, {end})");
+        }
+        if !r.images_lost.is_empty() {
+            println!("  unrecoverable image indices: {:?}", r.images_lost);
+        }
+        bail!(
+            "{} of {} pages failed verification",
+            r.pages_total - r.pages_recovered,
+            r.pages_total
+        );
+    }
+    let (name, detail) = if magic == MAGIC_HIER {
+        let hc = HierContainer::from_bytes(&bytes)?;
+        (
+            "BBC3",
+            format!("{} chunks, {} images", hc.chunks.len(), hc.num_images()),
+        )
+    } else if magic == MAGIC_PARALLEL {
+        let pc = ParallelContainer::from_bytes(&bytes)?;
+        (
+            "BBC2",
+            format!("{} chunks, {} images", pc.chunks.len(), pc.num_images()),
+        )
+    } else if magic == MAGIC {
+        let c = Container::from_bytes(&bytes)?;
+        ("BBC1", format!("single chain, {} images", c.num_images))
+    } else {
+        bail!("unrecognized container magic (not BBC1/BBC2/BBC3/BBC4)");
+    };
+    println!(
+        "{}: {name}, {detail}; structure parses, but {name} carries no \
+         checksums — damage cannot be detected (re-encode with --format bbc4)",
+        input.display()
+    );
+    Ok(())
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i IDX")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o FILE")?);
@@ -215,12 +352,44 @@ fn cmd_compress(args: &Args) -> Result<()> {
             .map_err(|_| anyhow!("invalid --chunks value '{v}' (want a positive integer)"))?,
         None => 1,
     };
+    let bbc4 = match args.flags.get("format").map(String::as_str) {
+        None => false,
+        Some("bbc4") => true,
+        Some(other) => bail!(
+            "unsupported --format '{other}' (supported: bbc4; omit the flag \
+             for the default container each path produces)"
+        ),
+    };
 
     if args.flags.contains_key("layers") {
-        return cmd_compress_hier(args, images, rows * cols, raw_bytes, chunks, &output);
+        return cmd_compress_hier(args, images, rows * cols, raw_bytes, chunks, bbc4, &output);
     }
 
     let model = args.flags.get("model").context("need -m MODEL")?.clone();
+    if bbc4 {
+        // Integrity-checked paged container: one CRC-framed page per chain
+        // plus a redundant trailer index, so `decompress --salvage` can
+        // recover intact pages after partial damage. Encodes on the native
+        // backend like the BBC2 path (pages are coded on threads).
+        let backend = load_native(default_artifact_dir(), &model)?;
+        let codec = VaeCodec::new(&backend, bbans_config(args))?;
+        let t = std::time::Instant::now();
+        let container = Bbc4Container::encode_vae(&codec, &images, chunks)?;
+        let dt = t.elapsed();
+        let bytes = container.to_bytes();
+        std::fs::write(&output, &bytes)?;
+        let n_images = container.num_images;
+        let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
+        println!(
+            "compressed {n_images} images into {} integrity-checked pages (BBC4): \
+             {raw_bytes} -> {} bytes ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+            container.n_pages,
+            bytes.len(),
+            dt.as_secs_f64(),
+            n_images as f64 / dt.as_secs_f64(),
+        );
+        return Ok(());
+    }
     if chunks > 1 {
         // Chunk-parallel fast path: independent chains on threads, native
         // backend (the PJRT handles are not Sync; it parallelizes through
@@ -275,6 +444,7 @@ fn cmd_compress_hier(
     pixels: usize,
     raw_bytes: usize,
     chunks: usize,
+    bbc4: bool,
     output: &std::path::Path,
 ) -> Result<()> {
     let layers: usize = args
@@ -353,6 +523,26 @@ fn cmd_compress_hier(
     };
     let backend = HierVae::random(meta, seed);
     let codec = HierCodec::new(&backend, bbans_config(args), schedule)?;
+    if bbc4 {
+        let t = std::time::Instant::now();
+        let container = Bbc4Container::encode_hier(&codec, &images, chunks)?;
+        let dt = t.elapsed();
+        let bytes = container.to_bytes();
+        std::fs::write(output, &bytes)?;
+        let n_images = container.num_images;
+        let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
+        println!(
+            "compressed {n_images} images through {layers}-layer hierarchy ({} schedule) \
+             into {} integrity-checked pages (BBC4): {raw_bytes} -> {} bytes \
+             ({bpd:.4} bits/dim) in {:.2}s ({:.1} img/s)",
+            schedule.name(),
+            container.n_pages,
+            bytes.len(),
+            dt.as_secs_f64(),
+            n_images as f64 / dt.as_secs_f64(),
+        );
+        return Ok(());
+    }
     let t = std::time::Instant::now();
     let container = HierContainer::encode_with(&codec, &images, chunks)?;
     let dt = t.elapsed();
@@ -376,6 +566,17 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o IDX")?);
     let container = std::fs::read(&input)?;
+
+    let is_bbc4 = container.len() >= 4 && &container[0..4] == MAGIC_BBC4;
+    if args.switches.contains("salvage") && !is_bbc4 {
+        bail!(
+            "--salvage requires a BBC4 container (earlier formats carry no \
+             per-page integrity data to salvage from)"
+        );
+    }
+    if is_bbc4 {
+        return decompress_bbc4(args, &container, &output);
+    }
 
     if container.len() >= 4 && &container[0..4] == MAGIC_HIER {
         // Hierarchical container: the header is self-describing, so the
@@ -440,6 +641,64 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         output.display()
     );
     svc.shutdown();
+    Ok(())
+}
+
+/// Decode a BBC4 container: strict by default (any damage is an error);
+/// `--salvage` decodes every intact page and reports what was lost.
+fn decompress_bbc4(args: &Args, bytes: &[u8], output: &std::path::Path) -> Result<()> {
+    let (c, report) = if args.switches.contains("salvage") {
+        let s = Bbc4Container::salvage(bytes)?;
+        (s.container, Some(s.report))
+    } else {
+        (Bbc4Container::from_bytes(bytes)?, None)
+    };
+    let t = std::time::Instant::now();
+    let slots = match &c.model {
+        Bbc4Model::Vae { model, backend_id } => {
+            let backend = load_native(default_artifact_dir(), model)?;
+            if *backend_id != backend.backend_id() {
+                bail!(
+                    "container encoded with backend '{backend_id}', local backend is '{}'",
+                    backend.backend_id()
+                );
+            }
+            let codec = VaeCodec::new(&backend, c.cfg)?;
+            c.decode_slots_vae(&codec)?
+        }
+        Bbc4Model::Hier { schedule, .. } => {
+            let backend = c.build_hier_backend()?;
+            let codec = HierCodec::new(&backend, c.cfg, *schedule)?;
+            c.decode_slots_hier(&codec)?
+        }
+    };
+    let dt = t.elapsed();
+    let images: Vec<Vec<u8>> = slots.into_iter().flatten().collect();
+    let n = write_square_idx(images, output)?;
+    match report {
+        Some(r) if !r.is_clean() => {
+            println!("salvage: {}", r.summary());
+            for (start, end) in &r.damaged_ranges {
+                println!("  damaged byte range [{start}, {end})");
+            }
+            if !r.images_lost.is_empty() {
+                println!("  lost image indices: {:?}", r.images_lost);
+            }
+            println!(
+                "recovered {n} of {} images in {:.2}s -> {}",
+                r.images_total,
+                dt.as_secs_f64(),
+                output.display()
+            );
+        }
+        _ => println!(
+            "decompressed {n} images ({} CRC-verified pages) in {:.2}s ({:.1} img/s) -> {}",
+            c.n_pages,
+            dt.as_secs_f64(),
+            n as f64 / dt.as_secs_f64(),
+            output.display()
+        ),
+    }
     Ok(())
 }
 

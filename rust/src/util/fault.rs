@@ -1,0 +1,173 @@
+//! Deterministic fault injection for container robustness testing.
+//!
+//! Models the storage failures a container can meet in the wild — flipped
+//! bits, files truncated mid-write, torn writes that leave a stale tail,
+//! zeroed sectors — as reproducible [`Fault`] values. Campaigns are
+//! seeded, so a failing case prints a description that replays exactly.
+
+use crate::util::rng::Rng;
+
+/// One storage fault, applicable to any byte buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// XOR one bit.
+    BitFlip { offset: usize, bit: u8 },
+    /// Drop everything past `len` (interrupted write / short read).
+    Truncate { len: usize },
+    /// Zero a byte range (a blanked sector).
+    ZeroFill { start: usize, len: usize },
+    /// Torn write: bytes from `at` on are replaced with pseudo-random
+    /// garbage derived from `stale_seed` (the old sector contents), same
+    /// total length.
+    Torn { at: usize, stale_seed: u64 },
+}
+
+impl Fault {
+    /// Apply the fault to a copy of `bytes`. Out-of-range positions clamp
+    /// rather than panic, so campaigns can be generated independently of
+    /// the exact buffer size.
+    pub fn apply(&self, bytes: &[u8]) -> Vec<u8> {
+        let mut out = bytes.to_vec();
+        match *self {
+            Fault::BitFlip { offset, bit } => {
+                if let Some(b) = out.get_mut(offset) {
+                    *b ^= 1 << (bit & 7);
+                }
+            }
+            Fault::Truncate { len } => out.truncate(len),
+            Fault::ZeroFill { start, len } => {
+                let s = start.min(out.len());
+                let e = (start + len).min(out.len());
+                out[s..e].fill(0);
+            }
+            Fault::Torn { at, stale_seed } => {
+                let s = at.min(out.len());
+                let mut stale = Rng::new(stale_seed | 1);
+                for b in &mut out[s..] {
+                    *b = stale.next_u64() as u8;
+                }
+            }
+        }
+        out
+    }
+
+    /// A replayable one-line description for assertion messages.
+    pub fn describe(&self) -> String {
+        match *self {
+            Fault::BitFlip { offset, bit } => format!("bit flip at byte {offset} bit {bit}"),
+            Fault::Truncate { len } => format!("truncation to {len} bytes"),
+            Fault::ZeroFill { start, len } => format!("zero fill of {len} bytes at {start}"),
+            Fault::Torn { at, stale_seed } => {
+                format!("torn write at {at} (stale seed {stale_seed:#x})")
+            }
+        }
+    }
+}
+
+/// A seeded mixed campaign over a `len`-byte buffer: `n` faults drawn from
+/// all four kinds with uniformly random positions. Deterministic in
+/// `(seed, len, n)`.
+pub fn campaign(seed: u64, len: usize, n: usize) -> Vec<Fault> {
+    let mut rng = Rng::new(seed | 1);
+    let mut out = Vec::with_capacity(n);
+    let pos = |rng: &mut Rng| rng.below(len.max(1) as u64) as usize;
+    for _ in 0..n {
+        out.push(match rng.below(4) {
+            0 => Fault::BitFlip {
+                offset: pos(&mut rng),
+                bit: rng.below(8) as u8,
+            },
+            1 => Fault::Truncate { len: pos(&mut rng) },
+            2 => Fault::ZeroFill {
+                start: pos(&mut rng),
+                len: 1 + pos(&mut rng) / 4,
+            },
+            _ => Fault::Torn {
+                at: pos(&mut rng),
+                stale_seed: rng.next_u64(),
+            },
+        });
+    }
+    out
+}
+
+/// Truncations bracketing every boundary in `boundaries` (each ±1 and
+/// exact), deduplicated and clamped to `len` — the frame-edge sweep that
+/// catches off-by-one parsing.
+pub fn boundary_truncations(boundaries: &[usize], len: usize) -> Vec<Fault> {
+    let mut cuts: Vec<usize> = boundaries
+        .iter()
+        .flat_map(|&b| [b.saturating_sub(1), b, b + 1])
+        .map(|c| c.min(len))
+        .collect();
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.into_iter().map(|len| Fault::Truncate { len }).collect()
+}
+
+/// One bit flip in every byte position stride-`stride` across the buffer
+/// (bit index varies deterministically) — a cheap full-coverage sweep.
+pub fn bitflip_sweep(len: usize, stride: usize) -> Vec<Fault> {
+    (0..len)
+        .step_by(stride.max(1))
+        .map(|offset| Fault::BitFlip {
+            offset,
+            bit: (offset % 8) as u8,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_are_deterministic_and_clamped() {
+        let data: Vec<u8> = (0..64u8).collect();
+        let c1 = campaign(7, data.len(), 20);
+        let c2 = campaign(7, data.len(), 20);
+        assert_eq!(c1, c2, "campaigns must replay exactly");
+        for f in &c1 {
+            let mutated = f.apply(&data);
+            assert_eq!(mutated, f.apply(&data), "{} not deterministic", f.describe());
+            assert!(mutated.len() <= data.len());
+        }
+        // Out-of-range positions are no-ops or clamps, never panics.
+        let far = Fault::BitFlip {
+            offset: 10_000,
+            bit: 3,
+        };
+        assert_eq!(far.apply(&data), data);
+        let zf = Fault::ZeroFill {
+            start: 60,
+            len: 100,
+        };
+        assert_eq!(zf.apply(&data)[60..], [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn boundary_truncations_bracket_each_edge() {
+        let cuts = boundary_truncations(&[0, 10, 64], 64);
+        let lens: Vec<usize> = cuts
+            .iter()
+            .map(|f| match f {
+                Fault::Truncate { len } => *len,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(lens, vec![0, 1, 9, 10, 11, 63, 64]);
+    }
+
+    #[test]
+    fn torn_write_keeps_prefix_and_length() {
+        let data = vec![0xAB; 32];
+        let torn = Fault::Torn {
+            at: 8,
+            stale_seed: 99,
+        };
+        let out = torn.apply(&data);
+        assert_eq!(out.len(), 32);
+        assert_eq!(out[..8], data[..8]);
+        assert_ne!(out[8..], data[8..]);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bitio;
 pub mod crc32;
+pub mod fault;
 pub mod json;
 pub mod math;
 pub mod prop;

@@ -16,7 +16,7 @@ use bbans::bbans::container::HierContainer;
 use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::BbAnsConfig;
 use bbans::coordinator::protocol::{Frame, HierSpec};
-use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::coordinator::{Client, ModelService, RetryPolicy, Server, ServiceParams};
 use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::rng::Rng;
@@ -275,6 +275,73 @@ fn overload_rejected_over_tcp() {
     gate_tx.send(()).unwrap();
     let out = occupant.join().unwrap();
     assert!(out.is_ok(), "{out:?}");
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// Satellite: a client with a retry policy rides out an overloaded server.
+/// The first attempt is rejected at admission ("overloaded"); the backoff
+/// retries land after the queue drains and the request succeeds — no
+/// caller-visible error despite the transient rejection.
+#[test]
+fn overloaded_then_drained_request_succeeds_with_retry() {
+    let _wd = Watchdog::new(120);
+    // Gate the backend factory so the worker cannot drain the queue yet.
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let params = ServiceParams {
+        max_jobs: 8,
+        max_batch_delay: Duration::from_millis(1),
+        queue_cap: 1,
+        ..Default::default()
+    };
+    let svc = ModelService::spawn_with(params, move || {
+        gate_rx.recv().ok();
+        Ok(toy_map())
+    });
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    // The first request occupies the only queue slot.
+    let occupant = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("toy", 64, sample_images(2, 7))
+    });
+    while svc.metrics.queue_depth.load(Ordering::Relaxed) < 1 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Release the gate as soon as the retrying client has been rejected
+    // at least once, so its backoff retries meet a drained queue.
+    let rejected = {
+        let metrics = svc.metrics.clone();
+        std::thread::spawn(move || {
+            while metrics.rejected.load(Ordering::Relaxed) < 1 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            gate_tx.send(()).unwrap();
+        })
+    };
+
+    let images = sample_images(2, 8);
+    let mut c2 = Client::connect_with(
+        addr,
+        RetryPolicy {
+            max_retries: 10,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_millis(500),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let container = c2.compress("toy", 64, images.clone()).unwrap();
+    assert_eq!(c2.decompress(container).unwrap(), images);
+
+    // The success came *after* at least one admission rejection — the
+    // retry path, not a lucky first attempt.
+    assert!(svc.metrics.rejected.load(Ordering::Relaxed) >= 1);
+    rejected.join().unwrap();
+    assert!(occupant.join().unwrap().is_ok());
 
     server.stop();
     svc.shutdown();
