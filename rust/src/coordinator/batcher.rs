@@ -44,9 +44,28 @@
 //! carries a [`HierSpec`] (seed + shape instead of a hosted-model name),
 //! is validated by the exact admission the BBC3 decode path uses, and
 //! shares its rebuilt-backend memo cache.
+//!
+//! ## Fault containment
+//!
+//! Each round's work is split into **execution units** — one compress
+//! group per model, one hierarchical job, one container decode — and
+//! every unit runs under `catch_unwind`. A panicking backend dispatch or
+//! codec step therefore fails only that unit's jobs (each reply gets
+//! `internal panic: …` naming the payload) while the worker thread keeps
+//! serving; a supervisor quarantines a unit key (model name /
+//! rebuilt-header key) after [`ServiceParams::quarantine_after`]
+//! consecutive panics so a poisoned model fast-fails instead of
+//! re-panicking forever. Jobs whose TTL expired while queued are shed at
+//! round formation, before any NN dispatch. Worker liveness is exported
+//! through a drop guard on [`Metrics::worker_dead`] — it flips on EVERY
+//! exit path, including an uncontained panic — so
+//! [`ServiceHandle::is_alive`] and [`ServiceHandle::health_json`] need no
+//! queue round-trip.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -70,6 +89,7 @@ use crate::model::{
     vae::NativeVae, vae::PjrtVae, Backend, Likelihood, ModelMeta, PixelParams, PosteriorBatch,
 };
 use crate::runtime::{load_config, Engine};
+use crate::util::json::Json;
 
 /// Service tuning knobs.
 #[derive(Debug, Clone)]
@@ -91,6 +111,15 @@ pub struct ServiceParams {
     /// persistent phase pool (`0` = available parallelism). Ignored by
     /// the single-threaded (PJRT-constrained) worker.
     pub fanout_workers: usize,
+    /// Default TTL applied to jobs submitted without an explicit one:
+    /// jobs whose deadline passes while they queue are shed at round
+    /// formation (replied "deadline exceeded") before any NN dispatch.
+    /// `None` = jobs never expire while queued.
+    pub default_ttl: Option<Duration>,
+    /// Consecutive panicking execution units before their key (model
+    /// name / rebuilt-header key) is quarantined: subsequent requests
+    /// for it fast-fail instead of re-panicking. Clamped to >= 1.
+    pub quarantine_after: u32,
 }
 
 impl Default for ServiceParams {
@@ -101,6 +130,8 @@ impl Default for ServiceParams {
             queue_cap: 256,
             bbans: BbAnsConfig::default(),
             fanout_workers: 0,
+            default_ttl: None,
+            quarantine_after: 3,
         }
     }
 }
@@ -149,18 +180,23 @@ enum Job {
 }
 
 /// A job plus its admission timestamp — drives the flush deadline and
-/// the queue-wait histogram.
+/// the queue-wait histogram — and its optional expiry deadline.
 struct Queued {
     job: Job,
     at: Instant,
+    /// Absolute deadline computed at admission from the job's TTL (or
+    /// the service default). `None` = never expires while queued.
+    deadline: Option<Instant>,
 }
 
 /// Handle to the model-worker thread. Clonable; all clones feed the same
 /// bounded batcher queue.
 pub struct ModelService {
-    tx: mpsc::SyncSender<Queued>,
+    /// `None` once shutdown has run (so `Drop` cannot double-join).
+    tx: Option<mpsc::SyncSender<Queued>>,
     pub metrics: Arc<Metrics>,
     handle: Option<JoinHandle<()>>,
+    default_ttl: Option<Duration>,
 }
 
 /// Cheap clonable submitter (no join handle).
@@ -168,7 +204,12 @@ pub struct ModelService {
 pub struct ServiceHandle {
     tx: mpsc::SyncSender<Queued>,
     pub metrics: Arc<Metrics>,
+    default_ttl: Option<Duration>,
 }
+
+/// How long [`ModelService::shutdown`] and `Drop` keep nudging a full
+/// admission queue before falling back to the channel-drop path.
+const SHUTDOWN_PATIENCE: Duration = Duration::from_secs(5);
 
 impl ModelService {
     /// Spawn with the standard artifact-backed backends. The PJRT path
@@ -219,45 +260,86 @@ impl ModelService {
         let (tx, rx) = mpsc::sync_channel::<Queued>(params.queue_cap.max(1));
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
+        let default_ttl = params.default_ttl;
         let handle = std::thread::Builder::new()
             .name("bbans-model-worker".into())
             .spawn(move || worker_loop(rx, m2, params, factory))
             .expect("spawn model worker");
         ModelService {
-            tx,
+            tx: Some(tx),
             metrics,
             handle: Some(handle),
+            default_ttl,
         }
     }
 
     pub fn handle(&self) -> ServiceHandle {
         ServiceHandle {
-            tx: self.tx.clone(),
+            tx: self.tx.as_ref().expect("service not shut down").clone(),
             metrics: self.metrics.clone(),
+            default_ttl: self.default_ttl,
         }
     }
 
     pub fn shutdown(mut self) {
-        // Blocking send on purpose: shutdown must not be droppable by a
-        // momentarily full queue (it is NOT counted in queue metrics).
-        let _ = self.tx.send(Queued {
-            job: Job::Shutdown,
-            at: Instant::now(),
-        });
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.shutdown_bounded(SHUTDOWN_PATIENCE);
+    }
+
+    /// Deadline-bounded shutdown: returns `true` if the worker joined
+    /// within `patience`. On `false` the worker thread is detached — it
+    /// still exits on its own once its queue drains to the dropped
+    /// channel, but the caller stops waiting (a worker wedged in a long
+    /// round must not wedge shutdown with it).
+    pub fn shutdown_within(mut self, patience: Duration) -> bool {
+        self.shutdown_bounded(patience)
+    }
+
+    fn shutdown_bounded(&mut self, patience: Duration) -> bool {
+        let deadline = Instant::now() + patience;
+        if let Some(tx) = self.tx.take() {
+            // Bounded send: a queue wedged full must not block shutdown
+            // forever. If the Shutdown job never fits, dropping `tx`
+            // disconnects the channel once every handle clone is gone,
+            // which the worker treats as shutdown too.
+            loop {
+                let q = Queued {
+                    job: Job::Shutdown,
+                    at: Instant::now(),
+                    deadline: None,
+                };
+                match tx.try_send(q) {
+                    Ok(()) | Err(mpsc::TrySendError::Disconnected(_)) => break,
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        if Instant::now() >= deadline {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+        match self.handle.take() {
+            None => true,
+            Some(h) => loop {
+                if h.is_finished() {
+                    let _ = h.join();
+                    return true;
+                }
+                if Instant::now() >= deadline {
+                    // Detach: the worker exits on its own later; the
+                    // liveness bit (drop guard) records when it does.
+                    return false;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            },
         }
     }
 }
 
 impl Drop for ModelService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Queued {
-            job: Job::Shutdown,
-            at: Instant::now(),
-        });
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if self.tx.is_some() || self.handle.is_some() {
+            self.shutdown_bounded(SHUTDOWN_PATIENCE);
         }
     }
 }
@@ -265,11 +347,15 @@ impl Drop for ModelService {
 impl ServiceHandle {
     /// Admit one job to the bounded queue without blocking. A full queue
     /// is the backpressure signal: the caller gets an immediate error
-    /// instead of feeding a silently growing backlog.
-    fn submit(&self, job: Job) -> Result<()> {
+    /// instead of feeding a silently growing backlog. The job's expiry
+    /// deadline is fixed here, at admission, from `ttl` (or the service
+    /// default when `ttl` is `None`).
+    fn submit(&self, job: Job, ttl: Option<Duration>) -> Result<()> {
+        let deadline = ttl.or(self.default_ttl).map(|t| Instant::now() + t);
         match self.tx.try_send(Queued {
             job,
             at: Instant::now(),
+            deadline,
         }) {
             Ok(()) => {
                 Metrics::inc(&self.metrics.queue_depth, 1);
@@ -284,13 +370,26 @@ impl ServiceHandle {
     }
 
     pub fn compress(&self, model: &str, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        self.compress_with(model, images, None)
+    }
+
+    /// [`ServiceHandle::compress`] with a per-request TTL: if the job is
+    /// still queued when the TTL elapses it is shed (never dispatched)
+    /// and the reply is "deadline exceeded".
+    pub fn compress_with(
+        &self,
+        model: &str,
+        images: Vec<Vec<u8>>,
+        ttl: Option<Duration>,
+    ) -> Result<Vec<u8>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Compress {
+        let job = Job::Compress {
             model: model.to_string(),
             images,
             reply,
-        })?;
+        };
+        self.submit(job, ttl)?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -303,13 +402,24 @@ impl ServiceHandle {
     /// by seed + shape in `spec`; admission mirrors the BBC3 decode path
     /// (seed, parameter budget, backend-id agreement).
     pub fn compress_hier(&self, spec: HierSpec, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        self.compress_hier_with(spec, images, None)
+    }
+
+    /// [`ServiceHandle::compress_hier`] with a per-request TTL.
+    pub fn compress_hier_with(
+        &self,
+        spec: HierSpec,
+        images: Vec<Vec<u8>>,
+        ttl: Option<Duration>,
+    ) -> Result<Vec<u8>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::CompressHier {
+        let job = Job::CompressHier {
             spec,
             images,
             reply,
-        })?;
+        };
+        self.submit(job, ttl)?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -319,9 +429,18 @@ impl ServiceHandle {
     }
 
     pub fn decompress(&self, container: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        self.decompress_with(container, None)
+    }
+
+    /// [`ServiceHandle::decompress`] with a per-request TTL.
+    pub fn decompress_with(
+        &self,
+        container: Vec<u8>,
+        ttl: Option<Duration>,
+    ) -> Result<Vec<Vec<u8>>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Decompress { container, reply })?;
+        self.submit(Job::Decompress { container, reply }, ttl)?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -330,10 +449,67 @@ impl ServiceHandle {
         out
     }
 
+    /// Metrics snapshot, served handle-side from the shared
+    /// [`Metrics`] — NOT through the bounded admission queue, so the
+    /// stats probe still answers when the queue is full or the worker is
+    /// dead (observability must survive exactly the conditions it exists
+    /// to diagnose).
     pub fn stats_json(&self) -> Result<String> {
+        Ok(self.metrics.snapshot_json().to_string())
+    }
+
+    /// Legacy worker-side stats path: round-trips a `Job::Stats` through
+    /// admission, so it shares the queue's fate. Kept one release for
+    /// callers that used the round-trip as a liveness side-channel —
+    /// probe [`ServiceHandle::health_json`] instead.
+    pub fn stats_json_via_worker(&self) -> Result<String> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Stats { reply })?;
+        self.submit(Job::Stats { reply }, None)?;
         rx.recv().map_err(|_| anyhow!("service dropped request"))
+    }
+
+    /// Whether the model-worker thread is still running. Every worker
+    /// exit path — clean shutdown, channel drop, uncontained panic —
+    /// flips the liveness bit on the shared metrics through a drop
+    /// guard, so this needs no queue round-trip.
+    pub fn is_alive(&self) -> bool {
+        !self.metrics.worker_dead.load(Ordering::Relaxed)
+    }
+
+    /// Health snapshot for load-balancer probes: liveness, queue depth,
+    /// quarantine set, and fault counters. Handle-side like
+    /// [`ServiceHandle::stats_json`] — it must answer while the service
+    /// is unhealthy.
+    pub fn health_json(&self) -> String {
+        let m = &self.metrics;
+        Json::obj(vec![
+            ("alive", Json::Bool(self.is_alive())),
+            (
+                "queue_depth",
+                Json::Num(m.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "panics",
+                Json::Num(m.panics.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "expired",
+                Json::Num(m.expired.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rounds",
+                Json::Num(m.rounds.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "heartbeat",
+                Json::Num(m.heartbeat.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "quarantined",
+                Json::Arr(m.quarantined_keys().into_iter().map(Json::Str).collect()),
+            ),
+        ])
+        .to_string()
     }
 }
 
@@ -345,32 +521,44 @@ fn config_models(config: &crate::util::json::Json) -> Result<Vec<String>> {
     }
 }
 
-/// Load one named native backend from the artifact bundle.
+/// Load one named native backend from the artifact bundle. Every config
+/// error routes through `Result` naming the offending field — a
+/// malformed `model_config.json` must reach callers as the worker's
+/// "backend init failed" reply, never panic the worker at init.
 fn native_backend(
     artifact_dir: &Path,
     config: &crate::util::json::Json,
     name: &str,
 ) -> Result<NativeVae> {
-    let m = config.get("models").unwrap().get(name).unwrap();
+    let m = config
+        .get("models")
+        .ok_or_else(|| anyhow!("model_config.json missing 'models'"))?
+        .get(name)
+        .ok_or_else(|| anyhow!("model_config.json missing models.{name}"))?;
+    let usize_field = |obj: &Json, what: &str, key: &str| -> Result<usize> {
+        obj.req(key)
+            .map_err(|e| anyhow!("{what}: {e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("{what}.{key} is not a non-negative integer"))
+    };
+    let str_field = |key: &str| -> Result<&str> {
+        m.req(key)
+            .map_err(|e| anyhow!("models.{name}: {e}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("models.{name}.{key} is not a string"))
+    };
     let meta = ModelMeta {
         name: name.to_string(),
-        pixels: config.req("pixels").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-        latent_dim: m.req("latent_dim").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-        hidden: m.req("hidden").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap(),
-        likelihood: Likelihood::parse(
-            m.req("likelihood").map_err(|e| anyhow!("{e}"))?.as_str().unwrap(),
-        )?,
+        pixels: usize_field(config, "model_config.json", "pixels")?,
+        latent_dim: usize_field(m, &format!("models.{name}"), "latent_dim")?,
+        hidden: usize_field(m, &format!("models.{name}"), "hidden")?,
+        likelihood: Likelihood::parse(str_field("likelihood")?)?,
         test_elbo_bpd: m
             .get("test_elbo_bpd")
             .and_then(|v| v.as_f64())
             .unwrap_or(f64::NAN),
     };
-    let weights = artifact_dir.join(
-        m.req("weights")
-            .map_err(|e| anyhow!("{e}"))?
-            .as_str()
-            .unwrap(),
-    );
+    let weights = artifact_dir.join(str_field("weights")?);
     NativeVae::load(weights, meta)
 }
 
@@ -405,6 +593,93 @@ fn native_backends(artifact_dir: &Path) -> Result<HashMap<String, SharedBackend>
 
 // ------------------------------------------------------------ the worker
 
+/// Flips [`Metrics::worker_dead`] when the worker thread unwinds or
+/// returns — installed first thing in [`worker_loop`], so the liveness
+/// bit is accurate on EVERY exit path, including an uncontained panic.
+struct AliveGuard(Arc<Metrics>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.worker_dead.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Per-key consecutive-panic accounting. Lives on the worker thread; the
+/// quarantine SET itself lives in [`Metrics`] so handle-side probes read
+/// it without a queue round-trip.
+struct Supervisor {
+    consecutive: HashMap<String, u32>,
+    after: u32,
+}
+
+impl Supervisor {
+    fn new(after: u32) -> Self {
+        Supervisor {
+            consecutive: HashMap::new(),
+            after: after.max(1),
+        }
+    }
+
+    fn note_ok(&mut self, key: &str) {
+        self.consecutive.remove(key);
+    }
+
+    fn note_panic(&mut self, metrics: &Metrics, key: &str) {
+        let n = self.consecutive.entry(key.to_string()).or_insert(0);
+        *n += 1;
+        if *n >= self.after {
+            metrics.quarantine(key);
+            eprintln!("[coordinator] quarantined '{key}' after {n} consecutive panics");
+        }
+    }
+}
+
+/// Best-effort text out of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Settle one contained execution unit: on success clear the key's
+/// panic streak; on panic reply `internal panic: …` to every job in the
+/// unit (through reply clones taken before the unit consumed its jobs —
+/// a late send to an already-answered caller is harmless) and feed the
+/// supervisor.
+fn settle_unit<T>(
+    metrics: &Metrics,
+    sup: &mut Supervisor,
+    key: &str,
+    run: std::thread::Result<()>,
+    replies: &[mpsc::Sender<Result<T, String>>],
+) {
+    match run {
+        Ok(()) => sup.note_ok(key),
+        Err(payload) => {
+            let msg = format!("internal panic: {}", panic_message(payload.as_ref()));
+            eprintln!("[coordinator] contained panic in unit '{key}': {msg}");
+            Metrics::inc(&metrics.panics, 1);
+            for reply in replies {
+                Metrics::inc(&metrics.errors, 1);
+                let _ = reply.send(Err(msg.clone()));
+            }
+            sup.note_panic(metrics, key);
+        }
+    }
+}
+
+/// Quarantine key for hierarchical (seed + shape) models — shared
+/// between the `CompressHier` path and every rebuilt-header decode path
+/// (BBC3, BBC4-hier), so a header that panics the rebuild-and-decode
+/// machinery quarantines the same key a compress spec for it would.
+fn hier_quarantine_key(seed: u64, hidden: u32, lik_tag: u8, dims: &[u32]) -> String {
+    format!("hier:s{seed}|h{hidden}|l{lik_tag}|{dims:?}")
+}
+
 fn worker_loop<F>(
     rx: mpsc::Receiver<Queued>,
     metrics: Arc<Metrics>,
@@ -413,6 +688,7 @@ fn worker_loop<F>(
 ) where
     F: FnOnce() -> Result<BackendSet>,
 {
+    let _alive = AliveGuard(metrics.clone());
     let backends = match factory() {
         Ok(b) => b,
         Err(e) => {
@@ -445,6 +721,7 @@ fn worker_loop<F>(
     // against one published model, and a rebuild re-derives every weight
     // from the seed.
     let mut hier_cache: HashMap<String, HierVae> = HashMap::new();
+    let mut supervisor = Supervisor::new(params.quarantine_after);
 
     loop {
         // Block for the first job.
@@ -452,6 +729,7 @@ fn worker_loop<F>(
             Ok(q) => q,
             Err(_) => return,
         };
+        Metrics::inc(&metrics.heartbeat, 1);
         // The flush deadline is anchored to the OLDEST job's ADMISSION
         // time: queue time spent waiting behind the previous round counts
         // against the linger budget, so under load rounds flush
@@ -482,13 +760,37 @@ fn worker_loop<F>(
         let mut hier: Vec<HierJob> = Vec::new();
         let mut decompress: Vec<DecompressJob> = Vec::new();
         let mut saw_shutdown = false;
-        for Queued { job, at } in jobs {
+        for Queued { job, at, deadline } in jobs {
             if matches!(job, Job::Shutdown) {
                 saw_shutdown = true;
                 continue;
             }
             Metrics::dec(&metrics.queue_depth, 1);
             metrics.queue_wait.observe(at.elapsed());
+            // Shed expired jobs HERE, at round formation — before the
+            // round spends a single NN dispatch on work whose caller
+            // already gave up.
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                Metrics::inc(&metrics.expired, 1);
+                let msg = format!(
+                    "deadline exceeded: job expired after {}ms in queue",
+                    at.elapsed().as_millis()
+                );
+                match job {
+                    Job::Compress { reply, .. } | Job::CompressHier { reply, .. } => {
+                        let _ = reply.send(Err(msg));
+                    }
+                    Job::Decompress { reply, .. } => {
+                        let _ = reply.send(Err(msg));
+                    }
+                    // Stats carries no TTL-sensitive work; answer anyway.
+                    Job::Stats { reply } => {
+                        let _ = reply.send(metrics.snapshot_json().to_string());
+                    }
+                    Job::Shutdown => unreachable!("filtered above"),
+                }
+                continue;
+            }
             match job {
                 Job::Compress {
                     model,
@@ -508,17 +810,61 @@ fn worker_loop<F>(
             }
         }
 
+        // Each unit below runs under `catch_unwind`: a panic fails only
+        // that unit's jobs and feeds the supervisor; the loop continues.
         for (model, group) in compress {
             Metrics::inc(&metrics.requests, group.len() as u64);
-            encode_group(&backends, &params, &metrics, &model, group);
+            if metrics.is_quarantined(&model) {
+                for (_, reply) in group {
+                    Metrics::inc(&metrics.errors, 1);
+                    let msg = format!("model '{model}' is quarantined after repeated panics");
+                    let _ = reply.send(Err(msg));
+                }
+                continue;
+            }
+            let replies: Vec<CompressReply> = group.iter().map(|(_, r)| r.clone()).collect();
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                encode_group(&backends, &params, &metrics, &model, group);
+            }));
+            settle_unit(&metrics, &mut supervisor, &model, run, &replies);
         }
         if !hier.is_empty() {
             Metrics::inc(&metrics.requests, hier.len() as u64);
-            compress_hier_jobs(&backends, &params, &metrics, hier, &mut hier_cache);
+            for (spec, images, reply) in hier {
+                let key = hier_quarantine_key(
+                    spec.seed,
+                    spec.hidden,
+                    spec.likelihood.tag(),
+                    &spec.dims,
+                );
+                if metrics.is_quarantined(&key) {
+                    Metrics::inc(&metrics.errors, 1);
+                    let msg = format!("'{key}' is quarantined after repeated panics");
+                    let _ = reply.send(Err(msg));
+                    continue;
+                }
+                let replies = [reply.clone()];
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    compress_hier_job(
+                        &backends,
+                        &params,
+                        &metrics,
+                        (spec, images, reply),
+                        &mut hier_cache,
+                    );
+                }));
+                settle_unit(&metrics, &mut supervisor, &key, run, &replies);
+            }
         }
         if !decompress.is_empty() {
             Metrics::inc(&metrics.requests, decompress.len() as u64);
-            decode_jobs(&backends, &metrics, decompress, &mut hier_cache);
+            decode_jobs(
+                &backends,
+                &metrics,
+                &mut supervisor,
+                decompress,
+                &mut hier_cache,
+            );
         }
         metrics.batch_latency.observe(t_batch.elapsed());
 
@@ -747,73 +1093,158 @@ fn batched_encode<E: PhaseExecutor>(
     }
 }
 
-/// Sniff and route one round's decompress jobs: BBC2 and BBC3 containers
-/// go to their dedicated decoders (over the phase pool when the backends
-/// are `Sync`); plain BBC1 containers group by model and run the unified
-/// lock-step [`batched_decode`] loop on the matching executor.
+/// Sniff and route one round's decompress jobs: BBC2/BBC3/BBC4
+/// containers go to their dedicated decoders (over the phase pool when
+/// the backends are `Sync`); plain BBC1 containers group by model and
+/// run the unified lock-step [`batched_decode`] loop on the matching
+/// executor. Containers are parsed FIRST, outside any unwind barrier
+/// (parsing is panic-free; pinned by the fault-injection fuzz
+/// campaigns), so every decode unit has its quarantine key before it
+/// runs; each unit then executes under `catch_unwind`.
 fn decode_jobs(
     backends: &BackendSet,
     metrics: &Metrics,
+    sup: &mut Supervisor,
     jobs: Vec<DecompressJob>,
     hier_cache: &mut HashMap<String, HierVae>,
 ) {
     type GroupJob = (Container, DecompressReply);
+    enum Parsed {
+        Bbc2(ParallelContainer, DecompressReply),
+        Bbc3(HierContainer, DecompressReply),
+        Bbc4(Bbc4Container, DecompressReply),
+    }
+    impl Parsed {
+        fn reply(&self) -> &DecompressReply {
+            match self {
+                Parsed::Bbc2(_, r) | Parsed::Bbc3(_, r) | Parsed::Bbc4(_, r) => r,
+            }
+        }
+    }
+    let fail = |reply: DecompressReply, msg: String| {
+        Metrics::inc(&metrics.errors, 1);
+        let _ = reply.send(Err(msg));
+    };
+    let hier_key = |hc: &HierContainer| {
+        hier_quarantine_key(hc.weight_seed, hc.hidden, hc.likelihood.tag(), &hc.dims)
+    };
+
     let mut by_model: HashMap<String, Vec<GroupJob>> = HashMap::new();
+    let mut singles: Vec<(String, Parsed)> = Vec::new();
     for (bytes, reply) in jobs {
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
-            decode_parallel_container(backends, metrics, &bytes, reply);
+            match ParallelContainer::from_bytes(&bytes) {
+                Ok(pc) => singles.push((pc.model.clone(), Parsed::Bbc2(pc, reply))),
+                Err(e) => fail(reply, format!("bad container: {e:#}")),
+            }
             continue;
         }
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
-            let workers = match backends {
-                BackendSet::Local(_) => None,
-                BackendSet::Shared { pool, .. } => Some(pool.lanes()),
-            };
-            decode_hier_container(workers, metrics, &bytes, reply, hier_cache);
+            match HierContainer::from_bytes(&bytes) {
+                Ok(hc) => singles.push((hier_key(&hc), Parsed::Bbc3(hc, reply))),
+                Err(e) => fail(reply, format!("bad container: {e:#}")),
+            }
             continue;
         }
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_BBC4 {
-            decode_bbc4_container(backends, metrics, &bytes, reply, hier_cache);
+            match Bbc4Container::from_bytes(&bytes) {
+                Ok(c) => {
+                    let key = match &c.model {
+                        Bbc4Model::Vae { model, .. } => model.clone(),
+                        Bbc4Model::Hier { .. } => match c.hier_shell() {
+                            Ok(shell) => hier_key(&shell),
+                            Err(e) => {
+                                fail(reply, format!("bad container: {e:#}"));
+                                continue;
+                            }
+                        },
+                    };
+                    singles.push((key, Parsed::Bbc4(c, reply)));
+                }
+                Err(e) => fail(reply, format!("bad container: {e:#}")),
+            }
             continue;
         }
         match Container::from_bytes(&bytes) {
             Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
-            Err(e) => {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = reply.send(Err(format!("bad container: {e:#}")));
-            }
+            Err(e) => fail(reply, format!("bad container: {e:#}")),
         }
     }
 
-    for (model, group) in by_model {
-        let reject = |group: Vec<GroupJob>| {
-            for (_, reply) in group {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = reply.send(Err(format!("unknown model '{model}'")));
+    for (key, parsed) in singles {
+        if metrics.is_quarantined(&key) {
+            let msg = format!("'{key}' is quarantined after repeated panics");
+            match parsed {
+                Parsed::Bbc2(_, r) | Parsed::Bbc3(_, r) | Parsed::Bbc4(_, r) => fail(r, msg),
             }
-        };
-        match backends {
-            BackendSet::Local(map) => match map.get(&model) {
-                Some(b) => {
-                    let id = b.backend_id();
-                    let exec = SerialExecutor {
-                        backend: b.as_ref(),
-                    };
-                    batched_decode(&exec, b.meta(), &id, metrics, group);
-                }
-                None => reject(group),
-            },
-            BackendSet::Shared { map, pool } => match map.get(&model) {
-                Some(b) => {
-                    let backend: &(dyn Backend + Send + Sync) = &**b;
-                    let id = backend.backend_id();
-                    let exec = PooledExecutor { backend, pool };
-                    batched_decode(&exec, backend.meta(), &id, metrics, group);
-                }
-                None => reject(group),
-            },
+            continue;
         }
+        let replies = [parsed.reply().clone()];
+        let run = catch_unwind(AssertUnwindSafe(|| match parsed {
+            Parsed::Bbc2(pc, reply) => decode_parallel_container(backends, metrics, pc, reply),
+            Parsed::Bbc3(hc, reply) => {
+                let workers = match backends {
+                    BackendSet::Local(_) => None,
+                    BackendSet::Shared { pool, .. } => Some(pool.lanes()),
+                };
+                decode_hier_container(workers, metrics, hc, reply, hier_cache);
+            }
+            Parsed::Bbc4(c, reply) => decode_bbc4_container(backends, metrics, c, reply, hier_cache),
+        }));
+        settle_unit(metrics, sup, &key, run, &replies);
+    }
+
+    for (model, group) in by_model {
+        if metrics.is_quarantined(&model) {
+            for (_, reply) in group {
+                let msg = format!("model '{model}' is quarantined after repeated panics");
+                fail(reply, msg);
+            }
+            continue;
+        }
+        let replies: Vec<DecompressReply> = group.iter().map(|(_, r)| r.clone()).collect();
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            decode_group(backends, metrics, &model, group);
+        }));
+        settle_unit(metrics, sup, &model, run, &replies);
+    }
+}
+
+/// Route one model's BBC1 decode group to the right executor over the
+/// unified [`batched_decode`] loop.
+fn decode_group(
+    backends: &BackendSet,
+    metrics: &Metrics,
+    model: &str,
+    group: Vec<(Container, DecompressReply)>,
+) {
+    let reject = |group: Vec<(Container, DecompressReply)>| {
+        for (_, reply) in group {
+            Metrics::inc(&metrics.errors, 1);
+            let _ = reply.send(Err(format!("unknown model '{model}'")));
+        }
+    };
+    match backends {
+        BackendSet::Local(map) => match map.get(model) {
+            Some(b) => {
+                let id = b.backend_id();
+                let exec = SerialExecutor {
+                    backend: b.as_ref(),
+                };
+                batched_decode(&exec, b.meta(), &id, metrics, group);
+            }
+            None => reject(group),
+        },
+        BackendSet::Shared { map, pool } => match map.get(model) {
+            Some(b) => {
+                let backend: &(dyn Backend + Send + Sync) = &**b;
+                let id = backend.backend_id();
+                let exec = PooledExecutor { backend, pool };
+                batched_decode(&exec, backend.meta(), &id, metrics, group);
+            }
+            None => reject(group),
+        },
     }
 }
 
@@ -1022,16 +1453,12 @@ fn bbc2_codec<'a, B: Backend + ?Sized>(
 fn decode_parallel_container(
     backends: &BackendSet,
     metrics: &Metrics,
-    bytes: &[u8],
+    pc: ParallelContainer,
     reply: DecompressReply,
 ) {
     let fail = |msg: String| {
         Metrics::inc(&metrics.errors, 1);
         let _ = reply.send(Err(msg));
-    };
-    let pc = match ParallelContainer::from_bytes(bytes) {
-        Ok(pc) => pc,
-        Err(e) => return fail(format!("bad container: {e:#}")),
     };
     let decode_err = |e: anyhow::Error| format!("parallel container decode failed: {e:#}");
     let decoded: Result<Vec<Vec<u8>>, String> = match backends {
@@ -1072,17 +1499,13 @@ fn decode_parallel_container(
 fn decode_hier_container(
     workers: Option<usize>,
     metrics: &Metrics,
-    bytes: &[u8],
+    hc: HierContainer,
     reply: DecompressReply,
     cache: &mut HashMap<String, HierVae>,
 ) {
     let fail = |msg: String| {
         Metrics::inc(&metrics.errors, 1);
         let _ = reply.send(Err(msg));
-    };
-    let hc = match HierContainer::from_bytes(bytes) {
-        Ok(hc) => hc,
-        Err(e) => return fail(format!("bad container: {e:#}")),
     };
     let backend = match cached_hier_backend(cache, &hc) {
         Ok(b) => b,
@@ -1133,17 +1556,13 @@ fn bbc4_vae_codec<'a, B: Backend + ?Sized>(
 fn decode_bbc4_container(
     backends: &BackendSet,
     metrics: &Metrics,
-    bytes: &[u8],
+    c: Bbc4Container,
     reply: DecompressReply,
     cache: &mut HashMap<String, HierVae>,
 ) {
     let fail = |msg: String| {
         Metrics::inc(&metrics.errors, 1);
         let _ = reply.send(Err(msg));
-    };
-    let c = match Bbc4Container::from_bytes(bytes) {
-        Ok(c) => c,
-        Err(e) => return fail(format!("bad container: {e:#}")),
     };
     let decode_err = |e: anyhow::Error| format!("BBC4 container decode failed: {e:#}");
     let decoded: Result<Vec<Vec<u8>>, String> = match &c.model {
@@ -1213,31 +1632,30 @@ fn cached_hier_backend<'c>(
     Ok(cache.get(&key).expect("inserted above"))
 }
 
-/// Run one round's hierarchical compress jobs. Chunks within a job
-/// encode across the phase pool when the service owns one; bytes do not
-/// depend on the worker count.
-fn compress_hier_jobs(
+/// Run one hierarchical compress job (one containment unit). Chunks
+/// within a job encode across the phase pool when the service owns one;
+/// bytes do not depend on the worker count.
+fn compress_hier_job(
     backends: &BackendSet,
     params: &ServiceParams,
     metrics: &Metrics,
-    jobs: Vec<HierJob>,
+    job: HierJob,
     cache: &mut HashMap<String, HierVae>,
 ) {
     let workers = match backends {
         BackendSet::Local(_) => 1,
         BackendSet::Shared { pool, .. } => pool.lanes(),
     };
-    for (spec, images, reply) in jobs {
-        match encode_hier(&spec, &images, params, workers, cache) {
-            Ok(bytes) => {
-                Metrics::inc(&metrics.images_encoded, images.len() as u64);
-                Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
-                let _ = reply.send(Ok(bytes));
-            }
-            Err(e) => {
-                Metrics::inc(&metrics.errors, 1);
-                let _ = reply.send(Err(format!("{e:#}")));
-            }
+    let (spec, images, reply) = job;
+    match encode_hier(&spec, &images, params, workers, cache) {
+        Ok(bytes) => {
+            Metrics::inc(&metrics.images_encoded, images.len() as u64);
+            Metrics::inc(&metrics.bytes_out, bytes.len() as u64);
+            let _ = reply.send(Ok(bytes));
+        }
+        Err(e) => {
+            Metrics::inc(&metrics.errors, 1);
+            let _ = reply.send(Err(format!("{e:#}")));
         }
     }
 }
@@ -1547,7 +1965,6 @@ mod tests {
 
     #[test]
     fn full_queue_rejects_with_overloaded_error() {
-        use std::sync::atomic::Ordering;
         // Hold the worker inside its factory so nothing drains, then
         // overfill the bounded admission queue.
         let (gate_tx, gate_rx) = mpsc::channel::<()>();
@@ -1585,6 +2002,320 @@ mod tests {
         for w in waiters {
             assert!(w.join().unwrap().is_ok());
         }
+        svc.shutdown();
+    }
+
+    /// A backend whose recognition net panics on every dispatch —
+    /// the containment tests' poison pill.
+    struct PanicVae(NativeVae);
+
+    impl Backend for PanicVae {
+        fn meta(&self) -> &ModelMeta {
+            self.0.meta()
+        }
+        fn backend_id(&self) -> String {
+            self.0.backend_id()
+        }
+        fn posterior(&self, _xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+            panic!("injected: recognition net exploded")
+        }
+        fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
+            self.0.likelihood(ys)
+        }
+    }
+
+    #[test]
+    fn worker_survives_panicking_backend_and_quarantines_it() {
+        let params = ServiceParams {
+            max_jobs: 4,
+            max_batch_delay: Duration::from_millis(1),
+            quarantine_after: 2,
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, || {
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            let mut boom_meta = toy_meta();
+            boom_meta.name = "boom".into();
+            map.insert(
+                "boom".into(),
+                Box::new(PanicVae(NativeVae::random(boom_meta, 78))),
+            );
+            Ok(map)
+        });
+        let h = svc.handle();
+        for i in 0..2 {
+            let e = h.compress("boom", sample_images(1, 600 + i)).unwrap_err();
+            assert!(e.to_string().contains("internal panic"), "got: {e}");
+            assert!(h.is_alive(), "worker died on contained panic {i}");
+        }
+        // Two consecutive panics tripped the supervisor: the next request
+        // fast-fails on the quarantine list without dispatching.
+        let e = h.compress("boom", sample_images(1, 9)).unwrap_err();
+        assert!(e.to_string().contains("quarantined"), "got: {e}");
+        // The healthy model is unaffected throughout.
+        let images = sample_images(3, 10);
+        let c = h.compress("toy", images.clone()).unwrap();
+        assert_eq!(h.decompress(c).unwrap(), images);
+        assert!(svc.metrics.panics.load(Ordering::Relaxed) >= 2);
+        assert!(svc.metrics.is_quarantined("boom"));
+        assert!(h.health_json().contains("boom"));
+        assert!(h.is_alive());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_before_dispatch() {
+        // Wedge the worker in init so jobs outlive their TTL while
+        // queued; a short-TTL job must be shed while its TTL-free
+        // round-mate completes normally.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let params = ServiceParams {
+            max_jobs: 4,
+            max_batch_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, move || {
+            gate_rx.recv().ok();
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            Ok(map)
+        });
+        let h = svc.handle();
+        let hc = h.clone();
+        let short = std::thread::spawn(move || {
+            hc.compress_with("toy", sample_images(1, 7), Some(Duration::from_millis(10)))
+        });
+        let hc = h.clone();
+        let long = std::thread::spawn(move || hc.compress("toy", sample_images(1, 8)));
+        let t0 = Instant::now();
+        while svc.metrics.queue_depth.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "jobs never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(30)); // let the TTL lapse
+        gate_tx.send(()).unwrap();
+        let e = short.join().unwrap().unwrap_err();
+        assert!(e.to_string().contains("deadline exceeded"), "got: {e}");
+        assert!(long.join().unwrap().is_ok());
+        assert_eq!(svc.metrics.expired.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_and_health_served_while_queue_full() {
+        // Stats must answer from the handle side even when admission
+        // would reject — observability has to survive overload.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let params = ServiceParams {
+            max_jobs: 4,
+            max_batch_delay: Duration::from_millis(1),
+            queue_cap: 1,
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, move || {
+            gate_rx.recv().ok();
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            Ok(map)
+        });
+        let h = svc.handle();
+        let hc = h.clone();
+        let waiter = std::thread::spawn(move || hc.compress("toy", sample_images(1, 1)));
+        let t0 = Instant::now();
+        while svc.metrics.queue_depth.load(Ordering::Relaxed) < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "job never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Queue (cap 1) is full: compress rejects, stats + health answer.
+        assert!(h.compress("toy", sample_images(1, 2)).is_err());
+        let stats = h.stats_json().unwrap();
+        assert!(stats.contains("queue_depth"), "got: {stats}");
+        assert!(h.health_json().contains("alive"));
+        assert!(h.is_alive());
+        // The legacy worker-side path shares the queue's fate.
+        assert!(h.stats_json_via_worker().is_err());
+        gate_tx.send(()).unwrap();
+        assert!(waiter.join().unwrap().is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_bounded_under_saturated_queue() {
+        // Worker wedged in init, queue saturated: the old blocking
+        // shutdown would hang forever on `tx.send`; the bounded one must
+        // give up within its patience and detach.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let params = ServiceParams {
+            max_jobs: 4,
+            max_batch_delay: Duration::from_millis(1),
+            queue_cap: 1,
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, move || {
+            gate_rx.recv().ok();
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            Ok(map)
+        });
+        let h = svc.handle();
+        let waiter = std::thread::spawn(move || h.compress("toy", sample_images(1, 1)));
+        let metrics = svc.metrics.clone();
+        let t0 = Instant::now();
+        while metrics.queue_depth.load(Ordering::Relaxed) < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "job never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t0 = Instant::now();
+        let joined = svc.shutdown_within(Duration::from_millis(200));
+        assert!(!joined, "worker cannot have joined while wedged in init");
+        assert!(t0.elapsed() < Duration::from_secs(5), "shutdown did not bound");
+        // Unwedge the detached worker: the queued caller still gets a
+        // terminal reply (service processes the job, then exits).
+        gate_tx.send(()).unwrap();
+        assert!(waiter.join().unwrap().is_ok());
+        let t0 = Instant::now();
+        while !metrics.worker_dead.load(Ordering::Relaxed) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never exited");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn init_failure_replies_to_every_job_variant() {
+        use crate::bbans::hierarchy::Schedule;
+        let params = ServiceParams {
+            max_batch_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(
+            params,
+            || -> Result<HashMap<String, Box<dyn Backend>>> { bail!("no artifacts here") },
+        );
+        let h = svc.handle();
+        let e = h.compress("toy", sample_images(1, 1)).unwrap_err();
+        assert!(e.to_string().contains("backend init failed"), "got: {e}");
+        let spec = HierSpec {
+            schedule: Schedule::BitSwap,
+            likelihood: Likelihood::Bernoulli,
+            dims: vec![6, 4],
+            hidden: 10,
+            seed: 99,
+            chunks: 2,
+        };
+        let e = h.compress_hier(spec, sample_images(1, 2)).unwrap_err();
+        assert!(e.to_string().contains("backend init failed"), "got: {e}");
+        let e = h.decompress(vec![0u8; 8]).unwrap_err();
+        assert!(e.to_string().contains("backend init failed"), "got: {e}");
+        // Both stats paths still answer in the init-failure drain loop.
+        assert!(h.stats_json_via_worker().is_ok());
+        assert!(h.stats_json().is_ok());
+        assert!(h.is_alive(), "drain loop keeps the worker alive");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queued_jobs_after_shutdown_get_terminal_replies() {
+        // Jobs stuck in the queue BEHIND a shutdown marker are dropped
+        // when the worker exits — their callers must unblock with
+        // "service dropped request", never hang on `rx.recv()`.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let params = ServiceParams {
+            max_jobs: 1,
+            max_batch_delay: Duration::from_millis(1),
+            queue_cap: 8,
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with(params, move || {
+            gate_rx.recv().ok();
+            let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+            map.insert("toy".into(), Box::new(NativeVae::random(toy_meta(), 77)));
+            Ok(map)
+        });
+        let h = svc.handle();
+        // Shutdown lands in the queue FIRST (the worker is wedged in
+        // init), then jobs pile up behind it.
+        svc.tx
+            .as_ref()
+            .unwrap()
+            .try_send(Queued {
+                job: Job::Shutdown,
+                at: Instant::now(),
+                deadline: None,
+            })
+            .unwrap();
+        let mut waiters = Vec::new();
+        for t in 0..3u64 {
+            let h = h.clone();
+            waiters
+                .push(std::thread::spawn(move || h.compress("toy", sample_images(1, 500 + t))));
+        }
+        let t0 = Instant::now();
+        while svc.metrics.queue_depth.load(Ordering::Relaxed) < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "jobs never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        gate_tx.send(()).unwrap();
+        for w in waiters {
+            let e = w.join().unwrap().unwrap_err();
+            assert!(e.to_string().contains("service dropped request"), "got: {e}");
+        }
+        // The worker is already gone; shutdown must return promptly.
+        let t0 = Instant::now();
+        svc.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn malformed_model_config_errors_instead_of_panicking() {
+        let dir = Path::new("/nonexistent");
+        // No 'models' at all.
+        let c = Json::parse(r#"{"pixels": 36}"#).unwrap();
+        let e = format!("{:#}", native_backend(dir, &c, "toy").unwrap_err());
+        assert!(e.contains("models"), "got: {e}");
+        // Unknown model name.
+        let c = Json::parse(r#"{"pixels": 36, "models": {}}"#).unwrap();
+        let e = format!("{:#}", native_backend(dir, &c, "nope").unwrap_err());
+        assert!(e.contains("nope"), "got: {e}");
+        // Model present but missing latent_dim.
+        let c = Json::parse(r#"{"pixels": 36, "models": {"toy": {"hidden": 10}}}"#).unwrap();
+        let e = format!("{:#}", native_backend(dir, &c, "toy").unwrap_err());
+        assert!(e.contains("latent_dim"), "got: {e}");
+        // latent_dim has the wrong type.
+        let c = Json::parse(
+            r#"{"pixels": 36, "models": {"toy": {"latent_dim": "six", "hidden": 10,
+                "likelihood": "bernoulli", "weights": "w.bin"}}}"#,
+        )
+        .unwrap();
+        let e = format!("{:#}", native_backend(dir, &c, "toy").unwrap_err());
+        assert!(e.contains("latent_dim"), "got: {e}");
+        // likelihood has the wrong type.
+        let c = Json::parse(
+            r#"{"pixels": 36, "models": {"toy": {"latent_dim": 6, "hidden": 10,
+                "likelihood": 3, "weights": "w.bin"}}}"#,
+        )
+        .unwrap();
+        let e = format!("{:#}", native_backend(dir, &c, "toy").unwrap_err());
+        assert!(e.contains("likelihood"), "got: {e}");
+        // A malformed config also routes through the worker's init-failure
+        // reply path instead of panicking the worker thread.
+        let params = ServiceParams {
+            max_batch_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let svc = ModelService::spawn_with_sync(params, || {
+            let config = Json::parse(r#"{"pixels": 36, "models": {"toy": {}}}"#).unwrap();
+            let mut map: HashMap<String, SharedBackend> = HashMap::new();
+            map.insert(
+                "toy".into(),
+                Arc::new(native_backend(Path::new("/nonexistent"), &config, "toy")?),
+            );
+            Ok(map)
+        });
+        let h = svc.handle();
+        let e = h.compress("toy", sample_images(1, 1)).unwrap_err();
+        assert!(e.to_string().contains("backend init failed"), "got: {e}");
+        assert!(h.is_alive());
         svc.shutdown();
     }
 

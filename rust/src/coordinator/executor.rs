@@ -207,6 +207,11 @@ impl PhasePool {
     /// Run `f(0..n_jobs)` across the lanes and barrier until every job
     /// has finished. Panics in `f` propagate to the caller; the pool
     /// stays usable. Not reentrant (a job must not call `run`).
+    ///
+    /// The re-raised panic is not the end of the line: the worker loop
+    /// runs every execution unit under its own `catch_unwind` (see
+    /// `batcher.rs`, "Fault containment"), so a phase-job panic fails
+    /// that unit's requests and the worker keeps serving.
     pub(crate) fn run(&self, n_jobs: usize, f: &(dyn Fn(usize) + Sync)) {
         if self.threads.is_empty() || n_jobs <= 1 {
             for i in 0..n_jobs {

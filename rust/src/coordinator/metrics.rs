@@ -1,7 +1,9 @@
 //! Service metrics: atomic counters and log-bucketed latency histograms,
 //! exported as JSON over the stats endpoint.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -92,6 +94,25 @@ pub struct Metrics {
     pub protocol_errors: AtomicU64,
     /// Lock-step batch rounds the worker has run.
     pub rounds: AtomicU64,
+    /// Execution units (a model's round group / one container decode)
+    /// that panicked and were contained by the worker's supervisor.
+    pub panics: AtomicU64,
+    /// Jobs shed at round formation because their deadline passed while
+    /// queued — no NN work was spent on them.
+    pub expired: AtomicU64,
+    /// Set once the model-worker thread has exited, on EVERY exit path
+    /// (clean shutdown, channel drop, or an uncontained panic unwinding
+    /// the thread) — the liveness bit health probes read. Stored
+    /// inverted so the zero-initialized default means "alive".
+    pub worker_dead: AtomicBool,
+    /// Worker wakeup epoch: bumped every time the worker starts a round,
+    /// so two spaced health probes can tell a live-but-idle worker from a
+    /// wedged one under traffic.
+    pub heartbeat: AtomicU64,
+    /// Quarantined execution keys (model names / rebuilt-header keys):
+    /// requests for them fast-fail instead of re-panicking forever.
+    /// Cleared only by restarting the service.
+    pub quarantined: Mutex<BTreeSet<String>>,
     /// Gauge: jobs admitted but not yet drained into a round.
     pub queue_depth: AtomicU64,
     pub batch_latency: Histogram,
@@ -117,6 +138,32 @@ impl Metrics {
     /// an earlier `inc` on the same gauge).
     pub fn dec(gauge: &AtomicU64, by: u64) {
         gauge.fetch_sub(by, Ordering::Relaxed);
+    }
+
+    /// Add an execution key to the quarantine set. Idempotent; the set
+    /// only ever grows (restart the service to clear it).
+    pub fn quarantine(&self, key: &str) {
+        self.quarantined
+            .lock()
+            .expect("quarantine lock poisoned")
+            .insert(key.to_string());
+    }
+
+    pub fn is_quarantined(&self, key: &str) -> bool {
+        self.quarantined
+            .lock()
+            .expect("quarantine lock poisoned")
+            .contains(key)
+    }
+
+    /// Sorted copy of the quarantine set (for health/stats snapshots).
+    pub fn quarantined_keys(&self) -> Vec<String> {
+        self.quarantined
+            .lock()
+            .expect("quarantine lock poisoned")
+            .iter()
+            .cloned()
+            .collect()
     }
 
     /// Mean images per NN dispatch — the batching win (1.0 = no batching).
@@ -176,6 +223,26 @@ impl Metrics {
                 Json::Num(self.rounds.load(Ordering::Relaxed) as f64),
             ),
             (
+                "panics",
+                Json::Num(self.panics.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "expired",
+                Json::Num(self.expired.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "worker_alive",
+                Json::Bool(!self.worker_dead.load(Ordering::Relaxed)),
+            ),
+            (
+                "heartbeat",
+                Json::Num(self.heartbeat.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "quarantined",
+                Json::Arr(self.quarantined_keys().into_iter().map(Json::Str).collect()),
+            ),
+            (
                 "queue_depth",
                 Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64),
             ),
@@ -224,5 +291,27 @@ mod tests {
         // Round-trips through the serializer.
         let text = j.to_string();
         assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn quarantine_set_and_liveness_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.is_quarantined("toy"));
+        m.quarantine("toy");
+        m.quarantine("toy"); // idempotent
+        m.quarantine("hier:s7|h64|l0|[6, 3]");
+        assert!(m.is_quarantined("toy"));
+        assert_eq!(m.quarantined_keys().len(), 2);
+
+        let j = m.snapshot_json();
+        assert_eq!(j.get("worker_alive"), Some(&Json::Bool(true)));
+        match j.get("quarantined") {
+            Some(Json::Arr(keys)) => assert_eq!(keys.len(), 2),
+            other => panic!("quarantined not an array: {other:?}"),
+        }
+
+        m.worker_dead.store(true, Ordering::Relaxed);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("worker_alive"), Some(&Json::Bool(false)));
     }
 }

@@ -14,6 +14,15 @@
 //! Built on std threads/channels only (tokio is unavailable offline, and
 //! the workload — few long-lived connections, CPU-bound coding — doesn't
 //! need an async reactor).
+//!
+//! The tier is built to contain faults, not just detect them: a backend
+//! panic fails only its execution unit (the worker survives and the
+//! supervisor quarantines repeat offenders), queued jobs past their TTL
+//! are shed before any NN dispatch, health probes are answered
+//! handle-side so they work while the service is sick, and servers drain
+//! gracefully. See `batcher.rs` ("Fault containment"), the README's
+//! "Serving failure model" table, and `tests/chaos.rs` for the seeded
+//! campaigns that prove each blast radius.
 
 pub mod batcher;
 pub mod executor;

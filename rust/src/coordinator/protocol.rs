@@ -8,12 +8,22 @@
 //! | 0x01 | `CompressReq`      | model-name len u8, name, pixels u32, n u32, images |
 //! | 0x02 | `DecompressReq`    | container bytes                                |
 //! | 0x03 | `StatsReq`         | —                                              |
-//! | 0x04 | `Shutdown`         | —                                              |
+//! | 0x04 | `Shutdown`         | — (server: stop accepting, drain, exit)        |
 //! | 0x05 | `CompressHierReq`  | hier spec (see below), pixels u32, n u32, images |
+//! | 0x07 | `HealthReq`        | —                                              |
+//! | 0x11 | `CompressReq`+TTL  | ttl_ms u32, then the 0x01 payload              |
+//! | 0x12 | `DecompressReq`+TTL| ttl_ms u32, then the 0x02 payload              |
+//! | 0x15 | `CompressHierReq`+TTL | ttl_ms u32, then the 0x05 payload           |
 //! | 0x81 | `CompressResp`     | container bytes                                |
 //! | 0x82 | `DecompressResp`   | pixels u32, n u32, images                      |
 //! | 0x83 | `StatsResp`        | JSON text                                      |
+//! | 0x87 | `HealthResp`       | JSON text (liveness, quarantine, queue depth)  |
 //! | 0x7f | `Error`            | UTF-8 message                                  |
+//!
+//! The TTL'd request encodings are **version-flagged**: a request whose
+//! `ttl_ms` is `None` serializes byte-identically to the v1 frame (0x01/
+//! 0x02/0x05), so old clients never emit — and old servers never see —
+//! the 0x1x bytes unless a TTL is actually set.
 //!
 //! Every multi-byte integer is little-endian. Image grids (`n` images of
 //! `pixels` bytes each) are validated against the same untrusted-input
@@ -54,26 +64,40 @@ pub struct HierSpec {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Compress `images` (each `pixels` long) with `model`.
+    /// Compress `images` (each `pixels` long) with `model`. With
+    /// `ttl_ms: Some(t)` the job is shed server-side if still queued
+    /// after `t` milliseconds (v2 encoding, old clients never send it).
     CompressReq {
         model: String,
         pixels: u32,
         images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
     },
     /// A BB-ANS container blob.
     CompressResp { container: Vec<u8> },
     /// Decompress a container blob.
-    DecompressReq { container: Vec<u8> },
+    DecompressReq {
+        container: Vec<u8>,
+        ttl_ms: Option<u32>,
+    },
     DecompressResp { pixels: u32, images: Vec<Vec<u8>> },
     /// Compress `images` with a freshly seeded hierarchical model (BBC3).
     CompressHierReq {
         spec: HierSpec,
         pixels: u32,
         images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
     },
     StatsReq,
     /// JSON metrics snapshot.
     StatsResp { json: String },
+    /// Liveness probe: answered by the connection handler from shared
+    /// state, NOT through the admission queue — it must work while the
+    /// worker is dead or the queue is full.
+    HealthReq,
+    /// JSON health snapshot (worker liveness, quarantine set, queue
+    /// depth, fault counters).
+    HealthResp { json: String },
     Error { message: String },
     Shutdown,
 }
@@ -98,29 +122,143 @@ fn read_image_grid(pixels: u32, n: u32, body: &[u8], what: &str) -> Result<Vec<V
         .collect())
 }
 
+/// Split the 4-byte TTL prefix off a v2 (0x1x) request payload.
+fn split_ttl<'a>(p: &'a [u8], what: &str) -> Result<(u32, &'a [u8])> {
+    if p.len() < 4 {
+        bail!("short {what} TTL prefix");
+    }
+    Ok((u32::from_le_bytes(p[0..4].try_into().unwrap()), &p[4..]))
+}
+
+/// Parse the v1 `CompressReq` payload (shared by 0x01 and the TTL'd
+/// 0x11 — same bytes, same validation).
+fn parse_compress_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
+    if p.is_empty() {
+        bail!("short CompressReq");
+    }
+    let mlen = p[0] as usize;
+    if p.len() < 1 + mlen + 8 {
+        bail!("short CompressReq header");
+    }
+    let model = std::str::from_utf8(&p[1..1 + mlen])
+        .context("model name")?
+        .to_string();
+    let pixels = u32::from_le_bytes(p[1 + mlen..5 + mlen].try_into().unwrap());
+    let n = u32::from_le_bytes(p[5 + mlen..9 + mlen].try_into().unwrap());
+    let images = read_image_grid(pixels, n, &p[9 + mlen..], "CompressReq")?;
+    Ok(Frame::CompressReq {
+        model,
+        pixels,
+        images,
+        ttl_ms,
+    })
+}
+
+/// Parse the v1 `CompressHierReq` payload (shared by 0x05 and 0x15).
+fn parse_compress_hier_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
+    // schedule u8 | likelihood u8 | layers u8 | chunks u32 |
+    // hidden u32 | seed u64 | pixels u32 | n u32 = 27 bytes.
+    if p.len() < 27 {
+        bail!("short CompressHierReq header");
+    }
+    let schedule = Schedule::from_tag(p[0])?;
+    let likelihood = Likelihood::from_tag(p[1])?;
+    let layers = p[2] as usize;
+    if !(1..=8).contains(&layers) {
+        bail!("CompressHierReq layer count {layers} out of range 1..=8");
+    }
+    let chunks = u32::from_le_bytes(p[3..7].try_into().unwrap());
+    if chunks == 0 || chunks > MAX_HIER_CHUNKS {
+        bail!("CompressHierReq chunk count {chunks} out of range");
+    }
+    let hidden = u32::from_le_bytes(p[7..11].try_into().unwrap());
+    if hidden == 0 || hidden > 1 << 20 {
+        bail!("CompressHierReq hidden width {hidden} out of range");
+    }
+    let seed = u64::from_le_bytes(p[11..19].try_into().unwrap());
+    if seed == 0 {
+        bail!("CompressHierReq weight seed must be nonzero");
+    }
+    let pixels = u32::from_le_bytes(p[19..23].try_into().unwrap());
+    let n = u32::from_le_bytes(p[23..27].try_into().unwrap());
+    let dims_end = 27 + 4 * layers;
+    if p.len() < dims_end {
+        bail!("short CompressHierReq dims");
+    }
+    let dims: Vec<u32> = (0..layers)
+        .map(|l| u32::from_le_bytes(p[27 + 4 * l..31 + 4 * l].try_into().unwrap()))
+        .collect();
+    if dims.iter().any(|&d| d == 0 || d > 1 << 16) {
+        bail!("CompressHierReq layer dims must be in 1..=65536");
+    }
+    let images = read_image_grid(pixels, n, &p[dims_end..], "CompressHierReq")?;
+    Ok(Frame::CompressHierReq {
+        spec: HierSpec {
+            schedule,
+            likelihood,
+            dims,
+            hidden,
+            seed,
+            chunks,
+        },
+        pixels,
+        images,
+        ttl_ms,
+    })
+}
+
 impl Frame {
     fn type_byte(&self) -> u8 {
         match self {
-            Frame::CompressReq { .. } => 0x01,
-            Frame::DecompressReq { .. } => 0x02,
+            // Requests with a TTL take the version-flagged 0x1x bytes;
+            // without one they stay byte-identical to the v1 encoding.
+            Frame::CompressReq { ttl_ms, .. } => {
+                if ttl_ms.is_some() {
+                    0x11
+                } else {
+                    0x01
+                }
+            }
+            Frame::DecompressReq { ttl_ms, .. } => {
+                if ttl_ms.is_some() {
+                    0x12
+                } else {
+                    0x02
+                }
+            }
             Frame::StatsReq => 0x03,
             Frame::Shutdown => 0x04,
-            Frame::CompressHierReq { .. } => 0x05,
+            Frame::CompressHierReq { ttl_ms, .. } => {
+                if ttl_ms.is_some() {
+                    0x15
+                } else {
+                    0x05
+                }
+            }
+            Frame::HealthReq => 0x07,
             Frame::CompressResp { .. } => 0x81,
             Frame::DecompressResp { .. } => 0x82,
             Frame::StatsResp { .. } => 0x83,
+            Frame::HealthResp { .. } => 0x87,
             Frame::Error { .. } => 0x7f,
         }
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         let mut payload = Vec::new();
+        let push_ttl = |payload: &mut Vec<u8>, ttl_ms: &Option<u32>| {
+            if let Some(t) = ttl_ms {
+                payload.extend_from_slice(&t.to_le_bytes());
+            }
+        };
         match self {
             Frame::CompressReq {
                 model,
                 pixels,
                 images,
+                ttl_ms,
             } => {
+                push_ttl(&mut payload, ttl_ms);
                 payload.push(model.len() as u8);
                 payload.extend_from_slice(model.as_bytes());
                 payload.extend_from_slice(&pixels.to_le_bytes());
@@ -133,7 +271,10 @@ impl Frame {
                 }
             }
             Frame::CompressResp { container } => payload.extend_from_slice(container),
-            Frame::DecompressReq { container } => payload.extend_from_slice(container),
+            Frame::DecompressReq { container, ttl_ms } => {
+                push_ttl(&mut payload, ttl_ms);
+                payload.extend_from_slice(container);
+            }
             Frame::DecompressResp { pixels, images } => {
                 payload.extend_from_slice(&pixels.to_le_bytes());
                 payload.extend_from_slice(&(images.len() as u32).to_le_bytes());
@@ -145,7 +286,9 @@ impl Frame {
                 spec,
                 pixels,
                 images,
+                ttl_ms,
             } => {
+                push_ttl(&mut payload, ttl_ms);
                 payload.push(spec.schedule.tag());
                 payload.push(spec.likelihood.tag());
                 payload.push(spec.dims.len() as u8);
@@ -164,8 +307,9 @@ impl Frame {
                     payload.extend_from_slice(img);
                 }
             }
-            Frame::StatsReq | Frame::Shutdown => {}
+            Frame::StatsReq | Frame::Shutdown | Frame::HealthReq => {}
             Frame::StatsResp { json } => payload.extend_from_slice(json.as_bytes()),
+            Frame::HealthResp { json } => payload.extend_from_slice(json.as_bytes()),
             Frame::Error { message } => payload.extend_from_slice(message.as_bytes()),
         }
         let total = payload.len() + 1;
@@ -185,80 +329,31 @@ impl Frame {
             bail!("empty frame");
         };
         Ok(match ty {
-            0x01 => {
-                if p.is_empty() {
-                    bail!("short CompressReq");
-                }
-                let mlen = p[0] as usize;
-                if p.len() < 1 + mlen + 8 {
-                    bail!("short CompressReq header");
-                }
-                let model = std::str::from_utf8(&p[1..1 + mlen])
-                    .context("model name")?
-                    .to_string();
-                let pixels = u32::from_le_bytes(p[1 + mlen..5 + mlen].try_into().unwrap());
-                let n = u32::from_le_bytes(p[5 + mlen..9 + mlen].try_into().unwrap());
-                let images = read_image_grid(pixels, n, &p[9 + mlen..], "CompressReq")?;
-                Frame::CompressReq {
-                    model,
-                    pixels,
-                    images,
-                }
-            }
+            0x01 => parse_compress_req(p, None)?,
             0x02 => Frame::DecompressReq {
                 container: p.to_vec(),
+                ttl_ms: None,
             },
             0x03 => Frame::StatsReq,
             0x04 => Frame::Shutdown,
-            0x05 => {
-                // schedule u8 | likelihood u8 | layers u8 | chunks u32 |
-                // hidden u32 | seed u64 | pixels u32 | n u32 = 27 bytes.
-                if p.len() < 27 {
-                    bail!("short CompressHierReq header");
+            0x05 => parse_compress_hier_req(p, None)?,
+            0x07 => Frame::HealthReq,
+            // The TTL'd (v2) request encodings: ttl_ms u32, then the v1
+            // payload, parsed by the same validators.
+            0x11 => {
+                let (ttl, rest) = split_ttl(p, "CompressReq")?;
+                parse_compress_req(rest, Some(ttl))?
+            }
+            0x12 => {
+                let (ttl, rest) = split_ttl(p, "DecompressReq")?;
+                Frame::DecompressReq {
+                    container: rest.to_vec(),
+                    ttl_ms: Some(ttl),
                 }
-                let schedule = Schedule::from_tag(p[0])?;
-                let likelihood = Likelihood::from_tag(p[1])?;
-                let layers = p[2] as usize;
-                if !(1..=8).contains(&layers) {
-                    bail!("CompressHierReq layer count {layers} out of range 1..=8");
-                }
-                let chunks = u32::from_le_bytes(p[3..7].try_into().unwrap());
-                if chunks == 0 || chunks > MAX_HIER_CHUNKS {
-                    bail!("CompressHierReq chunk count {chunks} out of range");
-                }
-                let hidden = u32::from_le_bytes(p[7..11].try_into().unwrap());
-                if hidden == 0 || hidden > 1 << 20 {
-                    bail!("CompressHierReq hidden width {hidden} out of range");
-                }
-                let seed = u64::from_le_bytes(p[11..19].try_into().unwrap());
-                if seed == 0 {
-                    bail!("CompressHierReq weight seed must be nonzero");
-                }
-                let pixels = u32::from_le_bytes(p[19..23].try_into().unwrap());
-                let n = u32::from_le_bytes(p[23..27].try_into().unwrap());
-                let dims_end = 27 + 4 * layers;
-                if p.len() < dims_end {
-                    bail!("short CompressHierReq dims");
-                }
-                let dims: Vec<u32> = (0..layers)
-                    .map(|l| u32::from_le_bytes(p[27 + 4 * l..31 + 4 * l].try_into().unwrap()))
-                    .collect();
-                if dims.iter().any(|&d| d == 0 || d > 1 << 16) {
-                    bail!("CompressHierReq layer dims must be in 1..=65536");
-                }
-                let images = read_image_grid(pixels, n, &p[dims_end..], "CompressHierReq")?;
-                Frame::CompressHierReq {
-                    spec: HierSpec {
-                        schedule,
-                        likelihood,
-                        dims,
-                        hidden,
-                        seed,
-                        chunks,
-                    },
-                    pixels,
-                    images,
-                }
+            }
+            0x15 => {
+                let (ttl, rest) = split_ttl(p, "CompressHierReq")?;
+                parse_compress_hier_req(rest, Some(ttl))?
             }
             0x81 => Frame::CompressResp {
                 container: p.to_vec(),
@@ -277,11 +372,24 @@ impl Frame {
             0x83 => Frame::StatsResp {
                 json: String::from_utf8(p.to_vec()).context("stats json")?,
             },
+            0x87 => Frame::HealthResp {
+                json: String::from_utf8(p.to_vec()).context("health json")?,
+            },
             0x7f => Frame::Error {
                 message: String::from_utf8_lossy(p).to_string(),
             },
             other => bail!("unknown frame type {other:#x}"),
         })
+    }
+
+    /// Request-side TTL, for any frame kind that can carry one.
+    pub fn ttl_ms(&self) -> Option<u32> {
+        match self {
+            Frame::CompressReq { ttl_ms, .. }
+            | Frame::DecompressReq { ttl_ms, .. }
+            | Frame::CompressHierReq { ttl_ms, .. } => *ttl_ms,
+            _ => None,
+        }
     }
 
     pub fn read_from(r: &mut impl Read) -> Result<Frame> {
@@ -322,6 +430,7 @@ mod tests {
             },
             pixels: 4,
             images: vec![vec![0, 1, 1, 0], vec![1, 0, 0, 1]],
+            ttl_ms: None,
         }
     }
 
@@ -331,12 +440,14 @@ mod tests {
             model: "bin".into(),
             pixels: 4,
             images: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
+            ttl_ms: None,
         });
         roundtrip(Frame::CompressResp {
             container: vec![9, 9, 9],
         });
         roundtrip(Frame::DecompressReq {
             container: vec![1, 2],
+            ttl_ms: None,
         });
         roundtrip(Frame::DecompressResp {
             pixels: 2,
@@ -347,10 +458,63 @@ mod tests {
         roundtrip(Frame::StatsResp {
             json: "{\"x\":1}".into(),
         });
+        roundtrip(Frame::HealthReq);
+        roundtrip(Frame::HealthResp {
+            json: "{\"alive\":true}".into(),
+        });
         roundtrip(Frame::Error {
             message: "nope".into(),
         });
         roundtrip(Frame::Shutdown);
+    }
+
+    /// TTL'd requests round-trip through the 0x1x encodings; requests
+    /// without a TTL stay BYTE-identical to the v1 frames (the version
+    /// flag is the type byte, nothing else moves).
+    #[test]
+    fn ttl_requests_roundtrip_and_v1_bytes_unchanged() {
+        roundtrip(Frame::CompressReq {
+            model: "bin".into(),
+            pixels: 4,
+            images: vec![vec![1, 2, 3, 4]],
+            ttl_ms: Some(1500),
+        });
+        roundtrip(Frame::DecompressReq {
+            container: vec![1, 2, 3],
+            ttl_ms: Some(0),
+        });
+        let mut ttl_hier = hier_frame();
+        if let Frame::CompressHierReq { ttl_ms, .. } = &mut ttl_hier {
+            *ttl_ms = Some(250);
+        }
+        roundtrip(ttl_hier.clone());
+        assert_eq!(ttl_hier.ttl_ms(), Some(250));
+
+        // A TTL-less frame encodes with the legacy type byte and exactly
+        // the legacy payload: old servers parse it unchanged.
+        let mut v1 = Vec::new();
+        Frame::DecompressReq {
+            container: vec![7, 8, 9],
+            ttl_ms: None,
+        }
+        .write_to(&mut v1)
+        .unwrap();
+        assert_eq!(v1[4], 0x02, "TTL-less request must keep the v1 type byte");
+        let mut v2 = Vec::new();
+        Frame::DecompressReq {
+            container: vec![7, 8, 9],
+            ttl_ms: Some(42),
+        }
+        .write_to(&mut v2)
+        .unwrap();
+        assert_eq!(v2[4], 0x12);
+        assert_eq!(&v2[5..9], &42u32.to_le_bytes());
+        assert_eq!(&v2[9..], &v1[5..], "v2 payload = ttl prefix + v1 payload");
+
+        // Truncated TTL prefixes error cleanly.
+        for ty in [0x11u8, 0x12, 0x15] {
+            assert!(Frame::parse(&[ty, 1, 2]).is_err(), "ty={ty:#x}");
+        }
     }
 
     #[test]
@@ -372,6 +536,7 @@ mod tests {
             model: "m".into(),
             pixels: 4,
             images: vec![vec![0; 4]],
+            ttl_ms: None,
         }
         .write_to(&mut bad)
         .unwrap();

@@ -12,13 +12,23 @@
 //! close) from a malformed or truncated frame, which is answered with
 //! [`Frame::Error`], counted in `protocol_errors`, and followed by a
 //! close — framing is unrecoverable once the byte stream desyncs.
+//!
+//! ## Stopping: abrupt vs graceful
+//!
+//! [`Server::stop`] raises the stop flag every handler polls, so
+//! in-flight requests are abandoned at the next read boundary. For a
+//! clean rollout use [`Server::drain`]: it closes the accept loop first,
+//! lets connected peers finish their in-flight exchanges up to a
+//! deadline, and only then raises the stop flag. A peer can also request
+//! a drain over the wire ([`Frame::Shutdown`]); the server records it and
+//! the serve loop (see `main.rs`) observes [`Server::drain_requested`].
 
 use std::io::{self, BufReader, BufWriter, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -35,6 +45,12 @@ const READ_TIMEOUT: Duration = Duration::from_millis(50);
 pub struct Server {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Close only the accept loop (drain phase 1); existing connections
+    /// keep serving until `stop` is raised or their peers hang up.
+    accept_stop: Arc<AtomicBool>,
+    /// Raised by a connection handler when a peer sends the wire drain
+    /// op ([`Frame::Shutdown`]); the serve loop polls it.
+    drain_flag: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
@@ -45,21 +61,26 @@ impl Server {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let drain_flag = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = stop.clone();
+        let accept_stop2 = accept_stop.clone();
+        let drain2 = drain_flag.clone();
         let conns2 = conns.clone();
         let acceptor = std::thread::Builder::new()
             .name("bbans-acceptor".into())
             .spawn(move || {
                 // Nonblocking accept loop so `stop` is honoured promptly.
                 listener.set_nonblocking(true).ok();
-                while !stop2.load(Ordering::Relaxed) {
+                while !stop2.load(Ordering::Relaxed) && !accept_stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let svc = service.clone();
                             let conn_stop = stop2.clone();
+                            let conn_drain = drain2.clone();
                             let handle = std::thread::spawn(move || {
-                                let _ = handle_conn(stream, svc, conn_stop);
+                                let _ = handle_conn(stream, svc, conn_stop, conn_drain);
                             });
                             let mut guard = conns2.lock().expect("conns lock");
                             // Reap finished handlers so the vec stays
@@ -77,9 +98,18 @@ impl Server {
         Ok(Server {
             addr,
             stop,
+            accept_stop,
+            drain_flag,
             acceptor: Some(acceptor),
             conns,
         })
+    }
+
+    /// Whether a peer has requested a drain over the wire
+    /// ([`Frame::Shutdown`]). The serve loop polls this to decide when to
+    /// call [`Server::drain`].
+    pub fn drain_requested(&self) -> bool {
+        self.drain_flag.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, then join the acceptor and every connection
@@ -87,6 +117,38 @@ impl Server {
     /// once in-flight requests drain — no threads are leaked.
     pub fn stop(mut self) {
         self.shutdown_impl();
+    }
+
+    /// Graceful drain: close the accept loop, give connected peers up to
+    /// `timeout` to finish their exchanges and hang up, then raise the
+    /// stop flag and join everything. Returns `true` if every connection
+    /// closed on its own within the deadline (a clean drain) and `false`
+    /// if the deadline forced the stop flag on stragglers.
+    pub fn drain(mut self, timeout: Duration) -> bool {
+        self.accept_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + timeout;
+        let clean = loop {
+            let all_done = self
+                .conns
+                .lock()
+                .expect("conns lock")
+                .iter()
+                .all(|h| h.is_finished());
+            if all_done {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        // Joins promptly either way: handlers are finished (clean) or
+        // will observe the stop flag at their next read poll.
+        self.shutdown_impl();
+        clean
     }
 
     fn shutdown_impl(&mut self) {
@@ -180,7 +242,17 @@ fn read_frame(r: &mut impl Read, stop: &AtomicBool) -> Result<ReadOutcome> {
     Ok(ReadOutcome::Frame(Frame::parse(&buf)?))
 }
 
-fn handle_conn(stream: TcpStream, svc: ServiceHandle, stop: Arc<AtomicBool>) -> Result<()> {
+/// Wire TTL (milliseconds) to the batcher's per-job deadline form.
+fn ttl_duration(ttl_ms: Option<u32>) -> Option<Duration> {
+    ttl_ms.map(|t| Duration::from_millis(t as u64))
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    svc: ServiceHandle,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     // Short read timeout: the handler polls the stop flag between reads,
     // so `Server::stop` can join this thread even while the peer idles.
@@ -203,34 +275,55 @@ fn handle_conn(stream: TcpStream, svc: ServiceHandle, stop: Arc<AtomicBool>) -> 
             }
         };
         let resp = match frame {
-            Frame::CompressReq { model, images, .. } => match svc.compress(&model, images) {
+            Frame::CompressReq {
+                model,
+                images,
+                ttl_ms,
+                ..
+            } => match svc.compress_with(&model, images, ttl_duration(ttl_ms)) {
                 Ok(container) => Frame::CompressResp { container },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
                 },
             },
-            Frame::CompressHierReq { spec, images, .. } => match svc.compress_hier(spec, images) {
+            Frame::CompressHierReq {
+                spec,
+                images,
+                ttl_ms,
+                ..
+            } => match svc.compress_hier_with(spec, images, ttl_duration(ttl_ms)) {
                 Ok(container) => Frame::CompressResp { container },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
                 },
             },
-            Frame::DecompressReq { container } => match svc.decompress(container) {
-                Ok(images) => Frame::DecompressResp {
-                    pixels: images.first().map(|i| i.len() as u32).unwrap_or(0),
-                    images,
-                },
-                Err(e) => Frame::Error {
-                    message: format!("{e:#}"),
-                },
-            },
+            Frame::DecompressReq { container, ttl_ms } => {
+                match svc.decompress_with(container, ttl_duration(ttl_ms)) {
+                    Ok(images) => Frame::DecompressResp {
+                        pixels: images.first().map(|i| i.len() as u32).unwrap_or(0),
+                        images,
+                    },
+                    Err(e) => Frame::Error {
+                        message: format!("{e:#}"),
+                    },
+                }
+            }
             Frame::StatsReq => match svc.stats_json() {
                 Ok(json) => Frame::StatsResp { json },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
                 },
             },
-            Frame::Shutdown => return Ok(()),
+            Frame::HealthReq => Frame::HealthResp {
+                json: svc.health_json(),
+            },
+            Frame::Shutdown => {
+                // Wire drain request: record it for the serve loop and
+                // close this connection. Whether (and how fast) the
+                // process exits is the serve loop's policy.
+                drain.store(true, Ordering::Relaxed);
+                return Ok(());
+            }
             other => Frame::Error {
                 message: format!("unexpected frame {other:?}"),
             },
@@ -480,10 +573,26 @@ impl Client {
     }
 
     pub fn compress(&mut self, model: &str, pixels: u32, images: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        self.compress_with_ttl(model, pixels, images, None)
+    }
+
+    /// [`Client::compress`] with a server-side queue TTL: if the request
+    /// is still queued on the server when `ttl_ms` elapses it is shed
+    /// with a "deadline exceeded" error instead of burning NN time.
+    /// Sends the version-flagged v2 encoding; omit the TTL to stay
+    /// byte-compatible with pre-TTL servers.
+    pub fn compress_with_ttl(
+        &mut self,
+        model: &str,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
+    ) -> Result<Vec<u8>> {
         match self.call(Frame::CompressReq {
             model: model.to_string(),
             pixels,
             images,
+            ttl_ms,
         })? {
             Frame::CompressResp { container } => Ok(container),
             other => anyhow::bail!("unexpected response {other:?}"),
@@ -498,10 +607,22 @@ impl Client {
         pixels: u32,
         images: Vec<Vec<u8>>,
     ) -> Result<Vec<u8>> {
+        self.compress_hier_with_ttl(spec, pixels, images, None)
+    }
+
+    /// [`Client::compress_hier`] with a server-side queue TTL.
+    pub fn compress_hier_with_ttl(
+        &mut self,
+        spec: HierSpec,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
+    ) -> Result<Vec<u8>> {
         match self.call(Frame::CompressHierReq {
             spec,
             pixels,
             images,
+            ttl_ms,
         })? {
             Frame::CompressResp { container } => Ok(container),
             other => anyhow::bail!("unexpected response {other:?}"),
@@ -509,7 +630,16 @@ impl Client {
     }
 
     pub fn decompress(&mut self, container: Vec<u8>) -> Result<Vec<Vec<u8>>> {
-        match self.call(Frame::DecompressReq { container })? {
+        self.decompress_with_ttl(container, None)
+    }
+
+    /// [`Client::decompress`] with a server-side queue TTL.
+    pub fn decompress_with_ttl(
+        &mut self,
+        container: Vec<u8>,
+        ttl_ms: Option<u32>,
+    ) -> Result<Vec<Vec<u8>>> {
+        match self.call(Frame::DecompressReq { container, ttl_ms })? {
             Frame::DecompressResp { images, .. } => Ok(images),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
@@ -520,5 +650,23 @@ impl Client {
             Frame::StatsResp { json } => Ok(json),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Health probe: worker liveness, queue depth, quarantine set, and
+    /// fault counters as a JSON string. Served handle-side, so it
+    /// answers even when the admission queue is full or the worker died.
+    pub fn health(&mut self) -> Result<String> {
+        match self.call(Frame::HealthReq)? {
+            Frame::HealthResp { json } => Ok(json),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain: it stops accepting new connections,
+    /// finishes in-flight requests, and exits its serve loop. Fire and
+    /// forget — the server closes this connection without a response.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        Frame::Shutdown.write_to(&mut self.writer)?;
+        Ok(())
     }
 }

@@ -7,8 +7,9 @@
 //!   decompress -i FILE -o IDX [--native] [--salvage]
 //!   verify     -i FILE           integrity-check a container without decoding
 //!   serve      [--bind ADDR] [--native] [--max-jobs J] [--max-batch-delay-ms D]
-//!              [--queue-cap Q] [--fanout-workers W]
-//!   client     --addr ADDR --stats
+//!              [--queue-cap Q] [--fanout-workers W] [--request-ttl-ms T]
+//!              [--quarantine-after K] [--drain-timeout-ms D]
+//!   client     --addr ADDR --stats|--health|--drain
 //!
 //! Arg parsing is hand-rolled (clap is unavailable offline).
 
@@ -75,7 +76,10 @@ fn parse_args(argv: &[String]) -> Args {
 }
 
 fn is_switch(name: &str) -> bool {
-    matches!(name, "native" | "stats" | "binarized" | "help" | "salvage")
+    matches!(
+        name,
+        "native" | "stats" | "binarized" | "help" | "salvage" | "health" | "drain"
+    )
 }
 
 fn usage() -> ! {
@@ -92,7 +96,9 @@ fn usage() -> ! {
          bbans verify     -i in.bbc\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16]\n\
                           [--max-batch-delay-ms 2] [--queue-cap 256] [--fanout-workers W]\n\
-         bbans client     --addr HOST:PORT --stats\n\
+                          [--request-ttl-ms T] [--quarantine-after 3]\n\
+                          [--drain-timeout-ms 30000]\n\
+         bbans client     --addr HOST:PORT --stats|--health|--drain\n\
          \n\
          --chunks K > 1 encodes K independent chains on K threads (native\n\
          backend; produces a BBC2 chunk-parallel container).\n\
@@ -157,6 +163,18 @@ fn service(args: &Args) -> ModelService {
             .get("fanout-workers")
             .and_then(|v| v.parse().ok())
             .unwrap_or(0),
+        // Default: no deadline — a queued job waits as long as its client
+        // does. Set `--request-ttl-ms` to shed abandoned jobs unprompted.
+        default_ttl: args
+            .flags
+            .get("request-ttl-ms")
+            .and_then(|v| v.parse().ok())
+            .map(std::time::Duration::from_millis),
+        quarantine_after: args
+            .flags
+            .get("quarantine-after")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3),
     };
     ModelService::spawn(
         default_artifact_dir(),
@@ -733,9 +751,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             bbans::simd::kernel_name()
         );
     }
-    println!("press ctrl-c to stop");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    println!("press ctrl-c to stop, or `bbans client --addr {bind} --drain` to drain");
+    // Serve until a peer requests a drain over the wire, then shut down
+    // gracefully: close the accept loop, let in-flight requests finish up
+    // to the drain deadline, and stop the model worker.
+    while !server.drain_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let timeout = std::time::Duration::from_millis(
+        args.flags
+            .get("drain-timeout-ms")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(30_000),
+    );
+    println!("drain requested; waiting up to {}ms for in-flight requests", timeout.as_millis());
+    let clean = server.drain(timeout);
+    svc.shutdown();
+    if clean {
+        println!("drained cleanly");
+        Ok(())
+    } else {
+        bail!("drain deadline exceeded; remaining connections were stopped")
     }
 }
 
@@ -746,5 +782,17 @@ fn cmd_client(args: &Args) -> Result<()> {
         println!("{}", client.stats()?);
         return Ok(());
     }
-    bail!("client currently supports --stats; use the library or examples for data transfer")
+    if args.switches.contains("health") {
+        println!("{}", client.health()?);
+        return Ok(());
+    }
+    if args.switches.contains("drain") {
+        client.shutdown_server()?;
+        println!("drain requested");
+        return Ok(());
+    }
+    bail!(
+        "client supports --stats, --health, and --drain; use the library or \
+         examples for data transfer"
+    )
 }

@@ -1,10 +1,29 @@
-//! Deterministic fault injection for container robustness testing.
+//! Deterministic fault injection for robustness testing.
 //!
-//! Models the storage failures a container can meet in the wild — flipped
-//! bits, files truncated mid-write, torn writes that leave a stale tail,
-//! zeroed sectors — as reproducible [`Fault`] values. Campaigns are
-//! seeded, so a failing case prints a description that replays exactly.
+//! Two layers, one seeding discipline:
+//!
+//! - **Bytes at rest** — the storage failures a container can meet in
+//!   the wild (flipped bits, files truncated mid-write, torn writes that
+//!   leave a stale tail, zeroed sectors) as reproducible [`Fault`]
+//!   values.
+//! - **Live dispatches** — the serving failures a request can cause,
+//!   injected by wrapping any [`Backend`] in a [`FaultyBackend`]: a
+//!   panic mid-dispatch, an `Err` return, a latency spike. Used by the
+//!   chaos campaigns (`tests/chaos.rs`) to prove the coordinator
+//!   contains every one of them.
+//!
+//! Campaigns are seeded, so a failing case prints a description that
+//! replays exactly.
 
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::model::tensor::Matrix;
+use crate::model::{Backend, ModelMeta, PixelParams, PosteriorBatch};
 use crate::util::rng::Rng;
 
 /// One storage fault, applicable to any byte buffer.
@@ -117,6 +136,206 @@ pub fn bitflip_sweep(len: usize, stride: usize) -> Vec<Fault> {
         .collect()
 }
 
+/// One fault to inject into a live NN dispatch (an `encode_batch` or
+/// `decode_batch` call) of a [`FaultyBackend`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DispatchFault {
+    /// Panic mid-dispatch — a poisoned weight blob, an out-of-bounds
+    /// kernel. The coordinator's supervisor must contain it.
+    Panic,
+    /// Return `Err` — a failed device, a rejected shape. An ordinary
+    /// error path; no unwinding.
+    Error,
+    /// Answer correctly, but only after sleeping — a contended device or
+    /// an allocator stall. Exercises TTL shedding and drain deadlines.
+    Delay(Duration),
+}
+
+impl DispatchFault {
+    /// A replayable one-line description for assertion messages.
+    pub fn describe(&self) -> String {
+        match self {
+            DispatchFault::Panic => "panic".to_string(),
+            DispatchFault::Error => "error return".to_string(),
+            DispatchFault::Delay(d) => format!("{}ms delay", d.as_millis()),
+        }
+    }
+}
+
+/// Faults keyed by 0-based dispatch index (`encode_batch` and
+/// `decode_batch` share one counter, in call order). The same plan
+/// against the same request schedule faults exactly the same calls.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    at: BTreeMap<u64, DispatchFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style: add a fault at dispatch index `call`.
+    pub fn fault_at(mut self, call: u64, fault: DispatchFault) -> Self {
+        self.at.insert(call, fault);
+        self
+    }
+
+    /// Seeded mixed schedule: roughly one in `every` of the first
+    /// `calls` dispatches faults, kind drawn uniformly across
+    /// panic/error/delay. Deterministic in `(seed, calls, every)`.
+    pub fn campaign(seed: u64, calls: u64, every: u64) -> Self {
+        let mut rng = Rng::new(seed | 1);
+        let mut at = BTreeMap::new();
+        for call in 0..calls {
+            if rng.below(every.max(1)) == 0 {
+                at.insert(
+                    call,
+                    match rng.below(3) {
+                        0 => DispatchFault::Panic,
+                        1 => DispatchFault::Error,
+                        _ => DispatchFault::Delay(Duration::from_millis(1 + rng.below(20))),
+                    },
+                );
+            }
+        }
+        Self { at }
+    }
+
+    pub fn get(&self, call: u64) -> Option<&DispatchFault> {
+        self.at.get(&call)
+    }
+
+    pub fn len(&self) -> usize {
+        self.at.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at.is_empty()
+    }
+}
+
+/// Shared view into a [`FaultyBackend`] that survives moving the backend
+/// into a service factory: a test keeps the `Arc`, arms one-shot faults
+/// at chosen moments, and reads the dispatch counter (e.g. to prove a
+/// shed job never reached the NN).
+#[derive(Debug, Default)]
+pub struct FaultControl {
+    calls: AtomicU64,
+    armed: Mutex<VecDeque<DispatchFault>>,
+}
+
+impl FaultControl {
+    /// Total dispatches seen so far (faulted or not).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Queue a one-shot fault for the next dispatch (FIFO when several
+    /// are armed). Takes priority over the static plan.
+    pub fn arm(&self, fault: DispatchFault) {
+        self.armed
+            .lock()
+            .expect("fault arm lock poisoned")
+            .push_back(fault);
+    }
+
+    /// Armed faults not yet consumed by a dispatch.
+    pub fn armed_len(&self) -> usize {
+        self.armed.lock().expect("fault arm lock poisoned").len()
+    }
+
+    fn take_armed(&self) -> Option<DispatchFault> {
+        self.armed
+            .lock()
+            .expect("fault arm lock poisoned")
+            .pop_front()
+    }
+}
+
+/// A [`Backend`] wrapper that injects seeded, replayable faults into live
+/// NN dispatches. Everything that affects container bytes — metadata,
+/// `backend_id`, the un-faulted dispatch results — delegates to the
+/// inner backend untouched, so requests that survive a chaos campaign
+/// must produce bytes bit-identical to a fault-free run.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    control: Arc<FaultControl>,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            control: Arc::new(FaultControl::default()),
+        }
+    }
+
+    /// The shared control handle — clone it out before moving the
+    /// backend into a service factory.
+    pub fn control(&self) -> Arc<FaultControl> {
+        self.control.clone()
+    }
+
+    fn inject(&self, what: &str) -> Result<()> {
+        let call = self.control.calls.fetch_add(1, Ordering::SeqCst);
+        let fault = self
+            .control
+            .take_armed()
+            .or_else(|| self.plan.get(call).cloned());
+        match fault {
+            None => Ok(()),
+            Some(DispatchFault::Panic) => {
+                panic!("injected: {what} dispatch {call} hit a planned panic")
+            }
+            Some(DispatchFault::Error) => {
+                bail!("injected: {what} dispatch {call} hit a planned error")
+            }
+            Some(DispatchFault::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn meta(&self) -> &ModelMeta {
+        self.inner.meta()
+    }
+
+    // Delegated, not wrapped: the wrapper must be invisible in container
+    // bytes, or the chaos campaign's bit-identity assertion would compare
+    // containers from two different nominal backends.
+    fn backend_id(&self) -> String {
+        self.inner.backend_id()
+    }
+
+    fn kernel_id(&self) -> String {
+        self.inner.kernel_id()
+    }
+
+    fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        self.inner.posterior(xs)
+    }
+
+    fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
+        self.inner.likelihood(ys)
+    }
+
+    fn encode_batch(&self, xs: &Matrix) -> Result<PosteriorBatch> {
+        self.inject("encode_batch")?;
+        self.inner.encode_batch(xs)
+    }
+
+    fn decode_batch(&self, ys: &Matrix) -> Result<Vec<PixelParams>> {
+        self.inject("decode_batch")?;
+        self.inner.decode_batch(ys)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +388,96 @@ mod tests {
         assert_eq!(out.len(), 32);
         assert_eq!(out[..8], data[..8]);
         assert_ne!(out[8..], data[8..]);
+    }
+
+    use crate::model::Likelihood;
+
+    /// Minimal deterministic backend for exercising the wrapper.
+    struct StubVae {
+        meta: ModelMeta,
+    }
+
+    impl StubVae {
+        fn new() -> Self {
+            Self {
+                meta: ModelMeta {
+                    name: "stub".into(),
+                    pixels: 4,
+                    latent_dim: 2,
+                    hidden: 3,
+                    likelihood: Likelihood::Bernoulli,
+                    test_elbo_bpd: 0.0,
+                },
+            }
+        }
+    }
+
+    impl Backend for StubVae {
+        fn meta(&self) -> &ModelMeta {
+            &self.meta
+        }
+
+        fn backend_id(&self) -> String {
+            "stub-v1".into()
+        }
+
+        fn posterior(&self, xs: &[&[f32]]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+            Ok(xs.iter().map(|_| (vec![0.0; 2], vec![1.0; 2])).collect())
+        }
+
+        fn likelihood(&self, ys: &[&[f32]]) -> Result<Vec<PixelParams>> {
+            Ok(ys
+                .iter()
+                .map(|_| PixelParams::Bernoulli(vec![0.5; 4]))
+                .collect())
+        }
+    }
+
+    #[test]
+    fn dispatch_campaigns_replay_exactly() {
+        let a = FaultPlan::campaign(11, 100, 5);
+        let b = FaultPlan::campaign(11, 100, 5);
+        for call in 0..100 {
+            assert_eq!(a.get(call), b.get(call));
+        }
+        assert!(!a.is_empty(), "1-in-5 over 100 calls should fault at least once");
+        assert!(a.len() < 100);
+    }
+
+    #[test]
+    fn faulty_backend_injects_per_plan_and_stays_transparent() {
+        let plan = FaultPlan::new()
+            .fault_at(1, DispatchFault::Error)
+            .fault_at(2, DispatchFault::Delay(Duration::from_millis(1)));
+        let fb = FaultyBackend::new(StubVae::new(), plan);
+        let ctl = fb.control();
+        let xs = Matrix::new(1, 4, vec![0.0; 4]);
+        // Call 0: clean, bit-identical to the inner backend's answer.
+        let clean = fb.encode_batch(&xs).unwrap();
+        assert_eq!(clean, StubVae::new().encode_batch(&xs).unwrap());
+        // Call 1: the planned error names the injection.
+        let err = fb.encode_batch(&xs).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        // Call 2: a delay still answers correctly.
+        assert!(fb.decode_batch(&Matrix::new(1, 2, vec![0.0; 2])).is_ok());
+        assert_eq!(ctl.calls(), 3);
+        assert_eq!(fb.backend_id(), "stub-v1", "id must delegate for bit-identity");
+    }
+
+    #[test]
+    fn armed_faults_fire_on_the_next_dispatch_and_are_one_shot() {
+        let fb = FaultyBackend::new(StubVae::new(), FaultPlan::new());
+        let ctl = fb.control();
+        ctl.arm(DispatchFault::Panic);
+        assert_eq!(ctl.armed_len(), 1);
+        let xs = Matrix::new(1, 4, vec![0.0; 4]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = fb.encode_batch(&xs);
+        }));
+        assert!(caught.is_err(), "armed panic must unwind");
+        assert_eq!(ctl.armed_len(), 0);
+        // The wrapper survives its own injected panic: next call is clean.
+        assert!(fb.encode_batch(&xs).is_ok());
+        assert_eq!(ctl.calls(), 2);
     }
 }

@@ -1,0 +1,438 @@
+//! Chaos campaigns: seeded fault injection against a live server.
+//!
+//! A [`FaultyBackend`] wraps the registered model and injects panics,
+//! error returns, and latency spikes into live NN dispatches, proving
+//! the coordinator's containment story end to end:
+//!
+//! - the model worker survives injected panics (supervised, not dead);
+//! - only the faulted round's requests fail — the very next request on
+//!   the same connection and model succeeds;
+//! - a repeatedly panicking model is quarantined and fast-fails while
+//!   healthy-model traffic keeps flowing;
+//! - expired-TTL jobs are shed before any NN dispatch;
+//! - the PR 7 client retry policy composes: admission rejections are
+//!   retried, panic replies are fatal (never re-dispatched);
+//! - requests that survive a campaign produce container bytes
+//!   bit-identical to a fault-free run.
+//!
+//! Every fault is armed deterministically (no seeds drawn at test time),
+//! so a failure replays exactly. Every test arms a [`Watchdog`]: a
+//! supervision deadlock must abort in minutes, not hang CI.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bbans::coordinator::{Client, ModelService, RetryPolicy, Server, ServiceParams};
+use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
+use bbans::util::fault::{DispatchFault, FaultControl, FaultPlan, FaultyBackend};
+use bbans::util::rng::Rng;
+
+/// Aborts the process if still armed after `secs` — a hung join is a bug
+/// this suite exists to catch, and a hang would otherwise mask it.
+struct Watchdog {
+    armed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn new(secs: u64) -> Watchdog {
+        let armed = Arc::new(AtomicBool::new(true));
+        let a = armed.clone();
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(secs);
+            while Instant::now() < deadline {
+                if !a.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            eprintln!("chaos watchdog expired after {secs}s — aborting");
+            std::process::abort();
+        });
+        Watchdog { armed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+}
+
+fn meta(name: &str) -> ModelMeta {
+    ModelMeta {
+        name: name.into(),
+        pixels: 64,
+        latent_dim: 8,
+        hidden: 16,
+        likelihood: Likelihood::Bernoulli,
+        test_elbo_bpd: f64::NAN,
+    }
+}
+
+const FLAKY_SEED: u64 = 4097;
+const TOY_SEED: u64 = 2024;
+
+fn sample_images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..64).map(|_| (rng.f64() < 0.25) as u8).collect())
+        .collect()
+}
+
+/// Service with two models: "flaky" (fault-wrapped, driven by the
+/// returned controls) and "toy" (wrapped with an empty plan purely so its
+/// dispatch counter is observable — it never faults). Returns the
+/// service plus the (flaky, toy) fault controls.
+fn chaos_service(
+    params: ServiceParams,
+    plan: FaultPlan,
+) -> (ModelService, Arc<FaultControl>, Arc<FaultControl>) {
+    let flaky = FaultyBackend::new(NativeVae::random(meta("flaky"), FLAKY_SEED), plan);
+    let toy = FaultyBackend::new(NativeVae::random(meta("toy"), TOY_SEED), FaultPlan::new());
+    let fctl = flaky.control();
+    let tctl = toy.control();
+    let svc = ModelService::spawn_with(params, move || {
+        let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+        map.insert("flaky".into(), Box::new(flaky));
+        map.insert("toy".into(), Box::new(toy));
+        Ok(map)
+    });
+    (svc, fctl, tctl)
+}
+
+/// The same two models with no fault wrapper at all — the fault-free
+/// reference run for bit-identity assertions.
+fn plain_service() -> ModelService {
+    ModelService::spawn_with(ServiceParams::default(), move || {
+        let mut map: HashMap<String, Box<dyn Backend>> = HashMap::new();
+        map.insert(
+            "flaky".into(),
+            Box::new(NativeVae::random(meta("flaky"), FLAKY_SEED)),
+        );
+        map.insert(
+            "toy".into(),
+            Box::new(NativeVae::random(meta("toy"), TOY_SEED)),
+        );
+        Ok(map)
+    })
+}
+
+fn default_params() -> ServiceParams {
+    ServiceParams {
+        max_jobs: 8,
+        max_batch_delay: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// The flagship campaign: ≥ 10 injected panics plus error returns and
+/// latency spikes, interleaved with clean traffic. The worker survives
+/// all of it, only faulted requests fail, and every surviving request's
+/// bytes are bit-identical to a fault-free run.
+#[test]
+fn worker_survives_mixed_campaign_and_survivors_are_bit_identical() {
+    let _wd = Watchdog::new(300);
+    let (svc, fctl, _tctl) = chaos_service(default_params(), FaultPlan::new());
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // (model, images, wire bytes) of every request that survived.
+    let mut survivors: Vec<(&str, Vec<Vec<u8>>, Vec<u8>)> = Vec::new();
+
+    for i in 0..10u64 {
+        // An injected panic fails the faulted round's request, naming
+        // both the containment and the payload.
+        fctl.arm(DispatchFault::Panic);
+        let err = client
+            .compress("flaky", 64, sample_images(2, 1000 + i))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("internal panic"), "{msg}");
+        assert!(msg.contains("injected"), "{msg}");
+        assert!(svc.handle().is_alive(), "worker died on panic {i}");
+
+        // Only the faulted round fails: the very next request on the
+        // same model and connection succeeds (and resets the
+        // supervisor's consecutive-panic count, so 10 spaced panics
+        // never trip quarantine).
+        let imgs = sample_images(2, 2000 + i);
+        let bytes = client.compress("flaky", 64, imgs.clone()).unwrap();
+        survivors.push(("flaky", imgs, bytes));
+
+        // Healthy-model traffic is untouched throughout.
+        let imgs = sample_images(2, 3000 + i);
+        let bytes = client.compress("toy", 64, imgs.clone()).unwrap();
+        assert_eq!(client.decompress(bytes.clone()).unwrap(), imgs);
+        survivors.push(("toy", imgs, bytes));
+
+        // Mix in the other fault kinds: an error return is an ordinary
+        // failure (no unwinding, no panic counted for it) ...
+        if i % 3 == 0 {
+            fctl.arm(DispatchFault::Error);
+            let err = client
+                .compress("flaky", 64, sample_images(2, 4000 + i))
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        }
+        // ... and a latency spike delays but does not corrupt.
+        if i % 3 == 1 {
+            fctl.arm(DispatchFault::Delay(Duration::from_millis(20)));
+            let imgs = sample_images(2, 5000 + i);
+            let bytes = client.compress("flaky", 64, imgs.clone()).unwrap();
+            survivors.push(("flaky", imgs, bytes));
+        }
+    }
+
+    assert!(
+        svc.metrics.panics.load(Ordering::Relaxed) >= 10,
+        "expected >= 10 contained panics, got {}",
+        svc.metrics.panics.load(Ordering::Relaxed)
+    );
+    assert!(
+        svc.metrics.quarantined_keys().is_empty(),
+        "spaced panics must not quarantine: {:?}",
+        svc.metrics.quarantined_keys()
+    );
+
+    // The health probe over the wire reflects the carnage and liveness.
+    let health = client.health().unwrap();
+    let j = bbans::util::json::Json::parse(&health).unwrap();
+    assert_eq!(j.get("alive"), Some(&bbans::util::json::Json::Bool(true)));
+    assert!(
+        j.get("panics").and_then(|v| v.as_u64()).unwrap_or(0) >= 10,
+        "{health}"
+    );
+
+    server.stop();
+    svc.shutdown();
+
+    // Bit-identity: replay every surviving request against a fault-free
+    // service; the bytes must match exactly.
+    let plain = plain_service();
+    let h = plain.handle();
+    for (model, imgs, bytes) in &survivors {
+        let reference = h.compress(model, imgs.clone()).unwrap();
+        assert_eq!(
+            &reference, bytes,
+            "survivor bytes for model '{model}' differ from the fault-free run"
+        );
+    }
+    plain.shutdown();
+}
+
+/// After `quarantine_after` consecutive panicking rounds, the model is
+/// quarantined: requests for it fast-fail without touching the backend,
+/// while the healthy model keeps serving and the wire health op names
+/// the quarantined key.
+#[test]
+fn quarantined_model_fast_fails_while_healthy_model_serves() {
+    let _wd = Watchdog::new(300);
+    let params = ServiceParams {
+        quarantine_after: 2,
+        ..default_params()
+    };
+    let (svc, fctl, _tctl) = chaos_service(params, FaultPlan::new());
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    for i in 0..2u64 {
+        fctl.arm(DispatchFault::Panic);
+        let err = client
+            .compress("flaky", 64, sample_images(2, 100 + i))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("internal panic"), "{err:#}");
+    }
+
+    // Third request: rejected fast, with zero backend dispatches.
+    let calls_before = fctl.calls();
+    let err = client
+        .compress("flaky", 64, sample_images(2, 200))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("quarantined"), "{err:#}");
+    assert_eq!(
+        fctl.calls(),
+        calls_before,
+        "a quarantined request must never reach the backend"
+    );
+
+    // The worker is alive and the healthy model is unaffected.
+    assert!(svc.handle().is_alive());
+    let imgs = sample_images(3, 300);
+    let bytes = client.compress("toy", 64, imgs.clone()).unwrap();
+    assert_eq!(client.decompress(bytes).unwrap(), imgs);
+
+    // Health over the wire reports the quarantine.
+    let health = client.health().unwrap();
+    let j = bbans::util::json::Json::parse(&health).unwrap();
+    match j.get("quarantined") {
+        Some(bbans::util::json::Json::Arr(keys)) => {
+            assert!(
+                keys.contains(&bbans::util::json::Json::Str("flaky".into())),
+                "{health}"
+            );
+        }
+        other => panic!("quarantined missing or not an array: {other:?}"),
+    }
+    assert_eq!(j.get("alive"), Some(&bbans::util::json::Json::Bool(true)));
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// Retry composition, fatal half: a panic reply is a server-side error
+/// the retry policy must NOT retry — the request fails after exactly one
+/// backend dispatch despite a generous retry budget.
+#[test]
+fn panic_replies_are_fatal_to_the_retry_policy() {
+    let _wd = Watchdog::new(300);
+    let (svc, fctl, _tctl) = chaos_service(default_params(), FaultPlan::new());
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect_with(
+        server.addr,
+        RetryPolicy {
+            max_retries: 5,
+            base_delay: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let calls_before = fctl.calls();
+    fctl.arm(DispatchFault::Panic);
+    let err = client
+        .compress("flaky", 64, sample_images(2, 42))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("internal panic"), "{err:#}");
+    assert_eq!(
+        fctl.calls() - calls_before,
+        1,
+        "a fatal panic reply must not be re-dispatched by retries"
+    );
+    assert_eq!(fctl.armed_len(), 0);
+
+    // The connection and service both survive for clean traffic.
+    let imgs = sample_images(2, 43);
+    let bytes = client.compress("flaky", 64, imgs.clone()).unwrap();
+    assert_eq!(client.decompress(bytes).unwrap(), imgs);
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// Retry composition, transient half: while a latency spike wedges the
+/// worker and the 1-slot queue is full, a retrying client's admission
+/// rejection ("overloaded") is retried until the queue drains — no
+/// caller-visible error.
+#[test]
+fn overload_during_latency_spike_is_retried_to_success() {
+    let _wd = Watchdog::new(300);
+    let params = ServiceParams {
+        queue_cap: 1,
+        ..default_params()
+    };
+    let (svc, fctl, _tctl) = chaos_service(params, FaultPlan::new());
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    // Wedge the worker: the next flaky dispatch sleeps 800ms.
+    fctl.arm(DispatchFault::Delay(Duration::from_millis(800)));
+    let calls_before = fctl.calls();
+    let wedge = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("flaky", 64, sample_images(2, 50))
+    });
+    // Wait until the worker is inside the delayed dispatch (the counter
+    // bumps at dispatch entry, before the injected sleep).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fctl.calls() == calls_before {
+        assert!(Instant::now() < deadline, "wedge dispatch never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Fill the single queue slot while the worker sleeps.
+    let occupant = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("toy", 64, sample_images(2, 51))
+    });
+    while svc.metrics.queue_depth.load(Ordering::Relaxed) < 1 {
+        assert!(Instant::now() < deadline, "occupant never queued");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // The retrying client is rejected at admission, backs off, and
+    // succeeds once the spike passes and the queue drains.
+    let imgs = sample_images(2, 52);
+    let mut retrying = Client::connect_with(
+        addr,
+        RetryPolicy {
+            max_retries: 20,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_millis(500),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let bytes = retrying.compress("toy", 64, imgs.clone()).unwrap();
+    assert_eq!(retrying.decompress(bytes).unwrap(), imgs);
+    assert!(
+        svc.metrics.rejected.load(Ordering::Relaxed) >= 1,
+        "the retrying client should have met a full queue at least once"
+    );
+
+    assert!(wedge.join().unwrap().is_ok());
+    assert!(occupant.join().unwrap().is_ok());
+    server.stop();
+    svc.shutdown();
+}
+
+/// TTL shedding under chaos: a job whose deadline passes while the
+/// worker is wedged in another model's latency spike is shed at round
+/// formation — its model's backend sees zero dispatches for it.
+#[test]
+fn expired_job_is_shed_before_any_nn_dispatch() {
+    let _wd = Watchdog::new(300);
+    let (svc, fctl, tctl) = chaos_service(default_params(), FaultPlan::new());
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    // Wedge the worker in a 1s flaky dispatch.
+    fctl.arm(DispatchFault::Delay(Duration::from_millis(1000)));
+    let calls_before = fctl.calls();
+    let wedge = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("flaky", 64, sample_images(2, 60))
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fctl.calls() == calls_before {
+        assert!(Instant::now() < deadline, "wedge dispatch never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // A TTL'd toy request queues behind the spike; its 50ms budget is
+    // long gone when the worker forms the next round.
+    let toy_calls_before = tctl.calls();
+    let shed = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress_with_ttl("toy", 64, sample_images(2, 61), Some(50))
+    });
+
+    let err = shed.join().unwrap().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("deadline exceeded"),
+        "{err:#}"
+    );
+    assert_eq!(
+        tctl.calls(),
+        toy_calls_before,
+        "a shed job must never reach the NN"
+    );
+    assert_eq!(svc.metrics.expired.load(Ordering::Relaxed), 1);
+
+    // The wedged request itself survives its spike.
+    assert!(wedge.join().unwrap().is_ok());
+    assert!(svc.handle().is_alive());
+    server.stop();
+    svc.shutdown();
+}

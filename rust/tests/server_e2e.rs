@@ -347,6 +347,137 @@ fn overloaded_then_drained_request_succeeds_with_retry() {
     svc.shutdown();
 }
 
+/// Health is a distinct wire op (0x07), served handle-side: it answers
+/// with liveness, queue depth, and the (empty) quarantine set without
+/// touching the admission queue.
+#[test]
+fn health_probe_over_tcp() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let health = client.health().unwrap();
+    let j = bbans::util::json::Json::parse(&health).unwrap();
+    assert_eq!(
+        j.get("alive"),
+        Some(&bbans::util::json::Json::Bool(true)),
+        "{health}"
+    );
+    match j.get("quarantined") {
+        Some(bbans::util::json::Json::Arr(keys)) => assert!(keys.is_empty(), "{health}"),
+        other => panic!("quarantined missing or not an array: {other:?}"),
+    }
+    assert!(j.get("queue_depth").is_some(), "{health}");
+
+    // The same connection still serves data traffic.
+    let images = sample_images(2, 17);
+    let c = client.compress("toy", 64, images.clone()).unwrap();
+    assert_eq!(client.decompress(c).unwrap(), images);
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// A wire TTL (v2 request encoding) is honoured server-side: a request
+/// whose deadline passes while queued is shed before any NN dispatch and
+/// answered "deadline exceeded", while an un-TTL'd request in the same
+/// round succeeds.
+#[test]
+fn wire_ttl_expires_queued_request() {
+    let _wd = Watchdog::new(120);
+    // Gate the backend factory so both requests sit queued past the TTL.
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let params = ServiceParams {
+        max_jobs: 8,
+        max_batch_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let svc = ModelService::spawn_with(params, move || {
+        gate_rx.recv().ok();
+        Ok(toy_map())
+    });
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    let short = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress_with_ttl("toy", 64, sample_images(2, 31), Some(10))
+    });
+    let long = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("toy", 64, sample_images(2, 32))
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.metrics.queue_depth.load(Ordering::Relaxed) < 2 {
+        assert!(Instant::now() < deadline, "jobs never queued");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+    gate_tx.send(()).unwrap();
+
+    let err = short.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("deadline exceeded"), "{err}");
+    assert!(long.join().unwrap().is_ok());
+    assert_eq!(svc.metrics.expired.load(Ordering::Relaxed), 1);
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// A wire drain request closes the accept loop, lets in-flight
+/// connections finish, and reports a clean drain once peers hang up.
+#[test]
+fn drain_finishes_in_flight_work_then_reports_clean() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let addr = server.addr;
+
+    let mut client = Client::connect(addr).unwrap();
+    let images = sample_images(4, 21);
+    let container = client.compress("toy", 64, images.clone()).unwrap();
+
+    // A second client requests a drain over the wire.
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown_server().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !server.drain_requested() {
+        assert!(Instant::now() < deadline, "drain flag never raised");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Drain is not stop: the established connection still serves.
+    assert_eq!(client.decompress(container).unwrap(), images);
+    drop(client);
+    drop(ctl);
+
+    assert!(
+        server.drain(Duration::from_secs(30)),
+        "expected a clean drain after peers hung up"
+    );
+    svc.shutdown();
+}
+
+/// An idle peer that never hangs up cannot wedge a drain: the deadline
+/// forces the stop flag and the handler is joined anyway.
+#[test]
+fn drain_deadline_forces_stop_on_idle_peer() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    client.stats().unwrap();
+
+    assert!(
+        !server.drain(Duration::from_millis(200)),
+        "idle peer should make the drain unclean"
+    );
+    // The straggler's handler was stopped; its socket is closed.
+    assert!(client.stats().is_err());
+    svc.shutdown();
+}
+
 #[test]
 fn compress_hier_roundtrips_over_tcp() {
     let _wd = Watchdog::new(120);
