@@ -218,6 +218,30 @@ impl ParallelContainer {
         })
     }
 
+    /// [`Self::encode_with`] that also returns the per-image rate ledger
+    /// (ISSUE 9). The ledger is a pure observer of the coder's effective
+    /// length: the produced container is byte-identical to the unledgered
+    /// path (pinned by `ledgered_encode_is_byte_identical_and_elbo_consistent`).
+    pub fn encode_with_ledger<B: Backend + Sync + ?Sized>(
+        codec: &VaeCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<(Self, crate::obs::Ledger)> {
+        let meta = codec.backend().meta();
+        let (chunks, ledger) =
+            codec.encode_dataset_chunked_ledgered(images, n_chunks, super::default_workers())?;
+        Ok((
+            Self {
+                model: meta.name.clone(),
+                backend_id: codec.backend().backend_id(),
+                cfg: codec.cfg,
+                pixels: meta.pixels as u32,
+                chunks,
+            },
+            ledger,
+        ))
+    }
+
     /// Thread-parallel decode (inverse of [`Self::encode_with`]).
     pub fn decode_with<B: Backend + Sync + ?Sized>(
         &self,
@@ -434,6 +458,34 @@ impl HierContainer {
             dims: meta.dims.iter().map(|&d| d as u32).collect(),
             chunks,
         })
+    }
+
+    /// [`Self::encode_with`] that also returns the per-image, per-layer
+    /// rate ledger (ISSUE 9). Byte-identical output to the unledgered path
+    /// (pinned by `hier_ledger_pins_bytes_and_exposes_initial_bits_gap`).
+    pub fn encode_with_ledger<B: HierBackend + Sync + ?Sized>(
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+    ) -> Result<(Self, crate::obs::Ledger)> {
+        let meta = codec.backend().meta();
+        let (chunks, ledger) =
+            codec.encode_dataset_chunked_ledgered(images, n_chunks, super::default_workers())?;
+        Ok((
+            Self {
+                model: meta.name.clone(),
+                backend_id: codec.backend().backend_id(),
+                schedule: codec.schedule,
+                cfg: codec.cfg,
+                likelihood: meta.likelihood,
+                hidden: meta.hidden as u32,
+                weight_seed: codec.backend().weight_seed(),
+                pixels: meta.pixels as u32,
+                dims: meta.dims.iter().map(|&d| d as u32).collect(),
+                chunks,
+            },
+            ledger,
+        ))
     }
 
     /// Rebuild the exact backend this container was encoded with, from the
@@ -1230,6 +1282,105 @@ mod tests {
         let mut artifact = hc.clone();
         artifact.weight_seed = 0;
         assert!(artifact.build_backend().is_err());
+    }
+
+    /// ISSUE 9 golden test: attaching the rate ledger changes ZERO emitted
+    /// bytes — the BBC1 message and the BBC2 chunk payloads from ledgered
+    /// encodes are byte-identical to plain encodes — and every recorded
+    /// entry satisfies the ELBO decomposition identity
+    /// `net = data + Σ_l (pop_l + push_l)`.
+    #[test]
+    fn ledgered_encode_is_byte_identical_and_elbo_consistent() {
+        use crate::model::vae::NativeVae;
+        use crate::model::ModelMeta;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x1ED6E4);
+        let images: Vec<Vec<u8>> = (0..9)
+            .map(|_| (0..25).map(|_| (rng.f64() < 0.3) as u8).collect())
+            .collect();
+        let meta = ModelMeta {
+            name: "led".into(),
+            pixels: 25,
+            latent_dim: 5,
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+            test_elbo_bpd: f64::NAN,
+        };
+        let backend = NativeVae::random(meta, 3);
+        let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+
+        // BBC1: one chained stream.
+        let (plain, _) = codec.encode_dataset(&images).unwrap();
+        let (ledgered, _, ledger) = codec.encode_dataset_ledgered(&images).unwrap();
+        assert_eq!(
+            plain.to_message(),
+            ledgered.to_message(),
+            "ledger must not move BBC1 bytes"
+        );
+        assert_eq!(ledger.entries.len(), images.len());
+        for e in &ledger.entries {
+            assert!(e.decomposition_residual() < 1e-6, "{e:?}");
+            assert!(e.data_bits > 0.0 && e.latent_pop_bits[0] < 0.0);
+            assert!(e.latent_push_bits[0] > 0.0);
+        }
+        let s = ledger.summary(25);
+        assert!(s.initial_bits > 0.0, "a fresh chain must borrow clean bits");
+        assert!(s.max_residual < 1e-6);
+
+        // BBC2: chunk-parallel chains.
+        let plain_chunks = codec
+            .encode_dataset_chunked_with_workers(&images, 3, 2)
+            .unwrap();
+        let (led_chunks, chunk_ledger) = codec
+            .encode_dataset_chunked_ledgered(&images, 3, 2)
+            .unwrap();
+        assert_eq!(plain_chunks, led_chunks, "ledger must not move BBC2 bytes");
+        assert_eq!(chunk_ledger.entries.len(), images.len());
+        assert!(chunk_ledger.summary(25).max_residual < 1e-6);
+    }
+
+    /// ISSUE 9 golden test, hierarchical: ledgered BBC3 chunk encodes are
+    /// byte-identical under BOTH schedules, entries decompose per layer,
+    /// and the ledger directly exposes the naive-vs-Bit-Swap initial-bits
+    /// gap the subsystem exists to measure.
+    #[test]
+    fn hier_ledger_pins_bytes_and_exposes_initial_bits_gap() {
+        use crate::util::rng::Rng;
+        let meta = HierMeta {
+            name: "hled".into(),
+            pixels: 64,
+            dims: vec![16, 12],
+            hidden: 10,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 11);
+        let mut rng = Rng::new(0x1ED6E5);
+        let images: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..64).map(|_| (rng.f64() < 0.3) as u8).collect())
+            .collect();
+        let mut initials = Vec::new();
+        for schedule in [Schedule::Naive, Schedule::BitSwap] {
+            let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+            let plain = codec
+                .encode_dataset_chunked_with_workers(&images, 2, 2)
+                .unwrap();
+            let (ledgered, ledger) = codec
+                .encode_dataset_chunked_ledgered(&images, 2, 2)
+                .unwrap();
+            assert_eq!(plain, ledgered, "{schedule:?}: ledger must not move BBC3 bytes");
+            assert_eq!(ledger.entries.len(), images.len());
+            for e in &ledger.entries {
+                assert_eq!(e.latent_pop_bits.len(), 2, "{schedule:?}");
+                assert!(e.decomposition_residual() < 1e-6, "{schedule:?} {e:?}");
+            }
+            initials.push(ledger.summary(64).initial_bits);
+        }
+        assert!(
+            initials[1] < initials[0],
+            "bitswap initial bits {} must undercut naive {}",
+            initials[1],
+            initials[0]
+        );
     }
 
     #[test]

@@ -322,6 +322,14 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         // content, exactly as in the single-layer codec).
         let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
         let (mut posterior, mut likelihood, mut prior) = (0.0f64, 0.0f64, 0.0f64);
+        // Per-layer ledger entry, built alongside the schedule totals when
+        // a sink is installed (pure observer; the coder never sees it).
+        let mut entry = scratch
+            .codec
+            .ledger
+            .is_some()
+            .then(|| crate::obs::LedgerEntry::new(layers));
+        let cw0 = ans.clean_words_used();
         let b0 = bits_at(ans);
 
         let mut z = std::mem::take(&mut scratch.z);
@@ -329,7 +337,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         {
             let before = bits_at(ans);
             self.pop_gauss(ans, mu0, sigma0, meta.dims[0], &mut z[0], &mut scratch.codec.gauss);
-            posterior += bits_at(ans) - before;
+            let d = bits_at(ans) - before;
+            posterior += d;
+            if let Some(e) = entry.as_mut() {
+                e.latent_pop_bits[0] += d;
+            }
         }
 
         match self.schedule {
@@ -348,7 +360,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
                         &mut z[layer],
                         &mut scratch.codec.gauss,
                     );
-                    posterior += bits_at(ans) - before;
+                    let d = bits_at(ans) - before;
+                    posterior += d;
+                    if let Some(e) = entry.as_mut() {
+                        e.latent_pop_bits[layer] += d;
+                    }
                 }
                 // …then push the data…
                 scratch.buf.clear();
@@ -370,7 +386,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
                         &z[layer],
                         &mut scratch.codec.gauss,
                     );
-                    prior += bits_at(ans) - before;
+                    let d = bits_at(ans) - before;
+                    prior += d;
+                    if let Some(e) = entry.as_mut() {
+                        e.latent_push_bits[layer] += d;
+                    }
                 }
             }
             Schedule::BitSwap => {
@@ -398,7 +418,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
                         &mut z[layer],
                         &mut scratch.codec.gauss,
                     );
-                    posterior += bits_at(ans) - before;
+                    let d = bits_at(ans) - before;
+                    posterior += d;
+                    if let Some(e) = entry.as_mut() {
+                        e.latent_pop_bits[layer] += d;
+                    }
 
                     scratch.buf.clear();
                     self.centres_into(&z[layer], &mut scratch.buf);
@@ -411,7 +435,11 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
                         &z[layer - 1],
                         &mut scratch.codec.gauss,
                     );
-                    prior += bits_at(ans) - before;
+                    let d = bits_at(ans) - before;
+                    prior += d;
+                    if let Some(e) = entry.as_mut() {
+                        e.latent_push_bits[layer - 1] += d;
+                    }
                 }
             }
         }
@@ -420,12 +448,29 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         {
             let before = bits_at(ans);
             self.push_top(ans, &z[layers - 1]);
-            prior += bits_at(ans) - before;
+            let d = bits_at(ans) - before;
+            prior += d;
+            if let Some(e) = entry.as_mut() {
+                e.latent_push_bits[layers - 1] += d;
+            }
         }
         scratch.z = z;
 
+        let net = bits_at(ans) - b0;
+        if let Some(mut e) = entry {
+            e.initial_bits = 32.0 * (ans.clean_words_used() - cw0) as f64;
+            e.data_bits = likelihood;
+            e.net_bits = net;
+            scratch
+                .codec
+                .ledger
+                .as_deref_mut()
+                .expect("entry implies ledger")
+                .push(e);
+        }
+
         Ok(ImageStats {
-            net_bits: bits_at(ans) - b0,
+            net_bits: net,
             posterior_bits: posterior,
             likelihood_bits: likelihood,
             prior_bits: prior,
@@ -482,8 +527,19 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         ans: &mut Ans,
         images: &[Vec<u8>],
     ) -> Result<Vec<ImageStats>> {
+        self.encode_dataset_into_scratch(ans, images, &mut HierScratch::new())
+    }
+
+    /// [`Self::encode_dataset_into`] with a caller-owned scratch — the
+    /// hook the ledgered paths use to thread an accounting sink through
+    /// the chain without touching the emitted bytes.
+    pub fn encode_dataset_into_scratch(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+        scratch: &mut HierScratch,
+    ) -> Result<Vec<ImageStats>> {
         let mut stats = Vec::with_capacity(images.len());
-        let mut scratch = HierScratch::new();
         for chunk in images.chunks(NN_CHUNK) {
             let posts = self.posterior_batch_for(chunk)?;
             for (r, img) in chunk.iter().enumerate() {
@@ -492,7 +548,7 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
                     img,
                     posts.mu.row(r),
                     posts.sigma.row(r),
-                    &mut scratch,
+                    scratch,
                 )?);
             }
         }
@@ -504,6 +560,22 @@ impl<'a, B: HierBackend + ?Sized> HierCodec<'a, B> {
         let mut ans = Ans::new(self.cfg.clean_seed);
         let stats = self.encode_dataset_into(&mut ans, images)?;
         Ok((ans, stats))
+    }
+
+    /// [`Self::encode_dataset`] with the rate ledger attached: same bytes
+    /// (the ledger is a pure observer), plus per-image, per-layer bit
+    /// accounting — the decomposition that makes the naive-vs-Bit-Swap
+    /// initial-bits gap directly observable.
+    pub fn encode_dataset_ledgered(
+        &self,
+        images: &[Vec<u8>],
+    ) -> Result<(Ans, Vec<ImageStats>, crate::obs::Ledger)> {
+        let mut ans = Ans::new(self.cfg.clean_seed);
+        let mut scratch = HierScratch::new();
+        scratch.codec.ledger = Some(Box::default());
+        let stats = self.encode_dataset_into_scratch(&mut ans, images, &mut scratch)?;
+        let ledger = *scratch.codec.ledger.take().expect("installed above");
+        Ok((ans, stats, ledger))
     }
 
     // -------------------------------------------------------------- decode
@@ -786,6 +858,41 @@ impl<B: HierBackend + Sync + ?Sized> HierCodec<'_, B> {
         n_chunks: usize,
     ) -> Result<Vec<ChunkEntry>> {
         self.encode_dataset_chunked_with_workers(images, n_chunks, default_workers())
+    }
+
+    /// [`Self::encode_dataset_chunked_with_workers`] with the rate ledger
+    /// attached: identical chunk bytes (sequential and pipelined encodes
+    /// are bit-identical by construction), plus per-image accounting
+    /// merged in chunk order — entry order matches dataset order.
+    pub fn encode_dataset_chunked_ledgered(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<(Vec<ChunkEntry>, crate::obs::Ledger)> {
+        let ranges = chunk_ranges(images.len(), n_chunks);
+        let per_chunk = pooled_indexed(ranges.len(), workers, |ci| {
+            let chunk = &images[ranges[ci].clone()];
+            let mut ans = Ans::new(chunk_seed(self.cfg.clean_seed, ci));
+            let mut scratch = HierScratch::new();
+            scratch.codec.ledger = Some(Box::default());
+            self.encode_dataset_into_scratch(&mut ans, chunk, &mut scratch)?;
+            Ok((
+                ChunkEntry {
+                    num_images: chunk.len() as u32,
+                    message: ans.into_message(),
+                },
+                *scratch.codec.ledger.take().expect("installed above"),
+            ))
+        });
+        let mut chunks = Vec::with_capacity(per_chunk.len());
+        let mut ledger = crate::obs::Ledger::new();
+        for r in per_chunk {
+            let (entry, chunk_ledger): (ChunkEntry, crate::obs::Ledger) = r?;
+            chunks.push(entry);
+            ledger.merge(chunk_ledger);
+        }
+        Ok((chunks, ledger))
     }
 
     /// Decode chunks on a worker pool (each chunk decodes independently;

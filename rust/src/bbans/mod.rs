@@ -66,6 +66,12 @@ pub struct CodecScratch {
     /// per dimension — no `MaxEntropyBuckets` clone or
     /// `DiscretizedGaussian` construction per latent (ISSUE 3).
     pub gauss: Option<DiscretizedGaussian>,
+    /// Optional rate-ledger sink (ISSUE 9): when set, every encoded image
+    /// appends a [`crate::obs::LedgerEntry`]. A pure observer of the
+    /// effective-length measure — it never touches the coder, so ledgered
+    /// encodes emit byte-identical containers (pinned by golden tests in
+    /// [`container`]). `None` costs one pointer check per image.
+    pub ledger: Option<Box<crate::obs::Ledger>>,
 }
 
 impl CodecScratch {
@@ -575,6 +581,7 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         // stack content makes a posterior pop cost exactly -log q and a
         // push cost exactly -log p, so per-image net = -ELBO estimate.
         let bits_at = |a: &Ans| a.frac_bit_len() - 32.0 * a.clean_words_used() as f64;
+        let cw0 = ans.clean_words_used();
 
         // (1) pop y ~ q(y|s): dims in increasing order. The bucket-index
         // buffer is borrowed out of the scratch so the pixel step below
@@ -597,6 +604,16 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         self.push_prior(ans, &idx);
         let b3 = bits_at(ans);
         scratch.idx = idx;
+
+        if let Some(ledger) = scratch.ledger.as_deref_mut() {
+            let mut e = crate::obs::LedgerEntry::new(1);
+            e.initial_bits = 32.0 * (ans.clean_words_used() - cw0) as f64;
+            e.latent_pop_bits[0] = b1 - b0;
+            e.latent_push_bits[0] = b3 - b2;
+            e.data_bits = b2 - b1;
+            e.net_bits = b3 - b0;
+            ledger.push(e);
+        }
 
         Ok(ImageStats {
             net_bits: b3 - b0,
@@ -676,18 +693,44 @@ impl<'a, B: Backend + ?Sized> VaeCodec<'a, B> {
         ans: &mut Ans,
         images: &[Vec<u8>],
     ) -> Result<Vec<ImageStats>> {
+        self.encode_dataset_into_scratch(ans, images, &mut CodecScratch::new())
+    }
+
+    /// [`Self::encode_dataset_into`] with a caller-owned scratch — the
+    /// hook the ledgered paths use to thread an accounting sink through
+    /// the chain without touching the emitted bytes.
+    pub fn encode_dataset_into_scratch(
+        &self,
+        ans: &mut Ans,
+        images: &[Vec<u8>],
+        scratch: &mut CodecScratch,
+    ) -> Result<Vec<ImageStats>> {
         let mut stats = Vec::with_capacity(images.len());
-        let mut scratch = CodecScratch::new();
         for chunk in images.chunks(NN_CHUNK) {
             let posts = self.posterior_batch_for(chunk)?;
             for (r, img) in chunk.iter().enumerate() {
                 let (mu, sigma) = posts.row(r);
                 stats.push(
-                    self.encode_image_with_posterior_scratch(ans, img, mu, sigma, &mut scratch)?,
+                    self.encode_image_with_posterior_scratch(ans, img, mu, sigma, scratch)?,
                 );
             }
         }
         Ok(stats)
+    }
+
+    /// [`Self::encode_dataset`] with the rate ledger attached: same bytes
+    /// (the ledger is a pure observer of the effective-length measure),
+    /// plus per-image bit accounting for the whole chain.
+    pub fn encode_dataset_ledgered(
+        &self,
+        images: &[Vec<u8>],
+    ) -> Result<(Ans, Vec<ImageStats>, crate::obs::Ledger)> {
+        let mut ans = Ans::new(self.cfg.clean_seed);
+        let mut scratch = CodecScratch::new();
+        scratch.ledger = Some(Box::default());
+        let stats = self.encode_dataset_into_scratch(&mut ans, images, &mut scratch)?;
+        let ledger = *scratch.ledger.take().expect("installed above");
+        Ok((ans, stats, ledger))
     }
 
     /// Decode `n` chained images; returns them in original encode order.
@@ -1020,6 +1063,42 @@ impl<B: Backend + Sync + ?Sized> VaeCodec<'_, B> {
         })
         .into_iter()
         .collect()
+    }
+
+    /// [`Self::encode_dataset_chunked_with_workers`] with the rate ledger
+    /// attached: identical chunk bytes (each chain's coding ops are
+    /// unchanged; sequential and pipelined encodes are bit-identical by
+    /// construction), plus per-image accounting merged in chunk order —
+    /// entry order matches dataset order.
+    pub fn encode_dataset_chunked_ledgered(
+        &self,
+        images: &[Vec<u8>],
+        n_chunks: usize,
+        workers: usize,
+    ) -> Result<(Vec<container::ChunkEntry>, crate::obs::Ledger)> {
+        let ranges = Self::chunk_ranges(images.len(), n_chunks);
+        let per_chunk = pooled_indexed(ranges.len(), workers, |ci| {
+            let chunk = &images[ranges[ci].clone()];
+            let mut ans = Ans::new(container::chunk_seed(self.cfg.clean_seed, ci));
+            let mut scratch = CodecScratch::new();
+            scratch.ledger = Some(Box::default());
+            self.encode_dataset_into_scratch(&mut ans, chunk, &mut scratch)?;
+            Ok((
+                container::ChunkEntry {
+                    num_images: chunk.len() as u32,
+                    message: ans.into_message(),
+                },
+                *scratch.ledger.take().expect("installed above"),
+            ))
+        });
+        let mut chunks = Vec::with_capacity(per_chunk.len());
+        let mut ledger = crate::obs::Ledger::new();
+        for r in per_chunk {
+            let (entry, chunk_ledger): (container::ChunkEntry, crate::obs::Ledger) = r?;
+            chunks.push(entry);
+            ledger.merge(chunk_ledger);
+        }
+        Ok((chunks, ledger))
     }
 
     /// Decode chunks produced by [`Self::encode_dataset_chunked`] on the

@@ -152,15 +152,18 @@ enum BackendSet {
 
 type CompressReply = mpsc::Sender<Result<Vec<u8>, String>>;
 type DecompressReply = mpsc::Sender<Result<Vec<Vec<u8>>, String>>;
-type CompressJob = (Vec<Vec<u8>>, CompressReply);
-type DecompressJob = (Vec<u8>, DecompressReply);
-type HierJob = (HierSpec, Vec<Vec<u8>>, CompressReply);
+/// `(images, reply, trace)` — `trace` is the request's trace id, `0` for
+/// untraced jobs (the tracer ignores id 0 even when enabled).
+type CompressJob = (Vec<Vec<u8>>, CompressReply, u64);
+type DecompressJob = (Vec<u8>, DecompressReply, u64);
+type HierJob = (HierSpec, Vec<Vec<u8>>, CompressReply, u64);
 
 enum Job {
     Compress {
         model: String,
         images: Vec<Vec<u8>>,
         reply: CompressReply,
+        trace: u64,
     },
     /// Hierarchical (Bit-Swap / BBC3) compression: the model is given by
     /// seed + shape in the spec rather than a hosted-model name.
@@ -168,15 +171,29 @@ enum Job {
         spec: HierSpec,
         images: Vec<Vec<u8>>,
         reply: CompressReply,
+        trace: u64,
     },
     Decompress {
         container: Vec<u8>,
         reply: DecompressReply,
+        trace: u64,
     },
     Stats {
         reply: mpsc::Sender<String>,
     },
     Shutdown,
+}
+
+impl Job {
+    /// Trace id riding with this job (`0` = untraced).
+    fn trace(&self) -> u64 {
+        match self {
+            Job::Compress { trace, .. }
+            | Job::CompressHier { trace, .. }
+            | Job::Decompress { trace, .. } => *trace,
+            Job::Stats { .. } | Job::Shutdown => 0,
+        }
+    }
 }
 
 /// A job plus its admission timestamp — drives the flush deadline and
@@ -382,14 +399,31 @@ impl ServiceHandle {
         images: Vec<Vec<u8>>,
         ttl: Option<Duration>,
     ) -> Result<Vec<u8>> {
+        self.compress_opts(model, images, ttl, 0)
+    }
+
+    /// [`ServiceHandle::compress_with`] plus a trace id: when nonzero
+    /// (and the global tracer is enabled) the request's admission, queue
+    /// wait, round, and phase spans are recorded under `trace`.
+    pub fn compress_opts(
+        &self,
+        model: &str,
+        images: Vec<Vec<u8>>,
+        ttl: Option<Duration>,
+        trace: u64,
+    ) -> Result<Vec<u8>> {
         let t = Instant::now();
+        let n = images.len() as u64;
         let (reply, rx) = mpsc::channel();
         let job = Job::Compress {
             model: model.to_string(),
             images,
             reply,
+            trace,
         };
-        self.submit(job, ttl)?;
+        let admitted = self.submit(job, ttl);
+        crate::obs::tracer().record(trace, "admission", t, t.elapsed(), n);
+        admitted?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -412,14 +446,29 @@ impl ServiceHandle {
         images: Vec<Vec<u8>>,
         ttl: Option<Duration>,
     ) -> Result<Vec<u8>> {
+        self.compress_hier_opts(spec, images, ttl, 0)
+    }
+
+    /// [`ServiceHandle::compress_hier_with`] plus a trace id.
+    pub fn compress_hier_opts(
+        &self,
+        spec: HierSpec,
+        images: Vec<Vec<u8>>,
+        ttl: Option<Duration>,
+        trace: u64,
+    ) -> Result<Vec<u8>> {
         let t = Instant::now();
+        let n = images.len() as u64;
         let (reply, rx) = mpsc::channel();
         let job = Job::CompressHier {
             spec,
             images,
             reply,
+            trace,
         };
-        self.submit(job, ttl)?;
+        let admitted = self.submit(job, ttl);
+        crate::obs::tracer().record(trace, "admission", t, t.elapsed(), n);
+        admitted?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -438,9 +487,28 @@ impl ServiceHandle {
         container: Vec<u8>,
         ttl: Option<Duration>,
     ) -> Result<Vec<Vec<u8>>> {
+        self.decompress_opts(container, ttl, 0)
+    }
+
+    /// [`ServiceHandle::decompress_with`] plus a trace id.
+    pub fn decompress_opts(
+        &self,
+        container: Vec<u8>,
+        ttl: Option<Duration>,
+        trace: u64,
+    ) -> Result<Vec<Vec<u8>>> {
         let t = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Decompress { container, reply }, ttl)?;
+        let admitted = self.submit(
+            Job::Decompress {
+                container,
+                reply,
+                trace,
+            },
+            ttl,
+        );
+        crate::obs::tracer().record(trace, "admission", t, t.elapsed(), 1);
+        admitted?;
         let out = rx
             .recv()
             .map_err(|_| anyhow!("service dropped request"))?
@@ -484,6 +552,15 @@ impl ServiceHandle {
         let m = &self.metrics;
         Json::obj(vec![
             ("alive", Json::Bool(self.is_alive())),
+            ("uptime_s", Json::Num(m.uptime().as_secs_f64())),
+            (
+                "version",
+                Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+            ),
+            (
+                "kernel_id",
+                Json::Str(crate::simd::kernel_name().to_string()),
+            ),
             (
                 "queue_depth",
                 Json::Num(m.queue_depth.load(Ordering::Relaxed) as f64),
@@ -755,10 +832,13 @@ fn worker_loop<F>(
         }
 
         Metrics::inc(&metrics.rounds, 1);
+        let tr = crate::obs::tracer();
         let t_batch = Instant::now();
         let mut compress: HashMap<String, Vec<CompressJob>> = HashMap::new();
         let mut hier: Vec<HierJob> = Vec::new();
         let mut decompress: Vec<DecompressJob> = Vec::new();
+        // Trace ids that made it into this round (for the round span).
+        let mut traced: Vec<u64> = Vec::new();
         let mut saw_shutdown = false;
         for Queued { job, at, deadline } in jobs {
             if matches!(job, Job::Shutdown) {
@@ -767,6 +847,7 @@ fn worker_loop<F>(
             }
             Metrics::dec(&metrics.queue_depth, 1);
             metrics.queue_wait.observe(at.elapsed());
+            tr.record(job.trace(), "queue", at, at.elapsed(), 1);
             // Shed expired jobs HERE, at round formation — before the
             // round spends a single NN dispatch on work whose caller
             // already gave up.
@@ -796,13 +877,34 @@ fn worker_loop<F>(
                     model,
                     images,
                     reply,
-                } => compress.entry(model).or_default().push((images, reply)),
+                    trace,
+                } => {
+                    if trace != 0 {
+                        traced.push(trace);
+                    }
+                    compress.entry(model).or_default().push((images, reply, trace));
+                }
                 Job::CompressHier {
                     spec,
                     images,
                     reply,
-                } => hier.push((spec, images, reply)),
-                Job::Decompress { container, reply } => decompress.push((container, reply)),
+                    trace,
+                } => {
+                    if trace != 0 {
+                        traced.push(trace);
+                    }
+                    hier.push((spec, images, reply, trace));
+                }
+                Job::Decompress {
+                    container,
+                    reply,
+                    trace,
+                } => {
+                    if trace != 0 {
+                        traced.push(trace);
+                    }
+                    decompress.push((container, reply, trace));
+                }
                 Job::Stats { reply } => {
                     let _ = reply.send(metrics.snapshot_json().to_string());
                 }
@@ -815,14 +917,14 @@ fn worker_loop<F>(
         for (model, group) in compress {
             Metrics::inc(&metrics.requests, group.len() as u64);
             if metrics.is_quarantined(&model) {
-                for (_, reply) in group {
+                for (_, reply, _) in group {
                     Metrics::inc(&metrics.errors, 1);
                     let msg = format!("model '{model}' is quarantined after repeated panics");
                     let _ = reply.send(Err(msg));
                 }
                 continue;
             }
-            let replies: Vec<CompressReply> = group.iter().map(|(_, r)| r.clone()).collect();
+            let replies: Vec<CompressReply> = group.iter().map(|(_, r, _)| r.clone()).collect();
             let run = catch_unwind(AssertUnwindSafe(|| {
                 encode_group(&backends, &params, &metrics, &model, group);
             }));
@@ -830,7 +932,7 @@ fn worker_loop<F>(
         }
         if !hier.is_empty() {
             Metrics::inc(&metrics.requests, hier.len() as u64);
-            for (spec, images, reply) in hier {
+            for (spec, images, reply, trace) in hier {
                 let key = hier_quarantine_key(
                     spec.seed,
                     spec.hidden,
@@ -843,16 +945,19 @@ fn worker_loop<F>(
                     let _ = reply.send(Err(msg));
                     continue;
                 }
+                let n_images = images.len() as u64;
                 let replies = [reply.clone()];
+                let t_unit = Instant::now();
                 let run = catch_unwind(AssertUnwindSafe(|| {
                     compress_hier_job(
                         &backends,
                         &params,
                         &metrics,
-                        (spec, images, reply),
+                        (spec, images, reply, trace),
                         &mut hier_cache,
                     );
                 }));
+                tr.record(trace, "exec", t_unit, t_unit.elapsed(), n_images);
                 settle_unit(&metrics, &mut supervisor, &key, run, &replies);
             }
         }
@@ -867,6 +972,14 @@ fn worker_loop<F>(
             );
         }
         metrics.batch_latency.observe(t_batch.elapsed());
+        // Round span for every traced job, then drain the worker
+        // thread's buffered spans into the global ring — the ring is
+        // what `TraceReq` snapshots, so a round's spans are visible as
+        // soon as its replies are.
+        for &id in &traced {
+            tr.record(id, "round", t_batch, t_batch.elapsed(), 1);
+        }
+        tr.flush();
 
         if saw_shutdown {
             return;
@@ -929,7 +1042,7 @@ fn batched_encode<E: PhaseExecutor>(
     let core = match CodecCore::new(meta.clone(), params.bbans) {
         Ok(c) => c,
         Err(e) => {
-            for (_, reply) in group {
+            for (_, reply, _) in group {
                 let _ = reply.send(Err(format!("{e:#}")));
             }
             return;
@@ -944,6 +1057,8 @@ fn batched_encode<E: PhaseExecutor>(
         ans: Ans,
         next: usize,
         reply: CompressReply,
+        /// Request trace id (`0` = untraced).
+        trace: u64,
         failed: Option<String>,
         /// Per-stream coder buffers; `scratch.idx` carries the popped
         /// bucket indices across the batched generative-net dispatch.
@@ -955,6 +1070,11 @@ fn batched_encode<E: PhaseExecutor>(
         pending: Option<PixelParams>,
     }
     let mut streams: Vec<Stream> = Vec::with_capacity(group.len());
+    // Per-unit phase time, attributed to every traced stream in the
+    // unit (phases are shared across streams by construction).
+    let unit_start = Instant::now();
+    let mut nn_acc = Duration::ZERO;
+    let mut ans_acc = Duration::ZERO;
 
     // Phase 1: ONE batched recognition-net dispatch for every image of
     // every stream, packed into a single [rows, pixels] matrix.
@@ -962,7 +1082,7 @@ fn batched_encode<E: PhaseExecutor>(
     {
         let mut data: Vec<f32> = Vec::new();
         let mut rows = 0usize;
-        for (images, reply) in group {
+        for (images, reply, trace) in group {
             let failed = images
                 .iter()
                 .any(|i| i.len() != meta.pixels)
@@ -980,6 +1100,7 @@ fn batched_encode<E: PhaseExecutor>(
                 ans: Ans::new(params.bbans.clean_seed),
                 next: 0,
                 reply,
+                trace,
                 failed,
                 scratch: CodecScratch::new(),
                 ys: Vec::new(),
@@ -991,6 +1112,7 @@ fn batched_encode<E: PhaseExecutor>(
             Metrics::inc(&metrics.nn_items, rows as u64);
             let t = Instant::now();
             let r = exec.nn_posterior(&Matrix::new(rows, meta.pixels, data));
+            nn_acc += t.elapsed();
             metrics.phase_nn.observe(t.elapsed());
             match r {
                 Ok(p) => posts = Some(p),
@@ -1026,6 +1148,7 @@ fn batched_encode<E: PhaseExecutor>(
             core.latent_centres_into(&idx, &mut s.ys);
             s.scratch.idx = idx;
         });
+        ans_acc += t.elapsed();
         metrics.phase_ans.observe(t.elapsed());
         // Pack the latent matrix serially, in stream order.
         ys_data.clear();
@@ -1038,6 +1161,7 @@ fn batched_encode<E: PhaseExecutor>(
         Metrics::inc(&metrics.nn_items, active.len() as u64);
         let t = Instant::now();
         let r = exec.nn_likelihood(&ym);
+        nn_acc += t.elapsed();
         metrics.phase_nn.observe(t.elapsed());
         match r {
             Ok(param_list) => {
@@ -1060,6 +1184,7 @@ fn batched_encode<E: PhaseExecutor>(
                     s.scratch.idx = idx;
                     s.next += 1;
                 });
+                ans_acc += t.elapsed();
                 metrics.phase_ans.observe(t.elapsed());
                 Metrics::inc(&metrics.images_encoded, active.len() as u64);
             }
@@ -1072,8 +1197,16 @@ fn batched_encode<E: PhaseExecutor>(
         ys_data = ym.data;
     }
 
-    // Phase 3: containers out (serial, stream order).
+    // Phase 3: containers out (serial, stream order). Traced streams get
+    // the unit's accumulated NN / ANS phase time (shared across streams
+    // — the phases batch cross-stream by design).
+    let tr = crate::obs::tracer();
     for s in streams {
+        if s.trace != 0 {
+            let n = s.images.len() as u64;
+            tr.record(s.trace, "nn", unit_start, nn_acc, n);
+            tr.record(s.trace, "ans", unit_start, ans_acc, n);
+        }
         if let Some(msg) = s.failed {
             Metrics::inc(&metrics.errors, 1);
             let _ = s.reply.send(Err(msg));
@@ -1108,7 +1241,7 @@ fn decode_jobs(
     jobs: Vec<DecompressJob>,
     hier_cache: &mut HashMap<String, HierVae>,
 ) {
-    type GroupJob = (Container, DecompressReply);
+    type GroupJob = (Container, DecompressReply, u64);
     enum Parsed {
         Bbc2(ParallelContainer, DecompressReply),
         Bbc3(HierContainer, DecompressReply),
@@ -1130,19 +1263,19 @@ fn decode_jobs(
     };
 
     let mut by_model: HashMap<String, Vec<GroupJob>> = HashMap::new();
-    let mut singles: Vec<(String, Parsed)> = Vec::new();
-    for (bytes, reply) in jobs {
+    let mut singles: Vec<(String, Parsed, u64)> = Vec::new();
+    for (bytes, reply, trace) in jobs {
         Metrics::inc(&metrics.bytes_in, bytes.len() as u64);
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_PARALLEL {
             match ParallelContainer::from_bytes(&bytes) {
-                Ok(pc) => singles.push((pc.model.clone(), Parsed::Bbc2(pc, reply))),
+                Ok(pc) => singles.push((pc.model.clone(), Parsed::Bbc2(pc, reply), trace)),
                 Err(e) => fail(reply, format!("bad container: {e:#}")),
             }
             continue;
         }
         if bytes.len() >= 4 && &bytes[0..4] == MAGIC_HIER {
             match HierContainer::from_bytes(&bytes) {
-                Ok(hc) => singles.push((hier_key(&hc), Parsed::Bbc3(hc, reply))),
+                Ok(hc) => singles.push((hier_key(&hc), Parsed::Bbc3(hc, reply), trace)),
                 Err(e) => fail(reply, format!("bad container: {e:#}")),
             }
             continue;
@@ -1160,19 +1293,23 @@ fn decode_jobs(
                             }
                         },
                     };
-                    singles.push((key, Parsed::Bbc4(c, reply)));
+                    singles.push((key, Parsed::Bbc4(c, reply), trace));
                 }
                 Err(e) => fail(reply, format!("bad container: {e:#}")),
             }
             continue;
         }
         match Container::from_bytes(&bytes) {
-            Ok(c) => by_model.entry(c.model.clone()).or_default().push((c, reply)),
+            Ok(c) => by_model
+                .entry(c.model.clone())
+                .or_default()
+                .push((c, reply, trace)),
             Err(e) => fail(reply, format!("bad container: {e:#}")),
         }
     }
 
-    for (key, parsed) in singles {
+    let tr = crate::obs::tracer();
+    for (key, parsed, trace) in singles {
         if metrics.is_quarantined(&key) {
             let msg = format!("'{key}' is quarantined after repeated panics");
             match parsed {
@@ -1181,6 +1318,7 @@ fn decode_jobs(
             continue;
         }
         let replies = [parsed.reply().clone()];
+        let t_unit = Instant::now();
         let run = catch_unwind(AssertUnwindSafe(|| match parsed {
             Parsed::Bbc2(pc, reply) => decode_parallel_container(backends, metrics, pc, reply),
             Parsed::Bbc3(hc, reply) => {
@@ -1192,18 +1330,19 @@ fn decode_jobs(
             }
             Parsed::Bbc4(c, reply) => decode_bbc4_container(backends, metrics, c, reply, hier_cache),
         }));
+        tr.record(trace, "exec", t_unit, t_unit.elapsed(), 1);
         settle_unit(metrics, sup, &key, run, &replies);
     }
 
     for (model, group) in by_model {
         if metrics.is_quarantined(&model) {
-            for (_, reply) in group {
+            for (_, reply, _) in group {
                 let msg = format!("model '{model}' is quarantined after repeated panics");
                 fail(reply, msg);
             }
             continue;
         }
-        let replies: Vec<DecompressReply> = group.iter().map(|(_, r)| r.clone()).collect();
+        let replies: Vec<DecompressReply> = group.iter().map(|(_, r, _)| r.clone()).collect();
         let run = catch_unwind(AssertUnwindSafe(|| {
             decode_group(backends, metrics, &model, group);
         }));
@@ -1217,10 +1356,10 @@ fn decode_group(
     backends: &BackendSet,
     metrics: &Metrics,
     model: &str,
-    group: Vec<(Container, DecompressReply)>,
+    group: Vec<(Container, DecompressReply, u64)>,
 ) {
-    let reject = |group: Vec<(Container, DecompressReply)>| {
-        for (_, reply) in group {
+    let reject = |group: Vec<(Container, DecompressReply, u64)>| {
+        for (_, reply, _) in group {
             Metrics::inc(&metrics.errors, 1);
             let _ = reply.send(Err(format!("unknown model '{model}'")));
         }
@@ -1256,12 +1395,14 @@ fn batched_decode<E: PhaseExecutor>(
     meta: &ModelMeta,
     backend_id: &str,
     metrics: &Metrics,
-    group: Vec<(Container, DecompressReply)>,
+    group: Vec<(Container, DecompressReply, u64)>,
 ) {
     struct Stream {
         ans: Ans,
         remaining: usize,
         out: Vec<Vec<u8>>,
+        /// Request trace id (`0` = untraced).
+        trace: u64,
         /// Built once at admission (each container carries its own
         /// config); `None` iff `failed` — constructing per phase would
         /// serialize the pool on the global bucket-table lock.
@@ -1278,9 +1419,12 @@ fn batched_decode<E: PhaseExecutor>(
         /// Row of this stream in the current round's batched outputs.
         row: usize,
     }
+    let unit_start = Instant::now();
+    let mut nn_acc = Duration::ZERO;
+    let mut ans_acc = Duration::ZERO;
     let mut streams: Vec<Stream> = group
         .into_iter()
-        .map(|(c, reply)| {
+        .map(|(c, reply, trace)| {
             let mut failed = if c.backend_id != backend_id {
                 Some(format!(
                     "container encoded with backend '{}', this service runs '{}'",
@@ -1302,6 +1446,7 @@ fn batched_decode<E: PhaseExecutor>(
                 ans: Ans::from_message(&c.message, c.cfg.clean_seed),
                 remaining: c.num_images as usize,
                 out: Vec::with_capacity(c.num_images as usize),
+                trace,
                 core,
                 reply,
                 failed,
@@ -1335,6 +1480,7 @@ fn batched_decode<E: PhaseExecutor>(
             s.ys.clear();
             core.latent_centres_into(&s.pending_idx, &mut s.ys);
         });
+        ans_acc += t.elapsed();
         metrics.phase_ans.observe(t.elapsed());
         ys_data.clear();
         for s in active.iter() {
@@ -1346,6 +1492,7 @@ fn batched_decode<E: PhaseExecutor>(
         Metrics::inc(&metrics.nn_items, active.len() as u64);
         let t = Instant::now();
         let r = exec.nn_likelihood(&ym);
+        nn_acc += t.elapsed();
         metrics.phase_nn.observe(t.elapsed());
         let params_list = match r {
             Ok(p) => p,
@@ -1370,6 +1517,7 @@ fn batched_decode<E: PhaseExecutor>(
             s.xs.clear();
             core.scale_image_into(&s.pending_img, &mut s.xs);
         });
+        ans_acc += t.elapsed();
         metrics.phase_ans.observe(t.elapsed());
         xs_data.clear();
         for s in active.iter() {
@@ -1381,6 +1529,7 @@ fn batched_decode<E: PhaseExecutor>(
         Metrics::inc(&metrics.nn_items, active.len() as u64);
         let t = Instant::now();
         let r = exec.nn_posterior(&xm);
+        nn_acc += t.elapsed();
         metrics.phase_nn.observe(t.elapsed());
         match r {
             Ok(posts) => {
@@ -1403,6 +1552,7 @@ fn batched_decode<E: PhaseExecutor>(
                     s.out.push(std::mem::take(&mut s.pending_img));
                     s.remaining -= 1;
                 });
+                ans_acc += t.elapsed();
                 metrics.phase_ans.observe(t.elapsed());
                 Metrics::inc(&metrics.images_decoded, active.len() as u64);
             }
@@ -1415,7 +1565,13 @@ fn batched_decode<E: PhaseExecutor>(
         xs_data = xm.data;
     }
 
+    let tr = crate::obs::tracer();
     for s in streams {
+        if s.trace != 0 {
+            let n = s.out.len() as u64;
+            tr.record(s.trace, "nn", unit_start, nn_acc, n);
+            tr.record(s.trace, "ans", unit_start, ans_acc, n);
+        }
         if let Some(msg) = s.failed {
             Metrics::inc(&metrics.errors, 1);
             let _ = s.reply.send(Err(msg));
@@ -1646,7 +1802,7 @@ fn compress_hier_job(
         BackendSet::Local(_) => 1,
         BackendSet::Shared { pool, .. } => pool.lanes(),
     };
-    let (spec, images, reply) = job;
+    let (spec, images, reply, _trace) = job;
     match encode_hier(&spec, &images, params, workers, cache) {
         Ok(bytes) => {
             Metrics::inc(&metrics.images_encoded, images.len() as u64);
@@ -2358,6 +2514,64 @@ mod tests {
             assert_eq!(bytes, reference, "fanout={fanout} changed BBC3 bytes");
             sync.shutdown();
         }
+    }
+
+    /// Health JSON carries the service identity fields the stats
+    /// snapshot gained (uptime, crate version, SIMD kernel), and they
+    /// survive a JSON round-trip.
+    #[test]
+    fn health_json_roundtrips_identity_fields() {
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        let j = Json::parse(&h.health_json()).unwrap();
+        assert_eq!(
+            j.get("version").unwrap().as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        let kernel = j.get("kernel_id").unwrap().as_str().unwrap().to_string();
+        assert!(
+            ["avx2", "neon", "scalar"].contains(&kernel.as_str()),
+            "unexpected kernel id {kernel}"
+        );
+        assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("alive").unwrap().as_bool(), Some(true));
+        svc.shutdown();
+    }
+
+    /// A traced compress + decompress records the full span lifecycle —
+    /// admission, queue wait, coding phases, round — under the request's
+    /// trace id, and tracing changes no payload bytes.
+    #[test]
+    fn traced_request_records_lifecycle_spans() {
+        let _guard = crate::obs::trace::test_guard();
+        let tr = crate::obs::tracer();
+        let was = tr.enabled();
+        tr.set_enabled(true);
+
+        let svc = test_service(4, 1);
+        let h = svc.handle();
+        let images = sample_images(3, 55);
+        let untraced = h.compress("toy", images.clone()).unwrap();
+        let id = tr.next_trace_id();
+        let c = h.compress_opts("toy", images.clone(), None, id).unwrap();
+        assert_eq!(c, untraced, "tracing must not change container bytes");
+        let id2 = tr.next_trace_id();
+        assert_eq!(h.decompress_opts(c, None, id2).unwrap(), images);
+        svc.shutdown(); // worker flushed its spans at each round's end
+
+        for (trace, expect) in [
+            (id, &["admission", "queue", "nn", "ans", "round"][..]),
+            (id2, &["admission", "queue", "nn", "ans", "round"][..]),
+        ] {
+            let spans = tr.spans();
+            for name in expect {
+                assert!(
+                    spans.iter().any(|s| s.trace == trace && s.name == *name),
+                    "missing span {name} for trace {trace}"
+                );
+            }
+        }
+        tr.set_enabled(was);
     }
 
     #[test]

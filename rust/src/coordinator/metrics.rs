@@ -1,15 +1,17 @@
 //! Service metrics: atomic counters and log-bucketed latency histograms,
-//! exported as JSON over the stats endpoint.
+//! exported as JSON over the stats endpoint and as Prometheus text
+//! (exposition format 0.0.4) over the metrics wire op / scrape listener.
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::obs::prom::PromWriter;
 use crate::util::json::Json;
 
 /// Log₂-bucketed latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
-const BUCKETS: usize = 32;
+pub const BUCKETS: usize = 32;
 
 #[derive(Debug, Default)]
 pub struct Histogram {
@@ -43,22 +45,41 @@ impl Histogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
     }
 
-    /// Approximate quantile from the bucket histogram (upper bound of the
-    /// bucket containing the quantile).
+    /// Approximate quantile from the bucket histogram: the **geometric
+    /// midpoint** `2^i·√2` of the bucket `[2^i, 2^(i+1))` containing the
+    /// quantile — the unbiased point estimate for log-spaced buckets.
+    /// (The upper bound `2^(i+1)` this used to return overstates p50/p99
+    /// by up to 2×.)
     pub fn quantile(&self, q: f64) -> Duration {
         let n = self.count();
         if n == 0 {
             return Duration::ZERO;
         }
-        let target = (q * n as f64).ceil() as u64;
+        let target = ((q * n as f64).ceil() as u64).max(1);
+        let midpoint =
+            |i: usize| Duration::from_secs_f64((1u64 << i) as f64 * std::f64::consts::SQRT_2 / 1e6);
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                return midpoint(i);
             }
         }
-        Duration::from_micros(1u64 << BUCKETS)
+        midpoint(BUCKETS - 1)
+    }
+
+    /// Relaxed snapshot of the per-bucket counts (for exposition).
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (o, c) in out.iter_mut().zip(self.counts.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Sum of observed values, µs.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
     }
 
     fn to_json(&self) -> Json {
@@ -78,8 +99,10 @@ impl Histogram {
 }
 
 /// All coordinator metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
+    /// Construction instant — the uptime reference stats/health report.
+    started: Instant,
     pub requests: AtomicU64,
     pub images_encoded: AtomicU64,
     pub images_decoded: AtomicU64,
@@ -125,9 +148,44 @@ pub struct Metrics {
     pub phase_ans: Histogram,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            images_encoded: AtomicU64::new(0),
+            images_decoded: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            nn_calls: AtomicU64::new(0),
+            nn_items: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            worker_dead: AtomicBool::new(false),
+            heartbeat: AtomicU64::new(0),
+            quarantined: Mutex::new(BTreeSet::new()),
+            queue_depth: AtomicU64::new(0),
+            batch_latency: Histogram::new(),
+            request_latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+            phase_nn: Histogram::new(),
+            phase_ans: Histogram::new(),
+        }
+    }
+
+    /// Time since this metrics block (≈ the service) was created.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     pub fn inc(counter: &AtomicU64, by: u64) {
@@ -177,6 +235,12 @@ impl Metrics {
 
     pub fn snapshot_json(&self) -> Json {
         Json::obj(vec![
+            ("uptime_s", Json::Num(self.uptime().as_secs_f64())),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+            (
+                "kernel_id",
+                Json::Str(crate::simd::kernel_name().to_string()),
+            ),
             (
                 "requests",
                 Json::Num(self.requests.load(Ordering::Relaxed) as f64),
@@ -253,6 +317,141 @@ impl Metrics {
             ("phase_ans", self.phase_ans.to_json()),
         ])
     }
+
+    /// Render every metric as Prometheus exposition text (served by the
+    /// `MetricsReq` wire op and the `serve --metrics-addr` scrape
+    /// listener). Same fields as [`Self::snapshot_json`], in the
+    /// conventional Prometheus shapes: `_total` counters, gauges, and
+    /// cumulative `_bucket`/`_sum`/`_count` histogram series in µs.
+    pub fn to_prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        w.info(
+            "bbans_build_info",
+            "Build identity of the serving process.",
+            &[
+                ("version", env!("CARGO_PKG_VERSION")),
+                ("kernel", crate::simd::kernel_name()),
+            ],
+        );
+        w.gauge(
+            "bbans_uptime_seconds",
+            "Seconds since the service started.",
+            self.uptime().as_secs_f64(),
+        );
+        let counters: [(&str, &str, &AtomicU64); 12] = [
+            ("bbans_requests_total", "Requests admitted.", &self.requests),
+            (
+                "bbans_images_encoded_total",
+                "Images compressed.",
+                &self.images_encoded,
+            ),
+            (
+                "bbans_images_decoded_total",
+                "Images decompressed.",
+                &self.images_decoded,
+            ),
+            ("bbans_bytes_in_total", "Payload bytes received.", &self.bytes_in),
+            ("bbans_bytes_out_total", "Payload bytes produced.", &self.bytes_out),
+            ("bbans_nn_calls_total", "Batched NN dispatches.", &self.nn_calls),
+            (
+                "bbans_nn_items_total",
+                "Images across all NN dispatches.",
+                &self.nn_items,
+            ),
+            ("bbans_errors_total", "Failed jobs.", &self.errors),
+            (
+                "bbans_rejected_total",
+                "Jobs refused at admission (queue full).",
+                &self.rejected,
+            ),
+            (
+                "bbans_protocol_errors_total",
+                "Malformed frames seen by connection handlers.",
+                &self.protocol_errors,
+            ),
+            ("bbans_rounds_total", "Lock-step batch rounds run.", &self.rounds),
+            (
+                "bbans_panics_total",
+                "Execution units contained after a panic.",
+                &self.panics,
+            ),
+        ];
+        for (name, help, c) in counters {
+            w.counter(name, help, c.load(Ordering::Relaxed));
+        }
+        w.counter(
+            "bbans_expired_total",
+            "Jobs shed at round formation past their deadline.",
+            self.expired.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "bbans_heartbeat_total",
+            "Worker wakeups (bumped when a round starts).",
+            self.heartbeat.load(Ordering::Relaxed),
+        );
+        w.gauge(
+            "bbans_worker_alive",
+            "1 while the model-worker thread is running.",
+            (!self.worker_dead.load(Ordering::Relaxed)) as u64 as f64,
+        );
+        w.gauge(
+            "bbans_queue_depth",
+            "Jobs admitted but not yet drained into a round.",
+            self.queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        w.gauge(
+            "bbans_quarantined_keys",
+            "Execution keys quarantined after repeated panics.",
+            self.quarantined_keys().len() as f64,
+        );
+        w.gauge(
+            "bbans_mean_batch_size",
+            "Mean images per NN dispatch.",
+            self.mean_batch_size(),
+        );
+        let hists: [(&str, &str, &Histogram); 5] = [
+            (
+                "bbans_batch_latency_us",
+                "Wall time of one batch round, µs.",
+                &self.batch_latency,
+            ),
+            (
+                "bbans_request_latency_us",
+                "Admission-to-reply request latency, µs.",
+                &self.request_latency,
+            ),
+            (
+                "bbans_queue_wait_us",
+                "Admission-to-drain queue wait per job, µs.",
+                &self.queue_wait,
+            ),
+            (
+                "bbans_phase_nn_us",
+                "Per-phase NN dispatch time inside a round, µs.",
+                &self.phase_nn,
+            ),
+            (
+                "bbans_phase_ans_us",
+                "Per-phase ANS coder time inside a round, µs.",
+                &self.phase_ans,
+            ),
+        ];
+        for (name, help, h) in hists {
+            w.log2_histogram(name, help, &h.bucket_counts(), h.sum_us(), h.count());
+        }
+        let t = crate::obs::tracer();
+        w.counter(
+            "bbans_trace_spans_recorded_total",
+            "Spans recorded by the request tracer.",
+            t.recorded(),
+        );
+        w.counter(
+            "bbans_trace_spans_dropped_total",
+            "Spans overwritten by trace-ring wraparound.",
+            t.dropped(),
+        );
+        w.finish()
+    }
 }
 
 #[cfg(test)]
@@ -270,6 +469,154 @@ mod tests {
         assert_eq!(h.count(), 100);
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert!(h.mean() > Duration::from_micros(1000));
+    }
+
+    /// Regression (ISSUE 9 satellite): `quantile` must return a point
+    /// *inside* the bucket holding the quantile — the geometric midpoint
+    /// `2^i·√2` — not the bucket's upper bound `2^(i+1)`, which
+    /// overstated p50/p99 by up to 2×.
+    #[test]
+    fn quantile_is_geometric_midpoint_within_bucket_bounds() {
+        let h = Histogram::new();
+        // All mass in bucket 10: [1024, 2048) µs.
+        for _ in 0..100 {
+            h.observe(Duration::from_micros(1500));
+        }
+        for q in [0.01, 0.5, 0.99] {
+            let v = h.quantile(q).as_secs_f64() * 1e6;
+            assert!(
+                v >= 1024.0 && v < 2048.0,
+                "q={q}: {v}µs escapes its bucket [1024, 2048)"
+            );
+            let mid = 1024.0 * std::f64::consts::SQRT_2;
+            assert!((v - mid).abs() < 1.0, "q={q}: {v}µs is not the midpoint {mid}µs");
+            // Strictly below the old upper-bound answer.
+            assert!(v < 2048.0);
+        }
+        // Monotone in q across a multi-bucket distribution.
+        let h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.observe(Duration::from_micros(us));
+            }
+        }
+        let mut last = Duration::ZERO;
+        for q in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let v = h.quantile(q);
+            assert!(v >= last, "quantile must be monotone in q");
+            last = v;
+        }
+        // p50 of this distribution sits in bucket [512, 1024).
+        let p50 = h.quantile(0.5).as_secs_f64() * 1e6;
+        assert!(p50 >= 512.0 && p50 < 1024.0, "p50 {p50}µs");
+    }
+
+    /// Concurrency hammer (ISSUE 9 satellite): N writer threads observe
+    /// and bump counters while a reader snapshots — no observation may be
+    /// lost or double-counted, and every snapshot must be internally
+    /// sane (bucket sum ≤ count at all times, equal at quiescence).
+    #[test]
+    fn concurrent_hammer_conserves_totals() {
+        const WRITERS: usize = 8;
+        const PER_WRITER: u64 = 10_000;
+        let m = std::sync::Arc::new(Metrics::new());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let reader = {
+            let m = m.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let total = WRITERS as u64 * PER_WRITER;
+                let mut snaps = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Mid-flight snapshots must never overshoot the final
+                    // totals (relaxed counters only ever add) and must
+                    // render without panicking while writers hammer.
+                    let bucket_sum: u64 = m.request_latency.bucket_counts().iter().sum();
+                    let n = m.request_latency.count();
+                    assert!(bucket_sum <= total, "bucket sum {bucket_sum} > {total}");
+                    assert!(n <= total, "n {n} > {total}");
+                    let _ = m.snapshot_json().to_string();
+                    let _ = m.to_prometheus();
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_WRITER {
+                        // Sweep several buckets.
+                        let us = 1 + ((t as u64 * 7919 + i) % 5000);
+                        m.request_latency.observe(Duration::from_micros(us));
+                        Metrics::inc(&m.requests, 1);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let snaps = reader.join().unwrap();
+        assert!(snaps > 0, "reader never snapshotted");
+        let total = WRITERS as u64 * PER_WRITER;
+        assert_eq!(m.requests.load(Ordering::Relaxed), total);
+        assert_eq!(m.request_latency.count(), total);
+        assert_eq!(m.request_latency.bucket_counts().iter().sum::<u64>(), total);
+        assert!(m.request_latency.sum_us() >= total); // every observe ≥ 1µs
+    }
+
+    /// Stats enrichment (ISSUE 9 satellite): uptime, crate version, and
+    /// the active kernel id ride the snapshot and round-trip as JSON.
+    #[test]
+    fn snapshot_reports_uptime_version_and_kernel() {
+        let m = Metrics::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let text = m.snapshot_json().to_string();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert!(j.get("uptime_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("version").unwrap().as_str(),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        let kernel = j.get("kernel_id").unwrap().as_str().unwrap();
+        assert!(
+            ["avx2", "neon", "scalar"].contains(&kernel),
+            "unexpected kernel id {kernel}"
+        );
+    }
+
+    /// The Prometheus render exposes the same state as the JSON snapshot
+    /// in `name{labels} value` exposition shape.
+    #[test]
+    fn prometheus_render_exposes_counters_and_histograms() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests, 7);
+        m.request_latency.observe(Duration::from_micros(300));
+        m.quarantine("bad-model");
+        let text = m.to_prometheus();
+        assert!(text.contains("bbans_requests_total 7\n"));
+        assert!(text.contains("# TYPE bbans_request_latency_us histogram\n"));
+        assert!(text.contains("bbans_request_latency_us_count 1\n"));
+        assert!(text.contains("bbans_request_latency_us_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("bbans_quarantined_keys 1\n"));
+        assert!(text.contains("bbans_worker_alive 1\n"));
+        assert!(text.contains(&format!(
+            "bbans_build_info{{version=\"{}\",kernel=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION"),
+            crate::simd::kernel_name()
+        )));
+        // Every sample line parses as `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(value.parse::<f64>().is_ok() || value == "+Inf", "{line}");
+            assert!(
+                head.chars().next().unwrap().is_ascii_alphabetic(),
+                "{line}"
+            );
+        }
     }
 
     #[test]

@@ -11,19 +11,31 @@
 //! | 0x04 | `Shutdown`         | — (server: stop accepting, drain, exit)        |
 //! | 0x05 | `CompressHierReq`  | hier spec (see below), pixels u32, n u32, images |
 //! | 0x07 | `HealthReq`        | —                                              |
+//! | 0x08 | `TraceReq`         | max traces u32                                 |
+//! | 0x09 | `MetricsReq`       | —                                              |
 //! | 0x11 | `CompressReq`+TTL  | ttl_ms u32, then the 0x01 payload              |
 //! | 0x12 | `DecompressReq`+TTL| ttl_ms u32, then the 0x02 payload              |
 //! | 0x15 | `CompressHierReq`+TTL | ttl_ms u32, then the 0x05 payload           |
+//! | 0x21 | `CompressReq`+trace | trace_id u64, then the 0x01 payload           |
+//! | 0x22 | `DecompressReq`+trace | trace_id u64, then the 0x02 payload         |
+//! | 0x25 | `CompressHierReq`+trace | trace_id u64, then the 0x05 payload       |
+//! | 0x31 | `CompressReq`+both | ttl_ms u32, trace_id u64, then the 0x01 payload |
+//! | 0x32 | `DecompressReq`+both | ttl_ms u32, trace_id u64, then the 0x02 payload |
+//! | 0x35 | `CompressHierReq`+both | ttl_ms u32, trace_id u64, then the 0x05 payload |
 //! | 0x81 | `CompressResp`     | container bytes                                |
 //! | 0x82 | `DecompressResp`   | pixels u32, n u32, images                      |
 //! | 0x83 | `StatsResp`        | JSON text                                      |
 //! | 0x87 | `HealthResp`       | JSON text (liveness, quarantine, queue depth)  |
+//! | 0x88 | `TraceResp`        | JSON trace snapshot (see `obs::trace`)         |
+//! | 0x89 | `MetricsResp`      | Prometheus exposition text                     |
 //! | 0x7f | `Error`            | UTF-8 message                                  |
 //!
-//! The TTL'd request encodings are **version-flagged**: a request whose
-//! `ttl_ms` is `None` serializes byte-identically to the v1 frame (0x01/
-//! 0x02/0x05), so old clients never emit — and old servers never see —
-//! the 0x1x bytes unless a TTL is actually set.
+//! The request type byte carries a **version-flag nibble**: `0x10` marks
+//! a TTL prefix (`ttl_ms` u32), `0x20` a trace prefix (`trace_id` u64),
+//! `0x30` both, in that order, ahead of the unchanged v1 payload. A
+//! request with neither option set serializes byte-identically to the v1
+//! frame (0x01/0x02/0x05), so old clients never emit — and old servers
+//! never see — flagged bytes unless a TTL or trace id is actually set.
 //!
 //! Every multi-byte integer is little-endian. Image grids (`n` images of
 //! `pixels` bytes each) are validated against the same untrusted-input
@@ -66,12 +78,15 @@ pub struct HierSpec {
 pub enum Frame {
     /// Compress `images` (each `pixels` long) with `model`. With
     /// `ttl_ms: Some(t)` the job is shed server-side if still queued
-    /// after `t` milliseconds (v2 encoding, old clients never send it).
+    /// after `t` milliseconds; with `trace_id: Some(id)` the server
+    /// records spans for this request under `id` (both are
+    /// version-flagged encodings old clients never send).
     CompressReq {
         model: String,
         pixels: u32,
         images: Vec<Vec<u8>>,
         ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
     },
     /// A BB-ANS container blob.
     CompressResp { container: Vec<u8> },
@@ -79,6 +94,7 @@ pub enum Frame {
     DecompressReq {
         container: Vec<u8>,
         ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
     },
     DecompressResp { pixels: u32, images: Vec<Vec<u8>> },
     /// Compress `images` with a freshly seeded hierarchical model (BBC3).
@@ -87,6 +103,7 @@ pub enum Frame {
         pixels: u32,
         images: Vec<Vec<u8>>,
         ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
     },
     StatsReq,
     /// JSON metrics snapshot.
@@ -98,6 +115,16 @@ pub enum Frame {
     /// JSON health snapshot (worker liveness, quarantine set, queue
     /// depth, fault counters).
     HealthResp { json: String },
+    /// Fetch up to `max` recent traces from the server's span ring.
+    /// Answered by the connection handler, never queued.
+    TraceReq { max: u32 },
+    /// JSON trace snapshot (`obs::trace::Tracer::snapshot_json`).
+    TraceResp { json: String },
+    /// Fetch the metrics in Prometheus text exposition format. Answered
+    /// by the connection handler, never queued.
+    MetricsReq,
+    /// Prometheus exposition text (`Metrics::to_prometheus`).
+    MetricsResp { text: String },
     Error { message: String },
     Shutdown,
 }
@@ -122,17 +149,41 @@ fn read_image_grid(pixels: u32, n: u32, body: &[u8], what: &str) -> Result<Vec<V
         .collect())
 }
 
-/// Split the 4-byte TTL prefix off a v2 (0x1x) request payload.
-fn split_ttl<'a>(p: &'a [u8], what: &str) -> Result<(u32, &'a [u8])> {
-    if p.len() < 4 {
-        bail!("short {what} TTL prefix");
-    }
-    Ok((u32::from_le_bytes(p[0..4].try_into().unwrap()), &p[4..]))
+/// Split the version-flag prefixes off a flagged request payload: a
+/// 4-byte TTL if `ty & 0x10`, then an 8-byte trace id if `ty & 0x20`,
+/// then the untouched v1 payload.
+fn split_flags<'a>(
+    ty: u8,
+    p: &'a [u8],
+    what: &str,
+) -> Result<(Option<u32>, Option<u64>, &'a [u8])> {
+    let mut rest = p;
+    let ttl_ms = if ty & 0x10 != 0 {
+        if rest.len() < 4 {
+            bail!("short {what} TTL prefix");
+        }
+        let t = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+        rest = &rest[4..];
+        Some(t)
+    } else {
+        None
+    };
+    let trace_id = if ty & 0x20 != 0 {
+        if rest.len() < 8 {
+            bail!("short {what} trace prefix");
+        }
+        let t = u64::from_le_bytes(rest[0..8].try_into().unwrap());
+        rest = &rest[8..];
+        Some(t)
+    } else {
+        None
+    };
+    Ok((ttl_ms, trace_id, rest))
 }
 
-/// Parse the v1 `CompressReq` payload (shared by 0x01 and the TTL'd
-/// 0x11 — same bytes, same validation).
-fn parse_compress_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
+/// Parse the v1 `CompressReq` payload (shared by 0x01 and the flagged
+/// 0x11/0x21/0x31 — same bytes, same validation).
+fn parse_compress_req(p: &[u8], ttl_ms: Option<u32>, trace_id: Option<u64>) -> Result<Frame> {
     if p.is_empty() {
         bail!("short CompressReq");
     }
@@ -151,11 +202,13 @@ fn parse_compress_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
         pixels,
         images,
         ttl_ms,
+        trace_id,
     })
 }
 
-/// Parse the v1 `CompressHierReq` payload (shared by 0x05 and 0x15).
-fn parse_compress_hier_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
+/// Parse the v1 `CompressHierReq` payload (shared by 0x05 and the
+/// flagged 0x15/0x25/0x35).
+fn parse_compress_hier_req(p: &[u8], ttl_ms: Option<u32>, trace_id: Option<u64>) -> Result<Frame> {
     // schedule u8 | likelihood u8 | layers u8 | chunks u32 |
     // hidden u32 | seed u64 | pixels u32 | n u32 = 27 bytes.
     if p.len() < 27 {
@@ -204,50 +257,51 @@ fn parse_compress_hier_req(p: &[u8], ttl_ms: Option<u32>) -> Result<Frame> {
         pixels,
         images,
         ttl_ms,
+        trace_id,
     })
+}
+
+/// Version-flag nibble for a request type byte: `0x10` if a TTL rides
+/// along, `0x20` if a trace id does. Neither → the bare v1 byte.
+fn flag_nibble(ttl_ms: &Option<u32>, trace_id: &Option<u64>) -> u8 {
+    (if ttl_ms.is_some() { 0x10 } else { 0 }) | (if trace_id.is_some() { 0x20 } else { 0 })
 }
 
 impl Frame {
     fn type_byte(&self) -> u8 {
         match self {
-            // Requests with a TTL take the version-flagged 0x1x bytes;
-            // without one they stay byte-identical to the v1 encoding.
-            Frame::CompressReq { ttl_ms, .. } => {
-                if ttl_ms.is_some() {
-                    0x11
-                } else {
-                    0x01
-                }
-            }
-            Frame::DecompressReq { ttl_ms, .. } => {
-                if ttl_ms.is_some() {
-                    0x12
-                } else {
-                    0x02
-                }
-            }
+            // Requests with a TTL and/or trace id take the version-
+            // flagged 0x1x/0x2x/0x3x bytes; without either they stay
+            // byte-identical to the v1 encoding.
+            Frame::CompressReq { ttl_ms, trace_id, .. } => 0x01 | flag_nibble(ttl_ms, trace_id),
+            Frame::DecompressReq { ttl_ms, trace_id, .. } => 0x02 | flag_nibble(ttl_ms, trace_id),
             Frame::StatsReq => 0x03,
             Frame::Shutdown => 0x04,
-            Frame::CompressHierReq { ttl_ms, .. } => {
-                if ttl_ms.is_some() {
-                    0x15
-                } else {
-                    0x05
-                }
+            Frame::CompressHierReq { ttl_ms, trace_id, .. } => {
+                0x05 | flag_nibble(ttl_ms, trace_id)
             }
             Frame::HealthReq => 0x07,
+            Frame::TraceReq { .. } => 0x08,
+            Frame::MetricsReq => 0x09,
             Frame::CompressResp { .. } => 0x81,
             Frame::DecompressResp { .. } => 0x82,
             Frame::StatsResp { .. } => 0x83,
             Frame::HealthResp { .. } => 0x87,
+            Frame::TraceResp { .. } => 0x88,
+            Frame::MetricsResp { .. } => 0x89,
             Frame::Error { .. } => 0x7f,
         }
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
         let mut payload = Vec::new();
-        let push_ttl = |payload: &mut Vec<u8>, ttl_ms: &Option<u32>| {
+        // Flag prefixes ride ahead of the v1 payload: TTL first, then
+        // trace id (same order `split_flags` strips them).
+        let push_flags = |payload: &mut Vec<u8>, ttl_ms: &Option<u32>, trace_id: &Option<u64>| {
             if let Some(t) = ttl_ms {
+                payload.extend_from_slice(&t.to_le_bytes());
+            }
+            if let Some(t) = trace_id {
                 payload.extend_from_slice(&t.to_le_bytes());
             }
         };
@@ -257,8 +311,9 @@ impl Frame {
                 pixels,
                 images,
                 ttl_ms,
+                trace_id,
             } => {
-                push_ttl(&mut payload, ttl_ms);
+                push_flags(&mut payload, ttl_ms, trace_id);
                 payload.push(model.len() as u8);
                 payload.extend_from_slice(model.as_bytes());
                 payload.extend_from_slice(&pixels.to_le_bytes());
@@ -271,8 +326,12 @@ impl Frame {
                 }
             }
             Frame::CompressResp { container } => payload.extend_from_slice(container),
-            Frame::DecompressReq { container, ttl_ms } => {
-                push_ttl(&mut payload, ttl_ms);
+            Frame::DecompressReq {
+                container,
+                ttl_ms,
+                trace_id,
+            } => {
+                push_flags(&mut payload, ttl_ms, trace_id);
                 payload.extend_from_slice(container);
             }
             Frame::DecompressResp { pixels, images } => {
@@ -287,8 +346,9 @@ impl Frame {
                 pixels,
                 images,
                 ttl_ms,
+                trace_id,
             } => {
-                push_ttl(&mut payload, ttl_ms);
+                push_flags(&mut payload, ttl_ms, trace_id);
                 payload.push(spec.schedule.tag());
                 payload.push(spec.likelihood.tag());
                 payload.push(spec.dims.len() as u8);
@@ -307,9 +367,12 @@ impl Frame {
                     payload.extend_from_slice(img);
                 }
             }
-            Frame::StatsReq | Frame::Shutdown | Frame::HealthReq => {}
+            Frame::StatsReq | Frame::Shutdown | Frame::HealthReq | Frame::MetricsReq => {}
+            Frame::TraceReq { max } => payload.extend_from_slice(&max.to_le_bytes()),
             Frame::StatsResp { json } => payload.extend_from_slice(json.as_bytes()),
             Frame::HealthResp { json } => payload.extend_from_slice(json.as_bytes()),
+            Frame::TraceResp { json } => payload.extend_from_slice(json.as_bytes()),
+            Frame::MetricsResp { text } => payload.extend_from_slice(text.as_bytes()),
             Frame::Error { message } => payload.extend_from_slice(message.as_bytes()),
         }
         let total = payload.len() + 1;
@@ -329,31 +392,43 @@ impl Frame {
             bail!("empty frame");
         };
         Ok(match ty {
-            0x01 => parse_compress_req(p, None)?,
+            0x01 => parse_compress_req(p, None, None)?,
             0x02 => Frame::DecompressReq {
                 container: p.to_vec(),
                 ttl_ms: None,
+                trace_id: None,
             },
             0x03 => Frame::StatsReq,
             0x04 => Frame::Shutdown,
-            0x05 => parse_compress_hier_req(p, None)?,
+            0x05 => parse_compress_hier_req(p, None, None)?,
             0x07 => Frame::HealthReq,
-            // The TTL'd (v2) request encodings: ttl_ms u32, then the v1
-            // payload, parsed by the same validators.
-            0x11 => {
-                let (ttl, rest) = split_ttl(p, "CompressReq")?;
-                parse_compress_req(rest, Some(ttl))?
-            }
-            0x12 => {
-                let (ttl, rest) = split_ttl(p, "DecompressReq")?;
-                Frame::DecompressReq {
-                    container: rest.to_vec(),
-                    ttl_ms: Some(ttl),
+            0x08 => {
+                if p.len() != 4 {
+                    bail!("TraceReq payload must be 4 bytes");
+                }
+                Frame::TraceReq {
+                    max: u32::from_le_bytes(p[0..4].try_into().unwrap()),
                 }
             }
-            0x15 => {
-                let (ttl, rest) = split_ttl(p, "CompressHierReq")?;
-                parse_compress_hier_req(rest, Some(ttl))?
+            0x09 => Frame::MetricsReq,
+            // The flagged request encodings: optional ttl_ms u32 and/or
+            // trace_id u64, then the v1 payload, parsed by the same
+            // validators.
+            0x11 | 0x21 | 0x31 => {
+                let (ttl, trace, rest) = split_flags(ty, p, "CompressReq")?;
+                parse_compress_req(rest, ttl, trace)?
+            }
+            0x12 | 0x22 | 0x32 => {
+                let (ttl, trace, rest) = split_flags(ty, p, "DecompressReq")?;
+                Frame::DecompressReq {
+                    container: rest.to_vec(),
+                    ttl_ms: ttl,
+                    trace_id: trace,
+                }
+            }
+            0x15 | 0x25 | 0x35 => {
+                let (ttl, trace, rest) = split_flags(ty, p, "CompressHierReq")?;
+                parse_compress_hier_req(rest, ttl, trace)?
             }
             0x81 => Frame::CompressResp {
                 container: p.to_vec(),
@@ -375,6 +450,12 @@ impl Frame {
             0x87 => Frame::HealthResp {
                 json: String::from_utf8(p.to_vec()).context("health json")?,
             },
+            0x88 => Frame::TraceResp {
+                json: String::from_utf8(p.to_vec()).context("trace json")?,
+            },
+            0x89 => Frame::MetricsResp {
+                text: String::from_utf8(p.to_vec()).context("metrics text")?,
+            },
             0x7f => Frame::Error {
                 message: String::from_utf8_lossy(p).to_string(),
             },
@@ -388,6 +469,16 @@ impl Frame {
             Frame::CompressReq { ttl_ms, .. }
             | Frame::DecompressReq { ttl_ms, .. }
             | Frame::CompressHierReq { ttl_ms, .. } => *ttl_ms,
+            _ => None,
+        }
+    }
+
+    /// Request-side trace id, for any frame kind that can carry one.
+    pub fn trace_id(&self) -> Option<u64> {
+        match self {
+            Frame::CompressReq { trace_id, .. }
+            | Frame::DecompressReq { trace_id, .. }
+            | Frame::CompressHierReq { trace_id, .. } => *trace_id,
             _ => None,
         }
     }
@@ -431,6 +522,7 @@ mod tests {
             pixels: 4,
             images: vec![vec![0, 1, 1, 0], vec![1, 0, 0, 1]],
             ttl_ms: None,
+            trace_id: None,
         }
     }
 
@@ -441,6 +533,7 @@ mod tests {
             pixels: 4,
             images: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
             ttl_ms: None,
+            trace_id: None,
         });
         roundtrip(Frame::CompressResp {
             container: vec![9, 9, 9],
@@ -448,6 +541,7 @@ mod tests {
         roundtrip(Frame::DecompressReq {
             container: vec![1, 2],
             ttl_ms: None,
+            trace_id: None,
         });
         roundtrip(Frame::DecompressResp {
             pixels: 2,
@@ -461,6 +555,14 @@ mod tests {
         roundtrip(Frame::HealthReq);
         roundtrip(Frame::HealthResp {
             json: "{\"alive\":true}".into(),
+        });
+        roundtrip(Frame::TraceReq { max: 16 });
+        roundtrip(Frame::TraceResp {
+            json: "{\"traces\":[]}".into(),
+        });
+        roundtrip(Frame::MetricsReq);
+        roundtrip(Frame::MetricsResp {
+            text: "bbans_requests_total 0\n".into(),
         });
         roundtrip(Frame::Error {
             message: "nope".into(),
@@ -478,10 +580,12 @@ mod tests {
             pixels: 4,
             images: vec![vec![1, 2, 3, 4]],
             ttl_ms: Some(1500),
+            trace_id: None,
         });
         roundtrip(Frame::DecompressReq {
             container: vec![1, 2, 3],
             ttl_ms: Some(0),
+            trace_id: None,
         });
         let mut ttl_hier = hier_frame();
         if let Frame::CompressHierReq { ttl_ms, .. } = &mut ttl_hier {
@@ -496,6 +600,7 @@ mod tests {
         Frame::DecompressReq {
             container: vec![7, 8, 9],
             ttl_ms: None,
+            trace_id: None,
         }
         .write_to(&mut v1)
         .unwrap();
@@ -504,6 +609,7 @@ mod tests {
         Frame::DecompressReq {
             container: vec![7, 8, 9],
             ttl_ms: Some(42),
+            trace_id: None,
         }
         .write_to(&mut v2)
         .unwrap();
@@ -515,6 +621,90 @@ mod tests {
         for ty in [0x11u8, 0x12, 0x15] {
             assert!(Frame::parse(&[ty, 1, 2]).is_err(), "ty={ty:#x}");
         }
+    }
+
+    /// Traced requests take the 0x2x (trace-only) and 0x3x (TTL+trace)
+    /// flag bytes; the prefix order is TTL then trace id, and the v1
+    /// payload bytes after the prefixes never move.
+    #[test]
+    fn traced_requests_roundtrip_and_pin_prefix_layout() {
+        roundtrip(Frame::CompressReq {
+            model: "bin".into(),
+            pixels: 4,
+            images: vec![vec![1, 2, 3, 4]],
+            ttl_ms: None,
+            trace_id: Some(0xDEAD_BEEF_1234_5678),
+        });
+        roundtrip(Frame::CompressHierReq {
+            spec: match hier_frame() {
+                Frame::CompressHierReq { spec, .. } => spec,
+                _ => unreachable!(),
+            },
+            pixels: 4,
+            images: vec![vec![0, 1, 1, 0]],
+            ttl_ms: Some(100),
+            trace_id: Some(7),
+        });
+
+        let mut v1 = Vec::new();
+        Frame::DecompressReq {
+            container: vec![7, 8, 9],
+            ttl_ms: None,
+            trace_id: None,
+        }
+        .write_to(&mut v1)
+        .unwrap();
+
+        // Trace-only: 0x22, trace_id u64, then the v1 payload.
+        let mut traced = Vec::new();
+        Frame::DecompressReq {
+            container: vec![7, 8, 9],
+            ttl_ms: None,
+            trace_id: Some(0xABCD),
+        }
+        .write_to(&mut traced)
+        .unwrap();
+        assert_eq!(traced[4], 0x22);
+        assert_eq!(&traced[5..13], &0xABCDu64.to_le_bytes());
+        assert_eq!(&traced[13..], &v1[5..], "trace payload = trace id + v1 payload");
+
+        // Both flags: 0x32, ttl u32 first, trace u64 second.
+        let mut both = Vec::new();
+        Frame::DecompressReq {
+            container: vec![7, 8, 9],
+            ttl_ms: Some(42),
+            trace_id: Some(0xABCD),
+        }
+        .write_to(&mut both)
+        .unwrap();
+        assert_eq!(both[4], 0x32);
+        assert_eq!(&both[5..9], &42u32.to_le_bytes());
+        assert_eq!(&both[9..17], &0xABCDu64.to_le_bytes());
+        assert_eq!(&both[17..], &v1[5..]);
+        let parsed = Frame::parse(&both[4..]).unwrap();
+        assert_eq!(parsed.ttl_ms(), Some(42));
+        assert_eq!(parsed.trace_id(), Some(0xABCD));
+
+        // Truncated trace prefixes error cleanly on every flagged type.
+        for ty in [0x21u8, 0x22, 0x25, 0x31, 0x32, 0x35] {
+            assert!(Frame::parse(&[ty, 1, 2, 3]).is_err(), "ty={ty:#x}");
+        }
+    }
+
+    /// TraceReq/MetricsReq are handler-served ops with fixed payloads.
+    #[test]
+    fn trace_and_metrics_ops_pin_their_bytes() {
+        let mut buf = Vec::new();
+        Frame::TraceReq { max: 9 }.write_to(&mut buf).unwrap();
+        assert_eq!(buf[4], 0x08);
+        assert_eq!(&buf[5..], &9u32.to_le_bytes());
+        // Wrong-size TraceReq payloads are rejected.
+        assert!(Frame::parse(&[0x08u8, 1, 2]).is_err());
+        assert!(Frame::parse(&[0x08u8, 1, 2, 3, 4, 5]).is_err());
+
+        let mut buf = Vec::new();
+        Frame::MetricsReq.write_to(&mut buf).unwrap();
+        assert_eq!(buf, vec![1, 0, 0, 0, 0x09]);
     }
 
     #[test]
@@ -537,6 +727,7 @@ mod tests {
             pixels: 4,
             images: vec![vec![0; 4]],
             ttl_ms: None,
+            trace_id: None,
         }
         .write_to(&mut bad)
         .unwrap();

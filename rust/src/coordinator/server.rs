@@ -22,6 +22,18 @@
 //! deadline, and only then raises the stop flag. A peer can also request
 //! a drain over the wire ([`Frame::Shutdown`]); the server records it and
 //! the serve loop (see `main.rs`) observes [`Server::drain_requested`].
+//!
+//! ## Observability
+//!
+//! When the global [`crate::obs::tracer`] is enabled, every work request
+//! gets a trace id (the client's, via the version-flagged wire encoding,
+//! or a server-assigned one) and the handler records `"request"` and
+//! `"reply"` spans around the batcher's admission→nn→ans spans.
+//! [`Frame::TraceReq`] and [`Frame::MetricsReq`] are answered handle-side,
+//! never queued — like health probes, they must work while the worker is
+//! wedged. [`Server::start_with_metrics`] can additionally bind a plain
+//! HTTP/1.0 scrape listener that serves the Prometheus text exposition,
+//! so a stock Prometheus scraper needs no framed-protocol client.
 
 use std::io::{self, BufReader, BufWriter, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -44,6 +56,9 @@ const READ_TIMEOUT: Duration = Duration::from_millis(50);
 /// A running server (owns the acceptor and all connection threads).
 pub struct Server {
     pub addr: SocketAddr,
+    /// Where the Prometheus scrape listener is bound, when one was
+    /// requested via [`Server::start_with_metrics`].
+    pub metrics_addr: Option<SocketAddr>,
     stop: Arc<AtomicBool>,
     /// Close only the accept loop (drain phase 1); existing connections
     /// keep serving until `stop` is raised or their peers hang up.
@@ -52,18 +67,33 @@ pub struct Server {
     /// op ([`Frame::Shutdown`]); the serve loop polls it.
     drain_flag: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    /// The scrape listener thread, joined on shutdown like the acceptor.
+    metrics_thread: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Server {
     /// Bind and serve in background threads.
     pub fn start(bind: &str, service: ServiceHandle) -> Result<Server> {
+        Self::start_with_metrics(bind, service, None)
+    }
+
+    /// [`Server::start`] plus an optional plain-HTTP Prometheus scrape
+    /// listener on `metrics_bind`. The listener speaks just enough
+    /// HTTP/1.0 for `curl`/Prometheus: it reads and discards the request,
+    /// then answers every connection with the current exposition text.
+    pub fn start_with_metrics(
+        bind: &str,
+        service: ServiceHandle,
+        metrics_bind: Option<&str>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let accept_stop = Arc::new(AtomicBool::new(false));
         let drain_flag = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let metrics = service.metrics.clone();
         let stop2 = stop.clone();
         let accept_stop2 = accept_stop.clone();
         let drain2 = drain_flag.clone();
@@ -95,12 +125,21 @@ impl Server {
                     }
                 }
             })?;
+        let (metrics_addr, metrics_thread) = match metrics_bind {
+            Some(mb) => {
+                let (a, h) = start_metrics_listener(mb, metrics, stop.clone())?;
+                (Some(a), Some(h))
+            }
+            None => (None, None),
+        };
         Ok(Server {
             addr,
+            metrics_addr,
             stop,
             accept_stop,
             drain_flag,
             acceptor: Some(acceptor),
+            metrics_thread,
             conns,
         })
     }
@@ -156,6 +195,9 @@ impl Server {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.metrics_thread.take() {
+            let _ = h.join();
+        }
         let handles = std::mem::take(&mut *self.conns.lock().expect("conns lock"));
         for h in handles {
             let _ = h.join();
@@ -167,6 +209,64 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown_impl();
     }
+}
+
+/// Bind the Prometheus scrape listener: a nonblocking accept loop that
+/// answers every connection with one `HTTP/1.0 200` response carrying
+/// the current [`Metrics::to_prometheus`] text. The request line and
+/// headers are read (bounded) and discarded — every path scrapes.
+fn start_metrics_listener(
+    bind: &str,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("bind metrics {bind}"))?;
+    let addr = listener.local_addr()?;
+    let handle = std::thread::Builder::new()
+        .name("bbans-metrics".into())
+        .spawn(move || {
+            listener.set_nonblocking(true).ok();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = serve_scrape(stream, &metrics);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok((addr, handle))
+}
+
+/// One scrape exchange: drain the HTTP request until the blank line (or
+/// a short timeout — a bare TCP probe with no request also gets the
+/// body), then write the exposition and close.
+fn serve_scrape(mut stream: TcpStream, metrics: &Metrics) -> io::Result<()> {
+    use std::io::Write;
+    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+    let mut req = Vec::new();
+    let mut chunk = [0u8; 512];
+    // Bounded read: stop at end-of-headers, EOF, timeout, or 8 KiB.
+    while req.len() < 8192 && !req.windows(4).any(|w| w == b"\r\n\r\n") {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => req.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_read_timeout(&e) => break,
+            Err(e) => return Err(e),
+        }
+    }
+    let body = metrics.to_prometheus();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
 }
 
 /// How a completed full read ended.
@@ -274,13 +374,29 @@ fn handle_conn(
                 return Ok(());
             }
         };
+        // Work requests trace under the client's id (version-flagged wire
+        // encoding) or, when tracing is on, a server-assigned one. 0 means
+        // untraced — every record() under it is a no-op.
+        let tracer = crate::obs::tracer();
+        let is_work = matches!(
+            frame,
+            Frame::CompressReq { .. } | Frame::CompressHierReq { .. } | Frame::DecompressReq { .. }
+        );
+        let trace = frame.trace_id().unwrap_or_else(|| {
+            if is_work && tracer.enabled() {
+                tracer.next_trace_id()
+            } else {
+                0
+            }
+        });
+        let t_req = Instant::now();
         let resp = match frame {
             Frame::CompressReq {
                 model,
                 images,
                 ttl_ms,
                 ..
-            } => match svc.compress_with(&model, images, ttl_duration(ttl_ms)) {
+            } => match svc.compress_opts(&model, images, ttl_duration(ttl_ms), trace) {
                 Ok(container) => Frame::CompressResp { container },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
@@ -291,23 +407,29 @@ fn handle_conn(
                 images,
                 ttl_ms,
                 ..
-            } => match svc.compress_hier_with(spec, images, ttl_duration(ttl_ms)) {
+            } => match svc.compress_hier_opts(spec, images, ttl_duration(ttl_ms), trace) {
                 Ok(container) => Frame::CompressResp { container },
                 Err(e) => Frame::Error {
                     message: format!("{e:#}"),
                 },
             },
-            Frame::DecompressReq { container, ttl_ms } => {
-                match svc.decompress_with(container, ttl_duration(ttl_ms)) {
-                    Ok(images) => Frame::DecompressResp {
-                        pixels: images.first().map(|i| i.len() as u32).unwrap_or(0),
-                        images,
-                    },
-                    Err(e) => Frame::Error {
-                        message: format!("{e:#}"),
-                    },
-                }
-            }
+            Frame::DecompressReq {
+                container, ttl_ms, ..
+            } => match svc.decompress_opts(container, ttl_duration(ttl_ms), trace) {
+                Ok(images) => Frame::DecompressResp {
+                    pixels: images.first().map(|i| i.len() as u32).unwrap_or(0),
+                    images,
+                },
+                Err(e) => Frame::Error {
+                    message: format!("{e:#}"),
+                },
+            },
+            Frame::TraceReq { max } => Frame::TraceResp {
+                json: tracer.snapshot_json(max as usize).to_string(),
+            },
+            Frame::MetricsReq => Frame::MetricsResp {
+                text: svc.metrics.to_prometheus(),
+            },
             Frame::StatsReq => match svc.stats_json() {
                 Ok(json) => Frame::StatsResp { json },
                 Err(e) => Frame::Error {
@@ -328,7 +450,24 @@ fn handle_conn(
                 message: format!("unexpected frame {other:?}"),
             },
         };
+        // Reply-size hint for the reply span (payload bytes, not frame
+        // overhead — the interesting number for bandwidth accounting).
+        let reply_bytes = match &resp {
+            Frame::CompressResp { container } => container.len() as u64,
+            Frame::DecompressResp { images, .. } => {
+                images.iter().map(|i| i.len() as u64).sum()
+            }
+            _ => 0,
+        };
+        let t_reply = Instant::now();
         resp.write_to(&mut writer)?;
+        if trace != 0 {
+            tracer.record(trace, "reply", t_reply, t_reply.elapsed(), reply_bytes);
+            tracer.record(trace, "request", t_req, t_req.elapsed(), 1);
+            // Terminal flush: the trace is scrape-complete once the reply
+            // is on the wire.
+            tracer.flush();
+        }
     }
 }
 
@@ -588,11 +727,27 @@ impl Client {
         images: Vec<Vec<u8>>,
         ttl_ms: Option<u32>,
     ) -> Result<Vec<u8>> {
+        self.compress_with_opts(model, pixels, images, ttl_ms, None)
+    }
+
+    /// [`Client::compress_with_ttl`] plus a trace id: the server records
+    /// this request's lifecycle spans under `trace_id`, retrievable with
+    /// [`Client::trace`]. Both options ride the version-flagged wire
+    /// encoding; with neither set the request bytes are v1-identical.
+    pub fn compress_with_opts(
+        &mut self,
+        model: &str,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
+    ) -> Result<Vec<u8>> {
         match self.call(Frame::CompressReq {
             model: model.to_string(),
             pixels,
             images,
             ttl_ms,
+            trace_id,
         })? {
             Frame::CompressResp { container } => Ok(container),
             other => anyhow::bail!("unexpected response {other:?}"),
@@ -618,11 +773,25 @@ impl Client {
         images: Vec<Vec<u8>>,
         ttl_ms: Option<u32>,
     ) -> Result<Vec<u8>> {
+        self.compress_hier_with_opts(spec, pixels, images, ttl_ms, None)
+    }
+
+    /// [`Client::compress_hier_with_ttl`] plus a trace id (see
+    /// [`Client::compress_with_opts`]).
+    pub fn compress_hier_with_opts(
+        &mut self,
+        spec: HierSpec,
+        pixels: u32,
+        images: Vec<Vec<u8>>,
+        ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
+    ) -> Result<Vec<u8>> {
         match self.call(Frame::CompressHierReq {
             spec,
             pixels,
             images,
             ttl_ms,
+            trace_id,
         })? {
             Frame::CompressResp { container } => Ok(container),
             other => anyhow::bail!("unexpected response {other:?}"),
@@ -639,7 +808,22 @@ impl Client {
         container: Vec<u8>,
         ttl_ms: Option<u32>,
     ) -> Result<Vec<Vec<u8>>> {
-        match self.call(Frame::DecompressReq { container, ttl_ms })? {
+        self.decompress_with_opts(container, ttl_ms, None)
+    }
+
+    /// [`Client::decompress_with_ttl`] plus a trace id (see
+    /// [`Client::compress_with_opts`]).
+    pub fn decompress_with_opts(
+        &mut self,
+        container: Vec<u8>,
+        ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
+    ) -> Result<Vec<Vec<u8>>> {
+        match self.call(Frame::DecompressReq {
+            container,
+            ttl_ms,
+            trace_id,
+        })? {
             Frame::DecompressResp { images, .. } => Ok(images),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
@@ -658,6 +842,25 @@ impl Client {
     pub fn health(&mut self) -> Result<String> {
         match self.call(Frame::HealthReq)? {
             Frame::HealthResp { json } => Ok(json),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch up to `max` recent traces from the server's span ring as a
+    /// JSON snapshot (see `obs::trace::Tracer::snapshot_json` for the
+    /// schema). Served handle-side, never queued.
+    pub fn trace(&mut self, max: u32) -> Result<String> {
+        match self.call(Frame::TraceReq { max })? {
+            Frame::TraceResp { json } => Ok(json),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics in Prometheus text exposition format.
+    /// Served handle-side, never queued.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.call(Frame::MetricsReq)? {
+            Frame::MetricsResp { text } => Ok(text),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
     }

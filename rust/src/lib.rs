@@ -11,8 +11,9 @@
 //! * **Layer 3 (this crate, runtime)** — the BB-ANS codec ([`ans`],
 //!   [`codecs`], [`bbans`]), the PJRT runtime bridge ([`runtime`]), a
 //!   pure-Rust model backend ([`model`]), from-scratch baseline codecs
-//!   ([`baselines`]), a batching compression server ([`coordinator`]), and
-//!   the data pipeline ([`data`]).
+//!   ([`baselines`]), a batching compression server ([`coordinator`]), an
+//!   observability layer ([`obs`]: request tracing, the bits-back rate
+//!   ledger, Prometheus exposition), and the data pipeline ([`data`]).
 //!
 //! Python never runs on the request path: `make artifacts` trains and
 //! lowers the models once; the `bbans` binary is self-contained after that.
@@ -29,6 +30,7 @@ pub mod coordinator;
 pub mod data;
 pub mod format;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod simd;
 pub mod util;

@@ -2,14 +2,15 @@
 //!
 //! Subcommands:
 //!   info       [-i FILE]         artifact/model info, or container inspection
-//!   compress   -m MODEL -i IDX -o FILE [-n N] [--native] [--latent-bits B]
+//!   compress   -m MODEL -i IDX -o FILE [-n N] [-v] [--native] [--latent-bits B]
 //!              [--format bbc4]
 //!   decompress -i FILE -o IDX [--native] [--salvage]
 //!   verify     -i FILE           integrity-check a container without decoding
 //!   serve      [--bind ADDR] [--native] [--max-jobs J] [--max-batch-delay-ms D]
 //!              [--queue-cap Q] [--fanout-workers W] [--request-ttl-ms T]
 //!              [--quarantine-after K] [--drain-timeout-ms D]
-//!   client     --addr ADDR --stats|--health|--drain
+//!              [--metrics-addr ADDR] [--no-trace]
+//!   client     --addr ADDR --stats|--health|--metrics|--trace|--drain [--pretty]
 //!
 //! Arg parsing is hand-rolled (clap is unavailable offline).
 
@@ -28,7 +29,7 @@ use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
 use bbans::data;
 use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::model::vae::load_native;
-use bbans::model::Likelihood;
+use bbans::model::{Backend, Likelihood};
 use bbans::runtime::{default_artifact_dir, load_config};
 
 /// Default weight seed of CLI-built hierarchical models (any nonzero value
@@ -63,6 +64,12 @@ fn parse_args(argv: &[String]) -> Args {
                 "i" => "input",
                 "o" => "output",
                 "n" => "count",
+                // `-v` is a switch (verbose), not a valued flag: it must
+                // not swallow the token after it.
+                "v" => {
+                    a.switches.insert("verbose".to_string());
+                    continue;
+                }
                 other => other,
             };
             if let Some(v) = q.pop_front() {
@@ -78,7 +85,18 @@ fn parse_args(argv: &[String]) -> Args {
 fn is_switch(name: &str) -> bool {
     matches!(
         name,
-        "native" | "stats" | "binarized" | "help" | "salvage" | "health" | "drain"
+        "native"
+            | "stats"
+            | "binarized"
+            | "help"
+            | "salvage"
+            | "health"
+            | "drain"
+            | "pretty"
+            | "trace"
+            | "metrics"
+            | "verbose"
+            | "no-trace"
     )
 }
 
@@ -87,18 +105,28 @@ fn usage() -> ! {
         "usage: bbans <info|compress|decompress|verify|serve|client> [args]\n\
          \n\
          bbans info       [-i FILE]\n\
-         bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [--native] [--chunks K]\n\
-                          [--format bbc4]\n\
+         bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [-v] [--native]\n\
+                          [--chunks K] [--format bbc4]\n\
          bbans compress   --layers L -i images.idx -o out.bbc [--schedule naive|bitswap]\n\
                           [--hier-dims 32,16,8] [--hier-hidden H] [--hier-seed S]\n\
-                          [--binarized] [--chunks K] [--format bbc4]\n\
+                          [--binarized] [--chunks K] [--format bbc4] [-v]\n\
          bbans decompress -i in.bbc -o out.idx [--native] [--salvage]\n\
          bbans verify     -i in.bbc\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16]\n\
                           [--max-batch-delay-ms 2] [--queue-cap 256] [--fanout-workers W]\n\
                           [--request-ttl-ms T] [--quarantine-after 3]\n\
-                          [--drain-timeout-ms 30000]\n\
-         bbans client     --addr HOST:PORT --stats|--health|--drain\n\
+                          [--drain-timeout-ms 30000] [--metrics-addr 127.0.0.1:9102]\n\
+                          [--no-trace]\n\
+         bbans client     --addr HOST:PORT --stats|--health|--metrics|--drain [--pretty]\n\
+         bbans client     --addr HOST:PORT --trace [--trace-max N] [--pretty]\n\
+         \n\
+         -v prints the bits-back rate ledger: measured bits/dim decomposed\n\
+         into data, per-layer latent, and chain-startup (initial bits)\n\
+         terms. The ledger observes the encode without changing any bytes.\n\
+         serve enables request tracing by default (--no-trace disables it);\n\
+         --metrics-addr exposes Prometheus text-format metrics over HTTP.\n\
+         client --trace fetches recent server-side span trees as JSON;\n\
+         --pretty renders JSON replies as an aligned key/value table.\n\
          \n\
          --chunks K > 1 encodes K independent chains on K threads (native\n\
          backend; produces a BBC2 chunk-parallel container).\n\
@@ -379,6 +407,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
         ),
     };
 
+    let verbose = args.switches.contains("verbose");
+    if verbose && bbc4 {
+        bail!(
+            "-v rate-ledger reporting is not wired for --format bbc4 yet; \
+             drop one of the two flags"
+        );
+    }
+
     if args.flags.contains_key("layers") {
         return cmd_compress_hier(args, images, rows * cols, raw_bytes, chunks, bbc4, &output);
     }
@@ -415,7 +451,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
         let backend = load_native(default_artifact_dir(), &model)?;
         let codec = VaeCodec::new(&backend, bbans_config(args))?;
         let t = std::time::Instant::now();
-        let container = ParallelContainer::encode_with(&codec, &images, chunks)?;
+        let (container, ledger) = if verbose {
+            let (c, l) = ParallelContainer::encode_with_ledger(&codec, &images, chunks)?;
+            (c, Some(l))
+        } else {
+            (ParallelContainer::encode_with(&codec, &images, chunks)?, None)
+        };
         let dt = t.elapsed();
         let bytes = container.to_bytes();
         std::fs::write(&output, &bytes)?;
@@ -429,6 +470,42 @@ fn cmd_compress(args: &Args) -> Result<()> {
             dt.as_secs_f64(),
             n_images as f64 / dt.as_secs_f64(),
         );
+        if let Some(l) = ledger {
+            print_ledger(&l, container.pixels as usize, backend.meta().test_elbo_bpd);
+        }
+        return Ok(());
+    }
+
+    if verbose {
+        // Ledgered single-chain encode: runs offline on the native backend
+        // (the rate ledger hooks into the local codec, not the serving
+        // path) and writes the same BBC1 layout the service produces.
+        let backend = load_native(default_artifact_dir(), &model)?;
+        let codec = VaeCodec::new(&backend, bbans_config(args))?;
+        let t = std::time::Instant::now();
+        let (ans, _stats, ledger) = codec.encode_dataset_ledgered(&images)?;
+        let dt = t.elapsed();
+        let meta = backend.meta();
+        let container = Container {
+            model: meta.name.clone(),
+            backend_id: backend.backend_id(),
+            cfg: codec.cfg,
+            num_images: images.len() as u32,
+            pixels: meta.pixels as u32,
+            message: ans.into_message(),
+        };
+        let bytes = container.to_bytes();
+        std::fs::write(&output, &bytes)?;
+        println!(
+            "compressed {} images: {raw_bytes} -> {} bytes ({:.4} bits/dim) in {:.2}s \
+             ({:.1} img/s)",
+            container.num_images,
+            bytes.len(),
+            container.bits_per_dim(),
+            dt.as_secs_f64(),
+            container.num_images as f64 / dt.as_secs_f64(),
+        );
+        print_ledger(&ledger, meta.pixels, meta.test_elbo_bpd);
         return Ok(());
     }
 
@@ -562,7 +639,12 @@ fn cmd_compress_hier(
         return Ok(());
     }
     let t = std::time::Instant::now();
-    let container = HierContainer::encode_with(&codec, &images, chunks)?;
+    let (container, ledger) = if args.switches.contains("verbose") {
+        let (c, l) = HierContainer::encode_with_ledger(&codec, &images, chunks)?;
+        (c, Some(l))
+    } else {
+        (HierContainer::encode_with(&codec, &images, chunks)?, None)
+    };
     let dt = t.elapsed();
     let bytes = container.to_bytes();
     std::fs::write(output, &bytes)?;
@@ -577,6 +659,11 @@ fn cmd_compress_hier(
         dt.as_secs_f64(),
         n_images as f64 / dt.as_secs_f64(),
     );
+    if let Some(l) = ledger {
+        // Hierarchical CLI models are seed-derived, not trained: there is
+        // no recorded test ELBO to compare the measured rate against.
+        print_ledger(&l, pixels, f64::NAN);
+    }
     Ok(())
 }
 
@@ -740,8 +827,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let svc = service(args);
-    let server = Server::start(&bind, svc.handle())?;
+    // Request tracing is on by default: the disabled path is a single
+    // relaxed atomic load, and the enabled path buffers spans thread-local,
+    // so the cost is negligible either way (`--no-trace` still turns it off).
+    if !args.switches.contains("no-trace") {
+        bbans::obs::tracer().set_enabled(true);
+    }
+    let server = Server::start_with_metrics(
+        &bind,
+        svc.handle(),
+        args.flags.get("metrics-addr").map(String::as_str),
+    )?;
     println!("bbans serving on {}", server.addr);
+    if let Some(ma) = server.metrics_addr {
+        println!("metrics exposition on http://{ma}/ (Prometheus text 0.0.4)");
+    }
     if args.switches.contains("native") {
         // The native service fans lock-step phases over a Sync-backend
         // worker pool; the kernel variant is diagnostic only (all
@@ -778,13 +878,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.flags.get("addr").context("need --addr HOST:PORT")?;
     let mut client = Client::connect(addr.as_str())?;
+    let pretty = args.switches.contains("pretty");
     if args.switches.contains("stats") {
-        println!("{}", client.stats()?);
-        return Ok(());
+        return print_json_doc(&client.stats()?, pretty);
     }
     if args.switches.contains("health") {
-        println!("{}", client.health()?);
+        return print_json_doc(&client.health()?, pretty);
+    }
+    if args.switches.contains("metrics") {
+        print!("{}", client.metrics_text()?);
         return Ok(());
+    }
+    if args.switches.contains("trace") {
+        let max: u32 = args
+            .flags
+            .get("trace-max")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|_| anyhow!("invalid --trace-max value"))?
+            .unwrap_or(8);
+        return print_json_doc(&client.trace(max)?, pretty);
     }
     if args.switches.contains("drain") {
         client.shutdown_server()?;
@@ -792,7 +905,87 @@ fn cmd_client(args: &Args) -> Result<()> {
         return Ok(());
     }
     bail!(
-        "client supports --stats, --health, and --drain; use the library or \
-         examples for data transfer"
+        "client supports --stats, --health, --metrics, --trace, and --drain; \
+         use the library or examples for data transfer"
     )
+}
+
+/// Print a JSON reply either raw (stable, machine-readable) or, under
+/// `--pretty`, as an aligned key/value table using dotted paths for
+/// nesting and `[i]` suffixes for array elements.
+fn print_json_doc(json: &str, pretty: bool) -> Result<()> {
+    if !pretty {
+        println!("{json}");
+        return Ok(());
+    }
+    let v = bbans::util::json::Json::parse(json)
+        .map_err(|e| anyhow!("reply is not valid JSON: {e:?}"))?;
+    let mut rows: Vec<(String, String)> = Vec::new();
+    flatten_json("", &v, &mut rows);
+    let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+    for (k, val) in rows {
+        println!("{k:<w$}  {val}");
+    }
+    Ok(())
+}
+
+fn flatten_json(prefix: &str, v: &bbans::util::json::Json, out: &mut Vec<(String, String)>) {
+    use bbans::util::json::Json;
+    match v {
+        Json::Obj(fields) => {
+            if fields.is_empty() {
+                out.push((prefix.to_string(), "{}".to_string()));
+            }
+            for (k, child) in fields {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_json(&key, child, out);
+            }
+        }
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push((prefix.to_string(), "[]".to_string()));
+            }
+            for (i, child) in items.iter().enumerate() {
+                flatten_json(&format!("{prefix}[{i}]"), child, out);
+            }
+        }
+        Json::Null => out.push((prefix.to_string(), "null".to_string())),
+        Json::Bool(b) => out.push((prefix.to_string(), b.to_string())),
+        Json::Num(n) => out.push((prefix.to_string(), format!("{n}"))),
+        Json::Str(s) => out.push((prefix.to_string(), s.clone())),
+    }
+}
+
+/// Print a rate-ledger decomposition (`compress -v`): measured bits/dim
+/// split into data, per-layer latent, and chain-startup terms, next to the
+/// model's training-time test ELBO when it is known.
+fn print_ledger(ledger: &bbans::obs::Ledger, pixels: usize, test_elbo_bpd: f64) {
+    let s = ledger.summary(pixels);
+    println!("rate ledger ({} images, {} latent layer(s)):", s.images, s.layers);
+    println!("  net (-ELBO est.)    : {:.4} bits/dim", s.net_bpd());
+    println!("  data  -log p(x|z)   : {:.4} bits/dim", s.data_bpd());
+    for l in 0..s.layers {
+        println!(
+            "  latent[{l}] (KL est.) : {:.4} bits/dim (pop {:.0} bits, push {:.0} bits)",
+            s.latent_net_bpd(l),
+            s.latent_pop_bits[l],
+            s.latent_push_bits[l]
+        );
+    }
+    println!(
+        "  initial bits        : {:.0} total ({:.4} bits/dim amortized)",
+        s.initial_bits,
+        s.initial_bpd()
+    );
+    if test_elbo_bpd.is_finite() {
+        println!(
+            "  training test-ELBO  : {test_elbo_bpd:.4} bits/dim (measured gap {:+.4})",
+            s.net_bpd() - test_elbo_bpd
+        );
+    }
+    println!("  json                : {}", s.to_json());
 }

@@ -1,0 +1,30 @@
+//! Observability layer (ISSUE 9): request tracing, the bits-back rate
+//! ledger, and Prometheus-text exposition helpers.
+//!
+//! Three pillars, all from scratch (vendored-everything policy — zero
+//! external deps):
+//!
+//! * [`trace`] — a lock-light span recorder: call sites append to
+//!   per-thread buffers that drain into one bounded global ring, so the
+//!   serving hot path never takes the ring lock per span. When tracing
+//!   is disabled the entire cost is a single relaxed atomic load.
+//! * [`ledger`] — the bits-back rate ledger: a passive per-image /
+//!   per-layer bit-accounting sink threaded through
+//!   [`crate::bbans::CodecScratch`]. It only *observes* the effective
+//!   message length the codecs already compute — it never touches the
+//!   coder, so ledgered encodes are byte-identical to plain ones
+//!   (pinned by golden tests in `bbans::container`).
+//! * [`prom`] — Prometheus text-format (version 0.0.4) line writers
+//!   used by `coordinator::metrics` to render the existing counters and
+//!   log₂ histograms as `name{labels} value` exposition.
+//!
+//! Layering: `obs` depends on nothing above `std` — the coordinator and
+//! the codecs depend on it, never the other way around.
+
+pub mod ledger;
+pub mod prom;
+pub mod trace;
+
+pub use ledger::{Ledger, LedgerEntry, LedgerSummary};
+pub use prom::PromWriter;
+pub use trace::{tracer, SpanRecord, Tracer};

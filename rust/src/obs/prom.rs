@@ -1,0 +1,190 @@
+//! Prometheus text-format (exposition format 0.0.4) line writers.
+//!
+//! Zero-dependency rendering of the shapes `coordinator::metrics` holds:
+//! monotone counters, gauges, and the log₂-bucketed latency histograms
+//! (emitted as cumulative `_bucket{le="..."}` series plus `_sum` /
+//! `_count`, the standard Prometheus histogram encoding). Every sample
+//! line is `name{labels} value` — the exact shape CI's exposition lint
+//! checks — preceded by `# HELP` / `# TYPE` comment lines.
+
+/// Incremental builder for one exposition payload.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        // Integral values print without a fractional part (9 not 9.0) —
+        // both are valid exposition, this is just the conventional form.
+        if value.fract() == 0.0 && value.abs() < 1e15 {
+            self.out
+                .push_str(&format!("{name}{} {}\n", render_labels(labels), value as i64));
+        } else {
+            self.out
+                .push_str(&format!("{name}{} {value}\n", render_labels(labels)));
+        }
+    }
+
+    /// One monotone counter.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        self.sample(name, &[], value as f64);
+    }
+
+    /// One gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// A labeled constant-1 gauge (the `build_info` idiom).
+    pub fn info(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) {
+        self.header(name, help, "gauge");
+        self.sample(name, labels, 1.0);
+    }
+
+    /// One log₂-bucketed histogram: `counts[i]` observations fell in
+    /// `[2^i, 2^(i+1))` (last bucket unbounded above), `sum` is the total
+    /// of observed values, `n` the observation count. Rendered as the
+    /// standard cumulative `_bucket{le}` series — bucket `i`'s upper
+    /// bound is `2^(i+1)` — with the final bucket folded into `+Inf`.
+    pub fn log2_histogram(&mut self, name: &str, help: &str, counts: &[u64], sum: u64, n: u64) {
+        self.header(name, help, "histogram");
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if i + 1 == counts.len() {
+                break; // the last bucket has no finite upper bound
+            }
+            acc += c;
+            let le = (1u64 << (i + 1)).to_string();
+            self.sample(&format!("{name}_bucket"), &[("le", &le)], acc as f64);
+        }
+        self.sample(&format!("{name}_bucket"), &[("le", "+Inf")], n as f64);
+        self.sample(&format!("{name}_sum"), &[], sum as f64);
+        self.sample(&format!("{name}_count"), &[], n as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every non-comment line must be `name{labels} value` — the same
+    /// shape CI's regex lint enforces against a live scrape.
+    fn assert_exposition_shape(text: &str) {
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name_part, value) = line.rsplit_once(' ').expect("line has a value");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in line: {line}"
+            );
+            assert!(
+                value.parse::<f64>().is_ok() || value == "+Inf" || value == "NaN",
+                "bad value in line: {line}"
+            );
+            if let Some(rest) = name_part.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "{line}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counter_and_gauge_lines() {
+        let mut w = PromWriter::new();
+        w.counter("bbans_requests_total", "Requests admitted.", 42);
+        w.gauge("bbans_queue_depth", "Jobs queued.", 3.0);
+        w.info(
+            "bbans_build_info",
+            "Build identity.",
+            &[("version", "0.1.0"), ("kernel", "avx2")],
+        );
+        let text = w.finish();
+        assert!(text.contains("# TYPE bbans_requests_total counter\n"));
+        assert!(text.contains("bbans_requests_total 42\n"));
+        assert!(text.contains("bbans_queue_depth 3\n"));
+        assert!(text.contains("bbans_build_info{version=\"0.1.0\",kernel=\"avx2\"} 1\n"));
+        assert_exposition_shape(&text);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_inf() {
+        let mut counts = [0u64; 32];
+        counts[0] = 2; // [1, 2) µs
+        counts[3] = 5; // [8, 16) µs
+        counts[31] = 1; // unbounded top bucket → only in +Inf
+        let mut w = PromWriter::new();
+        w.log2_histogram("lat_us", "Latency.", &counts, 123, 8);
+        let text = w.finish();
+        assert!(text.contains("lat_us_bucket{le=\"2\"} 2\n"));
+        assert!(text.contains("lat_us_bucket{le=\"8\"} 2\n"));
+        assert!(text.contains("lat_us_bucket{le=\"16\"} 7\n"));
+        assert!(text.contains("lat_us_bucket{le=\"+Inf\"} 8\n"));
+        assert!(text.contains("lat_us_sum 123\n"));
+        assert!(text.contains("lat_us_count 8\n"));
+        // Cumulative counts never decrease along the le series.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=\"") && !l.contains("+Inf")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+        assert_exposition_shape(&text);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = PromWriter::new();
+        w.info("x_info", "Escaping.", &[("v", "a\"b\\c\nd")]);
+        let text = w.finish();
+        assert!(text.contains("x_info{v=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+}

@@ -1,0 +1,383 @@
+//! Request tracing: a lock-light span recorder.
+//!
+//! Call sites record [`SpanRecord`]s tagged with a request's trace id.
+//! Recording appends to a **per-thread buffer** (no lock); buffers drain
+//! into one **bounded global ring** when they reach
+//! [`FLUSH_SPANS`] entries or when a call site flushes explicitly (the
+//! server flushes after the reply span, the worker after each round).
+//! The ring overwrites its oldest spans when full — tracing must never
+//! grow without bound or stall the serving path — and counts what it
+//! overwrote, so a scrape can tell "quiet" from "wrapped".
+//!
+//! **Disabled-path contract (ISSUE 9):** when tracing is off, the whole
+//! cost of a `record` call is one relaxed atomic load. Everything else —
+//! timestamp math, the thread-local push, the ring lock — is behind
+//! that check.
+//!
+//! Time is recorded as microseconds since the tracer's epoch (its
+//! construction instant), so spans from different threads share one
+//! clock and a trace's spans can be laid out on a common axis.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Spans buffered per thread before one ring-lock drain.
+pub const FLUSH_SPANS: usize = 32;
+
+/// Default capacity (in spans) of the global ring — enough for a few
+/// hundred recent requests at ~6 spans each, small enough to snapshot
+/// cheaply over the wire.
+pub const DEFAULT_RING_SPANS: usize = 4096;
+
+/// One recorded span: a named interval inside one request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// The request's trace id (0 is reserved: never recorded).
+    pub trace: u64,
+    /// Span name — a static label like `"admission"`, `"nn"`, `"reply"`.
+    pub name: &'static str,
+    /// Start, µs since the tracer epoch.
+    pub start_us: u64,
+    /// Duration, µs (0 for instantaneous marks).
+    pub dur_us: u64,
+    /// Payload size hint: images for coding spans, bytes for the reply.
+    pub items: u64,
+    /// Global drain order — stable sort key when wall-clocks tie.
+    pub seq: u64,
+}
+
+impl SpanRecord {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("items", Json::Num(self.items as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+        ])
+    }
+}
+
+/// Bounded overwrite-oldest span storage (the "global ring").
+struct Ring {
+    buf: Vec<SpanRecord>,
+    /// Index of the oldest element once the ring has wrapped.
+    head: usize,
+    /// Spans overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, cap: usize, s: SpanRecord) {
+        if self.buf.len() < cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest → newest.
+    fn in_order(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// The span recorder. One global instance serves the process (see
+/// [`tracer`]); tests construct private instances with a small ring.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_id: AtomicU64,
+    seq: AtomicU64,
+    recorded: AtomicU64,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+thread_local! {
+    /// Per-thread span buffer for the **global** tracer (private tracer
+    /// instances push straight to their ring — only the global one is on
+    /// a hot path worth buffering).
+    static LOCAL: RefCell<Vec<SpanRecord>> = const { RefCell::new(Vec::new()) };
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer (created disabled on first touch; the server
+/// enables it at startup).
+pub fn tracer() -> &'static Tracer {
+    GLOBAL.get_or_init(|| Tracer::new(DEFAULT_RING_SPANS))
+}
+
+impl Tracer {
+    pub fn new(ring_spans: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            cap: ring_spans.max(1),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                head: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// The single relaxed load every disabled-path `record` costs.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Fresh nonzero trace id for a request that arrived without one.
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// µs since the tracer epoch (spans share this clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one span for `trace`. No-op when disabled or `trace == 0`
+    /// (requests that opted out). `start` instants predating the epoch
+    /// saturate to 0 — admission timestamps can precede a late enable.
+    #[inline]
+    pub fn record(&self, trace: u64, name: &'static str, start: Instant, dur: Duration, items: u64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        if trace == 0 {
+            return;
+        }
+        let rec = SpanRecord {
+            trace,
+            name,
+            start_us: start.saturating_duration_since(self.epoch).as_micros() as u64,
+            dur_us: dur.as_micros() as u64,
+            items,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+        };
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        if self.is_global() {
+            let full = LOCAL.with(|b| {
+                let mut b = b.borrow_mut();
+                b.push(rec);
+                b.len() >= FLUSH_SPANS
+            });
+            if full {
+                self.flush();
+            }
+        } else {
+            self.ring.lock().expect("trace ring poisoned").push(self.cap, rec);
+        }
+    }
+
+    /// Drain this thread's buffer into the ring (one lock for the whole
+    /// batch). Terminal call sites — the reply span, the end of a worker
+    /// round — flush so a trace is scrape-visible as soon as it ends.
+    pub fn flush(&self) {
+        if !self.is_global() {
+            return; // private tracers never buffer
+        }
+        let batch = LOCAL.with(|b| std::mem::take(&mut *b.borrow_mut()));
+        if batch.is_empty() {
+            return;
+        }
+        let mut ring = self.ring.lock().expect("trace ring poisoned");
+        for s in batch {
+            ring.push(self.cap, s);
+        }
+    }
+
+    /// Total spans ever recorded (including later-overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Spans overwritten by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().expect("trace ring poisoned").dropped
+    }
+
+    /// Ring capacity in spans.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Ring contents, oldest → newest (flushes this thread first).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.flush();
+        self.ring.lock().expect("trace ring poisoned").in_order()
+    }
+
+    /// Snapshot the most recent `max_traces` traces as JSON:
+    /// `{"capacity", "recorded", "dropped", "traces": [{"trace",
+    /// "spans": [...]}, ...]}` with traces ordered most-recent-first and
+    /// each trace's spans in drain (`seq`) order.
+    pub fn snapshot_json(&self, max_traces: usize) -> Json {
+        let spans = self.spans();
+        // Group by trace id, preserving first-seen (oldest-first) order.
+        let mut order: Vec<u64> = Vec::new();
+        let mut groups: std::collections::HashMap<u64, Vec<SpanRecord>> =
+            std::collections::HashMap::new();
+        for s in spans {
+            groups
+                .entry(s.trace)
+                .or_insert_with(|| {
+                    order.push(s.trace);
+                    Vec::new()
+                })
+                .push(s);
+        }
+        // Most recent trace = largest max-seq; emit newest first.
+        order.sort_by_key(|t| {
+            std::cmp::Reverse(groups[t].iter().map(|s| s.seq).max().unwrap_or(0))
+        });
+        let traces: Vec<Json> = order
+            .into_iter()
+            .take(max_traces)
+            .map(|t| {
+                let mut g = groups.remove(&t).expect("grouped above");
+                g.sort_by_key(|s| s.seq);
+                Json::obj(vec![
+                    ("trace", Json::Num(t as f64)),
+                    ("spans", Json::Arr(g.into_iter().map(SpanRecord::to_json).collect())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("capacity", Json::Num(self.cap as f64)),
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+            ("traces", Json::Arr(traces)),
+        ])
+    }
+
+    fn is_global(&self) -> bool {
+        GLOBAL.get().is_some_and(|g| std::ptr::eq(g, self))
+    }
+}
+
+/// Serializes tests that toggle the GLOBAL tracer's enable bit, across
+/// modules — without it, one test's `set_enabled(false)` teardown races
+/// another's recording window.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(t: &Tracer, trace: u64, name: &'static str) {
+        t.record(trace, name, Instant::now(), Duration::from_micros(5), 1);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Tracer::new(16);
+        span(&t, 1, "a");
+        assert_eq!(t.recorded(), 0);
+        assert!(t.spans().is_empty());
+    }
+
+    #[test]
+    fn trace_zero_never_recorded() {
+        let t = Tracer::new(16);
+        t.set_enabled(true);
+        span(&t, 0, "a");
+        assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_wraps_and_counts_dropped() {
+        let t = Tracer::new(8);
+        t.set_enabled(true);
+        for i in 1..=20u64 {
+            span(&t, i, "s");
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 8, "ring is bounded");
+        assert_eq!(t.dropped(), 12, "overwritten spans are counted");
+        assert_eq!(t.recorded(), 20);
+        // Oldest→newest after wraparound: traces 13..=20 survive, in order.
+        let traces: Vec<u64> = spans.iter().map(|s| s.trace).collect();
+        assert_eq!(traces, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn snapshot_groups_by_trace_newest_first() {
+        let t = Tracer::new(64);
+        t.set_enabled(true);
+        span(&t, 7, "admission");
+        span(&t, 9, "admission");
+        span(&t, 7, "reply");
+        let j = t.snapshot_json(10);
+        let traces = j.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 2);
+        // Trace 7's last span is newest, so trace 7 leads.
+        assert_eq!(traces[0].get("trace").unwrap().as_u64(), Some(7));
+        let spans7 = traces[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans7.len(), 2);
+        assert_eq!(spans7[0].get("name").unwrap().as_str(), Some("admission"));
+        assert_eq!(spans7[1].get("name").unwrap().as_str(), Some("reply"));
+        // max_traces truncates to the most recent traces only.
+        let j1 = t.snapshot_json(1);
+        let only = j1.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(only.len(), 1);
+        assert_eq!(only[0].get("trace").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let t = Tracer::new(4);
+        let a = t.next_trace_id();
+        let b = t.next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    /// The global tracer buffers per thread and drains on flush — spans
+    /// recorded under the threshold are invisible until flushed. Uses a
+    /// unique trace id so concurrent tests sharing the global are inert.
+    #[test]
+    fn global_tracer_buffers_then_flushes() {
+        let _guard = test_guard();
+        let t = tracer();
+        let was = t.enabled();
+        t.set_enabled(true);
+        let id = t.next_trace_id() + 0xC0FFEE_0000;
+        for _ in 0..3 {
+            span(t, id, "buffered");
+        }
+        let j = t.snapshot_json(usize::MAX); // spans() flushes this thread
+        let traces = j.get("traces").unwrap().as_arr().unwrap();
+        let mine: Vec<&Json> = traces
+            .iter()
+            .filter(|tr| tr.get("trace").and_then(Json::as_u64) == Some(id))
+            .collect();
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].get("spans").unwrap().as_arr().unwrap().len(), 3);
+        t.set_enabled(was);
+    }
+}

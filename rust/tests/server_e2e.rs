@@ -478,6 +478,179 @@ fn drain_deadline_forces_stop_on_idle_peer() {
     svc.shutdown();
 }
 
+/// Tentpole e2e (ISSUE 9): a traced request over TCP leaves a span tree
+/// covering admission → queue wait → round → NN phase → ANS phase →
+/// reply, retrievable through the `TraceReq` wire op on the same
+/// connection — and tracing changes zero payload bytes. The Prometheus
+/// listener serves a well-formed text-format scrape over plain HTTP.
+#[test]
+fn trace_and_metrics_exposition_over_tcp() {
+    let _wd = Watchdog::new(120);
+    bbans::obs::tracer().set_enabled(true);
+    let svc = toy_service();
+    let server =
+        Server::start_with_metrics("127.0.0.1:0", svc.handle(), Some("127.0.0.1:0")).unwrap();
+    let metrics_addr = server.metrics_addr.expect("metrics listener requested");
+
+    let mut client = Client::connect(server.addr).unwrap();
+    let images = sample_images(5, 77);
+    // An explicit client-supplied trace id, far above the auto-assign
+    // counter so concurrent tests in this process cannot collide with it.
+    let trace_id = 0xE2E_0001u64;
+    let traced = client
+        .compress_with_opts("toy", 64, images.clone(), None, Some(trace_id))
+        .unwrap();
+    let untraced = client.compress("toy", 64, images.clone()).unwrap();
+    assert_eq!(traced, untraced, "tracing must not move payload bytes");
+    assert_eq!(
+        client
+            .decompress_with_opts(traced, None, Some(trace_id + 1))
+            .unwrap(),
+        images
+    );
+
+    // TraceReq on the same connection: the span tree for our request.
+    let json = client.trace(64).unwrap();
+    let j = bbans::util::json::Json::parse(&json).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    let ours = traces
+        .iter()
+        .find(|t| t.get("trace").and_then(bbans::util::json::Json::as_u64) == Some(trace_id))
+        .unwrap_or_else(|| panic!("trace {trace_id} missing from snapshot: {json}"));
+    let names: Vec<&str> = ours
+        .get("spans")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|s| s.get("name").and_then(bbans::util::json::Json::as_str))
+        .collect();
+    for need in ["admission", "queue", "nn", "ans", "round", "reply", "request"] {
+        assert!(names.contains(&need), "span '{need}' missing from {names:?}");
+    }
+
+    // Prometheus scrape: plain HTTP GET against the side listener.
+    let mut s = TcpStream::connect(metrics_addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n")
+        .unwrap();
+    s.flush().unwrap();
+    let mut reply = String::new();
+    use std::io::Read as _;
+    s.read_to_string(&mut reply).unwrap();
+    assert!(reply.starts_with("HTTP/1.0 200 OK\r\n"), "{reply}");
+    assert!(
+        reply.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8"),
+        "{reply}"
+    );
+    let body = reply.split("\r\n\r\n").nth(1).expect("header/body split");
+    for line in body.lines() {
+        assert_prometheus_line_ok(line);
+    }
+    for metric in [
+        "bbans_requests_total",
+        "bbans_images_encoded_total",
+        "bbans_images_decoded_total",
+        "bbans_request_latency_us_bucket",
+        "bbans_trace_spans_recorded_total",
+        "bbans_build_info",
+    ] {
+        assert!(body.contains(metric), "scrape missing {metric}:\n{body}");
+    }
+
+    server.stop();
+    svc.shutdown();
+}
+
+/// Lint one line of Prometheus text exposition format: a comment
+/// (`# HELP` / `# TYPE`), or `name[{labels}] value` with a bare metric
+/// name and a float-parsable value.
+fn assert_prometheus_line_ok(line: &str) {
+    if line.is_empty() || line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+        return;
+    }
+    let (name_part, value) = line
+        .rsplit_once(' ')
+        .unwrap_or_else(|| panic!("no value on exposition line: {line:?}"));
+    let metric = name_part.split('{').next().unwrap();
+    assert!(
+        !metric.is_empty()
+            && !metric.starts_with(|c: char| c.is_ascii_digit())
+            && metric
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+        "bad metric name on exposition line: {line:?}"
+    );
+    let labels = &name_part[metric.len()..];
+    assert!(
+        labels.is_empty() || (labels.starts_with('{') && labels.ends_with('}')),
+        "bad label set on exposition line: {line:?}"
+    );
+    assert!(
+        value.parse::<f64>().is_ok(),
+        "bad sample value on exposition line: {line:?}"
+    );
+}
+
+/// Acceptance (ISSUE 9): for BOTH schedules, the wire bytes of a
+/// hierarchical compress match an offline *ledgered* encode bit-for-bit,
+/// the ledger's ELBO decomposition telescopes (residual < 1e-6), and the
+/// Bit-Swap chain-startup cost undercuts naive's.
+#[test]
+fn hier_wire_bytes_match_ledgered_encode_for_both_schedules() {
+    let _wd = Watchdog::new(120);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let images = sample_images(6, 13);
+    let mut initial = [0.0f64; 2];
+    for (i, schedule) in [Schedule::Naive, Schedule::BitSwap].into_iter().enumerate() {
+        let spec = HierSpec {
+            schedule,
+            likelihood: Likelihood::Bernoulli,
+            dims: vec![16, 12],
+            hidden: 12,
+            seed: 979,
+            chunks: 2,
+        };
+        let bytes = client.compress_hier(spec, 64, images.clone()).unwrap();
+
+        let meta = HierMeta {
+            name: "hier2".into(),
+            pixels: 64,
+            dims: vec![16, 12],
+            hidden: 12,
+            likelihood: Likelihood::Bernoulli,
+        };
+        let backend = HierVae::random(meta, 979);
+        let codec = HierCodec::new(&backend, BbAnsConfig::default(), schedule).unwrap();
+        let (reference, ledger) = HierContainer::encode_with_ledger(&codec, &images, 2).unwrap();
+        assert_eq!(
+            bytes,
+            reference.to_bytes(),
+            "{schedule:?}: serving bytes must match the ledgered offline encode"
+        );
+        let s = ledger.summary(64);
+        assert!(
+            s.max_residual < 1e-6,
+            "{schedule:?}: ledger must decompose (residual {} bits)",
+            s.max_residual
+        );
+        initial[i] = s.initial_bits;
+
+        assert_eq!(client.decompress(bytes).unwrap(), images);
+    }
+    assert!(
+        initial[1] < initial[0],
+        "bitswap initial bits {} must undercut naive {}",
+        initial[1],
+        initial[0]
+    );
+
+    server.stop();
+    svc.shutdown();
+}
+
 #[test]
 fn compress_hier_roundtrips_over_tcp() {
     let _wd = Watchdog::new(120);
