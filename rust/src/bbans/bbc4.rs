@@ -44,18 +44,24 @@
 //! overlapping or out-of-place image range.
 
 use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::container::{
     check_decode_budget, chunk_seed, push_str, read_str, ChunkEntry, HierContainer,
 };
-use super::hierarchy::{HierCodec, Schedule};
-use super::{BbAnsConfig, VaeCodec};
+use super::hierarchy::{HierCodec, HierScratch, Schedule};
+use super::{BbAnsConfig, CodecScratch, VaeCodec};
 use crate::ans::{Ans, AnsMessage};
+use crate::format::stream::{
+    journal_path, journal_prefix, FileMedium, JournalRecord, StreamMedium,
+};
 use crate::format::{self, FrameRead, PageFrame};
 use crate::model::hierarchy::{HierBackend, HierVae};
 use crate::model::{Backend, Likelihood};
+use crate::obs::Ledger;
 use crate::util::chunk_ranges;
 use crate::util::crc32;
 
@@ -114,6 +120,29 @@ impl Bbc4Model {
             Bbc4Model::Vae { backend_id, .. } | Bbc4Model::Hier { backend_id, .. } => backend_id,
         }
     }
+
+    /// The header model a single-layer codec encodes under.
+    pub fn for_vae<B: Backend + ?Sized>(codec: &VaeCodec<'_, B>) -> Self {
+        Bbc4Model::Vae {
+            model: codec.backend().meta().name.clone(),
+            backend_id: codec.backend().backend_id(),
+        }
+    }
+
+    /// The header model a hierarchical codec encodes under
+    /// (self-describing, like BBC3).
+    pub fn for_hier<B: HierBackend + ?Sized>(codec: &HierCodec<'_, B>) -> Self {
+        let meta = codec.backend().meta();
+        Bbc4Model::Hier {
+            model: meta.name.clone(),
+            backend_id: codec.backend().backend_id(),
+            schedule: codec.schedule,
+            likelihood: meta.likelihood,
+            hidden: meta.hidden as u32,
+            weight_seed: codec.backend().weight_seed(),
+            dims: meta.dims.iter().map(|&d| d as u32).collect(),
+        }
+    }
 }
 
 /// One recovered (or encoded) page: chunk `index`'s ANS chain covering
@@ -157,6 +186,11 @@ pub struct RecoveryReport {
     pub damaged_ranges: Vec<(usize, usize)>,
     /// Whether the redundant trailer index validated.
     pub index_intact: bool,
+    /// When the trailer index is gone, the byte range `[start, end)` of
+    /// the torn tail: everything past the last recovered structure. An
+    /// empty range (`start == end == len`) means the file was cut
+    /// cleanly at a page boundary with only the trailer missing.
+    pub truncated_tail: Option<(usize, usize)>,
 }
 
 impl RecoveryReport {
@@ -167,8 +201,13 @@ impl RecoveryReport {
 
     /// One-line operator summary.
     pub fn summary(&self) -> String {
+        let tail = match self.truncated_tail {
+            Some((s, e)) if e > s => format!(", torn tail bytes [{s}, {e})"),
+            Some((s, _)) => format!(", truncated at {s}"),
+            None => String::new(),
+        };
         format!(
-            "pages {}/{} recovered, {} of {} images lost, {} damaged byte range(s), index {}",
+            "pages {}/{} recovered, {} of {} images lost, {} damaged byte range(s), index {}{tail}",
             self.pages_recovered,
             self.pages_total,
             self.images_lost.len(),
@@ -207,10 +246,7 @@ impl Bbc4Container {
         let meta = codec.backend().meta();
         let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
         Ok(Self::assemble(
-            Bbc4Model::Vae {
-                model: meta.name.clone(),
-                backend_id: codec.backend().backend_id(),
-            },
+            Bbc4Model::for_vae(codec),
             codec.cfg,
             meta.pixels as u32,
             chunks,
@@ -237,15 +273,7 @@ impl Bbc4Container {
         let meta = codec.backend().meta();
         let chunks = codec.encode_dataset_chunked_with_workers(images, n_chunks, workers)?;
         Ok(Self::assemble(
-            Bbc4Model::Hier {
-                model: meta.name.clone(),
-                backend_id: codec.backend().backend_id(),
-                schedule: codec.schedule,
-                likelihood: meta.likelihood,
-                hidden: meta.hidden as u32,
-                weight_seed: codec.backend().weight_seed(),
-                dims: meta.dims.iter().map(|&d| d as u32).collect(),
-            },
+            Bbc4Model::for_hier(codec),
             codec.cfg,
             meta.pixels as u32,
             chunks,
@@ -374,20 +402,7 @@ impl Bbc4Container {
         }
         // Redundant page index: lets a reader locate every page from the
         // tail even when the forward scan is interrupted.
-        let trailer_start = out.len();
-        out.extend_from_slice(&INDEX_MAGIC);
-        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
-        for e in &entries {
-            out.extend_from_slice(&e.offset.to_le_bytes());
-            out.extend_from_slice(&e.frame_len.to_le_bytes());
-            out.extend_from_slice(&e.first_image.to_le_bytes());
-            out.extend_from_slice(&e.num_images.to_le_bytes());
-            out.extend_from_slice(&e.crc.to_le_bytes());
-        }
-        let index_crc = crc32::hash(&out[trailer_start..]);
-        out.extend_from_slice(&index_crc.to_le_bytes());
-        let trailer_len = (out.len() - trailer_start + 4) as u32;
-        out.extend_from_slice(&trailer_len.to_le_bytes());
+        out.extend_from_slice(&trailer_bytes(&entries));
         out
     }
 
@@ -688,6 +703,19 @@ impl Bbc4Container {
             .flat_map(|&i| tiling[i as usize].clone())
             .map(|i| i as u32)
             .collect();
+        // With the trailer gone the file ends in a torn tail: everything
+        // past the last byte the header or a recovered page vouches for.
+        let truncated_tail = if index.is_some() {
+            None
+        } else {
+            let covered_end = found
+                .values()
+                .map(|(_, r)| r.1)
+                .max()
+                .unwrap_or(header_end)
+                .min(b.len());
+            Some((covered_end, b.len()))
+        };
         let report = RecoveryReport {
             pages_total: c.n_pages,
             pages_recovered: found.len() as u32,
@@ -696,6 +724,7 @@ impl Bbc4Container {
             images_lost,
             damaged_ranges,
             index_intact: index.is_some(),
+            truncated_tail,
         };
         c.pages = found.into_values().map(|(p, _)| p).collect();
         Ok(Salvage {
@@ -834,9 +863,72 @@ fn collect_complete(slots: Vec<Option<Vec<u8>>>) -> Result<Vec<Vec<u8>>> {
         .collect()
 }
 
+/// Serialize the redundant trailer index for `entries` — the single
+/// source of the trailer layout, shared by the one-shot serializer and
+/// the streaming writer's finalize step (byte-identity by construction).
+fn trailer_bytes(entries: &[IndexEntry]) -> Vec<u8> {
+    let mut t = Vec::with_capacity(TRAILER_FIXED + entries.len() * INDEX_ENTRY_LEN);
+    t.extend_from_slice(&INDEX_MAGIC);
+    t.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        t.extend_from_slice(&e.offset.to_le_bytes());
+        t.extend_from_slice(&e.frame_len.to_le_bytes());
+        t.extend_from_slice(&e.first_image.to_le_bytes());
+        t.extend_from_slice(&e.num_images.to_le_bytes());
+        t.extend_from_slice(&e.crc.to_le_bytes());
+    }
+    let index_crc = crc32::hash(&t);
+    t.extend_from_slice(&index_crc.to_le_bytes());
+    let trailer_len = (t.len() + 4) as u32;
+    t.extend_from_slice(&trailer_len.to_le_bytes());
+    t
+}
+
+/// Validate one complete trailer block (`[start, end)` bytes of a file,
+/// magic through trailer_len). `None` if any part fails validation.
+fn parse_trailer_block(block: &[u8]) -> Option<Vec<IndexEntry>> {
+    if block.len() < TRAILER_FIXED || block[..4] != INDEX_MAGIC {
+        return None;
+    }
+    let n = u32::from_le_bytes(block[4..8].try_into().unwrap()) as usize;
+    // Checked arithmetic: a crafted count must not overflow the length
+    // formula (and the block length itself bounds any allocation).
+    let want = n
+        .checked_mul(INDEX_ENTRY_LEN)
+        .and_then(|e| e.checked_add(TRAILER_FIXED))?;
+    if block.len() != want {
+        return None;
+    }
+    let crc_at = 8 + n * INDEX_ENTRY_LEN;
+    let stored = u32::from_le_bytes(block[crc_at..crc_at + 4].try_into().unwrap());
+    if crc32::hash(&block[..crc_at]) != stored {
+        return None;
+    }
+    let declared =
+        u32::from_le_bytes(block[crc_at + 4..crc_at + 8].try_into().unwrap()) as usize;
+    if declared != block.len() {
+        return None;
+    }
+    let mut entries = Vec::with_capacity(n);
+    let mut at = 8;
+    for _ in 0..n {
+        entries.push(IndexEntry {
+            offset: u64::from_le_bytes(block[at..at + 8].try_into().unwrap()),
+            frame_len: u32::from_le_bytes(block[at + 8..at + 12].try_into().unwrap()),
+            first_image: u32::from_le_bytes(block[at + 12..at + 16].try_into().unwrap()),
+            num_images: u32::from_le_bytes(block[at + 16..at + 20].try_into().unwrap()),
+            crc: u32::from_le_bytes(block[at + 20..at + 24].try_into().unwrap()),
+        });
+        at += INDEX_ENTRY_LEN;
+    }
+    Some(entries)
+}
+
 /// Locate and validate the redundant trailer index from the tail of the
 /// file. Returns the entries and the byte range `[start, end)` the
-/// trailer occupies, or `None` if any part of it fails validation.
+/// trailer occupies, or `None` if any part of it fails validation — in
+/// particular when `trailer_len` claims more bytes than the file holds
+/// (a truncated tail must degrade to "index missing", never panic).
 fn read_trailer_index(b: &[u8]) -> Option<(Vec<IndexEntry>, (usize, usize))> {
     if b.len() < TRAILER_FIXED {
         return None;
@@ -847,31 +939,821 @@ fn read_trailer_index(b: &[u8]) -> Option<(Vec<IndexEntry>, (usize, usize))> {
         return None;
     }
     let start = b.len() - trailer_len;
-    if b[start..start + 4] != INDEX_MAGIC {
-        return None;
-    }
-    let n = u32::from_le_bytes(b[start + 4..start + 8].try_into().unwrap()) as usize;
-    if trailer_len != TRAILER_FIXED + n * INDEX_ENTRY_LEN {
-        return None;
-    }
-    let crc_at = start + 8 + n * INDEX_ENTRY_LEN;
-    let stored = u32::from_le_bytes(b[crc_at..crc_at + 4].try_into().unwrap());
-    if crc32::hash(&b[start..crc_at]) != stored {
-        return None;
-    }
-    let mut entries = Vec::with_capacity(n);
-    let mut at = start + 8;
-    for _ in 0..n {
-        entries.push(IndexEntry {
-            offset: u64::from_le_bytes(b[at..at + 8].try_into().unwrap()),
-            frame_len: u32::from_le_bytes(b[at + 8..at + 12].try_into().unwrap()),
-            first_image: u32::from_le_bytes(b[at + 12..at + 16].try_into().unwrap()),
-            num_images: u32::from_le_bytes(b[at + 16..at + 20].try_into().unwrap()),
-            crc: u32::from_le_bytes(b[at + 20..at + 24].try_into().unwrap()),
-        });
-        at += INDEX_ENTRY_LEN;
-    }
+    let entries = parse_trailer_block(&b[start..])?;
     Some((entries, (start, b.len())))
+}
+
+// ---------------------------------------------------------------------------
+// Crash-consistent streaming: incremental journaled writer, reopen-and-
+// resume recovery, bounded-memory page reader. See `format::stream` for
+// the journal record format and the durability ordering invariant.
+// ---------------------------------------------------------------------------
+
+/// Longest valid prefix of a streamed (possibly torn or still-growing)
+/// BBC4 file: the CRC-checked header plus every consecutive leading page
+/// that validates against the header's tiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamPrefix {
+    /// Consecutive intact leading pages.
+    pub pages: u32,
+    /// Images those pages code.
+    pub images: u32,
+    /// Byte length of the intact prefix (header + intact pages);
+    /// everything past it is a torn tail.
+    pub keep: usize,
+    /// True iff the bytes are a strict-valid complete container
+    /// (every page present plus the matching trailer index).
+    pub complete: bool,
+}
+
+/// Scan detail the resume planner needs beyond the public numbers.
+struct PrefixDetail {
+    shell: Bbc4Container,
+    header_len: usize,
+    entries: Vec<IndexEntry>,
+    /// End offset of each intact frame, in page order.
+    ends: Vec<usize>,
+    images: u32,
+    complete: bool,
+}
+
+fn scan_stream_prefix(b: &[u8]) -> Result<PrefixDetail> {
+    let (shell, header_len) = Bbc4Container::parse_header(b)?;
+    let mut entries: Vec<IndexEntry> = Vec::new();
+    let mut ends = Vec::new();
+    let mut images = 0u32;
+    let mut pos = header_len;
+    for i in 0..shell.n_pages {
+        match format::read_frame(b, pos) {
+            FrameRead::Ok { frame, next }
+                if frame.index == i && shell.admit_page(&frame).is_some() =>
+            {
+                entries.push(IndexEntry {
+                    offset: pos as u64,
+                    frame_len: (next - pos) as u32,
+                    first_image: frame.first_image,
+                    num_images: frame.num_images,
+                    crc: frame.crc(),
+                });
+                images += frame.num_images;
+                ends.push(next);
+                pos = next;
+            }
+            _ => break,
+        }
+    }
+    // Complete iff every page is present and the remainder is exactly the
+    // matching trailer index (the strict reader's acceptance condition).
+    let complete = entries.len() as u32 == shell.n_pages
+        && match read_trailer_index(b) {
+            Some((tentries, (s, e))) => {
+                s == pos
+                    && e == b.len()
+                    && tentries.len() == entries.len()
+                    && tentries.iter().zip(&entries).all(|(a, w)| {
+                        a.offset == w.offset
+                            && a.frame_len == w.frame_len
+                            && a.first_image == w.first_image
+                            && a.num_images == w.num_images
+                            && a.crc == w.crc
+                    })
+            }
+            None => false,
+        };
+    Ok(PrefixDetail {
+        shell,
+        header_len,
+        entries,
+        ends,
+        images,
+        complete,
+    })
+}
+
+impl Bbc4Container {
+    /// Validated empty shell for a streaming encode: same admission
+    /// checks as [`Self::parse_header`], so a stream started from it
+    /// always produces a strict-parseable file.
+    pub fn new_shell(
+        model: Bbc4Model,
+        cfg: BbAnsConfig,
+        pixels: u32,
+        num_images: u32,
+        n_pages: u32,
+    ) -> Result<Self> {
+        if pixels == 0 || pixels > 1 << 24 {
+            bail!("implausible pixel count {pixels}");
+        }
+        check_decode_budget(num_images as u64, pixels as u64)?;
+        if n_pages == 0 || n_pages > 1 << 20 {
+            bail!("implausible page count {n_pages}");
+        }
+        let tiling = chunk_ranges(num_images as usize, n_pages as usize);
+        if tiling.len() as u32 != n_pages {
+            bail!("page count {n_pages} is inconsistent with {num_images} images");
+        }
+        cfg.validate()?;
+        Ok(Self {
+            cfg,
+            pixels,
+            num_images,
+            n_pages,
+            model,
+            pages: Vec::new(),
+        })
+    }
+
+    /// Scan the longest valid prefix of a streamed, fetched, or torn
+    /// file. The wire-fetch client uses this to restart a dropped
+    /// transfer at the last intact page; `resume` builds on the same
+    /// scan. Errors only when the header itself does not validate.
+    pub fn scan_prefix(b: &[u8]) -> Result<(Self, StreamPrefix)> {
+        let d = scan_stream_prefix(b)?;
+        let prefix = StreamPrefix {
+            pages: d.entries.len() as u32,
+            images: d.images,
+            keep: d.ends.last().copied().unwrap_or(d.header_len),
+            complete: d.complete,
+        };
+        Ok((d.shell, prefix))
+    }
+}
+
+/// What `resume` decided to do with an interrupted file.
+struct ResumePlan {
+    /// Truncate the data medium to this many bytes (0 ⇒ rewrite the
+    /// header from scratch).
+    keep: usize,
+    /// Truncate the journal to this many bytes (its valid-record prefix).
+    journal_keep: usize,
+    entries: Vec<IndexEntry>,
+    images: u32,
+    complete: bool,
+}
+
+/// Validate an interrupted `(data, journal)` pair against the encode we
+/// expect to continue, and decide where to pick up. The data scan is the
+/// source of truth; the journal is a cross-check that must agree (see
+/// `format::stream` for why it can lag but never lead).
+fn plan_stream_resume(shell: &Bbc4Container, data: &[u8], journal: &[u8]) -> Result<ResumePlan> {
+    let expected = shell.header_bytes();
+    let hl = expected.len();
+    let (journal_keep, last) = journal_prefix(journal);
+
+    if data.len() < hl {
+        // Cut mid-header: nothing durable was claimed yet. Any byte that
+        // is present must match the encode we are resuming.
+        if data != &expected[..data.len()] {
+            bail!("existing file was written by a different encode (header mismatch)");
+        }
+        if let Some(rec) = last {
+            if rec.pages_done > 0 || rec.bytes_written > data.len() as u64 {
+                bail!(
+                    "journal records {} durable page(s) but the data file holds only a partial \
+                     header — data was lost; run `salvage` on what remains",
+                    rec.pages_done
+                );
+            }
+        }
+        return Ok(ResumePlan {
+            keep: 0,
+            journal_keep: 0,
+            entries: Vec::new(),
+            images: 0,
+            complete: false,
+        });
+    }
+    if data[..hl] != expected[..] {
+        bail!("existing file was written by a different encode (header mismatch)");
+    }
+
+    let d = scan_stream_prefix(data)?;
+    let pages = d.entries.len() as u32;
+    match last {
+        None => {
+            if pages > 0 {
+                bail!(
+                    "data file holds {pages} intact page(s) but the journal has no valid \
+                     record — the sidecar journal is missing or corrupt; run `salvage` instead"
+                );
+            }
+        }
+        Some(rec) => {
+            if rec.pages_done > pages {
+                bail!(
+                    "journal records {} durable page(s) but only {pages} are intact on disk — \
+                     data was lost beyond a torn tail; run `salvage` instead",
+                    rec.pages_done
+                );
+            }
+            // Validate the last journal record against the page frames it
+            // claims: length, frame CRC, and image count must all agree.
+            let p = rec.pages_done as usize;
+            let want_bytes = if p == 0 { hl } else { d.ends[p - 1] } as u64;
+            let want_crc = if p == 0 {
+                crc32::hash(&expected)
+            } else {
+                d.entries[p - 1].crc
+            };
+            let want_images: u32 = d.entries[..p].iter().map(|e| e.num_images).sum();
+            if rec.bytes_written != want_bytes
+                || rec.last_crc != want_crc
+                || rec.images_done != want_images
+            {
+                bail!(
+                    "journal record (pages {}, bytes {}) does not match the data file \
+                     (pages {pages}, bytes {want_bytes}) — mismatched sidecar journal?",
+                    rec.pages_done,
+                    rec.bytes_written
+                );
+            }
+        }
+    }
+    Ok(ResumePlan {
+        keep: d.ends.last().copied().unwrap_or(hl),
+        journal_keep,
+        entries: d.entries,
+        images: d.images,
+        complete: d.complete,
+    })
+}
+
+/// Outcome of [`Bbc4StreamWriter::resume`]: either the file already
+/// holds a complete strict-valid container (nothing to re-encode), or a
+/// writer positioned at the exact next page.
+pub enum Resumed<D: StreamMedium, J: StreamMedium> {
+    /// The data file is already a strict-valid complete container; the
+    /// file-backed path has removed the leftover journal.
+    Complete,
+    /// Continue encoding from `writer.pages_done()`.
+    Writer(Box<Bbc4StreamWriter<D, J>>),
+}
+
+/// Crash-consistent incremental BBC4 encoder: appends one self-
+/// delimiting CRC'd page frame per chunk to the data medium, commits a
+/// durable journal record after every page (data synced first), and
+/// finalizes the redundant trailer index in a single append on
+/// [`Bbc4StreamWriter::finish`]. Uninterrupted output is byte-identical
+/// to [`Bbc4Container::to_bytes`] of the one-shot encoder.
+pub struct Bbc4StreamWriter<D: StreamMedium, J: StreamMedium> {
+    shell: Bbc4Container,
+    tiling: Vec<std::ops::Range<usize>>,
+    header_crc: u32,
+    data: D,
+    journal: J,
+    entries: Vec<IndexEntry>,
+    images_done: u32,
+    ledger: Option<Ledger>,
+}
+
+impl<D: StreamMedium, J: StreamMedium> Bbc4StreamWriter<D, J> {
+    /// Start a fresh stream: truncates both media, writes the header to
+    /// the data medium, syncs it, and commits the page-0 journal record.
+    pub fn start(mut data: D, mut journal: J, shell: Bbc4Container) -> Result<Self> {
+        let shell = Bbc4Container::new_shell(
+            shell.model,
+            shell.cfg,
+            shell.pixels,
+            shell.num_images,
+            shell.n_pages,
+        )?;
+        data.truncate(0).context("truncate data medium")?;
+        journal.truncate(0).context("truncate journal medium")?;
+        let header = shell.header_bytes();
+        data.append(&header).context("write header")?;
+        data.sync().context("sync header")?;
+        let tiling = chunk_ranges(shell.num_images as usize, shell.n_pages as usize);
+        let mut w = Self {
+            header_crc: crc32::hash(&header),
+            shell,
+            tiling,
+            data,
+            journal,
+            entries: Vec::new(),
+            images_done: 0,
+            ledger: None,
+        };
+        w.commit_journal()?;
+        Ok(w)
+    }
+
+    /// Resume an interrupted stream from its current `(data, journal)`
+    /// bytes: validates both against the expected encode, truncates the
+    /// torn tails off both media, and returns a writer positioned at the
+    /// exact next page (or [`Resumed::Complete`]).
+    pub fn resume_media(
+        mut data: D,
+        mut journal: J,
+        data_bytes: &[u8],
+        journal_bytes: &[u8],
+        shell: Bbc4Container,
+    ) -> Result<Resumed<D, J>> {
+        let shell = Bbc4Container::new_shell(
+            shell.model,
+            shell.cfg,
+            shell.pixels,
+            shell.num_images,
+            shell.n_pages,
+        )?;
+        let plan = plan_stream_resume(&shell, data_bytes, journal_bytes)?;
+        if plan.complete {
+            return Ok(Resumed::Complete);
+        }
+        if plan.keep == 0 {
+            return Ok(Resumed::Writer(Box::new(Self::start(data, journal, shell)?)));
+        }
+        data.truncate(plan.keep as u64).context("truncate torn tail")?;
+        data.sync().context("sync truncated data")?;
+        journal
+            .truncate(plan.journal_keep as u64)
+            .context("truncate journal tail")?;
+        let header_crc = crc32::hash(&shell.header_bytes());
+        let tiling = chunk_ranges(shell.num_images as usize, shell.n_pages as usize);
+        let mut w = Self {
+            shell,
+            tiling,
+            header_crc,
+            data,
+            journal,
+            entries: plan.entries,
+            images_done: plan.images,
+            ledger: None,
+        };
+        // Re-anchor the journal with one fresh record describing the
+        // validated state (the old tail may have lagged the data).
+        w.commit_journal()?;
+        Ok(Resumed::Writer(Box::new(w)))
+    }
+
+    fn commit_journal(&mut self) -> Result<()> {
+        let rec = JournalRecord {
+            pages_done: self.entries.len() as u32,
+            images_done: self.images_done,
+            bytes_written: self.data.len(),
+            last_crc: self.entries.last().map(|e| e.crc).unwrap_or(self.header_crc),
+        };
+        self.journal
+            .append(&rec.to_bytes())
+            .context("append journal record")?;
+        self.journal.sync().context("sync journal")
+    }
+
+    /// Pages already durable (and journaled) on the data medium.
+    pub fn pages_done(&self) -> u32 {
+        self.entries.len() as u32
+    }
+
+    /// Images those pages code.
+    pub fn images_done(&self) -> u32 {
+        self.images_done
+    }
+
+    /// Durable data-medium length in bytes.
+    pub fn bytes_written(&self) -> u64 {
+        self.data.len()
+    }
+
+    /// True when every page has been encoded (only `finish` remains).
+    pub fn is_done(&self) -> bool {
+        self.pages_done() == self.shell.n_pages
+    }
+
+    /// The header shell this stream encodes under.
+    pub fn shell(&self) -> &Bbc4Container {
+        &self.shell
+    }
+
+    /// Attach a rate ledger: subsequent pages record per-image bit
+    /// accounting ([`Ledger`] entries survive a resume by construction —
+    /// a resumed writer's ledger covers exactly the pages it encodes, so
+    /// merging the interrupted and resumed ledgers reproduces the
+    /// uninterrupted encode's entries).
+    pub fn enable_ledger(&mut self) {
+        if self.ledger.is_none() {
+            self.ledger = Some(Ledger::new());
+        }
+    }
+
+    /// Take the accumulated ledger (entries for pages encoded by *this*
+    /// writer instance, in page order).
+    pub fn take_ledger(&mut self) -> Option<Ledger> {
+        self.ledger.take()
+    }
+
+    fn check_encode_inputs(&self, pixels: usize, cfg: &BbAnsConfig, n: usize) -> Result<()> {
+        if self.shell.pixels as usize != pixels {
+            bail!(
+                "stream holds {}-pixel images, model wants {pixels}",
+                self.shell.pixels
+            );
+        }
+        if &self.shell.cfg != cfg {
+            bail!("codec config does not match the stream header");
+        }
+        if n != self.shell.num_images as usize {
+            bail!(
+                "stream encodes {} images, caller supplied {n}",
+                self.shell.num_images
+            );
+        }
+        Ok(())
+    }
+
+    /// Frame the message as the next page, make it durable, then commit
+    /// its journal record (strictly in that order — the resume
+    /// invariant).
+    fn append_page(&mut self, message: AnsMessage) -> Result<()> {
+        let i = self.entries.len();
+        let r = &self.tiling[i];
+        let frame = PageFrame {
+            index: i as u32,
+            first_image: r.start as u32,
+            num_images: r.len() as u32,
+            payload: message.to_bytes(),
+        };
+        let offset = self.data.len();
+        let mut buf = Vec::with_capacity(frame.byte_len());
+        frame.write_to(&mut buf);
+        self.data
+            .append(&buf)
+            .with_context(|| format!("append page {i}"))?;
+        self.data.sync().with_context(|| format!("sync page {i}"))?;
+        self.entries.push(IndexEntry {
+            offset,
+            frame_len: buf.len() as u32,
+            first_image: frame.first_image,
+            num_images: frame.num_images,
+            crc: frame.crc(),
+        });
+        self.images_done += frame.num_images;
+        self.commit_journal()
+    }
+
+    /// Encode the next page with a single-layer codec. `images` is the
+    /// full dataset; the page's chunk is selected by the deterministic
+    /// tiling, and its chain is seeded exactly like the one-shot chunked
+    /// encoder's — bit-identity by construction. Returns `false` when
+    /// every page is already written.
+    pub fn encode_next_vae<B: Backend + ?Sized>(
+        &mut self,
+        codec: &VaeCodec<'_, B>,
+        images: &[Vec<u8>],
+    ) -> Result<bool> {
+        if self.is_done() {
+            return Ok(false);
+        }
+        if !matches!(self.shell.model, Bbc4Model::Vae { .. }) {
+            bail!("stream codes a hierarchical model; use encode_next_hier");
+        }
+        self.check_encode_inputs(codec.backend().meta().pixels, &codec.cfg, images.len())?;
+        let ci = self.entries.len();
+        let chunk = &images[self.tiling[ci].clone()];
+        let mut ans = Ans::new(chunk_seed(self.shell.cfg.clean_seed, ci));
+        let mut scratch = CodecScratch::new();
+        if self.ledger.is_some() {
+            scratch.ledger = Some(Box::default());
+        }
+        codec
+            .encode_dataset_into_scratch(&mut ans, chunk, &mut scratch)
+            .with_context(|| format!("page {ci}"))?;
+        if let Some(l) = &mut self.ledger {
+            l.merge(*scratch.ledger.take().expect("installed above"));
+        }
+        self.append_page(ans.into_message())?;
+        Ok(true)
+    }
+
+    /// [`Self::encode_next_vae`] for hierarchical chains.
+    pub fn encode_next_hier<B: HierBackend + ?Sized>(
+        &mut self,
+        codec: &HierCodec<'_, B>,
+        images: &[Vec<u8>],
+    ) -> Result<bool> {
+        if self.is_done() {
+            return Ok(false);
+        }
+        let Bbc4Model::Hier { schedule, .. } = &self.shell.model else {
+            bail!("stream codes a single-layer model; use encode_next_vae");
+        };
+        if *schedule != codec.schedule {
+            bail!(
+                "stream was started with the {} schedule, codec uses {}",
+                schedule.name(),
+                codec.schedule.name()
+            );
+        }
+        self.check_encode_inputs(codec.backend().meta().pixels, &codec.cfg, images.len())?;
+        let ci = self.entries.len();
+        let chunk = &images[self.tiling[ci].clone()];
+        let mut ans = Ans::new(chunk_seed(self.shell.cfg.clean_seed, ci));
+        let mut scratch = HierScratch::new();
+        if self.ledger.is_some() {
+            scratch.codec.ledger = Some(Box::default());
+        }
+        codec
+            .encode_dataset_into_scratch(&mut ans, chunk, &mut scratch)
+            .with_context(|| format!("page {ci}"))?;
+        if let Some(l) = &mut self.ledger {
+            l.merge(*scratch.codec.ledger.take().expect("installed above"));
+        }
+        self.append_page(ans.into_message())?;
+        Ok(true)
+    }
+
+    /// Atomically finalize: append the redundant trailer index in ONE
+    /// write and sync. The file becomes strict-valid at that instant;
+    /// the caller then retires the journal (file-backed: delete it).
+    pub fn finish(mut self) -> Result<(D, J)> {
+        if !self.is_done() {
+            bail!(
+                "stream has {} of {} pages; cannot finalize",
+                self.entries.len(),
+                self.shell.n_pages
+            );
+        }
+        self.data
+            .append(&trailer_bytes(&self.entries))
+            .context("append trailer index")?;
+        self.data.sync().context("sync trailer")?;
+        Ok((self.data, self.journal))
+    }
+}
+
+impl Bbc4StreamWriter<FileMedium, FileMedium> {
+    /// Start a fresh file-backed stream at `path`, with the progress
+    /// journal in the `<path>.journal` sidecar.
+    pub fn create(path: &Path, shell: Bbc4Container) -> Result<Self> {
+        let data =
+            FileMedium::create(path).with_context(|| format!("create {}", path.display()))?;
+        let jp = journal_path(path);
+        let journal =
+            FileMedium::create(&jp).with_context(|| format!("create {}", jp.display()))?;
+        Self::start(data, journal, shell)
+    }
+
+    /// Reopen an interrupted file-backed stream: scans `path`, validates
+    /// the last journal record against the page frames, truncates any
+    /// torn tail, and continues at the exact next image. If the file is
+    /// already complete the leftover journal is removed.
+    pub fn resume(path: &Path, shell: Bbc4Container) -> Result<Resumed<FileMedium, FileMedium>> {
+        let jp = journal_path(path);
+        let mut data =
+            FileMedium::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut journal =
+            FileMedium::open(&jp).with_context(|| format!("open {}", jp.display()))?;
+        let db = data
+            .read_all()
+            .with_context(|| format!("read {}", path.display()))?;
+        let jb = journal
+            .read_all()
+            .with_context(|| format!("read {}", jp.display()))?;
+        match Self::resume_media(data, journal, &db, &jb, shell)? {
+            Resumed::Complete => {
+                std::fs::remove_file(&jp)
+                    .with_context(|| format!("remove {}", jp.display()))?;
+                Ok(Resumed::Complete)
+            }
+            w => Ok(w),
+        }
+    }
+
+    /// [`Self::finish`] plus journal retirement: the sidecar is deleted
+    /// once the trailer is durable, marking the encode complete.
+    pub fn finish_file(self) -> Result<()> {
+        let (_data, journal) = self.finish()?;
+        journal.remove().context("remove journal sidecar")?;
+        Ok(())
+    }
+}
+
+/// Upper bound on the header bytes [`Bbc4StreamReader::open`] reads up
+/// front (real headers are well under 2 KiB).
+const MAX_HEADER_SCAN: usize = 1 << 16;
+
+/// Bounded-memory page reader: decodes a BBC4 file page-at-a-time from
+/// any `Read + Seek` without materializing the file. Requires the intact
+/// trailer index (it is the seek map); damaged files go through
+/// [`Bbc4Container::salvage`] instead.
+pub struct Bbc4StreamReader<R: Read + Seek> {
+    src: R,
+    shell: Bbc4Container,
+    entries: Vec<IndexEntry>,
+    header_len: usize,
+    trailer: Vec<u8>,
+    next: usize,
+}
+
+impl<R: Read + Seek> Bbc4StreamReader<R> {
+    /// Validate header, trailer index, and page layout (offsets, tiling,
+    /// contiguity) without reading any page payload.
+    pub fn open(mut src: R) -> Result<Self> {
+        let file_len = src.seek(SeekFrom::End(0)).context("seek to end")?;
+        let head_take = (file_len as usize).min(MAX_HEADER_SCAN);
+        src.rewind().context("rewind")?;
+        let mut head = vec![0u8; head_take];
+        src.read_exact(&mut head).context("read header")?;
+        let (shell, header_len) = Bbc4Container::parse_header(&head)?;
+        if file_len < TRAILER_FIXED as u64 {
+            bail!("BBC4 trailer index missing or damaged (file is {file_len} bytes)");
+        }
+        src.seek(SeekFrom::End(-4)).context("seek to trailer_len")?;
+        let mut lenb = [0u8; 4];
+        src.read_exact(&mut lenb).context("read trailer_len")?;
+        let trailer_len = u32::from_le_bytes(lenb) as u64;
+        if trailer_len < TRAILER_FIXED as u64 || trailer_len > file_len {
+            bail!(
+                "BBC4 trailer index missing or damaged \
+                 (trailer_len {trailer_len}, file {file_len} bytes)"
+            );
+        }
+        let trailer_start = file_len - trailer_len;
+        src.seek(SeekFrom::Start(trailer_start)).context("seek to trailer")?;
+        let mut trailer = vec![0u8; trailer_len as usize];
+        src.read_exact(&mut trailer).context("read trailer")?;
+        let entries = parse_trailer_block(&trailer)
+            .ok_or_else(|| anyhow!("BBC4 trailer index missing or damaged"))?;
+        if entries.len() != shell.n_pages as usize {
+            bail!(
+                "trailer index lists {} pages, header declares {}",
+                entries.len(),
+                shell.n_pages
+            );
+        }
+        let tiling = chunk_ranges(shell.num_images as usize, shell.n_pages as usize);
+        let mut pos = header_len as u64;
+        for (i, e) in entries.iter().enumerate() {
+            if e.offset != pos {
+                bail!(
+                    "trailer entry {i} puts its page at offset {}, but pages are \
+                     contiguous from {pos}",
+                    e.offset
+                );
+            }
+            let flen = e.frame_len as usize;
+            if !(format::FRAME_OVERHEAD..=format::MAX_BODY + format::FRAME_OVERHEAD)
+                .contains(&flen)
+            {
+                bail!("trailer entry {i} has implausible frame length {flen}");
+            }
+            let r = &tiling[i];
+            if e.first_image as usize != r.start || e.num_images as usize != r.len() {
+                bail!(
+                    "trailer entry {i} claims images [{}, +{}), expected [{}, +{})",
+                    e.first_image,
+                    e.num_images,
+                    r.start,
+                    r.len()
+                );
+            }
+            pos += e.frame_len as u64;
+        }
+        if pos != trailer_start {
+            bail!("pages end at {pos} but the trailer starts at {trailer_start}");
+        }
+        Ok(Self {
+            src,
+            shell,
+            entries,
+            header_len,
+            trailer,
+            next: 0,
+        })
+    }
+
+    /// The parsed header shell (no pages held — that is the point).
+    pub fn shell(&self) -> &Bbc4Container {
+        &self.shell
+    }
+
+    /// Total pages in the file.
+    pub fn n_pages(&self) -> u32 {
+        self.shell.n_pages
+    }
+
+    /// Header byte length.
+    pub fn header_len(&self) -> usize {
+        self.header_len
+    }
+
+    /// Raw header bytes (the wire-fetch server sends these verbatim).
+    pub fn header_raw(&mut self) -> Result<Vec<u8>> {
+        self.src.rewind().context("rewind to header")?;
+        let mut buf = vec![0u8; self.header_len];
+        self.src.read_exact(&mut buf).context("read header")?;
+        Ok(buf)
+    }
+
+    /// Raw trailer-index bytes.
+    pub fn trailer_raw(&self) -> &[u8] {
+        &self.trailer
+    }
+
+    fn frame_at(&mut self, i: usize) -> Result<(Vec<u8>, PageFrame)> {
+        let e = self
+            .entries
+            .get(i)
+            .ok_or_else(|| anyhow!("page {i} out of range"))?;
+        let (offset, len, crc) = (e.offset, e.frame_len as usize, e.crc);
+        self.src
+            .seek(SeekFrom::Start(offset))
+            .with_context(|| format!("seek to page {i}"))?;
+        let mut buf = vec![0u8; len];
+        self.src
+            .read_exact(&mut buf)
+            .with_context(|| format!("read page {i}"))?;
+        match format::read_frame(&buf, 0) {
+            FrameRead::Ok { frame, next }
+                if next == buf.len() && frame.index == i as u32 && frame.crc() == crc =>
+            {
+                Ok((buf, frame))
+            }
+            FrameRead::Ok { .. } => bail!("page {i} does not match its trailer index entry"),
+            FrameRead::NoMagic => bail!("page {i}: no frame magic at the indexed offset"),
+            FrameRead::Truncated { need, have } => {
+                bail!("page {i} truncated: frame needs {need} bytes, read {have}")
+            }
+            FrameRead::Damaged { detail } => bail!("page {i}: {detail}"),
+        }
+    }
+
+    /// Raw frame bytes for page `i` plus the CRC the trailer index (and
+    /// the wire protocol's per-page echo) records for it.
+    pub fn raw_frame(&mut self, i: usize) -> Result<(Vec<u8>, u32)> {
+        let crc = self.entries[..]
+            .get(i)
+            .map(|e| e.crc)
+            .ok_or_else(|| anyhow!("page {i} out of range"))?;
+        let (buf, _) = self.frame_at(i)?;
+        Ok((buf, crc))
+    }
+
+    /// Validated page `i` (admitted against the header tiling).
+    pub fn page(&mut self, i: usize) -> Result<Bbc4Page> {
+        let (_, frame) = self.frame_at(i)?;
+        self.shell
+            .admit_page(&frame)
+            .ok_or_else(|| anyhow!("page {i} fails admission against the header tiling"))
+    }
+
+    /// Sequential page cursor; `None` after the last page.
+    pub fn next_page(&mut self) -> Result<Option<Bbc4Page>> {
+        if self.next >= self.entries.len() {
+            return Ok(None);
+        }
+        let p = self.page(self.next)?;
+        self.next += 1;
+        Ok(Some(p))
+    }
+
+    /// Decode the next page's images with a single-layer codec. Returns
+    /// `(first_image, images)`; memory high-water is one page.
+    pub fn decode_next_vae<B: Backend + ?Sized>(
+        &mut self,
+        codec: &VaeCodec<'_, B>,
+    ) -> Result<Option<(u32, Vec<Vec<u8>>)>> {
+        if !matches!(self.shell.model, Bbc4Model::Vae { .. }) {
+            bail!("container codes a hierarchical model; decode it with a HierCodec");
+        }
+        self.shell
+            .validate_common(codec.backend().meta().pixels, &codec.cfg)?;
+        let Some(p) = self.next_page()? else {
+            return Ok(None);
+        };
+        let mut ans =
+            Ans::from_message(&p.message, chunk_seed(self.shell.cfg.clean_seed, p.index as usize));
+        let imgs = codec
+            .decode_dataset(&mut ans, p.num_images as usize)
+            .with_context(|| format!("page {}", p.index))?;
+        Ok(Some((p.first_image, imgs)))
+    }
+
+    /// [`Self::decode_next_vae`] for hierarchical pages.
+    pub fn decode_next_hier<B: HierBackend + ?Sized>(
+        &mut self,
+        codec: &HierCodec<'_, B>,
+    ) -> Result<Option<(u32, Vec<Vec<u8>>)>> {
+        let Bbc4Model::Hier { schedule, .. } = &self.shell.model else {
+            bail!("container codes a single-layer model; decode it with a VaeCodec");
+        };
+        if *schedule != codec.schedule {
+            bail!(
+                "container was coded with the {} schedule, codec uses {}",
+                schedule.name(),
+                codec.schedule.name()
+            );
+        }
+        self.shell
+            .validate_common(codec.backend().meta().pixels, &codec.cfg)?;
+        let Some(p) = self.next_page()? else {
+            return Ok(None);
+        };
+        let mut ans =
+            Ans::from_message(&p.message, chunk_seed(self.shell.cfg.clean_seed, p.index as usize));
+        let imgs = codec
+            .decode_dataset(&mut ans, p.num_images as usize)
+            .with_context(|| format!("page {}", p.index))?;
+        Ok(Some((p.first_image, imgs)))
+    }
 }
 
 #[cfg(test)]

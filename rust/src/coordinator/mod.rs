@@ -31,5 +31,5 @@ pub mod protocol;
 pub mod server;
 
 pub use batcher::{ModelService, ServiceHandle, ServiceParams, SharedBackend};
-pub use protocol::HierSpec;
-pub use server::{Client, RetryPolicy, Server};
+pub use protocol::{FetchedPage, HierSpec};
+pub use server::{Client, PageRange, PageStore, RetryPolicy, Server};

@@ -13,6 +13,7 @@
 //! | 0x07 | `HealthReq`        | —                                              |
 //! | 0x08 | `TraceReq`         | max traces u32                                 |
 //! | 0x09 | `MetricsReq`       | —                                              |
+//! | 0x0A | `FetchPagesReq`    | name len u8, name, from_page u32, max_pages u32 |
 //! | 0x11 | `CompressReq`+TTL  | ttl_ms u32, then the 0x01 payload              |
 //! | 0x12 | `DecompressReq`+TTL| ttl_ms u32, then the 0x02 payload              |
 //! | 0x15 | `CompressHierReq`+TTL | ttl_ms u32, then the 0x05 payload           |
@@ -28,6 +29,7 @@
 //! | 0x87 | `HealthResp`       | JSON text (liveness, quarantine, queue depth)  |
 //! | 0x88 | `TraceResp`        | JSON trace snapshot (see `obs::trace`)         |
 //! | 0x89 | `MetricsResp`      | Prometheus exposition text                     |
+//! | 0x8A | `FetchPagesResp`   | n_pages u32, from_page u32, count u32, header, trailer, page frames (see below) |
 //! | 0x7f | `Error`            | UTF-8 message                                  |
 //!
 //! The request type byte carries a **version-flag nibble**: `0x10` marks
@@ -72,6 +74,20 @@ pub struct HierSpec {
     pub seed: u64,
     /// Independent BB-ANS chains to split the images into.
     pub chunks: u32,
+}
+
+/// One BBC4 page frame as carried by [`Frame::FetchPagesResp`]: the raw
+/// frame bytes plus the server-side CRC echo from the trailer index, so
+/// the client can verify the bytes it received independently of the
+/// transport before splicing them into a partial local file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FetchedPage {
+    /// Page index in the container's sequence.
+    pub index: u32,
+    /// CRC-32 the server's trailer index records for this frame.
+    pub crc: u32,
+    /// The raw self-delimiting page frame bytes, verbatim.
+    pub bytes: Vec<u8>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -125,6 +141,29 @@ pub enum Frame {
     MetricsReq,
     /// Prometheus exposition text (`Metrics::to_prometheus`).
     MetricsResp { text: String },
+    /// Pull up to `max_pages` page frames of the published container
+    /// `name`, starting at `from_page` — the resumable transfer op: a
+    /// client that lost its connection re-requests from its last intact
+    /// page, so no page is ever sent twice. Answered by the connection
+    /// handler from the page store, never queued.
+    FetchPagesReq {
+        name: String,
+        from_page: u32,
+        max_pages: u32,
+        ttl_ms: Option<u32>,
+        trace_id: Option<u64>,
+    },
+    /// The requested page range with per-page CRC echo. `header` is
+    /// non-empty only when the range starts at page 0; `trailer` only
+    /// when it reaches the last page — so concatenating the responses of
+    /// a full fetch reproduces the container bytes exactly.
+    FetchPagesResp {
+        n_pages: u32,
+        from_page: u32,
+        header: Vec<u8>,
+        trailer: Vec<u8>,
+        pages: Vec<FetchedPage>,
+    },
     Error { message: String },
     Shutdown,
 }
@@ -261,6 +300,96 @@ fn parse_compress_hier_req(p: &[u8], ttl_ms: Option<u32>, trace_id: Option<u64>)
     })
 }
 
+/// Parse the v1 `FetchPagesReq` payload (shared by 0x0A and the flagged
+/// 0x1A/0x2A/0x3A).
+fn parse_fetch_pages_req(p: &[u8], ttl_ms: Option<u32>, trace_id: Option<u64>) -> Result<Frame> {
+    if p.is_empty() {
+        bail!("short FetchPagesReq");
+    }
+    let nlen = p[0] as usize;
+    if p.len() != 1 + nlen + 8 {
+        bail!("FetchPagesReq size mismatch");
+    }
+    let name = std::str::from_utf8(&p[1..1 + nlen])
+        .context("fetch name")?
+        .to_string();
+    let from_page = u32::from_le_bytes(p[1 + nlen..5 + nlen].try_into().unwrap());
+    let max_pages = u32::from_le_bytes(p[5 + nlen..9 + nlen].try_into().unwrap());
+    if max_pages == 0 {
+        bail!("FetchPagesReq max_pages must be nonzero");
+    }
+    Ok(Frame::FetchPagesReq {
+        name,
+        from_page,
+        max_pages,
+        ttl_ms,
+        trace_id,
+    })
+}
+
+/// Parse the `FetchPagesResp` payload. Every length field is validated
+/// against the remaining payload before slicing — a crafted response
+/// cannot demand allocations the frame does not actually carry.
+fn parse_fetch_pages_resp(p: &[u8]) -> Result<Frame> {
+    let mut at = 0usize;
+    let mut take_u32 = |what: &str| -> Result<u32> {
+        if p.len() - at < 4 {
+            bail!("short FetchPagesResp ({what})");
+        }
+        let v = u32::from_le_bytes(p[at..at + 4].try_into().unwrap());
+        at += 4;
+        Ok(v)
+    };
+    let n_pages = take_u32("n_pages")?;
+    let from_page = take_u32("from_page")?;
+    let count = take_u32("count")?;
+    let header_len = take_u32("header_len")? as usize;
+    let trailer_len = take_u32("trailer_len")? as usize;
+    if n_pages == 0 || n_pages > 1 << 20 {
+        bail!("FetchPagesResp implausible page count {n_pages}");
+    }
+    if count as u64 > n_pages as u64 - from_page.min(n_pages) as u64 {
+        bail!(
+            "FetchPagesResp count {count} overruns pages [{from_page}, {n_pages})"
+        );
+    }
+    let mut take = |n: usize, what: &str| -> Result<&[u8]> {
+        if p.len() - at < n {
+            bail!("short FetchPagesResp ({what})");
+        }
+        let s = &p[at..at + n];
+        at += n;
+        Ok(s)
+    };
+    let header = take(header_len, "header")?.to_vec();
+    let trailer = take(trailer_len, "trailer")?.to_vec();
+    let mut pages = Vec::with_capacity(count as usize);
+    for k in 0..count {
+        let fixed = take(12, "page entry")?;
+        let index = u32::from_le_bytes(fixed[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(fixed[4..8].try_into().unwrap());
+        let blen = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
+        let bytes = take(blen, "page bytes")?.to_vec();
+        if index != from_page + k {
+            bail!(
+                "FetchPagesResp page {k} claims index {index}, expected {}",
+                from_page + k
+            );
+        }
+        pages.push(FetchedPage { index, crc, bytes });
+    }
+    if at != p.len() {
+        bail!("FetchPagesResp has {} trailing bytes", p.len() - at);
+    }
+    Ok(Frame::FetchPagesResp {
+        n_pages,
+        from_page,
+        header,
+        trailer,
+        pages,
+    })
+}
+
 /// Version-flag nibble for a request type byte: `0x10` if a TTL rides
 /// along, `0x20` if a trace id does. Neither → the bare v1 byte.
 fn flag_nibble(ttl_ms: &Option<u32>, trace_id: &Option<u64>) -> u8 {
@@ -283,12 +412,14 @@ impl Frame {
             Frame::HealthReq => 0x07,
             Frame::TraceReq { .. } => 0x08,
             Frame::MetricsReq => 0x09,
+            Frame::FetchPagesReq { ttl_ms, trace_id, .. } => 0x0A | flag_nibble(ttl_ms, trace_id),
             Frame::CompressResp { .. } => 0x81,
             Frame::DecompressResp { .. } => 0x82,
             Frame::StatsResp { .. } => 0x83,
             Frame::HealthResp { .. } => 0x87,
             Frame::TraceResp { .. } => 0x88,
             Frame::MetricsResp { .. } => 0x89,
+            Frame::FetchPagesResp { .. } => 0x8A,
             Frame::Error { .. } => 0x7f,
         }
     }
@@ -369,6 +500,40 @@ impl Frame {
             }
             Frame::StatsReq | Frame::Shutdown | Frame::HealthReq | Frame::MetricsReq => {}
             Frame::TraceReq { max } => payload.extend_from_slice(&max.to_le_bytes()),
+            Frame::FetchPagesReq {
+                name,
+                from_page,
+                max_pages,
+                ttl_ms,
+                trace_id,
+            } => {
+                push_flags(&mut payload, ttl_ms, trace_id);
+                payload.push(name.len() as u8);
+                payload.extend_from_slice(name.as_bytes());
+                payload.extend_from_slice(&from_page.to_le_bytes());
+                payload.extend_from_slice(&max_pages.to_le_bytes());
+            }
+            Frame::FetchPagesResp {
+                n_pages,
+                from_page,
+                header,
+                trailer,
+                pages,
+            } => {
+                payload.extend_from_slice(&n_pages.to_le_bytes());
+                payload.extend_from_slice(&from_page.to_le_bytes());
+                payload.extend_from_slice(&(pages.len() as u32).to_le_bytes());
+                payload.extend_from_slice(&(header.len() as u32).to_le_bytes());
+                payload.extend_from_slice(&(trailer.len() as u32).to_le_bytes());
+                payload.extend_from_slice(header);
+                payload.extend_from_slice(trailer);
+                for pg in pages {
+                    payload.extend_from_slice(&pg.index.to_le_bytes());
+                    payload.extend_from_slice(&pg.crc.to_le_bytes());
+                    payload.extend_from_slice(&(pg.bytes.len() as u32).to_le_bytes());
+                    payload.extend_from_slice(&pg.bytes);
+                }
+            }
             Frame::StatsResp { json } => payload.extend_from_slice(json.as_bytes()),
             Frame::HealthResp { json } => payload.extend_from_slice(json.as_bytes()),
             Frame::TraceResp { json } => payload.extend_from_slice(json.as_bytes()),
@@ -411,6 +576,7 @@ impl Frame {
                 }
             }
             0x09 => Frame::MetricsReq,
+            0x0A => parse_fetch_pages_req(p, None, None)?,
             // The flagged request encodings: optional ttl_ms u32 and/or
             // trace_id u64, then the v1 payload, parsed by the same
             // validators.
@@ -429,6 +595,10 @@ impl Frame {
             0x15 | 0x25 | 0x35 => {
                 let (ttl, trace, rest) = split_flags(ty, p, "CompressHierReq")?;
                 parse_compress_hier_req(rest, ttl, trace)?
+            }
+            0x1A | 0x2A | 0x3A => {
+                let (ttl, trace, rest) = split_flags(ty, p, "FetchPagesReq")?;
+                parse_fetch_pages_req(rest, ttl, trace)?
             }
             0x81 => Frame::CompressResp {
                 container: p.to_vec(),
@@ -456,6 +626,7 @@ impl Frame {
             0x89 => Frame::MetricsResp {
                 text: String::from_utf8(p.to_vec()).context("metrics text")?,
             },
+            0x8A => parse_fetch_pages_resp(p)?,
             0x7f => Frame::Error {
                 message: String::from_utf8_lossy(p).to_string(),
             },
@@ -468,7 +639,8 @@ impl Frame {
         match self {
             Frame::CompressReq { ttl_ms, .. }
             | Frame::DecompressReq { ttl_ms, .. }
-            | Frame::CompressHierReq { ttl_ms, .. } => *ttl_ms,
+            | Frame::CompressHierReq { ttl_ms, .. }
+            | Frame::FetchPagesReq { ttl_ms, .. } => *ttl_ms,
             _ => None,
         }
     }
@@ -478,7 +650,8 @@ impl Frame {
         match self {
             Frame::CompressReq { trace_id, .. }
             | Frame::DecompressReq { trace_id, .. }
-            | Frame::CompressHierReq { trace_id, .. } => *trace_id,
+            | Frame::CompressHierReq { trace_id, .. }
+            | Frame::FetchPagesReq { trace_id, .. } => *trace_id,
             _ => None,
         }
     }
@@ -688,6 +861,112 @@ mod tests {
         // Truncated trace prefixes error cleanly on every flagged type.
         for ty in [0x21u8, 0x22, 0x25, 0x31, 0x32, 0x35] {
             assert!(Frame::parse(&[ty, 1, 2, 3]).is_err(), "ty={ty:#x}");
+        }
+    }
+
+    /// FetchPages ops round-trip, including the version-flagged request
+    /// encodings, and malformed responses error cleanly.
+    #[test]
+    fn fetch_pages_ops_roundtrip_and_validate() {
+        roundtrip(Frame::FetchPagesReq {
+            name: "dataset.bbc4".into(),
+            from_page: 3,
+            max_pages: 8,
+            ttl_ms: None,
+            trace_id: None,
+        });
+        roundtrip(Frame::FetchPagesReq {
+            name: "d".into(),
+            from_page: 0,
+            max_pages: 1,
+            ttl_ms: Some(250),
+            trace_id: Some(0xFE7C),
+        });
+        roundtrip(Frame::FetchPagesResp {
+            n_pages: 4,
+            from_page: 1,
+            header: vec![],
+            trailer: vec![9, 9],
+            pages: vec![
+                FetchedPage {
+                    index: 1,
+                    crc: 0xAABB,
+                    bytes: vec![1, 2, 3],
+                },
+                FetchedPage {
+                    index: 2,
+                    crc: 0xCCDD,
+                    bytes: vec![],
+                },
+            ],
+        });
+
+        // Plain request keeps the v1 type byte; flagged takes 0x3A.
+        let mut plain = Vec::new();
+        Frame::FetchPagesReq {
+            name: "x".into(),
+            from_page: 0,
+            max_pages: 2,
+            ttl_ms: None,
+            trace_id: None,
+        }
+        .write_to(&mut plain)
+        .unwrap();
+        assert_eq!(plain[4], 0x0A);
+        let mut flagged = Vec::new();
+        Frame::FetchPagesReq {
+            name: "x".into(),
+            from_page: 0,
+            max_pages: 2,
+            ttl_ms: Some(7),
+            trace_id: Some(8),
+        }
+        .write_to(&mut flagged)
+        .unwrap();
+        assert_eq!(flagged[4], 0x3A);
+        assert_eq!(&flagged[17..], &plain[5..], "flag prefixes then v1 payload");
+
+        // max_pages == 0 and short/oversized payloads are rejected.
+        assert!(Frame::parse(&raw_frame(0x0A, b"\x01x\x00\x00\x00\x00\x00\x00\x00\x00")[4..])
+            .is_err());
+        assert!(Frame::parse(&raw_frame(0x0A, &[])[4..]).is_err());
+
+        // A crafted response whose count overruns the page range, or
+        // whose length fields overrun the payload, errors without
+        // allocating.
+        let mut p = Vec::new();
+        p.extend_from_slice(&4u32.to_le_bytes()); // n_pages
+        p.extend_from_slice(&2u32.to_le_bytes()); // from_page
+        p.extend_from_slice(&3u32.to_le_bytes()); // count > 4 - 2
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        let err = Frame::parse(&raw_frame(0x8A, &p)[4..]).unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
+        let mut p = Vec::new();
+        p.extend_from_slice(&4u32.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // header_len lies
+        p.extend_from_slice(&0u32.to_le_bytes());
+        assert!(Frame::parse(&raw_frame(0x8A, &p)[4..]).is_err());
+
+        // Every truncation of a valid response errors cleanly.
+        let mut buf = Vec::new();
+        Frame::FetchPagesResp {
+            n_pages: 2,
+            from_page: 0,
+            header: vec![5, 6, 7],
+            trailer: vec![],
+            pages: vec![FetchedPage {
+                index: 0,
+                crc: 1,
+                bytes: vec![8, 9],
+            }],
+        }
+        .write_to(&mut buf)
+        .unwrap();
+        for cut in 5..buf.len() {
+            assert!(Frame::parse(&buf[4..cut]).is_err(), "cut={cut}");
         }
     }
 

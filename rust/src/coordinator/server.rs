@@ -37,7 +37,8 @@
 
 use std::io::{self, BufReader, BufWriter, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -46,12 +47,81 @@ use anyhow::{bail, Context, Result};
 
 use super::batcher::ServiceHandle;
 use super::metrics::Metrics;
-use super::protocol::{Frame, HierSpec, MAX_FRAME};
+use super::protocol::{FetchedPage, Frame, HierSpec, MAX_FRAME};
+use crate::bbans::bbc4::Bbc4StreamReader;
 use crate::util::rng::Rng;
 
 /// Poll granularity for connection reads: how long a blocked read waits
 /// before re-checking the stop flag.
 const READ_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// A directory of published BBC4 containers servable page-at-a-time over
+/// the wire ([`Frame::FetchPagesReq`]). Each fetch opens the file through
+/// the bounded-memory [`Bbc4StreamReader`], so serving a page never
+/// materializes the container; the per-page CRC echo comes from the
+/// file's own trailer index. The dispatch counter lets chaos tests prove
+/// a resumed transfer re-sends no page.
+pub struct PageStore {
+    dir: PathBuf,
+    pages_served: AtomicU64,
+}
+
+impl PageStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            pages_served: AtomicU64::new(0),
+        }
+    }
+
+    /// Total page frames dispatched over the wire since construction.
+    pub fn pages_served(&self) -> u64 {
+        self.pages_served.load(Ordering::SeqCst)
+    }
+
+    /// Answer one fetch: pages `[from_page, from_page + max_pages)`
+    /// clamped to the container, with the header riding along when the
+    /// range starts at page 0 and the trailer when it reaches the end.
+    fn fetch(&self, name: &str, from_page: u32, max_pages: u32) -> Result<Frame> {
+        // The name is an untrusted path component: no separators, no
+        // dotfiles, no parent traversal.
+        if name.is_empty() || name.contains(['/', '\\']) || name.starts_with('.') {
+            bail!("invalid container name {name:?}");
+        }
+        let path = self.dir.join(name);
+        let file = std::fs::File::open(&path).with_context(|| format!("open {}", path.display()))?;
+        let mut rdr = Bbc4StreamReader::open(BufReader::new(file))
+            .with_context(|| format!("{} is not a servable BBC4", path.display()))?;
+        let n_pages = rdr.n_pages();
+        if from_page >= n_pages {
+            bail!("from_page {from_page} out of range 0..{n_pages}");
+        }
+        let end = (from_page as u64 + max_pages as u64).min(n_pages as u64) as u32;
+        let header = if from_page == 0 {
+            rdr.header_raw()?
+        } else {
+            Vec::new()
+        };
+        let mut pages = Vec::with_capacity((end - from_page) as usize);
+        for i in from_page..end {
+            let (bytes, crc) = rdr.raw_frame(i as usize)?;
+            self.pages_served.fetch_add(1, Ordering::SeqCst);
+            pages.push(FetchedPage { index: i, crc, bytes });
+        }
+        let trailer = if end == n_pages {
+            rdr.trailer_raw().to_vec()
+        } else {
+            Vec::new()
+        };
+        Ok(Frame::FetchPagesResp {
+            n_pages,
+            from_page,
+            header,
+            trailer,
+            pages,
+        })
+    }
+}
 
 /// A running server (owns the acceptor and all connection threads).
 pub struct Server {
@@ -87,6 +157,19 @@ impl Server {
         service: ServiceHandle,
         metrics_bind: Option<&str>,
     ) -> Result<Server> {
+        Self::start_with_store(bind, service, metrics_bind, None)
+    }
+
+    /// [`Server::start_with_metrics`] plus an optional [`PageStore`]: with
+    /// one attached, the server answers [`Frame::FetchPagesReq`] from its
+    /// directory (handler-side, never queued — a wedged worker cannot
+    /// block a transfer resume).
+    pub fn start_with_store(
+        bind: &str,
+        service: ServiceHandle,
+        metrics_bind: Option<&str>,
+        store: Option<Arc<PageStore>>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -109,8 +192,9 @@ impl Server {
                             let svc = service.clone();
                             let conn_stop = stop2.clone();
                             let conn_drain = drain2.clone();
+                            let conn_store = store.clone();
                             let handle = std::thread::spawn(move || {
-                                let _ = handle_conn(stream, svc, conn_stop, conn_drain);
+                                let _ = handle_conn(stream, svc, conn_stop, conn_drain, conn_store);
                             });
                             let mut guard = conns2.lock().expect("conns lock");
                             // Reap finished handlers so the vec stays
@@ -352,6 +436,7 @@ fn handle_conn(
     svc: ServiceHandle,
     stop: Arc<AtomicBool>,
     drain: Arc<AtomicBool>,
+    store: Option<Arc<PageStore>>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     // Short read timeout: the handler polls the stop flag between reads,
@@ -438,6 +523,24 @@ fn handle_conn(
             },
             Frame::HealthReq => Frame::HealthResp {
                 json: svc.health_json(),
+            },
+            Frame::FetchPagesReq {
+                name,
+                from_page,
+                max_pages,
+                ..
+            } => match &store {
+                // Handler-served like health/trace: a transfer resume
+                // must work while the worker is wedged.
+                Some(ps) => match ps.fetch(&name, from_page, max_pages) {
+                    Ok(resp) => resp,
+                    Err(e) => Frame::Error {
+                        message: format!("{e:#}"),
+                    },
+                },
+                None => Frame::Error {
+                    message: "no page store configured".into(),
+                },
             },
             Frame::Shutdown => {
                 // Wire drain request: record it for the serve loop and
@@ -581,6 +684,24 @@ enum CallError {
     Fatal(anyhow::Error),
 }
 
+/// One verified page range pulled by [`Client::fetch_pages`]: the
+/// server's [`Frame::FetchPagesResp`] after every page frame passed the
+/// client-side CRC re-check against the per-page echo.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PageRange {
+    /// Total pages the remote container holds.
+    pub n_pages: u32,
+    /// First page in this range.
+    pub from_page: u32,
+    /// Raw header bytes (non-empty only when `from_page == 0`).
+    pub header: Vec<u8>,
+    /// Raw trailer-index bytes (non-empty only when the range reaches
+    /// the last page).
+    pub trailer: Vec<u8>,
+    /// Verified page frames, consecutive from `from_page`.
+    pub pages: Vec<FetchedPage>,
+}
+
 /// Blocking client for the framed protocol, with bounded retry and
 /// jittered exponential backoff for transient failures.
 pub struct Client {
@@ -590,6 +711,9 @@ pub struct Client {
     addrs: Vec<SocketAddr>,
     policy: RetryPolicy,
     rng: Rng,
+    /// Transport re-dials since connect (observability probes assert 0:
+    /// a probe must ride the connection of the request it follows).
+    reconnects: u64,
 }
 
 impl Client {
@@ -635,6 +759,7 @@ impl Client {
             addrs,
             policy,
             rng,
+            reconnects: 0,
         })
     }
 
@@ -644,7 +769,15 @@ impl Client {
         let stream = dial(&self.addrs, &self.policy)?;
         self.reader = BufReader::new(stream.try_clone()?);
         self.writer = BufWriter::new(stream);
+        self.reconnects += 1;
         Ok(())
+    }
+
+    /// How many times the transport was re-dialed since connect. Stays 0
+    /// while every exchange reuses the original connection — the property
+    /// the `--trace`/`--metrics` probe path asserts.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
     }
 
     /// One request/response exchange on the current connection.
@@ -863,6 +996,62 @@ impl Client {
             Frame::MetricsResp { text } => Ok(text),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Pull up to `max_pages` page frames of the published container
+    /// `name` starting at `from_page`, and verify every frame against
+    /// the server's per-page CRC echo before returning it. Rides the
+    /// normal retry loop, so a dropped connection re-dials and the caller
+    /// simply re-requests from its last intact page — the server never
+    /// re-sends pages before `from_page`.
+    pub fn fetch_pages(
+        &mut self,
+        name: &str,
+        from_page: u32,
+        max_pages: u32,
+    ) -> Result<PageRange> {
+        let resp = self.call(Frame::FetchPagesReq {
+            name: name.to_string(),
+            from_page,
+            max_pages,
+            ttl_ms: None,
+            trace_id: None,
+        })?;
+        let Frame::FetchPagesResp {
+            n_pages,
+            from_page: got_from,
+            header,
+            trailer,
+            pages,
+        } = resp
+        else {
+            anyhow::bail!("unexpected response {resp:?}");
+        };
+        if got_from != from_page {
+            anyhow::bail!("server answered from page {got_from}, asked for {from_page}");
+        }
+        for pg in &pages {
+            // Trust nothing about the transport: re-read the frame from
+            // its own bytes and hold it to the CRC echo.
+            match crate::format::read_frame(&pg.bytes, 0) {
+                crate::format::FrameRead::Ok { frame, next }
+                    if next == pg.bytes.len()
+                        && frame.index == pg.index
+                        && frame.crc() == pg.crc => {}
+                _ => anyhow::bail!(
+                    "page {} arrived corrupt (CRC echo mismatch); refetch from page {}",
+                    pg.index,
+                    pg.index
+                ),
+            }
+        }
+        Ok(PageRange {
+            n_pages,
+            from_page,
+            header,
+            trailer,
+            pages,
+        })
     }
 
     /// Ask the server to drain: it stops accepting new connections,

@@ -22,6 +22,8 @@
 
 use crate::util::crc32;
 
+pub mod stream;
+
 /// Leading bytes of every page frame. Deliberately non-ASCII so runs of
 /// text or zeros in headers/payloads cannot alias a frame start.
 pub const PAGE_MAGIC: [u8; 4] = [0xB4, 0x50, 0x47, 0x1A]; // ´PG␚

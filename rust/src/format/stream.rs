@@ -1,0 +1,336 @@
+//! Crash-consistent streaming primitives: durable append media and the
+//! progress journal that makes an interrupted page-stream encode
+//! resumable.
+//!
+//! The BBC4 streaming writer ([`crate::bbans::bbc4::Bbc4StreamWriter`])
+//! appends self-delimiting page frames to a **data medium** and, after
+//! every page becomes durable, commits one fixed-size CRC'd record to a
+//! sidecar **journal medium**. The ordering invariant the whole recovery
+//! story rests on:
+//!
+//! > a journal record is appended only after the bytes it describes have
+//! > been `sync`ed on the data medium.
+//!
+//! So after a power cut the journal can *lag* the data (the last page was
+//! durable but its record was not yet written, or the record itself is
+//! torn) but can never *lead* it — a journal claiming more pages than the
+//! data file holds is evidence of real data loss, not a normal crash.
+//! Resume therefore trusts a frame-by-frame scan of the data file as the
+//! source of truth and uses the journal as a cross-check.
+//!
+//! Journal record layout (little-endian, [`JOURNAL_RECORD_LEN`] bytes):
+//!
+//! ```text
+//! JOURNAL_MAGIC (4) | pages_done u32 | images_done u32
+//! bytes_written u64 | last_crc u32   | record_crc u32
+//! ```
+//!
+//! `bytes_written` is the durable data-file length the record vouches
+//! for; `last_crc` is the CRC-32 of the most recently appended page frame
+//! (or of the header when `pages_done == 0`); `record_crc` covers the 24
+//! bytes before it. Records are append-only; a torn tail is tolerated by
+//! taking the longest prefix of CRC-valid records.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::crc32;
+
+/// Leading bytes of every journal record (non-ASCII, like the page and
+/// index magics, so text or zero runs cannot alias a record start).
+pub const JOURNAL_MAGIC: [u8; 4] = [0xB4, 0x4A, 0x52, 0x1A]; // ´JR␚
+
+/// Serialized size of one journal record.
+pub const JOURNAL_RECORD_LEN: usize = 28;
+
+/// One durable progress commit: the state of the data file after a page
+/// (or the header, for `pages_done == 0`) was synced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JournalRecord {
+    /// Pages fully durable on the data medium.
+    pub pages_done: u32,
+    /// Images those pages code.
+    pub images_done: u32,
+    /// Durable data-file length in bytes.
+    pub bytes_written: u64,
+    /// CRC-32 of the last appended page frame (header CRC-32 when no
+    /// page has been written yet).
+    pub last_crc: u32,
+}
+
+impl JournalRecord {
+    /// Serialize to the fixed on-disk layout.
+    pub fn to_bytes(&self) -> [u8; JOURNAL_RECORD_LEN] {
+        let mut out = [0u8; JOURNAL_RECORD_LEN];
+        out[..4].copy_from_slice(&JOURNAL_MAGIC);
+        out[4..8].copy_from_slice(&self.pages_done.to_le_bytes());
+        out[8..12].copy_from_slice(&self.images_done.to_le_bytes());
+        out[12..20].copy_from_slice(&self.bytes_written.to_le_bytes());
+        out[20..24].copy_from_slice(&self.last_crc.to_le_bytes());
+        let crc = crc32::hash(&out[..24]);
+        out[24..].copy_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse one record; `None` on short input, bad magic, or CRC
+    /// mismatch (a torn or corrupted record).
+    pub fn from_bytes(b: &[u8]) -> Option<Self> {
+        if b.len() < JOURNAL_RECORD_LEN || b[..4] != JOURNAL_MAGIC {
+            return None;
+        }
+        let stored = u32::from_le_bytes(b[24..28].try_into().unwrap());
+        if crc32::hash(&b[..24]) != stored {
+            return None;
+        }
+        Some(Self {
+            pages_done: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            images_done: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+            bytes_written: u64::from_le_bytes(b[12..20].try_into().unwrap()),
+            last_crc: u32::from_le_bytes(b[20..24].try_into().unwrap()),
+        })
+    }
+}
+
+/// Longest valid prefix of an append-only journal: returns the byte
+/// length of the intact records and the last one. A torn or corrupted
+/// tail (partial final record after a cut) is simply not counted.
+pub fn journal_prefix(journal: &[u8]) -> (usize, Option<JournalRecord>) {
+    let mut at = 0usize;
+    let mut last = None;
+    while let Some(rec) = JournalRecord::from_bytes(&journal[at..]) {
+        last = Some(rec);
+        at += JOURNAL_RECORD_LEN;
+    }
+    (at, last)
+}
+
+/// Durable append-only byte sink with truncation — the storage target a
+/// streaming writer commits pages and journal records to. `sync` must
+/// make every previously appended byte durable before it returns; the
+/// in-memory test media treat it as a no-op.
+pub trait StreamMedium {
+    /// Append `bytes` at the current end.
+    fn append(&mut self, bytes: &[u8]) -> std::io::Result<()>;
+    /// Make all appended bytes durable (fsync for file-backed media).
+    fn sync(&mut self) -> std::io::Result<()>;
+    /// Discard everything past `len` bytes (torn-tail removal on resume).
+    fn truncate(&mut self, len: u64) -> std::io::Result<()>;
+    /// Current length in bytes.
+    fn len(&self) -> u64;
+    /// True when no byte has been written (or all were truncated away).
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// File-backed medium: appends via a writer positioned at the end,
+/// `sync` is `File::sync_data`, truncation is `File::set_len`.
+#[derive(Debug)]
+pub struct FileMedium {
+    file: File,
+    path: PathBuf,
+    len: u64,
+}
+
+impl FileMedium {
+    /// Create (or truncate) the file at `path`.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            len: 0,
+        })
+    }
+
+    /// Open an existing (or new) file for resumed appends; the caller is
+    /// expected to `truncate` to the validated length before appending.
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        let file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Self {
+            file,
+            path: path.to_path_buf(),
+            len,
+        })
+    }
+
+    /// The path this medium writes to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Consume the medium and delete its file (journal finalization).
+    pub fn remove(self) -> std::io::Result<()> {
+        drop(self.file);
+        std::fs::remove_file(&self.path)
+    }
+
+    /// Read the entire current contents (resume-time validation).
+    pub fn read_all(&mut self) -> std::io::Result<Vec<u8>> {
+        self.file.rewind()?;
+        let mut buf = Vec::with_capacity(self.len as usize);
+        self.file.read_to_end(&mut buf)?;
+        self.file.seek(SeekFrom::End(0))?;
+        Ok(buf)
+    }
+}
+
+impl StreamMedium for FileMedium {
+    fn append(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.file.seek(SeekFrom::Start(self.len))?;
+        self.file.write_all(bytes)?;
+        self.len += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.file.sync_data()
+    }
+
+    fn truncate(&mut self, len: u64) -> std::io::Result<()> {
+        self.file.set_len(len)?;
+        self.file.seek(SeekFrom::Start(len))?;
+        self.len = len;
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+}
+
+/// In-memory medium for tests and for building wire payloads; `sync` is
+/// a no-op (a `Vec` is as durable as it gets).
+#[derive(Debug, Default, Clone)]
+pub struct VecMedium {
+    pub buf: Vec<u8>,
+}
+
+impl VecMedium {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from existing bytes (resume over a recovered prefix).
+    pub fn from_bytes(buf: Vec<u8>) -> Self {
+        Self { buf }
+    }
+}
+
+impl StreamMedium for VecMedium {
+    fn append(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.buf.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+
+    fn truncate(&mut self, len: u64) -> std::io::Result<()> {
+        self.buf.truncate(len as usize);
+        Ok(())
+    }
+
+    fn len(&self) -> u64 {
+        self.buf.len() as u64
+    }
+}
+
+/// Sidecar journal path for a streamed data file: `<path>.journal`.
+pub fn journal_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".journal");
+    PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pages: u32) -> JournalRecord {
+        JournalRecord {
+            pages_done: pages,
+            images_done: pages * 3,
+            bytes_written: 100 + pages as u64 * 57,
+            last_crc: 0xDEAD_0000 | pages,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let r = rec(5);
+        let b = r.to_bytes();
+        assert_eq!(b.len(), JOURNAL_RECORD_LEN);
+        assert_eq!(JournalRecord::from_bytes(&b), Some(r));
+    }
+
+    #[test]
+    fn every_flipped_bit_is_rejected() {
+        let b = rec(2).to_bytes();
+        for byte in 0..b.len() {
+            for bit in 0..8 {
+                let mut bad = b;
+                bad[byte] ^= 1 << bit;
+                assert_eq!(
+                    JournalRecord::from_bytes(&bad),
+                    None,
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn journal_prefix_tolerates_torn_tail() {
+        let mut j = Vec::new();
+        for p in 0..4 {
+            j.extend_from_slice(&rec(p).to_bytes());
+        }
+        // Cut at every byte: the prefix is always the intact records.
+        for cut in 0..=j.len() {
+            let (keep, last) = journal_prefix(&j[..cut]);
+            let whole = cut / JOURNAL_RECORD_LEN;
+            assert_eq!(keep, whole * JOURNAL_RECORD_LEN, "cut {cut}");
+            assert_eq!(last, whole.checked_sub(1).map(|p| rec(p as u32)), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn journal_prefix_stops_at_corruption() {
+        let mut j = Vec::new();
+        for p in 0..3 {
+            j.extend_from_slice(&rec(p).to_bytes());
+        }
+        j[JOURNAL_RECORD_LEN + 5] ^= 0xFF; // corrupt record 1
+        let (keep, last) = journal_prefix(&j);
+        assert_eq!(keep, JOURNAL_RECORD_LEN);
+        assert_eq!(last, Some(rec(0)));
+    }
+
+    #[test]
+    fn vec_medium_append_truncate() {
+        let mut m = VecMedium::new();
+        m.append(b"hello").unwrap();
+        m.append(b" world").unwrap();
+        assert_eq!(m.len(), 11);
+        m.truncate(5).unwrap();
+        assert_eq!(m.buf, b"hello");
+        m.sync().unwrap();
+    }
+
+    #[test]
+    fn journal_path_appends_suffix() {
+        assert_eq!(
+            journal_path(Path::new("/tmp/x.bbc4")),
+            PathBuf::from("/tmp/x.bbc4.journal")
+        );
+    }
+}

@@ -3,14 +3,15 @@
 //! Subcommands:
 //!   info       [-i FILE]         artifact/model info, or container inspection
 //!   compress   -m MODEL -i IDX -o FILE [-n N] [-v] [--native] [--latent-bits B]
-//!              [--format bbc4]
+//!              [--format bbc4] [--resume]
 //!   decompress -i FILE -o IDX [--native] [--salvage]
 //!   verify     -i FILE           integrity-check a container without decoding
 //!   serve      [--bind ADDR] [--native] [--max-jobs J] [--max-batch-delay-ms D]
 //!              [--queue-cap Q] [--fanout-workers W] [--request-ttl-ms T]
 //!              [--quarantine-after K] [--drain-timeout-ms D]
-//!              [--metrics-addr ADDR] [--no-trace]
+//!              [--metrics-addr ADDR] [--no-trace] [--serve-dir DIR]
 //!   client     --addr ADDR --stats|--health|--metrics|--trace|--drain [--pretty]
+//!   fetch      --addr ADDR --name NAME -o FILE [--max-pages N]
 //!
 //! Arg parsing is hand-rolled (clap is unavailable offline).
 
@@ -19,14 +20,15 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use bbans::bbans::bbc4::{Bbc4Container, Bbc4Model, MAGIC_BBC4};
+use bbans::bbans::bbc4::{Bbc4Container, Bbc4Model, Bbc4StreamWriter, Resumed, MAGIC_BBC4};
 use bbans::bbans::container::{
     Container, HierContainer, ParallelContainer, MAGIC, MAGIC_HIER, MAGIC_PARALLEL,
 };
 use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
-use bbans::coordinator::{Client, ModelService, Server, ServiceParams};
+use bbans::coordinator::{Client, ModelService, PageStore, Server, ServiceParams};
 use bbans::data;
+use bbans::format::stream::FileMedium;
 use bbans::model::hierarchy::{HierMeta, HierVae};
 use bbans::model::vae::load_native;
 use bbans::model::{Backend, Likelihood};
@@ -97,28 +99,30 @@ fn is_switch(name: &str) -> bool {
             | "metrics"
             | "verbose"
             | "no-trace"
+            | "resume"
     )
 }
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bbans <info|compress|decompress|verify|serve|client> [args]\n\
+        "usage: bbans <info|compress|decompress|verify|serve|client|fetch> [args]\n\
          \n\
          bbans info       [-i FILE]\n\
          bbans compress   -m bin|full -i images.idx -o out.bbc [-n N] [-v] [--native]\n\
-                          [--chunks K] [--format bbc4]\n\
+                          [--chunks K] [--format bbc4] [--resume]\n\
          bbans compress   --layers L -i images.idx -o out.bbc [--schedule naive|bitswap]\n\
                           [--hier-dims 32,16,8] [--hier-hidden H] [--hier-seed S]\n\
-                          [--binarized] [--chunks K] [--format bbc4] [-v]\n\
+                          [--binarized] [--chunks K] [--format bbc4] [--resume] [-v]\n\
          bbans decompress -i in.bbc -o out.idx [--native] [--salvage]\n\
          bbans verify     -i in.bbc\n\
          bbans serve      [--bind 127.0.0.1:7878] [--native] [--max-jobs 16]\n\
                           [--max-batch-delay-ms 2] [--queue-cap 256] [--fanout-workers W]\n\
                           [--request-ttl-ms T] [--quarantine-after 3]\n\
                           [--drain-timeout-ms 30000] [--metrics-addr 127.0.0.1:9102]\n\
-                          [--no-trace]\n\
+                          [--no-trace] [--serve-dir DIR]\n\
          bbans client     --addr HOST:PORT --stats|--health|--metrics|--drain [--pretty]\n\
          bbans client     --addr HOST:PORT --trace [--trace-max N] [--pretty]\n\
+         bbans fetch      --addr HOST:PORT --name out.bbc4 -o local.bbc4 [--max-pages N]\n\
          \n\
          -v prints the bits-back rate ledger: measured bits/dim decomposed\n\
          into data, per-layer latent, and chain-startup (initial bits)\n\
@@ -136,6 +140,12 @@ fn usage() -> ! {
          --format bbc4 wraps each chain in a CRC-framed page with a redundant\n\
          trailer index; `verify` checks integrity without decoding and\n\
          `decompress --salvage` recovers every intact page after damage.\n\
+         --format bbc4 --resume streams pages to disk with a crash journal\n\
+         (out + out.journal): rerun the identical command after a power cut\n\
+         and it continues at the exact next page.\n\
+         serve --serve-dir DIR additionally serves BBC4 files in DIR to\n\
+         `bbans fetch`, which pulls page ranges with per-page CRC echo and\n\
+         restarts a dropped transfer at the last intact local page.\n\
          \n\
          Artifacts default to ./artifacts ($BBANS_ARTIFACTS overrides)."
     );
@@ -156,6 +166,7 @@ fn main() {
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "fetch" => cmd_fetch(&args),
         _ => usage(),
     };
     if let Err(e) = result {
@@ -222,6 +233,29 @@ fn bbans_config(args: &Args) -> BbAnsConfig {
     cfg
 }
 
+/// Atomic output write: stage the bytes in a temp file **in the target
+/// directory** (same filesystem, so the rename cannot cross devices) and
+/// rename over the destination only on success. A crashed or failed run
+/// never leaves a truncated half-container at the output path.
+fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let base = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("out");
+    let tmp = dir.join(format!(".{base}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()));
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     if let Some(input) = args.flags.get("input") {
         return container_info(&PathBuf::from(input));
@@ -257,7 +291,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// `info -i FILE`: report a container's format and what integrity signal
 /// it carries (none, or per-page CRC with a salvageable index).
 fn container_info(input: &std::path::Path) -> Result<()> {
-    let bytes = std::fs::read(input)?;
+    let bytes =
+        std::fs::read(input).with_context(|| format!("read {}", input.display()))?;
     let magic: &[u8] = if bytes.len() >= 4 { &bytes[0..4] } else { &[] };
     println!("file      : {}", input.display());
     println!("size      : {} bytes", bytes.len());
@@ -331,7 +366,8 @@ fn container_info(input: &std::path::Path) -> Result<()> {
 /// only be structurally parsed — they carry no integrity data.
 fn cmd_verify(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
-    let bytes = std::fs::read(&input)?;
+    let bytes =
+        std::fs::read(&input).with_context(|| format!("read {}", input.display()))?;
     let magic: &[u8] = if bytes.len() >= 4 { &bytes[0..4] } else { &[] };
     if magic == MAGIC_BBC4 {
         let s = Bbc4Container::salvage(&bytes)?;
@@ -382,7 +418,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i IDX")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o FILE")?);
-    let ds = data::load_idx_images(&input)?;
+    let ds = data::load_idx_images(&input)
+        .with_context(|| format!("read {}", input.display()))?;
     let n = args
         .flags
         .get("count")
@@ -414,6 +451,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
              drop one of the two flags"
         );
     }
+    if args.switches.contains("resume") && !bbc4 {
+        bail!("--resume requires --format bbc4 (the only journaled, streamable container)");
+    }
 
     if args.flags.contains_key("layers") {
         return cmd_compress_hier(args, images, rows * cols, raw_bytes, chunks, bbc4, &output);
@@ -427,11 +467,21 @@ fn cmd_compress(args: &Args) -> Result<()> {
         // backend like the BBC2 path (pages are coded on threads).
         let backend = load_native(default_artifact_dir(), &model)?;
         let codec = VaeCodec::new(&backend, bbans_config(args))?;
+        if args.switches.contains("resume") {
+            let shell = Bbc4Container::new_shell(
+                Bbc4Model::for_vae(&codec),
+                codec.cfg,
+                backend.meta().pixels as u32,
+                images.len() as u32,
+                chunks as u32,
+            )?;
+            return stream_compress_bbc4(&output, shell, |w| w.encode_next_vae(&codec, &images));
+        }
         let t = std::time::Instant::now();
         let container = Bbc4Container::encode_vae(&codec, &images, chunks)?;
         let dt = t.elapsed();
         let bytes = container.to_bytes();
-        std::fs::write(&output, &bytes)?;
+        write_atomic(&output, &bytes)?;
         let n_images = container.num_images;
         let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
         println!(
@@ -459,7 +509,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         };
         let dt = t.elapsed();
         let bytes = container.to_bytes();
-        std::fs::write(&output, &bytes)?;
+        write_atomic(&output, &bytes)?;
         let n_images = container.num_images();
         let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
         println!(
@@ -495,7 +545,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
             message: ans.into_message(),
         };
         let bytes = container.to_bytes();
-        std::fs::write(&output, &bytes)?;
+        write_atomic(&output, &bytes)?;
         println!(
             "compressed {} images: {raw_bytes} -> {} bytes ({:.4} bits/dim) in {:.2}s \
              ({:.1} img/s)",
@@ -514,7 +564,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let t = std::time::Instant::now();
     let container = h.compress(&model, images)?;
     let dt = t.elapsed();
-    std::fs::write(&output, &container)?;
+    write_atomic(&output, &container)?;
     let parsed = Container::from_bytes(&container)?;
     println!(
         "compressed {} images: {} -> {} bytes ({:.4} bits/dim) in {:.2}s ({:.1} img/s)",
@@ -619,11 +669,21 @@ fn cmd_compress_hier(
     let backend = HierVae::random(meta, seed);
     let codec = HierCodec::new(&backend, bbans_config(args), schedule)?;
     if bbc4 {
+        if args.switches.contains("resume") {
+            let shell = Bbc4Container::new_shell(
+                Bbc4Model::for_hier(&codec),
+                codec.cfg,
+                pixels as u32,
+                images.len() as u32,
+                chunks as u32,
+            )?;
+            return stream_compress_bbc4(output, shell, |w| w.encode_next_hier(&codec, &images));
+        }
         let t = std::time::Instant::now();
         let container = Bbc4Container::encode_hier(&codec, &images, chunks)?;
         let dt = t.elapsed();
         let bytes = container.to_bytes();
-        std::fs::write(output, &bytes)?;
+        write_atomic(output, &bytes)?;
         let n_images = container.num_images;
         let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
         println!(
@@ -647,7 +707,7 @@ fn cmd_compress_hier(
     };
     let dt = t.elapsed();
     let bytes = container.to_bytes();
-    std::fs::write(output, &bytes)?;
+    write_atomic(output, &bytes)?;
     let n_images = container.num_images();
     let bpd = bytes.len() as f64 * 8.0 / (n_images as f64 * container.pixels as f64);
     println!(
@@ -667,10 +727,169 @@ fn cmd_compress_hier(
     Ok(())
 }
 
+/// `compress --format bbc4 --resume`: crash-consistent streaming encode.
+/// The writer appends one durable CRC-framed page at a time to `output`
+/// and journals progress in `output.journal`; rerunning the identical
+/// command after an interruption validates the journal against the file,
+/// truncates any torn tail, and continues at the exact next page. The
+/// uninterrupted result is byte-identical to the one-shot `--format bbc4`
+/// encode.
+fn stream_compress_bbc4(
+    output: &std::path::Path,
+    shell: Bbc4Container,
+    mut encode_next: impl FnMut(&mut Bbc4StreamWriter<FileMedium, FileMedium>) -> Result<bool>,
+) -> Result<()> {
+    let n_pages = shell.n_pages;
+    let n_images = shell.num_images;
+    let t = std::time::Instant::now();
+    let mut w = match Bbc4StreamWriter::resume(output, shell)? {
+        Resumed::Complete => {
+            println!(
+                "{} is already a complete BBC4 container; nothing to resume",
+                output.display()
+            );
+            return Ok(());
+        }
+        Resumed::Writer(w) => *w,
+    };
+    let skipped = w.pages_done();
+    if skipped > 0 {
+        println!(
+            "resuming at page {skipped} of {n_pages} ({} images already durable, {} bytes kept)",
+            w.images_done(),
+            w.bytes_written()
+        );
+    }
+    let mut encoded = 0u32;
+    while encode_next(&mut w)? {
+        encoded += 1;
+    }
+    w.finish_file()?;
+    let dt = t.elapsed();
+    let bytes = std::fs::metadata(output)
+        .with_context(|| format!("stat {}", output.display()))?
+        .len();
+    println!(
+        "streamed {n_images} images into {n_pages} journaled pages (BBC4): {bytes} bytes \
+         ({encoded} page(s) encoded this run, {skipped} resumed) in {:.2}s -> {}",
+        dt.as_secs_f64(),
+        output.display()
+    );
+    Ok(())
+}
+
+/// `fetch --addr A --name NAME -o FILE`: pull a BBC4 container from a
+/// serving peer page-range-by-page-range. The local file is persisted
+/// after every range, so a dropped transfer rerun with the same command
+/// restarts at the first page missing locally — already-intact pages are
+/// never re-sent.
+fn cmd_fetch(args: &Args) -> Result<()> {
+    let addr = args.flags.get("addr").context("need --addr HOST:PORT")?;
+    let name = args
+        .flags
+        .get("name")
+        .context("need --name NAME (container file name in the server's --serve-dir)")?;
+    let output = PathBuf::from(args.flags.get("output").context("need -o FILE")?);
+    let batch: u32 = args
+        .flags
+        .get("max-pages")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|_| anyhow!("invalid --max-pages value"))?
+        .unwrap_or(4);
+    if batch == 0 {
+        bail!("--max-pages must be nonzero");
+    }
+
+    // Resume: keep the longest valid page prefix already on disk and
+    // restart the transfer at the first missing page.
+    let mut have = match std::fs::read(&output) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e).with_context(|| format!("read {}", output.display())),
+    };
+    let mut from = 0u32;
+    if !have.is_empty() {
+        let (shell, prefix) = Bbc4Container::scan_prefix(&have).with_context(|| {
+            format!(
+                "{} exists but is not a resumable BBC4 prefix (use a fresh -o path)",
+                output.display()
+            )
+        })?;
+        if prefix.complete {
+            println!("{} is already complete; nothing to fetch", output.display());
+            return Ok(());
+        }
+        have.truncate(prefix.keep);
+        from = prefix.pages;
+        if from > 0 {
+            println!(
+                "resuming fetch at page {from} of {} ({} intact bytes kept)",
+                shell.n_pages,
+                have.len()
+            );
+        }
+    }
+
+    let t = std::time::Instant::now();
+    let mut client = Client::connect(addr.as_str())?;
+    let mut fetched = 0u32;
+    loop {
+        // All pages present but the trailer missing: refetch only the
+        // final range and keep just its trailer bytes.
+        let trailer_only = from > 0 && {
+            let (shell, _) = Bbc4Container::scan_prefix(&have)?;
+            from == shell.n_pages
+        };
+        let req_from = if trailer_only { from - 1 } else { from };
+        let range = client.fetch_pages(name, req_from, batch)?;
+        if range.pages.is_empty() {
+            bail!("server returned an empty page range at page {req_from}");
+        }
+        if from == 0 {
+            have.extend_from_slice(&range.header);
+        }
+        if !trailer_only {
+            for pg in &range.pages {
+                have.extend_from_slice(&pg.bytes);
+                fetched += 1;
+            }
+            from += range.pages.len() as u32;
+        }
+        if from >= range.n_pages {
+            have.extend_from_slice(&range.trailer);
+            write_atomic(&output, &have)?;
+            let (shell, prefix) = Bbc4Container::scan_prefix(&have)?;
+            if !prefix.complete {
+                bail!(
+                    "assembled file failed strict validation ({} of {} pages intact); \
+                     rerun fetch to retry",
+                    prefix.pages,
+                    shell.n_pages
+                );
+            }
+            println!(
+                "fetched {fetched} page(s) of '{name}' ({} pages, {} images total): \
+                 {} bytes in {:.2}s -> {}",
+                shell.n_pages,
+                shell.num_images,
+                have.len(),
+                t.elapsed().as_secs_f64(),
+                output.display()
+            );
+            return Ok(());
+        }
+        // Persist progress after every range so an interrupted transfer
+        // resumes here instead of from page 0.
+        write_atomic(&output, &have)?;
+    }
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.flags.get("input").context("need -i FILE")?);
     let output = PathBuf::from(args.flags.get("output").context("need -o IDX")?);
-    let container = std::fs::read(&input)?;
+    let container =
+        std::fs::read(&input).with_context(|| format!("read {}", input.display()))?;
 
     let is_bbc4 = container.len() >= 4 && &container[0..4] == MAGIC_BBC4;
     if args.switches.contains("salvage") && !is_bbc4 {
@@ -816,7 +1035,7 @@ fn write_square_idx(images: Vec<Vec<u8>>, output: &std::path::Path) -> Result<us
         cols: side,
         images,
     };
-    std::fs::write(output, data::write_idx_images(&ds))?;
+    write_atomic(output, &data::write_idx_images(&ds))?;
     Ok(n)
 }
 
@@ -833,14 +1052,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !args.switches.contains("no-trace") {
         bbans::obs::tracer().set_enabled(true);
     }
-    let server = Server::start_with_metrics(
+    let store = args
+        .flags
+        .get("serve-dir")
+        .map(|d| std::sync::Arc::new(PageStore::new(d.clone())));
+    let server = Server::start_with_store(
         &bind,
         svc.handle(),
         args.flags.get("metrics-addr").map(String::as_str),
+        store,
     )?;
     println!("bbans serving on {}", server.addr);
     if let Some(ma) = server.metrics_addr {
         println!("metrics exposition on http://{ma}/ (Prometheus text 0.0.4)");
+    }
+    if let Some(dir) = args.flags.get("serve-dir") {
+        println!("serving BBC4 page ranges from {dir} (`bbans fetch --name FILE`)");
     }
     if args.switches.contains("native") {
         // The native service fans lock-step phases over a Sync-backend
@@ -879,15 +1106,19 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.flags.get("addr").context("need --addr HOST:PORT")?;
     let mut client = Client::connect(addr.as_str())?;
     let pretty = args.switches.contains("pretty");
+    // Every requested probe runs over this ONE connection, in a fixed
+    // order. Combining probes (e.g. `--trace --metrics`) used to stop at
+    // the first match; now a request and its snapshot probes share a
+    // connection, so the probes observe the same server the request hit
+    // instead of a fresh dial's view.
+    let mut ran = false;
     if args.switches.contains("stats") {
-        return print_json_doc(&client.stats()?, pretty);
+        print_json_doc(&client.stats()?, pretty)?;
+        ran = true;
     }
     if args.switches.contains("health") {
-        return print_json_doc(&client.health()?, pretty);
-    }
-    if args.switches.contains("metrics") {
-        print!("{}", client.metrics_text()?);
-        return Ok(());
+        print_json_doc(&client.health()?, pretty)?;
+        ran = true;
     }
     if args.switches.contains("trace") {
         let max: u32 = args
@@ -897,17 +1128,25 @@ fn cmd_client(args: &Args) -> Result<()> {
             .transpose()
             .map_err(|_| anyhow!("invalid --trace-max value"))?
             .unwrap_or(8);
-        return print_json_doc(&client.trace(max)?, pretty);
+        print_json_doc(&client.trace(max)?, pretty)?;
+        ran = true;
+    }
+    if args.switches.contains("metrics") {
+        print!("{}", client.metrics_text()?);
+        ran = true;
     }
     if args.switches.contains("drain") {
         client.shutdown_server()?;
         println!("drain requested");
-        return Ok(());
+        ran = true;
     }
-    bail!(
-        "client supports --stats, --health, --metrics, --trace, and --drain; \
-         use the library or examples for data transfer"
-    )
+    if !ran {
+        bail!(
+            "client supports --stats, --health, --metrics, --trace, and --drain; \
+             use the library or examples for data transfer"
+        );
+    }
+    Ok(())
 }
 
 /// Print a JSON reply either raw (stable, machine-readable) or, under

@@ -124,6 +124,45 @@ pub fn boundary_truncations(boundaries: &[usize], len: usize) -> Vec<Fault> {
     cuts.into_iter().map(|len| Fault::Truncate { len }).collect()
 }
 
+/// Power-cut campaign over a streamed write sequence: every boundary cut
+/// (±1 and exact, the [`boundary_truncations`] sweep) plus `per_gap`
+/// seeded mid-page cuts strictly inside each gap between consecutive
+/// boundaries — the two places a real power cut lands: right at a page
+/// commit, or partway through one. Deterministic in
+/// `(seed, boundaries, len, per_gap)`.
+pub fn powercut_campaign(
+    seed: u64,
+    boundaries: &[usize],
+    len: usize,
+    per_gap: usize,
+) -> Vec<Fault> {
+    let mut edges: Vec<usize> = boundaries.iter().map(|&b| b.min(len)).collect();
+    edges.push(0);
+    edges.push(len);
+    edges.sort_unstable();
+    edges.dedup();
+    let mut rng = Rng::new(seed | 1);
+    let mut cuts: Vec<usize> = boundary_truncations(&edges, len)
+        .into_iter()
+        .map(|f| match f {
+            Fault::Truncate { len } => len,
+            other => unreachable!("boundary_truncations yields truncations, got {other:?}"),
+        })
+        .collect();
+    for gap in edges.windows(2) {
+        let (lo, hi) = (gap[0], gap[1]);
+        if hi - lo > 2 {
+            for _ in 0..per_gap {
+                // Strictly interior: a mid-page cut, never the commit edge.
+                cuts.push(lo + 1 + rng.below((hi - lo - 2) as u64 + 1) as usize);
+            }
+        }
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.into_iter().map(|len| Fault::Truncate { len }).collect()
+}
+
 /// One bit flip in every byte position stride-`stride` across the buffer
 /// (bit index varies deterministically) — a cheap full-coverage sweep.
 pub fn bitflip_sweep(len: usize, stride: usize) -> Vec<Fault> {
@@ -375,6 +414,32 @@ mod tests {
             })
             .collect();
         assert_eq!(lens, vec![0, 1, 9, 10, 11, 63, 64]);
+    }
+
+    #[test]
+    fn powercut_campaign_replays_and_covers_edges_and_interiors() {
+        let bounds = [40, 100, 160];
+        let a = powercut_campaign(3, &bounds, 200, 2);
+        assert_eq!(a, powercut_campaign(3, &bounds, 200, 2), "must replay");
+        let lens: Vec<usize> = a
+            .iter()
+            .map(|f| match f {
+                Fault::Truncate { len } => *len,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        // Every commit edge is bracketed ±1 …
+        for b in bounds {
+            for c in [b - 1, b, b + 1] {
+                assert!(lens.contains(&c), "missing boundary cut {c}");
+            }
+        }
+        // … plus seeded cuts strictly inside the gaps (mid-page).
+        let edge_only = boundary_truncations(&[0, 40, 100, 160, 200], 200).len();
+        assert!(lens.len() > edge_only, "no mid-page cuts added: {lens:?}");
+        // Sorted, deduplicated, clamped.
+        assert!(lens.windows(2).all(|w| w[0] < w[1]));
+        assert!(*lens.last().unwrap() <= 200);
     }
 
     #[test]

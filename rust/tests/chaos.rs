@@ -24,7 +24,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use bbans::coordinator::{Client, ModelService, RetryPolicy, Server, ServiceParams};
+use bbans::bbans::bbc4::Bbc4Container;
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::coordinator::{Client, ModelService, PageStore, RetryPolicy, Server, ServiceParams};
 use bbans::model::{vae::NativeVae, Backend, Likelihood, ModelMeta};
 use bbans::util::fault::{DispatchFault, FaultControl, FaultPlan, FaultyBackend};
 use bbans::util::rng::Rng;
@@ -385,6 +387,105 @@ fn overload_during_latency_spike_is_retried_to_success() {
     assert!(occupant.join().unwrap().is_ok());
     server.stop();
     svc.shutdown();
+}
+
+/// ISSUE 10: a wire transfer dropped mid-way resumes on a fresh
+/// connection at the last intact page, and the server's page dispatch
+/// counter proves no page is ever sent twice. The page store answers
+/// handler-side, so transfers work even while the model worker is wedged
+/// in a latency spike.
+#[test]
+fn dropped_fetch_resumes_at_last_intact_page_without_resending() {
+    let _wd = Watchdog::new(300);
+    const N_PAGES: u32 = 4;
+    let dir = std::env::temp_dir().join(format!("bbans-chaos-fetch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let backend = NativeVae::random(meta("toy"), TOY_SEED);
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = sample_images(8, 70);
+    let bytes = Bbc4Container::encode_vae(&codec, &imgs, N_PAGES as usize)
+        .unwrap()
+        .to_bytes();
+    std::fs::write(dir.join("data.bbc4"), &bytes).unwrap();
+
+    let (svc, fctl, _tctl) = chaos_service(default_params(), FaultPlan::new());
+    let store = Arc::new(PageStore::new(dir.clone()));
+    let server =
+        Server::start_with_store("127.0.0.1:0", svc.handle(), None, Some(store.clone())).unwrap();
+    let addr = server.addr;
+
+    // Wedge the model worker: page serving must not care (handler-side).
+    fctl.arm(DispatchFault::Delay(Duration::from_millis(800)));
+    let wedge = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.compress("flaky", 64, sample_images(2, 71))
+    });
+
+    // First transfer: two single-page ranges, then the connection drops
+    // (client goes out of scope mid-transfer).
+    let mut local: Vec<u8> = Vec::new();
+    {
+        let mut c1 = Client::connect(addr).unwrap();
+        let r0 = c1.fetch_pages("data.bbc4", 0, 1).unwrap();
+        assert_eq!(r0.n_pages, N_PAGES);
+        assert!(!r0.header.is_empty() && r0.trailer.is_empty());
+        local.extend_from_slice(&r0.header);
+        local.extend_from_slice(&r0.pages[0].bytes);
+        let r1 = c1.fetch_pages("data.bbc4", 1, 1).unwrap();
+        assert!(r1.header.is_empty(), "header rides only on the first range");
+        local.extend_from_slice(&r1.pages[0].bytes);
+    }
+    assert_eq!(store.pages_served(), 2);
+
+    // The partial file scans to exactly the intact prefix.
+    let (shell, prefix) = Bbc4Container::scan_prefix(&local).unwrap();
+    assert_eq!(shell.n_pages, N_PAGES);
+    assert_eq!(prefix.pages, 2);
+    assert!(!prefix.complete);
+    assert_eq!(prefix.keep, local.len());
+
+    // Resume on a NEW connection at the first missing page.
+    let mut c2 = Client::connect(addr).unwrap();
+    let mut from = prefix.pages;
+    loop {
+        let r = c2.fetch_pages("data.bbc4", from, 1).unwrap();
+        local.extend_from_slice(&r.pages[0].bytes);
+        from += 1;
+        if from == r.n_pages {
+            assert!(!r.trailer.is_empty(), "trailer rides on the last range");
+            local.extend_from_slice(&r.trailer);
+            break;
+        }
+        assert!(r.trailer.is_empty());
+    }
+
+    // Byte-identical assembly, strict-valid, and decodable.
+    assert_eq!(local, bytes, "assembled transfer must equal the source file");
+    let (_, done) = Bbc4Container::scan_prefix(&local).unwrap();
+    assert!(done.complete);
+    let decoded: Vec<Vec<u8>> = Bbc4Container::from_bytes(&local)
+        .unwrap()
+        .decode_slots_vae(&codec)
+        .unwrap()
+        .into_iter()
+        .map(Option::unwrap)
+        .collect();
+    assert_eq!(decoded, imgs);
+
+    // The dispatch counter proves no page was ever sent twice across the
+    // dropped and resumed connections.
+    assert_eq!(store.pages_served(), N_PAGES as u64, "a page was re-sent");
+
+    // Path traversal and unknown names are clean errors, not file reads.
+    assert!(c2.fetch_pages("../data.bbc4", 0, 1).is_err());
+    assert!(c2.fetch_pages("no-such.bbc4", 0, 1).is_err());
+    // Out-of-range resume point is rejected server-side.
+    assert!(c2.fetch_pages("data.bbc4", N_PAGES, 1).is_err());
+
+    assert!(wedge.join().unwrap().is_ok());
+    server.stop();
+    svc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// TTL shedding under chaos: a job whose deadline passes while the

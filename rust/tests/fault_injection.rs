@@ -9,7 +9,7 @@
 //! Campaigns are seeded ([`bbans::util::fault`]), so any failure prints a
 //! fault description that replays exactly.
 
-use bbans::bbans::bbc4::Bbc4Container;
+use bbans::bbans::bbc4::{Bbc4Container, Bbc4StreamReader};
 use bbans::bbans::container::{Container, HierContainer, ParallelContainer};
 use bbans::bbans::hierarchy::{HierCodec, Schedule};
 use bbans::bbans::{BbAnsConfig, VaeCodec};
@@ -274,6 +274,85 @@ fn every_corrupted_page_subset_is_isolated() {
             }
         }
     }
+}
+
+/// Satellite (ISSUE 10): a trailer_len claiming more bytes than the file
+/// holds — and a forged index with an absurd entry count — must fail as
+/// clean errors in every BBC4 reader, while salvage still recovers the
+/// pages via the forward scan (it never trusts the trailer).
+#[test]
+fn trailer_len_beyond_the_file_is_rejected_cleanly() {
+    let backend = vae_backend();
+    let cfg = BbAnsConfig::default();
+    let codec = VaeCodec::new(&backend, cfg).unwrap();
+    let imgs = images(10, 0x66);
+    let clean = Bbc4Container::encode_vae(&codec, &imgs, 3).unwrap().to_bytes();
+    let n = clean.len();
+
+    for claim in [n as u32 + 1, n as u32 * 2, u32::MAX, u32::MAX - 7] {
+        let mut bad = clean.clone();
+        bad[n - 4..].copy_from_slice(&claim.to_le_bytes());
+        assert!(
+            Bbc4Container::from_bytes(&bad).is_err(),
+            "claim {claim}: strict parse must reject"
+        );
+        assert!(
+            Bbc4StreamReader::open(std::io::Cursor::new(bad.clone())).is_err(),
+            "claim {claim}: stream reader must reject"
+        );
+        // Salvage ignores the trailer claim and recovers every page.
+        let s = Bbc4Container::salvage(&bad).unwrap();
+        assert_eq!(s.report.pages_recovered, 3, "claim {claim}");
+        assert!(s.report.images_lost.is_empty(), "claim {claim}");
+    }
+
+    // Forged trailer whose entry count would overflow `count * entry_len`
+    // against the available bytes: replace the real index with
+    // [magic | count=u32::MAX | bogus crc | trailer_len], trailer_len
+    // sized to the forged block so it is the one the readers locate.
+    let real_trailer_len =
+        u32::from_le_bytes(clean[n - 4..].try_into().unwrap()) as usize;
+    let mut forged = clean[..n - real_trailer_len].to_vec();
+    forged.extend_from_slice(&[0xB4, 0x49, 0x58, 0x1A]); // INDEX_MAGIC
+    forged.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd count
+    forged.extend_from_slice(&0u32.to_le_bytes()); // "index crc"
+    forged.extend_from_slice(&16u32.to_le_bytes()); // trailer_len
+    assert!(Bbc4Container::from_bytes(&forged).is_err());
+    assert!(Bbc4StreamReader::open(std::io::Cursor::new(forged.clone())).is_err());
+    let s = Bbc4Container::salvage(&forged).unwrap();
+    assert_eq!(s.report.pages_recovered, 3);
+}
+
+/// Satellite (ISSUE 10): the salvage report pins the torn tail's exact
+/// byte range — `[end of last recovered structure, file end)` — and an
+/// empty range for a clean cut at a page boundary.
+#[test]
+fn salvage_reports_the_truncated_tail_byte_range() {
+    const N_PAGES: usize = 3;
+    let backend = vae_backend();
+    let cfg = BbAnsConfig::default();
+    let codec = VaeCodec::new(&backend, cfg).unwrap();
+    let imgs = images(9, 0x77);
+    let clean = Bbc4Container::encode_vae(&codec, &imgs, N_PAGES).unwrap().to_bytes();
+    let ranges = page_ranges(&clean, N_PAGES);
+
+    // Intact file: no tail to report.
+    let s = Bbc4Container::salvage(&clean).unwrap();
+    assert_eq!(s.report.truncated_tail, None);
+
+    // Cut mid-page-1: pages 0 is the last recovered structure.
+    let (p1_start, p1_end) = ranges[1];
+    let cut = (p1_start + p1_end) / 2;
+    let s = Bbc4Container::salvage(&clean[..cut]).unwrap();
+    assert!(!s.report.index_intact);
+    assert_eq!(s.report.truncated_tail, Some((ranges[0].1, cut)));
+    assert!(s.report.summary().contains("torn tail"), "{}", s.report.summary());
+
+    // Cut exactly at a page boundary: the tail range is empty (only the
+    // structures after it are missing, no partial bytes remain).
+    let s = Bbc4Container::salvage(&clean[..p1_end]).unwrap();
+    assert_eq!(s.report.truncated_tail, Some((p1_end, p1_end)));
+    assert!(s.report.summary().contains("truncated at"), "{}", s.report.summary());
 }
 
 /// Truncation sweep bracketing every frame boundary: every page that lies

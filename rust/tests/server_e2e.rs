@@ -651,6 +651,57 @@ fn hier_wire_bytes_match_ledgered_encode_for_both_schedules() {
     svc.shutdown();
 }
 
+/// Satellite (ISSUE 10): combined probes ride ONE connection. The CLI's
+/// `client --trace --metrics` used to open a probe path that could land
+/// on a fresh connection; the snapshot then raced the request it was
+/// meant to observe. Regression: a traced request followed by the trace
+/// and metrics probes on the *same* `Client` sees the request's spans,
+/// and the client performed zero reconnects along the way.
+#[test]
+fn trace_and_metrics_probes_share_the_request_connection() {
+    let _wd = Watchdog::new(120);
+    bbans::obs::tracer().set_enabled(true);
+    let svc = toy_service();
+    let server = Server::start("127.0.0.1:0", svc.handle()).unwrap();
+
+    let mut client = Client::connect(server.addr).unwrap();
+    let images = sample_images(3, 41);
+    let trace_id = 0xE2E_0010u64;
+    let container = client
+        .compress_with_opts("toy", 64, images.clone(), None, Some(trace_id))
+        .unwrap();
+    assert_eq!(client.decompress(container).unwrap(), images);
+
+    // Probe 1: the trace snapshot, on the request's connection, must
+    // contain the span tree of the request just served.
+    let json = client.trace(64).unwrap();
+    let j = bbans::util::json::Json::parse(&json).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert!(
+        traces
+            .iter()
+            .any(|t| t.get("trace").and_then(bbans::util::json::Json::as_u64) == Some(trace_id)),
+        "trace {trace_id} missing from same-connection snapshot: {json}"
+    );
+
+    // Probe 2: the metrics snapshot, still on the same connection, has
+    // already counted our request.
+    let text = client.metrics_text().unwrap();
+    assert!(text.contains("bbans_requests_total"), "{text}");
+    assert!(text.contains("bbans_images_encoded_total"), "{text}");
+
+    // The whole sequence — request, decompress, trace probe, metrics
+    // probe — reused the single original connection.
+    assert_eq!(
+        client.reconnects(),
+        0,
+        "probes must not force a reconnect away from the request connection"
+    );
+
+    server.stop();
+    svc.shutdown();
+}
+
 #[test]
 fn compress_hier_roundtrips_over_tcp() {
     let _wd = Watchdog::new(120);

@@ -1,0 +1,443 @@
+//! Crash-consistent streaming BBC4 (ISSUE 10 tentpole).
+//!
+//! The contract under test: a page-stream encode interrupted by a power
+//! cut at **any byte boundary** of its durable write sequence can be
+//! reopened and resumed, and the resumed encode produces a strict-valid
+//! BBC4 file byte-identical to the uninterrupted one. The uninterrupted
+//! streamed output is itself byte-identical to the one-shot
+//! [`Bbc4Container`] encoder (golden cross-pin), the journal never leads
+//! the data file, and the rate ledger of an interrupted-plus-resumed
+//! encode merges to exactly the uninterrupted entries.
+
+use std::io::Cursor;
+
+use bbans::bbans::bbc4::{Bbc4Container, Bbc4Model, Bbc4StreamReader, Bbc4StreamWriter, Resumed};
+use bbans::bbans::hierarchy::{HierCodec, Schedule};
+use bbans::bbans::{BbAnsConfig, VaeCodec};
+use bbans::format::stream::{
+    journal_path, journal_prefix, JournalRecord, VecMedium, JOURNAL_RECORD_LEN,
+};
+use bbans::model::hierarchy::{HierMeta, HierVae};
+use bbans::model::{vae::NativeVae, Likelihood, ModelMeta};
+use bbans::util::fault::{self, Fault};
+use bbans::util::rng::Rng;
+
+const PIXELS: usize = 16;
+const N_IMAGES: usize = 6;
+const N_PAGES: u32 = 3;
+
+fn vae_backend() -> NativeVae {
+    NativeVae::random(
+        ModelMeta {
+            name: "stream-vae".into(),
+            pixels: PIXELS,
+            latent_dim: 3,
+            hidden: 8,
+            likelihood: Likelihood::BetaBinomial,
+            test_elbo_bpd: f64::NAN,
+        },
+        0x57EA,
+    )
+}
+
+fn hier_backend() -> HierVae {
+    HierVae::random(
+        HierMeta {
+            name: "stream-hier".into(),
+            pixels: PIXELS,
+            dims: vec![4, 2],
+            hidden: 8,
+            likelihood: Likelihood::BetaBinomial,
+        },
+        0x57EA,
+    )
+}
+
+fn images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..PIXELS).map(|_| rng.below(256) as u8).collect())
+        .collect()
+}
+
+fn vae_shell(codec: &VaeCodec<'_, NativeVae>, n: usize, pages: u32) -> Bbc4Container {
+    Bbc4Container::new_shell(
+        Bbc4Model::for_vae(codec),
+        codec.cfg,
+        PIXELS as u32,
+        n as u32,
+        pages,
+    )
+    .unwrap()
+}
+
+/// Stream-encode `imgs` uninterrupted; returns `(data, journal)` bytes.
+fn stream_all_vae(
+    codec: &VaeCodec<'_, NativeVae>,
+    imgs: &[Vec<u8>],
+    pages: u32,
+) -> (Vec<u8>, Vec<u8>) {
+    let shell = vae_shell(codec, imgs.len(), pages);
+    let mut w = Bbc4StreamWriter::start(VecMedium::new(), VecMedium::new(), shell).unwrap();
+    while w.encode_next_vae(codec, imgs).unwrap() {}
+    let (d, j) = w.finish().unwrap();
+    (d.buf, j.buf)
+}
+
+/// Parse every journal record (the file must be exactly whole records).
+fn records(journal: &[u8]) -> Vec<JournalRecord> {
+    let mut recs = Vec::new();
+    let mut at = 0;
+    while let Some(r) = JournalRecord::from_bytes(&journal[at..]) {
+        recs.push(r);
+        at += JOURNAL_RECORD_LEN;
+    }
+    assert_eq!(at, journal.len(), "journal must be whole records");
+    recs
+}
+
+#[test]
+fn uninterrupted_stream_is_byte_identical_to_one_shot() {
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xA1);
+    let one_shot = Bbc4Container::encode_vae(&codec, &imgs, N_PAGES as usize)
+        .unwrap()
+        .to_bytes();
+    let (streamed, journal) = stream_all_vae(&codec, &imgs, N_PAGES);
+    assert_eq!(streamed, one_shot, "vae stream must match the one-shot bytes");
+
+    // One record per durable commit: the header plus every page, each
+    // telescoping over the data file (monotone lengths, exact counts).
+    let recs = records(&journal);
+    assert_eq!(recs.len(), N_PAGES as usize + 1);
+    let mut prev = 0u64;
+    for (i, r) in recs.iter().enumerate() {
+        assert_eq!(r.pages_done, i as u32);
+        assert!(r.bytes_written > prev, "record {i} must extend the file");
+        prev = r.bytes_written;
+    }
+    assert_eq!(recs.last().unwrap().images_done, N_IMAGES as u32);
+
+    let hb = hier_backend();
+    let hcodec = HierCodec::new(&hb, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+    let hier_one_shot = Bbc4Container::encode_hier(&hcodec, &imgs, N_PAGES as usize)
+        .unwrap()
+        .to_bytes();
+    let shell = Bbc4Container::new_shell(
+        Bbc4Model::for_hier(&hcodec),
+        hcodec.cfg,
+        PIXELS as u32,
+        imgs.len() as u32,
+        N_PAGES,
+    )
+    .unwrap();
+    let mut w = Bbc4StreamWriter::start(VecMedium::new(), VecMedium::new(), shell).unwrap();
+    while w.encode_next_hier(&hcodec, &imgs).unwrap() {}
+    let (d, _) = w.finish().unwrap();
+    assert_eq!(d.buf, hier_one_shot, "hier stream must match the one-shot bytes");
+}
+
+/// The tentpole property: cut the durable write sequence at EVERY byte
+/// boundary; reopen-and-resume must always complete to a file
+/// byte-identical to the uninterrupted encode.
+#[test]
+fn resume_after_a_cut_at_every_byte_reproduces_the_uninterrupted_encode() {
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xB2);
+    let (full_data, full_journal) = stream_all_vae(&codec, &imgs, N_PAGES);
+    let recs = records(&full_journal);
+
+    // Reconstruct the exact interleaved durable write sequence from the
+    // journal (each record is committed right after the data bytes it
+    // vouches for): D[header] J[rec0] D[page0] J[rec1] … D[trailer].
+    let mut ops: Vec<(bool, &[u8])> = Vec::new();
+    let mut dpos = 0usize;
+    for (i, r) in recs.iter().enumerate() {
+        ops.push((true, &full_data[dpos..r.bytes_written as usize]));
+        dpos = r.bytes_written as usize;
+        ops.push((
+            false,
+            &full_journal[i * JOURNAL_RECORD_LEN..(i + 1) * JOURNAL_RECORD_LEN],
+        ));
+    }
+    ops.push((true, &full_data[dpos..])); // the trailer index
+    let total: usize = ops.iter().map(|(_, b)| b.len()).sum();
+    assert_eq!(total, full_data.len() + full_journal.len());
+
+    for cut in 0..=total {
+        // State after a power cut at byte `cut` of the write sequence.
+        let (mut data, mut journal) = (Vec::new(), Vec::new());
+        let mut left = cut;
+        for (is_data, b) in &ops {
+            let take = left.min(b.len());
+            if *is_data {
+                data.extend_from_slice(&b[..take]);
+            } else {
+                journal.extend_from_slice(&b[..take]);
+            }
+            left -= take;
+        }
+        let shell = vae_shell(&codec, imgs.len(), N_PAGES);
+        let resumed = Bbc4StreamWriter::resume_media(
+            VecMedium::from_bytes(data.clone()),
+            VecMedium::from_bytes(journal.clone()),
+            &data,
+            &journal,
+            shell,
+        )
+        .unwrap_or_else(|e| panic!("cut {cut}: resume failed: {e:#}"));
+        let out = match resumed {
+            Resumed::Complete => data,
+            Resumed::Writer(mut w) => {
+                while w
+                    .encode_next_vae(&codec, &imgs)
+                    .unwrap_or_else(|e| panic!("cut {cut}: encode failed: {e:#}"))
+                {}
+                let (d, j) = w.finish().unwrap();
+                // The resume invariant holds on the continued journal too.
+                let (_, last) = journal_prefix(&j.buf);
+                assert!(last.unwrap().bytes_written <= d.buf.len() as u64, "cut {cut}");
+                d.buf
+            }
+        };
+        assert_eq!(out, full_data, "cut {cut}: resumed bytes differ");
+    }
+
+    // One strict decode covers every cut (all outputs are byte-equal).
+    let c = Bbc4Container::from_bytes(&full_data).unwrap();
+    let decoded: Vec<Vec<u8>> = c
+        .decode_slots_vae(&codec)
+        .unwrap()
+        .into_iter()
+        .map(Option::unwrap)
+        .collect();
+    assert_eq!(decoded, imgs);
+}
+
+/// A journal that *leads* the data file means bytes the journal vouched
+/// for are gone — that is data loss, not a torn tail, and resume must
+/// refuse (pointing at salvage) rather than silently re-encode.
+#[test]
+fn journal_leading_the_data_file_is_rejected() {
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xC3);
+    let (full_data, full_journal) = stream_all_vae(&codec, &imgs, N_PAGES);
+    let recs = records(&full_journal);
+
+    // Data truncated to header + page 0, journal claiming all pages.
+    let data = full_data[..recs[1].bytes_written as usize].to_vec();
+    let err = Bbc4StreamWriter::resume_media(
+        VecMedium::from_bytes(data.clone()),
+        VecMedium::from_bytes(full_journal.clone()),
+        &data,
+        &full_journal,
+        vae_shell(&codec, imgs.len(), N_PAGES),
+    )
+    .map(|_| ())
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("salvage"), "got: {err:#}");
+
+    // Data with intact pages but no journal at all: the sidecar is gone,
+    // so the stream identity cannot be vouched for — also a hard error.
+    let err = Bbc4StreamWriter::resume_media(
+        VecMedium::from_bytes(data.clone()),
+        VecMedium::new(),
+        &data,
+        &[],
+        vae_shell(&codec, imgs.len(), N_PAGES),
+    )
+    .map(|_| ())
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("journal"), "got: {err:#}");
+
+    // A different encode's header is never silently overwritten.
+    let other = images(N_IMAGES, 0xDD);
+    let other_shell = vae_shell(&codec, other.len(), N_PAGES + 1);
+    let err = Bbc4StreamWriter::resume_media(
+        VecMedium::from_bytes(data.clone()),
+        VecMedium::from_bytes(full_journal.clone()),
+        &data,
+        &full_journal,
+        other_shell,
+    )
+    .map(|_| ())
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("header mismatch"), "got: {err:#}");
+}
+
+/// File-backed power-cut campaign (CI leg): seeded cuts at page
+/// boundaries, their ±1 neighbours, and mid-page interiors, each with a
+/// consistent and a lagging journal. Every cut must reopen, resume, and
+/// finish to the identical file, retiring the journal sidecar.
+#[test]
+fn file_backed_powercut_campaign_resumes_to_identical_bytes() {
+    let dir = std::env::temp_dir().join(format!("bbans-powercut-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xD4);
+    let (full_data, full_journal) = stream_all_vae(&codec, &imgs, N_PAGES);
+    let recs = records(&full_journal);
+    let boundaries: Vec<usize> = recs.iter().map(|r| r.bytes_written as usize).collect();
+
+    for (fi, f) in fault::powercut_campaign(0x9C7, &boundaries, full_data.len(), 2)
+        .into_iter()
+        .enumerate()
+    {
+        let Fault::Truncate { len } = f else {
+            panic!("powercut_campaign produced {f:?}");
+        };
+        let path = dir.join(format!("cut-{fi}.bbc4"));
+        // Journal consistent with the cut (all records the data still
+        // covers), plus a lagging variant (record lost with the cut).
+        let keep = recs.iter().filter(|r| r.bytes_written as usize <= len).count();
+        for lag in 0..=1usize {
+            let k = keep.saturating_sub(lag);
+            std::fs::write(&path, &full_data[..len]).unwrap();
+            std::fs::write(journal_path(&path), &full_journal[..k * JOURNAL_RECORD_LEN])
+                .unwrap();
+            let shell = vae_shell(&codec, imgs.len(), N_PAGES);
+            let mut w = match Bbc4StreamWriter::resume(&path, shell)
+                .unwrap_or_else(|e| panic!("cut {len} lag {lag}: {e:#}"))
+            {
+                Resumed::Complete => {
+                    assert_eq!(std::fs::read(&path).unwrap(), full_data);
+                    assert!(!journal_path(&path).exists(), "journal must be retired");
+                    continue;
+                }
+                Resumed::Writer(w) => *w,
+            };
+            while w.encode_next_vae(&codec, &imgs).unwrap() {}
+            w.finish_file().unwrap();
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                full_data,
+                "cut {len} lag {lag}: resumed file differs"
+            );
+            assert!(!journal_path(&path).exists(), "journal must be retired");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 3: the rate ledger survives a resume — the interrupted
+/// run's entries merged with the resumed run's entries equal the
+/// uninterrupted encode's per-image entries, and every entry's ELBO
+/// decomposition telescopes (residual ≈ 0).
+#[test]
+fn interrupted_plus_resumed_ledger_matches_the_uninterrupted_entries() {
+    let dir = std::env::temp_dir().join(format!("bbans-ledger-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xE5);
+
+    let mut w = Bbc4StreamWriter::start(
+        VecMedium::new(),
+        VecMedium::new(),
+        vae_shell(&codec, imgs.len(), N_PAGES),
+    )
+    .unwrap();
+    w.enable_ledger();
+    while w.encode_next_vae(&codec, &imgs).unwrap() {}
+    let full_ledger = w.take_ledger().unwrap();
+    let (full_data, _) = w.finish().unwrap();
+    assert_eq!(full_ledger.entries.len(), N_IMAGES);
+
+    // Interrupted file-backed run: one page, then the process "dies".
+    let path = dir.join("ledgered.bbc4");
+    let mut w1 =
+        Bbc4StreamWriter::create(&path, vae_shell(&codec, imgs.len(), N_PAGES)).unwrap();
+    w1.enable_ledger();
+    assert!(w1.encode_next_vae(&codec, &imgs).unwrap());
+    let l1 = w1.take_ledger().unwrap();
+    drop(w1);
+
+    let mut w2 = match Bbc4StreamWriter::resume(&path, vae_shell(&codec, imgs.len(), N_PAGES))
+        .unwrap()
+    {
+        Resumed::Writer(w) => *w,
+        Resumed::Complete => panic!("one page written; stream cannot be complete"),
+    };
+    assert_eq!(w2.pages_done(), 1);
+    w2.enable_ledger();
+    while w2.encode_next_vae(&codec, &imgs).unwrap() {}
+    let l2 = w2.take_ledger().unwrap();
+    w2.finish_file().unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), full_data.buf);
+
+    let mut merged = l1;
+    merged.merge(l2);
+    assert_eq!(
+        merged.entries, full_ledger.entries,
+        "merged ledger must equal the uninterrupted encode's entries"
+    );
+    for (i, e) in merged.entries.iter().enumerate() {
+        assert!(
+            e.decomposition_residual() < 1e-6,
+            "entry {i}: residual {}",
+            e.decomposition_residual()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Bounded-memory reader: page-at-a-time decode equals the one-shot
+/// decode, raw parts reassemble the file byte-identically, and a
+/// trailer_len claiming more bytes than the file holds is rejected.
+#[test]
+fn stream_reader_decodes_page_at_a_time_identically() {
+    let backend = vae_backend();
+    let codec = VaeCodec::new(&backend, BbAnsConfig::default()).unwrap();
+    let imgs = images(N_IMAGES, 0xF6);
+    let bytes = Bbc4Container::encode_vae(&codec, &imgs, N_PAGES as usize)
+        .unwrap()
+        .to_bytes();
+
+    let mut r = Bbc4StreamReader::open(Cursor::new(bytes.clone())).unwrap();
+    assert_eq!(r.n_pages(), N_PAGES);
+
+    // header + frames + trailer reassemble the exact file (this is what
+    // the wire-fetch client concatenates).
+    let mut rebuilt = r.header_raw().unwrap();
+    for i in 0..N_PAGES as usize {
+        let (frame, _crc) = r.raw_frame(i).unwrap();
+        rebuilt.extend_from_slice(&frame);
+    }
+    rebuilt.extend_from_slice(r.trailer_raw());
+    assert_eq!(rebuilt, bytes);
+
+    let mut got = vec![Vec::new(); N_IMAGES];
+    while let Some((first, page)) = r.decode_next_vae(&codec).unwrap() {
+        for (k, img) in page.into_iter().enumerate() {
+            got[first as usize + k] = img;
+        }
+    }
+    assert_eq!(got, imgs);
+
+    // Hierarchical pages decode the same way.
+    let hb = hier_backend();
+    let hcodec = HierCodec::new(&hb, BbAnsConfig::default(), Schedule::BitSwap).unwrap();
+    let hbytes = Bbc4Container::encode_hier(&hcodec, &imgs, N_PAGES as usize)
+        .unwrap()
+        .to_bytes();
+    let mut hr = Bbc4StreamReader::open(Cursor::new(hbytes)).unwrap();
+    let mut hgot = vec![Vec::new(); N_IMAGES];
+    while let Some((first, page)) = hr.decode_next_hier(&hcodec).unwrap() {
+        for (k, img) in page.into_iter().enumerate() {
+            hgot[first as usize + k] = img;
+        }
+    }
+    assert_eq!(hgot, imgs);
+
+    // trailer_len pointing past the file must be a clean error.
+    for claim in [bytes.len() as u32 + 1, u32::MAX] {
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 4..].copy_from_slice(&claim.to_le_bytes());
+        assert!(Bbc4StreamReader::open(Cursor::new(bad)).is_err(), "claim {claim}");
+    }
+}
